@@ -1,0 +1,78 @@
+//! Compression sweep over a synthetic-LLM zoo: the coordinator's parallel
+//! job pipeline compressing every layer of a miniature Llama-style model at
+//! several budgets — the workload behind Fig. 10 and the model-level side
+//! of Table 1.
+//!
+//! ```bash
+//! cargo run --release --example compression_sweep [blocks] [shrink]
+//! ```
+
+use littlebit2::coordinator::{run_compression_jobs, CompressionJob};
+use littlebit2::littlebit::{CompressionConfig, InitStrategy};
+use littlebit2::model::{zoo, ArchSpec};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let blocks: usize = args.first().map(|s| s.parse()).transpose()?.unwrap_or(2);
+    let shrink: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(32);
+
+    let arch = ArchSpec::llama2_7b();
+    println!(
+        "zoo: {} × {blocks} blocks, dims ÷{shrink} — {} layers per strategy\n",
+        arch.name,
+        blocks * 7
+    );
+
+    for bpp in [1.0, 0.55] {
+        for strategy in [InitStrategy::Standard, InitStrategy::JointItq { iters: 30 }] {
+            let layers = zoo::fabricate(&arch, shrink, blocks, 77);
+            let jobs: Vec<CompressionJob> = layers
+                .into_iter()
+                .enumerate()
+                .map(|(i, l)| CompressionJob {
+                    name: format!("b{}.{}", l.block, l.proj.name()),
+                    weight: l.weight,
+                    cfg: CompressionConfig { bpp, strategy, residual: true, ..Default::default() },
+                    seed: 500 + i as u64,
+                })
+                .collect();
+            let t0 = std::time::Instant::now();
+            let workers = std::thread::available_parallelism()?.get();
+            let results = run_compression_jobs(jobs, workers);
+            let dt = t0.elapsed().as_secs_f64();
+            let mean_mse: f64 = results.iter().map(|r| r.mse).sum::<f64>() / results.len() as f64;
+            let mean_bpp: f64 = results.iter().map(|r| r.bpp).sum::<f64>() / results.len() as f64;
+            println!(
+                "bpp={bpp:<5} {:<12} layers={} mean_MSE={mean_mse:.4e} mean_bpp={mean_bpp:.3} wall={dt:.1}s ({} workers)",
+                strategy.label(),
+                results.len(),
+                workers
+            );
+        }
+    }
+
+    println!("\nper-layer detail (0.55 bpp, littlebit2, first block):");
+    let layers = zoo::fabricate(&arch, shrink, 1, 77);
+    let jobs: Vec<CompressionJob> = layers
+        .into_iter()
+        .enumerate()
+        .map(|(i, l)| CompressionJob {
+            name: format!("{} (γ={:.2})", l.proj.name(), l.gamma),
+            weight: l.weight,
+            cfg: CompressionConfig {
+                bpp: 0.55,
+                strategy: InitStrategy::JointItq { iters: 30 },
+                residual: true,
+                ..Default::default()
+            },
+            seed: 900 + i as u64,
+        })
+        .collect();
+    for r in run_compression_jobs(jobs, 2) {
+        println!(
+            "  {:<22} rank={:>3} mse={:.4e} bpp={:.3} ({:.0} ms)",
+            r.name, r.rank, r.mse, r.bpp, r.wall_ms
+        );
+    }
+    Ok(())
+}

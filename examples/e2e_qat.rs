@@ -1,0 +1,122 @@
+//! END-TO-END DRIVER (the DESIGN.md §validation run): train an FP teacher
+//! transformer from scratch on the synthetic corpus, compress it into each
+//! student variant with rust-native SVD→(rotation|Joint-ITQ)→Dual-SVID,
+//! run QAKD through the AOT-compiled train-step artifacts via PJRT, and
+//! report loss curves (Fig. 7), sign-flip ratios (Fig. 8), and held-out PPL
+//! per variant (Table 3) — Python nowhere on the path.
+//!
+//! ```bash
+//! make artifacts   # once: lowers python/compile → artifacts/*.hlo.txt
+//! cargo run --release --example e2e_qat -- [teacher_steps] [student_steps] [variants]
+//! # variants: comma list of tinyrank,littlebit,rotation,littlebit2 (default all)
+//! ```
+//!
+//! The recorded run (EXPERIMENTS.md §E2E) uses the `small` preset:
+//! 4-layer, d=128, vocab-512 transformer (~1.1M params).
+
+use anyhow::Result;
+use littlebit2::coordinator::{QatDriver, StudentVariant};
+use std::fmt::Write as _;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let teacher_steps: usize = args.first().map(|s| s.parse()).transpose()?.unwrap_or(300);
+    let student_steps: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(200);
+    let variants: Vec<StudentVariant> = match args.get(2) {
+        None => vec![
+            StudentVariant::TinyRankFp,
+            StudentVariant::LittleBit,
+            StudentVariant::RandomRotation,
+            StudentVariant::LittleBit2 { itq_iters: 50 },
+        ],
+        Some(list) => list
+            .split(',')
+            .map(|v| match v {
+                "tinyrank" => Ok(StudentVariant::TinyRankFp),
+                "littlebit" => Ok(StudentVariant::LittleBit),
+                "rotation" => Ok(StudentVariant::RandomRotation),
+                "littlebit2" => Ok(StudentVariant::LittleBit2 { itq_iters: 50 }),
+                other => anyhow::bail!("unknown variant {other}"),
+            })
+            .collect::<Result<_>>()?,
+    };
+
+    let driver = QatDriver::new("artifacts", 1234)?;
+    let cfg = &driver.manifest.config;
+    println!(
+        "platform={} preset={} | transformer d={} L={} heads={} ff={} vocab={} seq={} batch={} bpp={}",
+        driver.runtime().platform(),
+        driver.manifest.preset,
+        cfg.d_model, cfg.n_layers, cfg.n_heads, cfg.d_ff, cfg.vocab, cfg.seq, cfg.batch, cfg.bpp
+    );
+
+    // --- Phase 1: teacher pretraining (plain CE) ---
+    println!("\n== teacher: {teacher_steps} steps ==");
+    let t0 = std::time::Instant::now();
+    let (teacher, t_losses) = driver.train_teacher(teacher_steps, 1e-3, |s, l| {
+        if s % 25 == 0 {
+            println!("  step {s:>5}  loss {l:.4}");
+        }
+    })?;
+    let teacher_ce = driver.eval_ce("teacher_eval", &teacher, 8)?;
+    println!(
+        "teacher done in {:.0}s: train loss {:.4} → {:.4}, held-out CE {:.4} (PPL {:.2})",
+        t0.elapsed().as_secs_f64(),
+        t_losses.first().unwrap(),
+        t_losses.last().unwrap(),
+        teacher_ce,
+        teacher_ce.exp()
+    );
+
+    // --- Phase 2: QAKD per variant (Fig 7 / Fig 8 / Table 3) ---
+    let mut summary = String::new();
+    writeln!(
+        summary,
+        "\n{:<16} {:>10} {:>10} {:>10} {:>12} {:>10}",
+        "variant", "loss[0]", "loss[end]", "eval CE", "PPL", "flip[0]"
+    )?;
+    for variant in variants {
+        println!("\n== student {}: {student_steps} steps ==", variant.label());
+        let t0 = std::time::Instant::now();
+        let outcome = driver.train_student(&teacher, variant, student_steps, 1e-3, |s, l, f| {
+            if s % 25 == 0 {
+                println!("  step {s:>5}  loss {l:.4}  flip {f:.5}");
+            }
+        })?;
+        println!(
+            "{} done in {:.0}s — eval CE {:.4} (PPL {:.2})",
+            variant.label(),
+            t0.elapsed().as_secs_f64(),
+            outcome.final_eval_ce,
+            outcome.final_eval_ce.exp()
+        );
+        writeln!(
+            summary,
+            "{:<16} {:>10.4} {:>10.4} {:>10.4} {:>12.2} {:>10.5}",
+            variant.label(),
+            outcome.trace.losses.first().copied().unwrap_or(f32::NAN),
+            outcome.trace.losses.last().copied().unwrap_or(f32::NAN),
+            outcome.final_eval_ce,
+            outcome.final_eval_ce.exp(),
+            outcome.trace.flip_ratio.first().copied().unwrap_or(0.0),
+        )?;
+        // Dump the full traces for plotting (Fig 7/8 series).
+        let path = format!("target/e2e_trace_{}.csv", variant.label().replace('+', "_"));
+        let mut csv = String::from("step,loss,flip_ratio\n");
+        for (i, (l, f)) in outcome
+            .trace
+            .losses
+            .iter()
+            .zip(&outcome.trace.flip_ratio)
+            .enumerate()
+        {
+            writeln!(csv, "{i},{l},{f}")?;
+        }
+        std::fs::write(&path, csv)?;
+        println!("trace written to {path}");
+    }
+
+    println!("{summary}");
+    println!("teacher reference: eval CE {teacher_ce:.4} (PPL {:.2})", teacher_ce.exp());
+    Ok(())
+}

@@ -1,0 +1,105 @@
+//! Batched serving demo: the dynamic batcher in front of the MatMul-free
+//! packed tri-scale stack (§6.2's deployment path), reporting throughput
+//! and latency percentiles against a dense-FP32 backend at the same shape.
+//!
+//! ```bash
+//! cargo run --release --example serve [n_requests] [d] [bpp]
+//! ```
+
+use littlebit2::coordinator::InferenceServer;
+use littlebit2::littlebit::{compress, CompressionConfig, InitStrategy};
+use littlebit2::rng::Pcg64;
+use littlebit2::spectral::{synth_weight, SynthSpec};
+use std::time::{Duration, Instant};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n_requests: usize = args.first().map(|s| s.parse()).transpose()?.unwrap_or(256);
+    let d: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(1024);
+    let bpp: f64 = args.get(2).map(|s| s.parse()).transpose()?.unwrap_or(0.55);
+
+    println!("compressing a {d}x{d} layer at {bpp} bpp ...");
+    let mut rng = Pcg64::seed(1);
+    let spec = SynthSpec { rows: d, cols: d, gamma: 0.3, coherence: 0.7, scale: 1.0 };
+    let w = synth_weight(&spec, &mut rng);
+    let cfg = CompressionConfig {
+        bpp,
+        strategy: InitStrategy::JointItq { iters: 30 },
+        residual: true,
+        ..Default::default()
+    };
+    let compressed = compress(&w, &cfg, &mut rng);
+    let layers: Vec<_> = compressed.paths.iter().map(|p| p.pack()).collect();
+
+    // Backend: the packed MatMul-free forward, one call per batch item.
+    let backend = move |batch: &[Vec<f32>]| -> Vec<Vec<f32>> {
+        batch
+            .iter()
+            .map(|x| {
+                let mut out = layers[0].forward(x);
+                for layer in &layers[1..] {
+                    for (o, v) in out.iter_mut().zip(layer.forward(x)) {
+                        *o += v;
+                    }
+                }
+                out
+            })
+            .collect()
+    };
+
+    let server = InferenceServer::start(16, Duration::from_millis(2), 1024, backend);
+    let mut inputs = Vec::new();
+    for _ in 0..n_requests {
+        let mut x = vec![0.0f32; d];
+        rng.fill_normal(&mut x);
+        inputs.push(x);
+    }
+
+    println!("serving {n_requests} requests ...");
+    let t0 = Instant::now();
+    let rxs: Vec<_> = inputs
+        .into_iter()
+        .enumerate()
+        .map(|(i, x)| server.submit(i as u64, x))
+        .collect();
+    for rx in rxs {
+        let _ = rx.recv()?;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = server.stats();
+    println!(
+        "throughput {:.0} req/s | batches {} (mean size {:.1}) | p50 {:.2} ms p99 {:.2} ms",
+        n_requests as f64 / wall,
+        stats.batches,
+        stats.mean_batch,
+        stats.p50_ms,
+        stats.p99_ms
+    );
+
+    // Dense-FP32 comparison at the same shape (single-threaded, unbatched).
+    let mut x = vec![0.0f32; d];
+    rng.fill_normal(&mut x);
+    let mut y = vec![0.0f32; d];
+    let t0 = Instant::now();
+    let reps = 50;
+    for _ in 0..reps {
+        littlebit2::packing::gemv_dense(&w, &x, &mut y);
+    }
+    let dense_ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+    let t0 = Instant::now();
+    let packed: Vec<_> = compressed.paths.iter().map(|p| p.pack()).collect();
+    for _ in 0..reps {
+        let mut out = packed[0].forward(&x);
+        for layer in &packed[1..] {
+            for (o, v) in out.iter_mut().zip(layer.forward(&x)) {
+                *o += v;
+            }
+        }
+    }
+    let packed_ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+    println!(
+        "kernel-level: dense {dense_ms:.3} ms vs packed {packed_ms:.3} ms → {:.1}x (paper: 11.6x on 70B-MLP CUDA)",
+        dense_ms / packed_ms
+    );
+    Ok(())
+}

@@ -1,0 +1,5 @@
+"""Build-time compile package: L2 jax model + L1 Pallas kernels + AOT lowering.
+
+Nothing in this package is imported at run time; the rust coordinator only
+consumes the HLO text artifacts and the manifest that `compile.aot` emits.
+"""

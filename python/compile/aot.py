@@ -1,0 +1,261 @@
+"""AOT lowering: L2/L1 jax graphs → HLO text artifacts for the rust runtime.
+
+Interchange is HLO **text** (not serialized HloModuleProto): jax ≥ 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 (the version
+the published `xla` crate binds) rejects; the text parser reassigns ids.
+
+Exported artifacts (see also the manifest):
+
+  teacher_train_step   — Adam + CE step for the FP teacher.
+  student_train_step   — QAKD step for the binary (LittleBit) student.
+  student_fp_train_step— QAKD step for the Tiny-Rank FP student (Strategy A).
+  teacher_eval / student_eval / student_fp_eval — held-out CE.
+  student_infer        — student logits through the L1 Pallas tri-scale
+                         kernel (the deployed inference graph).
+  littlebit_layer      — standalone fused tri-scale layer (quickstart/serving
+                         micro-benchmarks).
+
+Constraint honoured throughout: exported graphs contain no jnp.linalg.*
+(those lower to lapack custom-calls that only jaxlib's runtime registers —
+the rust PJRT client cannot resolve them). The SVD/ITQ initialization
+pipeline therefore runs natively in rust (`littlebit::compress`); Python
+keeps an equivalent implementation for cross-validation in pytest.
+
+Run: ``python -m compile.aot --out-dir ../artifacts`` (idempotent; the
+Makefile skips it when inputs are unchanged).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels.tri_scale import mxu_utilization_estimate, tri_scale_matmul, vmem_bytes
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def spec_structs(spec):
+    return [f32(shape) for _, shape in spec]
+
+
+def lower_train_steps(cfg: M.ModelConfig):
+    """Build the (fn, example-args) pairs for every artifact."""
+    t_spec = M.teacher_param_spec(cfg)
+    s_cfg = cfg
+    s_spec = M.student_param_spec(s_cfg)
+    fp_cfg = dataclasses.replace(cfg, fp_latent=True)
+    fp_spec = M.student_param_spec(fp_cfg)
+
+    tok = i32((cfg.batch, cfg.seq + 1))
+    scalar = f32(())
+
+    nt = len(t_spec)
+    ns = len(s_spec)
+    nf = len(fp_spec)
+
+    def teacher_train(*args):
+        p = list(args[:nt])
+        m = list(args[nt : 2 * nt])
+        v = list(args[2 * nt : 3 * nt])
+        step, tokens, lr = args[3 * nt], args[3 * nt + 1], args[3 * nt + 2]
+        p2, m2, v2, loss = M.teacher_train_step(cfg, p, m, v, step, tokens, lr)
+        return tuple(p2) + tuple(m2) + tuple(v2) + (loss,)
+
+    teacher_train_args = (
+        spec_structs(t_spec) * 3 + [scalar, tok, scalar]
+    )
+
+    def make_student_train(scfg, sspec, n):
+        def student_train(*args):
+            sp = list(args[:n])
+            tp = list(args[n : n + nt])
+            m = list(args[n + nt : 2 * n + nt])
+            v = list(args[2 * n + nt : 3 * n + nt])
+            step = args[3 * n + nt]
+            tokens = args[3 * n + nt + 1]
+            lr = args[3 * n + nt + 2]
+            p2, m2, v2, loss, flips = M.student_train_step(
+                scfg, sp, tp, m, v, step, tokens, lr
+            )
+            return tuple(p2) + tuple(m2) + tuple(v2) + (loss, flips)
+
+        args = (
+            spec_structs(sspec)
+            + spec_structs(t_spec)
+            + spec_structs(sspec) * 2
+            + [scalar, tok, scalar]
+        )
+        return student_train, args
+
+    student_train, student_train_args = make_student_train(s_cfg, s_spec, ns)
+    fp_train, fp_train_args = make_student_train(fp_cfg, fp_spec, nf)
+
+    def teacher_eval(*args):
+        p = list(args[:nt])
+        return (M.eval_loss(cfg, p, args[nt], student=False),)
+
+    def student_eval(*args):
+        p = list(args[:ns])
+        return (M.eval_loss(s_cfg, p, args[ns], student=True),)
+
+    def fp_eval(*args):
+        p = list(args[:nf])
+        return (M.eval_loss(fp_cfg, p, args[nf], student=True),)
+
+    def student_infer(*args):
+        p = list(args[:ns])
+        tokens = args[ns]
+        return (M.student_logits(s_cfg, p, tokens, use_pallas=True),)
+
+    infer_tok = i32((cfg.batch, cfg.seq))
+
+    artifacts = {
+        "teacher_train_step": (teacher_train, teacher_train_args),
+        "student_train_step": (student_train, student_train_args),
+        "student_fp_train_step": (fp_train, fp_train_args),
+        "teacher_eval": (teacher_eval, spec_structs(t_spec) + [tok]),
+        "student_eval": (student_eval, spec_structs(s_spec) + [tok]),
+        "student_fp_eval": (fp_eval, spec_structs(fp_spec) + [tok]),
+        "student_infer": (student_infer, spec_structs(s_spec) + [infer_tok]),
+    }
+    return artifacts, t_spec, s_spec, fp_spec
+
+
+def lower_layer_kernel(d_in: int, d_out: int, r: int, batch: int):
+    """Standalone fused tri-scale layer (Pallas) for serving benches."""
+
+    def layer(x, u_b, v_b, h, l, g):
+        return (tri_scale_matmul(x, u_b, v_b, h, l, g),)
+
+    args = [
+        f32((batch, d_in)),
+        f32((d_out, r)),
+        f32((d_in, r)),
+        f32((d_out,)),
+        f32((r,)),
+        f32((d_in,)),
+    ]
+    return layer, args
+
+
+def preset(name: str) -> M.ModelConfig:
+    if name == "tiny":  # CI-fast config
+        return M.ModelConfig(
+            vocab=256, d_model=64, n_layers=2, n_heads=2, d_ff=172,
+            seq=32, batch=4, bpp=1.0,
+        )
+    if name == "small":  # the recorded e2e run (1-core CPU budget)
+        return M.ModelConfig(
+            vocab=512, d_model=128, n_layers=4, n_heads=4, d_ff=344,
+            seq=64, batch=8, bpp=1.0,
+        )
+    if name == "base":  # larger config for multi-core machines
+        return M.ModelConfig(
+            vocab=2048, d_model=384, n_layers=8, n_heads=6, d_ff=1024,
+            seq=128, batch=8, bpp=1.0,
+        )
+    raise SystemExit(f"unknown preset {name!r}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--preset", default="small", choices=["tiny", "small", "base"])
+    ap.add_argument("--bpp", type=float, default=None,
+                    help="override student bit budget")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = preset(args.preset)
+    if args.bpp is not None:
+        cfg = dataclasses.replace(cfg, bpp=args.bpp)
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    artifacts, t_spec, s_spec, fp_spec = lower_train_steps(cfg)
+
+    manifest = {
+        "config": dataclasses.asdict(cfg),
+        "preset": args.preset,
+        "teacher_spec": [[n, list(s)] for n, s in t_spec],
+        "student_spec": [[n, list(s)] for n, s in s_spec],
+        "student_fp_spec": [[n, list(s)] for n, s in fp_spec],
+        "artifacts": {},
+    }
+
+    for name, (fn, example_args) in artifacts.items():
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "path": f"{name}.hlo.txt",
+            "num_inputs": len(example_args),
+            "input_shapes": [
+                [str(a.dtype), list(a.shape)] for a in example_args
+            ],
+        }
+        print(f"lowered {name}: {len(text)} chars, {len(example_args)} inputs")
+
+    # Standalone layer kernel at a serving-relevant shape.
+    d_in = d_out = 1024
+    r = 64
+    layer_fn, layer_args = lower_layer_kernel(d_in, d_out, r, batch=4)
+    lowered = jax.jit(layer_fn).lower(*layer_args)
+    with open(os.path.join(args.out_dir, "littlebit_layer.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+    manifest["artifacts"]["littlebit_layer"] = {
+        "path": "littlebit_layer.hlo.txt",
+        "num_inputs": len(layer_args),
+        "input_shapes": [[str(a.dtype), list(a.shape)] for a in layer_args],
+        "shape": {"d_in": d_in, "d_out": d_out, "r": r, "batch": 4},
+    }
+
+    # Teacher initialization (build-time): raw f32 little-endian .bin blobs.
+    key = jax.random.PRNGKey(args.seed)
+    params = M.init_teacher(cfg, key)
+    bin_dir = os.path.join(args.out_dir, "params")
+    os.makedirs(bin_dir, exist_ok=True)
+    import numpy as np
+
+    for (name, shape), arr in zip(t_spec, params):
+        safe = name.replace(".", "_")
+        np.asarray(arr, dtype="<f4").tofile(os.path.join(bin_dir, f"{safe}.bin"))
+    manifest["teacher_init_dir"] = "params"
+
+    # L1 perf-model estimates (§Perf, recorded in EXPERIMENTS.md).
+    manifest["l1_perf_estimates"] = {
+        "layer_shape": {"d_in": d_in, "d_out": d_out, "r": r},
+        "vmem_bytes": vmem_bytes(d_in, d_out, r),
+        "mxu_utilization": mxu_utilization_estimate(d_in, d_out, r),
+    }
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"manifest written: {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""L1 Pallas kernels (build-time only) + their pure-jnp oracles."""
+
+from . import binarize, itq_step, ref, tri_scale  # noqa: F401

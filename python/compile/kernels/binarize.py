@@ -1,0 +1,47 @@
+"""L1 Pallas kernel: row-wise optimal binarization (Lemma 4.2).
+
+Computes ``signs = sign(U)`` and the optimal per-row scale
+``alpha_i = ‖u_i‖₁ / r`` in one pass. Used by the exported compression
+graph (quantize-layer artifact) and — with straight-through gradients at
+the L2 level — inside QAT.
+
+Grid: one program per row-tile; each program reduces its rows' |u| on the
+VPU and emits signs + alpha. interpret=True (see tri_scale.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_ROWS = 64
+
+
+def _kernel(u_ref, signs_ref, alpha_ref):
+    u = u_ref[...]
+    signs_ref[...] = jnp.where(u < 0, -1.0, 1.0).astype(u.dtype)
+    alpha_ref[...] = jnp.mean(jnp.abs(u), axis=-1)
+
+
+def binarize(u):
+    """Row-wise sign + optimal alpha. ``u``: [n, r] → ([n, r], [n])."""
+    n, r = u.shape
+    pad = (-n) % TILE_ROWS
+    up = jnp.pad(u, ((0, pad), (0, 0))) if pad else u
+    grid = (up.shape[0] // TILE_ROWS,)
+    signs, alpha = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((TILE_ROWS, r), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((TILE_ROWS, r), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_ROWS,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((up.shape[0], r), u.dtype),
+            jax.ShapeDtypeStruct((up.shape[0],), u.dtype),
+        ],
+        interpret=True,
+    )(up)
+    return signs[:n], alpha[:n]

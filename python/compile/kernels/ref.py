@@ -1,0 +1,83 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+Every kernel in this package has its semantics pinned here in plain
+``jax.numpy``; ``python/tests/`` asserts allclose between kernel and oracle
+across a hypothesis-driven sweep of shapes/dtypes. The oracles are also the
+implementation used inside the *training* graph (mathematically identical,
+cheaper to trace), while the Pallas kernels power the exported inference
+graphs — both lower into the same HLO artifact set (see aot.py).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def tri_scale_matmul_ref(x, u_b, v_b, h, l, g):
+    """Eq. 1 forward: ``y = (((x*g) @ V_b) * l) @ U_bᵀ * h``.
+
+    Args:
+      x:   [..., d_in] activations.
+      u_b: [d_out, r] binary (±1) factor.
+      v_b: [d_in, r] binary (±1) factor.
+      h:   [d_out] row scale.
+      l:   [r] central latent scale.
+      g:   [d_in] column scale.
+
+    Returns: [..., d_out].
+    """
+    latent = (x * g) @ v_b  # [..., r]
+    latent = latent * l
+    return (latent @ u_b.T) * h
+
+
+def binarize_ref(u):
+    """Optimal row-wise binarization (Lemma 4.2): returns (signs, alpha).
+
+    ``u``: [n, r]. signs: sign(u) with sign(0) := +1; alpha[i] = ‖u_i‖₁/r.
+    """
+    signs = jnp.where(u < 0, -1.0, 1.0).astype(u.dtype)
+    alpha = jnp.mean(jnp.abs(u), axis=-1)
+    return signs, alpha
+
+
+def local_distortion_ref(u):
+    """λ(u) per row: 1 − (‖u‖₁/‖u‖₂)²/r (Lemma 4.2). Zero rows give λ=0."""
+    l1 = jnp.sum(jnp.abs(u), axis=-1)
+    l2sq = jnp.sum(u * u, axis=-1)
+    r = u.shape[-1]
+    lam = 1.0 - (l1 * l1) / (r * jnp.maximum(l2sq, 1e-30))
+    return jnp.where(l2sq > 0, jnp.maximum(lam, 0.0), 0.0)
+
+
+def itq_sign_project_ref(z, rot):
+    """Joint-ITQ step A (Alg. 1 line 8): B = sign(Z R)."""
+    zr = z @ rot
+    return jnp.where(zr < 0, -1.0, 1.0).astype(z.dtype)
+
+
+def itq_procrustes_ref(b, z):
+    """Joint-ITQ step B (Alg. 1 lines 9-10): R = Ψ Φᵀ from SVD(BᵀZ)=ΦΩΨᵀ."""
+    m = b.T @ z
+    phi, _, psi_t = jnp.linalg.svd(m, full_matrices=False)
+    return psi_t.T @ phi.T
+
+
+def joint_itq_ref(z, rot0, iters):
+    """Full Joint-ITQ loop (Alg. 1) in jnp, for build-time verification of
+    the rust solver and for the exported itq_step artifact."""
+    rot = rot0
+    for _ in range(iters):
+        b = itq_sign_project_ref(z, rot)
+        rot = itq_procrustes_ref(b, z)
+    return rot
+
+
+def rank_one_decompose_ref(x):
+    """Rank-1 magnitude decomposition (Listing 1): X ≈ u vᵀ, u,v ≥ 0."""
+    u, s, vh = jnp.linalg.svd(x, full_matrices=False)
+    sq = jnp.sqrt(s[0])
+    uvec = u[:, 0] * sq
+    vvec = vh[0, :] * sq
+    flip = jnp.where(jnp.sum(uvec) < 0, -1.0, 1.0)
+    return jnp.maximum(uvec * flip, 0.0), jnp.maximum(vvec * flip, 0.0)

@@ -1,0 +1,107 @@
+"""L1 Pallas kernel: fused tri-scale low-rank binary matmul (Eq. 1).
+
+The paper's inference hot-spot. On GPU the authors fuse the
+scale-binary-scale pipeline into a custom CUDA bit-GEMV; the TPU-style
+mapping (DESIGN.md §Hardware-Adaptation) tiles the two MXU matmuls through
+VMEM with the three VPU element-wise scales fused around them:
+
+    y[tile] = (((x·g) @ V_b[tile]) · l) @ U_bᵀ[tile] · h[tile]
+
+Grid: one program per (batch-tile, d_out-tile). The latent dimension r is
+small by construction (sub-1-bit budgets ⇒ r ≤ ~256), so the whole latent
+panel V_b (d_in×r) rides in VMEM while U_b streams per output tile.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO so the same artifact runs
+under the rust runtime. Real-TPU perf is *estimated* from the VMEM/MXU
+model in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Output tile along d_out. 128 matches the MXU lane width.
+TILE_OUT = 128
+# Batch (rows of x) tile.
+TILE_B = 8
+
+
+def _kernel(xg_ref, vb_ref, l_ref, ub_ref, h_ref, o_ref):
+    """One (batch-tile, out-tile) program.
+
+    xg_ref: [TILE_B, d_in]   — pre-scaled activations (x*g).
+    vb_ref: [d_in, r]        — full V_b panel (resident).
+    l_ref:  [r]              — central scale.
+    ub_ref: [TILE_OUT, r]    — U_b rows for this output tile.
+    h_ref:  [TILE_OUT]       — row scales for this tile.
+    o_ref:  [TILE_B, TILE_OUT]
+    """
+    latent = jnp.dot(xg_ref[...], vb_ref[...])  # [TILE_B, r] — MXU
+    latent = latent * l_ref[...]                # VPU
+    out = jnp.dot(latent, ub_ref[...].T)        # [TILE_B, TILE_OUT] — MXU
+    o_ref[...] = out * h_ref[...]               # VPU
+
+
+@functools.partial(jax.jit, static_argnames=())
+def tri_scale_matmul(x, u_b, v_b, h, l, g):
+    """Fused Eq. 1 forward via pallas_call. Shapes as in ref.py; ``x`` may
+    be [B, d_in] or [d_in]."""
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[None, :]
+    b, d_in = x.shape
+    d_out, r = u_b.shape
+
+    # Pad batch and d_out to tile multiples (pallas BlockSpec needs exact
+    # tiling; padding is sliced away afterwards).
+    pb = (-b) % TILE_B
+    po = (-d_out) % TILE_OUT
+    xg = x * g
+    if pb:
+        xg = jnp.pad(xg, ((0, pb), (0, 0)))
+    u_bp = jnp.pad(u_b, ((0, po), (0, 0))) if po else u_b
+    hp = jnp.pad(h, (0, po)) if po else h
+
+    grid = (xg.shape[0] // TILE_B, u_bp.shape[0] // TILE_OUT)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_B, d_in), lambda i, j: (i, 0)),
+            pl.BlockSpec((d_in, r), lambda i, j: (0, 0)),
+            pl.BlockSpec((r,), lambda i, j: (0,)),
+            pl.BlockSpec((TILE_OUT, r), lambda i, j: (j, 0)),
+            pl.BlockSpec((TILE_OUT,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((TILE_B, TILE_OUT), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((xg.shape[0], u_bp.shape[0]), x.dtype),
+        interpret=True,
+    )(xg, v_b, l, u_bp, hp)
+
+    out = out[:b, :d_out]
+    return out[0] if squeeze else out
+
+
+def vmem_bytes(d_in: int, d_out: int, r: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM residency of one program instance — the §Perf L1
+    metric. V_b panel + U_b tile + x tile + latent + output tile."""
+    return dtype_bytes * (
+        d_in * r          # V_b panel
+        + TILE_OUT * r    # U_b tile
+        + TILE_B * d_in   # xg tile
+        + TILE_B * r      # latent
+        + TILE_B * TILE_OUT
+        + r + TILE_OUT    # l, h slices
+    )
+
+
+def mxu_utilization_estimate(d_in: int, d_out: int, r: int) -> float:
+    """Fraction of MXU issue slots doing useful work, assuming 128×128
+    systolic tiles: both matmuls have inner dim r; utilization ≈ r/128
+    capped at 1 (§Perf L1 estimate, recorded in EXPERIMENTS.md)."""
+    return min(r / 128.0, 1.0)

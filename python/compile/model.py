@@ -1,0 +1,474 @@
+"""L2: JAX transformer LM with LittleBit tri-scale linear layers + QAKD.
+
+Defines (a) a standard FP decoder-only transformer (the *teacher*), (b) the
+same architecture with every body linear replaced by the residual LittleBit
+tri-scale factorization trained with straight-through estimation (the
+*student*), and (c) the quantization-aware knowledge-distillation train
+step used by both the paper's protocol (§2.1) and our e2e run.
+
+Everything here runs at build time only: ``aot.py`` lowers these functions
+to HLO text once; the rust L3 coordinator then drives training/eval through
+PJRT without Python.
+
+Parameters travel as flat lists of arrays (deterministic order defined by
+``param_spec``) because the rust runtime feeds positional literals.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.tri_scale import tri_scale_matmul
+
+
+# --------------------------------------------------------------------------
+# Configuration
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 512
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 344           # SwiGLU width (~8/3 · d_model)
+    seq: int = 64
+    batch: int = 8
+    # Student compression settings.
+    bpp: float = 1.0
+    residual_paths: int = 2
+    # Tiny-Rank FP16 ablation variant (Strategy A): latents used directly
+    # (no sign/STE), rank budgeted at 16 bits per factor entry.
+    fp_latent: bool = False
+    # Distillation mix: loss = kd_alpha·KL(teacher‖student) + (1−kd_alpha)·CE.
+    kd_alpha: float = 0.5
+    kd_temperature: float = 2.0
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def rank_for_budget(self, d_out: int, d_in: int) -> int:
+        """Eq. 26 with the residual path count folded in (App. H); the FP
+        variant pays 16 bits per latent entry instead of 1."""
+        n = d_in * d_out
+        paths = self.residual_paths
+        if self.fp_latent:
+            num = self.bpp * n
+            den = 16.0 * paths * (d_in + d_out)
+        else:
+            num = self.bpp * n - 16.0 * paths * (d_in + d_out)
+            den = paths * (d_in + d_out + 16)
+        r = max(int(math.floor(num / den)), 1)
+        # A factorization rank above min(d) is meaningless (and the SVD
+        # truncation silently caps there) — clamp so specs stay consistent.
+        return min(r, min(d_in, d_out))
+
+
+# Body projections of one block: (name, d_out_fn, d_in_fn).
+_PROJS = [
+    ("q", lambda c: c.d_model, lambda c: c.d_model),
+    ("k", lambda c: c.d_model, lambda c: c.d_model),
+    ("v", lambda c: c.d_model, lambda c: c.d_model),
+    ("o", lambda c: c.d_model, lambda c: c.d_model),
+    ("gate", lambda c: c.d_ff, lambda c: c.d_model),
+    ("up", lambda c: c.d_ff, lambda c: c.d_model),
+    ("down", lambda c: c.d_model, lambda c: c.d_ff),
+]
+
+
+# --------------------------------------------------------------------------
+# Parameter specs — the contract with the rust runtime
+# --------------------------------------------------------------------------
+
+
+def teacher_param_spec(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list of teacher parameters."""
+    spec = [("embed", (cfg.vocab, cfg.d_model))]
+    for b in range(cfg.n_layers):
+        spec.append((f"b{b}.ln1", (cfg.d_model,)))
+        spec.append((f"b{b}.ln2", (cfg.d_model,)))
+        for name, fo, fi in _PROJS:
+            spec.append((f"b{b}.{name}", (fo(cfg), fi(cfg))))
+    spec.append(("ln_f", (cfg.d_model,)))
+    spec.append(("head", (cfg.vocab, cfg.d_model)))
+    return spec
+
+
+def student_param_spec(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Student: embeddings/norms/head stay FP (paper convention); every body
+    linear becomes `residual_paths` tri-scale factor sets."""
+    spec = [("embed", (cfg.vocab, cfg.d_model))]
+    for b in range(cfg.n_layers):
+        spec.append((f"b{b}.ln1", (cfg.d_model,)))
+        spec.append((f"b{b}.ln2", (cfg.d_model,)))
+        for name, fo, fi in _PROJS:
+            d_out, d_in = fo(cfg), fi(cfg)
+            r = cfg.rank_for_budget(d_out, d_in)
+            for p in range(cfg.residual_paths):
+                base = f"b{b}.{name}.p{p}"
+                spec.append((f"{base}.lat_u", (d_out, r)))
+                spec.append((f"{base}.lat_v", (d_in, r)))
+                spec.append((f"{base}.h", (d_out,)))
+                spec.append((f"{base}.l", (r,)))
+                spec.append((f"{base}.g", (d_in,)))
+    spec.append(("ln_f", (cfg.d_model,)))
+    spec.append(("head", (cfg.vocab, cfg.d_model)))
+    return spec
+
+
+# --------------------------------------------------------------------------
+# Shared transformer pieces
+# --------------------------------------------------------------------------
+
+
+def _rmsnorm(x, w):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + 1e-6) * w
+
+
+def _rope(x, positions):
+    """Rotary position embedding over the last dim (pairs)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half) / half)
+    angles = positions[:, None] * freqs[None, :]  # [S, half]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _attention(q, k, v, cfg: ModelConfig):
+    """Causal MHA. q,k,v: [B, S, d_model]."""
+    b, s, _ = q.shape
+    hd = cfg.head_dim
+    pos = jnp.arange(s, dtype=jnp.float32)
+
+    def split(t):
+        return t.reshape(b, s, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = split(q), split(k), split(v)
+    q = _rope(q, pos)
+    k = _rope(k, pos)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / math.sqrt(hd)
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+    return out.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * hd)
+
+
+def _block(x, params, linear_fn, cfg: ModelConfig):
+    """One decoder block. `linear_fn(name, x2d) -> y2d` dispatches to the
+    teacher dense weights or the student tri-scale layers."""
+    b, s, d = x.shape
+    h = _rmsnorm(x, params["ln1"])
+    h2 = h.reshape(b * s, d)
+    q = linear_fn("q", h2).reshape(b, s, -1)
+    k = linear_fn("k", h2).reshape(b, s, -1)
+    v = linear_fn("v", h2).reshape(b, s, -1)
+    att = _attention(q, k, v, cfg)
+    x = x + linear_fn("o", att.reshape(b * s, -1)).reshape(b, s, d)
+
+    h = _rmsnorm(x, params["ln2"])
+    h2 = h.reshape(b * s, d)
+    gate = linear_fn("gate", h2)
+    up = linear_fn("up", h2)
+    ff = jax.nn.silu(gate) * up
+    x = x + linear_fn("down", ff).reshape(b, s, d)
+    return x
+
+
+# --------------------------------------------------------------------------
+# Teacher (FP) model
+# --------------------------------------------------------------------------
+
+
+def _unflatten(spec, flat):
+    assert len(spec) == len(flat), f"{len(spec)} vs {len(flat)}"
+    return {name: arr for (name, _), arr in zip(spec, flat)}
+
+
+def teacher_logits(cfg: ModelConfig, flat_params, tokens):
+    """tokens: [B, S] int32 → logits [B, S, vocab]."""
+    p = _unflatten(teacher_param_spec(cfg), flat_params)
+    x = p["embed"][tokens]
+    for b in range(cfg.n_layers):
+        blk = {
+            "ln1": p[f"b{b}.ln1"],
+            "ln2": p[f"b{b}.ln2"],
+        }
+
+        def linear(name, x2d, b=b):
+            return x2d @ p[f"b{b}.{name}"].T
+
+        x = _block(x, blk, linear, cfg)
+    x = _rmsnorm(x, p["ln_f"])
+    return x @ p["head"].T
+
+
+# --------------------------------------------------------------------------
+# Student (LittleBit tri-scale, STE) model
+# --------------------------------------------------------------------------
+
+
+def _sign_ste(x):
+    """sign with straight-through gradient (Bengio et al., 2013)."""
+    s = jnp.where(x < 0, -1.0, 1.0).astype(x.dtype)
+    return x + jax.lax.stop_gradient(s - x)
+
+
+def student_logits(cfg: ModelConfig, flat_params, tokens, use_pallas: bool = False):
+    """Student forward. ``use_pallas=True`` routes the tri-scale matmul
+    through the L1 Pallas kernel (exported inference graph); training uses
+    the jnp oracle (identical numerics, pinned by python/tests)."""
+    p = _unflatten(student_param_spec(cfg), flat_params)
+    x = p["embed"][tokens]
+    for b in range(cfg.n_layers):
+        blk = {"ln1": p[f"b{b}.ln1"], "ln2": p[f"b{b}.ln2"]}
+
+        def linear(name, x2d, b=b):
+            out = None
+            for path in range(cfg.residual_paths):
+                base = f"b{b}.{name}.p{path}"
+                lat_u, lat_v = p[f"{base}.lat_u"], p[f"{base}.lat_v"]
+                if cfg.fp_latent:
+                    u_b, v_b = lat_u, lat_v  # Strategy A: FP latents as-is
+                else:
+                    u_b, v_b = _sign_ste(lat_u), _sign_ste(lat_v)
+                h, l, g = p[f"{base}.h"], p[f"{base}.l"], p[f"{base}.g"]
+                if use_pallas:
+                    y = tri_scale_matmul(x2d, u_b, v_b, h, l, g)
+                else:
+                    y = ref.tri_scale_matmul_ref(x2d, u_b, v_b, h, l, g)
+                out = y if out is None else out + y
+            return out
+
+        x = _block(x, blk, linear, cfg)
+    x = _rmsnorm(x, p["ln_f"])
+    return x @ p["head"].T
+
+
+# --------------------------------------------------------------------------
+# Losses, metrics
+# --------------------------------------------------------------------------
+
+
+def next_token_ce(logits, tokens_full):
+    """Cross-entropy of logits[:, :-1] against tokens[:, 1:]... callers pass
+    tokens block [B, S+1] and logits over [B, S]; here logits are computed
+    on tokens_full[:, :-1]."""
+    labels = tokens_full[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def kd_loss(student_logits_, teacher_logits_, temperature):
+    """KL(teacher ‖ student) with temperature scaling."""
+    t = temperature
+    pt = jax.nn.softmax(teacher_logits_ / t, axis=-1)
+    log_ps = jax.nn.log_softmax(student_logits_ / t, axis=-1)
+    log_pt = jax.nn.log_softmax(teacher_logits_ / t, axis=-1)
+    return jnp.mean(jnp.sum(pt * (log_pt - log_ps), axis=-1)) * t * t
+
+
+def sign_flip_count(old_flat, new_flat, spec):
+    """Number of binary latent entries whose sign changed (Fig. 8 metric),
+    plus the total latent count."""
+    flips = jnp.array(0.0)
+    total = 0
+    for (name, shape), old, new in zip(spec, old_flat, new_flat):
+        if ".lat_" in name:
+            flips = flips + jnp.sum((old < 0) != (new < 0))
+            total += math.prod(shape)
+    return flips, total
+
+
+# --------------------------------------------------------------------------
+# Adam + train steps
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class AdamConfig:
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+
+
+def adam_update(params, grads, m, v, step, lr, ac: AdamConfig = AdamConfig()):
+    new_p, new_m, new_v = [], [], []
+    t = step + 1.0
+    for p, g, mi, vi in zip(params, grads, m, v):
+        mi = ac.b1 * mi + (1 - ac.b1) * g
+        vi = ac.b2 * vi + (1 - ac.b2) * g * g
+        mhat = mi / (1 - ac.b1**t)
+        vhat = vi / (1 - ac.b2**t)
+        new_p.append(p - lr * mhat / (jnp.sqrt(vhat) + ac.eps))
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_p, new_m, new_v
+
+
+def teacher_train_step(cfg: ModelConfig, params, m, v, step, tokens, lr):
+    """One Adam step of plain next-token CE for the teacher.
+    Returns (params', m', v', loss)."""
+
+    def loss_fn(ps):
+        logits = teacher_logits(cfg, ps, tokens[:, :-1])
+        return next_token_ce(logits, tokens)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    params, m, v = adam_update(params, grads, m, v, step, lr)
+    return params, m, v, loss
+
+
+def student_train_step(cfg: ModelConfig, s_params, t_params, m, v, step, tokens, lr):
+    """One QAKD step (§2.1 protocol): CE + KD against the frozen teacher.
+    Returns (s_params', m', v', loss, flips)."""
+
+    t_logits = jax.lax.stop_gradient(teacher_logits(cfg, t_params, tokens[:, :-1]))
+
+    def loss_fn(ps):
+        s_logits = student_logits(cfg, ps, tokens[:, :-1])
+        ce = next_token_ce(s_logits, tokens)
+        kd = kd_loss(s_logits, t_logits, cfg.kd_temperature)
+        return cfg.kd_alpha * kd + (1 - cfg.kd_alpha) * ce
+
+    loss, grads = jax.value_and_grad(loss_fn)(s_params)
+    new_params, m, v = adam_update(s_params, grads, m, v, step, lr)
+    flips, _total = sign_flip_count(s_params, new_params, student_param_spec(cfg))
+    return new_params, m, v, loss, flips
+
+
+def eval_loss(cfg: ModelConfig, flat_params, tokens, student: bool):
+    """Mean next-token CE (exp → PPL) for held-out evaluation."""
+    logits = (
+        student_logits(cfg, flat_params, tokens[:, :-1])
+        if student
+        else teacher_logits(cfg, flat_params, tokens[:, :-1])
+    )
+    return next_token_ce(logits, tokens)
+
+
+# --------------------------------------------------------------------------
+# Initialization (build-time; exported as .bin for the rust driver)
+# --------------------------------------------------------------------------
+
+
+def init_teacher(cfg: ModelConfig, key) -> List[jnp.ndarray]:
+    out = []
+    for name, shape in teacher_param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("ln1", "ln2")) or name == "ln_f":
+            out.append(jnp.ones(shape, jnp.float32))
+        elif name in ("embed", "head"):
+            out.append(0.02 * jax.random.normal(sub, shape, jnp.float32))
+        else:
+            fan_in = shape[1]
+            out.append(
+                jax.random.normal(sub, shape, jnp.float32) / math.sqrt(fan_in)
+            )
+    return out
+
+
+def zeros_like_params(spec) -> List[jnp.ndarray]:
+    return [jnp.zeros(shape, jnp.float32) for _, shape in spec]
+
+
+# --------------------------------------------------------------------------
+# Student initialization from a trained teacher (Fig. 2 pipeline, build time)
+# --------------------------------------------------------------------------
+
+
+def _truncated_svd_factors(w, r):
+    """Û = U√Σ, V̂ = V√Σ at rank r (Alg. 2 steps 1-2)."""
+    u, s, vh = jnp.linalg.svd(w, full_matrices=False)
+    sq = jnp.sqrt(s[:r])
+    return u[:, :r] * sq, vh[:r, :].T * sq
+
+
+def _dual_svid_scales(u_t, v_t):
+    """Rank-1 magnitude decomposition → (h, l, g) (Alg. 2 step 3)."""
+    h, l_u = ref.rank_one_decompose_ref(jnp.abs(u_t))
+    g, l_v = ref.rank_one_decompose_ref(jnp.abs(v_t))
+    return h, l_u * l_v, g
+
+
+def compress_layer_init(w, r, strategy: str, key, itq_iters: int = 50,
+                        n_paths: int = 2, fp_latent: bool = False):
+    """Initialize `n_paths` residual tri-scale parameter sets for weight `w`.
+
+    strategy ∈ {"standard", "rotation", "itq"} — the Table 3 axis.
+    Returns a list of (lat_u, lat_v, h, l, g) per path.
+    """
+    paths = []
+    target = w
+    for _ in range(n_paths):
+        u_t, v_t = _truncated_svd_factors(target, r)
+        if not fp_latent and strategy != "standard":
+            key, sub = jax.random.split(key)
+            g0 = jax.random.normal(sub, (r, r), jnp.float32)
+            rot0, _ = jnp.linalg.qr(g0)
+            if strategy == "rotation":
+                rot = rot0
+            elif strategy == "itq":
+                z = jnp.concatenate([u_t, v_t], axis=0)
+                rot = ref.joint_itq_ref(z, rot0, itq_iters)
+            else:
+                raise ValueError(f"unknown strategy {strategy!r}")
+            u_t, v_t = u_t @ rot, v_t @ rot
+        if fp_latent:
+            ones_h = jnp.ones((w.shape[0],), jnp.float32)
+            ones_l = jnp.ones((r,), jnp.float32)
+            ones_g = jnp.ones((w.shape[1],), jnp.float32)
+            paths.append((u_t, v_t, ones_h, ones_l, ones_g))
+            recon = u_t @ v_t.T
+        else:
+            h, l, g = _dual_svid_scales(u_t, v_t)
+            paths.append((u_t, v_t, h, l, g))
+            u_b = jnp.where(u_t < 0, -1.0, 1.0)
+            v_b = jnp.where(v_t < 0, -1.0, 1.0)
+            recon = ((u_b * h[:, None]) * l[None, :]) @ (v_b * g[:, None]).T
+        target = target - recon
+    return paths
+
+
+def init_student_from_teacher(cfg: ModelConfig, teacher_flat, strategy: str,
+                              key, itq_iters: int = 50) -> List[jnp.ndarray]:
+    """Build the full student parameter list by compressing every teacher
+    body linear; embeddings/norms/head are copied (kept FP)."""
+    t = _unflatten(teacher_param_spec(cfg), teacher_flat)
+    out: List[jnp.ndarray] = []
+    for name, shape in student_param_spec(cfg):
+        if ".p" not in name:
+            out.append(t[name])
+    # Re-walk in spec order, emitting tri-scale params lazily per layer.
+    out = []
+    cache = {}
+    for name, shape in student_param_spec(cfg):
+        if ".p" not in name:
+            out.append(t[name])
+            continue
+        layer, rest = name.split(".p", 1)
+        pidx, field_name = rest.split(".", 1)
+        pidx = int(pidx)
+        if layer not in cache:
+            w = t[layer]
+            r = cfg.rank_for_budget(w.shape[0], w.shape[1])
+            key, sub = jax.random.split(key)
+            cache[layer] = compress_layer_init(
+                w, r, strategy, sub, itq_iters, cfg.residual_paths,
+                cfg.fp_latent,
+            )
+        lat_u, lat_v, h, l, g = cache[layer][pidx]
+        out.append({"lat_u": lat_u, "lat_v": lat_v, "h": h, "l": l, "g": g}[field_name])
+    return out

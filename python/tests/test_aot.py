@@ -1,0 +1,83 @@
+"""AOT lowering contract tests.
+
+Guards the properties the rust runtime depends on:
+  * HLO text parses and contains no custom-calls (the standalone PJRT
+    client cannot resolve lapack/jaxlib targets);
+  * artifact arities match the manifest;
+  * the tiny preset lowers end-to-end.
+"""
+
+import dataclasses
+import json
+
+import jax
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    return aot.preset("tiny")
+
+
+@pytest.fixture(scope="module")
+def lowered(tiny_cfg):
+    artifacts, t_spec, s_spec, fp_spec = aot.lower_train_steps(tiny_cfg)
+    out = {}
+    for name, (fn, args) in artifacts.items():
+        low = jax.jit(fn).lower(*args)
+        out[name] = (aot.to_hlo_text(low), len(args))
+    return out
+
+
+def test_all_artifacts_lower(lowered):
+    assert set(lowered) == {
+        "teacher_train_step",
+        "student_train_step",
+        "student_fp_train_step",
+        "teacher_eval",
+        "student_eval",
+        "student_fp_eval",
+        "student_infer",
+    }
+
+
+def test_no_custom_calls(lowered):
+    for name, (text, _) in lowered.items():
+        assert "custom-call" not in text, f"{name} contains a custom-call"
+        assert "CustomCall" not in text, f"{name} contains a CustomCall"
+
+
+def test_hlo_text_is_parseable_shape(lowered):
+    for name, (text, _) in lowered.items():
+        assert text.startswith("HloModule"), f"{name} missing HloModule header"
+        assert "ENTRY" in text, f"{name} missing entry computation"
+
+
+def test_train_step_arity(tiny_cfg, lowered):
+    nt = len(M.teacher_param_spec(tiny_cfg))
+    ns = len(M.student_param_spec(tiny_cfg))
+    assert lowered["teacher_train_step"][1] == 3 * nt + 3
+    assert lowered["student_train_step"][1] == 3 * ns + nt + 3
+
+
+def test_layer_kernel_lowering():
+    fn, args = aot.lower_layer_kernel(128, 256, 16, batch=2)
+    text = aot.to_hlo_text(jax.jit(fn).lower(*args))
+    assert "custom-call" not in text
+    assert text.startswith("HloModule")
+
+
+def test_presets_are_distinct():
+    tiny, small, base = aot.preset("tiny"), aot.preset("small"), aot.preset("base")
+    assert tiny.d_model < small.d_model < base.d_model
+    with pytest.raises(SystemExit):
+        aot.preset("huge")
+
+
+def test_bpp_override_changes_ranks(tiny_cfg):
+    lo = dataclasses.replace(tiny_cfg, bpp=0.4)
+    hi = dataclasses.replace(tiny_cfg, bpp=2.0)
+    assert lo.rank_for_budget(172, 64) < hi.rank_for_budget(172, 64)

@@ -1,0 +1,177 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis drives the shape/seed sweep — the CORE correctness signal for
+the compute hot-path (system prompt contract: L1 kernels == ref.py).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.binarize import binarize
+from compile.kernels.itq_step import itq_iteration, sign_project
+from compile.kernels.tri_scale import (
+    mxu_utilization_estimate,
+    tri_scale_matmul,
+    vmem_bytes,
+)
+
+settings.register_profile("ci", deadline=None, max_examples=20)
+settings.load_profile("ci")
+
+
+def rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape)
+
+
+# ---------------------------------------------------------------------------
+# tri_scale_matmul
+# ---------------------------------------------------------------------------
+
+
+@given(
+    b=st.integers(1, 17),
+    d_in=st.integers(3, 200),
+    d_out=st.integers(3, 300),
+    r=st.integers(1, 48),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_tri_scale_matches_ref(b, d_in, d_out, r, seed):
+    k = jax.random.PRNGKey(seed)
+    ks = jax.random.split(k, 6)
+    x = jax.random.normal(ks[0], (b, d_in))
+    u_b = jnp.sign(jax.random.normal(ks[1], (d_out, r))) + 0.0
+    v_b = jnp.sign(jax.random.normal(ks[2], (d_in, r))) + 0.0
+    h = jax.random.uniform(ks[3], (d_out,), minval=0.1, maxval=2.0)
+    l = jax.random.uniform(ks[4], (r,), minval=0.01, maxval=1.0)
+    g = jax.random.uniform(ks[5], (d_in,), minval=0.1, maxval=2.0)
+    got = tri_scale_matmul(x, u_b, v_b, h, l, g)
+    want = ref.tri_scale_matmul_ref(x, u_b, v_b, h, l, g)
+    # Tile-local vs full-row accumulation order differs → ~1e-3 relative
+    # f32 slack at large output magnitudes.
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-3, atol=1e-4)
+
+
+def test_tri_scale_1d_input():
+    x = rand(0, (40,))
+    u_b = jnp.sign(rand(1, (30, 8)))
+    v_b = jnp.sign(rand(2, (40, 8)))
+    h, l, g = jnp.ones((30,)), jnp.ones((8,)), jnp.ones((40,))
+    got = tri_scale_matmul(x, u_b, v_b, h, l, g)
+    assert got.shape == (30,)
+    want = ref.tri_scale_matmul_ref(x, u_b, v_b, h, l, g)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_tri_scale_exact_tile_multiples():
+    # Shapes exactly at TILE boundaries (no padding path).
+    x = rand(3, (8, 128))
+    u_b = jnp.sign(rand(4, (256, 16)))
+    v_b = jnp.sign(rand(5, (128, 16)))
+    h, l, g = jnp.ones((256,)), jnp.ones((16,)), jnp.ones((128,))
+    got = tri_scale_matmul(x, u_b, v_b, h, l, g)
+    want = ref.tri_scale_matmul_ref(x, u_b, v_b, h, l, g)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_perf_model_estimates_positive():
+    assert vmem_bytes(4096, 4096, 128) > 0
+    assert 0.0 < mxu_utilization_estimate(4096, 4096, 64) <= 1.0
+    assert mxu_utilization_estimate(4096, 4096, 256) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# binarize
+# ---------------------------------------------------------------------------
+
+
+@given(
+    n=st.integers(1, 300),
+    r=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_binarize_matches_ref(n, r, seed):
+    u = jax.random.normal(jax.random.PRNGKey(seed), (n, r))
+    s, a = binarize(u)
+    rs, ra = ref.binarize_ref(u)
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(rs))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(ra), rtol=1e-6)
+
+
+def test_binarize_alpha_is_optimal():
+    # Perturbing alpha must not reduce ||u - alpha*s||^2 (Lemma 4.2).
+    u = rand(7, (32, 16))
+    s, a = binarize(u)
+
+    def err(alpha):
+        return float(jnp.sum((u - alpha[:, None] * s) ** 2))
+
+    base = err(a)
+    assert err(a * 1.05) >= base
+    assert err(a * 0.95) >= base
+
+
+def test_binarize_zero_rows():
+    u = jnp.zeros((4, 8))
+    s, a = binarize(u)
+    np.testing.assert_array_equal(np.asarray(a), np.zeros(4))
+    np.testing.assert_array_equal(np.asarray(s), np.ones((4, 8)))
+
+
+# ---------------------------------------------------------------------------
+# itq_step
+# ---------------------------------------------------------------------------
+
+
+@given(
+    n=st.integers(4, 400),
+    r=st.integers(2, 24),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sign_project_matches_ref(n, r, seed):
+    k = jax.random.PRNGKey(seed)
+    z = jax.random.normal(k, (n, r))
+    rot, _ = jnp.linalg.qr(jax.random.normal(jax.random.PRNGKey(seed + 1), (r, r)))
+    b, mass = sign_project(z, rot)
+    rb = ref.itq_sign_project_ref(z, rot)
+    np.testing.assert_array_equal(np.asarray(b), np.asarray(rb))
+    want_mass = float(jnp.sum(jnp.abs(z @ rot)))
+    assert abs(float(mass) - want_mass) < 1e-2 * max(want_mass, 1.0)
+
+
+def test_itq_iteration_monotone_l1():
+    # App. A.2: each alternation is non-decreasing in ||ZR||_1.
+    z = rand(11, (500, 12))
+    rot, _ = jnp.linalg.qr(rand(12, (12, 12)))
+    masses = []
+    for _ in range(25):
+        rot, mass = itq_iteration(z, rot)
+        masses.append(float(mass))
+    for a, b in zip(masses, masses[1:]):
+        assert b >= a - 1e-3 * abs(a)
+
+
+def test_itq_iteration_preserves_orthogonality():
+    z = rand(13, (200, 10))
+    rot, _ = jnp.linalg.qr(rand(14, (10, 10)))
+    for _ in range(10):
+        rot, _ = itq_iteration(z, rot)
+    defect = float(jnp.max(jnp.abs(rot @ rot.T - jnp.eye(10))))
+    assert defect < 1e-4
+
+
+def test_itq_reduces_distortion_vs_random():
+    z = rand(15, (600, 16), scale=1.0)
+    # Make z spiky: zero most entries.
+    mask = jax.random.bernoulli(jax.random.PRNGKey(16), 0.1, z.shape)
+    z = jnp.where(mask, z * 5.0, z * 0.05)
+    rot0, _ = jnp.linalg.qr(rand(17, (16, 16)))
+    lam0 = float(jnp.mean(ref.local_distortion_ref(z @ rot0)))
+    rot = rot0
+    for _ in range(50):
+        rot, _ = itq_iteration(z, rot)
+    lam = float(jnp.mean(ref.local_distortion_ref(z @ rot)))
+    assert lam < lam0, f"{lam} !< {lam0}"

@@ -1,0 +1,66 @@
+//! Fig. 6 (top) — Spectral Break-Even Analysis.
+//!
+//! Reconstruction MSE vs spectral decay rate γ at a fixed 1.0 bpp budget
+//! for Tiny-Rank FP16, LittleBit, LittleBit+Rotation, and LittleBit-2.
+//! The paper's claims under test: LittleBit beats FP16 only for γ ≲ 0.36;
+//! rotation extends the crossover to ≈0.41 and Joint-ITQ to ≈0.51.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use littlebit2::littlebit::{compress, CompressionConfig, InitStrategy};
+use littlebit2::memory::tiny_rank_for_budget;
+use littlebit2::quant::tiny_rank_fp16;
+use littlebit2::rng::Pcg64;
+use littlebit2::spectral::{synth_weight, SynthSpec};
+
+fn main() {
+    let size = if common::full_scale() { 4096 } else { 512 };
+    let bpp = 1.0;
+    println!("# Fig 6 (top): MSE vs gamma at {bpp} bpp, W {size}x{size}");
+    println!("ROW: gamma tinyrank_fp littlebit lb_rot littlebit2");
+
+    let mut crossings: Vec<(String, Option<f64>)> = Vec::new();
+    let mut last: Option<(f64, [f64; 4])> = None;
+    let gammas: Vec<f64> = (1..=16).map(|i| 0.05 * i as f64).collect();
+    for (gi, &gamma) in gammas.iter().enumerate() {
+        let mut rng = Pcg64::seed(6000 + gi as u64);
+        let spec = SynthSpec { rows: size, cols: size, gamma, coherence: 0.7, scale: 1.0 };
+        let w = synth_weight(&spec, &mut rng);
+
+        let r_fp = tiny_rank_for_budget(size, size, bpp);
+        let fp = tiny_rank_fp16(&w, r_fp, &mut rng).reconstruction.mse(&w);
+        let binary = |strategy| {
+            let mut rng = Pcg64::seed(8800 + gi as u64);
+            let cfg = CompressionConfig { bpp, strategy, residual: true, ..Default::default() };
+            compress(&w, &cfg, &mut rng).reconstruct().mse(&w)
+        };
+        let lb = binary(InitStrategy::Standard);
+        let rot = binary(InitStrategy::RandomRotation);
+        let itq = binary(InitStrategy::JointItq { iters: 50 });
+        println!("ROW: {gamma:.2} {fp:.6e} {lb:.6e} {rot:.6e} {itq:.6e}");
+
+        // Detect the FP-vs-method crossovers (the γ* of each curve).
+        let cur = [fp, lb, rot, itq];
+        if let Some((g_prev, prev)) = last {
+            for (idx, name) in [(1usize, "littlebit"), (2, "lb+rot"), (3, "littlebit2")] {
+                let was_better = prev[idx] < prev[0];
+                let is_better = cur[idx] < cur[0];
+                if was_better && !is_better && !crossings.iter().any(|(n, _)| n == name) {
+                    // Linear interpolation of the crossing point.
+                    let f = |v: [f64; 4]| v[idx] - v[0];
+                    let t = f(prev) / (f(prev) - f(cur));
+                    crossings.push((name.to_string(), Some(g_prev + t * (gamma - g_prev))));
+                }
+            }
+        }
+        last = Some((gamma, cur));
+    }
+    for (name, g) in crossings {
+        match g {
+            Some(g) => println!("CROSSOVER: {name} gamma* ≈ {g:.3}"),
+            None => println!("CROSSOVER: {name} none in range"),
+        }
+    }
+    println!("# paper: littlebit ≈0.36, +rotation ≈0.41, littlebit2 ≈0.51");
+}

@@ -1,0 +1,26 @@
+//! Shared bench scaffolding (criterion is unavailable offline, so benches
+//! are `harness = false` binaries with a small timing helper; `cargo bench`
+//! runs them all). Keep output machine-greppable: one `ROW:`-prefixed line
+//! per series point, mirroring the paper table/figure it regenerates.
+
+use std::time::Instant;
+
+/// Time `f` with warmup; returns (mean_ms, std_ms) over `reps`.
+pub fn time_ms(reps: usize, mut f: impl FnMut()) -> (f64, f64) {
+    f(); // warmup
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    let mean = samples.iter().sum::<f64>() / reps as f64;
+    let var = samples.iter().map(|s| (s - mean).powi(2)).sum::<f64>() / reps as f64;
+    (mean, var.sqrt())
+}
+
+/// Scale knob: `LB2_BENCH_SCALE=full` runs paper-scale shapes; default is a
+/// CPU-budget reduction with identical structure.
+pub fn full_scale() -> bool {
+    std::env::var("LB2_BENCH_SCALE").map(|v| v == "full").unwrap_or(false)
+}

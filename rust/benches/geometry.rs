@@ -1,0 +1,70 @@
+//! Figs. 3, 4, 5 — Latent Geometry Misalignment diagnostics.
+//!
+//! Regenerates: (Fig 3) per-row λ distribution before/after alignment with
+//! peak-distortion suppression; (Fig 4) latent histogram Gaussianization
+//! under rotation; (Fig 5) bimodal separation under Joint-ITQ, summarized
+//! by the zero-margin mass (fraction of latent entries near the decision
+//! boundary) and the mean/max λ trajectory quoted in §4.3-4.4.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use littlebit2::linalg::{svd_randomized, Mat};
+use littlebit2::littlebit::{joint_itq, random_rotation};
+use littlebit2::quant::row_distortions;
+use littlebit2::rng::Pcg64;
+use littlebit2::spectral::{synth_weight, SynthSpec};
+
+fn lambda_stats(m: &Mat) -> (f64, f64) {
+    let lam = row_distortions(m);
+    let mean = lam.iter().sum::<f64>() / lam.len() as f64;
+    let max = lam.iter().fold(0.0f64, |a, &b| a.max(b));
+    (mean, max)
+}
+
+/// Fraction of entries within ±10% of zero relative to the row scale — the
+/// "uncertainty zone" mass of §4.4 / Fig 8's oscillation mechanism.
+fn zero_margin_mass(m: &Mat) -> f64 {
+    let mut near = 0usize;
+    let mut total = 0usize;
+    for i in 0..m.rows() {
+        let row = m.row(i);
+        let scale = littlebit2::linalg::norm2(row) / (row.len() as f64).sqrt();
+        for &x in row {
+            if (x as f64).abs() < 0.1 * scale {
+                near += 1;
+            }
+            total += 1;
+        }
+    }
+    near as f64 / total as f64
+}
+
+fn main() {
+    let size = if common::full_scale() { 4096 } else { 1024 };
+    let rank = size / 16;
+    println!("# Figs 3/4/5: latent geometry, q_proj-shaped {size}x{size}, r={rank}");
+    let mut rng = Pcg64::seed(15);
+    let spec = SynthSpec { rows: size, cols: size, gamma: 0.32, coherence: 0.85, scale: 1.0 };
+    let w = synth_weight(&spec, &mut rng);
+    let svd = svd_randomized(&w, rank, 10, 2, &mut rng);
+    let (u, v) = svd.split_factors();
+
+    println!("ROW: stage lambda_mean lambda_max zero_margin_mass");
+    let (m0, x0) = lambda_stats(&u);
+    println!("ROW: svd {m0:.4} {x0:.4} {:.4}", zero_margin_mass(&u));
+
+    let rot = random_rotation(rank, &mut rng);
+    let u_rot = u.matmul(&rot);
+    let (m1, x1) = lambda_stats(&u_rot);
+    println!("ROW: rotation {m1:.4} {x1:.4} {:.4}", zero_margin_mass(&u_rot));
+
+    let (itq_rot, _) = joint_itq(&u, &v, 50, &mut rng);
+    let u_itq = u.matmul(&itq_rot);
+    let (m2, x2) = lambda_stats(&u_itq);
+    println!("ROW: joint_itq {m2:.4} {x2:.4} {:.4}", zero_margin_mass(&u_itq));
+
+    println!("# paper: SVD λ_max≈0.88 kurtosis≈16.8 → rotation mean≈0.36 max≈0.43 → ITQ mean≈0.30");
+    println!("# gaussian limit 1-2/π ≈ 0.3634; ITQ must fall below it and shrink zero-margin mass");
+    assert!(m1 < m0 && m2 < m1, "alignment hierarchy violated");
+}

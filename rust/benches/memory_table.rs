@@ -1,0 +1,65 @@
+//! Tables 1 & 2 — Memory columns (Body/Total GB and % of FP16).
+//!
+//! These are computed **exactly** (public architecture shapes + the App. H
+//! formulas); asserted against the paper's printed values where given.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use littlebit2::memory::{model_memory, MethodKind};
+use littlebit2::model::ArchSpec;
+
+fn main() {
+    let methods = [
+        MethodKind::Fp16,
+        MethodKind::Rtn { k: 2, group: 128 },
+        MethodKind::Billm,
+        MethodKind::Arb,
+        MethodKind::OneBit,
+        MethodKind::LittleBit { bpp: 1.0 },
+        MethodKind::LittleBit { bpp: 0.55 },
+        MethodKind::LittleBit { bpp: 0.1 },
+        MethodKind::TinyRank { bpp: 0.1 },
+    ];
+    println!("# Table 1/2 memory columns (exact, Eqs. 21-26)");
+    println!("ROW: model method body_gb body_pct total_gb total_pct");
+    for name in ArchSpec::KNOWN {
+        let arch = ArchSpec::by_name(name).expect("known");
+        for m in methods {
+            let mm = model_memory(&arch, m);
+            println!(
+                "ROW: {} {} {:.2} {:.1} {:.2} {:.1}",
+                arch.name,
+                mm.method.replace(' ', "_"),
+                mm.body_gb(),
+                mm.body_pct(),
+                mm.total_gb(),
+                mm.total_pct()
+            );
+        }
+    }
+
+    // Spot-assert the paper's printed Table 1 values.
+    let checks = [
+        ("llama2-7b", MethodKind::Fp16, 13.0, 13.5),
+        ("llama2-7b", MethodKind::OneBit, 0.8, 1.4),
+        ("llama2-7b", MethodKind::LittleBit { bpp: 0.55 }, 0.5, 1.0),
+        ("llama3-8b", MethodKind::Fp16, 14.0, 16.1),
+        ("llama3-8b", MethodKind::LittleBit { bpp: 0.1 }, 0.1, 2.2),
+        ("llama2-13b", MethodKind::LittleBit { bpp: 1.0 }, 1.6, 2.3),
+    ];
+    for (model, method, body, total) in checks {
+        let mm = model_memory(&ArchSpec::by_name(model).expect("known"), method);
+        assert!(
+            (mm.body_gb() - body).abs() < 0.11,
+            "{model} {method:?}: body {} vs paper {body}",
+            mm.body_gb()
+        );
+        assert!(
+            (mm.total_gb() - total).abs() < 0.16,
+            "{model} {method:?}: total {} vs paper {total}",
+            mm.total_gb()
+        );
+    }
+    println!("# all spot-checks vs the printed Table 1 values passed");
+}

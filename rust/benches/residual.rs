@@ -1,0 +1,44 @@
+//! Fig. 14 (App. G) — Efficacy of the residual architecture.
+//!
+//! MSE vs memory budget (0.05–1.2 bpp) for residual (solid) vs single-path
+//! (dashed) variants of FP16, LittleBit, LittleBit+Rot, and LittleBit-2.
+//! Paper hierarchy: FP16 ≈ FP16(NoRes) > LittleBit > RandRot >
+//! LittleBit-2(NoRes) ≳ LittleBit-2.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use littlebit2::littlebit::{compress, CompressionConfig, InitStrategy};
+use littlebit2::memory::tiny_rank_for_budget;
+use littlebit2::quant::tiny_rank_fp16;
+use littlebit2::rng::Pcg64;
+use littlebit2::spectral::{synth_weight, SynthSpec};
+
+fn main() {
+    let size = if common::full_scale() { 2048 } else { 512 };
+    println!("# Fig 14: residual vs single-path MSE vs budget, W {size}x{size} γ=0.3");
+    let mut rng = Pcg64::seed(14);
+    let spec = SynthSpec { rows: size, cols: size, gamma: 0.3, coherence: 0.75, scale: 1.0 };
+    let w = synth_weight(&spec, &mut rng);
+
+    println!("ROW: bpp fp16 lb_res lb_single rot_res rot_single itq_res itq_single");
+    for &bpp in &[0.1, 0.2, 0.4, 0.55, 0.8, 1.0, 1.2] {
+        let r_fp = tiny_rank_for_budget(size, size, bpp);
+        let fp = tiny_rank_fp16(&w, r_fp, &mut rng).reconstruction.mse(&w);
+        let run = |strategy, residual| {
+            let mut rng = Pcg64::seed(21);
+            let cfg = CompressionConfig { bpp, strategy, residual, ..Default::default() };
+            compress(&w, &cfg, &mut rng).reconstruct().mse(&w)
+        };
+        println!(
+            "ROW: {bpp} {fp:.4e} {:.4e} {:.4e} {:.4e} {:.4e} {:.4e} {:.4e}",
+            run(InitStrategy::Standard, true),
+            run(InitStrategy::Standard, false),
+            run(InitStrategy::RandomRotation, true),
+            run(InitStrategy::RandomRotation, false),
+            run(InitStrategy::JointItq { iters: 50 }, true),
+            run(InitStrategy::JointItq { iters: 50 }, false),
+        );
+    }
+    println!("# paper hierarchy: FP16 > LittleBit > RandRot > LittleBit-2(NoRes) ≳ LittleBit-2");
+}

@@ -1,0 +1,125 @@
+//! Lightweight metrics registry: counters, gauges, and wall-clock timers,
+//! dumped as aligned text for experiment logs (EXPERIMENTS.md provenance).
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Thread-safe metrics sink.
+#[derive(Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    timers: BTreeMap<String, (f64, u64)>, // (total seconds, samples)
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn incr(&self, name: &str, by: u64) {
+        let mut m = self.inner.lock().expect("metrics lock");
+        *m.counters.entry(name.to_string()).or_default() += by;
+    }
+
+    pub fn gauge(&self, name: &str, value: f64) {
+        let mut m = self.inner.lock().expect("metrics lock");
+        m.gauges.insert(name.to_string(), value);
+    }
+
+    /// Time a closure, accumulating under `name`.
+    pub fn time<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        let dt = t0.elapsed().as_secs_f64();
+        let mut m = self.inner.lock().expect("metrics lock");
+        let e = m.timers.entry(name.to_string()).or_insert((0.0, 0));
+        e.0 += dt;
+        e.1 += 1;
+        out
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.inner
+            .lock()
+            .expect("metrics lock")
+            .counters
+            .get(name)
+            .copied()
+            .unwrap_or(0)
+    }
+
+    pub fn report(&self) -> String {
+        let m = self.inner.lock().expect("metrics lock");
+        let mut out = String::new();
+        for (k, v) in &m.counters {
+            out.push_str(&format!("counter {k:40} {v}\n"));
+        }
+        for (k, v) in &m.gauges {
+            out.push_str(&format!("gauge   {k:40} {v:.6}\n"));
+        }
+        for (k, (total, n)) in &m.timers {
+            let mean = if *n > 0 { total / *n as f64 } else { 0.0 };
+            out.push_str(&format!(
+                "timer   {k:40} total={total:.3}s n={n} mean={:.3}ms\n",
+                mean * 1e3
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.incr("requests", 1);
+        m.incr("requests", 2);
+        assert_eq!(m.counter("requests"), 3);
+    }
+
+    #[test]
+    fn timer_records() {
+        let m = Metrics::new();
+        let x = m.time("work", || 41 + 1);
+        assert_eq!(x, 42);
+        assert!(m.report().contains("timer   work"));
+    }
+
+    #[test]
+    fn gauge_overwrites() {
+        let m = Metrics::new();
+        m.gauge("loss", 2.0);
+        m.gauge("loss", 1.0);
+        assert!(m.report().contains("1.000000"));
+        assert!(!m.report().contains("2.000000"));
+    }
+
+    #[test]
+    fn thread_safety() {
+        let m = std::sync::Arc::new(Metrics::new());
+        let hs: Vec<_> = (0..4)
+            .map(|_| {
+                let m = m.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        m.incr("n", 1);
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(m.counter("n"), 4000);
+    }
+}

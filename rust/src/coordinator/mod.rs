@@ -1,0 +1,22 @@
+//! L3 coordinator: compression job scheduling, the QAKD training driver,
+//! evaluation, and batched serving.
+//!
+//! The paper's contribution is an initialization algorithm, so per the
+//! architecture contract L3 is a *driver-plus-substrate*: it owns process
+//! lifecycle, the parallel layer-compression pipeline, the training loop
+//! that executes the AOT `*_train_step` artifacts through PJRT, metrics,
+//! and the CLI. All numerics (SVD → rotation → Joint-ITQ → Dual-SVID) run
+//! natively in rust (`littlebit::compress`) — the student initialization
+//! pipeline needs no Python at run time.
+
+mod jobs;
+mod metrics;
+mod params;
+mod server;
+mod trainer;
+
+pub use jobs::{run_compression_jobs, CompressionJob, JobResult};
+pub use metrics::Metrics;
+pub use params::ParamStore;
+pub use server::{InferenceServer, Request, Response, ServerStats};
+pub use trainer::{QakdOutcome, QatDriver, StudentVariant, TrainTrace};

@@ -1,0 +1,300 @@
+//! Parameter storage and the rust-native student initialization.
+//!
+//! Parameters are positional `Vec<Vec<f32>>` matching the manifest spec
+//! order — the contract with the AOT artifacts. Teacher initials are read
+//! from the `.bin` blobs `aot.py` wrote; students are initialized by
+//! compressing the (trained) teacher's body weights with the selected
+//! strategy — SVD, optional rotation/Joint-ITQ, Dual-SVID — all in rust.
+
+use crate::linalg::Mat;
+use crate::littlebit::{compress_single, CompressionConfig, InitStrategy};
+use crate::rng::Pcg64;
+use crate::runtime::lit;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// A positional parameter set bound to its spec.
+#[derive(Clone)]
+pub struct ParamStore {
+    pub spec: Vec<(String, Vec<usize>)>,
+    pub values: Vec<Vec<f32>>,
+}
+
+impl ParamStore {
+    /// All-zero store with the given spec (Adam moment buffers).
+    pub fn zeros(spec: &[(String, Vec<usize>)]) -> Self {
+        let values = spec
+            .iter()
+            .map(|(_, shape)| vec![0.0f32; shape.iter().product()])
+            .collect();
+        Self { spec: spec.to_vec(), values }
+    }
+
+    /// Load teacher initials from `<dir>/<name with . → _>.bin` (little-
+    /// endian f32, row-major), as written by aot.py.
+    pub fn load_bins(spec: &[(String, Vec<usize>)], dir: impl AsRef<Path>) -> Result<Self> {
+        let mut values = Vec::with_capacity(spec.len());
+        for (name, shape) in spec {
+            let file = dir.as_ref().join(format!("{}.bin", name.replace('.', "_")));
+            let bytes = std::fs::read(&file).with_context(|| format!("reading {file:?}"))?;
+            let want: usize = shape.iter().product();
+            if bytes.len() != want * 4 {
+                bail!("{file:?}: {} bytes, expected {}", bytes.len(), want * 4);
+            }
+            let mut v = Vec::with_capacity(want);
+            for chunk in bytes.chunks_exact(4) {
+                v.push(f32::from_le_bytes(chunk.try_into().expect("chunk of 4")));
+            }
+            values.push(v);
+        }
+        Ok(Self { spec: spec.to_vec(), values })
+    }
+
+    /// Convert every tensor to a literal, in spec order.
+    pub fn to_literals(&self) -> Result<Vec<xla::Literal>> {
+        self.spec
+            .iter()
+            .zip(&self.values)
+            .map(|((_, shape), data)| lit::array_f32(data, shape))
+            .collect()
+    }
+
+    /// Replace values from a slice of literals (artifact outputs).
+    pub fn update_from_literals(&mut self, lits: &[xla::Literal]) -> Result<()> {
+        anyhow::ensure!(lits.len() == self.values.len(), "literal count mismatch");
+        for (v, l) in self.values.iter_mut().zip(lits) {
+            *v = lit::to_vec_f32(l)?;
+        }
+        Ok(())
+    }
+
+    /// Look up a tensor by name.
+    pub fn get(&self, name: &str) -> Option<(&[usize], &[f32])> {
+        self.spec
+            .iter()
+            .position(|(n, _)| n == name)
+            .map(|i| (self.spec[i].1.as_slice(), self.values[i].as_slice()))
+    }
+
+    /// Total parameter count.
+    pub fn num_params(&self) -> usize {
+        self.values.iter().map(|v| v.len()).sum()
+    }
+}
+
+/// Initialize a student store by compressing the teacher's body weights.
+///
+/// `student_spec` comes from the manifest; per-layer ranks are read off the
+/// `lat_u` shapes so rust and the lowered HLO can never disagree.
+/// `strategy` selects the Table 3 ablation arm. The FP (tiny-rank) student
+/// uses plain truncated-SVD factors with unit scales.
+pub fn init_student(
+    teacher: &ParamStore,
+    student_spec: &[(String, Vec<usize>)],
+    strategy: InitStrategy,
+    fp_latent: bool,
+    seed: u64,
+) -> Result<ParamStore> {
+    let mut rng = Pcg64::seed(seed);
+    // Group the tri-scale entries per layer: "b0.q.p0.lat_u" → layer "b0.q".
+    let mut values: Vec<Option<Vec<f32>>> = vec![None; student_spec.len()];
+    let mut layer_fields: HashMap<String, Vec<(usize, usize, String)>> = HashMap::new();
+    for (i, (name, _)) in student_spec.iter().enumerate() {
+        if let Some(pos) = name.find(".p") {
+            let rest = &name[pos + 2..];
+            if let Some(dot) = rest.find('.') {
+                if let Ok(pidx) = rest[..dot].parse::<usize>() {
+                    let layer = name[..pos].to_string();
+                    let field = rest[dot + 1..].to_string();
+                    layer_fields.entry(layer).or_default().push((i, pidx, field));
+                    continue;
+                }
+            }
+        }
+        // FP passthrough tensors: copy from the teacher.
+        let (_, data) = teacher
+            .get(name)
+            .with_context(|| format!("teacher missing {name}"))?;
+        values[i] = Some(data.to_vec());
+    }
+
+    let mut layers: Vec<(String, Vec<(usize, usize, String)>)> =
+        layer_fields.into_iter().collect();
+    layers.sort();
+    for (layer, fields) in layers {
+        let (shape, data) = teacher
+            .get(&layer)
+            .with_context(|| format!("teacher missing layer {layer}"))?;
+        let w = Mat::from_vec(shape[0], shape[1], data.to_vec());
+        // Rank from the lat_u spec of path 0.
+        let rank = fields
+            .iter()
+            .find(|(_, p, f)| *p == 0 && f == "lat_u")
+            .map(|(i, _, _)| student_spec[*i].1[1])
+            .context("lat_u missing from spec")?;
+        let n_paths = 1 + fields.iter().map(|(_, p, _)| *p).max().unwrap_or(0);
+
+        let cfg = CompressionConfig {
+            bpp: 0.0, // rank supplied explicitly below
+            strategy,
+            residual: n_paths > 1,
+            ..Default::default()
+        };
+
+        // Residual loop at fixed rank (matches python compress_layer_init).
+        let mut target = w.clone();
+        let mut paths = Vec::new();
+        for _ in 0..n_paths {
+            if fp_latent {
+                let svd = crate::linalg::svd_randomized(&target, rank, 10.min(rank + 4), 2, &mut rng);
+                let (u, v) = svd.split_factors();
+                let recon = u.matmul_t(&v);
+                target = target.sub(&recon);
+                paths.push((
+                    u.as_slice().to_vec(),
+                    v.as_slice().to_vec(),
+                    vec![1.0f32; shape[0]],
+                    vec![1.0f32; rank],
+                    vec![1.0f32; shape[1]],
+                ));
+            } else {
+                let c = compress_single(&target, rank, &cfg, &mut rng);
+                let recon = c.reconstruct();
+                target = target.sub(&recon);
+                let f = &c.factors;
+                paths.push((
+                    f.latent_u.as_slice().to_vec(),
+                    f.latent_v.as_slice().to_vec(),
+                    f.h.clone(),
+                    f.l.clone(),
+                    f.g.clone(),
+                ));
+            }
+        }
+
+        for (i, pidx, field) in fields {
+            let (lat_u, lat_v, h, l, g) = &paths[pidx];
+            values[i] = Some(match field.as_str() {
+                "lat_u" => lat_u.clone(),
+                "lat_v" => lat_v.clone(),
+                "h" => h.clone(),
+                "l" => l.clone(),
+                "g" => g.clone(),
+                other => bail!("unknown tri-scale field {other}"),
+            });
+        }
+    }
+
+    let values: Vec<Vec<f32>> = values
+        .into_iter()
+        .enumerate()
+        .map(|(i, v)| v.with_context(|| format!("uninitialized param {i}")))
+        .collect::<Result<_>>()?;
+    // Shape check.
+    for ((name, shape), v) in student_spec.iter().zip(&values) {
+        let want: usize = shape.iter().product();
+        anyhow::ensure!(v.len() == want, "{name}: {} != {}", v.len(), want);
+    }
+    Ok(ParamStore { spec: student_spec.to_vec(), values })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_specs() -> (Vec<(String, Vec<usize>)>, Vec<(String, Vec<usize>)>) {
+        let teacher = vec![
+            ("embed".to_string(), vec![16, 8]),
+            ("b0.q".to_string(), vec![8, 8]),
+            ("head".to_string(), vec![16, 8]),
+        ];
+        let mut student = vec![("embed".to_string(), vec![16, 8])];
+        for p in 0..2 {
+            student.push((format!("b0.q.p{p}.lat_u"), vec![8, 2]));
+            student.push((format!("b0.q.p{p}.lat_v"), vec![8, 2]));
+            student.push((format!("b0.q.p{p}.h"), vec![8]));
+            student.push((format!("b0.q.p{p}.l"), vec![2]));
+            student.push((format!("b0.q.p{p}.g"), vec![8]));
+        }
+        student.push(("head".to_string(), vec![16, 8]));
+        (teacher, student)
+    }
+
+    fn fake_teacher(spec: &[(String, Vec<usize>)]) -> ParamStore {
+        let mut rng = Pcg64::seed(1);
+        let values = spec
+            .iter()
+            .map(|(_, shape)| {
+                let mut v = vec![0.0f32; shape.iter().product()];
+                rng.fill_normal(&mut v);
+                v
+            })
+            .collect();
+        ParamStore { spec: spec.to_vec(), values }
+    }
+
+    #[test]
+    fn student_init_shapes_and_passthrough() {
+        let (t_spec, s_spec) = tiny_specs();
+        let teacher = fake_teacher(&t_spec);
+        let student = init_student(
+            &teacher,
+            &s_spec,
+            InitStrategy::JointItq { iters: 10 },
+            false,
+            7,
+        )
+        .unwrap();
+        assert_eq!(student.values.len(), s_spec.len());
+        // FP tensors copied verbatim.
+        assert_eq!(student.get("embed").unwrap().1, teacher.get("embed").unwrap().1);
+        assert_eq!(student.get("head").unwrap().1, teacher.get("head").unwrap().1);
+    }
+
+    #[test]
+    fn student_init_approximates_teacher_layer() {
+        let (t_spec, s_spec) = tiny_specs();
+        let teacher = fake_teacher(&t_spec);
+        let student =
+            init_student(&teacher, &s_spec, InitStrategy::Standard, false, 7).unwrap();
+        // Reconstruct b0.q from the two tri-scale paths and compare.
+        let (shape, data) = teacher.get("b0.q").unwrap();
+        let w = Mat::from_vec(shape[0], shape[1], data.to_vec());
+        let mut recon = Mat::zeros(8, 8);
+        for p in 0..2 {
+            let lu = student.get(&format!("b0.q.p{p}.lat_u")).unwrap().1;
+            let lv = student.get(&format!("b0.q.p{p}.lat_v")).unwrap().1;
+            let h = student.get(&format!("b0.q.p{p}.h")).unwrap().1;
+            let l = student.get(&format!("b0.q.p{p}.l")).unwrap().1;
+            let g = student.get(&format!("b0.q.p{p}.g")).unwrap().1;
+            let ub = Mat::from_vec(8, 2, lu.to_vec()).signum();
+            let vb = Mat::from_vec(8, 2, lv.to_vec()).signum();
+            recon = recon.add(
+                &ub.scale_rows(h).scale_cols(l).matmul_t(&vb.scale_rows(g)),
+            );
+        }
+        // Rank-2x2 binary approx of an 8x8 gaussian: should capture some
+        // energy (MSE below the zero-approximation baseline).
+        let zero = Mat::zeros(8, 8);
+        assert!(recon.mse(&w) < zero.mse(&w));
+    }
+
+    #[test]
+    fn fp_student_uses_unit_scales() {
+        let (t_spec, s_spec) = tiny_specs();
+        let teacher = fake_teacher(&t_spec);
+        let student =
+            init_student(&teacher, &s_spec, InitStrategy::Standard, true, 7).unwrap();
+        let h = student.get("b0.q.p0.h").unwrap().1;
+        assert!(h.iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn zeros_store() {
+        let (_, s_spec) = tiny_specs();
+        let z = ParamStore::zeros(&s_spec);
+        assert_eq!(z.num_params(), s_spec.iter().map(|(_, s)| s.iter().product::<usize>()).sum());
+        assert!(z.values.iter().all(|v| v.iter().all(|&x| x == 0.0)));
+    }
+}

@@ -1,0 +1,246 @@
+//! Batched inference serving.
+//!
+//! A minimal vLLM-router-style front: requests enter a bounded queue; a
+//! worker drains up to `max_batch` at a time (waiting at most `max_wait`
+//! for stragglers — classic dynamic batching) and executes the batch
+//! through a pluggable backend (the packed MatMul-free tri-scale stack in
+//! `examples/serve.rs`, or a compiled `student_infer` artifact).
+//!
+//! Latency percentiles and batch-size statistics are tracked for the §6.2
+//! throughput experiments.
+
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// One inference request.
+pub struct Request {
+    pub id: u64,
+    pub input: Vec<f32>,
+    /// Filled with the output and latency on completion.
+    pub reply: SyncSender<Response>,
+    enqueued: Instant,
+}
+
+/// Completed response.
+pub struct Response {
+    pub id: u64,
+    pub output: Vec<f32>,
+    pub latency: Duration,
+    pub batch_size: usize,
+}
+
+/// Aggregate serving statistics.
+#[derive(Clone, Debug, Default)]
+pub struct ServerStats {
+    pub served: u64,
+    pub batches: u64,
+    pub mean_batch: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+}
+
+/// The server: owns the queue and worker thread. `tx` is an Option so
+/// shutdown/drop can disconnect the queue *before* joining the worker
+/// (joining first would deadlock: the worker blocks on `recv`).
+pub struct InferenceServer {
+    tx: Option<SyncSender<Request>>,
+    worker: Option<JoinHandle<()>>,
+    stats: Arc<Mutex<StatsInner>>,
+}
+
+#[derive(Default)]
+struct StatsInner {
+    served: u64,
+    batches: u64,
+    batch_total: u64,
+    latencies_ms: Vec<f64>,
+}
+
+impl InferenceServer {
+    /// `backend(batch_inputs) -> batch_outputs` runs a whole batch; it is
+    /// moved onto the worker thread.
+    pub fn start(
+        max_batch: usize,
+        max_wait: Duration,
+        queue_depth: usize,
+        backend: impl FnMut(&[Vec<f32>]) -> Vec<Vec<f32>> + Send + 'static,
+    ) -> Self {
+        let (tx, rx) = sync_channel::<Request>(queue_depth);
+        let stats: Arc<Mutex<StatsInner>> = Arc::default();
+        let worker_stats = Arc::clone(&stats);
+        let worker = std::thread::spawn(move || {
+            Self::worker_loop(rx, max_batch, max_wait, backend, worker_stats)
+        });
+        Self { tx: Some(tx), worker: Some(worker), stats }
+    }
+
+    fn worker_loop(
+        rx: Receiver<Request>,
+        max_batch: usize,
+        max_wait: Duration,
+        mut backend: impl FnMut(&[Vec<f32>]) -> Vec<Vec<f32>>,
+        stats: Arc<Mutex<StatsInner>>,
+    ) {
+        loop {
+            // Block for the first request of a batch.
+            let first = match rx.recv() {
+                Ok(r) => r,
+                Err(_) => return, // all senders dropped: shut down
+            };
+            let deadline = Instant::now() + max_wait;
+            let mut batch = vec![first];
+            while batch.len() < max_batch {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(r) => batch.push(r),
+                    Err(RecvTimeoutError::Timeout) => break,
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+            }
+
+            let inputs: Vec<Vec<f32>> = batch.iter().map(|r| r.input.clone()).collect();
+            let outputs = backend(&inputs);
+            debug_assert_eq!(outputs.len(), batch.len());
+            let bsize = batch.len();
+            let done = Instant::now();
+            {
+                let mut s = stats.lock().expect("stats lock");
+                s.batches += 1;
+                s.batch_total += bsize as u64;
+                for req in &batch {
+                    s.served += 1;
+                    s.latencies_ms
+                        .push(done.duration_since(req.enqueued).as_secs_f64() * 1e3);
+                }
+            }
+            for (req, output) in batch.into_iter().zip(outputs) {
+                let latency = done.duration_since(req.enqueued);
+                let _ = req.reply.send(Response {
+                    id: req.id,
+                    output,
+                    latency,
+                    batch_size: bsize,
+                });
+            }
+        }
+    }
+
+    /// Submit a request; returns the receiver for its response.
+    pub fn submit(&self, id: u64, input: Vec<f32>) -> Receiver<Response> {
+        let (reply, rx) = sync_channel(1);
+        let req = Request { id, input, reply, enqueued: Instant::now() };
+        self.tx
+            .as_ref()
+            .expect("server not shut down")
+            .send(req)
+            .expect("server worker alive");
+        rx
+    }
+
+    /// Snapshot statistics.
+    pub fn stats(&self) -> ServerStats {
+        let s = self.stats.lock().expect("stats lock");
+        let mut lat = s.latencies_ms.clone();
+        lat.sort_by(|a, b| a.partial_cmp(b).expect("finite"));
+        let pct = |p: f64| -> f64 {
+            if lat.is_empty() {
+                0.0
+            } else {
+                lat[((lat.len() as f64 - 1.0) * p) as usize]
+            }
+        };
+        ServerStats {
+            served: s.served,
+            batches: s.batches,
+            mean_batch: if s.batches > 0 {
+                s.batch_total as f64 / s.batches as f64
+            } else {
+                0.0
+            },
+            p50_ms: pct(0.5),
+            p99_ms: pct(0.99),
+        }
+    }
+
+    /// Graceful shutdown: drop the sender, join the worker.
+    pub fn shutdown(mut self) -> ServerStats {
+        let stats = self.stats();
+        self.tx.take(); // disconnect the queue; worker's recv errors out
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+        stats
+    }
+}
+
+impl Drop for InferenceServer {
+    fn drop(&mut self) {
+        self.tx.take(); // must disconnect BEFORE joining
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn echo_backend(xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        xs.iter().map(|x| x.iter().map(|v| v * 2.0).collect()).collect()
+    }
+
+    #[test]
+    fn serves_single_request() {
+        let server = InferenceServer::start(4, Duration::from_millis(1), 16, echo_backend);
+        let rx = server.submit(1, vec![1.0, 2.0]);
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.output, vec![2.0, 4.0]);
+        assert_eq!(resp.id, 1);
+        let stats = server.shutdown();
+        assert_eq!(stats.served, 1);
+    }
+
+    #[test]
+    fn batches_concurrent_requests() {
+        let server = InferenceServer::start(8, Duration::from_millis(20), 64, echo_backend);
+        let rxs: Vec<_> = (0..8).map(|i| server.submit(i, vec![i as f32])).collect();
+        let mut max_batch = 0;
+        for rx in rxs {
+            let resp = rx.recv().unwrap();
+            max_batch = max_batch.max(resp.batch_size);
+        }
+        // With a 20ms window the requests should coalesce into few batches.
+        assert!(max_batch >= 2, "no batching observed (max_batch={max_batch})");
+        let stats = server.shutdown();
+        assert_eq!(stats.served, 8);
+        assert!(stats.mean_batch >= 1.0);
+    }
+
+    #[test]
+    fn responses_match_requests() {
+        let server = InferenceServer::start(4, Duration::from_millis(5), 64, echo_backend);
+        let rxs: Vec<_> = (0..20).map(|i| server.submit(i, vec![i as f32])).collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.id, i as u64);
+            assert_eq!(resp.output, vec![2.0 * i as f32]);
+        }
+    }
+
+    #[test]
+    fn stats_percentiles_populated() {
+        let server = InferenceServer::start(2, Duration::from_millis(1), 16, echo_backend);
+        for i in 0..10 {
+            let _ = server.submit(i, vec![0.0]).recv().unwrap();
+        }
+        let stats = server.stats();
+        assert_eq!(stats.served, 10);
+        assert!(stats.p99_ms >= stats.p50_ms);
+    }
+}

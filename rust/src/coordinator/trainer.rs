@@ -1,0 +1,257 @@
+//! The QAKD training driver: executes the AOT train/eval artifacts through
+//! PJRT, owning the optimizer state, the corpus stream, and the metric
+//! traces (loss curve for Fig. 7, sign-flip ratio for Fig. 8).
+
+use super::params::{init_student, ParamStore};
+use crate::data::{Corpus, CorpusConfig};
+use crate::littlebit::InitStrategy;
+use crate::runtime::{lit, Executable, Manifest, Runtime};
+use anyhow::Result;
+
+/// Which student architecture/initialization arm to train (the Fig. 7 /
+/// Table 3 axis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StudentVariant {
+    /// Strategy A: tiny-rank FP latents.
+    TinyRankFp,
+    /// LittleBit baseline (standard Dual-SVID init).
+    LittleBit,
+    /// + Internal Random Rotation.
+    RandomRotation,
+    /// LittleBit-2 (Joint-ITQ init).
+    LittleBit2 { itq_iters: usize },
+}
+
+impl StudentVariant {
+    pub fn label(&self) -> &'static str {
+        match self {
+            StudentVariant::TinyRankFp => "tinyrank-fp",
+            StudentVariant::LittleBit => "littlebit",
+            StudentVariant::RandomRotation => "littlebit+rot",
+            StudentVariant::LittleBit2 { .. } => "littlebit2",
+        }
+    }
+
+    fn strategy(&self) -> InitStrategy {
+        match self {
+            StudentVariant::TinyRankFp | StudentVariant::LittleBit => InitStrategy::Standard,
+            StudentVariant::RandomRotation => InitStrategy::RandomRotation,
+            StudentVariant::LittleBit2 { itq_iters } => {
+                InitStrategy::JointItq { iters: *itq_iters }
+            }
+        }
+    }
+
+    fn is_fp(&self) -> bool {
+        matches!(self, StudentVariant::TinyRankFp)
+    }
+}
+
+/// Per-step training trace.
+#[derive(Clone, Debug, Default)]
+pub struct TrainTrace {
+    pub losses: Vec<f32>,
+    /// Fraction of binary latent parameters that flipped sign each step
+    /// (empty for the FP variant).
+    pub flip_ratio: Vec<f32>,
+}
+
+/// Result of one full QAKD run.
+pub struct QakdOutcome {
+    pub variant: StudentVariant,
+    pub trace: TrainTrace,
+    pub final_eval_ce: f32,
+    pub params: ParamStore,
+}
+
+/// Training driver bound to a runtime + manifest. Compiled executables are
+/// cached per artifact name — the student graphs take minutes to compile on
+/// this CPU, and the Fig 7 sweep reuses each one across variants.
+pub struct QatDriver {
+    runtime: Runtime,
+    pub manifest: Manifest,
+    corpus_seed: u64,
+    exe_cache: std::cell::RefCell<std::collections::HashMap<String, std::rc::Rc<Executable>>>,
+}
+
+impl QatDriver {
+    pub fn new(artifact_dir: &str, corpus_seed: u64) -> Result<Self> {
+        let runtime = Runtime::new(artifact_dir)?;
+        let manifest = runtime.manifest()?;
+        Ok(Self {
+            runtime,
+            manifest,
+            corpus_seed,
+            exe_cache: Default::default(),
+        })
+    }
+
+    /// Load (or fetch from cache) a compiled artifact.
+    fn exe(&self, name: &str) -> Result<std::rc::Rc<Executable>> {
+        if let Some(e) = self.exe_cache.borrow().get(name) {
+            return Ok(std::rc::Rc::clone(e));
+        }
+        let e = std::rc::Rc::new(self.runtime.load_checked(name)?);
+        self.exe_cache
+            .borrow_mut()
+            .insert(name.to_string(), std::rc::Rc::clone(&e));
+        Ok(e)
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.runtime
+    }
+
+    /// Streams share the language (salt) and differ only in position:
+    /// offset 0/1 = teacher/student training, 2 = held-out eval.
+    fn corpus(&self, offset: u64) -> Corpus {
+        let cfg = CorpusConfig { vocab: self.manifest.config.vocab, ..Default::default() };
+        Corpus::with_salt(cfg, self.corpus_seed, self.corpus_seed + 1000 * offset)
+    }
+
+    fn tokens_literal(&self, corpus: &mut Corpus, seq: usize) -> Result<xla::Literal> {
+        let b = self.manifest.config.batch;
+        let toks = corpus.next_block(b, seq);
+        lit::array_i32(&toks, &[b, seq + 1])
+    }
+
+    /// Load the teacher initialization written by aot.py.
+    pub fn teacher_init(&self) -> Result<ParamStore> {
+        let dir = self
+            .runtime
+            .artifact_dir()
+            .join(&self.manifest.teacher_init_dir);
+        ParamStore::load_bins(&self.manifest.teacher_spec, dir)
+    }
+
+    /// Pretrain the teacher with plain CE. Returns (params, loss trace).
+    pub fn train_teacher(
+        &self,
+        steps: usize,
+        lr: f32,
+        mut log: impl FnMut(usize, f32),
+    ) -> Result<(ParamStore, Vec<f32>)> {
+        let exe = self.exe("teacher_train_step")?;
+        let mut params = self.teacher_init()?;
+        let mut m = ParamStore::zeros(&self.manifest.teacher_spec);
+        let mut v = ParamStore::zeros(&self.manifest.teacher_spec);
+        let mut corpus = self.corpus(0);
+        let mut losses = Vec::with_capacity(steps);
+        let n = params.values.len();
+        for step in 0..steps {
+            let mut inputs = params.to_literals()?;
+            inputs.extend(m.to_literals()?);
+            inputs.extend(v.to_literals()?);
+            inputs.push(lit::scalar_f32(step as f32));
+            inputs.push(self.tokens_literal(&mut corpus, self.manifest.config.seq)?);
+            inputs.push(lit::scalar_f32(lr));
+            let out = exe.run(&inputs)?;
+            params.update_from_literals(&out[..n])?;
+            m.update_from_literals(&out[n..2 * n])?;
+            v.update_from_literals(&out[2 * n..3 * n])?;
+            let loss = lit::to_scalar_f32(&out[3 * n])?;
+            losses.push(loss);
+            log(step, loss);
+        }
+        Ok((params, losses))
+    }
+
+    /// Initialize a student from teacher weights (rust-native compression).
+    pub fn init_student(
+        &self,
+        teacher: &ParamStore,
+        variant: StudentVariant,
+        seed: u64,
+    ) -> Result<ParamStore> {
+        let spec = if variant.is_fp() {
+            &self.manifest.student_fp_spec
+        } else {
+            &self.manifest.student_spec
+        };
+        init_student(teacher, spec, variant.strategy(), variant.is_fp(), seed)
+    }
+
+    /// One QAKD run: init from teacher, train `steps`, eval on held-out
+    /// stream. `log(step, loss, flip_ratio)`.
+    pub fn train_student(
+        &self,
+        teacher: &ParamStore,
+        variant: StudentVariant,
+        steps: usize,
+        lr: f32,
+        mut log: impl FnMut(usize, f32, f32),
+    ) -> Result<QakdOutcome> {
+        let (step_name, eval_name) = if variant.is_fp() {
+            ("student_fp_train_step", "student_fp_eval")
+        } else {
+            ("student_train_step", "student_eval")
+        };
+        let exe = self.exe(step_name)?;
+        let spec = if variant.is_fp() {
+            &self.manifest.student_fp_spec
+        } else {
+            &self.manifest.student_spec
+        };
+
+        let mut params = self.init_student(teacher, variant, 0xA11CE)?;
+        let mut m = ParamStore::zeros(spec);
+        let mut v = ParamStore::zeros(spec);
+        let mut corpus = self.corpus(1);
+        let n = params.values.len();
+        let latent_total: usize = spec
+            .iter()
+            .filter(|(name, _)| name.contains(".lat_"))
+            .map(|(_, s)| s.iter().product::<usize>())
+            .sum();
+
+        let mut trace = TrainTrace::default();
+        for step in 0..steps {
+            let mut inputs = params.to_literals()?;
+            inputs.extend(teacher.to_literals()?);
+            inputs.extend(m.to_literals()?);
+            inputs.extend(v.to_literals()?);
+            inputs.push(lit::scalar_f32(step as f32));
+            inputs.push(self.tokens_literal(&mut corpus, self.manifest.config.seq)?);
+            inputs.push(lit::scalar_f32(lr));
+            let out = exe.run(&inputs)?;
+            params.update_from_literals(&out[..n])?;
+            m.update_from_literals(&out[n..2 * n])?;
+            v.update_from_literals(&out[2 * n..3 * n])?;
+            let loss = lit::to_scalar_f32(&out[3 * n])?;
+            let flips = lit::to_scalar_f32(&out[3 * n + 1])?;
+            let ratio = if latent_total > 0 { flips / latent_total as f32 } else { 0.0 };
+            trace.losses.push(loss);
+            trace.flip_ratio.push(ratio);
+            log(step, loss, ratio);
+        }
+
+        let final_eval_ce = self.eval_ce(eval_name, &params, 8)?;
+        Ok(QakdOutcome { variant, trace, final_eval_ce, params })
+    }
+
+    /// Held-out mean CE over `n_batches` fresh batches (PPL = exp(CE)).
+    pub fn eval_ce(&self, eval_name: &str, params: &ParamStore, n_batches: usize) -> Result<f32> {
+        let exe = self.exe(eval_name)?;
+        // Held-out stream: a corpus seed far from the training offsets but
+        // with the SAME latent structure salt → same distribution.
+        let mut corpus = self.corpus(2);
+        let mut acc = 0.0f32;
+        for _ in 0..n_batches {
+            let mut inputs = params.to_literals()?;
+            inputs.push(self.tokens_literal(&mut corpus, self.manifest.config.seq)?);
+            let out = exe.run(&inputs)?;
+            acc += lit::to_scalar_f32(&out[0])?;
+        }
+        Ok(acc / n_batches as f32)
+    }
+
+    /// Load the Pallas-kernel inference executable.
+    pub fn load_infer(&self) -> Result<Executable> {
+        self.runtime.load_checked("student_infer")
+    }
+}
+
+/// Perplexity from mean CE.
+pub fn ppl(ce: f32) -> f32 {
+    ce.exp()
+}

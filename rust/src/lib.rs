@@ -1,0 +1,53 @@
+//! # LittleBit-2: sub-1-bit LLM compression via Latent Geometry Alignment
+//!
+//! Production-quality reproduction of *"LittleBit-2: Maximizing the Spectral
+//! Energy Gain in Sub-1-Bit LLMs via Latent Geometry Alignment"* (Lee & Kim,
+//! 2026) as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — compression coordinator, QAT training driver,
+//!   evaluation/serving loop, and the complete numerics substrate (SVD, QR,
+//!   Joint-ITQ, all quantization baselines, the spectral break-even theory,
+//!   bit-packed MatMul-free inference kernels, memory accounting).
+//! * **L2 (`python/compile/model.py`)** — JAX transformer with LittleBit
+//!   tri-scale linear layers, AOT-lowered to HLO text at build time.
+//! * **L1 (`python/compile/kernels/`)** — Pallas kernels for the fused
+//!   tri-scale matmul, binarization, and the Joint-ITQ step; validated
+//!   against pure-jnp oracles.
+//!
+//! Python never runs on the request path: `make artifacts` lowers the L2/L1
+//! graph once; the rust binary loads `artifacts/*.hlo.txt` through PJRT
+//! ([`runtime`]) and owns everything else.
+//!
+//! ## Quick tour
+//!
+//! ```no_run
+//! use littlebit2::rng::Pcg64;
+//! use littlebit2::spectral::{synth_weight, SynthSpec};
+//! use littlebit2::littlebit::{compress, CompressionConfig, InitStrategy};
+//!
+//! let mut rng = Pcg64::seed(0);
+//! let w = synth_weight(&SynthSpec::default(), &mut rng);
+//! let cfg = CompressionConfig {
+//!     bpp: 0.55,
+//!     strategy: InitStrategy::JointItq { iters: 50 },
+//!     residual: true,
+//!     ..Default::default()
+//! };
+//! let compressed = compress(&w, &cfg, &mut rng);
+//! println!("MSE = {:.3e}", compressed.reconstruct().mse(&w));
+//! ```
+
+pub mod coordinator;
+pub mod data;
+pub mod linalg;
+pub mod littlebit;
+pub mod memory;
+pub mod model;
+pub mod packing;
+pub mod quant;
+pub mod rng;
+pub mod runtime;
+pub mod spectral;
+
+/// Crate version, reported by the CLI and stamped into experiment logs.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

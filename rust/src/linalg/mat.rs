@@ -1,0 +1,489 @@
+//! Row-major dense `f32` matrix with cache-blocked multiply.
+
+use crate::rng::Pcg64;
+use std::fmt;
+
+/// Dense row-major matrix.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Mat({}x{})", self.rows, self.cols)
+    }
+}
+
+/// Blocking factor for the matmul micro-kernel. 64×64 f32 tiles (16 KiB)
+/// comfortably fit L1 alongside the accumulator.
+const BLOCK: usize = 64;
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Self { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        Self::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    /// i.i.d. standard normal entries.
+    pub fn gaussian(rows: usize, cols: usize, rng: &mut Pcg64) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        rng.fill_normal(&mut m.data);
+        m
+    }
+
+    /// Diagonal matrix from a vector.
+    pub fn diag(d: &[f32]) -> Self {
+        let n = d.len();
+        Self::from_fn(n, n, |i, j| if i == j { d[i] } else { 0.0 })
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f32> {
+        (0..self.rows).map(|i| self.at(i, j)).collect()
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn transpose(&self) -> Mat {
+        // Blocked transpose to stay cache-friendly on the 4096² inputs.
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for bi in (0..self.rows).step_by(BLOCK) {
+            for bj in (0..self.cols).step_by(BLOCK) {
+                let ie = (bi + BLOCK).min(self.rows);
+                let je = (bj + BLOCK).min(self.cols);
+                for i in bi..ie {
+                    for j in bj..je {
+                        t.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// `self @ other` — cache-blocked i-k-j loop with the k-panel of `other`
+    /// streaming through L1/L2.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch {:?} @ {:?}", self, other);
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        for bk in (0..k).step_by(BLOCK) {
+            let ke = (bk + BLOCK).min(k);
+            for i in 0..m {
+                let arow = &self.data[i * k..(i + 1) * k];
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for p in bk..ke {
+                    let a = arow[p];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let brow = &other.data[p * n..(p + 1) * n];
+                    // Inner j-loop is a saxpy the compiler vectorizes.
+                    for (o, b) in orow.iter_mut().zip(brow) {
+                        *o += a * *b;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// `selfᵀ @ other` without materializing the transpose.
+    pub fn t_matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows, "t_matmul shape mismatch");
+        let (k, m, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        for p in 0..k {
+            let arow = &self.data[p * m..(p + 1) * m];
+            let brow = &other.data[p * n..(p + 1) * n];
+            for i in 0..m {
+                let a = arow[i];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for (o, b) in orow.iter_mut().zip(brow) {
+                    *o += a * *b;
+                }
+            }
+        }
+        out
+    }
+
+    /// `self @ otherᵀ` without materializing the transpose.
+    pub fn matmul_t(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols, "matmul_t shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.rows);
+        let mut out = Mat::zeros(m, n);
+        for i in 0..m {
+            let arow = &self.data[i * k..(i + 1) * k];
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for (j, o) in orow.iter_mut().enumerate() {
+                *o = super::dot(arow, &other.data[j * k..(j + 1) * k]) as f32;
+            }
+        }
+        out
+    }
+
+    /// Matrix-vector product `self @ x`.
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(self.cols, x.len());
+        (0..self.rows)
+            .map(|i| super::dot(self.row(i), x) as f32)
+            .collect()
+    }
+
+    /// Scale row `i` by `s[i]` — `diag(s) @ self`.
+    pub fn scale_rows(&self, s: &[f32]) -> Mat {
+        assert_eq!(s.len(), self.rows);
+        let mut out = self.clone();
+        for i in 0..self.rows {
+            let si = s[i];
+            for v in out.row_mut(i) {
+                *v *= si;
+            }
+        }
+        out
+    }
+
+    /// Scale column `j` by `s[j]` — `self @ diag(s)`.
+    pub fn scale_cols(&self, s: &[f32]) -> Mat {
+        assert_eq!(s.len(), self.cols);
+        let mut out = self.clone();
+        for i in 0..self.rows {
+            for (v, &sj) in out.row_mut(i).iter_mut().zip(s) {
+                *v *= sj;
+            }
+        }
+        out
+    }
+
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!(self.shape(), other.shape());
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!(self.shape(), other.shape());
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn scale(&self, s: f32) -> Mat {
+        let data = self.data.iter().map(|a| a * s).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Element-wise absolute value.
+    pub fn abs(&self) -> Mat {
+        let data = self.data.iter().map(|a| a.abs()).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Element-wise sign in {−1, +1} (zero maps to +1, matching
+    /// `torch.sign`-with-STE conventions used by the paper's Listing 2 where
+    /// exact zeros are measure-zero).
+    pub fn signum(&self) -> Mat {
+        let data = self
+            .data
+            .iter()
+            .map(|a| if *a < 0.0 { -1.0 } else { 1.0 })
+            .collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Frobenius norm (f64 accumulation).
+    pub fn fro_norm(&self) -> f64 {
+        super::dot(&self.data, &self.data).sqrt()
+    }
+
+    /// Squared Frobenius distance ‖self − other‖²_F.
+    pub fn fro_dist2(&self, other: &Mat) -> f64 {
+        assert_eq!(self.shape(), other.shape());
+        let mut acc = 0.0f64;
+        for (a, b) in self.data.iter().zip(&other.data) {
+            let d = (*a - *b) as f64;
+            acc += d * d;
+        }
+        acc
+    }
+
+    /// Mean squared error against `other`.
+    pub fn mse(&self, other: &Mat) -> f64 {
+        self.fro_dist2(other) / (self.rows * self.cols) as f64
+    }
+
+    /// Take the first `r` columns.
+    pub fn take_cols(&self, r: usize) -> Mat {
+        assert!(r <= self.cols);
+        let mut out = Mat::zeros(self.rows, r);
+        for i in 0..self.rows {
+            out.row_mut(i).copy_from_slice(&self.row(i)[..r]);
+        }
+        out
+    }
+
+    /// Vertical concatenation `[self; other]`.
+    pub fn vcat(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols);
+        let mut data = Vec::with_capacity((self.rows + other.rows) * self.cols);
+        data.extend_from_slice(&self.data);
+        data.extend_from_slice(&other.data);
+        Mat { rows: self.rows + other.rows, cols: self.cols, data }
+    }
+
+    /// Split vertically after `k` rows.
+    pub fn vsplit(&self, k: usize) -> (Mat, Mat) {
+        assert!(k <= self.rows);
+        let top = Mat {
+            rows: k,
+            cols: self.cols,
+            data: self.data[..k * self.cols].to_vec(),
+        };
+        let bottom = Mat {
+            rows: self.rows - k,
+            cols: self.cols,
+            data: self.data[k * self.cols..].to_vec(),
+        };
+        (top, bottom)
+    }
+
+    /// Round-trip through IEEE half precision, modelling FP16 storage of
+    /// scales/weights in the memory-budget comparisons.
+    pub fn to_f16_precision(&self) -> Mat {
+        let data = self.data.iter().map(|a| f16_round(*a)).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+}
+
+/// Round an f32 to the nearest representable IEEE binary16 value
+/// (round-to-nearest-even), returned as f32.
+pub fn f16_round(x: f32) -> f32 {
+    let bits = x.to_bits();
+    let sign = bits & 0x8000_0000;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let frac = bits & 0x007f_ffff;
+
+    if exp == 0xff {
+        // Inf / NaN pass through.
+        return x;
+    }
+    let unbiased = exp - 127;
+    if unbiased > 15 {
+        // Overflow to ±inf in f16.
+        return f32::from_bits(sign | 0x7f80_0000);
+    }
+    if unbiased < -24 {
+        return f32::from_bits(sign); // underflow to ±0
+    }
+    if unbiased < -14 {
+        // Subnormal in f16: quantize the significand to the coarser grid.
+        let shift = (-14 - unbiased) as u32; // 1..=10
+        let q = 13 + shift; // bits of the f32 fraction to drop
+        let full = frac | 0x0080_0000; // implicit leading 1
+        let half = 1u32 << (q - 1);
+        let rounded = round_half_even(full, q, half);
+        let val = (rounded as f64) * 2f64.powi(unbiased - 23 + q as i32);
+        let out = if sign != 0 { -val } else { val };
+        return out as f32;
+    }
+    // Normal: keep 10 fraction bits, round-half-even on the lower 13.
+    let half = 1u32 << 12;
+    let rounded_frac = round_half_even(frac, 13, half);
+    if rounded_frac >= 0x0080_0000 >> 13 << 13 {} // no-op; clarity
+    let mut new_exp = exp;
+    let mut new_frac = rounded_frac << 13;
+    if new_frac > 0x007f_ffff {
+        new_frac = 0;
+        new_exp += 1;
+        if new_exp - 127 > 15 {
+            return f32::from_bits(sign | 0x7f80_0000);
+        }
+    }
+    f32::from_bits(sign | ((new_exp as u32) << 23) | new_frac)
+}
+
+#[inline]
+fn round_half_even(v: u32, drop_bits: u32, half: u32) -> u32 {
+    let kept = v >> drop_bits;
+    let rem = v & ((1 << drop_bits) - 1);
+    if rem > half || (rem == half && kept & 1 == 1) {
+        kept + 1
+    } else {
+        kept
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_matches_naive() {
+        let a = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let b = Mat::from_vec(3, 2, vec![7., 8., 9., 10., 11., 12.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.as_slice(), &[58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matmul_t_and_t_matmul_agree_with_explicit_transpose() {
+        let mut rng = Pcg64::seed(4);
+        let a = Mat::gaussian(17, 9, &mut rng);
+        let b = Mat::gaussian(17, 5, &mut rng);
+        let c1 = a.t_matmul(&b);
+        let c2 = a.transpose().matmul(&b);
+        assert!(c1.fro_dist2(&c2) < 1e-6);
+
+        let d = Mat::gaussian(5, 9, &mut rng);
+        let e1 = a.matmul_t(&d); // 17x5
+        let e2 = a.matmul(&d.transpose());
+        assert!(e1.fro_dist2(&e2) < 1e-6);
+    }
+
+    #[test]
+    fn blocked_matmul_large_shape() {
+        let mut rng = Pcg64::seed(8);
+        let a = Mat::gaussian(130, 70, &mut rng);
+        let b = Mat::gaussian(70, 90, &mut rng);
+        let c = a.matmul(&b);
+        // Spot check a few entries against dot products.
+        for &(i, j) in &[(0, 0), (129, 89), (65, 45)] {
+            let expect = crate::linalg::dot(a.row(i), &b.col(j)) as f32;
+            assert!((c.at(i, j) - expect).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Pcg64::seed(2);
+        let a = Mat::gaussian(33, 65, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn scale_rows_cols() {
+        let a = Mat::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        let r = a.scale_rows(&[2., 3.]);
+        assert_eq!(r.as_slice(), &[2., 4., 9., 12.]);
+        let c = a.scale_cols(&[2., 3.]);
+        assert_eq!(c.as_slice(), &[2., 6., 6., 12.]);
+    }
+
+    #[test]
+    fn vcat_vsplit_roundtrip() {
+        let mut rng = Pcg64::seed(3);
+        let a = Mat::gaussian(7, 4, &mut rng);
+        let b = Mat::gaussian(5, 4, &mut rng);
+        let z = a.vcat(&b);
+        let (a2, b2) = z.vsplit(7);
+        assert_eq!(a, a2);
+        assert_eq!(b, b2);
+    }
+
+    #[test]
+    fn signum_maps_zero_to_plus_one() {
+        let a = Mat::from_vec(1, 3, vec![-0.5, 0.0, 0.5]);
+        assert_eq!(a.signum().as_slice(), &[-1., 1., 1.]);
+    }
+
+    #[test]
+    fn f16_round_exact_values() {
+        assert_eq!(f16_round(1.0), 1.0);
+        assert_eq!(f16_round(0.5), 0.5);
+        assert_eq!(f16_round(-2.0), -2.0);
+        assert_eq!(f16_round(0.0), 0.0);
+        // 1 + 2^-11 rounds to 1.0 in f16 (10 fraction bits, half-even).
+        assert_eq!(f16_round(1.0 + 2f32.powi(-11)), 1.0);
+        // 1 + 2^-10 is representable.
+        assert_eq!(f16_round(1.0 + 2f32.powi(-10)), 1.0 + 2f32.powi(-10));
+        // Overflow behaviour.
+        assert!(f16_round(1e6).is_infinite());
+        // Subnormal: 2^-25 underflows to zero.
+        assert_eq!(f16_round(2f32.powi(-25)), 0.0);
+    }
+
+    #[test]
+    fn f16_round_error_bound() {
+        let mut rng = Pcg64::seed(10);
+        for _ in 0..1000 {
+            let x = rng.normal_f32();
+            let y = f16_round(x);
+            assert!((x - y).abs() <= x.abs() * 2f32.powi(-10) + 2f32.powi(-24));
+        }
+    }
+
+    #[test]
+    fn mse_and_fro() {
+        let a = Mat::from_vec(1, 2, vec![0., 3.]);
+        let b = Mat::from_vec(1, 2, vec![4., 3.]);
+        assert!((a.fro_dist2(&b) - 16.0).abs() < 1e-9);
+        assert!((a.mse(&b) - 8.0).abs() < 1e-9);
+    }
+}

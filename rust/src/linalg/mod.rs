@@ -1,0 +1,80 @@
+//! Dense linear algebra substrate.
+//!
+//! The paper's entire initialization pipeline is matrix algebra: truncated
+//! SVD (Dual-SVID, Alg 2), QR (random orthogonal rotations), the Procrustes
+//! solve inside Joint-ITQ (SVD of `BᵀZ`), and rank-1 magnitude decomposition.
+//! No BLAS/LAPACK is linked in this environment, so this module provides a
+//! self-contained, tested implementation tuned for the shapes the pipeline
+//! actually hits:
+//!
+//! * `matmul` — cache-blocked, `f32` storage with per-tile accumulation.
+//! * `qr` — Householder, used both for orthonormalization and for the
+//!   random-orthogonal sampler.
+//! * `svd_jacobi` — one-sided Jacobi, cubic but rock-solid; used on small
+//!   square matrices (the `r×r` Procrustes systems, `r ≤ ~1024`).
+//! * `svd_randomized` — Halko–Martinsson–Tropp randomized range finder with
+//!   power iterations; used for rank-`r` truncation of the big weight
+//!   matrices (`d×d`, `d` up to 4096+ here).
+//!
+//! Storage is row-major `f32`; accumulations are `f32` with `f64` reductions
+//! where precision matters (norms, dot products over long vectors).
+
+mod mat;
+mod qr;
+mod svd;
+
+pub use mat::{f16_round, Mat};
+pub use qr::{householder_qr, orthogonality_defect, random_orthogonal};
+pub use svd::{svd_jacobi, svd_randomized, Svd};
+
+/// Dot product with f64 accumulation.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f64;
+    for (x, y) in a.iter().zip(b) {
+        acc += (*x as f64) * (*y as f64);
+    }
+    acc
+}
+
+/// Euclidean norm with f64 accumulation.
+#[inline]
+pub fn norm2(a: &[f32]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+/// L1 norm with f64 accumulation.
+#[inline]
+pub fn norm1(a: &[f32]) -> f64 {
+    a.iter().map(|x| x.abs() as f64).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn dot_matches_naive() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [4.0f32, -5.0, 6.0];
+        assert!((dot(&a, &b) - 12.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn norms() {
+        let a = [3.0f32, -4.0];
+        assert!((norm2(&a) - 5.0).abs() < 1e-9);
+        assert!((norm1(&a) - 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn norm_of_random_gaussian_concentrates() {
+        let mut rng = Pcg64::seed(1);
+        let mut v = vec![0.0f32; 4096];
+        rng.fill_normal(&mut v);
+        let n = norm2(&v);
+        assert!((n - 64.0).abs() < 3.0, "norm={n}");
+    }
+}

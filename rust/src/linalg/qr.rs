@@ -1,0 +1,192 @@
+//! Householder QR and the random-orthogonal sampler built on it.
+//!
+//! QR serves three roles in the pipeline: (1) sampling Haar-ish random
+//! orthogonal matrices for Internal Latent Rotation (§4.3) and for Joint-ITQ's
+//! initial `R`; (2) re-orthonormalizing the range basis between power
+//! iterations inside the randomized SVD; (3) the coherence-controlled
+//! synthetic singular-vector fabricator (`spectral::synth`).
+
+use super::Mat;
+use crate::rng::Pcg64;
+
+/// Thin Householder QR: `a (m×n, m ≥ n) = Q (m×n) · R (n×n)` with Q having
+/// orthonormal columns and R upper-triangular with non-negative diagonal
+/// (sign-fixed so the decomposition is unique, which also makes `Q` of a
+/// gaussian exactly Haar-distributed).
+pub fn householder_qr(a: &Mat) -> (Mat, Mat) {
+    let (m, n) = a.shape();
+    assert!(m >= n, "householder_qr expects tall matrix, got {m}x{n}");
+    // Work in f64 for stability of the reflections.
+    let mut r: Vec<f64> = a.as_slice().iter().map(|&x| x as f64).collect();
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n); // reflection vectors
+
+    for k in 0..n {
+        // Build the Householder vector for column k below the diagonal.
+        let mut alpha = 0.0f64;
+        for i in k..m {
+            let x = r[i * n + k];
+            alpha += x * x;
+        }
+        alpha = alpha.sqrt();
+        if r[k * n + k] > 0.0 {
+            alpha = -alpha;
+        }
+        let mut v = vec![0.0f64; m - k];
+        v[0] = r[k * n + k] - alpha;
+        for i in k + 1..m {
+            v[i - k] = r[i * n + k];
+        }
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm2 > 1e-300 {
+            // Apply H = I − 2 v vᵀ / ‖v‖² to the trailing block of R.
+            for j in k..n {
+                let mut dot = 0.0;
+                for i in k..m {
+                    dot += v[i - k] * r[i * n + j];
+                }
+                let c = 2.0 * dot / vnorm2;
+                for i in k..m {
+                    r[i * n + j] -= c * v[i - k];
+                }
+            }
+        }
+        vs.push(v);
+        // Zero strictly-below-diagonal entries explicitly.
+        r[k * n + k] = alpha;
+        for i in k + 1..m {
+            r[i * n + k] = 0.0;
+        }
+    }
+
+    // Accumulate Q = H_0 H_1 ... H_{n-1} applied to the first n columns of I.
+    let mut q = vec![0.0f64; m * n];
+    for j in 0..n {
+        q[j * n + j] = 1.0;
+    }
+    for k in (0..n).rev() {
+        let v = &vs[k];
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm2 <= 1e-300 {
+            continue;
+        }
+        for j in 0..n {
+            let mut dot = 0.0;
+            for i in k..m {
+                dot += v[i - k] * q[i * n + j];
+            }
+            let c = 2.0 * dot / vnorm2;
+            for i in k..m {
+                q[i * n + j] -= c * v[i - k];
+            }
+        }
+    }
+
+    // Sign-fix: make diag(R) non-negative.
+    for k in 0..n {
+        if r[k * n + k] < 0.0 {
+            for j in k..n {
+                r[k * n + j] = -r[k * n + j];
+            }
+            for i in 0..m {
+                q[i * n + k] = -q[i * n + k];
+            }
+        }
+    }
+
+    let qm = Mat::from_vec(m, n, q.iter().map(|&x| x as f32).collect());
+    let rm = Mat::from_vec(n, n, r[..n * n].to_vec().iter().map(|&x| x as f32).collect());
+    (qm, rm)
+}
+
+/// Haar-distributed random orthogonal `n×n` matrix: QR of a gaussian with the
+/// sign-fixed R (Mezzadri, 2007). This is the paper's
+/// `torch.nn.init.orthogonal_` equivalent.
+pub fn random_orthogonal(n: usize, rng: &mut Pcg64) -> Mat {
+    let g = Mat::gaussian(n, n, rng);
+    let (q, _r) = householder_qr(&g);
+    q
+}
+
+/// ‖QᵀQ − I‖_F — orthogonality defect, used by tests and by the coordinator's
+/// self-checks after each ITQ solve.
+pub fn orthogonality_defect(q: &Mat) -> f64 {
+    let qtq = q.t_matmul(q);
+    let n = qtq.rows();
+    let mut acc = 0.0f64;
+    for i in 0..n {
+        for j in 0..n {
+            let target = if i == j { 1.0 } else { 0.0 };
+            let d = qtq.at(i, j) as f64 - target;
+            acc += d * d;
+        }
+    }
+    acc.sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qr_reconstructs() {
+        let mut rng = Pcg64::seed(1);
+        let a = Mat::gaussian(20, 8, &mut rng);
+        let (q, r) = householder_qr(&a);
+        let back = q.matmul(&r);
+        assert!(back.fro_dist2(&a) < 1e-6, "dist={}", back.fro_dist2(&a));
+    }
+
+    #[test]
+    fn qr_q_is_orthonormal() {
+        let mut rng = Pcg64::seed(2);
+        let a = Mat::gaussian(50, 50, &mut rng);
+        let (q, _) = householder_qr(&a);
+        assert!(orthogonality_defect(&q) < 1e-4);
+    }
+
+    #[test]
+    fn qr_r_is_upper_triangular_nonneg_diag() {
+        let mut rng = Pcg64::seed(3);
+        let a = Mat::gaussian(12, 6, &mut rng);
+        let (_, r) = householder_qr(&a);
+        for i in 0..6 {
+            assert!(r.at(i, i) >= 0.0);
+            for j in 0..i {
+                assert!(r.at(i, j).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn random_orthogonal_is_orthogonal() {
+        let mut rng = Pcg64::seed(4);
+        for n in [3, 16, 64] {
+            let q = random_orthogonal(n, &mut rng);
+            assert!(orthogonality_defect(&q) < 1e-4, "n={n}");
+        }
+    }
+
+    #[test]
+    fn random_orthogonal_preserves_norms() {
+        let mut rng = Pcg64::seed(5);
+        let q = random_orthogonal(32, &mut rng);
+        let x = Mat::gaussian(1, 32, &mut rng);
+        let y = x.matmul(&q);
+        assert!((x.fro_norm() - y.fro_norm()).abs() < 1e-4);
+    }
+
+    #[test]
+    fn haar_rotation_delocalizes_a_spike() {
+        // A coordinate-axis spike rotated by Haar Q should spread its mass:
+        // L1/L2 ratio grows from 1 toward sqrt(2n/pi) (Theorem 4.4).
+        let mut rng = Pcg64::seed(6);
+        let n = 256;
+        let q = random_orthogonal(n, &mut rng);
+        let mut e = vec![0.0f32; n];
+        e[0] = 1.0;
+        let y = Mat::from_vec(1, n, e).matmul(&q);
+        let ratio = crate::linalg::norm1(y.row(0)) / crate::linalg::norm2(y.row(0));
+        let expect = (2.0 * n as f64 / std::f64::consts::PI).sqrt();
+        assert!(ratio > 0.8 * expect, "ratio={ratio} expect≈{expect}");
+    }
+}

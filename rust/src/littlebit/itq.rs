@@ -1,0 +1,165 @@
+//! Internal Latent Rotation and the Joint-ITQ solver (§4.3–4.4, Alg. 1).
+//!
+//! Joint-ITQ aligns the **concatenated** latent manifold `Z = [Û; V̂]` with
+//! the binary hypercube by alternating:
+//!
+//! 1. code update — `B = sign(Z R)` (project to nearest vertices);
+//! 2. rotation update — orthogonal Procrustes: SVD of `BᵀZ = ΦΩΨᵀ`,
+//!    `R ← Ψ Φᵀ`.
+//!
+//! Each step is monotone in the shared objective `‖B − ZR‖²_F`, equivalently
+//! monotone *increasing* in `‖ZR‖₁` (App. A.2), so convergence is guaranteed
+//! to a local optimum; the report records the trajectory for the Fig. 13
+//! sweep.
+
+use crate::linalg::{random_orthogonal, svd_jacobi, Mat};
+use crate::rng::Pcg64;
+
+/// Haar random orthogonal rotation (the §4.3 coarse alignment).
+pub fn random_rotation(r: usize, rng: &mut Pcg64) -> Mat {
+    random_orthogonal(r, rng)
+}
+
+/// Convergence trace of one Joint-ITQ run.
+#[derive(Clone, Debug)]
+pub struct ItqReport {
+    /// Objective ‖B − ZR‖²_F after every iteration.
+    pub objective: Vec<f64>,
+    /// ‖ZR‖₁ after every iteration (monotone non-decreasing).
+    pub l1_mass: Vec<f64>,
+    /// Iterations actually run.
+    pub iters: usize,
+}
+
+/// Solve the joint orthogonal Procrustes problem of Eq. 10.
+///
+/// `u_hat` is `d_out×r`, `v_hat` is `d_in×r`; returns the optimal rotation
+/// `R` (`r×r`) and the convergence report. Callers apply `R` to both factors
+/// (`Ũ = ÛR`, `Ṽ = V̂R`), which preserves `ÛV̂ᵀ` exactly (Eq. 7).
+pub fn joint_itq(u_hat: &Mat, v_hat: &Mat, iters: usize, rng: &mut Pcg64) -> (Mat, ItqReport) {
+    assert_eq!(u_hat.cols(), v_hat.cols(), "latent ranks must match");
+    let r = u_hat.cols();
+    let z = u_hat.vcat(v_hat); // (d_out + d_in) × r
+    let mut rot = random_orthogonal(r, rng);
+
+    let mut report = ItqReport { objective: Vec::new(), l1_mass: Vec::new(), iters: 0 };
+
+    for _t in 0..iters {
+        let zr = z.matmul(&rot);
+        // Step A: project to binary vertices.
+        let b = zr.signum();
+        // Step B: Procrustes — SVD(BᵀZ) = Φ Ω Ψᵀ, R = Ψ Φᵀ.
+        let m = b.t_matmul(&z); // r×r
+        let svd = svd_jacobi(&m);
+        // svd: m = u s vᵀ, with Φ = svd.u, Ψ = svd.v.
+        rot = svd.v.matmul_t(&svd.u);
+
+        let zr2 = z.matmul(&rot);
+        report.objective.push(zr2.signum().fro_dist2(&zr2));
+        report.l1_mass.push(crate::linalg::norm1(zr2.as_slice()));
+        report.iters += 1;
+    }
+
+    (rot, report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::orthogonality_defect;
+    use crate::quant::row_distortions;
+    use crate::spectral::{synth_weight, SynthSpec};
+
+    fn factors(seed: u64, coherence: f64, r: usize) -> (Mat, Mat) {
+        let mut rng = Pcg64::seed(seed);
+        let spec = SynthSpec { rows: 96, cols: 80, gamma: 0.3, coherence, scale: 1.0 };
+        let w = synth_weight(&spec, &mut rng);
+        let svd = crate::linalg::svd_randomized(&w, r, 8, 2, &mut rng);
+        svd.split_factors()
+    }
+
+    #[test]
+    fn rotation_stays_orthogonal() {
+        let (u, v) = factors(1, 0.7, 16);
+        let mut rng = Pcg64::seed(2);
+        let (r, _) = joint_itq(&u, &v, 30, &mut rng);
+        assert!(orthogonality_defect(&r) < 1e-3);
+    }
+
+    #[test]
+    fn l1_mass_monotone_nondecreasing() {
+        let (u, v) = factors(3, 0.7, 16);
+        let mut rng = Pcg64::seed(4);
+        let (_, report) = joint_itq(&u, &v, 40, &mut rng);
+        for w in report.l1_mass.windows(2) {
+            assert!(w[1] >= w[0] - 1e-4 * w[0].abs(), "L1 decreased: {w:?}");
+        }
+    }
+
+    #[test]
+    fn objective_monotone_nonincreasing() {
+        let (u, v) = factors(5, 0.8, 16);
+        let mut rng = Pcg64::seed(6);
+        let (_, report) = joint_itq(&u, &v, 40, &mut rng);
+        for w in report.objective.windows(2) {
+            assert!(w[1] <= w[0] + 1e-6 * w[0].abs(), "objective rose: {w:?}");
+        }
+    }
+
+    #[test]
+    fn itq_beats_random_rotation_on_distortion() {
+        let (u, v) = factors(7, 0.85, 24);
+        let mut rng = Pcg64::seed(8);
+        let rot = random_rotation(24, &mut rng);
+        let (itq_rot, _) = joint_itq(&u, &v, 50, &mut rng);
+        let mean = |m: &Mat| {
+            let d = row_distortions(m);
+            d.iter().sum::<f64>() / d.len() as f64
+        };
+        let z = u.vcat(&v);
+        assert!(mean(&z.matmul(&itq_rot)) < mean(&z.matmul(&rot)));
+    }
+
+    #[test]
+    fn converges_within_50_iters() {
+        // Paper (App. F.1): MSE saturates near T=50. Check the objective
+        // plateau: last-10-iteration improvement below 1% of total drop.
+        let (u, v) = factors(9, 0.8, 32);
+        let mut rng = Pcg64::seed(10);
+        let (_, report) = joint_itq(&u, &v, 60, &mut rng);
+        let total_drop = report.objective[0] - *report.objective.last().unwrap();
+        let late_drop = report.objective[49] - report.objective[59];
+        assert!(
+            late_drop <= 0.02 * total_drop + 1e-12,
+            "late={late_drop} total={total_drop}"
+        );
+    }
+
+    #[test]
+    fn perfect_alignment_reaches_zero_distortion() {
+        // If Z's rows are already hypercube vertices (times a scale), some
+        // rotation achieves λ = 0; ITQ should find (close to) it.
+        let mut rng = Pcg64::seed(11);
+        let r = 8;
+        let signs = Mat::gaussian(40, r, &mut rng).signum();
+        let q = random_orthogonal(r, &mut rng);
+        let u = signs.matmul(&q).scale(0.5); // rotated vertices
+        let v = Mat::gaussian(30, r, &mut rng).signum().matmul(&q).scale(0.5);
+        let (rot, _) = joint_itq(&u, &v, 80, &mut rng);
+        let aligned = u.matmul(&rot);
+        let lam = row_distortions(&aligned);
+        let mean: f64 = lam.iter().sum::<f64>() / lam.len() as f64;
+        // ITQ is a local-optimum method: it should land far below the
+        // Gaussian limit (0.36), near but not exactly at zero.
+        assert!(mean < 0.15, "mean λ={mean}");
+    }
+
+    #[test]
+    fn zero_iterations_returns_initial_random_rotation() {
+        let (u, v) = factors(13, 0.5, 8);
+        let mut rng = Pcg64::seed(14);
+        let (r, report) = joint_itq(&u, &v, 0, &mut rng);
+        assert_eq!(report.iters, 0);
+        assert!(orthogonality_defect(&r) < 1e-3);
+    }
+}

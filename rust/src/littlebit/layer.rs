@@ -1,0 +1,213 @@
+//! The tri-scale compressed layer (Eq. 1) and its residual composition
+//! (App. G), plus packed deployment via `packing::TriScaleLayer`.
+
+use crate::linalg::{f16_round, Mat};
+use crate::packing::TriScaleLayer;
+use crate::quant::row_distortions;
+
+/// Raw Dual-SVID output for one path:
+/// `Ŵ = diag(h) · U_b · diag(l) · V_bᵀ · diag(g)`.
+#[derive(Clone, Debug)]
+pub struct TriScaleFactors {
+    /// Binary factor `U_b ∈ {±1}^{d_out×r}` (stored dense here; packed on
+    /// deployment).
+    pub u_b: Mat,
+    /// Binary factor `V_b ∈ {±1}^{d_in×r}`.
+    pub v_b: Mat,
+    /// Row scale `h ∈ R^{d_out}`.
+    pub h: Vec<f32>,
+    /// Central latent scale `l ∈ R^r`.
+    pub l: Vec<f32>,
+    /// Column scale `g ∈ R^{d_in}`.
+    pub g: Vec<f32>,
+    /// Full-precision latent factors retained for QAT (the STE latents of
+    /// App. C; not counted in deployment storage).
+    pub latent_u: Mat,
+    pub latent_v: Mat,
+}
+
+impl TriScaleFactors {
+    /// Dense reconstruction of Eq. 1.
+    pub fn reconstruct(&self) -> Mat {
+        self.u_b
+            .scale_rows(&self.h)
+            .scale_cols(&self.l)
+            .matmul_t(&self.v_b.scale_rows(&self.g))
+    }
+
+    pub fn rank(&self) -> usize {
+        self.l.len()
+    }
+
+    pub fn d_out(&self) -> usize {
+        self.u_b.rows()
+    }
+
+    pub fn d_in(&self) -> usize {
+        self.v_b.rows()
+    }
+}
+
+/// One deployed path: FP16-rounded scales + binary factors.
+#[derive(Clone, Debug)]
+pub struct CompressedLinear {
+    pub factors: TriScaleFactors,
+}
+
+impl CompressedLinear {
+    /// Finalize factors for deployment: scales rounded to FP16 precision
+    /// (their storage format per App. H).
+    pub fn from_factors(mut factors: TriScaleFactors) -> Self {
+        for v in factors
+            .h
+            .iter_mut()
+            .chain(factors.l.iter_mut())
+            .chain(factors.g.iter_mut())
+        {
+            *v = f16_round(*v);
+        }
+        Self { factors }
+    }
+
+    pub fn reconstruct(&self) -> Mat {
+        self.factors.reconstruct()
+    }
+
+    /// λ of every latent row of Ũ — the Fig. 3 diagnostic.
+    pub fn u_distortions(&self) -> Vec<f64> {
+        row_distortions(&self.factors.latent_u)
+    }
+
+    /// Storage bits for this single path: binary factors + 16-bit scales
+    /// (`r(d_in+d_out) + 16(d_in+d_out) + 16r`).
+    pub fn storage_bits(&self) -> u64 {
+        let r = self.factors.rank() as u64;
+        let d_out = self.factors.d_out() as u64;
+        let d_in = self.factors.d_in() as u64;
+        r * (d_in + d_out) + 16 * (d_in + d_out) + 16 * r
+    }
+
+    /// Pack into the bit-level inference layer.
+    pub fn pack(&self) -> TriScaleLayer {
+        TriScaleLayer::new(
+            &self.factors.u_b,
+            &self.factors.v_b,
+            self.factors.h.clone(),
+            self.factors.l.clone(),
+            self.factors.g.clone(),
+        )
+    }
+}
+
+/// Residual composition `Ŵ = Σ_p Ŵ_p` (App. G; the paper uses 2 paths).
+#[derive(Clone, Debug)]
+pub struct ResidualCompressed {
+    pub paths: Vec<CompressedLinear>,
+}
+
+impl ResidualCompressed {
+    pub fn new(paths: Vec<CompressedLinear>) -> Self {
+        assert!(!paths.is_empty());
+        Self { paths }
+    }
+
+    pub fn reconstruct(&self) -> Mat {
+        let mut acc = self.paths[0].reconstruct();
+        for p in &self.paths[1..] {
+            acc = acc.add(&p.reconstruct());
+        }
+        acc
+    }
+
+    pub fn storage_bits(&self) -> u64 {
+        self.paths.iter().map(|p| p.storage_bits()).sum()
+    }
+
+    /// Effective bits-per-parameter of the deployed layer.
+    pub fn bpp(&self) -> f64 {
+        let f = &self.paths[0].factors;
+        self.storage_bits() as f64 / (f.d_out() * f.d_in()) as f64
+    }
+
+    /// Forward pass through all packed paths (sum of path outputs).
+    pub fn forward_packed(&self, x: &[f32]) -> Vec<f32> {
+        let layers: Vec<TriScaleLayer> = self.paths.iter().map(|p| p.pack()).collect();
+        let mut out = layers[0].forward(x);
+        for layer in &layers[1..] {
+            for (o, v) in out.iter_mut().zip(layer.forward(x)) {
+                *o += v;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::littlebit::dual_svid;
+    use crate::rng::Pcg64;
+
+    fn sample_factors(seed: u64) -> TriScaleFactors {
+        let mut rng = Pcg64::seed(seed);
+        let u = Mat::gaussian(48, 8, &mut rng);
+        let v = Mat::gaussian(40, 8, &mut rng);
+        dual_svid(&u, &v)
+    }
+
+    #[test]
+    fn reconstruction_shape() {
+        let f = sample_factors(1);
+        assert_eq!(f.reconstruct().shape(), (48, 40));
+    }
+
+    #[test]
+    fn packed_forward_matches_dense_reconstruction() {
+        let f = sample_factors(2);
+        let c = CompressedLinear::from_factors(f);
+        let w = c.reconstruct();
+        let mut rng = Pcg64::seed(3);
+        let mut x = vec![0.0f32; 40];
+        rng.fill_normal(&mut x);
+        let want = w.matvec(&x);
+        let got = c.pack().forward(&x);
+        for (a, b) in want.iter().zip(&got) {
+            assert!((a - b).abs() < 2e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn residual_forward_matches_residual_reconstruction() {
+        let a = CompressedLinear::from_factors(sample_factors(4));
+        let b = CompressedLinear::from_factors(sample_factors(5));
+        let rc = ResidualCompressed::new(vec![a, b]);
+        let w = rc.reconstruct();
+        let mut rng = Pcg64::seed(6);
+        let mut x = vec![0.0f32; 40];
+        rng.fill_normal(&mut x);
+        let want = w.matvec(&x);
+        let got = rc.forward_packed(&x);
+        for (p, q) in want.iter().zip(&got) {
+            assert!((p - q).abs() < 4e-3, "{p} vs {q}");
+        }
+    }
+
+    #[test]
+    fn storage_matches_memory_formula() {
+        // Two equal-rank paths must equal Eq. 25 exactly.
+        let a = CompressedLinear::from_factors(sample_factors(7));
+        let b = CompressedLinear::from_factors(sample_factors(7));
+        let rc = ResidualCompressed::new(vec![a, b]);
+        let bits = rc.storage_bits();
+        let expect = crate::memory::littlebit_bits(40, 48, 8);
+        assert_eq!(bits, expect);
+    }
+
+    #[test]
+    fn fp16_rounding_applied_to_scales() {
+        let c = CompressedLinear::from_factors(sample_factors(8));
+        for &s in c.factors.h.iter().chain(&c.factors.l).chain(&c.factors.g) {
+            assert_eq!(s, f16_round(s), "scale not f16-representable: {s}");
+        }
+    }
+}

@@ -1,0 +1,311 @@
+//! `littlebit2` — CLI for the LittleBit-2 reproduction.
+//!
+//! Subcommands (hand-rolled parsing; no clap in this offline build):
+//!
+//! ```text
+//! littlebit2 memory-table [--model NAME]         Table 1/2 Mem columns (exact)
+//! littlebit2 breakeven [--size N] [--bpp B]      Fig 6 top: MSE vs γ sweep
+//! littlebit2 gamma-dist [--model NAME]           Fig 6 bottom / Fig 11/12
+//! littlebit2 spectral-gain                       Fig 9 energy curves
+//! littlebit2 compress [--size N] [--gamma G] [--bpp B] [--strategy S]
+//! littlebit2 train [--artifacts DIR] [--teacher-steps N] [--student-steps N]
+//!                  [--variant V] [--lr LR]       e2e QAKD driver
+//! littlebit2 version
+//! ```
+
+use anyhow::{bail, Result};
+use littlebit2::coordinator::{QatDriver, StudentVariant};
+use littlebit2::littlebit::{compress, CompressionConfig, InitStrategy};
+use littlebit2::memory::{model_memory, MethodKind};
+use littlebit2::model::{zoo, ArchSpec};
+use littlebit2::quant::tiny_rank_fp16;
+use littlebit2::rng::Pcg64;
+use littlebit2::spectral::{
+    estimate_gamma, quant_cost, synth_weight, tail_energy, SynthSpec,
+};
+
+/// Minimal flag parser: `--key value` pairs after the subcommand.
+struct Args {
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Self> {
+        let mut flags = std::collections::HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let k = &argv[i];
+            if let Some(name) = k.strip_prefix("--") {
+                if i + 1 >= argv.len() {
+                    bail!("flag --{name} missing value");
+                }
+                flags.insert(name.to_string(), argv[i + 1].clone());
+                i += 2;
+            } else {
+                bail!("unexpected argument {k:?}");
+            }
+        }
+        Ok(Self { flags })
+    }
+
+    fn get(&self, name: &str, default: &str) -> String {
+        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.flags.get(name) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flags.get(name) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..])?;
+    match cmd.as_str() {
+        "memory-table" => cmd_memory_table(&args),
+        "breakeven" => cmd_breakeven(&args),
+        "gamma-dist" => cmd_gamma_dist(&args),
+        "spectral-gain" => cmd_spectral_gain(&args),
+        "compress" => cmd_compress(&args),
+        "train" => cmd_train(&args),
+        "version" => {
+            println!("littlebit2 {}", littlebit2::VERSION);
+            Ok(())
+        }
+        other => {
+            print_usage();
+            bail!("unknown command {other:?}")
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "littlebit2 {} — sub-1-bit LLM compression via Latent Geometry Alignment\n\
+         commands: memory-table | breakeven | gamma-dist | spectral-gain | compress | train | version",
+        littlebit2::VERSION
+    );
+}
+
+/// Table 1/2 memory columns, computed exactly from Eqs. 21-26.
+fn cmd_memory_table(args: &Args) -> Result<()> {
+    let models = match args.flags.get("model") {
+        Some(m) => vec![m.clone()],
+        None => ArchSpec::KNOWN.iter().map(|s| s.to_string()).collect(),
+    };
+    let methods = [
+        MethodKind::Fp16,
+        MethodKind::Rtn { k: 2, group: 128 },
+        MethodKind::Billm,
+        MethodKind::Arb,
+        MethodKind::OneBit,
+        MethodKind::LittleBit { bpp: 1.0 },
+        MethodKind::LittleBit { bpp: 0.55 },
+        MethodKind::LittleBit { bpp: 0.1 },
+        MethodKind::TinyRank { bpp: 0.1 },
+    ];
+    for name in models {
+        let Some(arch) = ArchSpec::by_name(&name) else {
+            bail!("unknown model {name:?}; known: {:?}", ArchSpec::KNOWN)
+        };
+        println!(
+            "\n=== {} (total params {:.2}B) ===",
+            arch.name,
+            arch.total_params() as f64 / 1e9
+        );
+        println!("{:<24} {:>10} {:>8} {:>10} {:>8}", "method", "body GB", "%", "total GB", "%");
+        for m in methods {
+            let mm = model_memory(&arch, m);
+            println!(
+                "{:<24} {:>10.2} {:>7.1}% {:>10.2} {:>7.1}%",
+                mm.method,
+                mm.body_gb(),
+                mm.body_pct(),
+                mm.total_gb(),
+                mm.total_pct()
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Fig 6 (top): reconstruction MSE vs γ for the four methods at fixed budget.
+fn cmd_breakeven(args: &Args) -> Result<()> {
+    let size = args.get_usize("size", 512)?;
+    let bpp = args.get_f64("bpp", 1.0)?;
+    let itq_iters = args.get_usize("itq-iters", 50)?;
+    println!("size={size} bpp={bpp}");
+    println!(
+        "{:>6} {:>12} {:>12} {:>12} {:>12}",
+        "gamma", "tinyrank-fp", "littlebit", "lb+rot", "littlebit2"
+    );
+    for g10 in 1..=8 {
+        let gamma = g10 as f64 / 10.0;
+        let mut rng = Pcg64::seed(7000 + g10);
+        let spec = SynthSpec { rows: size, cols: size, gamma, coherence: 0.7, scale: 1.0 };
+        let w = synth_weight(&spec, &mut rng);
+
+        let r_fp = littlebit2::memory::tiny_rank_for_budget(size, size, bpp);
+        let fp = tiny_rank_fp16(&w, r_fp, &mut rng).reconstruction.mse(&w);
+
+        let mse = |strategy: InitStrategy| -> f64 {
+            let mut rng = Pcg64::seed(9000 + g10);
+            let cfg = CompressionConfig { bpp, strategy, residual: true, ..Default::default() };
+            compress(&w, &cfg, &mut rng).reconstruct().mse(&w)
+        };
+        println!(
+            "{gamma:>6.2} {fp:>12.4e} {:>12.4e} {:>12.4e} {:>12.4e}",
+            mse(InitStrategy::Standard),
+            mse(InitStrategy::RandomRotation),
+            mse(InitStrategy::JointItq { iters: itq_iters }),
+        );
+    }
+    Ok(())
+}
+
+/// Fig 6 bottom / Fig 11/12: γ distribution over a synthetic-LLM zoo.
+fn cmd_gamma_dist(args: &Args) -> Result<()> {
+    let model = args.get("model", "llama2-7b");
+    let blocks = args.get_usize("blocks", 8)?;
+    let Some(arch) = ArchSpec::by_name(&model) else {
+        bail!("unknown model {model:?}")
+    };
+    let layers = zoo::fabricate(&arch, 32, blocks, 11);
+    let mut rng = Pcg64::seed(3);
+    println!("{:<12} {:>8} {:>10}", "module", "gamma*", "gamma-fit");
+    let mut all = Vec::new();
+    for l in &layers {
+        let rank = l.weight.rows().min(l.weight.cols()).min(96);
+        let svd = littlebit2::linalg::svd_randomized(&l.weight, rank, 10, 3, &mut rng);
+        let fit = estimate_gamma(&svd.s);
+        println!("b{}.{:<9} {:>8.3} {:>10.3}", l.block, l.proj.name(), l.gamma, fit.gamma);
+        all.push(fit.gamma);
+    }
+    all.sort_by(|a, b| a.partial_cmp(b).expect("finite"));
+    let q = |p: f64| all[((all.len() - 1) as f64 * p) as usize];
+    println!(
+        "\nγ quantiles: p5={:.3} median={:.3} p95={:.3}  (paper Fig 11: medians 0.26-0.33, 90% in [0.19,0.47])",
+        q(0.05),
+        q(0.5),
+        q(0.95)
+    );
+    Ok(())
+}
+
+/// Fig 9: tail-gain vs quantization-cost curves.
+fn cmd_spectral_gain(args: &Args) -> Result<()> {
+    let n = args.get_f64("n", 4096.0)?;
+    let r_a = args.get_f64("ra", 16.0)?;
+    let r_b = args.get_f64("rb", 256.0)?;
+    println!("n={n} r_A={r_a} r_B={r_b}");
+    println!(
+        "{:>6} {:>14} {:>14} {:>14} {:>14}",
+        "gamma", "tail-gain", "cost(Λ=0.7)", "cost(Λ=0.36)", "cost(Λ=0.30)"
+    );
+    for g10 in 1..=10 {
+        let gamma = g10 as f64 / 10.0;
+        let gain = tail_energy(gamma, r_a, n) - tail_energy(gamma, r_b, n);
+        println!(
+            "{gamma:>6.2} {gain:>14.4} {:>14.4} {:>14.4} {:>14.4}",
+            quant_cost(gamma, 0.7, r_b),
+            quant_cost(gamma, 0.36, r_b),
+            quant_cost(gamma, 0.30, r_b)
+        );
+    }
+    for lambda in [0.7, 0.36, 0.30] {
+        let be = littlebit2::spectral::break_even_gamma(lambda, r_a, r_b, n);
+        println!("Λ={lambda:.2} ⇒ γ* = {:.3}", be.gamma_star);
+    }
+    Ok(())
+}
+
+/// Compress one synthetic weight and report the λ/MSE diagnostics.
+fn cmd_compress(args: &Args) -> Result<()> {
+    let size = args.get_usize("size", 512)?;
+    let gamma = args.get_f64("gamma", 0.27)?;
+    let bpp = args.get_f64("bpp", 0.55)?;
+    let strategy = match args.get("strategy", "itq").as_str() {
+        "standard" => InitStrategy::Standard,
+        "rotation" => InitStrategy::RandomRotation,
+        "itq" => InitStrategy::JointItq { iters: 50 },
+        other => bail!("strategy must be standard|rotation|itq, got {other:?}"),
+    };
+    let mut rng = Pcg64::seed(42);
+    let spec = SynthSpec { rows: size, cols: size, gamma, coherence: 0.7, scale: 1.0 };
+    let w = synth_weight(&spec, &mut rng);
+    let cfg = CompressionConfig { bpp, strategy, residual: true, ..Default::default() };
+    let t0 = std::time::Instant::now();
+    let c = compress(&w, &cfg, &mut rng);
+    let dt = t0.elapsed().as_secs_f64();
+    let lams = c.paths[0].u_distortions();
+    let mean_lam: f64 = lams.iter().sum::<f64>() / lams.len() as f64;
+    let max_lam = lams.iter().fold(0.0f64, |m, &x| m.max(x));
+    println!(
+        "size={size} γ={gamma} bpp={bpp} strategy={} rank={} | MSE={:.4e} bpp_actual={:.3} λ_mean={:.3} λ_max={:.3} ({dt:.2}s)",
+        strategy.label(),
+        c.paths[0].factors.rank(),
+        c.reconstruct().mse(&w),
+        c.bpp(),
+        mean_lam,
+        max_lam,
+    );
+    Ok(())
+}
+
+/// The e2e QAKD driver (quick path; `examples/e2e_qat.rs` is the recorded run).
+fn cmd_train(args: &Args) -> Result<()> {
+    let artifacts = args.get("artifacts", "artifacts");
+    let teacher_steps = args.get_usize("teacher-steps", 100)?;
+    let student_steps = args.get_usize("student-steps", 100)?;
+    let lr = args.get_f64("lr", 1e-3)? as f32;
+    let variant = match args.get("variant", "littlebit2").as_str() {
+        "tinyrank" => StudentVariant::TinyRankFp,
+        "littlebit" => StudentVariant::LittleBit,
+        "rotation" => StudentVariant::RandomRotation,
+        "littlebit2" => StudentVariant::LittleBit2 { itq_iters: 50 },
+        other => bail!("unknown variant {other:?}"),
+    };
+    let driver = QatDriver::new(&artifacts, 1234)?;
+    println!(
+        "platform={} preset={} model d={} L={} vocab={}",
+        driver.runtime().platform(),
+        driver.manifest.preset,
+        driver.manifest.config.d_model,
+        driver.manifest.config.n_layers,
+        driver.manifest.config.vocab
+    );
+    println!("— teacher pretraining ({teacher_steps} steps) —");
+    let (teacher, t_losses) = driver.train_teacher(teacher_steps, lr, |s, l| {
+        if s % 10 == 0 {
+            println!("teacher step {s:>5} loss {l:.4}");
+        }
+    })?;
+    println!("teacher final loss {:.4}", t_losses.last().unwrap());
+
+    println!("— student QAKD: {} ({student_steps} steps) —", variant.label());
+    let outcome = driver.train_student(&teacher, variant, student_steps, lr, |s, l, f| {
+        if s % 10 == 0 {
+            println!("student step {s:>5} loss {l:.4} flip {f:.4}");
+        }
+    })?;
+    println!(
+        "student {} eval CE {:.4} (PPL {:.2})",
+        variant.label(),
+        outcome.final_eval_ce,
+        outcome.final_eval_ce.exp()
+    );
+    Ok(())
+}

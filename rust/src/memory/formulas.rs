@@ -1,0 +1,129 @@
+//! Per-layer storage formulas, Eqs. 21–26 of Appendix H.
+
+/// Eq. 21 — k-bit group RTN (GPTQ / EfficientQAT): `k·N + ⌈N/g⌉·(16+16)`
+/// bits (FP16 scale + zero per group).
+pub fn rtn_bits(d_out: usize, d_in: usize, k: u32, group: usize) -> u64 {
+    let n = (d_out * d_in) as u64;
+    let groups = n.div_ceil(group as u64);
+    n * k as u64 + groups * 32
+}
+
+/// Eq. 22 — OneBit: `N + 16·(d_in + d_out)`.
+pub fn onebit_bits(d_out: usize, d_in: usize) -> u64 {
+    (d_out * d_in) as u64 + 16 * (d_in + d_out) as u64
+}
+
+/// Eq. 23 — BiLLM with salient columns `c`, block size `k`
+/// (second-order on salient, first-order elsewhere, plus bitmaps):
+/// `2nc + ⌈m/k⌉·3n·16 + n(m−c) + ⌈m/k⌉·2n·16·2 + n·m + m`
+/// with `n = d_out`, `m = d_in`.
+pub fn billm_bits(d_out: usize, d_in: usize, c: usize, k: usize) -> u64 {
+    let n = d_out as u64;
+    let m = d_in as u64;
+    let c = (c as u64).min(m);
+    let blocks = m.div_ceil(k as u64);
+    let second_order = 2 * n * c + blocks * 3 * n * 16;
+    let first_order = n * (m - c) + blocks * 2 * n * 16 * 2;
+    let bitmaps = n * m + m;
+    second_order + first_order + bitmaps
+}
+
+/// Eq. 24 — ARB-LLM (RC variant):
+/// `2nc + (⌈m/k⌉·2n + 2c)·16 + n(m−c) + (⌈m/k⌉·n + (m−c))·16·2 + n·m + m`.
+pub fn arb_bits(d_out: usize, d_in: usize, c: usize, k: usize) -> u64 {
+    let n = d_out as u64;
+    let m = d_in as u64;
+    let c = (c as u64).min(m);
+    let blocks = m.div_ceil(k as u64);
+    let second_order = 2 * n * c + (blocks * 2 * n + 2 * c) * 16;
+    let first_order = n * (m - c) + (blocks * n + (m - c)) * 16 * 2;
+    let bitmaps = n * m + m;
+    second_order + first_order + bitmaps
+}
+
+/// Eq. 25 — LittleBit / LittleBit-2 (identical storage), residual (2-path)
+/// architecture: `2r(d_in + d_out + 16) + 32(d_in + d_out)`.
+pub fn littlebit_bits(d_in: usize, d_out: usize, r: usize) -> u64 {
+    (2 * r * (d_in + d_out + 16)) as u64 + (32 * (d_in + d_out)) as u64
+}
+
+/// Eq. 26 — maximum rank under a bpp budget `B`:
+/// `r = ⌊(B·N − 32(d_in+d_out)) / (2(d_in+d_out+16))⌋`, clamped at 1.
+pub fn littlebit_rank_for_budget(d_in: usize, d_out: usize, bpp: f64) -> usize {
+    let n = (d_in * d_out) as f64;
+    let num = bpp * n - 32.0 * (d_in + d_out) as f64;
+    let den = 2.0 * (d_in + d_out + 16) as f64;
+    (num / den).floor().max(1.0) as usize
+}
+
+/// Single-path (non-residual) LittleBit variant used by the App. G ablation:
+/// `r(d_in + d_out + 16) + 16(d_in + d_out)`.
+pub fn littlebit_single_path_bits(d_in: usize, d_out: usize, r: usize) -> u64 {
+    (r * (d_in + d_out + 16)) as u64 + (16 * (d_in + d_out)) as u64
+}
+
+/// Max single-path rank under a bpp budget.
+pub fn littlebit_single_rank_for_budget(d_in: usize, d_out: usize, bpp: f64) -> usize {
+    let n = (d_in * d_out) as f64;
+    let num = bpp * n - 16.0 * (d_in + d_out) as f64;
+    let den = (d_in + d_out + 16) as f64;
+    (num / den).floor().max(1.0) as usize
+}
+
+/// Strategy A — tiny-rank FP16 factors: `16·r·(d_in + d_out)` bits.
+pub fn tiny_rank_fp16_bits(d_in: usize, d_out: usize, r: usize) -> u64 {
+    (16 * r * (d_in + d_out)) as u64
+}
+
+/// Maximum FP16 rank under a bpp budget.
+pub fn tiny_rank_for_budget(d_in: usize, d_out: usize, bpp: f64) -> usize {
+    let n = (d_in * d_out) as f64;
+    ((bpp * n) / (16.0 * (d_in + d_out) as f64)).floor().max(1.0) as usize
+}
+
+/// FP16 dense: `16·N`.
+pub fn fp16_bits(d_out: usize, d_in: usize) -> u64 {
+    16 * (d_out * d_in) as u64
+}
+
+/// The ≈16× rank-expansion factor of §4.1: binary rank affordable per FP16
+/// rank at the same budget.
+pub fn rank_expansion_factor(d_in: usize, d_out: usize, bpp: f64) -> f64 {
+    littlebit_rank_for_budget(d_in, d_out, bpp) as f64
+        / tiny_rank_for_budget(d_in, d_out, bpp) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_expansion_near_16x() {
+        // 2 paths at 1 bit + scales vs FP16: r_bin/r_fp ≈ 16/2 = 8 per path
+        // pair ⇒ the single-path comparison of §4.1 gives ≈16.
+        let f = littlebit_single_rank_for_budget(4096, 4096, 0.55) as f64
+            / tiny_rank_for_budget(4096, 4096, 0.55) as f64;
+        assert!(f > 12.0 && f < 17.0, "expansion={f}");
+    }
+
+    #[test]
+    fn fp16_sanity() {
+        assert_eq!(fp16_bits(2, 3), 96);
+    }
+
+    #[test]
+    fn budget_monotonicity() {
+        let r1 = littlebit_rank_for_budget(4096, 4096, 0.1);
+        let r2 = littlebit_rank_for_budget(4096, 4096, 0.55);
+        let r3 = littlebit_rank_for_budget(4096, 4096, 1.0);
+        assert!(r1 < r2 && r2 < r3, "{r1} {r2} {r3}");
+    }
+
+    #[test]
+    fn paper_rank_scale_at_0_1_bpp() {
+        // At 0.1 bpp on a 4096x4096 layer the affordable residual rank is
+        // ~90-100 (body compressed to <1%: consistent with Table 1).
+        let r = littlebit_rank_for_budget(4096, 4096, 0.1);
+        assert!(r > 60 && r < 130, "r={r}");
+    }
+}

@@ -1,0 +1,91 @@
+//! Memory-requirement analysis (Appendix H).
+//!
+//! Exact per-layer bit accounting for every method in Table 1, plus
+//! model-level aggregation over real architecture shapes. Because the
+//! Llama/Gemma architectures are public, the **Mem (GB)** columns of
+//! Table 1/2 are reproduced *exactly* — no simulation involved.
+//!
+//! Conventions follow App. H: all scales/zero-points are FP16 (16 bits),
+//! `N = d_in·d_out`, group size `k = 128`, salient columns `c = 128`.
+
+mod aggregate;
+mod formulas;
+
+pub use aggregate::{model_memory, MethodKind, ModelMemory};
+pub use formulas::*;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gptq_is_2_25_bits_per_param() {
+        // Eq. 21: 2N + (N/128)·32 = 2.25·N.
+        let bits = rtn_bits(4096, 4096, 2, 128);
+        let n = 4096u64 * 4096;
+        assert_eq!(bits, n * 2 + (n / 128) * 32);
+        assert!((bits as f64 / n as f64 - 2.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn onebit_formula() {
+        // Eq. 22: N + 16(d_in + d_out).
+        assert_eq!(
+            onebit_bits(11008, 4096),
+            11008 * 4096 + 16 * (11008 + 4096)
+        );
+    }
+
+    #[test]
+    fn littlebit_formula_and_inversion() {
+        // Eq. 25 and Eq. 26 must be mutually consistent: for the rank given
+        // by the inversion at budget B, actual bpp ≤ B and rank+1 exceeds it.
+        for (d_in, d_out) in [(4096usize, 4096usize), (4096, 11008), (14336, 4096)] {
+            for bpp in [0.1f64, 0.55, 1.0] {
+                let r = littlebit_rank_for_budget(d_in, d_out, bpp);
+                let n = (d_in * d_out) as f64;
+                let bits = littlebit_bits(d_in, d_out, r) as f64;
+                assert!(bits / n <= bpp + 1e-9, "bpp over budget: {} > {bpp}", bits / n);
+                let bits_next = littlebit_bits(d_in, d_out, r + 1) as f64;
+                assert!(bits_next / n > bpp, "rank not maximal at {bpp}");
+            }
+        }
+    }
+
+    #[test]
+    fn littlebit_components_breakdown() {
+        // 2r(d_in+d_out+16) + 32(d_in+d_out).
+        let (din, dout, r) = (100usize, 200usize, 10usize);
+        let expect = 2 * 10 * (100 + 200 + 16) + 32 * (100 + 200);
+        assert_eq!(littlebit_bits(din, dout, r), expect as u64);
+    }
+
+    /// BiLLM's *storage* bpp far exceeds its nominal 1.1 bits because of
+    /// scale + bitmap metadata: Eq. 23 gives ≈2.9 bpp on a 4096² layer —
+    /// exactly Table 1's 18.2%-of-FP16 body column (0.182·16 = 2.91).
+    #[test]
+    fn billm_metadata_overhead_matches_table1_pct() {
+        let bits = billm_bits(4096, 4096, 128, 128) as f64;
+        let bpp = bits / (4096f64 * 4096.0);
+        assert!((bpp - 2.91).abs() < 0.1, "billm bpp={bpp}");
+    }
+
+    /// ARB-RC per Eq. 24: ≈2.5 bpp on a square 4096 layer (Table 1 reports
+    /// 17.5% ⇒ 2.8 bpp model-wide; the difference comes from the paper's
+    /// aggregation over non-square layers — see EXPERIMENTS.md notes).
+    #[test]
+    fn arb_metadata_overhead() {
+        let bits = arb_bits(4096, 4096, 128, 128) as f64;
+        let bpp = bits / (4096f64 * 4096.0);
+        assert!(bpp > 2.3 && bpp < 2.9, "arb bpp={bpp}");
+    }
+
+    #[test]
+    fn tiny_rank_budget_inversion() {
+        for bpp in [0.55f64, 1.0, 2.0] {
+            let r = tiny_rank_for_budget(4096, 4096, bpp);
+            let bits = tiny_rank_fp16_bits(4096, 4096, r) as f64;
+            assert!(bits / (4096f64 * 4096.0) <= bpp + 1e-9);
+        }
+    }
+}

@@ -1,0 +1,234 @@
+//! Model architecture descriptors and the synthetic-LLM zoo.
+//!
+//! [`ArchSpec`] encodes the public shapes of the evaluation models (Llama-2
+//! 7B/13B, Llama-3 8B, Gemma-3 27B) so the App. H memory aggregation
+//! reproduces Table 1's Mem columns exactly. The [`zoo`] submodule fabricates
+//! synthetic per-layer weights whose spectral statistics match the paper's
+//! Fig. 11/12 measurements — the checkpoint substitute for every
+//! fidelity experiment.
+
+pub mod zoo;
+
+/// One linear projection inside a transformer block.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Proj {
+    Q,
+    K,
+    V,
+    O,
+    Gate,
+    Up,
+    Down,
+}
+
+impl Proj {
+    pub const ALL: [Proj; 7] = [
+        Proj::Q,
+        Proj::K,
+        Proj::V,
+        Proj::O,
+        Proj::Gate,
+        Proj::Up,
+        Proj::Down,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Proj::Q => "q_proj",
+            Proj::K => "k_proj",
+            Proj::V => "v_proj",
+            Proj::O => "o_proj",
+            Proj::Gate => "gate_proj",
+            Proj::Up => "up_proj",
+            Proj::Down => "down_proj",
+        }
+    }
+}
+
+/// Transformer architecture description (decoder-only, SwiGLU MLP, optional
+/// grouped-query attention).
+#[derive(Clone, Debug)]
+pub struct ArchSpec {
+    pub name: &'static str,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    /// Whether input embedding and LM head share weights.
+    pub tied_embeddings: bool,
+}
+
+impl ArchSpec {
+    pub fn llama2_7b() -> Self {
+        Self {
+            name: "llama2-7b",
+            vocab: 32_000,
+            d_model: 4096,
+            n_layers: 32,
+            n_heads: 32,
+            n_kv_heads: 32,
+            head_dim: 128,
+            d_ff: 11_008,
+            tied_embeddings: false,
+        }
+    }
+
+    pub fn llama2_13b() -> Self {
+        Self {
+            name: "llama2-13b",
+            vocab: 32_000,
+            d_model: 5120,
+            n_layers: 40,
+            n_heads: 40,
+            n_kv_heads: 40,
+            head_dim: 128,
+            d_ff: 13_824,
+            tied_embeddings: false,
+        }
+    }
+
+    pub fn llama3_8b() -> Self {
+        Self {
+            name: "llama3-8b",
+            vocab: 128_256,
+            d_model: 4096,
+            n_layers: 32,
+            n_heads: 32,
+            n_kv_heads: 8,
+            head_dim: 128,
+            d_ff: 14_336,
+            tied_embeddings: false,
+        }
+    }
+
+    pub fn gemma3_27b() -> Self {
+        Self {
+            name: "gemma3-27b",
+            vocab: 262_144,
+            d_model: 5376,
+            n_layers: 62,
+            n_heads: 32,
+            n_kv_heads: 16,
+            head_dim: 128,
+            d_ff: 21_504,
+            tied_embeddings: true,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "llama2-7b" => Some(Self::llama2_7b()),
+            "llama2-13b" => Some(Self::llama2_13b()),
+            "llama3-8b" => Some(Self::llama3_8b()),
+            "gemma3-27b" => Some(Self::gemma3_27b()),
+            _ => None,
+        }
+    }
+
+    pub const KNOWN: [&'static str; 4] =
+        ["llama2-7b", "llama2-13b", "llama3-8b", "gemma3-27b"];
+
+    /// `(d_out, d_in)` of a projection.
+    pub fn proj_shape(&self, p: Proj) -> (usize, usize) {
+        let q_dim = self.n_heads * self.head_dim;
+        let kv_dim = self.n_kv_heads * self.head_dim;
+        match p {
+            Proj::Q => (q_dim, self.d_model),
+            Proj::K | Proj::V => (kv_dim, self.d_model),
+            Proj::O => (self.d_model, q_dim),
+            Proj::Gate | Proj::Up => (self.d_ff, self.d_model),
+            Proj::Down => (self.d_model, self.d_ff),
+        }
+    }
+
+    /// Iterate every linear layer of the model body:
+    /// `(block index, projection, d_out, d_in)`.
+    pub fn body_layers(&self) -> impl Iterator<Item = (usize, Proj, usize, usize)> + '_ {
+        (0..self.n_layers).flat_map(move |b| {
+            Proj::ALL.into_iter().map(move |p| {
+                let (o, i) = self.proj_shape(p);
+                (b, p, o, i)
+            })
+        })
+    }
+
+    /// Parameter count of the body's linear layers.
+    pub fn body_params(&self) -> u64 {
+        self.body_layers().map(|(_, _, o, i)| (o * i) as u64).sum()
+    }
+
+    /// Embedding parameters (input embedding table).
+    pub fn embedding_params(&self) -> u64 {
+        (self.vocab * self.d_model) as u64
+    }
+
+    /// LM head parameters (0 when tied with the embedding).
+    pub fn head_params(&self) -> u64 {
+        if self.tied_embeddings {
+            0
+        } else {
+            (self.vocab * self.d_model) as u64
+        }
+    }
+
+    /// Norm/bias parameters: per-block 2 RMSNorm vectors + final norm.
+    pub fn norm_params(&self) -> u64 {
+        ((2 * self.n_layers + 1) * self.d_model) as u64
+    }
+
+    /// Total parameters.
+    pub fn total_params(&self) -> u64 {
+        self.body_params() + self.embedding_params() + self.head_params() + self.norm_params()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llama2_7b_param_count_matches_published() {
+        let a = ArchSpec::llama2_7b();
+        let total = a.total_params() as f64 / 1e9;
+        assert!((total - 6.74).abs() < 0.05, "total={total}B");
+    }
+
+    #[test]
+    fn llama3_8b_param_count_matches_published() {
+        let a = ArchSpec::llama3_8b();
+        let total = a.total_params() as f64 / 1e9;
+        assert!((total - 8.03).abs() < 0.08, "total={total}B");
+    }
+
+    #[test]
+    fn llama2_13b_param_count_matches_published() {
+        let a = ArchSpec::llama2_13b();
+        let total = a.total_params() as f64 / 1e9;
+        assert!((total - 13.02).abs() < 0.1, "total={total}B");
+    }
+
+    #[test]
+    fn gqa_shapes() {
+        let a = ArchSpec::llama3_8b();
+        assert_eq!(a.proj_shape(Proj::Q), (4096, 4096));
+        assert_eq!(a.proj_shape(Proj::K), (1024, 4096));
+        assert_eq!(a.proj_shape(Proj::Down), (4096, 14336));
+    }
+
+    #[test]
+    fn body_layer_count() {
+        let a = ArchSpec::llama2_7b();
+        assert_eq!(a.body_layers().count(), 32 * 7);
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for n in ArchSpec::KNOWN {
+            assert_eq!(ArchSpec::by_name(n).unwrap().name, n);
+        }
+        assert!(ArchSpec::by_name("gpt-5").is_none());
+    }
+}

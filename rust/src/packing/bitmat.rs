@@ -1,0 +1,166 @@
+//! Bit-packed ±1 matrix.
+
+use crate::linalg::Mat;
+
+/// Row-major bit-packed sign matrix. Set bit = +1, clear bit = −1.
+/// Each row occupies `words_per_row` u64 words; trailing padding bits in the
+/// last word of each row are kept **clear** and must be ignored by kernels
+/// (they are, via explicit column bounds).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BitMatrix {
+    rows: usize,
+    cols: usize,
+    words_per_row: usize,
+    words: Vec<u64>,
+}
+
+impl BitMatrix {
+    /// Pack the signs of a dense matrix (`x ≥ 0 → +1`, matching
+    /// `Mat::signum`).
+    pub fn from_dense(m: &Mat) -> Self {
+        let (rows, cols) = m.shape();
+        let words_per_row = cols.div_ceil(64);
+        let mut words = vec![0u64; rows * words_per_row];
+        for i in 0..rows {
+            let row = m.row(i);
+            let base = i * words_per_row;
+            for (j, &v) in row.iter().enumerate() {
+                if v >= 0.0 {
+                    words[base + j / 64] |= 1u64 << (j % 64);
+                }
+            }
+        }
+        Self { rows, cols, words_per_row, words }
+    }
+
+    /// All-(+1) matrix.
+    pub fn ones(rows: usize, cols: usize) -> Self {
+        let m = Mat::from_fn(rows, cols, |_, _| 1.0);
+        Self::from_dense(&m)
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn words_per_row(&self) -> usize {
+        self.words_per_row
+    }
+
+    #[inline]
+    pub fn row_words(&self, i: usize) -> &[u64] {
+        &self.words[i * self.words_per_row..(i + 1) * self.words_per_row]
+    }
+
+    /// Sign at (i, j) as ±1.0.
+    #[inline]
+    pub fn sign_at(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        let w = self.words[i * self.words_per_row + j / 64];
+        if (w >> (j % 64)) & 1 == 1 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Unpack to a dense ±1 matrix.
+    pub fn to_dense(&self) -> Mat {
+        Mat::from_fn(self.rows, self.cols, |i, j| self.sign_at(i, j))
+    }
+
+    /// Transposed copy (used to turn `V_b` into `V_bᵀ` once at load time so
+    /// the GEMV streams rows).
+    pub fn transpose(&self) -> BitMatrix {
+        let mut out_words = vec![0u64; self.cols * self.rows.div_ceil(64)];
+        let wpr_out = self.rows.div_ceil(64);
+        for i in 0..self.rows {
+            let base = i * self.words_per_row;
+            for w in 0..self.words_per_row {
+                let mut word = self.words[base + w];
+                while word != 0 {
+                    let b = word.trailing_zeros() as usize;
+                    let j = w * 64 + b;
+                    if j < self.cols {
+                        out_words[j * wpr_out + i / 64] |= 1u64 << (i % 64);
+                    }
+                    word &= word - 1;
+                }
+            }
+        }
+        BitMatrix {
+            rows: self.cols,
+            cols: self.rows,
+            words_per_row: wpr_out,
+            words: out_words,
+        }
+    }
+
+    /// Storage in bytes (the sub-1-bit story: `rows·cols/8` plus padding).
+    pub fn storage_bytes(&self) -> usize {
+        self.words.len() * 8
+    }
+
+    /// Fraction of +1 entries.
+    pub fn density(&self) -> f64 {
+        let set: u64 = self.words.iter().map(|w| w.count_ones() as u64).sum();
+        set as f64 / (self.rows * self.cols) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let mut rng = Pcg64::seed(1);
+        for (r, c) in [(3, 3), (7, 64), (5, 65), (16, 130)] {
+            let m = Mat::gaussian(r, c, &mut rng).signum();
+            let packed = BitMatrix::from_dense(&m);
+            assert_eq!(packed.to_dense(), m, "{r}x{c}");
+        }
+    }
+
+    #[test]
+    fn transpose_matches_dense_transpose() {
+        let mut rng = Pcg64::seed(2);
+        let m = Mat::gaussian(37, 91, &mut rng).signum();
+        let packed = BitMatrix::from_dense(&m);
+        assert_eq!(packed.transpose().to_dense(), m.transpose());
+    }
+
+    #[test]
+    fn storage_is_one_bit_per_entry_plus_padding() {
+        let b = BitMatrix::ones(128, 128);
+        assert_eq!(b.storage_bytes(), 128 * 128 / 8);
+        let b = BitMatrix::ones(10, 65);
+        assert_eq!(b.storage_bytes(), 10 * 2 * 8); // 2 words per row
+    }
+
+    #[test]
+    fn density_of_signs_is_half() {
+        let mut rng = Pcg64::seed(3);
+        let m = Mat::gaussian(256, 256, &mut rng).signum();
+        let d = BitMatrix::from_dense(&m).density();
+        assert!((d - 0.5).abs() < 0.02, "density={d}");
+    }
+
+    #[test]
+    fn padding_bits_stay_clear() {
+        let m = Mat::from_fn(2, 65, |_, _| 1.0); // all +1, one spill bit
+        let b = BitMatrix::from_dense(&m);
+        for i in 0..2 {
+            let last = b.row_words(i)[1];
+            assert_eq!(last & !1u64, 0, "padding contaminated: {last:#x}");
+        }
+    }
+}

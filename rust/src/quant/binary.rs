@@ -1,0 +1,137 @@
+//! Scalar binarization primitives and the distortion geometry of §4.2.
+
+use crate::linalg::{norm1, norm2, Mat};
+
+/// Optimal rank-respecting binarization of a vector: `u ≈ α·sign(u)` with
+/// `α* = ‖u‖₁ / r` (Eq. 12 in Appendix A.1).
+#[derive(Clone, Debug)]
+pub struct BinVec {
+    /// Signs in {±1}.
+    pub signs: Vec<f32>,
+    /// Optimal scalar scale α*.
+    pub alpha: f32,
+}
+
+impl BinVec {
+    pub fn reconstruct(&self) -> Vec<f32> {
+        self.signs.iter().map(|s| s * self.alpha).collect()
+    }
+}
+
+/// `argmin_α ‖u − α·sign(u)‖²`.
+pub fn binarize_optimal(u: &[f32]) -> BinVec {
+    let r = u.len() as f64;
+    let alpha = (norm1(u) / r) as f32;
+    let signs = u.iter().map(|&x| if x < 0.0 { -1.0 } else { 1.0 }).collect();
+    BinVec { signs, alpha }
+}
+
+/// Local distortion coefficient λ(u) = 1 − (‖u‖₁/‖u‖₂)²/r
+/// (Lemma 4.2). Returns 0 for the zero vector (nothing to lose).
+pub fn local_distortion(u: &[f32]) -> f64 {
+    let n2 = norm2(u);
+    if n2 == 0.0 {
+        return 0.0;
+    }
+    let r = u.len() as f64;
+    let ratio = norm1(u) / n2;
+    (1.0 - ratio * ratio / r).max(0.0)
+}
+
+/// λ for every row of a latent factor — the series plotted in Fig. 3.
+pub fn row_distortions(u: &Mat) -> Vec<f64> {
+    (0..u.rows()).map(|i| local_distortion(u.row(i))).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn alpha_is_mean_absolute_value() {
+        let u = [1.0f32, -2.0, 3.0, -4.0];
+        let b = binarize_optimal(&u);
+        assert!((b.alpha - 2.5).abs() < 1e-6);
+        assert_eq!(b.signs, vec![1.0, -1.0, 1.0, -1.0]);
+    }
+
+    #[test]
+    fn optimal_alpha_minimizes_error() {
+        let mut rng = Pcg64::seed(1);
+        let mut u = vec![0.0f32; 64];
+        rng.fill_normal(&mut u);
+        let b = binarize_optimal(&u);
+        let err = |alpha: f32| -> f64 {
+            u.iter()
+                .zip(&b.signs)
+                .map(|(x, s)| ((x - alpha * s) as f64).powi(2))
+                .sum()
+        };
+        let best = err(b.alpha);
+        for d in [-0.05f32, 0.05] {
+            assert!(err(b.alpha + d) >= best);
+        }
+    }
+
+    #[test]
+    fn distortion_equals_normalized_error() {
+        // λ(u)·‖u‖² must equal the actual optimal quantization error (Eq 13).
+        let mut rng = Pcg64::seed(2);
+        let mut u = vec![0.0f32; 128];
+        rng.fill_normal(&mut u);
+        let b = binarize_optimal(&u);
+        let err: f64 = u
+            .iter()
+            .zip(&b.reconstruct())
+            .map(|(x, y)| ((x - y) as f64).powi(2))
+            .sum();
+        let lam = local_distortion(&u);
+        let n2 = crate::linalg::dot(&u, &u);
+        assert!((lam * n2 - err).abs() / err < 1e-4, "{} vs {}", lam * n2, err);
+    }
+
+    #[test]
+    fn distortion_extremes() {
+        // Axis-aligned spike: λ → 1 − 1/r (worst case, ≈1 for large r).
+        let mut spike = vec![0.0f32; 100];
+        spike[3] = 5.0;
+        let lam = local_distortion(&spike);
+        assert!((lam - 0.99).abs() < 1e-6, "spike λ={lam}");
+        // Dense ±c vector: λ = 0 (perfectly binarizable).
+        let dense = vec![0.7f32; 100];
+        assert!(local_distortion(&dense) < 1e-6);
+    }
+
+    #[test]
+    fn gaussian_vector_near_gaussian_limit() {
+        // E[λ] → 1 − 2/π ≈ 0.3634 for gaussian coordinates (Theorem 4.4).
+        let mut rng = Pcg64::seed(3);
+        let mut acc = 0.0;
+        let trials = 200;
+        for _ in 0..trials {
+            let mut u = vec![0.0f32; 512];
+            rng.fill_normal(&mut u);
+            acc += local_distortion(&u);
+        }
+        let mean = acc / trials as f64;
+        let limit = 1.0 - 2.0 / std::f64::consts::PI;
+        assert!((mean - limit).abs() < 0.01, "mean={mean} limit={limit}");
+    }
+
+    #[test]
+    fn zero_vector_is_harmless() {
+        assert_eq!(local_distortion(&[0.0; 8]), 0.0);
+        let b = binarize_optimal(&[0.0; 8]);
+        assert_eq!(b.alpha, 0.0);
+    }
+
+    #[test]
+    fn row_distortions_in_unit_interval() {
+        let mut rng = Pcg64::seed(4);
+        let m = Mat::gaussian(50, 32, &mut rng);
+        for lam in row_distortions(&m) {
+            assert!((0.0..=1.0).contains(&lam));
+        }
+    }
+}

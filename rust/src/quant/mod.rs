@@ -1,0 +1,70 @@
+//! Quantization baselines the paper compares against (Table 1) plus the
+//! scalar binarization primitives shared with the LittleBit core.
+//!
+//! Implemented from the methods' defining equations (and App. H memory
+//! formulas):
+//!
+//! * [`binarize_optimal`] — `min_α ‖u − α·sign(u)‖²` with `α* = ‖u‖₁/r`
+//!   (Lemma 4.2 / Eq. 12) and the local distortion λ(u) it induces.
+//! * [`rtn`] — round-to-nearest group quantization (k-bit, group 128): the
+//!   GPTQ / EfficientQAT storage-format stand-in for reconstruction-error
+//!   comparisons.
+//! * [`onebit`] — OneBit (Xu et al., 2024): `Ŵ = diag(a)·sign(W)·diag(b)`
+//!   with scale fitting by alternating least squares.
+//! * [`billm_style`] — salient-column split binarization (BiLLM-like):
+//!   top-c salient columns get second-order (residual) binarization, the
+//!   rest first-order, per-row scales.
+//! * [`arb_style`] — alternating refined binarization (ARB-LLM-like):
+//!   iteratively refit row+column scales and the binary code.
+//! * [`tiny_rank_fp16`] — Strategy A: truncated SVD stored at FP16.
+
+mod baselines;
+mod binary;
+
+pub use baselines::{arb_style, billm_style, onebit, rtn, tiny_rank_fp16, QuantResult};
+pub use binary::{binarize_optimal, local_distortion, row_distortions, BinVec};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::rng::Pcg64;
+    use crate::spectral::{synth_weight, SynthSpec};
+
+    /// Every baseline must beat the trivial zero approximation on a
+    /// heavy-tailed synthetic weight and report a positive bit count.
+    #[test]
+    fn all_baselines_beat_zero_and_report_storage() {
+        let mut rng = Pcg64::seed(7);
+        let spec = SynthSpec { rows: 128, cols: 128, gamma: 0.3, coherence: 0.5, scale: 1.0 };
+        let w = synth_weight(&spec, &mut rng);
+        let zero_mse = w.mse(&Mat::zeros(128, 128));
+
+        for (name, res) in [
+            ("rtn4", rtn(&w, 4, 128)),
+            ("onebit", onebit(&w, 30)),
+            ("billm", billm_style(&w, 16, 64)),
+            ("arb", arb_style(&w, 15)),
+            ("tiny", tiny_rank_fp16(&w, 8, &mut rng)),
+        ] {
+            let mse = res.reconstruction.mse(&w);
+            assert!(mse < zero_mse, "{name}: mse {mse} !< zero {zero_mse}");
+            assert!(res.bits > 0, "{name} reports no storage");
+        }
+        // 2-bit RTN on spiky heavy-tailed weights can be *worse than
+        // zeroing* — the collapse Table 1 shows for GPTQ-2bit (PPL 52-1480).
+        let rtn2 = rtn(&w, 2, 128).reconstruction.mse(&w);
+        assert!(rtn2 < 4.0 * zero_mse, "rtn2 unbounded: {rtn2}");
+    }
+
+    /// More precision must not hurt RTN.
+    #[test]
+    fn rtn_error_monotone_in_bits() {
+        let mut rng = Pcg64::seed(8);
+        let w = Mat::gaussian(64, 128, &mut rng);
+        let e2 = rtn(&w, 2, 64).reconstruction.mse(&w);
+        let e4 = rtn(&w, 4, 64).reconstruction.mse(&w);
+        let e8 = rtn(&w, 8, 64).reconstruction.mse(&w);
+        assert!(e4 < e2 && e8 < e4, "e2={e2} e4={e4} e8={e8}");
+    }
+}

@@ -1,0 +1,421 @@
+//! Artifact manifest parsing.
+//!
+//! `aot.py` writes `manifest.json` describing every exported HLO artifact
+//! (input arity + shapes), the parameter specs (the positional contract for
+//! train/eval steps), and the model configuration. No serde in this build
+//! environment, so this file carries a small recursive-descent JSON parser —
+//! sufficient for the manifest subset (objects, arrays, strings, numbers,
+//! bools, null).
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Minimal JSON value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn get(&self, key: &str) -> Result<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key).with_context(|| format!("missing key {key:?}")),
+            _ => bail!("not an object"),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Json::Num(x) => Ok(*x),
+            _ => bail!("not a number: {self:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        Ok(self.as_f64()? as usize)
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Json::Bool(b) => Ok(*b),
+            _ => bail!("not a bool"),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Json::Str(s) => Ok(s),
+            _ => bail!("not a string"),
+        }
+    }
+
+    pub fn as_arr(&self) -> Result<&[Json]> {
+        match self {
+            Json::Arr(a) => Ok(a),
+            _ => bail!("not an array"),
+        }
+    }
+
+    pub fn as_obj(&self) -> Result<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Ok(m),
+            _ => bail!("not an object"),
+        }
+    }
+}
+
+/// Parse a JSON document.
+pub fn parse_json(src: &str) -> Result<Json> {
+    let bytes = src.as_bytes();
+    let mut pos = 0usize;
+    let v = parse_value(bytes, &mut pos)?;
+    skip_ws(bytes, &mut pos);
+    if pos != bytes.len() {
+        bail!("trailing garbage at byte {pos}");
+    }
+    Ok(v)
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json> {
+    skip_ws(b, pos);
+    if *pos >= b.len() {
+        bail!("unexpected end of input");
+    }
+    match b[*pos] {
+        b'{' => parse_object(b, pos),
+        b'[' => parse_array(b, pos),
+        b'"' => Ok(Json::Str(parse_string(b, pos)?)),
+        b't' => {
+            expect(b, pos, "true")?;
+            Ok(Json::Bool(true))
+        }
+        b'f' => {
+            expect(b, pos, "false")?;
+            Ok(Json::Bool(false))
+        }
+        b'n' => {
+            expect(b, pos, "null")?;
+            Ok(Json::Null)
+        }
+        _ => parse_number(b, pos),
+    }
+}
+
+fn expect(b: &[u8], pos: &mut usize, lit: &str) -> Result<()> {
+    if b[*pos..].starts_with(lit.as_bytes()) {
+        *pos += lit.len();
+        Ok(())
+    } else {
+        bail!("expected {lit} at byte {pos}")
+    }
+}
+
+fn parse_object(b: &[u8], pos: &mut usize) -> Result<Json> {
+    *pos += 1; // {
+    let mut map = BTreeMap::new();
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == b'}' {
+        *pos += 1;
+        return Ok(Json::Obj(map));
+    }
+    loop {
+        skip_ws(b, pos);
+        let key = parse_string(b, pos)?;
+        skip_ws(b, pos);
+        if *pos >= b.len() || b[*pos] != b':' {
+            bail!("expected ':' at byte {pos}");
+        }
+        *pos += 1;
+        let val = parse_value(b, pos)?;
+        map.insert(key, val);
+        skip_ws(b, pos);
+        match b.get(*pos) {
+            Some(b',') => *pos += 1,
+            Some(b'}') => {
+                *pos += 1;
+                return Ok(Json::Obj(map));
+            }
+            _ => bail!("expected ',' or '}}' at byte {pos}"),
+        }
+    }
+}
+
+fn parse_array(b: &[u8], pos: &mut usize) -> Result<Json> {
+    *pos += 1; // [
+    let mut arr = Vec::new();
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == b']' {
+        *pos += 1;
+        return Ok(Json::Arr(arr));
+    }
+    loop {
+        arr.push(parse_value(b, pos)?);
+        skip_ws(b, pos);
+        match b.get(*pos) {
+            Some(b',') => *pos += 1,
+            Some(b']') => {
+                *pos += 1;
+                return Ok(Json::Arr(arr));
+            }
+            _ => bail!("expected ',' or ']' at byte {pos}"),
+        }
+    }
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String> {
+    if *pos >= b.len() || b[*pos] != b'"' {
+        bail!("expected string at byte {pos}");
+    }
+    *pos += 1;
+    let mut out = String::new();
+    while *pos < b.len() {
+        match b[*pos] {
+            b'"' => {
+                *pos += 1;
+                return Ok(out);
+            }
+            b'\\' => {
+                *pos += 1;
+                match b.get(*pos) {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b'b') => out.push('\u{8}'),
+                    Some(b'f') => out.push('\u{c}'),
+                    Some(b'u') => {
+                        if *pos + 5 > b.len() {
+                            bail!("truncated \\u escape");
+                        }
+                        let hex = std::str::from_utf8(&b[*pos + 1..*pos + 5])?;
+                        let code = u32::from_str_radix(hex, 16)?;
+                        out.push(char::from_u32(code).context("bad \\u escape")?);
+                        *pos += 4;
+                    }
+                    _ => bail!("bad escape at byte {pos}"),
+                }
+                *pos += 1;
+            }
+            c => {
+                // Copy raw UTF-8 bytes through.
+                let start = *pos;
+                let len = utf8_len(c);
+                out.push_str(std::str::from_utf8(&b[start..start + len])?);
+                *pos += len;
+            }
+        }
+    }
+    bail!("unterminated string")
+}
+
+fn utf8_len(first: u8) -> usize {
+    match first {
+        0x00..=0x7f => 1,
+        0xc0..=0xdf => 2,
+        0xe0..=0xef => 3,
+        _ => 4,
+    }
+}
+
+fn parse_number(b: &[u8], pos: &mut usize) -> Result<Json> {
+    let start = *pos;
+    while *pos < b.len()
+        && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+    {
+        *pos += 1;
+    }
+    let s = std::str::from_utf8(&b[start..*pos])?;
+    Ok(Json::Num(s.parse::<f64>().with_context(|| format!("bad number {s:?}"))?))
+}
+
+// ---------------------------------------------------------------------------
+// Typed manifest views
+// ---------------------------------------------------------------------------
+
+/// One artifact's metadata.
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub path: String,
+    pub num_inputs: usize,
+    /// (dtype, shape) per input.
+    pub input_shapes: Vec<(String, Vec<usize>)>,
+}
+
+/// The exported model configuration (mirror of python ModelConfig).
+#[derive(Clone, Debug)]
+pub struct ModelConfigInfo {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub bpp: f64,
+    pub residual_paths: usize,
+    pub kd_alpha: f64,
+    pub kd_temperature: f64,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub config: ModelConfigInfo,
+    pub preset: String,
+    /// (name, shape) in positional order.
+    pub teacher_spec: Vec<(String, Vec<usize>)>,
+    pub student_spec: Vec<(String, Vec<usize>)>,
+    pub student_fp_spec: Vec<(String, Vec<usize>)>,
+    pub artifacts: BTreeMap<String, ArtifactInfo>,
+    pub teacher_init_dir: String,
+}
+
+fn parse_spec(v: &Json) -> Result<Vec<(String, Vec<usize>)>> {
+    v.as_arr()?
+        .iter()
+        .map(|e| {
+            let pair = e.as_arr()?;
+            let name = pair[0].as_str()?.to_string();
+            let shape = pair[1]
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<Vec<_>>>()?;
+            Ok((name, shape))
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {:?}", path.as_ref()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let root = parse_json(text)?;
+        let cfg = root.get("config")?;
+        let config = ModelConfigInfo {
+            vocab: cfg.get("vocab")?.as_usize()?,
+            d_model: cfg.get("d_model")?.as_usize()?,
+            n_layers: cfg.get("n_layers")?.as_usize()?,
+            n_heads: cfg.get("n_heads")?.as_usize()?,
+            d_ff: cfg.get("d_ff")?.as_usize()?,
+            seq: cfg.get("seq")?.as_usize()?,
+            batch: cfg.get("batch")?.as_usize()?,
+            bpp: cfg.get("bpp")?.as_f64()?,
+            residual_paths: cfg.get("residual_paths")?.as_usize()?,
+            kd_alpha: cfg.get("kd_alpha")?.as_f64()?,
+            kd_temperature: cfg.get("kd_temperature")?.as_f64()?,
+        };
+        let mut artifacts = BTreeMap::new();
+        for (name, info) in root.get("artifacts")?.as_obj()? {
+            let shapes = info
+                .get("input_shapes")?
+                .as_arr()?
+                .iter()
+                .map(|e| {
+                    let pair = e.as_arr()?;
+                    let dt = pair[0].as_str()?.to_string();
+                    let shape = pair[1]
+                        .as_arr()?
+                        .iter()
+                        .map(|d| d.as_usize())
+                        .collect::<Result<Vec<_>>>()?;
+                    Ok((dt, shape))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactInfo {
+                    path: info.get("path")?.as_str()?.to_string(),
+                    num_inputs: info.get("num_inputs")?.as_usize()?,
+                    input_shapes: shapes,
+                },
+            );
+        }
+        Ok(Self {
+            config,
+            preset: root.get("preset")?.as_str()?.to_string(),
+            teacher_spec: parse_spec(root.get("teacher_spec")?)?,
+            student_spec: parse_spec(root.get("student_spec")?)?,
+            student_fp_spec: parse_spec(root.get("student_fp_spec")?)?,
+            artifacts,
+            teacher_init_dir: root.get("teacher_init_dir")?.as_str()?.to_string(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_scalars() {
+        assert_eq!(parse_json("42").unwrap(), Json::Num(42.0));
+        assert_eq!(parse_json("-1.5e2").unwrap(), Json::Num(-150.0));
+        assert_eq!(parse_json("true").unwrap(), Json::Bool(true));
+        assert_eq!(parse_json("null").unwrap(), Json::Null);
+        assert_eq!(parse_json("\"hi\\n\"").unwrap(), Json::Str("hi\n".into()));
+    }
+
+    #[test]
+    fn parse_nested() {
+        let v = parse_json(r#"{"a": [1, 2, {"b": "c"}], "d": {}}"#).unwrap();
+        let a = v.get("a").unwrap().as_arr().unwrap();
+        assert_eq!(a.len(), 3);
+        assert_eq!(a[2].get("b").unwrap().as_str().unwrap(), "c");
+    }
+
+    #[test]
+    fn parse_unicode_escape() {
+        assert_eq!(parse_json("\"\\u00e9\"").unwrap(), Json::Str("é".into()));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_json("{").is_err());
+        assert!(parse_json("[1,]").is_err());
+        assert!(parse_json("1 2").is_err());
+    }
+
+    #[test]
+    fn parse_manifest_document() {
+        let doc = r#"{
+          "config": {"vocab": 256, "d_model": 64, "n_layers": 2, "n_heads": 2,
+                     "d_ff": 172, "seq": 32, "batch": 4, "bpp": 1.0,
+                     "residual_paths": 2, "fp_latent": false,
+                     "kd_alpha": 0.5, "kd_temperature": 2.0},
+          "preset": "tiny",
+          "teacher_spec": [["embed", [256, 64]], ["head", [256, 64]]],
+          "student_spec": [["embed", [256, 64]]],
+          "student_fp_spec": [["embed", [256, 64]]],
+          "artifacts": {
+            "teacher_eval": {"path": "teacher_eval.hlo.txt", "num_inputs": 2,
+                             "input_shapes": [["float32", [256, 64]], ["int32", [4, 33]]]}
+          },
+          "teacher_init_dir": "params"
+        }"#;
+        let m = Manifest::parse(doc).unwrap();
+        assert_eq!(m.config.vocab, 256);
+        assert_eq!(m.teacher_spec.len(), 2);
+        let a = &m.artifacts["teacher_eval"];
+        assert_eq!(a.num_inputs, 2);
+        assert_eq!(a.input_shapes[1].0, "int32");
+    }
+}

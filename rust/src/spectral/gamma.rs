@@ -1,0 +1,113 @@
+//! Power-law decay-rate estimation by log-log linear regression,
+//! matching the paper's "all gammas are calculated by log linear regression
+//! of real weights" (§5.1).
+
+/// Result of fitting log σ_k = log C − γ·log k.
+#[derive(Clone, Copy, Debug)]
+pub struct GammaFit {
+    /// Estimated decay rate γ (positive = decaying spectrum).
+    pub gamma: f64,
+    /// Estimated log-amplitude log C.
+    pub log_c: f64,
+    /// Coefficient of determination of the fit.
+    pub r2: f64,
+}
+
+impl GammaFit {
+    /// Heavy-tailed per Martin & Mahoney's classification used in §4.1.
+    pub fn is_heavy_tailed(&self) -> bool {
+        self.gamma <= 0.5
+    }
+}
+
+/// Fit γ over the interior of the spectrum. The head (k < `skip`) is
+/// dominated by a few outlier directions and the far tail by numerical
+/// noise, so the fit uses k ∈ [skip, n·tail_frac] — mirroring standard
+/// practice for ESD power-law fits.
+pub fn estimate_gamma_windowed(s: &[f32], skip: usize, tail_frac: f64) -> GammaFit {
+    let n = s.len();
+    let hi = ((n as f64 * tail_frac) as usize).clamp(skip + 2, n);
+    let mut xs = Vec::with_capacity(hi - skip);
+    let mut ys = Vec::with_capacity(hi - skip);
+    for k in skip..hi {
+        let sv = s[k] as f64;
+        if sv <= 0.0 {
+            break; // spectrum is sorted; zeros only occur at the tail
+        }
+        xs.push(((k + 1) as f64).ln());
+        ys.push(sv.ln());
+    }
+    let m = xs.len() as f64;
+    assert!(m >= 2.0, "need at least 2 positive singular values");
+    let mean_x: f64 = xs.iter().sum::<f64>() / m;
+    let mean_y: f64 = ys.iter().sum::<f64>() / m;
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for (x, y) in xs.iter().zip(&ys) {
+        let dx = x - mean_x;
+        let dy = y - mean_y;
+        sxy += dx * dy;
+        sxx += dx * dx;
+        syy += dy * dy;
+    }
+    let slope = sxy / sxx;
+    let r2 = if syy > 0.0 { (sxy * sxy) / (sxx * syy) } else { 1.0 };
+    GammaFit { gamma: -slope, log_c: mean_y - slope * mean_x, r2 }
+}
+
+/// Default windowing: skip the top 1% (min 1), fit to the 90th percentile.
+pub fn estimate_gamma(s: &[f32]) -> GammaFit {
+    let skip = (s.len() / 100).max(1);
+    estimate_gamma_windowed(s, skip, 0.9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_power_law_recovers_gamma() {
+        for &g in &[0.1f64, 0.36, 0.8, 1.5] {
+            let s: Vec<f32> = (1..=500).map(|k| (k as f64).powf(-g) as f32).collect();
+            let fit = estimate_gamma(&s);
+            assert!((fit.gamma - g).abs() < 1e-3, "g={g} got={}", fit.gamma);
+            assert!(fit.r2 > 0.999);
+        }
+    }
+
+    #[test]
+    fn amplitude_recovered() {
+        let c = 3.0f64;
+        let s: Vec<f32> = (1..=300).map(|k| (c * (k as f64).powf(-0.4)) as f32).collect();
+        let fit = estimate_gamma(&s);
+        assert!((fit.log_c - c.ln()).abs() < 1e-2);
+    }
+
+    #[test]
+    fn heavy_tail_classification() {
+        let heavy: Vec<f32> = (1..=100).map(|k| (k as f64).powf(-0.3) as f32).collect();
+        let light: Vec<f32> = (1..=100).map(|k| (k as f64).powf(-0.9) as f32).collect();
+        assert!(estimate_gamma(&heavy).is_heavy_tailed());
+        assert!(!estimate_gamma(&light).is_heavy_tailed());
+    }
+
+    #[test]
+    fn noisy_spectrum_fit_tolerance() {
+        // Multiplicative noise should perturb γ only slightly.
+        let mut rng = crate::rng::Pcg64::seed(1);
+        let s: Vec<f32> = (1..=400)
+            .map(|k| ((k as f64).powf(-0.5) * (1.0 + 0.05 * rng.normal())) as f32)
+            .collect();
+        let fit = estimate_gamma(&s);
+        assert!((fit.gamma - 0.5).abs() < 0.05, "got={}", fit.gamma);
+    }
+
+    #[test]
+    fn zero_tail_is_ignored() {
+        let mut s: Vec<f32> = (1..=100).map(|k| (k as f64).powf(-0.4) as f32).collect();
+        s.extend([0.0f32; 20]);
+        let fit = estimate_gamma(&s);
+        assert!((fit.gamma - 0.4).abs() < 0.02);
+    }
+}

@@ -1,0 +1,41 @@
+//! Spectral analysis: power-law weight synthesis, decay-rate (γ) estimation,
+//! and the Spectral Break-Even Condition of Proposition 4.1.
+//!
+//! The paper models LLM weight spectra as σ_k ≈ C·k^{−γ} (Martin & Mahoney,
+//! 2021), classifying γ ≤ 0.5 as heavy-tailed. Under a fixed bit budget,
+//! Strategy B (low-rank binary, rank r_B ≈ 16·r_A) beats Strategy A
+//! (tiny-rank FP16, rank r_A) iff the tail energy gained by rank expansion
+//! exceeds the quantization cost Λ·Σ_{k≤r_B} σ_k² (Eq. 3).
+
+mod breakeven;
+mod gamma;
+mod synth;
+
+pub use breakeven::{
+    advantage, break_even_gamma, discrete, quant_cost, tail_energy, tail_gain, BreakEven,
+};
+pub use gamma::{estimate_gamma, GammaFit};
+pub use synth::{power_law_singular_values, synth_weight, SynthSpec};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::svd_randomized;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn synth_then_estimate_roundtrips_gamma() {
+        let mut rng = Pcg64::seed(42);
+        for &gamma in &[0.2f64, 0.4, 0.7] {
+            let spec = SynthSpec { rows: 128, cols: 128, gamma, coherence: 0.0, scale: 1.0 };
+            let w = synth_weight(&spec, &mut rng);
+            let svd = svd_randomized(&w, 96, 10, 3, &mut rng);
+            let fit = estimate_gamma(&svd.s);
+            assert!(
+                (fit.gamma - gamma).abs() < 0.08,
+                "target={gamma} estimated={}",
+                fit.gamma
+            );
+        }
+    }
+}

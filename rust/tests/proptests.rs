@@ -1,0 +1,216 @@
+//! Property-based tests over the coordinator/core invariants.
+//!
+//! proptest is unavailable in this offline build, so this file carries a
+//! small seeded-sweep harness (`for_cases`) that generates N randomized
+//! cases per property from a deterministic PCG stream — same spirit:
+//! random structure, reproducible by seed (no shrinking), and each case
+//! prints its seed on failure.
+
+use littlebit2::linalg::{norm1, norm2, orthogonality_defect, svd_randomized, Mat};
+use littlebit2::littlebit::{compress, dual_svid, joint_itq, CompressionConfig, InitStrategy};
+use littlebit2::packing::{gemv_sign, BitMatrix};
+use littlebit2::quant::{binarize_optimal, local_distortion};
+use littlebit2::rng::Pcg64;
+use littlebit2::spectral::{synth_weight, SynthSpec};
+
+/// Run `prop` against `n` generated cases; panics with the case seed.
+fn for_cases(n: u64, prop: impl Fn(&mut Pcg64)) {
+    for case in 0..n {
+        let seed = 0xBEEF_0000 + case;
+        let mut rng = Pcg64::seed(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property failed for case seed {seed:#x}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+fn rand_dims(rng: &mut Pcg64, lo: usize, hi: usize) -> usize {
+    lo + rng.below((hi - lo) as u64 + 1) as usize
+}
+
+/// λ(u) ∈ [0, 1-1/r] for every vector (Lemma 4.2's range).
+#[test]
+fn prop_distortion_range() {
+    for_cases(50, |rng| {
+        let r = rand_dims(rng, 2, 96);
+        let mut u = vec![0.0f32; r];
+        // Mix of spiky and dense vectors.
+        rng.fill_normal(&mut u);
+        if rng.uniform() < 0.3 {
+            for (i, v) in u.iter_mut().enumerate() {
+                if i % 7 != 0 {
+                    *v *= 0.01;
+                }
+            }
+        }
+        let lam = local_distortion(&u);
+        assert!(lam >= 0.0 && lam <= 1.0 - 1.0 / r as f64 + 1e-9, "λ={lam} r={r}");
+    });
+}
+
+/// Binarization error equals λ·‖u‖² exactly (Eq. 13), for random vectors.
+#[test]
+fn prop_binarize_error_identity() {
+    for_cases(50, |rng| {
+        let r = rand_dims(rng, 1, 128);
+        let mut u = vec![0.0f32; r];
+        rng.fill_normal(&mut u);
+        let b = binarize_optimal(&u);
+        let err: f64 = u
+            .iter()
+            .zip(&b.reconstruct())
+            .map(|(x, y)| ((x - y) as f64).powi(2))
+            .sum();
+        let n2sq = norm2(&u).powi(2);
+        let lam = local_distortion(&u);
+        assert!((err - lam * n2sq).abs() <= 1e-4 * n2sq.max(1e-9));
+    });
+}
+
+/// Rotating by any orthogonal matrix preserves ÛV̂ᵀ (Eq. 7) and row norms.
+#[test]
+fn prop_rotation_invariance() {
+    for_cases(25, |rng| {
+        let r = rand_dims(rng, 2, 24);
+        let m = rand_dims(rng, r, 80);
+        let n = rand_dims(rng, r, 80);
+        let u = Mat::gaussian(m, r, rng);
+        let v = Mat::gaussian(n, r, rng);
+        let q = littlebit2::linalg::random_orthogonal(r, rng);
+        let base = u.matmul_t(&v);
+        let rot = u.matmul(&q).matmul_t(&v.matmul(&q));
+        assert!(rot.fro_dist2(&base) / base.fro_norm().powi(2).max(1e-12) < 1e-6);
+        for i in 0..m {
+            let a = norm2(u.row(i));
+            let b = norm2(u.matmul(&q).row(i));
+            assert!((a - b).abs() < 1e-3 * a.max(1e-6));
+        }
+    });
+}
+
+/// Joint-ITQ always returns an orthogonal rotation whose L1 mass is ≥ the
+/// starting rotation's (App. A.2 monotonicity), on arbitrary factors.
+#[test]
+fn prop_itq_monotone_and_orthogonal() {
+    for_cases(15, |rng| {
+        let r = rand_dims(rng, 2, 16);
+        let m = rand_dims(rng, r + 1, 60);
+        let n = rand_dims(rng, r + 1, 60);
+        let u = Mat::gaussian(m, r, rng);
+        let v = Mat::gaussian(n, r, rng);
+        let iters = 1 + rng.below(20) as usize;
+        let (rot, report) = joint_itq(&u, &v, iters, rng);
+        assert!(orthogonality_defect(&rot) < 1e-3);
+        for w in report.l1_mass.windows(2) {
+            assert!(w[1] >= w[0] * (1.0 - 1e-5), "L1 mass decreased: {w:?}");
+        }
+    });
+}
+
+/// Bit-packing round-trips and sign-GEMV matches the dense product for
+/// arbitrary shapes including ragged (non-multiple-of-64) columns.
+#[test]
+fn prop_packing_roundtrip_and_gemv() {
+    for_cases(40, |rng| {
+        let m = rand_dims(rng, 1, 70);
+        let n = rand_dims(rng, 1, 200);
+        let s = Mat::gaussian(m, n, rng).signum();
+        let packed = BitMatrix::from_dense(&s);
+        assert_eq!(packed.to_dense(), s);
+        let mut x = vec![0.0f32; n];
+        rng.fill_normal(&mut x);
+        let want = s.matvec(&x);
+        let mut got = vec![0.0f32; m];
+        gemv_sign(&packed, &x, &mut got);
+        for (a, b) in want.iter().zip(&got) {
+            assert!((a - b).abs() < 1e-3 * (n as f32).sqrt().max(1.0), "{a} vs {b}");
+        }
+    });
+}
+
+/// Dual-SVID is scale-covariant: scaling the inputs by c scales the
+/// reconstruction by c (rank-1 scale extraction is 1-homogeneous).
+#[test]
+fn prop_svid_scale_covariance() {
+    for_cases(15, |rng| {
+        let r = rand_dims(rng, 1, 12);
+        let m = rand_dims(rng, r, 48);
+        let n = rand_dims(rng, r, 48);
+        let u = Mat::gaussian(m, r, rng);
+        let v = Mat::gaussian(n, r, rng);
+        let c = 0.25 + 4.0 * rng.uniform_f32();
+        let base = dual_svid(&u, &v).reconstruct();
+        let scaled = dual_svid(&u.scale(c), &v.scale(c)).reconstruct();
+        let want = base.scale(c * c);
+        assert!(
+            scaled.fro_dist2(&want) / want.fro_norm().powi(2).max(1e-12) < 1e-3,
+            "c={c}"
+        );
+    });
+}
+
+/// Compression never exceeds its bit budget when the budget is feasible,
+/// and higher budgets never hurt reconstruction (monotonicity).
+#[test]
+fn prop_budget_respected_and_monotone() {
+    for_cases(6, |rng| {
+        let size = 192 + 32 * rng.below(3) as usize;
+        let gamma = 0.2 + 0.3 * rng.uniform();
+        let spec = SynthSpec { rows: size, cols: size, gamma, coherence: 0.6, scale: 1.0 };
+        let w = synth_weight(&spec, rng);
+        let mut prev_mse = f64::INFINITY;
+        for bpp in [0.55, 1.0, 1.5] {
+            let cfg = CompressionConfig {
+                bpp,
+                strategy: InitStrategy::JointItq { iters: 15 },
+                residual: true,
+                ..Default::default()
+            };
+            let mut crng = Pcg64::seed(17);
+            let c = compress(&w, &cfg, &mut crng);
+            let actual = c.storage_bits() as f64 / (size * size) as f64;
+            assert!(actual <= bpp + 1e-9, "bpp {actual} > {bpp}");
+            let mse = c.reconstruct().mse(&w);
+            assert!(
+                mse <= prev_mse * 1.05,
+                "budget up, error up: {mse} after {prev_mse} at {bpp}"
+            );
+            prev_mse = mse;
+        }
+    });
+}
+
+/// The L1/L2-norm duality behind Lemma 4.2: ‖u‖₁ ≤ √r·‖u‖₂ with equality
+/// iff |u| is constant — checked on random and constant vectors.
+#[test]
+fn prop_norm_duality() {
+    for_cases(40, |rng| {
+        let r = rand_dims(rng, 1, 256);
+        let mut u = vec![0.0f32; r];
+        rng.fill_normal(&mut u);
+        assert!(norm1(&u) <= (r as f64).sqrt() * norm2(&u) + 1e-6);
+        let c = vec![0.7f32; r];
+        let gap = (r as f64).sqrt() * norm2(&c) - norm1(&c);
+        assert!(gap.abs() < 1e-3, "equality case violated: {gap}");
+    });
+}
+
+/// SVD reconstruction error never exceeds the spectrum's tail energy by
+/// more than oversampling slack (randomized SVD near-optimality).
+#[test]
+fn prop_randomized_svd_near_optimal() {
+    for_cases(8, |rng| {
+        let n = 96;
+        let gamma = 0.3 + 0.5 * rng.uniform();
+        let spec = SynthSpec { rows: n, cols: n, gamma, coherence: 0.4, scale: 1.0 };
+        let w = synth_weight(&spec, rng);
+        let r = 8 + rng.below(17) as usize;
+        let svd = svd_randomized(&w, r, 10, 3, rng);
+        let err = svd.reconstruct().fro_dist2(&w);
+        let s_full = svd_randomized(&w, n, 8, 3, rng).s;
+        let opt: f64 = s_full[r..].iter().map(|&x| (x as f64).powi(2)).sum();
+        assert!(err <= opt * 1.5 + 1e-9, "err={err} opt={opt} r={r}");
+    });
+}

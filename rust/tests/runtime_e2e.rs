@@ -1,0 +1,139 @@
+//! Runtime end-to-end tests: load the AOT artifacts through PJRT and drive
+//! real train/eval steps — the full L1+L2+L3 composition.
+//!
+//! These tests require `make artifacts` to have produced `artifacts/`
+//! (the Makefile's `test` target guarantees it); they are skipped with a
+//! notice when the directory is absent so bare `cargo test` still passes
+//! in a fresh checkout.
+
+use littlebit2::coordinator::{QatDriver, StudentVariant};
+use littlebit2::runtime::{lit, Runtime};
+
+fn artifacts_dir() -> Option<&'static str> {
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        Some("artifacts")
+    } else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn manifest_loads_and_describes_artifacts() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(dir).expect("runtime");
+    let m = rt.manifest().expect("manifest");
+    for name in [
+        "teacher_train_step",
+        "student_train_step",
+        "student_fp_train_step",
+        "teacher_eval",
+        "student_eval",
+        "student_fp_eval",
+        "student_infer",
+        "littlebit_layer",
+    ] {
+        assert!(m.artifacts.contains_key(name), "missing artifact {name}");
+    }
+    assert!(m.config.vocab > 0 && m.config.d_model > 0);
+    assert_eq!(m.teacher_spec.first().map(|(n, _)| n.as_str()), Some("embed"));
+}
+
+#[test]
+fn littlebit_layer_artifact_matches_rust_packed_forward() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(dir).expect("runtime");
+    let m = rt.manifest().expect("manifest");
+    let info = &m.artifacts["littlebit_layer"];
+    // Shapes: x [b, d_in], u_b [d_out, r], v_b [d_in, r], h, l, g.
+    let shapes: Vec<Vec<usize>> = info.input_shapes.iter().map(|(_, s)| s.clone()).collect();
+    let (b, d_in) = (shapes[0][0], shapes[0][1]);
+    let (d_out, r) = (shapes[1][0], shapes[1][1]);
+
+    use littlebit2::linalg::Mat;
+    use littlebit2::packing::TriScaleLayer;
+    use littlebit2::rng::Pcg64;
+    let mut rng = Pcg64::seed(99);
+    let x = Mat::gaussian(b, d_in, &mut rng);
+    let ub = Mat::gaussian(d_out, r, &mut rng).signum();
+    let vb = Mat::gaussian(d_in, r, &mut rng).signum();
+    let mut h = vec![0.0f32; d_out];
+    let mut l = vec![0.0f32; r];
+    let mut g = vec![0.0f32; d_in];
+    rng.fill_uniform(&mut h, 0.5, 1.5);
+    rng.fill_uniform(&mut l, 0.1, 1.0);
+    rng.fill_uniform(&mut g, 0.5, 1.5);
+
+    let exe = rt.load_checked("littlebit_layer").expect("compile");
+    let inputs = vec![
+        lit::array_f32(x.as_slice(), &[b, d_in]).unwrap(),
+        lit::array_f32(ub.as_slice(), &[d_out, r]).unwrap(),
+        lit::array_f32(vb.as_slice(), &[d_in, r]).unwrap(),
+        lit::array_f32(&h, &[d_out]).unwrap(),
+        lit::array_f32(&l, &[r]).unwrap(),
+        lit::array_f32(&g, &[d_in]).unwrap(),
+    ];
+    let out = exe.run(&inputs).expect("execute");
+    let y = lit::to_vec_f32(&out[0]).expect("f32 output");
+    assert_eq!(y.len(), b * d_out);
+
+    // Rust packed path must agree with the Pallas-lowered HLO.
+    let layer = TriScaleLayer::new(&ub, &vb, h, l, g);
+    for i in 0..b {
+        let want = layer.forward(x.row(i));
+        for (j, w) in want.iter().enumerate() {
+            let got = y[i * d_out + j];
+            assert!(
+                (got - w).abs() < 1e-2 * w.abs().max(1.0),
+                "({i},{j}): hlo {got} vs rust {w}"
+            );
+        }
+    }
+}
+
+#[test]
+fn teacher_step_decreases_loss_through_pjrt() {
+    let Some(dir) = artifacts_dir() else { return };
+    let driver = QatDriver::new(dir, 555).expect("driver");
+    let (_params, losses) = driver
+        .train_teacher(6, 3e-3, |_, _| {})
+        .expect("teacher steps");
+    assert_eq!(losses.len(), 6);
+    assert!(
+        losses[5] < losses[0],
+        "loss did not decrease: {losses:?}"
+    );
+    assert!(losses.iter().all(|l| l.is_finite()));
+}
+
+#[test]
+fn student_qakd_step_runs_through_pjrt() {
+    let Some(dir) = artifacts_dir() else { return };
+    let driver = QatDriver::new(dir, 556).expect("driver");
+    let (teacher, _) = driver.train_teacher(3, 3e-3, |_, _| {}).expect("teacher");
+    let outcome = driver
+        .train_student(
+            &teacher,
+            StudentVariant::LittleBit2 { itq_iters: 10 },
+            4,
+            1e-3,
+            |_, _, _| {},
+        )
+        .expect("student steps");
+    assert_eq!(outcome.trace.losses.len(), 4);
+    assert!(outcome.trace.losses.iter().all(|l| l.is_finite()));
+    assert!(outcome.final_eval_ce.is_finite());
+    // Some sign movement should occur in early QAT.
+    assert!(outcome.trace.flip_ratio.iter().any(|&f| f > 0.0));
+}
+
+#[test]
+fn fp_student_variant_runs_through_pjrt() {
+    let Some(dir) = artifacts_dir() else { return };
+    let driver = QatDriver::new(dir, 557).expect("driver");
+    let (teacher, _) = driver.train_teacher(2, 3e-3, |_, _| {}).expect("teacher");
+    let outcome = driver
+        .train_student(&teacher, StudentVariant::TinyRankFp, 2, 1e-3, |_, _, _| {})
+        .expect("fp student");
+    assert!(outcome.final_eval_ce.is_finite());
+}
