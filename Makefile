@@ -1,0 +1,21 @@
+# LittleBit-2 build entry points. `build`/`test`/`bench` are pure-rust and
+# offline; `artifacts` lowers the L2/L1 JAX+Pallas graph to HLO text (needs
+# a JAX environment) and is only required for the PJRT-gated paths
+# (`--features xla`): the train CLI, examples/e2e_qat, tests/runtime_e2e.
+
+.PHONY: build test bench artifacts doc
+
+build:
+	cargo build --release
+
+test: build
+	cargo test -q
+
+bench:
+	cargo bench
+
+doc:
+	cargo doc --no-deps
+
+artifacts:
+	cd python/compile && python3 aot.py --out-dir ../../artifacts

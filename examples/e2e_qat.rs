@@ -1,4 +1,4 @@
-//! END-TO-END DRIVER (the DESIGN.md §validation run): train an FP teacher
+//! END-TO-END DRIVER (the ARCHITECTURE.md validation run): train an FP teacher
 //! transformer from scratch on the synthetic corpus, compress it into each
 //! student variant with rust-native SVD→(rotation|Joint-ITQ)→Dual-SVID,
 //! run QAKD through the AOT-compiled train-step artifacts via PJRT, and

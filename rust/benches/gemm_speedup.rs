@@ -1,0 +1,99 @@
+//! §6.2 at batch > 1 — the speedup-vs-batch curve of the batched
+//! MatMul-free engine.
+//!
+//! Sweeps batch size {1, 8, 32, 128} on the MLP-shaped layer and reports
+//! rows/s (batch items per second) for four executions of the SAME packed
+//! weights: dense f32 GEMV per item (the cuBLAS stand-in), packed tri-scale
+//! GEMV per item, the batched sign-GEMM ([`gemm_sign`]-based
+//! `forward_batch`), and the row-parallel sign-GEMM (`forward_batch_mt` at
+//! the machine's thread count). The point of the curve: per-item GEMV is
+//! flat in batch size, while the GEMM path amortizes each 64-bit sign-word
+//! load over 8 batch columns — rows/s at batch 32 should sit well above
+//! the batch-1 GEMV rate. Methodology in EXPERIMENTS.md.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::time_ms;
+use littlebit2::linalg::Mat;
+use littlebit2::littlebit::{compress, CompressionConfig, InitStrategy};
+use littlebit2::packing::{gemv_dense, Scratch};
+use littlebit2::rng::Pcg64;
+use littlebit2::spectral::{synth_weight, SynthSpec};
+
+fn main() {
+    // MLP-shaped layer (d_ff×d_model ratio of Llama-2).
+    let (d_out, d_in) = if common::full_scale() { (11008, 4096) } else { (2752, 1024) };
+    let bpp = 0.55;
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("# §6.2 batched: dense vs packed GEMV vs sign-GEMM, {d_out}x{d_in} at {bpp} bpp, {threads} threads");
+
+    let mut rng = Pcg64::seed(62);
+    let spec = SynthSpec { rows: d_out, cols: d_in, gamma: 0.3, coherence: 0.6, scale: 1.0 };
+    let w = synth_weight(&spec, &mut rng);
+    let cfg = CompressionConfig {
+        bpp,
+        strategy: InitStrategy::JointItq { iters: 20 },
+        residual: true,
+        ..Default::default()
+    };
+    let mut crng = Pcg64::seed(63);
+    let packed = compress(&w, &cfg, &mut crng).pack();
+
+    println!("ROW: batch dense_rows_s gemv_rows_s gemm_rows_s gemm_mt_rows_s gemm_vs_gemv1");
+    let mut gemv_rate_b1 = 0.0f64;
+    for &b in &[1usize, 8, 32, 128] {
+        // Feature-major activation block (column t = item t) + per-item views.
+        let mut xblock = Mat::zeros(d_in, b);
+        rng.fill_normal(xblock.as_mut_slice());
+        let items: Vec<Vec<f32>> = (0..b).map(|t| xblock.col(t)).collect();
+        let reps = (256 / b).max(3);
+
+        // Dense f32 GEMV, one pass per item.
+        let mut y = vec![0.0f32; d_out];
+        let (dense_ms, _) = time_ms(reps, || {
+            for x in &items {
+                gemv_dense(&w, x, &mut y);
+            }
+            std::hint::black_box(&y);
+        });
+
+        // Packed tri-scale GEMV, one pass per item (scratch reused).
+        let mut scratch = Scratch::default();
+        let mut out = vec![0.0f32; d_out];
+        let (gemv_ms, _) = time_ms(reps, || {
+            for x in &items {
+                packed.forward_into(x, &mut out, &mut scratch);
+            }
+            std::hint::black_box(&out);
+        });
+
+        // Batched sign-GEMM: the whole block in one forward.
+        let (gemm_ms, _) = time_ms(reps, || {
+            std::hint::black_box(packed.forward_batch(&xblock));
+        });
+
+        // Row-parallel batched sign-GEMM.
+        let (gemm_mt_ms, _) = time_ms(reps, || {
+            std::hint::black_box(packed.forward_batch_mt(&xblock, threads));
+        });
+
+        let rate = |ms: f64| b as f64 / (ms / 1e3);
+        if b == 1 {
+            gemv_rate_b1 = rate(gemv_ms);
+        }
+        println!(
+            "ROW: {b} {:.0} {:.0} {:.0} {:.0} {:.2}",
+            rate(dense_ms),
+            rate(gemv_ms),
+            rate(gemm_ms),
+            rate(gemm_mt_ms),
+            rate(gemm_ms) / gemv_rate_b1
+        );
+    }
+    let (adds, mults) = packed.op_counts();
+    println!(
+        "# per-item ops: {adds} sign-adds + {mults} fp-mults vs {} dense fp-MACs; gemm loads each sign word once per 8 batch columns",
+        d_out * d_in
+    );
+}

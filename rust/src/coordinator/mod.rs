@@ -8,15 +8,27 @@
 //! and the CLI. All numerics (SVD → rotation → Joint-ITQ → Dual-SVID) run
 //! natively in rust (`littlebit::compress`) — the student initialization
 //! pipeline needs no Python at run time.
+//!
+//! Serving runs each drained dynamic batch as **one matrix** through a
+//! [`BatchBackend`] on a configurable multi-worker pool
+//! ([`ServerConfig::workers`]), reporting tokens/s next to the latency
+//! percentiles. The QAKD trainer requires the PJRT runtime and is
+//! compile-gated behind the `xla` cargo feature (absent in the offline
+//! build image).
 
 mod jobs;
 mod metrics;
 mod params;
 mod server;
+#[cfg(feature = "xla")]
 mod trainer;
 
 pub use jobs::{run_compression_jobs, CompressionJob, JobResult};
 pub use metrics::Metrics;
 pub use params::ParamStore;
-pub use server::{InferenceServer, Request, Response, ServerStats};
+pub use server::{
+    BatchBackend, InferenceServer, PackedResidualBackend, Request, Response, ServerConfig,
+    ServerStats,
+};
+#[cfg(feature = "xla")]
 pub use trainer::{QakdOutcome, QatDriver, StudentVariant, TrainTrace};

@@ -9,6 +9,7 @@
 use crate::linalg::Mat;
 use crate::littlebit::{compress_single, CompressionConfig, InitStrategy};
 use crate::rng::Pcg64;
+#[cfg(feature = "xla")]
 use crate::runtime::lit;
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
@@ -52,6 +53,7 @@ impl ParamStore {
     }
 
     /// Convert every tensor to a literal, in spec order.
+    #[cfg(feature = "xla")]
     pub fn to_literals(&self) -> Result<Vec<xla::Literal>> {
         self.spec
             .iter()
@@ -61,6 +63,7 @@ impl ParamStore {
     }
 
     /// Replace values from a slice of literals (artifact outputs).
+    #[cfg(feature = "xla")]
     pub fn update_from_literals(&mut self, lits: &[xla::Literal]) -> Result<()> {
         anyhow::ensure!(lits.len() == self.values.len(), "literal count mismatch");
         for (v, l) in self.values.iter_mut().zip(lits) {

@@ -5,9 +5,11 @@
 //! 2026) as a three-layer rust + JAX + Pallas stack:
 //!
 //! * **L3 (this crate)** — compression coordinator, QAT training driver,
-//!   evaluation/serving loop, and the complete numerics substrate (SVD, QR,
+//!   the batched multi-worker serving loop (dynamic batching onto the
+//!   sign-GEMM kernels), and the complete numerics substrate (SVD, QR,
 //!   Joint-ITQ, all quantization baselines, the spectral break-even theory,
-//!   bit-packed MatMul-free inference kernels, memory accounting).
+//!   bit-packed MatMul-free inference kernels — GEMV and batched GEMM —
+//!   memory accounting).
 //! * **L2 (`python/compile/model.py`)** — JAX transformer with LittleBit
 //!   tri-scale linear layers, AOT-lowered to HLO text at build time.
 //! * **L1 (`python/compile/kernels/`)** — Pallas kernels for the fused
@@ -35,7 +37,15 @@
 //! };
 //! let compressed = compress(&w, &cfg, &mut rng);
 //! println!("MSE = {:.3e}", compressed.reconstruct().mse(&w));
+//! // Deployment: pack once, then serve single requests or whole batches.
+//! let packed = compressed.pack();
+//! let y = packed.forward(&vec![0.0; 512]);
+//! assert_eq!(y.len(), 512);
 //! ```
+//!
+//! See README.md for the repository tour, ARCHITECTURE.md for the module
+//! map and layer contract, and EXPERIMENTS.md for measured results and the
+//! bench methodology.
 
 pub mod coordinator;
 pub mod data;

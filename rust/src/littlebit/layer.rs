@@ -2,7 +2,7 @@
 //! (App. G), plus packed deployment via `packing::TriScaleLayer`.
 
 use crate::linalg::{f16_round, Mat};
-use crate::packing::TriScaleLayer;
+use crate::packing::{PackedResidual, TriScaleLayer};
 use crate::quant::row_distortions;
 
 /// Raw Dual-SVID output for one path:
@@ -129,16 +129,26 @@ impl ResidualCompressed {
         self.storage_bits() as f64 / (f.d_out() * f.d_in()) as f64
     }
 
+    /// Pack every path into the bit-level inference composition — the
+    /// deployment step. Serving code calls this once at load time and then
+    /// drives the returned [`PackedResidual`] directly.
+    pub fn pack(&self) -> PackedResidual {
+        PackedResidual::new(self.paths.iter().map(|p| p.pack()).collect())
+    }
+
     /// Forward pass through all packed paths (sum of path outputs).
+    /// Packs on every call — convenience for tests/oracles; hot paths use
+    /// [`pack`](Self::pack) once and reuse the result.
     pub fn forward_packed(&self, x: &[f32]) -> Vec<f32> {
-        let layers: Vec<TriScaleLayer> = self.paths.iter().map(|p| p.pack()).collect();
-        let mut out = layers[0].forward(x);
-        for layer in &layers[1..] {
-            for (o, v) in out.iter_mut().zip(layer.forward(x)) {
-                *o += v;
-            }
-        }
-        out
+        self.pack().forward(x)
+    }
+
+    /// Batched forward through all packed paths: `X` is `d_in × b`
+    /// feature-major (column `t` is batch item `t`). Packs on every call —
+    /// hot paths use [`pack`](Self::pack) once and call
+    /// `PackedResidual::forward_batch` on the result.
+    pub fn forward_packed_batch(&self, x: &Mat) -> Mat {
+        self.pack().forward_batch(x)
     }
 }
 
@@ -189,6 +199,25 @@ mod tests {
         let got = rc.forward_packed(&x);
         for (p, q) in want.iter().zip(&got) {
             assert!((p - q).abs() < 4e-3, "{p} vs {q}");
+        }
+    }
+
+    #[test]
+    fn residual_batched_forward_matches_per_item() {
+        let a = CompressedLinear::from_factors(sample_factors(9));
+        let b = CompressedLinear::from_factors(sample_factors(10));
+        let rc = ResidualCompressed::new(vec![a, b]);
+        let mut rng = Pcg64::seed(11);
+        let batch = 5;
+        let mut x = Mat::zeros(40, batch);
+        rng.fill_normal(x.as_mut_slice());
+        let batched = rc.forward_packed_batch(&x);
+        assert_eq!(batched.shape(), (48, batch));
+        for t in 0..batch {
+            let want = rc.forward_packed(&x.col(t));
+            for i in 0..48 {
+                assert_eq!(batched.at(i, t).to_bits(), want[i].to_bits(), "({i},{t})");
+            }
         }
     }
 

@@ -14,6 +14,7 @@
 //! ```
 
 use anyhow::{bail, Result};
+#[cfg(feature = "xla")]
 use littlebit2::coordinator::{QatDriver, StudentVariant};
 use littlebit2::littlebit::{compress, CompressionConfig, InitStrategy};
 use littlebit2::memory::{model_memory, MethodKind};
@@ -265,7 +266,15 @@ fn cmd_compress(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The e2e QAKD driver needs the PJRT runtime (`xla` crate), which the
+/// offline build image cannot provide — see ARCHITECTURE.md.
+#[cfg(not(feature = "xla"))]
+fn cmd_train(_args: &Args) -> Result<()> {
+    bail!("the `train` subcommand executes AOT artifacts through PJRT; rebuild with `--features xla` (requires vendoring the xla crate, see ARCHITECTURE.md)")
+}
+
 /// The e2e QAKD driver (quick path; `examples/e2e_qat.rs` is the recorded run).
+#[cfg(feature = "xla")]
 fn cmd_train(args: &Args) -> Result<()> {
     let artifacts = args.get("artifacts", "artifacts");
     let teacher_steps = args.get_usize("teacher-steps", 100)?;

@@ -5,9 +5,14 @@
 //! reproduces Table 1's Mem columns exactly. The [`zoo`] submodule fabricates
 //! synthetic per-layer weights whose spectral statistics match the paper's
 //! Fig. 11/12 measurements — the checkpoint substitute for every
-//! fidelity experiment.
+//! fidelity experiment. The [`stack`] submodule chains the packed layers
+//! into a batched sequential model ([`PackedStack`]) so whole request
+//! batches flow through every layer without per-request dispatch.
 
+pub mod stack;
 pub mod zoo;
+
+pub use stack::PackedStack;
 
 /// One linear projection inside a transformer block.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

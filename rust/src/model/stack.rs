@@ -1,0 +1,188 @@
+//! Sequential packed-model execution: a chain of compressed linear layers
+//! run end to end on a whole batch.
+//!
+//! The serving story of §6.2 needs more than one layer: a request flows
+//! through every projection of the model without per-request dispatch in
+//! between. [`PackedStack`] holds the packed residual composition of each
+//! layer and keeps activations **feature-major** (`d × b`, column `t` is
+//! request `t`) across the entire chain, so each layer is exactly one
+//! batched sign-GEMM pipeline and the batch never deinterleaves.
+
+use crate::linalg::Mat;
+use crate::littlebit::{compress, CompressionConfig};
+use crate::packing::{PackedResidual, Scratch};
+use crate::rng::Pcg64;
+
+/// A chain of packed layers with matching inner dimensions
+/// (`layer[k].d_out() == layer[k+1].d_in()`).
+#[derive(Clone, Debug)]
+pub struct PackedStack {
+    layers: Vec<PackedResidual>,
+}
+
+impl PackedStack {
+    /// Compose packed layers; panics if the chain dimensions don't line up.
+    pub fn new(layers: Vec<PackedResidual>) -> Self {
+        assert!(!layers.is_empty(), "at least one layer");
+        for k in 1..layers.len() {
+            assert_eq!(
+                layers[k - 1].d_out(),
+                layers[k].d_in(),
+                "chain mismatch between layer {} and {}",
+                k - 1,
+                k
+            );
+        }
+        Self { layers }
+    }
+
+    /// Compress each weight of a chain at the given config and pack the
+    /// results — the one-call path from a dense model to a deployable
+    /// batched stack.
+    pub fn compress_chain(weights: &[Mat], cfg: &CompressionConfig, rng: &mut Pcg64) -> Self {
+        Self::new(weights.iter().map(|w| compress(w, cfg, rng).pack()).collect())
+    }
+
+    pub fn depth(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn d_in(&self) -> usize {
+        self.layers[0].d_in()
+    }
+
+    pub fn d_out(&self) -> usize {
+        self.layers[self.layers.len() - 1].d_out()
+    }
+
+    pub fn layers(&self) -> &[PackedResidual] {
+        &self.layers
+    }
+
+    /// Total weight-storage bytes across the chain.
+    pub fn storage_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.storage_bytes()).sum()
+    }
+
+    /// Single-request forward through the whole chain.
+    pub fn forward(&self, x: &[f32]) -> Vec<f32> {
+        let mut scratch = Scratch::default();
+        let mut cur = x.to_vec();
+        for layer in &self.layers {
+            let mut next = vec![0.0f32; layer.d_out()];
+            layer.forward_into(&cur, &mut next, &mut scratch);
+            cur = next;
+        }
+        cur
+    }
+
+    /// Batched forward: `X` is `d_in × b` feature-major; returns
+    /// `d_out × b`. The batch stays interleaved through every layer —
+    /// one sign-GEMM pipeline per layer, no per-request dispatch.
+    pub fn forward_batch(&self, x: &Mat) -> Mat {
+        self.forward_batch_mt(x, 1)
+    }
+
+    /// [`forward_batch`](Self::forward_batch) with each layer's sign-GEMMs
+    /// split over `threads` OS threads.
+    pub fn forward_batch_mt(&self, x: &Mat, threads: usize) -> Mat {
+        let mut cur = self.layers[0].forward_batch_mt(x, threads);
+        for layer in &self.layers[1..] {
+            cur = layer.forward_batch_mt(&cur, threads);
+        }
+        cur
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::littlebit::InitStrategy;
+    use crate::spectral::{synth_weight, SynthSpec};
+
+    fn chain_weights(dims: &[usize], rng: &mut Pcg64) -> Vec<Mat> {
+        dims.windows(2)
+            .map(|w| {
+                let spec = SynthSpec {
+                    rows: w[1],
+                    cols: w[0],
+                    gamma: 0.3,
+                    coherence: 0.6,
+                    scale: 1.0,
+                };
+                synth_weight(&spec, rng)
+            })
+            .collect()
+    }
+
+    fn quick_cfg() -> CompressionConfig {
+        CompressionConfig {
+            bpp: 1.0,
+            strategy: InitStrategy::JointItq { iters: 10 },
+            residual: true,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn batched_chain_matches_per_item_bit_exactly() {
+        let mut rng = Pcg64::seed(41);
+        let weights = chain_weights(&[48, 96, 48], &mut rng);
+        let stack = PackedStack::compress_chain(&weights, &quick_cfg(), &mut rng);
+        assert_eq!(stack.depth(), 2);
+        assert_eq!((stack.d_in(), stack.d_out()), (48, 48));
+
+        let b = 7;
+        let mut x = Mat::zeros(48, b);
+        rng.fill_normal(x.as_mut_slice());
+        let batched = stack.forward_batch(&x);
+        let threaded = stack.forward_batch_mt(&x, 3);
+        assert_eq!(batched, threaded);
+        for t in 0..b {
+            let want = stack.forward(&x.col(t));
+            for i in 0..48 {
+                assert_eq!(batched.at(i, t).to_bits(), want[i].to_bits(), "({i},{t})");
+            }
+        }
+    }
+
+    #[test]
+    fn chain_tracks_dense_composition() {
+        let mut rng = Pcg64::seed(42);
+        let weights = chain_weights(&[40, 80, 40], &mut rng);
+        let mut crng = Pcg64::seed(43);
+        // Reconstruct the same compressed layers the stack packs, so the
+        // comparison isolates the packed execution (not compression error).
+        let recons: Vec<Mat> = weights
+            .iter()
+            .map(|w| compress(w, &quick_cfg(), &mut crng).reconstruct())
+            .collect();
+        let mut srng = Pcg64::seed(43);
+        let stack = PackedStack::compress_chain(&weights, &quick_cfg(), &mut srng);
+
+        let mut x = vec![0.0f32; 40];
+        rng.fill_normal(&mut x);
+        let mut want = x.clone();
+        for r in &recons {
+            want = r.matvec(&want);
+        }
+        let got = stack.forward(&x);
+        for (a, b) in want.iter().zip(&got) {
+            // Two layers of f32 sign-GEMV vs dense matvec: loose bound.
+            let tol = 1e-2 * a.abs().max(1.0);
+            assert!((a - b).abs() < tol, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "chain mismatch")]
+    fn dimension_mismatch_rejected() {
+        let mut rng = Pcg64::seed(44);
+        let a = chain_weights(&[32, 64], &mut rng);
+        let b = chain_weights(&[48, 32], &mut rng);
+        let cfg = quick_cfg();
+        let la = compress(&a[0], &cfg, &mut rng).pack();
+        let lb = compress(&b[0], &cfg, &mut rng).pack();
+        let _ = PackedStack::new(vec![la, lb]);
+    }
+}

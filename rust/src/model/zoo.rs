@@ -67,6 +67,28 @@ pub fn fabricate(
     layers
 }
 
+/// Fabricate one SwiGLU FFN as a *chainable* weight pair
+/// `(up: d_ff×d_model, down: d_model×d_ff)` at the Fig. 12 γ profile of the
+/// respective projections — the minimal zoo unit whose layers compose, used
+/// to exercise the batched `model::PackedStack` path on weights with
+/// paper-faithful spectra.
+pub fn fabricate_ffn_chain(arch: &ArchSpec, shrink: usize, seed: u64) -> Vec<Mat> {
+    let mut rng = Pcg64::seed(seed);
+    [Proj::Up, Proj::Down]
+        .into_iter()
+        .map(|proj| {
+            let (d_out, d_in) = arch.proj_shape(proj);
+            let rows = (d_out / shrink).max(32);
+            let cols = (d_in / shrink).max(32);
+            let (mu, sd) = gamma_profile(proj);
+            let gamma = (mu + sd * rng.normal()).clamp(0.12, 0.8);
+            let coherence = 0.55 + 0.3 * rng.uniform();
+            let spec = SynthSpec { rows, cols, gamma, coherence, scale: 0.02 };
+            synth_weight(&spec, &mut rng)
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -108,6 +130,17 @@ mod tests {
             layer.gamma,
             fit.gamma
         );
+    }
+
+    #[test]
+    fn ffn_chain_dims_compose() {
+        let arch = ArchSpec::llama2_7b();
+        let chain = fabricate_ffn_chain(&arch, 32, 5);
+        assert_eq!(chain.len(), 2);
+        // up: d_ff×d_model, down: d_model×d_ff — chainable in sequence.
+        assert_eq!(chain[0].cols(), 128); // d_model / 32
+        assert_eq!(chain[0].rows(), chain[1].cols()); // d_ff / 32
+        assert_eq!(chain[1].rows(), 128);
     }
 
     #[test]

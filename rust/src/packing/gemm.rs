@@ -1,0 +1,269 @@
+//! Batched sign-GEMM: the bit-packed MatMul-free kernel at batch > 1.
+//!
+//! [`gemv_sign`](super::gemv_sign) streams every 64-bit sign word of `S`
+//! once *per request*; at batch `b` that is `b` full passes over the packed
+//! weights. [`gemm_sign`] instead multiplies `S ∈ {±1}^{m×n}` against an
+//! activation *block* `X ∈ R^{n×b}` (feature-major: column `t` is request
+//! `t`), register-blocking over the batch dimension so each sign word is
+//! loaded once per strip of 8 batch columns — weight traffic drops by the
+//! strip width, which is what makes dynamic batching pay off on this
+//! kernel (the "MatMul-free at batch size" story of §6.2).
+//!
+//! Per batch column the reduction runs on the same eight accumulators in
+//! the same order as `gemv_sign`, so `gemm_sign` is **bit-exact** against
+//! column-by-column GEMV — asserted by `gemm_matches_gemv_bit_exactly`
+//! below and relied on by the serving tests.
+//!
+//! `*_mt` variants split output rows across `threads` std threads
+//! (`std::thread::scope`; no external runtime). Row partitioning does not
+//! change any per-row reduction order, so threaded results are bit-exact
+//! against the serial kernels, too.
+
+use super::gemv::gemv_sign_rows;
+use super::BitMatrix;
+use crate::linalg::Mat;
+
+/// Batch columns processed per sign-word load. Eight f32 lanes × eight
+/// reduction accumulators = 64 live scalars — two AVX2 register files'
+/// worth, which the compiler keeps in registers on x86-64 and aarch64.
+const COL_STRIP: usize = 8;
+
+/// Sign-GEMM: `Y = S X` with `S ∈ {±1}^{m×n}` bit-packed, `X` feature-major
+/// `n×b` (column `t` is batch item `t`), `Y` preallocated `m×b`.
+///
+/// Bit-exact against [`gemv_sign`](super::gemv_sign) applied column by
+/// column, at a fraction of the weight traffic.
+///
+/// # Examples
+///
+/// ```
+/// use littlebit2::linalg::Mat;
+/// use littlebit2::packing::{gemm_sign, BitMatrix};
+///
+/// // All-(+1) signs: each output is the column sum of X.
+/// let s = BitMatrix::ones(2, 3);
+/// // X is 3×2 feature-major: batch item 0 = [1, 2, 3], item 1 = [4, 5, 6].
+/// let x = Mat::from_vec(3, 2, vec![1.0, 4.0, 2.0, 5.0, 3.0, 6.0]);
+/// let mut y = Mat::zeros(2, 2);
+/// gemm_sign(&s, &x, &mut y);
+/// assert_eq!(y.row(0), &[6.0, 15.0]);
+/// assert_eq!(y.row(1), &[6.0, 15.0]);
+/// ```
+pub fn gemm_sign(s: &BitMatrix, x: &Mat, y: &mut Mat) {
+    assert_eq!(s.cols(), x.rows(), "inner dims: S is m×n, X is n×b");
+    assert_eq!(s.rows(), y.rows(), "output rows");
+    assert_eq!(x.cols(), y.cols(), "batch width");
+    let b = x.cols();
+    if b == 0 || s.rows() == 0 {
+        return;
+    }
+    gemm_sign_rows(s, x, y.as_mut_slice(), 0);
+}
+
+/// Row-parallel sign-GEMM: identical output to [`gemm_sign`] (bit-exact;
+/// row partitioning changes no reduction order), with output rows split
+/// across `threads` OS threads. `threads <= 1` falls through to the serial
+/// kernel. This is the knob the batched serving pool turns — see
+/// `coordinator::ServerConfig`.
+pub fn gemm_sign_mt(s: &BitMatrix, x: &Mat, y: &mut Mat, threads: usize) {
+    assert_eq!(s.cols(), x.rows(), "inner dims: S is m×n, X is n×b");
+    assert_eq!(s.rows(), y.rows(), "output rows");
+    assert_eq!(x.cols(), y.cols(), "batch width");
+    let rows = s.rows();
+    let b = x.cols();
+    if b == 0 || rows == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(rows);
+    if threads == 1 {
+        gemm_sign_rows(s, x, y.as_mut_slice(), 0);
+        return;
+    }
+    let chunk = rows.div_ceil(threads);
+    let y_all = y.as_mut_slice();
+    std::thread::scope(|scope| {
+        for (ti, ys) in y_all.chunks_mut(chunk * b).enumerate() {
+            scope.spawn(move || gemm_sign_rows(s, x, ys, ti * chunk));
+        }
+    });
+}
+
+/// Compute output rows `row0..row0 + ys.len()/b` of `S X` into `ys`.
+///
+/// Per output element the reduction mirrors `gemv_sign` exactly: eight
+/// accumulators fed word-by-word, strip-by-strip, then summed in lane
+/// order — the source of the bit-exactness guarantee.
+fn gemm_sign_rows(s: &BitMatrix, x: &Mat, ys: &mut [f32], row0: usize) {
+    let b = x.cols();
+    let cols = s.cols();
+    let full_words = cols / 64;
+    let nrows = ys.len() / b;
+    for di in 0..nrows {
+        let words = s.row_words(row0 + di);
+        let yrow = &mut ys[di * b..(di + 1) * b];
+        let mut c0 = 0;
+        while c0 < b {
+            let cw = (b - c0).min(COL_STRIP);
+            // acc[k][t] is gemv_sign's acc[k], replicated per batch column
+            // t — the sign word is read once for all cw columns.
+            let mut acc = [[0.0f32; COL_STRIP]; 8];
+            for (c, &w) in words[..full_words].iter().enumerate() {
+                for strip in 0..8 {
+                    let bits = (w >> (strip * 8)) as u32;
+                    for k in 0..8 {
+                        let neg = ((bits >> k) & 1 ^ 1) << 31;
+                        let xrow = &x.row(c * 64 + strip * 8 + k)[c0..c0 + cw];
+                        let lane = &mut acc[k];
+                        for t in 0..cw {
+                            lane[t] += f32::from_bits(xrow[t].to_bits() ^ neg);
+                        }
+                    }
+                }
+            }
+            if full_words < words.len() {
+                let w = words[full_words];
+                for (k, j) in (full_words * 64..cols).enumerate() {
+                    let neg = (((w >> k) & 1) as u32 ^ 1) << 31;
+                    let xrow = &x.row(j)[c0..c0 + cw];
+                    let lane = &mut acc[k & 7];
+                    for t in 0..cw {
+                        lane[t] += f32::from_bits(xrow[t].to_bits() ^ neg);
+                    }
+                }
+            }
+            for t in 0..cw {
+                let mut sum = 0.0f32;
+                for lane in &acc {
+                    sum += lane[t];
+                }
+                yrow[c0 + t] = sum;
+            }
+            c0 += cw;
+        }
+    }
+}
+
+/// Row-parallel sign-GEMV: identical output to
+/// [`gemv_sign`](super::gemv_sign) (bit-exact), rows split across
+/// `threads` OS threads. The single-request analogue of [`gemm_sign_mt`].
+pub fn gemv_sign_mt(s: &BitMatrix, x: &[f32], y: &mut [f32], threads: usize) {
+    assert_eq!(s.cols(), x.len());
+    assert_eq!(s.rows(), y.len());
+    let rows = s.rows();
+    if rows == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(rows);
+    if threads == 1 {
+        gemv_sign_rows(s, x, y, 0);
+        return;
+    }
+    let chunk = rows.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for (ti, ys) in y.chunks_mut(chunk).enumerate() {
+            scope.spawn(move || gemv_sign_rows(s, x, ys, ti * chunk));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::packing::gemv_sign;
+    use crate::rng::Pcg64;
+
+    fn random_block(rows: usize, cols: usize, rng: &mut Pcg64) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        rng.fill_normal(m.as_mut_slice());
+        m
+    }
+
+    /// The acceptance contract: gemm_sign column t must equal gemv_sign on
+    /// column t of X, to exact bit equality (same accumulators, same
+    /// order).
+    #[test]
+    fn gemm_matches_gemv_bit_exactly() {
+        let mut rng = Pcg64::seed(21);
+        for (m, n, b) in [(4, 4, 1), (16, 64, 3), (33, 130, 8), (8, 200, 9), (7, 65, 32)] {
+            let s = BitMatrix::from_dense(&Mat::gaussian(m, n, &mut rng).signum());
+            let x = random_block(n, b, &mut rng);
+            let mut y = Mat::zeros(m, b);
+            gemm_sign(&s, &x, &mut y);
+            for t in 0..b {
+                let xt = x.col(t);
+                let mut want = vec![0.0f32; m];
+                gemv_sign(&s, &xt, &mut want);
+                for i in 0..m {
+                    assert_eq!(
+                        y.at(i, t).to_bits(),
+                        want[i].to_bits(),
+                        "{m}x{n} b={b}: ({i},{t}) {} vs {}",
+                        y.at(i, t),
+                        want[i]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_mt_matches_serial_bit_exactly() {
+        let mut rng = Pcg64::seed(22);
+        let (m, n, b) = (61, 130, 12);
+        let s = BitMatrix::from_dense(&Mat::gaussian(m, n, &mut rng).signum());
+        let x = random_block(n, b, &mut rng);
+        let mut serial = Mat::zeros(m, b);
+        gemm_sign(&s, &x, &mut serial);
+        for threads in [2, 3, 7, 64] {
+            let mut mt = Mat::zeros(m, b);
+            gemm_sign_mt(&s, &x, &mut mt, threads);
+            assert_eq!(serial, mt, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn gemv_mt_matches_serial_bit_exactly() {
+        let mut rng = Pcg64::seed(23);
+        let (m, n) = (77, 190);
+        let s = BitMatrix::from_dense(&Mat::gaussian(m, n, &mut rng).signum());
+        let mut x = vec![0.0f32; n];
+        rng.fill_normal(&mut x);
+        let mut serial = vec![0.0f32; m];
+        gemv_sign(&s, &x, &mut serial);
+        for threads in [2, 5, 128] {
+            let mut mt = vec![0.0f32; m];
+            gemv_sign_mt(&s, &x, &mut mt, threads);
+            for (a, c) in serial.iter().zip(&mt) {
+                assert_eq!(a.to_bits(), c.to_bits(), "threads={threads}");
+            }
+        }
+    }
+
+    /// Numeric check against the dense product (catches systematic sign
+    /// errors the bit-equality test cannot — both kernels could agree and
+    /// be wrong together).
+    #[test]
+    fn gemm_matches_dense_product() {
+        let mut rng = Pcg64::seed(24);
+        let (m, n, b) = (19, 70, 5);
+        let sd = Mat::gaussian(m, n, &mut rng).signum();
+        let s = BitMatrix::from_dense(&sd);
+        let x = random_block(n, b, &mut rng);
+        let want = sd.matmul(&x);
+        let mut got = Mat::zeros(m, b);
+        gemm_sign(&s, &x, &mut got);
+        for (a, c) in want.as_slice().iter().zip(got.as_slice()) {
+            assert!((a - c).abs() < 1e-3 * (n as f32).sqrt(), "{a} vs {c}");
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_a_no_op() {
+        let mut rng = Pcg64::seed(25);
+        let s = BitMatrix::from_dense(&Mat::gaussian(5, 9, &mut rng).signum());
+        let x = Mat::zeros(9, 0);
+        let mut y = Mat::zeros(5, 0);
+        gemm_sign(&s, &x, &mut y);
+        gemm_sign_mt(&s, &x, &mut y, 4);
+    }
+}

@@ -39,14 +39,24 @@ pub fn gemv_dense(w: &Mat, x: &[f32], y: &mut [f32]) {
 /// (`x ^ (bit̄ << 31)`) — no multiply — and the row reduction runs on eight
 /// independent accumulators so the FP-add chain never serializes (§Perf:
 /// this rewrite took the 2752×1024 MLP GEMV from 0.14× of dense to >1× at
-/// 1 bpp; see EXPERIMENTS.md).
+/// 1 bpp; measured in EXPERIMENTS.md at the repository root). For batch > 1
+/// use [`gemm_sign`](super::gemm_sign), which loads each sign word once per
+/// strip of batch columns and is bit-exact against this kernel.
 pub fn gemv_sign(s: &BitMatrix, x: &[f32], y: &mut [f32]) {
     assert_eq!(s.cols(), x.len());
     assert_eq!(s.rows(), y.len());
+    gemv_sign_rows(s, x, y, 0);
+}
+
+/// Compute output rows `row0..row0 + y.len()` of `S x` into `y` — the
+/// row-range core shared by [`gemv_sign`] and the threaded variant in
+/// `packing::gemm` (each thread takes a disjoint row range, so results are
+/// bit-identical to the serial kernel).
+pub(crate) fn gemv_sign_rows(s: &BitMatrix, x: &[f32], y: &mut [f32], row0: usize) {
     let cols = s.cols();
     let full_words = cols / 64;
     for (i, yi) in y.iter_mut().enumerate() {
-        let words = s.row_words(i);
+        let words = s.row_words(row0 + i);
         let mut acc = [0.0f32; 8];
         for (c, &w) in words[..full_words].iter().enumerate() {
             let xs = &x[c * 64..c * 64 + 64];
@@ -148,6 +158,52 @@ impl TriScaleLayer {
         for (v, &hi) in out.iter_mut().zip(&self.h) {
             *v *= hi;
         }
+    }
+
+    /// Batched forward: `X` is `d_in × b` **feature-major** (column `t` is
+    /// batch item `t`), returns `d_out × b`. Runs the whole batch through
+    /// two sign-GEMMs so every packed weight word is loaded once per
+    /// 8-column strip instead of once per request; column `t` of the result
+    /// is bit-identical to `forward` on item `t`.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use littlebit2::linalg::Mat;
+    /// use littlebit2::packing::TriScaleLayer;
+    ///
+    /// // All-(+1) factors with unit scales: W = U_b·V_bᵀ is all-ones 2×2.
+    /// let ones = Mat::from_fn(2, 1, |_, _| 1.0);
+    /// let layer = TriScaleLayer::new(&ones, &ones, vec![1.0; 2], vec![1.0], vec![1.0; 2]);
+    /// // Two batch items, feature-major: item 0 = [1, 2], item 1 = [3, 4].
+    /// let x = Mat::from_vec(2, 2, vec![1.0, 3.0, 2.0, 4.0]);
+    /// let y = layer.forward_batch(&x);
+    /// assert_eq!(y.row(0), &[3.0, 7.0]);
+    /// assert_eq!(y.row(1), &[3.0, 7.0]);
+    /// assert_eq!(y.col(0), layer.forward(&[1.0, 2.0]));
+    /// ```
+    pub fn forward_batch(&self, x: &Mat) -> Mat {
+        self.forward_batch_mt(x, 1)
+    }
+
+    /// [`forward_batch`](Self::forward_batch) with both sign-GEMMs split
+    /// row-parallel over `threads` OS threads (bit-identical output for any
+    /// thread count).
+    pub fn forward_batch_mt(&self, x: &Mat, threads: usize) -> Mat {
+        assert_eq!(x.rows(), self.d_in(), "X must be d_in × b feature-major");
+        let b = x.cols();
+        let xg = x.scale_rows(&self.g);
+        let mut latent = Mat::zeros(self.rank(), b);
+        super::gemm_sign_mt(&self.vbt, &xg, &mut latent, threads);
+        let latent = latent.scale_rows(&self.l);
+        let mut out = Mat::zeros(self.d_out(), b);
+        super::gemm_sign_mt(&self.ub, &latent, &mut out, threads);
+        for (i, &hi) in self.h.iter().enumerate() {
+            for v in out.row_mut(i) {
+                *v *= hi;
+            }
+        }
+        out
     }
 
     /// Accumulating forward: `out += layer(x)` — what the residual 2-path
@@ -275,6 +331,41 @@ mod tests {
         let bpp = layer.storage_bytes() as f64 * 8.0 / (d * d) as f64;
         // 2·r·d bits / d² + scales ⇒ ~0.125 bpp + ε at r=d/16.
         assert!(bpp < 0.2, "bpp={bpp}");
+    }
+
+    /// Batched forward must be bit-identical to the per-item forward: both
+    /// paths share the same per-column reduction order by construction.
+    #[test]
+    fn forward_batch_matches_per_item_forward_bit_exactly() {
+        let mut rng = Pcg64::seed(6);
+        let (d_out, d_in, r, b) = (96, 80, 16, 11);
+        let ub = Mat::gaussian(d_out, r, &mut rng).signum();
+        let vb = Mat::gaussian(d_in, r, &mut rng).signum();
+        let mut h = vec![0.0f32; d_out];
+        let mut l = vec![0.0f32; r];
+        let mut g = vec![0.0f32; d_in];
+        rng.fill_uniform(&mut h, 0.5, 1.5);
+        rng.fill_uniform(&mut l, 0.1, 1.0);
+        rng.fill_uniform(&mut g, 0.5, 1.5);
+        let layer = TriScaleLayer::new(&ub, &vb, h, l, g);
+
+        let mut x = Mat::zeros(d_in, b);
+        rng.fill_normal(x.as_mut_slice());
+        let batched = layer.forward_batch(&x);
+        let threaded = layer.forward_batch_mt(&x, 4);
+        assert_eq!(batched, threaded, "threading changed the result");
+        for t in 0..b {
+            let want = layer.forward(&x.col(t));
+            for i in 0..d_out {
+                assert_eq!(
+                    batched.at(i, t).to_bits(),
+                    want[i].to_bits(),
+                    "({i},{t}): {} vs {}",
+                    batched.at(i, t),
+                    want[i]
+                );
+            }
+        }
     }
 
     #[test]

@@ -18,14 +18,26 @@
 //! `64·w + j` (set bit ⇒ +1). Sign application in the GEMV is a single XOR
 //! on the IEEE sign bit; row reductions run on eight independent
 //! accumulators to keep the FP-add chain off the critical path (§Perf).
+//!
+//! At batch > 1 the same weights are driven through the batched sign-GEMM
+//! ([`gemm_sign`], `gemm` module): activations are handled as a feature-
+//! major `d × b` block and each packed sign word is loaded once per strip
+//! of 8 batch columns instead of once per request. Row-parallel `*_mt`
+//! variants split either kernel across OS threads; both batching and
+//! threading are bit-exact against the serial GEMV. [`PackedResidual`]
+//! composes the packed paths of one compressed layer for serving.
 
 mod bitmat;
+mod gemm;
 mod gemv;
+mod residual;
 
 pub use bitmat::BitMatrix;
+pub use gemm::{gemm_sign, gemm_sign_mt, gemv_sign_mt};
 pub use gemv::{
     gemv_dense, gemv_sign, tri_scale_gemv, xnor_popcount_gemm, Scratch, TriScaleLayer,
 };
+pub use residual::PackedResidual;
 
 #[cfg(test)]
 mod tests {

@@ -1,0 +1,153 @@
+//! The deployed residual composition: every packed path of one compressed
+//! linear layer, executed together (App. G's `Ŵ = Σ_p Ŵ_p` at the bit
+//! level). This is what the serving stack holds per layer — packing once at
+//! load time, then running single requests through the scratch-reusing GEMV
+//! pipeline or whole batches through the sign-GEMM pipeline.
+
+use super::{Scratch, TriScaleLayer};
+use crate::linalg::Mat;
+
+/// All packed paths of one compressed layer (the paper deploys 2).
+///
+/// Built via `littlebit::ResidualCompressed::pack`, or directly from
+/// [`TriScaleLayer`] values.
+#[derive(Clone, Debug)]
+pub struct PackedResidual {
+    paths: Vec<TriScaleLayer>,
+}
+
+impl PackedResidual {
+    /// Compose packed paths; all must share `d_in`/`d_out`.
+    pub fn new(paths: Vec<TriScaleLayer>) -> Self {
+        assert!(!paths.is_empty(), "at least one path");
+        for p in &paths[1..] {
+            assert_eq!(p.d_in(), paths[0].d_in(), "path d_in mismatch");
+            assert_eq!(p.d_out(), paths[0].d_out(), "path d_out mismatch");
+        }
+        Self { paths }
+    }
+
+    pub fn paths(&self) -> &[TriScaleLayer] {
+        &self.paths
+    }
+
+    pub fn d_in(&self) -> usize {
+        self.paths[0].d_in()
+    }
+
+    pub fn d_out(&self) -> usize {
+        self.paths[0].d_out()
+    }
+
+    /// Total weight-storage bytes across paths.
+    pub fn storage_bytes(&self) -> usize {
+        self.paths.iter().map(|p| p.storage_bytes()).sum()
+    }
+
+    /// Total operation count of one forward: (sign-adds, fp-mults).
+    pub fn op_counts(&self) -> (usize, usize) {
+        self.paths.iter().fold((0, 0), |(a, m), p| {
+            let (pa, pm) = p.op_counts();
+            (a + pa, m + pm)
+        })
+    }
+
+    /// Single-request forward: sum of path outputs.
+    pub fn forward(&self, x: &[f32]) -> Vec<f32> {
+        let mut scratch = Scratch::default();
+        let mut out = vec![0.0f32; self.d_out()];
+        self.forward_into(x, &mut out, &mut scratch);
+        out
+    }
+
+    /// Allocation-free single-request forward for hot loops.
+    pub fn forward_into(&self, x: &[f32], out: &mut [f32], scratch: &mut Scratch) {
+        self.paths[0].forward_into(x, out, scratch);
+        for p in &self.paths[1..] {
+            p.forward_accumulate(x, out, scratch);
+        }
+    }
+
+    /// Batched forward: `X` is `d_in × b` feature-major (column `t` is
+    /// batch item `t`); returns `d_out × b`. Column `t` is bit-identical
+    /// to [`forward`](Self::forward) on item `t`.
+    pub fn forward_batch(&self, x: &Mat) -> Mat {
+        self.forward_batch_mt(x, 1)
+    }
+
+    /// [`forward_batch`](Self::forward_batch) with the sign-GEMMs split
+    /// over `threads` OS threads.
+    pub fn forward_batch_mt(&self, x: &Mat, threads: usize) -> Mat {
+        let mut out = self.paths[0].forward_batch_mt(x, threads);
+        for p in &self.paths[1..] {
+            let y = p.forward_batch_mt(x, threads);
+            for (o, v) in out.as_mut_slice().iter_mut().zip(y.as_slice()) {
+                *o += v;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::littlebit::{compress, CompressionConfig};
+    use crate::rng::Pcg64;
+    use crate::spectral::{synth_weight, SynthSpec};
+
+    fn packed_pair(seed: u64) -> (Mat, PackedResidual) {
+        let mut rng = Pcg64::seed(seed);
+        let spec = SynthSpec { rows: 72, cols: 56, gamma: 0.3, coherence: 0.6, scale: 1.0 };
+        let w = synth_weight(&spec, &mut rng);
+        let cfg = CompressionConfig { bpp: 1.0, ..Default::default() };
+        let c = compress(&w, &cfg, &mut rng);
+        let recon = c.reconstruct();
+        (recon, c.pack())
+    }
+
+    #[test]
+    fn forward_matches_dense_reconstruction() {
+        let (recon, packed) = packed_pair(31);
+        let mut rng = Pcg64::seed(32);
+        let mut x = vec![0.0f32; packed.d_in()];
+        rng.fill_normal(&mut x);
+        let want = recon.matvec(&x);
+        let got = packed.forward(&x);
+        for (a, b) in want.iter().zip(&got) {
+            assert!((a - b).abs() < 4e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn batch_matches_per_item_bit_exactly() {
+        let (_, packed) = packed_pair(33);
+        let mut rng = Pcg64::seed(34);
+        let b = 9;
+        let mut x = Mat::zeros(packed.d_in(), b);
+        rng.fill_normal(x.as_mut_slice());
+        let batched = packed.forward_batch(&x);
+        let threaded = packed.forward_batch_mt(&x, 3);
+        assert_eq!(batched, threaded);
+        for t in 0..b {
+            let want = packed.forward(&x.col(t));
+            for i in 0..packed.d_out() {
+                assert_eq!(batched.at(i, t).to_bits(), want[i].to_bits(), "({i},{t})");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "path d_in mismatch")]
+    fn mismatched_paths_rejected() {
+        let (_, a) = packed_pair(35);
+        let mut rng = Pcg64::seed(36);
+        let spec = SynthSpec { rows: 72, cols: 40, gamma: 0.3, coherence: 0.6, scale: 1.0 };
+        let w = synth_weight(&spec, &mut rng);
+        let cfg = CompressionConfig { bpp: 1.0, ..Default::default() };
+        let b = compress(&w, &cfg, &mut rng).pack();
+        let mut paths = a.paths().to_vec();
+        paths.extend(b.paths().iter().cloned());
+        let _ = PackedResidual::new(paths);
+    }
+}

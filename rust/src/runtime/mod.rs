@@ -1,147 +1,22 @@
-//! PJRT runtime: load AOT-compiled HLO text artifacts and execute them.
+//! Artifact runtime: the manifest contract with `python/compile/aot.py`,
+//! plus (feature-gated) PJRT execution of the compiled HLO graphs.
 //!
-//! Wraps the `xla` crate (PJRT C API, CPU client). Artifacts are produced
-//! once by `python/compile/aot.py` (`make artifacts`); at run time this
-//! module is the **only** bridge between the rust coordinator and the
-//! compiled L2/L1 graphs — Python is never on the request path.
+//! Artifacts are produced once by `python/compile/aot.py` (`make
+//! artifacts`); at run time this module is the **only** bridge between the
+//! rust coordinator and the compiled L2/L1 graphs — Python is never on the
+//! request path.
 //!
-//! The flow mirrors /opt/xla-example/load_hlo:
-//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
-//! `client.compile` → `execute`. All exported graphs return tuples
-//! (`return_tuple=True` at lowering), unpacked here into literal vectors.
+//! The manifest tooling (`Manifest`, JSON parsing, artifact/spec metadata)
+//! is always available. The PJRT execution half wraps the `xla` crate
+//! (PJRT C API, CPU client), which cannot be fetched in the offline build
+//! image — it is compile-gated behind the `xla` cargo feature, along with
+//! everything that calls it (`coordinator::trainer`, the `train` CLI
+//! subcommand, `examples/e2e_qat`, `tests/runtime_e2e`).
 
 mod manifest;
+#[cfg(feature = "xla")]
+mod pjrt;
 
 pub use manifest::{ArtifactInfo, Manifest, ModelConfigInfo};
-
-use anyhow::{Context, Result};
-use std::path::{Path, PathBuf};
-
-/// A PJRT CPU session holding compiled executables.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    artifact_dir: PathBuf,
-}
-
-/// One compiled artifact ready to execute.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    pub name: String,
-    pub num_inputs: usize,
-}
-
-impl Runtime {
-    /// Create a CPU PJRT client rooted at an artifact directory.
-    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Self { client, artifact_dir: artifact_dir.as_ref().to_path_buf() })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    pub fn artifact_dir(&self) -> &Path {
-        &self.artifact_dir
-    }
-
-    /// Load the artifact manifest written by aot.py.
-    pub fn manifest(&self) -> Result<Manifest> {
-        Manifest::load(self.artifact_dir.join("manifest.json"))
-    }
-
-    /// Load + compile `<name>.hlo.txt` from the artifact directory.
-    pub fn load(&self, name: &str) -> Result<Executable> {
-        let path = self.artifact_dir.join(format!("{name}.hlo.txt"));
-        let path_str = path
-            .to_str()
-            .context("artifact path not valid UTF-8")?
-            .to_string();
-        let proto = xla::HloModuleProto::from_text_file(&path_str)
-            .with_context(|| format!("parsing HLO text {path_str}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling artifact {name}"))?;
-        Ok(Executable { exe, name: name.to_string(), num_inputs: 0 })
-    }
-
-    /// Load an artifact and record its expected arity from the manifest.
-    pub fn load_checked(&self, name: &str) -> Result<Executable> {
-        let manifest = self.manifest()?;
-        let info = manifest
-            .artifacts
-            .get(name)
-            .with_context(|| format!("artifact {name} not in manifest"))?;
-        let mut exe = self.load(name)?;
-        exe.num_inputs = info.num_inputs;
-        Ok(exe)
-    }
-}
-
-impl Executable {
-    /// Execute with literal inputs; returns the flattened tuple elements.
-    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        if self.num_inputs != 0 && inputs.len() != self.num_inputs {
-            anyhow::bail!(
-                "artifact {} expects {} inputs, got {}",
-                self.name,
-                self.num_inputs,
-                inputs.len()
-            );
-        }
-        let mut result = self
-            .exe
-            .execute::<xla::Literal>(inputs)
-            .with_context(|| format!("executing {}", self.name))?[0][0]
-            .to_literal_sync()?;
-        // Lowered with return_tuple=True: decompose the 1-level tuple.
-        let parts = result.decompose_tuple()?;
-        Ok(parts)
-    }
-}
-
-/// Helpers for marshalling between rust buffers and XLA literals.
-pub mod lit {
-    use anyhow::Result;
-
-    /// f32 vector → rank-1 literal.
-    pub fn vec_f32(data: &[f32]) -> xla::Literal {
-        xla::Literal::vec1(data)
-    }
-
-    /// f32 buffer + shape → literal.
-    pub fn array_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
-        let n: usize = dims.iter().product();
-        anyhow::ensure!(n == data.len(), "shape/data mismatch");
-        if dims.is_empty() {
-            return Ok(xla::Literal::from(data[0]));
-        }
-        let d: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
-        Ok(xla::Literal::vec1(data).reshape(&d)?)
-    }
-
-    /// i32 buffer + shape → literal.
-    pub fn array_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
-        let n: usize = dims.iter().product();
-        anyhow::ensure!(n == data.len(), "shape/data mismatch");
-        let d: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
-        Ok(xla::Literal::vec1(data).reshape(&d)?)
-    }
-
-    /// Scalar f32 literal.
-    pub fn scalar_f32(x: f32) -> xla::Literal {
-        xla::Literal::from(x)
-    }
-
-    /// Literal → f32 vector.
-    pub fn to_vec_f32(l: &xla::Literal) -> Result<Vec<f32>> {
-        Ok(l.to_vec::<f32>()?)
-    }
-
-    /// Scalar literal → f32.
-    pub fn to_scalar_f32(l: &xla::Literal) -> Result<f32> {
-        Ok(l.get_first_element::<f32>()?)
-    }
-}
+#[cfg(feature = "xla")]
+pub use pjrt::{lit, Executable, Runtime};

@@ -1,7 +1,7 @@
 //! Synthetic weight fabrication with controlled spectrum and controlled
 //! singular-vector coherence.
 //!
-//! This is the checkpoint substitute (DESIGN.md §Substitutions #1): since no
+//! This is the checkpoint substitute (ARCHITECTURE.md §Substitutions #1): since no
 //! Llama/Gemma weights are available, experiments run on matrices whose
 //! *spectral decay* matches the paper's measurements (γ median 0.26–0.33,
 //! 90% within [0.19, 0.47], Fig 11) and whose singular vectors reproduce the

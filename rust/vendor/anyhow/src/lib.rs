@@ -1,0 +1,289 @@
+//! Minimal, dependency-free stand-in for the `anyhow` crate.
+//!
+//! The build image for this repository is fully offline (no crates.io
+//! index), so the workspace vendors the small subset of anyhow's API that
+//! the codebase actually uses:
+//!
+//! * [`Error`] — an opaque boxed error with a context chain,
+//! * [`Result`] — `Result<T, Error>` with the error type defaulted,
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`,
+//! * the `anyhow!`, `bail!`, and `ensure!` macros.
+//!
+//! Semantics match upstream for this subset: any
+//! `std::error::Error + Send + Sync + 'static` converts into [`Error`]
+//! through `?`, context layers wrap the source chain, and the `Debug`
+//! rendering (what `fn main() -> Result<()>` prints on failure) shows the
+//! outermost message followed by a `Caused by:` chain.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Opaque error: a boxed `std::error::Error` plus optional context layers.
+pub struct Error {
+    inner: Box<dyn StdError + Send + Sync + 'static>,
+}
+
+impl Error {
+    /// Wrap a concrete error.
+    pub fn new<E>(error: E) -> Self
+    where
+        E: StdError + Send + Sync + 'static,
+    {
+        Error { inner: Box::new(error) }
+    }
+
+    /// Create an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { inner: Box::new(MessageError(message.to_string())) }
+    }
+
+    /// Wrap this error in a new context layer.
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Error {
+            inner: Box::new(ContextError {
+                context: context.to_string(),
+                source: self.inner,
+            }),
+        }
+    }
+
+    /// The lowest-level error in the context chain.
+    pub fn root_cause(&self) -> &(dyn StdError + 'static) {
+        let mut current: &(dyn StdError + 'static) = &*self.inner;
+        while let Some(source) = current.source() {
+            current = source;
+        }
+        current
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.inner, f)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.inner)?;
+        let mut source = self.inner.source();
+        if source.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(s) = source {
+            write!(f, "\n    {s}")?;
+            source = s.source();
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: StdError + Send + Sync + 'static,
+{
+    fn from(error: E) -> Self {
+        Error::new(error)
+    }
+}
+
+/// Message-only error payload.
+#[derive(Debug)]
+struct MessageError(String);
+
+impl fmt::Display for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl StdError for MessageError {}
+
+/// One context layer wrapping a source error.
+#[derive(Debug)]
+struct ContextError {
+    context: String,
+    source: Box<dyn StdError + Send + Sync + 'static>,
+}
+
+impl fmt::Display for ContextError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.context)
+    }
+}
+
+impl StdError for ContextError {
+    fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        let source: &(dyn StdError + 'static) = &*self.source;
+        Some(source)
+    }
+}
+
+mod ext {
+    use super::{Error, StdError};
+
+    /// Anything that can become an [`Error`] when context is attached.
+    /// The blanket impl covers concrete error types; the manual impl lets
+    /// `.context(..)` chain on `anyhow::Result` itself (same trick as
+    /// upstream anyhow — `Error` never implements `std::error::Error`, so
+    /// the impls cannot overlap).
+    pub trait IntoError {
+        fn into_error(self) -> Error;
+    }
+
+    impl<E> IntoError for E
+    where
+        E: StdError + Send + Sync + 'static,
+    {
+        fn into_error(self) -> Error {
+            Error::new(self)
+        }
+    }
+
+    impl IntoError for Error {
+        fn into_error(self) -> Error {
+            self
+        }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T>: Sized {
+    /// Attach a context message, converting the error to [`Error`].
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+
+    /// Attach a lazily evaluated context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E> Context<T> for Result<T, E>
+where
+    E: ext::IntoError,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into_error().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable expression.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(::std::format!("{}", $err))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!(
+                ::std::concat!("condition failed: ", ::std::stringify!($cond))
+            ));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_port(s: &str) -> Result<u16> {
+        let port: u16 = s
+            .parse()
+            .with_context(|| format!("bad port {s:?}"))?;
+        ensure!(port != 0, "port must be nonzero");
+        Ok(port)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<i32> {
+            let n: i32 = "42".parse()?;
+            Ok(n)
+        }
+        assert_eq!(inner().unwrap(), 42);
+    }
+
+    #[test]
+    fn context_wraps_and_chains() {
+        let err = parse_port("not-a-number").unwrap_err();
+        assert_eq!(err.to_string(), "bad port \"not-a-number\"");
+        let debug = format!("{err:?}");
+        assert!(debug.contains("Caused by:"), "{debug}");
+        assert!(err.root_cause().to_string().contains("invalid digit"));
+    }
+
+    #[test]
+    fn ensure_and_bail_fire() {
+        assert!(parse_port("0").is_err());
+        fn fails() -> Result<()> {
+            bail!("boom {}", 7);
+        }
+        assert_eq!(fails().unwrap_err().to_string(), "boom 7");
+    }
+
+    #[test]
+    fn option_context() {
+        let missing: Option<u8> = None;
+        let err = missing.context("nothing there").unwrap_err();
+        assert_eq!(err.to_string(), "nothing there");
+    }
+
+    #[test]
+    fn context_on_anyhow_result_chains_again() {
+        let res: Result<()> = Err(Error::msg("inner"));
+        let err = res.context("outer").unwrap_err();
+        assert_eq!(err.to_string(), "outer");
+        assert_eq!(err.root_cause().to_string(), "inner");
+    }
+
+    #[test]
+    fn ensure_without_message() {
+        fn check(x: i32) -> Result<()> {
+            ensure!(x > 0);
+            Ok(())
+        }
+        assert!(check(1).is_ok());
+        let err = check(-1).unwrap_err();
+        assert!(err.to_string().contains("condition failed"), "{err}");
+    }
+}
