@@ -1,9 +1,10 @@
-# LittleBit-2 build entry points. `build`/`test`/`bench` are pure-rust and
-# offline; `artifacts` lowers the L2/L1 JAX+Pallas graph to HLO text (needs
-# a JAX environment) and is only required for the PJRT-gated paths
-# (`--features xla`): the train CLI, examples/e2e_qat, tests/runtime_e2e.
+# LittleBit-2 build entry points. `build`/`test`/`bench*`/`clippy` are
+# pure-rust and offline; `artifacts` lowers the L2/L1 JAX+Pallas graph to
+# HLO text (needs a JAX environment) and is only required for the
+# PJRT-gated paths (`--features xla`): the train CLI, examples/e2e_qat,
+# tests/runtime_e2e.
 
-.PHONY: build test bench artifacts doc
+.PHONY: build test bench bench-build bench-gemm clippy artifacts doc
 
 build:
 	cargo build --release
@@ -13,6 +14,18 @@ test: build
 
 bench:
 	cargo bench
+
+# Compile every bench without running (the CI bench gate).
+bench-build:
+	cargo bench --no-run
+
+# The sign-GEMM engine sweep; refreshes BENCH_gemm.json at the repo root
+# (the cross-PR perf-trajectory record — see EXPERIMENTS.md #Fused).
+bench-gemm:
+	cargo bench --bench gemm_speedup
+
+clippy:
+	cargo clippy --all-targets -- -D warnings
 
 doc:
 	cargo doc --no-deps

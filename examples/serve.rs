@@ -1,8 +1,12 @@
 //! Batched serving demo: the dynamic batcher + multi-worker pool in front
 //! of the MatMul-free packed tri-scale stack (§6.2's deployment path).
-//! Each drained batch runs as ONE batched sign-GEMM forward; the report
-//! covers tokens/s, per-batch kernel throughput, latency percentiles, and
-//! a kernel-level dense-vs-packed comparison at batch 1 and batch 32.
+//! Each drained batch runs as ONE **fused** batched sign-GEMM forward —
+//! scales folded into the kernels, row ranges on the persistent
+//! `SignPool`, buffers reused via `BatchScratch` — so a steady-state batch
+//! allocates nothing and spawns nothing. The report covers tokens/s,
+//! per-batch kernel throughput, latency percentiles, a kernel-level
+//! dense-vs-packed comparison at batch 1 and batch 32, and the
+//! fused-pool-vs-scoped-unfused engine ratio (PR 2's tentpole).
 //!
 //! ```bash
 //! cargo run --release --example serve [n_requests] [d] [bpp] [workers] [threads]
@@ -54,7 +58,9 @@ fn main() -> anyhow::Result<()> {
         inputs.push(x);
     }
 
-    println!("serving {n_requests} requests on {workers} worker(s), {threads} kernel thread(s) ...");
+    println!(
+        "serving {n_requests} requests on {workers} worker(s), {threads} kernel thread(s) ..."
+    );
     let t0 = Instant::now();
     let rxs: Vec<_> = inputs
         .into_iter()
@@ -103,16 +109,35 @@ fn main() -> anyhow::Result<()> {
     let b = 32;
     let mut xb = Mat::zeros(d, b);
     rng.fill_normal(xb.as_mut_slice());
+    // Fused pool path, allocation-free (the serving hot loop).
+    let pool = littlebit2::packing::SignPool::global();
+    let mut bscratch = littlebit2::packing::BatchScratch::default();
+    let mut yb = Mat::default();
+    model.forward_batch_into(&xb, &mut yb, &mut bscratch, pool, threads); // warmup
     let t0 = Instant::now();
     for _ in 0..reps {
-        std::hint::black_box(model.forward_batch_mt(&xb, threads));
+        model.forward_batch_into(&xb, &mut yb, &mut bscratch, pool, threads);
+        std::hint::black_box(&yb);
     }
     let batch_ms_per_item = t0.elapsed().as_secs_f64() * 1e3 / (reps * b) as f64;
+
+    // PR 1 baseline at the same shape/threads: unfused scale passes +
+    // per-call scoped thread spawns (bit-identical output, slower engine).
+    std::hint::black_box(model.forward_batch_scoped(&xb, threads)); // warmup
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        std::hint::black_box(model.forward_batch_scoped(&xb, threads));
+    }
+    let scoped_ms_per_item = t0.elapsed().as_secs_f64() * 1e3 / (reps * b) as f64;
 
     println!(
         "kernel-level: dense {dense_ms:.3} ms vs packed {packed_ms:.3} ms → {:.1}x at batch 1; {batch_ms_per_item:.3} ms/item → {:.1}x at batch {b} (paper: 11.6x on 70B-MLP CUDA)",
         dense_ms / packed_ms,
         dense_ms / batch_ms_per_item
+    );
+    println!(
+        "engine: fused-pool {batch_ms_per_item:.3} ms/item vs scoped-unfused {scoped_ms_per_item:.3} ms/item at batch {b} → {:.2}x (bit-identical outputs)",
+        scoped_ms_per_item / batch_ms_per_item
     );
     Ok(())
 }

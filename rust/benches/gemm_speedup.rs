@@ -1,15 +1,31 @@
 //! §6.2 at batch > 1 — the speedup-vs-batch curve of the batched
-//! MatMul-free engine.
+//! MatMul-free engine, now including fused-vs-unfused and pool-vs-scoped.
 //!
 //! Sweeps batch size {1, 8, 32, 128} on the MLP-shaped layer and reports
-//! rows/s (batch items per second) for four executions of the SAME packed
-//! weights: dense f32 GEMV per item (the cuBLAS stand-in), packed tri-scale
-//! GEMV per item, the batched sign-GEMM ([`gemm_sign`]-based
-//! `forward_batch`), and the row-parallel sign-GEMM (`forward_batch_mt` at
-//! the machine's thread count). The point of the curve: per-item GEMV is
-//! flat in batch size, while the GEMM path amortizes each 64-bit sign-word
-//! load over 8 batch columns — rows/s at batch 32 should sit well above
-//! the batch-1 GEMV rate. Methodology in EXPERIMENTS.md.
+//! rows/s (batch items per second) for five executions of the SAME packed
+//! weights:
+//!
+//! 1. dense f32 GEMV per item (the cuBLAS stand-in),
+//! 2. packed tri-scale GEMV per item (fused, scratch-reusing),
+//! 3. the **PR 1 baseline**: unfused batched sign-GEMM — three scale
+//!    passes with intermediate `Mat`s around plain `gemm_sign`, row ranges
+//!    on per-call `std::thread::scope` spawns
+//!    (`PackedResidual::forward_batch_scoped`),
+//! 4. the fused serial sign-GEMM (`forward_batch`, scales folded into the
+//!    kernel), and
+//! 5. the fused **pool** path (`forward_batch_into` on the persistent
+//!    `SignPool` with a reused `BatchScratch` — the serving hot path).
+//!
+//! The last column is the tentpole headline: fused-pool rows/s over the
+//! PR 1 scoped-unfused rows/s at the same thread count (expected ≥ 1.3× at
+//! batch 32 on ≥ 2 threads — acceptance criterion of issue 2). All five
+//! paths are bit-identical per column (enforced by the packing tests), so
+//! every ratio is a pure overhead measurement. Methodology in
+//! EXPERIMENTS.md §Fused.
+//!
+//! Besides the `ROW:` lines, the sweep is written machine-readable to
+//! `BENCH_gemm.json` at the repository root so the perf trajectory is
+//! trackable across PRs.
 
 #[path = "common/mod.rs"]
 mod common;
@@ -17,16 +33,27 @@ mod common;
 use common::time_ms;
 use littlebit2::linalg::Mat;
 use littlebit2::littlebit::{compress, CompressionConfig, InitStrategy};
-use littlebit2::packing::{gemv_dense, Scratch};
+use littlebit2::packing::{gemv_dense, BatchScratch, Scratch, SignPool};
 use littlebit2::rng::Pcg64;
 use littlebit2::spectral::{synth_weight, SynthSpec};
+
+struct Row {
+    batch: usize,
+    dense: f64,
+    gemv: f64,
+    scoped: f64,
+    fused: f64,
+    fused_pool: f64,
+}
 
 fn main() {
     // MLP-shaped layer (d_ff×d_model ratio of Llama-2).
     let (d_out, d_in) = if common::full_scale() { (11008, 4096) } else { (2752, 1024) };
     let bpp = 0.55;
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    println!("# §6.2 batched: dense vs packed GEMV vs sign-GEMM, {d_out}x{d_in} at {bpp} bpp, {threads} threads");
+    println!(
+        "# §6.2 batched: dense vs packed GEMV vs sign-GEMM (scoped-unfused vs fused-pool), {d_out}x{d_in} at {bpp} bpp, {threads} threads"
+    );
 
     let mut rng = Pcg64::seed(62);
     let spec = SynthSpec { rows: d_out, cols: d_in, gamma: 0.3, coherence: 0.6, scale: 1.0 };
@@ -39,9 +66,12 @@ fn main() {
     };
     let mut crng = Pcg64::seed(63);
     let packed = compress(&w, &cfg, &mut crng).pack();
+    let pool = SignPool::global();
 
-    println!("ROW: batch dense_rows_s gemv_rows_s gemm_rows_s gemm_mt_rows_s gemm_vs_gemv1");
-    let mut gemv_rate_b1 = 0.0f64;
+    println!(
+        "ROW: batch dense_rows_s gemv_rows_s scoped_mt_rows_s fused_rows_s fused_pool_rows_s fused_pool_vs_scoped"
+    );
+    let mut rows: Vec<Row> = Vec::new();
     for &b in &[1usize, 8, 32, 128] {
         // Feature-major activation block (column t = item t) + per-item views.
         let mut xblock = Mat::zeros(d_in, b);
@@ -58,7 +88,7 @@ fn main() {
             std::hint::black_box(&y);
         });
 
-        // Packed tri-scale GEMV, one pass per item (scratch reused).
+        // Packed tri-scale GEMV, one pass per item (fused, scratch reused).
         let mut scratch = Scratch::default();
         let mut out = vec![0.0f32; d_out];
         let (gemv_ms, _) = time_ms(reps, || {
@@ -68,32 +98,81 @@ fn main() {
             std::hint::black_box(&out);
         });
 
-        // Batched sign-GEMM: the whole block in one forward.
-        let (gemm_ms, _) = time_ms(reps, || {
+        // PR 1 baseline: unfused batched sign-GEMM on scoped spawns.
+        let (scoped_ms, _) = time_ms(reps, || {
+            std::hint::black_box(packed.forward_batch_scoped(&xblock, threads));
+        });
+
+        // Fused serial sign-GEMM: whole block, one thread, no scale passes.
+        let (fused_ms, _) = time_ms(reps, || {
             std::hint::black_box(packed.forward_batch(&xblock));
         });
 
-        // Row-parallel batched sign-GEMM.
-        let (gemm_mt_ms, _) = time_ms(reps, || {
-            std::hint::black_box(packed.forward_batch_mt(&xblock, threads));
+        // Fused pool path: persistent workers + reused BatchScratch — the
+        // serving hot loop.
+        let mut bscratch = BatchScratch::default();
+        let mut yblock = Mat::default();
+        let (pool_ms, _) = time_ms(reps, || {
+            packed.forward_batch_into(&xblock, &mut yblock, &mut bscratch, pool, threads);
+            std::hint::black_box(&yblock);
         });
 
         let rate = |ms: f64| b as f64 / (ms / 1e3);
-        if b == 1 {
-            gemv_rate_b1 = rate(gemv_ms);
-        }
+        let row = Row {
+            batch: b,
+            dense: rate(dense_ms),
+            gemv: rate(gemv_ms),
+            scoped: rate(scoped_ms),
+            fused: rate(fused_ms),
+            fused_pool: rate(pool_ms),
+        };
         println!(
-            "ROW: {b} {:.0} {:.0} {:.0} {:.0} {:.2}",
-            rate(dense_ms),
-            rate(gemv_ms),
-            rate(gemm_ms),
-            rate(gemm_mt_ms),
-            rate(gemm_ms) / gemv_rate_b1
+            "ROW: {b} {:.0} {:.0} {:.0} {:.0} {:.0} {:.2}",
+            row.dense,
+            row.gemv,
+            row.scoped,
+            row.fused,
+            row.fused_pool,
+            row.fused_pool / row.scoped
         );
+        rows.push(row);
     }
     let (adds, mults) = packed.op_counts();
     println!(
-        "# per-item ops: {adds} sign-adds + {mults} fp-mults vs {} dense fp-MACs; gemm loads each sign word once per 8 batch columns",
+        "# per-item ops: {adds} sign-adds + {mults} fp-mults vs {} dense fp-MACs; fused kernels make zero separate scale passes, pool dispatch spawns zero threads",
         d_out * d_in
     );
+
+    let json_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_gemm.json");
+    match std::fs::write(json_path, render_json(d_out, d_in, bpp, threads, &rows)) {
+        Ok(()) => println!("# wrote {json_path}"),
+        Err(e) => eprintln!("# could not write {json_path}: {e}"),
+    }
+}
+
+/// Hand-rolled JSON (no serde offline): the cross-PR perf-trajectory record.
+fn render_json(d_out: usize, d_in: usize, bpp: f64, threads: usize, rows: &[Row]) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"bench\": \"gemm_speedup\",\n");
+    s.push_str("  \"status\": \"measured\",\n");
+    s.push_str(&format!(
+        "  \"shape\": {{\"d_out\": {d_out}, \"d_in\": {d_in}}},\n  \"bpp\": {bpp},\n  \"threads\": {threads},\n"
+    ));
+    s.push_str("  \"rows_per_s\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"batch\": {}, \"dense_gemv\": {:.1}, \"packed_gemv\": {:.1}, \"scoped_mt\": {:.1}, \"fused\": {:.1}, \"fused_pool_mt\": {:.1}, \"fused_pool_vs_scoped\": {:.3}}}{}\n",
+            r.batch,
+            r.dense,
+            r.gemv,
+            r.scoped,
+            r.fused,
+            r.fused_pool,
+            r.fused_pool / r.scoped,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
 }

@@ -10,13 +10,16 @@
 //! Activations cross the backend boundary **feature-major** (`d × b`,
 //! column `t` = request `t`) — the native layout of the sign-GEMM pipeline,
 //! so the production path runs with zero transposes between queue and
-//! kernels.
+//! kernels. Each worker owns one backend plus one reused output buffer, and
+//! the production backend carries a [`BatchScratch`] — steady-state batch
+//! execution is allocation-free end to end, with kernel row ranges
+//! dispatched to the persistent [`SignPool`] instead of per-call spawns.
 //!
 //! Latency percentiles, batch-size statistics, and throughput (tokens/s —
 //! one request = one token-step here) are tracked for the §6.2 experiments.
 
 use crate::linalg::Mat;
-use crate::packing::PackedResidual;
+use crate::packing::{BatchScratch, PackedResidual, SignPool};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
 use std::sync::{Arc, Mutex};
@@ -47,9 +50,12 @@ pub struct Response {
 /// Executes one drained batch as a single batched forward call.
 ///
 /// `x` is `d_in × batch` **feature-major** — column `t` is request `t`'s
-/// input; the returned matrix must be `d_out × batch` with the same column
-/// order. Every worker of the pool owns one backend instance (hence
-/// `&mut self`: scratch buffers and counters need no synchronization).
+/// input; the backend must leave `y` as `d_out × batch` with the same
+/// column order (`y` arrives in an unspecified shape and must be resized —
+/// the server reuses one output buffer per worker so steady-state serving
+/// allocates nothing in the backend). Every worker of the pool owns one
+/// backend instance (hence `&mut self`: scratch buffers and counters need
+/// no synchronization).
 ///
 /// # Examples
 ///
@@ -57,7 +63,8 @@ pub struct Response {
 /// use littlebit2::coordinator::{InferenceServer, ServerConfig};
 /// use littlebit2::linalg::Mat;
 ///
-/// // Closures `FnMut(&Mat) -> Mat` implement BatchBackend.
+/// // Closures `FnMut(&Mat) -> Mat` implement BatchBackend (the returned
+/// // matrix replaces the worker's output buffer).
 /// let cfg = ServerConfig { workers: 2, ..Default::default() };
 /// let server = InferenceServer::start_pool(cfg, |_worker| {
 ///     |x: &Mat| -> Mat {
@@ -75,40 +82,45 @@ pub struct Response {
 /// assert!(stats.tokens_per_s > 0.0);
 /// ```
 pub trait BatchBackend: Send + 'static {
-    fn forward_batch(&mut self, x: &Mat) -> Mat;
+    fn forward_batch_into(&mut self, x: &Mat, y: &mut Mat);
 }
 
 impl<F> BatchBackend for F
 where
     F: FnMut(&Mat) -> Mat + Send + 'static,
 {
-    fn forward_batch(&mut self, x: &Mat) -> Mat {
-        self(x)
+    fn forward_batch_into(&mut self, x: &Mat, y: &mut Mat) {
+        *y = self(x);
     }
 }
 
 /// The production backend: a packed residual tri-scale layer driven through
-/// the batched sign-GEMM pipeline, with a per-worker thread knob for the
-/// row-parallel kernels. The server hands activations over feature-major,
-/// which is exactly what the pipeline consumes — no transposes on the hot
-/// path.
+/// the **fused** batched sign-GEMM pipeline on the persistent
+/// [`SignPool`], with a per-worker thread knob for the row-range
+/// partitioning. The server hands activations over feature-major — exactly
+/// what the pipeline consumes — and each worker's backend carries its own
+/// [`BatchScratch`], so a steady-state batch execution performs zero heap
+/// allocations: no transposes, no spawns, no intermediate `Mat`s.
 pub struct PackedResidualBackend {
     model: Arc<PackedResidual>,
     threads: usize,
+    scratch: BatchScratch,
 }
 
 impl PackedResidualBackend {
     /// `threads` is the row-parallelism *inside* one batch execution
-    /// (1 = serial kernels); worker-level parallelism is
+    /// (1 = serial kernels; > 1 = row ranges on the shared
+    /// [`SignPool::global`]); worker-level parallelism is
     /// [`ServerConfig::workers`].
     pub fn new(model: Arc<PackedResidual>, threads: usize) -> Self {
-        Self { model, threads }
+        Self { model, threads, scratch: BatchScratch::default() }
     }
 }
 
 impl BatchBackend for PackedResidualBackend {
-    fn forward_batch(&mut self, x: &Mat) -> Mat {
-        self.model.forward_batch_mt(x, self.threads)
+    fn forward_batch_into(&mut self, x: &Mat, y: &mut Mat) {
+        let pool = SignPool::for_threads(self.threads);
+        self.model.forward_batch_into(x, y, &mut self.scratch, pool, self.threads);
     }
 }
 
@@ -270,6 +282,9 @@ impl InferenceServer {
         backend: &mut B,
         stats: &Mutex<StatsInner>,
     ) {
+        // Per-worker output buffer, reused across batches so the backend
+        // hot path stays allocation-free (`Mat::resize` keeps capacity).
+        let mut ybuf = Mat::default();
         loop {
             // Hold the receiver only while draining one batch, so other
             // workers can start on the next batch while this one executes.
@@ -307,17 +322,19 @@ impl InferenceServer {
                     end += 1;
                 }
                 let group = &batch[start..end];
-                Self::execute_group(group, backend, stats);
+                Self::execute_group(group, backend, stats, &mut ybuf);
                 start = end;
             }
         }
     }
 
-    /// Run one equal-width group as a single feature-major matrix.
+    /// Run one equal-width group as a single feature-major matrix, writing
+    /// into the worker's reused output buffer.
     fn execute_group<B: BatchBackend>(
         group: &[Request],
         backend: &mut B,
         stats: &Mutex<StatsInner>,
+        y: &mut Mat,
     ) {
         let bsize = group.len();
         let d_in = group[0].input.len();
@@ -328,19 +345,23 @@ impl InferenceServer {
                 *x.at_mut(j, t) = *v;
             }
         }
+        // Clear the reused buffer's shape first: a backend that panics
+        // BEFORE resizing must leave a shape that fails the check below,
+        // never a stale previous batch that happens to have `bsize` columns.
+        y.resize(0, 0);
         let t_exec = Instant::now();
         // Panic isolation: a backend that rejects this group's shape (or has
         // a bug) must fail THESE requests, not kill the worker and with it
         // the whole server. Our backends hold no invariants across calls
-        // (Arc'd read-only weights + scratch), so continuing after an unwind
-        // is sound.
-        let result = catch_unwind(AssertUnwindSafe(|| backend.forward_batch(&x)));
+        // (Arc'd read-only weights + scratch blocks that every call fully
+        // rewrites), so continuing after an unwind is sound.
+        let result = catch_unwind(AssertUnwindSafe(|| backend.forward_batch_into(&x, y)));
         let exec_s = t_exec.elapsed().as_secs_f64();
-        let y = match result {
-            Ok(y) if y.cols() == bsize => y,
-            Ok(y) => {
+        match result {
+            Ok(()) if y.cols() == bsize => {}
+            Ok(()) => {
                 eprintln!(
-                    "serving: backend returned {} columns for a {bsize}-request group; failing the group",
+                    "serving: backend left {} columns for a {bsize}-request group; failing the group",
                     y.cols()
                 );
                 stats.lock().expect("stats lock").failed += bsize as u64;
@@ -608,6 +629,31 @@ mod tests {
         let stats = server.shutdown();
         assert_eq!(stats.failed, 1);
         assert_eq!(stats.served, 1);
+    }
+
+    /// A worker's backend reuses its scratch and output buffers across
+    /// batches of varying width; results must stay bit-identical to the
+    /// fresh-allocation path every time.
+    #[test]
+    fn packed_backend_buffer_reuse_is_deterministic() {
+        use crate::littlebit::{compress, CompressionConfig};
+        use crate::rng::Pcg64;
+        use crate::spectral::{synth_weight, SynthSpec};
+
+        let mut rng = Pcg64::seed(79);
+        let spec = SynthSpec { rows: 56, cols: 56, gamma: 0.3, coherence: 0.6, scale: 1.0 };
+        let w = synth_weight(&spec, &mut rng);
+        let cfg = CompressionConfig { bpp: 1.0, ..Default::default() };
+        let model = Arc::new(compress(&w, &cfg, &mut rng).pack());
+
+        let mut backend = PackedResidualBackend::new(Arc::clone(&model), 2);
+        let mut y = Mat::default();
+        for b in [3usize, 1, 7, 3] {
+            let mut x = Mat::zeros(56, b);
+            rng.fill_normal(x.as_mut_slice());
+            backend.forward_batch_into(&x, &mut y);
+            assert_eq!(y, model.forward_batch(&x), "b={b}");
+        }
     }
 
     /// The packed backend returns the same numbers the dense reconstruction

@@ -6,7 +6,8 @@
 //!
 //! * **L3 (this crate)** — compression coordinator, QAT training driver,
 //!   the batched multi-worker serving loop (dynamic batching onto the
-//!   sign-GEMM kernels), and the complete numerics substrate (SVD, QR,
+//!   scale-fused sign-GEMM kernels, row ranges on a persistent
+//!   `packing::SignPool`), and the complete numerics substrate (SVD, QR,
 //!   Joint-ITQ, all quantization baselines, the spectral break-even theory,
 //!   bit-packed MatMul-free inference kernels — GEMV and batched GEMM —
 //!   memory accounting).

@@ -21,9 +21,29 @@ impl fmt::Debug for Mat {
 /// comfortably fit L1 alongside the accumulator.
 const BLOCK: usize = 64;
 
+impl Default for Mat {
+    /// Empty 0×0 matrix — the placeholder state of reusable scratch buffers
+    /// (see `packing::BatchScratch`), grown in place by [`Mat::resize`].
+    fn default() -> Self {
+        Self::zeros(0, 0)
+    }
+}
+
 impl Mat {
     pub fn zeros(rows: usize, cols: usize) -> Self {
         Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Reshape in place, reusing the existing allocation where possible
+    /// (only grows when `rows·cols` exceeds every earlier size). Newly
+    /// exposed elements are zero; elements carried over keep whatever was
+    /// last written — callers that read before writing must clear. The
+    /// batched serving scratch uses this to stay allocation-free across
+    /// requests of varying batch size.
+    pub fn resize(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.resize(rows * cols, 0.0);
     }
 
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
@@ -477,6 +497,20 @@ mod tests {
             let y = f16_round(x);
             assert!((x - y).abs() <= x.abs() * 2f32.powi(-10) + 2f32.powi(-24));
         }
+    }
+
+    #[test]
+    fn resize_reuses_and_zero_fills_growth() {
+        let mut m = Mat::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        m.resize(1, 3);
+        assert_eq!(m.shape(), (1, 3));
+        assert_eq!(m.as_slice(), &[1., 2., 3.]); // carried-over prefix
+        m.resize(2, 3);
+        assert_eq!(&m.as_slice()[3..], &[0., 0., 0.]); // growth is zeroed
+        let mut e = Mat::default();
+        assert_eq!(e.shape(), (0, 0));
+        e.resize(2, 2);
+        assert_eq!(e.as_slice(), &[0.; 4]);
     }
 
     #[test]

@@ -87,7 +87,10 @@ impl CompressedLinear {
         r * (d_in + d_out) + 16 * (d_in + d_out) + 16 * r
     }
 
-    /// Pack into the bit-level inference layer.
+    /// Pack into the bit-level inference layer. The packed layer executes
+    /// Eq. 1 through the scale-fused sign kernels: `g` and `l` fold into
+    /// the two sign-XOR loops, `h` into the final lane reduction — no
+    /// separate element-wise passes at serve time, bit-identical numbers.
     pub fn pack(&self) -> TriScaleLayer {
         TriScaleLayer::new(
             &self.factors.u_b,

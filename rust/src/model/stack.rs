@@ -10,7 +10,7 @@
 
 use crate::linalg::Mat;
 use crate::littlebit::{compress, CompressionConfig};
-use crate::packing::{PackedResidual, Scratch};
+use crate::packing::{BatchScratch, PackedResidual, Scratch, SignPool};
 use crate::rng::Pcg64;
 
 /// A chain of packed layers with matching inner dimensions
@@ -83,14 +83,46 @@ impl PackedStack {
         self.forward_batch_mt(x, 1)
     }
 
-    /// [`forward_batch`](Self::forward_batch) with each layer's sign-GEMMs
-    /// split over `threads` OS threads.
+    /// [`forward_batch`](Self::forward_batch) with each layer's fused
+    /// sign-GEMMs split into `threads` row ranges on the process-wide
+    /// [`SignPool`].
     pub fn forward_batch_mt(&self, x: &Mat, threads: usize) -> Mat {
-        let mut cur = self.layers[0].forward_batch_mt(x, threads);
-        for layer in &self.layers[1..] {
-            cur = layer.forward_batch_mt(&cur, threads);
+        let mut y = Mat::default();
+        let mut scratch = BatchScratch::default();
+        self.forward_batch_into(x, &mut y, &mut scratch, SignPool::for_threads(threads), threads);
+        y
+    }
+
+    /// Allocation-free batched forward through the whole chain: `y` is
+    /// resized to `d_out × b` in place and the batch ping-pongs between the
+    /// two activation blocks carried by `scratch` — after warm-up, a chain
+    /// forward performs **zero** heap allocations regardless of depth.
+    /// Bit-identical to [`forward_batch`](Self::forward_batch).
+    pub fn forward_batch_into(
+        &self,
+        x: &Mat,
+        y: &mut Mat,
+        scratch: &mut BatchScratch,
+        pool: &SignPool,
+        threads: usize,
+    ) {
+        let n = self.layers.len();
+        if n == 1 {
+            self.layers[0].forward_batch_into(x, y, scratch, pool, threads);
+            return;
         }
-        cur
+        // The ping/pong blocks leave the scratch while the layers use its
+        // latent/path blocks, then return (same dance as the residual path).
+        let mut cur = std::mem::take(&mut scratch.ping);
+        let mut nxt = std::mem::take(&mut scratch.pong);
+        self.layers[0].forward_batch_into(x, &mut cur, scratch, pool, threads);
+        for layer in &self.layers[1..n - 1] {
+            layer.forward_batch_into(&cur, &mut nxt, scratch, pool, threads);
+            std::mem::swap(&mut cur, &mut nxt);
+        }
+        self.layers[n - 1].forward_batch_into(&cur, y, scratch, pool, threads);
+        scratch.ping = cur;
+        scratch.pong = nxt;
     }
 }
 
@@ -143,6 +175,28 @@ mod tests {
             for i in 0..48 {
                 assert_eq!(batched.at(i, t).to_bits(), want[i].to_bits(), "({i},{t})");
             }
+        }
+    }
+
+    /// The allocation-free chain forward must match the allocating one bit
+    /// for bit while one scratch serves batches of varying width (and a
+    /// depth-1 chain, which writes straight into `y`).
+    #[test]
+    fn chain_forward_batch_into_scratch_reuse_is_clean() {
+        let mut rng = Pcg64::seed(45);
+        let weights = chain_weights(&[48, 96, 64, 48], &mut rng);
+        let stack = PackedStack::compress_chain(&weights, &quick_cfg(), &mut rng);
+        let single = PackedStack::new(vec![stack.layers()[0].clone()]);
+        let mut scratch = BatchScratch::default();
+        let mut y = Mat::default();
+        let pool = SignPool::global();
+        for b in [5usize, 1, 8] {
+            let mut x = Mat::zeros(48, b);
+            rng.fill_normal(x.as_mut_slice());
+            stack.forward_batch_into(&x, &mut y, &mut scratch, pool, 2);
+            assert_eq!(y, stack.forward_batch(&x), "depth-3 b={b}");
+            single.forward_batch_into(&x, &mut y, &mut scratch, pool, 2);
+            assert_eq!(y, single.forward_batch(&x), "depth-1 b={b}");
         }
     }
 

@@ -1,4 +1,5 @@
-//! Batched sign-GEMM: the bit-packed MatMul-free kernel at batch > 1.
+//! Batched sign-GEMM: the bit-packed MatMul-free kernel at batch > 1,
+//! in plain and **scale-fused** forms.
 //!
 //! [`gemv_sign`](super::gemv_sign) streams every 64-bit sign word of `S`
 //! once *per request*; at batch `b` that is `b` full passes over the packed
@@ -9,24 +10,65 @@
 //! strip width, which is what makes dynamic batching pay off on this
 //! kernel (the "MatMul-free at batch size" story of §6.2).
 //!
+//! [`gemm_sign_scaled`] is the same kernel with the tri-scale layer's
+//! element-wise scales folded in: the input scale is applied exactly once
+//! per call into a reused thread-local block (never re-applied per row
+//! range — pool jobs share the scaled block read-only), and the output
+//! scale rides the final lane reduction. This removes the three separate
+//! scale passes (and their intermediate `Mat` allocations) the PR 1
+//! pipeline made per layer, and is bit-exact against that unfused
+//! composition.
+//!
 //! Per batch column the reduction runs on the same eight accumulators in
-//! the same order as `gemv_sign`, so `gemm_sign` is **bit-exact** against
+//! the same order as `gemv_sign`, so both GEMMs are **bit-exact** against
 //! column-by-column GEMV — asserted by `gemm_matches_gemv_bit_exactly`
 //! below and relied on by the serving tests.
 //!
-//! `*_mt` variants split output rows across `threads` std threads
-//! (`std::thread::scope`; no external runtime). Row partitioning does not
-//! change any per-row reduction order, so threaded results are bit-exact
-//! against the serial kernels, too.
+//! `*_mt` variants split output rows into per-call range jobs executed on
+//! the persistent [`SignPool`](super::SignPool) (no per-call thread spawns;
+//! no external runtime). Row partitioning does not change any per-row
+//! reduction order, so pooled results are bit-exact against the serial
+//! kernels for every thread count. The PR 1 per-call `std::thread::scope`
+//! path is kept as [`gemm_sign_mt_scoped`] — the measured baseline for
+//! `benches/gemm_speedup.rs`.
 
-use super::gemv::gemv_sign_rows;
+use super::pool::SignPool;
 use super::BitMatrix;
 use crate::linalg::Mat;
+use std::cell::RefCell;
 
 /// Batch columns processed per sign-word load. Eight f32 lanes × eight
 /// reduction accumulators = 64 live scalars — two AVX2 register files'
 /// worth, which the compiler keeps in registers on x86-64 and aarch64.
-const COL_STRIP: usize = 8;
+pub(crate) const COL_STRIP: usize = 8;
+
+thread_local! {
+    /// Per-thread input-scaled activation block for the fused GEMM
+    /// (`n × b` floats, grown in place and reused across calls). The
+    /// dispatching caller fills it **once per call** — exactly the unfused
+    /// `scale_rows` pass's multiplies, minus its allocation — and every
+    /// row-range job then reads it like it would read `x`, so input-scale
+    /// work never multiplies with the partition count.
+    static XBLOCK: RefCell<Mat> = RefCell::new(Mat::default());
+}
+
+/// Run `f` against the thread-local input-scaled copy of `x`
+/// (`row j ← in_scale[j] · x[j]`). The products are identical f32s to the
+/// unfused `scale_rows` pass, formed once per call — the source of the
+/// fused kernels' bit-exactness. Shared with `packing::pool`, which hoists
+/// the scale here before dispatching row-range jobs.
+pub(crate) fn with_scaled_block<R>(x: &Mat, in_scale: &[f32], f: impl FnOnce(&Mat) -> R) -> R {
+    XBLOCK.with(|cell| {
+        let xg = &mut *cell.borrow_mut();
+        xg.resize(x.rows(), x.cols());
+        for (i, &gi) in in_scale.iter().enumerate() {
+            for (d, &v) in xg.row_mut(i).iter_mut().zip(x.row(i)) {
+                *d = v * gi;
+            }
+        }
+        f(xg)
+    })
+}
 
 /// Sign-GEMM: `Y = S X` with `S ∈ {±1}^{m×n}` bit-packed, `X` feature-major
 /// `n×b` (column `t` is batch item `t`), `Y` preallocated `m×b`.
@@ -60,12 +102,73 @@ pub fn gemm_sign(s: &BitMatrix, x: &Mat, y: &mut Mat) {
     gemm_sign_rows(s, x, y.as_mut_slice(), 0);
 }
 
+/// Scale-fused sign-GEMM:
+/// `Y = diag(out_scale) · S · diag(in_scale) · X`, either scale optional.
+///
+/// The input scale is applied **once per call** into a reused thread-local
+/// activation block (one multiply per element — exactly the unfused
+/// `scale_rows` pass's products, minus its per-call allocation) which then
+/// stays resident while every sign word streams over it; the output scale
+/// folds into the final lane reduction (one multiply per output element).
+/// Bit-exact against scale → [`gemm_sign`] → scale — asserted by
+/// `gemm_scaled_matches_unfused_composition_bit_exactly` — with zero
+/// separate output passes and zero per-call allocations after warm-up.
+///
+/// # Examples
+///
+/// ```
+/// use littlebit2::linalg::Mat;
+/// use littlebit2::packing::{gemm_sign_scaled, BitMatrix};
+///
+/// let s = BitMatrix::ones(2, 2);
+/// let x = Mat::from_vec(2, 1, vec![1.0, 2.0]);
+/// let mut y = Mat::zeros(2, 1);
+/// // y = diag([10, 100]) · S · diag([3, 4]) · x = [110, 1100] scaled per row.
+/// gemm_sign_scaled(&s, Some(&[3.0, 4.0]), &x, Some(&[10.0, 100.0]), &mut y);
+/// assert_eq!(y.col(0), vec![110.0, 1100.0]);
+/// ```
+pub fn gemm_sign_scaled(
+    s: &BitMatrix,
+    in_scale: Option<&[f32]>,
+    x: &Mat,
+    out_scale: Option<&[f32]>,
+    y: &mut Mat,
+) {
+    assert_eq!(s.cols(), x.rows(), "inner dims: S is m×n, X is n×b");
+    assert_eq!(s.rows(), y.rows(), "output rows");
+    assert_eq!(x.cols(), y.cols(), "batch width");
+    if let Some(g) = in_scale {
+        assert_eq!(g.len(), s.cols(), "in_scale length");
+    }
+    if let Some(h) = out_scale {
+        assert_eq!(h.len(), s.rows(), "out_scale length");
+    }
+    let b = x.cols();
+    if b == 0 || s.rows() == 0 {
+        return;
+    }
+    gemm_sign_scaled_rows(s, in_scale, x, out_scale, y.as_mut_slice(), 0);
+}
+
 /// Row-parallel sign-GEMM: identical output to [`gemm_sign`] (bit-exact;
 /// row partitioning changes no reduction order), with output rows split
-/// across `threads` OS threads. `threads <= 1` falls through to the serial
-/// kernel. This is the knob the batched serving pool turns — see
-/// `coordinator::ServerConfig`.
+/// into `threads` range jobs on the persistent process-wide
+/// [`SignPool`](super::SignPool) — no per-call thread spawning. `threads
+/// <= 1` falls through to the serial kernel. This is the knob the batched
+/// serving pool turns — see `coordinator::ServerConfig`.
 pub fn gemm_sign_mt(s: &BitMatrix, x: &Mat, y: &mut Mat, threads: usize) {
+    assert_eq!(s.cols(), x.rows(), "inner dims: S is m×n, X is n×b");
+    assert_eq!(s.rows(), y.rows(), "output rows");
+    assert_eq!(x.cols(), y.cols(), "batch width");
+    SignPool::for_threads(threads).run_gemm(s, None, x, None, y.as_mut_slice(), threads);
+}
+
+/// The PR 1 row-parallel sign-GEMM, spawning `threads` OS threads per call
+/// via `std::thread::scope`. Superseded on the hot path by the pool-backed
+/// [`gemm_sign_mt`]; kept (and exported) as the measured baseline so
+/// `benches/gemm_speedup.rs` can report pool-vs-scoped dispatch overhead.
+/// Bit-exact against [`gemm_sign`] and [`gemm_sign_mt`].
+pub fn gemm_sign_mt_scoped(s: &BitMatrix, x: &Mat, y: &mut Mat, threads: usize) {
     assert_eq!(s.cols(), x.rows(), "inner dims: S is m×n, X is n×b");
     assert_eq!(s.rows(), y.rows(), "output rows");
     assert_eq!(x.cols(), y.cols(), "batch width");
@@ -93,7 +196,23 @@ pub fn gemm_sign_mt(s: &BitMatrix, x: &Mat, y: &mut Mat, threads: usize) {
 /// Per output element the reduction mirrors `gemv_sign` exactly: eight
 /// accumulators fed word-by-word, strip-by-strip, then summed in lane
 /// order — the source of the bit-exactness guarantee.
-fn gemm_sign_rows(s: &BitMatrix, x: &Mat, ys: &mut [f32], row0: usize) {
+pub(crate) fn gemm_sign_rows(s: &BitMatrix, x: &Mat, ys: &mut [f32], row0: usize) {
+    gemm_sign_out_rows(s, x, None, ys, row0);
+}
+
+/// The shared sign-GEMM row-range loop — [`gemm_sign_rows`]'s body with the
+/// output scale (when present) folded into each row's final lane
+/// reduction: one multiply on the reduced sum, the same rounding a
+/// separate output pass would apply. This is the kernel every pool job
+/// runs; input scaling happens once per *call* (not per job) via
+/// [`with_scaled_block`] before rows are partitioned.
+pub(crate) fn gemm_sign_out_rows(
+    s: &BitMatrix,
+    x: &Mat,
+    out_scale: Option<&[f32]>,
+    ys: &mut [f32],
+    row0: usize,
+) {
     let b = x.cols();
     let cols = s.cols();
     let full_words = cols / 64;
@@ -101,6 +220,7 @@ fn gemm_sign_rows(s: &BitMatrix, x: &Mat, ys: &mut [f32], row0: usize) {
     for di in 0..nrows {
         let words = s.row_words(row0 + di);
         let yrow = &mut ys[di * b..(di + 1) * b];
+        let hi = out_scale.map(|h| h[row0 + di]);
         let mut c0 = 0;
         while c0 < b {
             let cw = (b - c0).min(COL_STRIP);
@@ -136,34 +256,46 @@ fn gemm_sign_rows(s: &BitMatrix, x: &Mat, ys: &mut [f32], row0: usize) {
                 for lane in &acc {
                     sum += lane[t];
                 }
-                yrow[c0 + t] = sum;
+                yrow[c0 + t] = match hi {
+                    Some(hv) => sum * hv,
+                    None => sum,
+                };
             }
             c0 += cw;
         }
     }
 }
 
+/// Row-range form of the fused GEMM used by the serial entry: the input
+/// scale is applied once into the thread-local block, then the plain
+/// column-blocked loop streams it with the output scale folded into the
+/// lane reduction. Bit-exactness: the block holds the same
+/// `in_scale[j]·x[j][t]` products the unfused `scale_rows` pass would
+/// produce (one f32 multiply each, formed once), the accumulation order is
+/// identical to [`gemm_sign_rows`], and the output scale is one multiply
+/// on the reduced sum.
+fn gemm_sign_scaled_rows(
+    s: &BitMatrix,
+    in_scale: Option<&[f32]>,
+    x: &Mat,
+    out_scale: Option<&[f32]>,
+    ys: &mut [f32],
+    row0: usize,
+) {
+    match in_scale {
+        Some(g) => with_scaled_block(x, g, |xg| gemm_sign_out_rows(s, xg, out_scale, ys, row0)),
+        None => gemm_sign_out_rows(s, x, out_scale, ys, row0),
+    }
+}
+
 /// Row-parallel sign-GEMV: identical output to
-/// [`gemv_sign`](super::gemv_sign) (bit-exact), rows split across
-/// `threads` OS threads. The single-request analogue of [`gemm_sign_mt`].
+/// [`gemv_sign`](super::gemv_sign) (bit-exact), rows split into `threads`
+/// range jobs on the persistent [`SignPool`](super::SignPool). The
+/// single-request analogue of [`gemm_sign_mt`].
 pub fn gemv_sign_mt(s: &BitMatrix, x: &[f32], y: &mut [f32], threads: usize) {
     assert_eq!(s.cols(), x.len());
     assert_eq!(s.rows(), y.len());
-    let rows = s.rows();
-    if rows == 0 {
-        return;
-    }
-    let threads = threads.max(1).min(rows);
-    if threads == 1 {
-        gemv_sign_rows(s, x, y, 0);
-        return;
-    }
-    let chunk = rows.div_ceil(threads);
-    std::thread::scope(|scope| {
-        for (ti, ys) in y.chunks_mut(chunk).enumerate() {
-            scope.spawn(move || gemv_sign_rows(s, x, ys, ti * chunk));
-        }
-    });
+    SignPool::for_threads(threads).run_gemv(s, None, x, None, y, threads);
 }
 
 #[cfg(test)]
@@ -206,6 +338,63 @@ mod tests {
         }
     }
 
+    /// The fused-GEMM acceptance contract: folding both scales into the
+    /// kernel must be bit-exact against the unfused
+    /// scale_rows → gemm_sign → scale_rows composition, across ragged
+    /// shapes (cols % 64 ≠ 0 spanning multiple words plus a tail), batch
+    /// widths crossing the 8-column strip boundary, and every
+    /// present/absent scale combination.
+    #[test]
+    fn gemm_scaled_matches_unfused_composition_bit_exactly() {
+        let mut rng = Pcg64::seed(26);
+        for (m, n, b) in [
+            (4, 4, 1),
+            (16, 64, 3),
+            (33, 130, 8),
+            (8, 200, 9),
+            (7, 65, 32),
+            (12, 63, 5),
+            (9, 191, 13),
+        ] {
+            let s = BitMatrix::from_dense(&Mat::gaussian(m, n, &mut rng).signum());
+            let x = random_block(n, b, &mut rng);
+            let mut g = vec![0.0f32; n];
+            let mut h = vec![0.0f32; m];
+            rng.fill_uniform(&mut g, 0.2, 1.8);
+            rng.fill_uniform(&mut h, 0.2, 1.8);
+
+            for (ins, outs) in [
+                (Some(g.as_slice()), Some(h.as_slice())),
+                (Some(g.as_slice()), None),
+                (None, Some(h.as_slice())),
+                (None, None),
+            ] {
+                // Unfused reference: explicit scale passes around gemm_sign.
+                let xin = match ins {
+                    Some(gv) => x.scale_rows(gv),
+                    None => x.clone(),
+                };
+                let mut want = Mat::zeros(m, b);
+                gemm_sign(&s, &xin, &mut want);
+                let want = match outs {
+                    Some(hv) => want.scale_rows(hv),
+                    None => want,
+                };
+                let mut got = Mat::zeros(m, b);
+                gemm_sign_scaled(&s, ins, &x, outs, &mut got);
+                for (i, (a, c)) in want.as_slice().iter().zip(got.as_slice()).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        c.to_bits(),
+                        "{m}x{n} b={b} ins={} outs={} flat {i}: {a} vs {c}",
+                        ins.is_some(),
+                        outs.is_some()
+                    );
+                }
+            }
+        }
+    }
+
     #[test]
     fn gemm_mt_matches_serial_bit_exactly() {
         let mut rng = Pcg64::seed(22);
@@ -217,7 +406,10 @@ mod tests {
         for threads in [2, 3, 7, 64] {
             let mut mt = Mat::zeros(m, b);
             gemm_sign_mt(&s, &x, &mut mt, threads);
-            assert_eq!(serial, mt, "threads={threads}");
+            assert_eq!(serial, mt, "pooled threads={threads}");
+            let mut scoped = Mat::zeros(m, b);
+            gemm_sign_mt_scoped(&s, &x, &mut scoped, threads);
+            assert_eq!(serial, scoped, "scoped threads={threads}");
         }
     }
 
@@ -257,6 +449,27 @@ mod tests {
         }
     }
 
+    /// Same systematic check for the fused kernel: scales folded in must
+    /// track the dense diag(h)·S·diag(g) product numerically.
+    #[test]
+    fn gemm_scaled_matches_dense_product() {
+        let mut rng = Pcg64::seed(27);
+        let (m, n, b) = (19, 70, 5);
+        let sd = Mat::gaussian(m, n, &mut rng).signum();
+        let s = BitMatrix::from_dense(&sd);
+        let x = random_block(n, b, &mut rng);
+        let mut g = vec![0.0f32; n];
+        let mut h = vec![0.0f32; m];
+        rng.fill_uniform(&mut g, 0.2, 1.8);
+        rng.fill_uniform(&mut h, 0.2, 1.8);
+        let want = sd.scale_rows(&h).scale_cols(&g).matmul(&x);
+        let mut got = Mat::zeros(m, b);
+        gemm_sign_scaled(&s, Some(&g), &x, Some(&h), &mut got);
+        for (a, c) in want.as_slice().iter().zip(got.as_slice()) {
+            assert!((a - c).abs() < 2e-3 * (n as f32).sqrt(), "{a} vs {c}");
+        }
+    }
+
     #[test]
     fn empty_batch_is_a_no_op() {
         let mut rng = Pcg64::seed(25);
@@ -265,5 +478,7 @@ mod tests {
         let mut y = Mat::zeros(5, 0);
         gemm_sign(&s, &x, &mut y);
         gemm_sign_mt(&s, &x, &mut y, 4);
+        gemm_sign_scaled(&s, None, &x, None, &mut y);
+        gemm_sign_mt_scoped(&s, &x, &mut y, 4);
     }
 }

@@ -1,9 +1,33 @@
-//! GEMV kernels: dense f32 baseline, sign-GEMV over packed bits, the fused
-//! tri-scale low-rank forward (the deployed LittleBit layer), and an
-//! XNOR-popcount GEMM for the binary-binary BOPs story.
+//! GEMV kernels: dense f32 baseline, sign-GEMV over packed bits (plain and
+//! scale-fused), the tri-scale low-rank forward (the deployed LittleBit
+//! layer), and an XNOR-popcount GEMM for the binary-binary BOPs story.
 
+use super::pool::SignPool;
 use super::BitMatrix;
 use crate::linalg::Mat;
+use std::cell::RefCell;
+
+thread_local! {
+    /// Per-thread pre-scaled activation buffer for the fused GEMV: the
+    /// `in_scale ⊙ x` products are formed **once per call** (`n`
+    /// multiplies — the unfused pass's exact cost and exact f32 results)
+    /// and then reused by every output row, instead of being recomputed
+    /// inside each row's XOR loop or once per pool job.
+    static XSCALED: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Run `f` against the thread-local pre-scaled copy of `x`
+/// (`in_scale ⊙ x`, identical f32 products to the unfused pass, formed
+/// once). Shared with `packing::pool`, which hoists the input scale here
+/// before partitioning rows into jobs.
+pub(crate) fn with_scaled_vec<R>(x: &[f32], in_scale: &[f32], f: impl FnOnce(&[f32]) -> R) -> R {
+    XSCALED.with(|cell| {
+        let xs = &mut *cell.borrow_mut();
+        xs.clear();
+        xs.extend(x.iter().zip(in_scale).map(|(a, b)| a * b));
+        f(xs)
+    })
+}
 
 /// Dense f32 GEMV baseline, `y = W x`. This is the cuBLAS stand-in for the
 /// §6.2 speedup comparison — a straightforward row-major dot-product loop
@@ -41,7 +65,9 @@ pub fn gemv_dense(w: &Mat, x: &[f32], y: &mut [f32]) {
 /// this rewrite took the 2752×1024 MLP GEMV from 0.14× of dense to >1× at
 /// 1 bpp; measured in EXPERIMENTS.md at the repository root). For batch > 1
 /// use [`gemm_sign`](super::gemm_sign), which loads each sign word once per
-/// strip of batch columns and is bit-exact against this kernel.
+/// strip of batch columns and is bit-exact against this kernel. For the
+/// deployed tri-scale pipeline use [`gemv_sign_scaled`], which folds the
+/// element-wise scale vectors of Eq. 1 into this same loop.
 pub fn gemv_sign(s: &BitMatrix, x: &[f32], y: &mut [f32]) {
     assert_eq!(s.cols(), x.len());
     assert_eq!(s.rows(), y.len());
@@ -49,10 +75,25 @@ pub fn gemv_sign(s: &BitMatrix, x: &[f32], y: &mut [f32]) {
 }
 
 /// Compute output rows `row0..row0 + y.len()` of `S x` into `y` — the
-/// row-range core shared by [`gemv_sign`] and the threaded variant in
-/// `packing::gemm` (each thread takes a disjoint row range, so results are
+/// row-range core shared by [`gemv_sign`] and the pool-dispatched variant
+/// in `packing::pool` (each job takes a disjoint row range, so results are
 /// bit-identical to the serial kernel).
 pub(crate) fn gemv_sign_rows(s: &BitMatrix, x: &[f32], y: &mut [f32], row0: usize) {
+    gemv_sign_out_rows(s, x, None, y, row0);
+}
+
+/// The shared sign-GEMV row-range loop, with the output scale (when
+/// present) folded into each row's final lane reduction — one multiply on
+/// the reduced sum, the same rounding a separate output pass would apply.
+/// This is the kernel every pool GEMV job runs; input scaling happens once
+/// per call via [`with_scaled_vec`] before rows are partitioned.
+pub(crate) fn gemv_sign_out_rows(
+    s: &BitMatrix,
+    x: &[f32],
+    out_scale: Option<&[f32]>,
+    y: &mut [f32],
+    row0: usize,
+) {
     let cols = s.cols();
     let full_words = cols / 64;
     for (i, yi) in y.iter_mut().enumerate() {
@@ -80,13 +121,72 @@ pub(crate) fn gemv_sign_rows(s: &BitMatrix, x: &[f32], y: &mut [f32], row0: usiz
                 acc[k & 7] += f32::from_bits(xv.to_bits() ^ neg);
             }
         }
-        *yi = acc.iter().sum::<f32>();
+        let sum = acc.iter().sum::<f32>();
+        *yi = match out_scale {
+            Some(h) => sum * h[row0 + i],
+            None => sum,
+        };
+    }
+}
+
+/// Scale-fused sign-GEMV:
+/// `y = diag(out_scale) · S · (in_scale ⊙ x)`, with either scale optional.
+///
+/// The input scale is applied once per call into a reused thread-local
+/// buffer (`n` multiplies — the unfused pass's cost, with zero
+/// allocations after warm-up) that every output row then streams, and the
+/// output scale folds into the final lane reduction (`Σacc · out_scale[i]`
+/// — one multiply per output element). This removes the two separate
+/// element-wise passes (and their per-call temporaries) the unfused
+/// composition scale → [`gemv_sign`] → scale makes over the activations,
+/// and is **bit-exact** against it: the products and the reduction order
+/// are unchanged, only the passes are fused (asserted by
+/// `gemv_scaled_matches_unfused_composition_bit_exactly`).
+pub fn gemv_sign_scaled(
+    s: &BitMatrix,
+    in_scale: Option<&[f32]>,
+    x: &[f32],
+    out_scale: Option<&[f32]>,
+    y: &mut [f32],
+) {
+    assert_eq!(s.cols(), x.len());
+    assert_eq!(s.rows(), y.len());
+    if let Some(g) = in_scale {
+        assert_eq!(g.len(), s.cols(), "in_scale length");
+    }
+    if let Some(h) = out_scale {
+        assert_eq!(h.len(), s.rows(), "out_scale length");
+    }
+    gemv_sign_scaled_rows(s, in_scale, x, out_scale, y, 0);
+}
+
+/// Row-range form of [`gemv_sign_scaled`]: pre-scales the activations once
+/// (same f32 products as the unfused pass — not once per row, not once per
+/// job), then runs the exact [`gemv_sign_rows`] loop over them with the
+/// output scale folded into each row's lane reduction. Reduction order
+/// (and therefore every rounding) is identical to the unfused composition.
+fn gemv_sign_scaled_rows(
+    s: &BitMatrix,
+    in_scale: Option<&[f32]>,
+    x: &[f32],
+    out_scale: Option<&[f32]>,
+    y: &mut [f32],
+    row0: usize,
+) {
+    match in_scale {
+        Some(g) => with_scaled_vec(x, g, |xs| gemv_sign_out_rows(s, xs, out_scale, y, row0)),
+        None => gemv_sign_out_rows(s, x, out_scale, y, row0),
     }
 }
 
 /// The deployed LittleBit inference layer: packed binary factors plus the
 /// three FP scales of Eq. 1, with `V_b` stored pre-transposed so both
-/// binary stages stream rows.
+/// binary stages stream rows. All forward paths run the **scale-fused**
+/// kernels ([`gemv_sign_scaled`] / [`super::gemm_sign_scaled`]): `g` and
+/// `l` are applied exactly once per call into reused thread-local
+/// buffers, `h` folds into the second kernel's lane reduction — zero
+/// separate output passes, zero per-call allocations, and bit-identical
+/// numbers to the unfused composition.
 #[derive(Clone, Debug)]
 pub struct TriScaleLayer {
     /// `U_b` packed, `d_out × r`.
@@ -134,8 +234,8 @@ impl TriScaleLayer {
             + 2 * (self.h.len() + self.l.len() + self.g.len())
     }
 
-    /// `y = h ⊙ (U_b (l ⊙ (V_bᵀ (g ⊙ x))))` — two sign-GEMVs and three
-    /// element-wise scales; zero FP multiplies against weights.
+    /// `y = h ⊙ (U_b (l ⊙ (V_bᵀ (g ⊙ x))))` — two *fused* sign-GEMVs; zero
+    /// FP multiplies against weights and zero separate scale passes.
     pub fn forward(&self, x: &[f32]) -> Vec<f32> {
         let mut scratch = Scratch::default();
         let mut out = vec![0.0f32; self.d_out()];
@@ -145,24 +245,20 @@ impl TriScaleLayer {
 
     /// Allocation-free forward for the serving hot loop: `out` must be
     /// `d_out` long; `scratch` is reused across calls (§Perf iteration 2).
+    /// Both stages run [`gemv_sign_scaled`] — `g` and `l` are each applied
+    /// once into the kernel's reused buffer, `h` folds into the second
+    /// stage's lane reduction (§Perf iteration 3: no separate scale
+    /// passes, no per-call `xg` allocation).
     pub fn forward_into(&self, x: &[f32], out: &mut [f32], scratch: &mut Scratch) {
         debug_assert_eq!(out.len(), self.d_out());
-        scratch.xg.clear();
-        scratch.xg.extend(x.iter().zip(&self.g).map(|(a, b)| a * b));
         scratch.latent.resize(self.rank(), 0.0);
-        gemv_sign(&self.vbt, &scratch.xg, &mut scratch.latent);
-        for (v, &li) in scratch.latent.iter_mut().zip(&self.l) {
-            *v *= li;
-        }
-        gemv_sign(&self.ub, &scratch.latent, out);
-        for (v, &hi) in out.iter_mut().zip(&self.h) {
-            *v *= hi;
-        }
+        gemv_sign_scaled(&self.vbt, Some(&self.g), x, None, &mut scratch.latent);
+        gemv_sign_scaled(&self.ub, Some(&self.l), &scratch.latent, Some(&self.h), out);
     }
 
     /// Batched forward: `X` is `d_in × b` **feature-major** (column `t` is
     /// batch item `t`), returns `d_out × b`. Runs the whole batch through
-    /// two sign-GEMMs so every packed weight word is loaded once per
+    /// two fused sign-GEMMs so every packed weight word is loaded once per
     /// 8-column strip instead of once per request; column `t` of the result
     /// is bit-identical to `forward` on item `t`.
     ///
@@ -187,17 +283,61 @@ impl TriScaleLayer {
     }
 
     /// [`forward_batch`](Self::forward_batch) with both sign-GEMMs split
-    /// row-parallel over `threads` OS threads (bit-identical output for any
-    /// thread count).
+    /// row-parallel into `threads` ranges on the process-wide
+    /// [`SignPool`] (bit-identical output for any thread count — row
+    /// partitioning changes no per-element reduction order).
     pub fn forward_batch_mt(&self, x: &Mat, threads: usize) -> Mat {
+        let mut y = Mat::default();
+        let mut scratch = BatchScratch::default();
+        self.forward_batch_into(x, &mut y, &mut scratch, SignPool::for_threads(threads), threads);
+        y
+    }
+
+    /// Allocation-free batched forward — the serving hot path. `y` is
+    /// resized to `d_out × b` in place; the latent block lives in `scratch`
+    /// and is reused across calls; both fused sign-GEMMs are split into
+    /// `threads` row ranges executed on `pool` (1 = serial, no dispatch).
+    /// Bit-identical to [`forward_batch`](Self::forward_batch) and to
+    /// per-column [`forward`](Self::forward).
+    pub fn forward_batch_into(
+        &self,
+        x: &Mat,
+        y: &mut Mat,
+        scratch: &mut BatchScratch,
+        pool: &SignPool,
+        threads: usize,
+    ) {
+        assert_eq!(x.rows(), self.d_in(), "X must be d_in × b feature-major");
+        let b = x.cols();
+        scratch.latent.resize(self.rank(), b);
+        y.resize(self.d_out(), b);
+        pool.run_gemm(&self.vbt, Some(&self.g), x, None, scratch.latent.as_mut_slice(), threads);
+        pool.run_gemm(
+            &self.ub,
+            Some(&self.l),
+            &scratch.latent,
+            Some(&self.h),
+            y.as_mut_slice(),
+            threads,
+        );
+    }
+
+    /// The pre-pool, pre-fusion batched forward kept as the measured
+    /// baseline for `benches/gemm_speedup.rs`: three separate scale passes
+    /// (each allocating an intermediate `Mat`) around two plain sign-GEMMs
+    /// whose row ranges run on per-call `std::thread::scope` threads.
+    /// Bit-identical to [`forward_batch_mt`](Self::forward_batch_mt) —
+    /// asserted by `fused_pool_matches_scoped_unfused_bit_exactly` — just
+    /// slower, which is exactly what the bench quantifies.
+    pub fn forward_batch_scoped(&self, x: &Mat, threads: usize) -> Mat {
         assert_eq!(x.rows(), self.d_in(), "X must be d_in × b feature-major");
         let b = x.cols();
         let xg = x.scale_rows(&self.g);
         let mut latent = Mat::zeros(self.rank(), b);
-        super::gemm_sign_mt(&self.vbt, &xg, &mut latent, threads);
+        super::gemm_sign_mt_scoped(&self.vbt, &xg, &mut latent, threads);
         let latent = latent.scale_rows(&self.l);
         let mut out = Mat::zeros(self.d_out(), b);
-        super::gemm_sign_mt(&self.ub, &latent, &mut out, threads);
+        super::gemm_sign_mt_scoped(&self.ub, &latent, &mut out, threads);
         for (i, &hi) in self.h.iter().enumerate() {
             for v in out.row_mut(i) {
                 *v *= hi;
@@ -220,7 +360,7 @@ impl TriScaleLayer {
     }
 
     /// Operation count of one forward: (sign-adds, fp-mults).
-    // (scratch type defined below)
+    // (scratch types defined below)
     pub fn op_counts(&self) -> (usize, usize) {
         let sign_adds = self.rank() * (self.d_in() + self.d_out());
         let fp_mults = self.d_in() + self.rank() + self.d_out();
@@ -228,12 +368,29 @@ impl TriScaleLayer {
     }
 }
 
-/// Reusable buffers for the allocation-free forward path.
+/// Reusable buffers for the allocation-free single-request forward path.
 #[derive(Clone, Debug, Default)]
 pub struct Scratch {
-    xg: Vec<f32>,
     latent: Vec<f32>,
     path_out: Vec<f32>,
+}
+
+/// Reusable buffers for the allocation-free **batched** forward path
+/// ([`TriScaleLayer::forward_batch_into`] and the `PackedResidual` /
+/// `PackedStack` equivalents): the latent block, the per-path accumulation
+/// block, and the ping/pong activation blocks a layer chain bounces
+/// between. All grow in place ([`Mat::resize`]) and are reused across
+/// requests — one scratch per server worker serves every batch size.
+#[derive(Clone, Debug, Default)]
+pub struct BatchScratch {
+    /// `r × b` latent activations between the two fused sign-GEMMs.
+    pub(crate) latent: Mat,
+    /// `d_out × b` per-path output, accumulated into the batch result by
+    /// the residual composition.
+    pub(crate) path_out: Mat,
+    /// Ping/pong activation blocks for sequential layer chains.
+    pub(crate) ping: Mat,
+    pub(crate) pong: Mat,
 }
 
 /// XNOR-popcount GEMM for fully-binary operands (`A ∈ {±1}^{m×k}`,
@@ -299,6 +456,64 @@ mod tests {
         assert_eq!(y, vec![-2.0, -2.0]);
     }
 
+    /// The fused-kernel acceptance contract at the GEMV level: folding the
+    /// scales into the sign-XOR loop and lane reduction must be bit-exact
+    /// against the unfused scale → gemv_sign → scale composition, for every
+    /// combination of present/absent scales, on ragged shapes whose columns
+    /// span multiple words plus a tail.
+    #[test]
+    fn gemv_scaled_matches_unfused_composition_bit_exactly() {
+        let mut rng = Pcg64::seed(51);
+        for (m, n) in [(4, 4), (16, 64), (33, 130), (8, 200), (7, 63), (5, 191), (9, 65)] {
+            let s = BitMatrix::from_dense(&Mat::gaussian(m, n, &mut rng).signum());
+            let mut x = vec![0.0f32; n];
+            rng.fill_normal(&mut x);
+            let mut g = vec![0.0f32; n];
+            let mut h = vec![0.0f32; m];
+            rng.fill_uniform(&mut g, 0.2, 1.8);
+            rng.fill_uniform(&mut h, 0.2, 1.8);
+
+            // Unfused reference: explicit passes.
+            let xg: Vec<f32> = x.iter().zip(&g).map(|(a, b)| a * b).collect();
+            let mut base = vec![0.0f32; m];
+            gemv_sign(&s, &xg, &mut base);
+            let scaled_out: Vec<f32> = base.iter().zip(&h).map(|(a, b)| a * b).collect();
+
+            for (ins, outs) in [
+                (Some(g.as_slice()), Some(h.as_slice())),
+                (Some(g.as_slice()), None),
+                (None, Some(h.as_slice())),
+                (None, None),
+            ] {
+                let mut got = vec![0.0f32; m];
+                gemv_sign_scaled(&s, ins, &x, outs, &mut got);
+                let xin = if ins.is_some() { &xg } else { &x };
+                let mut want = vec![0.0f32; m];
+                gemv_sign(&s, xin, &mut want);
+                if outs.is_some() {
+                    for (w, &hi) in want.iter_mut().zip(&h) {
+                        *w *= hi;
+                    }
+                }
+                for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "{m}x{n} ins={} outs={} row {i}: {a} vs {b}",
+                        ins.is_some(),
+                        outs.is_some()
+                    );
+                }
+            }
+            // And the both-scales case equals the fully composed reference.
+            let mut got = vec![0.0f32; m];
+            gemv_sign_scaled(&s, Some(&g), &x, Some(&h), &mut got);
+            for (a, b) in scaled_out.iter().zip(&got) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
     #[test]
     fn xnor_gemm_matches_dense_product() {
         let mut rng = Pcg64::seed(2);
@@ -333,21 +548,25 @@ mod tests {
         assert!(bpp < 0.2, "bpp={bpp}");
     }
 
-    /// Batched forward must be bit-identical to the per-item forward: both
-    /// paths share the same per-column reduction order by construction.
-    #[test]
-    fn forward_batch_matches_per_item_forward_bit_exactly() {
-        let mut rng = Pcg64::seed(6);
-        let (d_out, d_in, r, b) = (96, 80, 16, 11);
-        let ub = Mat::gaussian(d_out, r, &mut rng).signum();
-        let vb = Mat::gaussian(d_in, r, &mut rng).signum();
+    fn random_layer(d_out: usize, d_in: usize, r: usize, rng: &mut Pcg64) -> TriScaleLayer {
+        let ub = Mat::gaussian(d_out, r, rng).signum();
+        let vb = Mat::gaussian(d_in, r, rng).signum();
         let mut h = vec![0.0f32; d_out];
         let mut l = vec![0.0f32; r];
         let mut g = vec![0.0f32; d_in];
         rng.fill_uniform(&mut h, 0.5, 1.5);
         rng.fill_uniform(&mut l, 0.1, 1.0);
         rng.fill_uniform(&mut g, 0.5, 1.5);
-        let layer = TriScaleLayer::new(&ub, &vb, h, l, g);
+        TriScaleLayer::new(&ub, &vb, h, l, g)
+    }
+
+    /// Batched forward must be bit-identical to the per-item forward: both
+    /// paths share the same per-column reduction order by construction.
+    #[test]
+    fn forward_batch_matches_per_item_forward_bit_exactly() {
+        let mut rng = Pcg64::seed(6);
+        let (d_out, d_in, r, b) = (96, 80, 16, 11);
+        let layer = random_layer(d_out, d_in, r, &mut rng);
 
         let mut x = Mat::zeros(d_in, b);
         rng.fill_normal(x.as_mut_slice());
@@ -365,6 +584,44 @@ mod tests {
                     want[i]
                 );
             }
+        }
+    }
+
+    /// The tentpole acceptance contract: the fused pool path must be
+    /// bit-exact against the PR 1 scoped-spawn unfused path, at every
+    /// thread count, including a ragged d_in spanning words plus a tail.
+    #[test]
+    fn fused_pool_matches_scoped_unfused_bit_exactly() {
+        let mut rng = Pcg64::seed(7);
+        for (d_out, d_in, r, b) in [(96, 80, 16, 11), (33, 130, 24, 8), (20, 200, 16, 5)] {
+            let layer = random_layer(d_out, d_in, r, &mut rng);
+            let mut x = Mat::zeros(d_in, b);
+            rng.fill_normal(x.as_mut_slice());
+            for threads in [1usize, 2, 7, 64] {
+                let scoped = layer.forward_batch_scoped(&x, threads);
+                let fused = layer.forward_batch_mt(&x, threads);
+                assert_eq!(scoped, fused, "{d_out}x{d_in} r={r} threads={threads}");
+            }
+        }
+    }
+
+    /// One `BatchScratch` must serve calls of varying batch size and layer
+    /// shape without cross-talk: each call's output equals a fresh-scratch
+    /// run, bit for bit.
+    #[test]
+    fn batch_scratch_reuse_across_shapes_is_clean() {
+        let mut rng = Pcg64::seed(8);
+        let wide = random_layer(48, 96, 12, &mut rng);
+        let tall = random_layer(96, 48, 8, &mut rng);
+        let mut scratch = BatchScratch::default();
+        let mut y = Mat::default();
+        let pool = SignPool::global();
+        for (layer, b) in [(&wide, 9usize), (&tall, 3), (&wide, 1), (&tall, 12), (&wide, 5)] {
+            let mut x = Mat::zeros(layer.d_in(), b);
+            rng.fill_normal(x.as_mut_slice());
+            layer.forward_batch_into(&x, &mut y, &mut scratch, pool, 2);
+            let fresh = layer.forward_batch(&x);
+            assert_eq!(y, fresh, "b={b}");
         }
     }
 

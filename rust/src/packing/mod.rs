@@ -22,21 +22,31 @@
 //! At batch > 1 the same weights are driven through the batched sign-GEMM
 //! ([`gemm_sign`], `gemm` module): activations are handled as a feature-
 //! major `d × b` block and each packed sign word is loaded once per strip
-//! of 8 batch columns instead of once per request. Row-parallel `*_mt`
-//! variants split either kernel across OS threads; both batching and
-//! threading are bit-exact against the serial GEMV. [`PackedResidual`]
-//! composes the packed paths of one compressed layer for serving.
+//! of 8 batch columns instead of once per request. The deployed tri-scale
+//! pipeline runs the **scale-fused** kernels ([`gemv_sign_scaled`] /
+//! [`gemm_sign_scaled`]): `g`/`l` fold into the sign-XOR loop and `h` into
+//! the final lane reduction, eliminating every separate element-wise pass
+//! — bit-exactly. Row-parallel `*_mt` variants split either kernel into
+//! row-range jobs on the persistent [`SignPool`] (`pool` module; no
+//! per-call thread spawning); batching, fusion, and threading are all
+//! bit-exact against the serial GEMV. [`PackedResidual`] composes the
+//! packed paths of one compressed layer for serving, and [`BatchScratch`]
+//! carries the reusable latent/output blocks that make the batched forward
+//! allocation-free across requests.
 
 mod bitmat;
 mod gemm;
 mod gemv;
+mod pool;
 mod residual;
 
 pub use bitmat::BitMatrix;
-pub use gemm::{gemm_sign, gemm_sign_mt, gemv_sign_mt};
+pub use gemm::{gemm_sign, gemm_sign_mt, gemm_sign_mt_scoped, gemm_sign_scaled, gemv_sign_mt};
 pub use gemv::{
-    gemv_dense, gemv_sign, tri_scale_gemv, xnor_popcount_gemm, Scratch, TriScaleLayer,
+    gemv_dense, gemv_sign, gemv_sign_scaled, tri_scale_gemv, xnor_popcount_gemm,
+    BatchScratch, Scratch, TriScaleLayer,
 };
+pub use pool::SignPool;
 pub use residual::PackedResidual;
 
 #[cfg(test)]

@@ -4,7 +4,7 @@
 //! load time, then running single requests through the scratch-reusing GEMV
 //! pipeline or whole batches through the sign-GEMM pipeline.
 
-use super::{Scratch, TriScaleLayer};
+use super::{BatchScratch, Scratch, SignPool, TriScaleLayer};
 use crate::linalg::Mat;
 
 /// All packed paths of one compressed layer (the paper deploys 2).
@@ -75,12 +75,53 @@ impl PackedResidual {
         self.forward_batch_mt(x, 1)
     }
 
-    /// [`forward_batch`](Self::forward_batch) with the sign-GEMMs split
-    /// over `threads` OS threads.
+    /// [`forward_batch`](Self::forward_batch) with the fused sign-GEMMs
+    /// split into `threads` row ranges on the process-wide [`SignPool`].
     pub fn forward_batch_mt(&self, x: &Mat, threads: usize) -> Mat {
-        let mut out = self.paths[0].forward_batch_mt(x, threads);
+        let mut y = Mat::default();
+        let mut scratch = BatchScratch::default();
+        self.forward_batch_into(x, &mut y, &mut scratch, SignPool::for_threads(threads), threads);
+        y
+    }
+
+    /// Allocation-free batched forward — the serving hot path. `y` is
+    /// resized to `d_out × b` in place; every path runs the fused
+    /// sign-GEMM pipeline through `scratch` (latent + per-path blocks,
+    /// reused across calls), with row ranges executed on `pool`. Column
+    /// `t` stays bit-identical to [`forward`](Self::forward) on item `t`.
+    pub fn forward_batch_into(
+        &self,
+        x: &Mat,
+        y: &mut Mat,
+        scratch: &mut BatchScratch,
+        pool: &SignPool,
+        threads: usize,
+    ) {
+        self.paths[0].forward_batch_into(x, y, scratch, pool, threads);
+        if self.paths.len() > 1 {
+            // Reborrow dance (cf. forward_accumulate): the per-path output
+            // block leaves the scratch while the scratch's latent block is
+            // in use, then returns.
+            let mut tmp = std::mem::take(&mut scratch.path_out);
+            for p in &self.paths[1..] {
+                p.forward_batch_into(x, &mut tmp, scratch, pool, threads);
+                for (o, v) in y.as_mut_slice().iter_mut().zip(tmp.as_slice()) {
+                    *o += v;
+                }
+            }
+            scratch.path_out = tmp;
+        }
+    }
+
+    /// The PR 1 batched engine verbatim — per-path unfused scale passes
+    /// around plain sign-GEMMs on per-call `std::thread::scope` spawns —
+    /// kept as the measured "before" baseline for `benches/gemm_speedup.rs`
+    /// and `examples/serve.rs`. Bit-identical to
+    /// [`forward_batch_mt`](Self::forward_batch_mt), just slower.
+    pub fn forward_batch_scoped(&self, x: &Mat, threads: usize) -> Mat {
+        let mut out = self.paths[0].forward_batch_scoped(x, threads);
         for p in &self.paths[1..] {
-            let y = p.forward_batch_mt(x, threads);
+            let y = p.forward_batch_scoped(x, threads);
             for (o, v) in out.as_mut_slice().iter_mut().zip(y.as_slice()) {
                 *o += v;
             }
@@ -134,6 +175,27 @@ mod tests {
             for i in 0..packed.d_out() {
                 assert_eq!(batched.at(i, t).to_bits(), want[i].to_bits(), "({i},{t})");
             }
+        }
+    }
+
+    /// One worker's `BatchScratch` serving many batches of varying width
+    /// must give bit-identical results to fresh-scratch runs — the
+    /// allocation-free serving loop's correctness contract.
+    #[test]
+    fn forward_batch_into_scratch_reuse_is_clean() {
+        let (_, packed) = packed_pair(37);
+        let mut rng = Pcg64::seed(38);
+        let mut scratch = BatchScratch::default();
+        let mut y = Mat::default();
+        let pool = SignPool::global();
+        for b in [4usize, 1, 9, 2] {
+            let mut x = Mat::zeros(packed.d_in(), b);
+            rng.fill_normal(x.as_mut_slice());
+            packed.forward_batch_into(&x, &mut y, &mut scratch, pool, 2);
+            assert_eq!(y, packed.forward_batch(&x), "b={b}");
+            // The kept PR 1 engine must stay bit-identical to the fused
+            // pool path at the residual-composition level, too.
+            assert_eq!(y, packed.forward_batch_scoped(&x, 2), "scoped b={b}");
         }
     }
 
