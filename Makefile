@@ -4,13 +4,22 @@
 # PJRT-gated paths (`--features xla`): the train CLI, examples/e2e_qat,
 # tests/runtime_e2e.
 
-.PHONY: build test bench bench-build bench-gemm clippy artifacts doc
+.PHONY: build test bench bench-build bench-gemm clippy artifacts doc roundtrip
 
 build:
 	cargo build --release
 
 test: build
 	cargo test -q
+
+# The deployment pipeline, end to end: quantize a tiny model once, persist
+# it as a versioned .lb2 artifact, then load + serve a batch of requests
+# from it on the worker pool. Run by the build-test CI job so
+# compress→save→load→serve stays green. (`serve` fails loudly on a
+# corrupt/truncated artifact — see ARCHITECTURE.md "Artifact format".)
+roundtrip: build
+	cargo run --release -- compress --size 48 --layers 2 --bpp 1.0 --out target/roundtrip.lb2
+	cargo run --release -- serve --model target/roundtrip.lb2 --workers 2 --batch 8 --requests 32
 
 bench:
 	cargo bench

@@ -3,44 +3,76 @@
 //! Each drained batch runs as ONE **fused** batched sign-GEMM forward —
 //! scales folded into the kernels, row ranges on the persistent
 //! `SignPool`, buffers reused via `BatchScratch` — so a steady-state batch
-//! allocates nothing and spawns nothing. The report covers tokens/s,
-//! per-batch kernel throughput, latency percentiles, a kernel-level
-//! dense-vs-packed comparison at batch 1 and batch 32, and the
+//! allocates nothing and spawns nothing.
+//!
+//! The model comes from a `.lb2` artifact when one is given (the
+//! quantize-once / serve-from-many deployment story:
+//! `littlebit2 compress --out model.lb2` first), and falls back to
+//! fabricating + compressing a synthetic layer in-process. In fabricate
+//! mode the report additionally covers the kernel-level dense-vs-packed
+//! comparison (the dense reference only exists there) and the
 //! fused-pool-vs-scoped-unfused engine ratio (PR 2's tentpole).
 //!
 //! ```bash
-//! cargo run --release --example serve [n_requests] [d] [bpp] [workers] [threads]
+//! cargo run --release --example serve [model.lb2] [n_requests] [d] [bpp] [workers] [threads]
 //! ```
+//!
+//! A leading argument that doesn't parse as a number is treated as the
+//! artifact path; all numeric arguments keep their positions after it.
 
-use littlebit2::coordinator::{InferenceServer, PackedResidualBackend, ServerConfig};
+use littlebit2::coordinator::{InferenceServer, PackedStackBackend, ServerConfig};
 use littlebit2::linalg::Mat;
 use littlebit2::littlebit::{compress, CompressionConfig, InitStrategy};
+use littlebit2::model::PackedStack;
 use littlebit2::rng::Pcg64;
 use littlebit2::spectral::{synth_weight, SynthSpec};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 fn main() -> anyhow::Result<()> {
-    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    let model_path = match args.first() {
+        Some(a) if a.parse::<usize>().is_err() => Some(args.remove(0)),
+        _ => None,
+    };
     let n_requests: usize = args.first().map(|s| s.parse()).transpose()?.unwrap_or(256);
     let d: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(1024);
     let bpp: f64 = args.get(2).map(|s| s.parse()).transpose()?.unwrap_or(0.55);
     let workers: usize = args.get(3).map(|s| s.parse()).transpose()?.unwrap_or(2);
     let threads: usize = args.get(4).map(|s| s.parse()).transpose()?.unwrap_or(1);
 
-    println!("compressing a {d}x{d} layer at {bpp} bpp ...");
     let mut rng = Pcg64::seed(1);
-    let spec = SynthSpec { rows: d, cols: d, gamma: 0.3, coherence: 0.7, scale: 1.0 };
-    let w = synth_weight(&spec, &mut rng);
-    let cfg = CompressionConfig {
-        bpp,
-        strategy: InitStrategy::JointItq { iters: 30 },
-        residual: true,
-        ..Default::default()
+    // Load the artifact when given; otherwise fabricate + compress a
+    // synthetic layer (keeping the dense weight as the kernel baseline).
+    let (stack, dense) = match &model_path {
+        Some(path) => {
+            println!("loading {path} ...");
+            let stack = PackedStack::load(path)?;
+            println!(
+                "loaded: depth {} | {} -> {} features | packed weights {} bytes",
+                stack.depth(),
+                stack.d_in(),
+                stack.d_out(),
+                stack.storage_bytes()
+            );
+            (Arc::new(stack), None)
+        }
+        None => {
+            println!("no artifact given; compressing a {d}x{d} layer at {bpp} bpp ...");
+            let spec = SynthSpec { rows: d, cols: d, gamma: 0.3, coherence: 0.7, scale: 1.0 };
+            let w = synth_weight(&spec, &mut rng);
+            let cfg = CompressionConfig {
+                bpp,
+                strategy: InitStrategy::JointItq { iters: 30 },
+                residual: true,
+                ..Default::default()
+            };
+            // Pack once at load time; all workers share the read-only model.
+            let stack = compress(&w, &cfg, &mut rng).pack_stack();
+            (Arc::new(stack), Some(w))
+        }
     };
-    let compressed = compress(&w, &cfg, &mut rng);
-    // Pack once at load time; all workers share the read-only model.
-    let model = Arc::new(compressed.pack());
+    let d_in = stack.d_in();
 
     let server = InferenceServer::start_pool(
         ServerConfig {
@@ -49,11 +81,11 @@ fn main() -> anyhow::Result<()> {
             queue_depth: 1024,
             workers,
         },
-        |_worker| PackedResidualBackend::new(Arc::clone(&model), threads),
+        |_worker| PackedStackBackend::new(Arc::clone(&stack), threads),
     );
     let mut inputs = Vec::new();
     for _ in 0..n_requests {
-        let mut x = vec![0.0f32; d];
+        let mut x = vec![0.0f32; d_in];
         rng.fill_normal(&mut x);
         inputs.push(x);
     }
@@ -83,8 +115,14 @@ fn main() -> anyhow::Result<()> {
         stats.p99_ms
     );
 
-    // Kernel-level comparison at the same shape: dense FP32 GEMV vs the
-    // packed pipeline at batch 1 (GEMV) and batch 32 (sign-GEMM).
+    // Kernel-level comparison needs the dense reference weight — only
+    // available in fabricate mode (a loaded artifact carries packed signs
+    // and scales, deliberately not the FP teacher).
+    let Some(w) = dense else { return Ok(()) };
+    let model = &stack.layers()[0];
+
+    // Dense FP32 GEMV vs the packed pipeline at batch 1 (GEMV) and batch
+    // 32 (sign-GEMM).
     let mut x = vec![0.0f32; d];
     rng.fill_normal(&mut x);
     let mut y = vec![0.0f32; d];

@@ -1,0 +1,129 @@
+//! Versioned binary model artifacts — the `.lb2` format.
+//!
+//! PR 1–2 made the engine fast; this module makes it *deployable*: a
+//! compressed model is quantized **once** (`littlebit2 compress --out
+//! model.lb2`), persisted as a durable artifact, and then served from any
+//! number of worker processes (`littlebit2 serve --model model.lb2`) — the
+//! OneBit/BTC-LLM-style sign-matrix + scale artifact contract, specialized
+//! to the tri-scale residual stack this reproduction deploys.
+//!
+//! ## Container layout (version 1, all integers little-endian)
+//!
+//! ```text
+//! ┌──────────────────────────────────────────────────────────────────┐
+//! │ magic   4 B   89 4C 42 32  ("\x89LB2" — high bit catches text    │
+//! │                             mangling, PNG-style)                 │
+//! │ version 4 B   u32 = 1                                            │
+//! ├──────────────────────────────────────────────────────────────────┤
+//! │ section ×N:   tag 4 B │ len u64 │ payload len B                  │
+//! ├──────────────────────────────────────────────────────────────────┤
+//! │ trailer:      tag "END\0" │ len u64 = 8 │ section count u32      │
+//! │               │ CRC32 u32                                        │
+//! └──────────────────────────────────────────────────────────────────┘
+//! ```
+//!
+//! The tag+length framing *is* the section table: [`ArtifactReader`] walks
+//! it once at open, bounds-checking every length, verifies the trailer's
+//! section count, and checks the IEEE CRC32 of **every byte before the CRC
+//! field itself** (magic and version included). Truncation at any byte,
+//! a flipped bit anywhere, unknown framing, or trailing garbage after the
+//! trailer all fail with `Err` before a single section is handed out —
+//! never a panic, never silently-wrong weights.
+//!
+//! ## Model payload (what [`crate::model::PackedStack::save`] writes)
+//!
+//! ```text
+//! "META"  tool-info bytes (crate version string; informational only)
+//! "STAK"  shape header: u32 depth, then depth × (u32 d_in, u32 d_out,
+//!         u32 n_paths) — the ArchSpec-style shape table, cross-checked
+//!         against the layer sections on load
+//! "LAYR"  × depth, in chain order:
+//!           u32 n_paths
+//!           per path: u32 d_out │ u32 d_in │ u32 rank
+//!                     h  d_out × f32   (row scale)
+//!                     l  rank  × f32   (latent scale)
+//!                     g  d_in  × f32   (column scale)
+//!                     U_b   d_out·⌈rank/64⌉ × u64  (packed bit-plane,
+//!                                                   BitMatrix words verbatim)
+//!                     V_bᵀ  rank·⌈d_in/64⌉  × u64  (pre-transposed, verbatim)
+//! ```
+//!
+//! Bit-planes are stored as the kernel-native packed `u64` words, so
+//! loading is a straight copy — no re-packing, no float round-trips — and
+//! a loaded stack's `forward_batch` is **bit-identical** to the stack that
+//! was saved (asserted by `tests/artifact_roundtrip.rs`).
+
+mod reader;
+mod stack;
+mod writer;
+
+pub use reader::ArtifactReader;
+pub use stack::{load_stack, read_stack, save_stack, write_stack};
+pub use writer::ArtifactWriter;
+
+/// File magic: `\x89LB2`. The non-ASCII lead byte makes accidental
+/// text-mode transcoding fail the very first check.
+pub const MAGIC: [u8; 4] = [0x89, b'L', b'B', b'2'];
+
+/// Container format version written by this build.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Tool-info section (informational bytes; content is not validated).
+pub const TAG_META: [u8; 4] = *b"META";
+/// Shape-header section: depth + per-layer `(d_in, d_out, n_paths)`.
+pub const TAG_STACK: [u8; 4] = *b"STAK";
+/// One packed layer (repeated `depth` times, in chain order).
+pub const TAG_LAYER: [u8; 4] = *b"LAYR";
+/// Trailer: section count + CRC32. Always last; nothing may follow it.
+pub const TAG_END: [u8; 4] = *b"END\0";
+
+/// IEEE CRC32 lookup table (reflected, polynomial `0xEDB88320`).
+const CRC_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+/// Feed `bytes` into a running CRC32 state (start from
+/// [`CRC_INIT`], finish with [`crc_finish`]).
+pub(crate) fn crc_update(mut state: u32, bytes: &[u8]) -> u32 {
+    for &b in bytes {
+        state = CRC_TABLE[((state ^ b as u32) & 0xFF) as usize] ^ (state >> 8);
+    }
+    state
+}
+
+pub(crate) const CRC_INIT: u32 = 0xFFFF_FFFF;
+
+pub(crate) fn crc_finish(state: u32) -> u32 {
+    state ^ 0xFFFF_FFFF
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The IEEE CRC32 check value: crc32(b"123456789") = 0xCBF43926.
+    #[test]
+    fn crc32_check_value() {
+        let crc = crc_finish(crc_update(CRC_INIT, b"123456789"));
+        assert_eq!(crc, 0xCBF4_3926);
+    }
+
+    #[test]
+    fn crc32_is_incremental() {
+        let whole = crc_finish(crc_update(CRC_INIT, b"hello world"));
+        let split = crc_finish(crc_update(crc_update(CRC_INIT, b"hello "), b"world"));
+        assert_eq!(whole, split);
+    }
+}

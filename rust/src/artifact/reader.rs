@@ -1,0 +1,160 @@
+//! Validating `.lb2` section reader.
+
+use super::{crc_finish, crc_update, CRC_INIT, FORMAT_VERSION, MAGIC, TAG_END};
+use anyhow::{bail, Result};
+use std::ops::Range;
+
+/// Reads a `.lb2` container from a byte slice.
+///
+/// All validation happens in [`new`](Self::new), before any section is
+/// handed out: magic, format version, every section length bounds-checked
+/// against the buffer, the trailer's section count, the CRC32 of every
+/// byte preceding the CRC field, and absence of trailing garbage. A file
+/// truncated at *any* byte or with *any* bit flipped fails here with
+/// `Err` — never a panic, never silently-wrong sections.
+pub struct ArtifactReader<'a> {
+    buf: &'a [u8],
+    sections: Vec<([u8; 4], Range<usize>)>,
+    next: usize,
+}
+
+impl<'a> ArtifactReader<'a> {
+    /// Open and fully validate a container.
+    pub fn new(buf: &'a [u8]) -> Result<Self> {
+        if buf.len() < MAGIC.len() + 4 {
+            bail!("artifact truncated: {} bytes is shorter than the header", buf.len());
+        }
+        if buf[..4] != MAGIC {
+            bail!("bad magic {:02x?} (not a .lb2 artifact)", &buf[..4]);
+        }
+        let version = u32::from_le_bytes(buf[4..8].try_into().expect("4 bytes"));
+        if version != FORMAT_VERSION {
+            bail!("unsupported .lb2 format version {version} (this build reads {FORMAT_VERSION})");
+        }
+
+        let mut sections = Vec::new();
+        let mut pos = 8usize;
+        loop {
+            if buf.len() - pos < 12 {
+                bail!("artifact truncated at byte {pos}: missing section header");
+            }
+            let tag: [u8; 4] = buf[pos..pos + 4].try_into().expect("4 bytes");
+            let len = u64::from_le_bytes(buf[pos + 4..pos + 12].try_into().expect("8 bytes"));
+            let body = pos + 12;
+            let Ok(len) = usize::try_from(len) else {
+                bail!("section {tag:?} at byte {pos} declares an impossible length {len}");
+            };
+            if len > buf.len() - body {
+                bail!(
+                    "artifact truncated at byte {pos}: section {} declares {len} bytes but only {} remain",
+                    tag_name(tag),
+                    buf.len() - body
+                );
+            }
+            if tag == TAG_END {
+                if len != 8 {
+                    bail!("trailer length must be 8, got {len}");
+                }
+                let count = u32::from_le_bytes(buf[body..body + 4].try_into().expect("4 bytes"));
+                if count as usize != sections.len() {
+                    bail!(
+                        "trailer section count {count} disagrees with the {} sections present",
+                        sections.len()
+                    );
+                }
+                let crc_at = body + 4;
+                let stored = u32::from_le_bytes(buf[crc_at..crc_at + 4].try_into().expect("4 bytes"));
+                let computed = crc_finish(crc_update(CRC_INIT, &buf[..crc_at]));
+                if stored != computed {
+                    bail!("CRC mismatch: stored {stored:#010x}, computed {computed:#010x}");
+                }
+                if crc_at + 4 != buf.len() {
+                    bail!("{} trailing bytes after the trailer", buf.len() - crc_at - 4);
+                }
+                break;
+            }
+            sections.push((tag, body..body + len));
+            pos = body + len;
+        }
+        Ok(Self { buf, sections, next: 0 })
+    }
+
+    /// Number of sections (trailer excluded).
+    pub fn section_count(&self) -> usize {
+        self.sections.len()
+    }
+
+    /// The next `(tag, payload)` pair, in file order; `None` when done.
+    pub fn next_section(&mut self) -> Option<([u8; 4], &'a [u8])> {
+        let (tag, range) = self.sections.get(self.next)?;
+        self.next += 1;
+        Some((*tag, &self.buf[range.clone()]))
+    }
+}
+
+/// Printable form of a section tag for error messages.
+fn tag_name(tag: [u8; 4]) -> String {
+    tag.iter()
+        .map(|&b| {
+            if b.is_ascii_graphic() {
+                (b as char).to_string()
+            } else {
+                format!("\\x{b:02x}")
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::ArtifactWriter;
+    use super::*;
+
+    fn tiny() -> Vec<u8> {
+        let mut w = ArtifactWriter::new(Vec::new()).unwrap();
+        w.section(*b"AAAA", b"first").unwrap();
+        w.section(*b"BBBB", &[]).unwrap();
+        w.finish().unwrap()
+    }
+
+    #[test]
+    fn writer_reader_roundtrip() {
+        let bytes = tiny();
+        let mut r = ArtifactReader::new(&bytes).unwrap();
+        assert_eq!(r.section_count(), 2);
+        assert_eq!(r.next_section().unwrap(), (*b"AAAA", &b"first"[..]));
+        assert_eq!(r.next_section().unwrap(), (*b"BBBB", &b""[..]));
+        assert!(r.next_section().is_none());
+    }
+
+    #[test]
+    fn every_truncation_errs() {
+        let bytes = tiny();
+        for len in 0..bytes.len() {
+            assert!(ArtifactReader::new(&bytes[..len]).is_err(), "prefix of {len} bytes");
+        }
+    }
+
+    #[test]
+    fn every_bit_flip_errs() {
+        let bytes = tiny();
+        for i in 0..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0x01;
+            assert!(ArtifactReader::new(&bad).is_err(), "flip at byte {i}");
+        }
+    }
+
+    #[test]
+    fn trailing_garbage_errs() {
+        let mut bytes = tiny();
+        bytes.push(0);
+        assert!(ArtifactReader::new(&bytes).is_err());
+    }
+
+    #[test]
+    fn end_tag_is_reserved_for_the_trailer() {
+        let mut w = ArtifactWriter::new(Vec::new()).unwrap();
+        assert!(w.section(TAG_END, b"nope").is_err());
+    }
+}

@@ -1,0 +1,239 @@
+//! `PackedStack` ⇄ `.lb2` payload encoding.
+//!
+//! The encoding is the kernel-native representation verbatim: packed
+//! bit-plane `u64` words ([`BitMatrix::words`]) and `f32` scale vectors,
+//! so save→load round-trips are straight copies and the loaded stack's
+//! forwards are bit-identical to the saved one's. Decoding validates
+//! every length against the section size *before* allocating, rejects
+//! set padding bits, and re-checks path/chain shape consistency — a
+//! corrupt or truncated artifact is an `Err`, never a panic or garbage
+//! weights.
+
+use super::{ArtifactReader, ArtifactWriter, TAG_LAYER, TAG_META, TAG_STACK};
+use crate::model::PackedStack;
+use crate::packing::{BitMatrix, PackedResidual, TriScaleLayer};
+use anyhow::{bail, Context, Result};
+use std::io::Write;
+use std::path::Path;
+
+/// Serialize a stack into `.lb2` container bytes on `sink`.
+pub fn write_stack<W: Write>(stack: &PackedStack, sink: W) -> Result<W> {
+    let mut w = ArtifactWriter::new(sink)?;
+    w.section(TAG_META, format!("littlebit2 {}", crate::VERSION).as_bytes())?;
+
+    let layers = stack.layers();
+    let mut head = Vec::with_capacity(4 + layers.len() * 12);
+    head.extend_from_slice(&u32_of(layers.len(), "depth")?.to_le_bytes());
+    for layer in layers {
+        head.extend_from_slice(&u32_of(layer.d_in(), "d_in")?.to_le_bytes());
+        head.extend_from_slice(&u32_of(layer.d_out(), "d_out")?.to_le_bytes());
+        head.extend_from_slice(&u32_of(layer.paths().len(), "path count")?.to_le_bytes());
+    }
+    w.section(TAG_STACK, &head)?;
+
+    for layer in layers {
+        w.section(TAG_LAYER, &encode_layer(layer)?)?;
+    }
+    w.finish()
+}
+
+/// Deserialize a stack from `.lb2` container bytes.
+pub fn read_stack(bytes: &[u8]) -> Result<PackedStack> {
+    let mut r = ArtifactReader::new(bytes)?;
+
+    let (tag, _meta) = r.next_section().context("empty artifact: no META section")?;
+    if tag != TAG_META {
+        bail!("expected META as first section, found {tag:?}");
+    }
+    let (tag, head) = r.next_section().context("missing STAK section")?;
+    if tag != TAG_STACK {
+        bail!("expected STAK as second section, found {tag:?}");
+    }
+
+    let mut cur = Cur::new(head);
+    let depth = cur.u32()? as usize;
+    if depth == 0 {
+        bail!("artifact declares an empty stack (depth 0)");
+    }
+    // Pin the declared depth to the actual shape-table size before any
+    // depth-proportional allocation: a forged depth field cannot cost more
+    // memory than the file already spends.
+    if head.len() != 4 + depth * 12 {
+        bail!(
+            "shape header is {} bytes but depth {depth} requires {}",
+            head.len(),
+            4 + depth * 12
+        );
+    }
+    let mut shapes = Vec::with_capacity(depth);
+    for _ in 0..depth {
+        let d_in = cur.u32()? as usize;
+        let d_out = cur.u32()? as usize;
+        let n_paths = cur.u32()? as usize;
+        shapes.push((d_in, d_out, n_paths));
+    }
+    cur.done("STAK")?;
+
+    let mut layers = Vec::with_capacity(depth);
+    for (k, &(d_in, d_out, n_paths)) in shapes.iter().enumerate() {
+        let (tag, body) = r
+            .next_section()
+            .with_context(|| format!("missing LAYR section for layer {k}"))?;
+        if tag != TAG_LAYER {
+            bail!("expected LAYR section for layer {k}, found {tag:?}");
+        }
+        let layer = decode_layer(body).with_context(|| format!("layer {k}"))?;
+        if layer.d_in() != d_in || layer.d_out() != d_out || layer.paths().len() != n_paths {
+            bail!(
+                "layer {k} is {}x{} with {} paths but the shape header says {d_out}x{d_in} with {n_paths}",
+                layer.d_out(),
+                layer.d_in(),
+                layer.paths().len()
+            );
+        }
+        layers.push(layer);
+    }
+    if r.next_section().is_some() {
+        bail!("unexpected extra sections after layer {depth}");
+    }
+    PackedStack::try_new(layers)
+}
+
+/// Save a stack to a `.lb2` file (written via a temp file + rename, so a
+/// crash mid-write never leaves a half-written artifact at `path`; a
+/// failed write removes its temp file).
+pub fn save_stack(stack: &PackedStack, path: impl AsRef<Path>) -> Result<()> {
+    let path = path.as_ref();
+    // Append ".tmp" to the whole file name (with_extension would *replace*
+    // the last extension, making "model.v1" and "model.lb2" collide on the
+    // same temp path).
+    let mut tmp_name = path.as_os_str().to_os_string();
+    tmp_name.push(".tmp");
+    let tmp = std::path::PathBuf::from(tmp_name);
+    let write = || -> Result<()> {
+        let mut file = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        write_stack(stack, std::io::BufWriter::new(&mut file))?;
+        file.sync_all().with_context(|| format!("syncing {}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming {} to {}", tmp.display(), path.display()))?;
+        Ok(())
+    };
+    let result = write();
+    if result.is_err() {
+        let _ = std::fs::remove_file(&tmp);
+    }
+    result
+}
+
+/// Load a stack from a `.lb2` file.
+pub fn load_stack(path: impl AsRef<Path>) -> Result<PackedStack> {
+    let path = path.as_ref();
+    let bytes =
+        std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    read_stack(&bytes).with_context(|| format!("loading {}", path.display()))
+}
+
+fn u32_of(v: usize, what: &str) -> Result<u32> {
+    u32::try_from(v).map_err(|_| anyhow::anyhow!("{what} {v} exceeds the u32 format field"))
+}
+
+fn encode_layer(layer: &PackedResidual) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&u32_of(layer.paths().len(), "path count")?.to_le_bytes());
+    for p in layer.paths() {
+        out.extend_from_slice(&u32_of(p.d_out(), "d_out")?.to_le_bytes());
+        out.extend_from_slice(&u32_of(p.d_in(), "d_in")?.to_le_bytes());
+        out.extend_from_slice(&u32_of(p.rank(), "rank")?.to_le_bytes());
+        for &v in p.h().iter().chain(p.l()).chain(p.g()) {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        for &w in p.ub_bits().words().iter().chain(p.vbt_bits().words()) {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+    }
+    Ok(out)
+}
+
+fn decode_layer(body: &[u8]) -> Result<PackedResidual> {
+    let mut cur = Cur::new(body);
+    let n_paths = cur.u32()? as usize;
+    if n_paths == 0 {
+        bail!("layer declares zero residual paths");
+    }
+    let mut paths = Vec::with_capacity(n_paths.min(64));
+    for p in 0..n_paths {
+        paths.push(decode_path(&mut cur).with_context(|| format!("path {p}"))?);
+    }
+    cur.done("LAYR")?;
+    PackedResidual::try_new(paths)
+}
+
+fn decode_path(cur: &mut Cur<'_>) -> Result<TriScaleLayer> {
+    let d_out = cur.u32()? as usize;
+    let d_in = cur.u32()? as usize;
+    let rank = cur.u32()? as usize;
+    if d_out == 0 || d_in == 0 || rank == 0 {
+        bail!("degenerate path shape {d_out}x{d_in} rank {rank}");
+    }
+    let h = cur.f32s(d_out)?;
+    let l = cur.f32s(rank)?;
+    let g = cur.f32s(d_in)?;
+    let ub = BitMatrix::from_words(d_out, rank, cur.u64s(d_out * rank.div_ceil(64))?)?;
+    let vbt = BitMatrix::from_words(rank, d_in, cur.u64s(rank * d_in.div_ceil(64))?)?;
+    TriScaleLayer::from_parts(ub, vbt, h, l, g)
+}
+
+/// Bounds-checked little-endian cursor over one section payload. Vector
+/// reads verify the byte count against the remaining payload *before*
+/// allocating, so a corrupt length field cannot trigger a huge allocation.
+struct Cur<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Self { b, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if n > self.b.len() - self.pos {
+            bail!(
+                "section payload truncated: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.b.len() - self.pos
+            );
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let raw = self.take(n.checked_mul(4).context("f32 vector length overflow")?)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().expect("4 bytes")))
+            .collect())
+    }
+
+    fn u64s(&mut self, n: usize) -> Result<Vec<u64>> {
+        let raw = self.take(n.checked_mul(8).context("u64 vector length overflow")?)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().expect("8 bytes")))
+            .collect())
+    }
+
+    fn done(&self, what: &str) -> Result<()> {
+        if self.pos != self.b.len() {
+            bail!("{what} section has {} undeclared trailing bytes", self.b.len() - self.pos);
+        }
+        Ok(())
+    }
+}

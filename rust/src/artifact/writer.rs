@@ -1,0 +1,72 @@
+//! Streaming `.lb2` section writer.
+
+use super::{crc_finish, crc_update, CRC_INIT, FORMAT_VERSION, MAGIC, TAG_END};
+use anyhow::{bail, Result};
+use std::io::Write;
+
+/// Writes a `.lb2` container one section at a time — the whole artifact is
+/// never materialized in memory; only the largest single section payload
+/// is. The running CRC32 covers every byte emitted (magic and version
+/// included), so the trailer written by [`finish`](Self::finish) seals the
+/// exact byte stream the sink received.
+///
+/// # Examples
+///
+/// ```
+/// use littlebit2::artifact::{ArtifactReader, ArtifactWriter};
+///
+/// let mut w = ArtifactWriter::new(Vec::new()).unwrap();
+/// w.section(*b"DEMO", b"payload").unwrap();
+/// let bytes = w.finish().unwrap();
+/// let mut r = ArtifactReader::new(&bytes).unwrap();
+/// assert_eq!(r.next_section().unwrap(), (*b"DEMO", &b"payload"[..]));
+/// ```
+pub struct ArtifactWriter<W: Write> {
+    sink: W,
+    crc: u32,
+    sections: u32,
+}
+
+impl<W: Write> ArtifactWriter<W> {
+    /// Start a container: writes the magic and format version.
+    pub fn new(sink: W) -> Result<Self> {
+        let mut w = Self { sink, crc: CRC_INIT, sections: 0 };
+        w.emit(&MAGIC)?;
+        w.emit(&FORMAT_VERSION.to_le_bytes())?;
+        Ok(w)
+    }
+
+    fn emit(&mut self, bytes: &[u8]) -> Result<()> {
+        self.sink.write_all(bytes)?;
+        self.crc = crc_update(self.crc, bytes);
+        Ok(())
+    }
+
+    /// Append one section. `TAG_END` is reserved for the trailer.
+    pub fn section(&mut self, tag: [u8; 4], payload: &[u8]) -> Result<()> {
+        if tag == TAG_END {
+            bail!("section tag {:?} is reserved for the trailer", TAG_END);
+        }
+        self.emit(&tag)?;
+        self.emit(&(payload.len() as u64).to_le_bytes())?;
+        self.emit(payload)?;
+        self.sections = self
+            .sections
+            .checked_add(1)
+            .ok_or_else(|| anyhow::anyhow!("section count overflow"))?;
+        Ok(())
+    }
+
+    /// Seal the container: writes the trailer (section count + CRC32 of
+    /// everything before the CRC field) and returns the sink.
+    pub fn finish(mut self) -> Result<W> {
+        self.emit(&TAG_END)?;
+        self.emit(&8u64.to_le_bytes())?;
+        let count = self.sections;
+        self.emit(&count.to_le_bytes())?;
+        let crc = crc_finish(self.crc);
+        self.sink.write_all(&crc.to_le_bytes())?;
+        self.sink.flush()?;
+        Ok(self.sink)
+    }
+}

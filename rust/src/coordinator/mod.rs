@@ -27,8 +27,8 @@ pub use jobs::{run_compression_jobs, CompressionJob, JobResult};
 pub use metrics::Metrics;
 pub use params::ParamStore;
 pub use server::{
-    BatchBackend, InferenceServer, PackedResidualBackend, Request, Response, ServerConfig,
-    ServerStats,
+    BatchBackend, InferenceServer, PackedResidualBackend, PackedStackBackend, Request, Response,
+    ServerConfig, ServerStats,
 };
 #[cfg(feature = "xla")]
 pub use trainer::{QakdOutcome, QatDriver, StudentVariant, TrainTrace};

@@ -19,6 +19,7 @@
 //! one request = one token-step here) are tracked for the §6.2 experiments.
 
 use crate::linalg::Mat;
+use crate::model::PackedStack;
 use crate::packing::{BatchScratch, PackedResidual, SignPool};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
@@ -118,6 +119,35 @@ impl PackedResidualBackend {
 }
 
 impl BatchBackend for PackedResidualBackend {
+    fn forward_batch_into(&mut self, x: &Mat, y: &mut Mat) {
+        let pool = SignPool::for_threads(self.threads);
+        self.model.forward_batch_into(x, y, &mut self.scratch, pool, self.threads);
+    }
+}
+
+/// The whole-model production backend: a packed layer *chain*
+/// ([`PackedStack`] — typically loaded from a `.lb2` artifact) driven
+/// through the same fused, allocation-free batched pipeline as
+/// [`PackedResidualBackend`]. Every drained batch flows through every
+/// layer feature-major with zero per-request dispatch in between; each
+/// worker's backend owns one [`BatchScratch`] whose ping/pong blocks carry
+/// the chain activations.
+pub struct PackedStackBackend {
+    model: Arc<PackedStack>,
+    threads: usize,
+    scratch: BatchScratch,
+}
+
+impl PackedStackBackend {
+    /// `threads` is the row-parallelism inside one batch execution (1 =
+    /// serial kernels); worker-level parallelism is
+    /// [`ServerConfig::workers`].
+    pub fn new(model: Arc<PackedStack>, threads: usize) -> Self {
+        Self { model, threads, scratch: BatchScratch::default() }
+    }
+}
+
+impl BatchBackend for PackedStackBackend {
     fn forward_batch_into(&mut self, x: &Mat, y: &mut Mat) {
         let pool = SignPool::for_threads(self.threads);
         self.model.forward_batch_into(x, y, &mut self.scratch, pool, self.threads);
@@ -653,6 +683,36 @@ mod tests {
             rng.fill_normal(x.as_mut_slice());
             backend.forward_batch_into(&x, &mut y);
             assert_eq!(y, model.forward_batch(&x), "b={b}");
+        }
+    }
+
+    /// The whole-model stack backend (what `serve --model model.lb2`
+    /// runs) must stay bit-identical to `PackedStack::forward_batch`
+    /// across reused buffers and varying batch widths.
+    #[test]
+    fn packed_stack_backend_buffer_reuse_is_deterministic() {
+        use crate::littlebit::CompressionConfig;
+        use crate::rng::Pcg64;
+        use crate::spectral::{synth_weight, SynthSpec};
+
+        let mut rng = Pcg64::seed(81);
+        let weights: Vec<Mat> = [(64, 48), (48, 64)]
+            .iter()
+            .map(|&(rows, cols)| {
+                let spec = SynthSpec { rows, cols, gamma: 0.3, coherence: 0.6, scale: 1.0 };
+                synth_weight(&spec, &mut rng)
+            })
+            .collect();
+        let cfg = CompressionConfig { bpp: 1.0, ..Default::default() };
+        let stack = Arc::new(PackedStack::compress_chain(&weights, &cfg, &mut rng));
+
+        let mut backend = PackedStackBackend::new(Arc::clone(&stack), 2);
+        let mut y = Mat::default();
+        for b in [3usize, 1, 7, 3] {
+            let mut x = Mat::zeros(48, b);
+            rng.fill_normal(x.as_mut_slice());
+            backend.forward_batch_into(&x, &mut y);
+            assert_eq!(y, stack.forward_batch(&x), "b={b}");
         }
     }
 

@@ -48,6 +48,7 @@
 //! map and layer contract, and EXPERIMENTS.md for measured results and the
 //! bench methodology.
 
+pub mod artifact;
 pub mod coordinator;
 pub mod data;
 pub mod linalg;

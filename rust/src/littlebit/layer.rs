@@ -139,6 +139,14 @@ impl ResidualCompressed {
         PackedResidual::new(self.paths.iter().map(|p| p.pack()).collect())
     }
 
+    /// Pack into the artifact-ready deployment form: a single-layer
+    /// [`crate::model::PackedStack`], which is what the `.lb2` format
+    /// persists — `compress(..).pack_stack().save("model.lb2")` is the
+    /// whole quantize-once pipeline for one layer.
+    pub fn pack_stack(&self) -> crate::model::PackedStack {
+        crate::model::PackedStack::new(vec![self.pack()])
+    }
+
     /// Forward pass through all packed paths (sum of path outputs).
     /// Packs on every call — convenience for tests/oracles; hot paths use
     /// [`pack`](Self::pack) once and reuse the result.

@@ -8,24 +8,33 @@
 //! littlebit2 gamma-dist [--model NAME]           Fig 6 bottom / Fig 11/12
 //! littlebit2 spectral-gain                       Fig 9 energy curves
 //! littlebit2 compress [--size N] [--gamma G] [--bpp B] [--strategy S]
+//!                     [--layers L] [--out model.lb2]   quantize once → artifact
+//! littlebit2 serve --model model.lb2 [--workers N] [--batch B]
+//!                  [--threads T] [--requests R]        serve from an artifact
 //! littlebit2 train [--artifacts DIR] [--teacher-steps N] [--student-steps N]
 //!                  [--variant V] [--lr LR]       e2e QAKD driver
 //! littlebit2 version
 //! ```
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 #[cfg(feature = "xla")]
 use littlebit2::coordinator::{QatDriver, StudentVariant};
+use littlebit2::coordinator::{InferenceServer, PackedStackBackend, ServerConfig};
 use littlebit2::littlebit::{compress, CompressionConfig, InitStrategy};
 use littlebit2::memory::{model_memory, MethodKind};
-use littlebit2::model::{zoo, ArchSpec};
+use littlebit2::model::{zoo, ArchSpec, PackedStack};
 use littlebit2::quant::tiny_rank_fp16;
 use littlebit2::rng::Pcg64;
 use littlebit2::spectral::{
     estimate_gamma, quant_cost, synth_weight, tail_energy, SynthSpec,
 };
+use std::sync::Arc;
+use std::time::Duration;
 
-/// Minimal flag parser: `--key value` pairs after the subcommand.
+/// Minimal flag parser: `--key value` pairs after the subcommand. Shared by
+/// every subcommand, including `compress`/`serve`. A flag immediately
+/// followed by another flag (`--size --bpp 0.8`) is an error, not a value,
+/// and so is repeating a flag — both used to be swallowed silently.
 struct Args {
     flags: std::collections::HashMap<String, String>,
 }
@@ -37,16 +46,34 @@ impl Args {
         while i < argv.len() {
             let k = &argv[i];
             if let Some(name) = k.strip_prefix("--") {
-                if i + 1 >= argv.len() {
-                    bail!("flag --{name} missing value");
+                if name.is_empty() {
+                    bail!("bare \"--\" is not a flag");
                 }
-                flags.insert(name.to_string(), argv[i + 1].clone());
+                let value = match argv.get(i + 1) {
+                    Some(v) if !v.starts_with("--") => v.clone(),
+                    Some(v) => bail!("flag --{name} missing value (found flag {v:?} instead)"),
+                    None => bail!("flag --{name} missing value"),
+                };
+                if flags.insert(name.to_string(), value).is_some() {
+                    bail!("duplicate flag --{name}");
+                }
                 i += 2;
             } else {
                 bail!("unexpected argument {k:?}");
             }
         }
         Ok(Self { flags })
+    }
+
+    /// Reject flags the subcommand never reads — a typo like `--ouy` must
+    /// fail loudly, not silently run without the intended effect.
+    fn known(&self, allowed: &[&str]) -> Result<&Self> {
+        for key in self.flags.keys() {
+            if !allowed.contains(&key.as_str()) {
+                bail!("unknown flag --{key}; expected one of: {allowed:?}");
+            }
+        }
+        Ok(self)
     }
 
     fn get(&self, name: &str, default: &str) -> String {
@@ -81,6 +108,7 @@ fn main() -> Result<()> {
         "gamma-dist" => cmd_gamma_dist(&args),
         "spectral-gain" => cmd_spectral_gain(&args),
         "compress" => cmd_compress(&args),
+        "serve" => cmd_serve(&args),
         "train" => cmd_train(&args),
         "version" => {
             println!("littlebit2 {}", littlebit2::VERSION);
@@ -96,13 +124,14 @@ fn main() -> Result<()> {
 fn print_usage() {
     println!(
         "littlebit2 {} — sub-1-bit LLM compression via Latent Geometry Alignment\n\
-         commands: memory-table | breakeven | gamma-dist | spectral-gain | compress | train | version",
+         commands: memory-table | breakeven | gamma-dist | spectral-gain | compress | serve | train | version",
         littlebit2::VERSION
     );
 }
 
 /// Table 1/2 memory columns, computed exactly from Eqs. 21-26.
 fn cmd_memory_table(args: &Args) -> Result<()> {
+    args.known(&["model"])?;
     let models = match args.flags.get("model") {
         Some(m) => vec![m.clone()],
         None => ArchSpec::KNOWN.iter().map(|s| s.to_string()).collect(),
@@ -145,6 +174,7 @@ fn cmd_memory_table(args: &Args) -> Result<()> {
 
 /// Fig 6 (top): reconstruction MSE vs γ for the four methods at fixed budget.
 fn cmd_breakeven(args: &Args) -> Result<()> {
+    args.known(&["size", "bpp", "itq-iters"])?;
     let size = args.get_usize("size", 512)?;
     let bpp = args.get_f64("bpp", 1.0)?;
     let itq_iters = args.get_usize("itq-iters", 50)?;
@@ -179,6 +209,7 @@ fn cmd_breakeven(args: &Args) -> Result<()> {
 
 /// Fig 6 bottom / Fig 11/12: γ distribution over a synthetic-LLM zoo.
 fn cmd_gamma_dist(args: &Args) -> Result<()> {
+    args.known(&["model", "blocks"])?;
     let model = args.get("model", "llama2-7b");
     let blocks = args.get_usize("blocks", 8)?;
     let Some(arch) = ArchSpec::by_name(&model) else {
@@ -208,6 +239,7 @@ fn cmd_gamma_dist(args: &Args) -> Result<()> {
 
 /// Fig 9: tail-gain vs quantization-cost curves.
 fn cmd_spectral_gain(args: &Args) -> Result<()> {
+    args.known(&["n", "ra", "rb"])?;
     let n = args.get_f64("n", 4096.0)?;
     let r_a = args.get_f64("ra", 16.0)?;
     let r_b = args.get_f64("rb", 256.0)?;
@@ -233,9 +265,14 @@ fn cmd_spectral_gain(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Compress one synthetic weight and report the λ/MSE diagnostics.
+/// Compress a synthetic model (a chain of `--layers` square weights) and
+/// report the λ/MSE diagnostics; with `--out model.lb2` the packed stack is
+/// persisted as a versioned artifact — the quantize-once half of the
+/// quantize-once/serve-from-many pipeline (`serve` is the other half).
 fn cmd_compress(args: &Args) -> Result<()> {
+    args.known(&["size", "layers", "gamma", "bpp", "strategy", "out"])?;
     let size = args.get_usize("size", 512)?;
+    let layers = args.get_usize("layers", 1)?;
     let gamma = args.get_f64("gamma", 0.27)?;
     let bpp = args.get_f64("bpp", 0.55)?;
     let strategy = match args.get("strategy", "itq").as_str() {
@@ -244,25 +281,128 @@ fn cmd_compress(args: &Args) -> Result<()> {
         "itq" => InitStrategy::JointItq { iters: 50 },
         other => bail!("strategy must be standard|rotation|itq, got {other:?}"),
     };
+    if layers == 0 {
+        bail!("--layers must be at least 1");
+    }
     let mut rng = Pcg64::seed(42);
-    let spec = SynthSpec { rows: size, cols: size, gamma, coherence: 0.7, scale: 1.0 };
-    let w = synth_weight(&spec, &mut rng);
     let cfg = CompressionConfig { bpp, strategy, residual: true, ..Default::default() };
+    let spec = SynthSpec { rows: size, cols: size, gamma, coherence: 0.7, scale: 1.0 };
+
     let t0 = std::time::Instant::now();
-    let c = compress(&w, &cfg, &mut rng);
-    let dt = t0.elapsed().as_secs_f64();
-    let lams = c.paths[0].u_distortions();
-    let mean_lam: f64 = lams.iter().sum::<f64>() / lams.len() as f64;
-    let max_lam = lams.iter().fold(0.0f64, |m, &x| m.max(x));
+    let mut packed = Vec::with_capacity(layers);
+    for k in 0..layers {
+        let w = synth_weight(&spec, &mut rng);
+        let c = compress(&w, &cfg, &mut rng);
+        if k == 0 {
+            let lams = c.paths[0].u_distortions();
+            let mean_lam: f64 = lams.iter().sum::<f64>() / lams.len() as f64;
+            let max_lam = lams.iter().fold(0.0f64, |m, &x| m.max(x));
+            println!(
+                "size={size} γ={gamma} bpp={bpp} strategy={} rank={} | MSE={:.4e} bpp_actual={:.3} λ_mean={:.3} λ_max={:.3}",
+                strategy.label(),
+                c.paths[0].factors.rank(),
+                c.reconstruct().mse(&w),
+                c.bpp(),
+                mean_lam,
+                max_lam,
+            );
+        }
+        packed.push(c.pack());
+    }
+    let stack = PackedStack::new(packed);
     println!(
-        "size={size} γ={gamma} bpp={bpp} strategy={} rank={} | MSE={:.4e} bpp_actual={:.3} λ_mean={:.3} λ_max={:.3} ({dt:.2}s)",
-        strategy.label(),
-        c.paths[0].factors.rank(),
-        c.reconstruct().mse(&w),
-        c.bpp(),
-        mean_lam,
-        max_lam,
+        "compressed {} layer(s) of {size}x{size} in {:.2}s | packed weights {} bytes",
+        stack.depth(),
+        t0.elapsed().as_secs_f64(),
+        stack.storage_bytes()
     );
+
+    if let Some(out) = args.flags.get("out") {
+        stack.save(out)?;
+        let file_bytes = std::fs::metadata(out)
+            .with_context(|| format!("stat {out}"))?
+            .len();
+        let params = (layers * size * size) as f64;
+        // The delta over storage_bytes is mostly f32-on-disk scales vs
+        // their logical f16 accounting, plus O(sections) framing — see
+        // EXPERIMENTS.md §Artifact.
+        println!(
+            "wrote {out}: {file_bytes} bytes ({:.3} bits/param on disk; framing + f32-scale slack {} bytes)",
+            file_bytes as f64 * 8.0 / params,
+            file_bytes as i64 - stack.storage_bytes() as i64,
+        );
+    }
+    Ok(())
+}
+
+/// Serve a `.lb2` artifact on the dynamic-batching worker pool: load once,
+/// drive `--requests` synthetic token-steps through the full batched
+/// sign-GEMM pipeline, report throughput and latency percentiles. The
+/// in-process load generator stands in for a network front end — the
+/// serving loop itself is the production path.
+fn cmd_serve(args: &Args) -> Result<()> {
+    args.known(&["model", "workers", "batch", "threads", "requests"])?;
+    let model_path = args
+        .flags
+        .get("model")
+        .context("serve requires --model <file.lb2> (write one with `compress --out`)")?;
+    let workers = args.get_usize("workers", 2)?;
+    let batch = args.get_usize("batch", 32)?;
+    let threads = args.get_usize("threads", 1)?;
+    let requests = args.get_usize("requests", 256)?;
+    if workers == 0 || batch == 0 || threads == 0 {
+        bail!("--workers, --batch, and --threads must be at least 1");
+    }
+
+    let stack = Arc::new(PackedStack::load(model_path)?);
+    println!(
+        "loaded {model_path}: depth {} | {} -> {} features | packed weights {} bytes",
+        stack.depth(),
+        stack.d_in(),
+        stack.d_out(),
+        stack.storage_bytes()
+    );
+
+    let server = InferenceServer::start_pool(
+        ServerConfig {
+            max_batch: batch,
+            max_wait: Duration::from_millis(2),
+            queue_depth: 1024,
+            workers,
+        },
+        |_worker| PackedStackBackend::new(Arc::clone(&stack), threads),
+    );
+
+    let d_in = stack.d_in();
+    let mut rng = Pcg64::seed(1);
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..requests)
+        .map(|i| {
+            let mut x = vec![0.0f32; d_in];
+            rng.fill_normal(&mut x);
+            server.submit(i as u64, x)
+        })
+        .collect();
+    // A failed request (backend panic → dropped reply) must not abort the
+    // run: collect everything, report the full stats, then exit nonzero if
+    // anything failed.
+    let failed = rxs.into_iter().filter(|rx| rx.recv().is_err()).count();
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = server.shutdown();
+    println!(
+        "served {} requests on {workers} worker(s) in {wall:.3}s: {:.0} tok/s | batches {} (mean size {:.1}, mean kernel rate {:.0} tok/s) | p50 {:.2} ms p99 {:.2} ms | failed {}",
+        stats.served,
+        stats.tokens_per_s,
+        stats.batches,
+        stats.mean_batch,
+        stats.mean_batch_tokens_per_s,
+        stats.p50_ms,
+        stats.p99_ms,
+        stats.failed
+    );
+    if failed > 0 {
+        bail!("{failed} of {requests} requests failed");
+    }
     Ok(())
 }
 
@@ -276,6 +416,7 @@ fn cmd_train(_args: &Args) -> Result<()> {
 /// The e2e QAKD driver (quick path; `examples/e2e_qat.rs` is the recorded run).
 #[cfg(feature = "xla")]
 fn cmd_train(args: &Args) -> Result<()> {
+    args.known(&["artifacts", "teacher-steps", "student-steps", "variant", "lr"])?;
     let artifacts = args.get("artifacts", "artifacts");
     let teacher_steps = args.get_usize("teacher-steps", 100)?;
     let student_steps = args.get_usize("student-steps", 100)?;
@@ -317,4 +458,65 @@ fn cmd_train(args: &Args) -> Result<()> {
         outcome.final_eval_ce.exp()
     );
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::Args;
+
+    fn argv(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flag_value_pairs() {
+        let args = Args::parse(&argv(&["--size", "64", "--bpp", "0.8"])).unwrap();
+        assert_eq!(args.get("size", "0"), "64");
+        assert_eq!(args.get_f64("bpp", 0.0).unwrap(), 0.8);
+        assert_eq!(args.get_usize("missing", 7).unwrap(), 7);
+    }
+
+    /// Regression: `--size --bpp 0.8` used to set `size="--bpp"` silently.
+    #[test]
+    fn flag_as_value_is_rejected() {
+        let err = Args::parse(&argv(&["--size", "--bpp", "0.8"])).unwrap_err();
+        assert!(err.to_string().contains("--size"), "{err}");
+    }
+
+    /// Regression: a repeated flag used to silently keep only the last value.
+    #[test]
+    fn duplicate_flag_is_rejected() {
+        let err = Args::parse(&argv(&["--size", "1", "--size", "2"])).unwrap_err();
+        assert!(err.to_string().contains("duplicate"), "{err}");
+    }
+
+    #[test]
+    fn trailing_flag_without_value_is_rejected() {
+        assert!(Args::parse(&argv(&["--size"])).is_err());
+        assert!(Args::parse(&argv(&["--size", "1", "--out"])).is_err());
+    }
+
+    #[test]
+    fn bare_double_dash_and_positional_are_rejected() {
+        assert!(Args::parse(&argv(&["--"])).is_err());
+        assert!(Args::parse(&argv(&["stray"])).is_err());
+    }
+
+    /// Negative numbers are still fine as values (only `--`-prefixed
+    /// tokens are treated as flags).
+    #[test]
+    fn negative_value_is_accepted() {
+        let args = Args::parse(&argv(&["--gamma", "-0.3"])).unwrap();
+        assert_eq!(args.get_f64("gamma", 0.0).unwrap(), -0.3);
+    }
+
+    /// A misspelled flag (`--ouy` for `--out`) must fail the subcommand,
+    /// not silently run without the intended effect.
+    #[test]
+    fn unknown_flag_is_rejected_by_allowlist() {
+        let args = Args::parse(&argv(&["--ouy", "model.lb2"])).unwrap();
+        let err = args.known(&["size", "out"]).map(|_| ()).unwrap_err();
+        assert!(err.to_string().contains("--ouy"), "{err}");
+        assert!(args.known(&["ouy"]).is_ok());
+    }
 }

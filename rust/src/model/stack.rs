@@ -15,7 +15,7 @@ use crate::rng::Pcg64;
 
 /// A chain of packed layers with matching inner dimensions
 /// (`layer[k].d_out() == layer[k+1].d_in()`).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct PackedStack {
     layers: Vec<PackedResidual>,
 }
@@ -34,6 +34,53 @@ impl PackedStack {
             );
         }
         Self { layers }
+    }
+
+    /// Fallible [`new`](Self::new) for deserialization boundaries (the
+    /// `.lb2` load path): a malformed chain returns `Err` instead of
+    /// panicking.
+    pub fn try_new(layers: Vec<PackedResidual>) -> anyhow::Result<Self> {
+        if layers.is_empty() {
+            anyhow::bail!("stack needs at least one layer");
+        }
+        for k in 1..layers.len() {
+            if layers[k - 1].d_out() != layers[k].d_in() {
+                anyhow::bail!(
+                    "chain mismatch: layer {} emits {} features but layer {k} consumes {}",
+                    k - 1,
+                    layers[k - 1].d_out(),
+                    layers[k].d_in()
+                );
+            }
+        }
+        Ok(Self { layers })
+    }
+
+    /// Persist as a versioned `.lb2` artifact — the quantize-once /
+    /// serve-from-many deployment contract. See [`crate::artifact`] for
+    /// the byte layout; [`load`](Self::load) round-trips bit-exactly.
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> anyhow::Result<()> {
+        crate::artifact::save_stack(self, path)
+    }
+
+    /// Load a `.lb2` artifact written by [`save`](Self::save). Bit-planes
+    /// are copied word-verbatim (no re-packing), so every forward of the
+    /// loaded stack is bit-identical to the saved one. Corrupt, truncated,
+    /// or mis-shaped artifacts return `Err` — never panic.
+    pub fn load(path: impl AsRef<std::path::Path>) -> anyhow::Result<Self> {
+        crate::artifact::load_stack(path)
+    }
+
+    /// Serialize to `.lb2` container bytes (the in-memory form of
+    /// [`save`](Self::save)).
+    pub fn to_artifact_bytes(&self) -> anyhow::Result<Vec<u8>> {
+        crate::artifact::write_stack(self, Vec::new())
+    }
+
+    /// Deserialize from `.lb2` container bytes (the in-memory form of
+    /// [`load`](Self::load)).
+    pub fn from_artifact_bytes(bytes: &[u8]) -> anyhow::Result<Self> {
+        crate::artifact::read_stack(bytes)
     }
 
     /// Compress each weight of a chain at the given config and pack the

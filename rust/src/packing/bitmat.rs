@@ -1,6 +1,7 @@
 //! Bit-packed ±1 matrix.
 
 use crate::linalg::Mat;
+use anyhow::{bail, Result};
 
 /// Row-major bit-packed sign matrix. Set bit = +1, clear bit = −1.
 /// Each row occupies `words_per_row` u64 words; trailing padding bits in the
@@ -37,6 +38,41 @@ impl BitMatrix {
     pub fn ones(rows: usize, cols: usize) -> Self {
         let m = Mat::from_fn(rows, cols, |_, _| 1.0);
         Self::from_dense(&m)
+    }
+
+    /// Rebuild from the packed word buffer verbatim (the `.lb2` artifact
+    /// load path — no re-packing). Fails with `Err` when the word count
+    /// doesn't match `rows × ⌈cols/64⌉` or any padding bit past `cols` in a
+    /// row's last word is set — the kernels rely on clear padding, so a
+    /// corrupt buffer must be rejected here, loudly, not served.
+    pub fn from_words(rows: usize, cols: usize, words: Vec<u64>) -> Result<Self> {
+        let words_per_row = cols.div_ceil(64);
+        let expect = rows
+            .checked_mul(words_per_row)
+            .ok_or_else(|| anyhow::anyhow!("bit-plane {rows}x{cols} overflows"))?;
+        if words.len() != expect {
+            bail!(
+                "bit-plane word count mismatch: {rows}x{cols} needs {expect} words, got {}",
+                words.len()
+            );
+        }
+        if cols % 64 != 0 && words_per_row > 0 {
+            let pad_mask = !0u64 << (cols % 64);
+            for i in 0..rows {
+                let last = words[i * words_per_row + words_per_row - 1];
+                if last & pad_mask != 0 {
+                    bail!("bit-plane row {i} has set padding bits past column {cols}");
+                }
+            }
+        }
+        Ok(Self { rows, cols, words_per_row, words })
+    }
+
+    /// The packed word buffer, row-major (`rows × words_per_row` words) —
+    /// what the `.lb2` artifact stores verbatim.
+    #[inline]
+    pub fn words(&self) -> &[u64] {
+        &self.words
     }
 
     #[inline]
@@ -152,6 +188,29 @@ mod tests {
         let m = Mat::gaussian(256, 256, &mut rng).signum();
         let d = BitMatrix::from_dense(&m).density();
         assert!((d - 0.5).abs() < 0.02, "density={d}");
+    }
+
+    #[test]
+    fn from_words_roundtrips_verbatim() {
+        let mut rng = Pcg64::seed(4);
+        for (r, c) in [(3, 3), (7, 64), (5, 65), (16, 130)] {
+            let m = Mat::gaussian(r, c, &mut rng).signum();
+            let packed = BitMatrix::from_dense(&m);
+            let rebuilt = BitMatrix::from_words(r, c, packed.words().to_vec()).unwrap();
+            assert_eq!(rebuilt, packed, "{r}x{c}");
+        }
+    }
+
+    #[test]
+    fn from_words_rejects_corruption() {
+        let b = BitMatrix::from_dense(&Mat::from_fn(2, 65, |_, _| 1.0));
+        // Wrong word count.
+        assert!(BitMatrix::from_words(2, 65, b.words()[..3].to_vec()).is_err());
+        assert!(BitMatrix::from_words(3, 65, b.words().to_vec()).is_err());
+        // Set padding bit past column 65.
+        let mut words = b.words().to_vec();
+        words[1] |= 1u64 << 7;
+        assert!(BitMatrix::from_words(2, 65, words).is_err());
     }
 
     #[test]

@@ -187,7 +187,7 @@ fn gemv_sign_scaled_rows(
 /// buffers, `h` folds into the second kernel's lane reduction — zero
 /// separate output passes, zero per-call allocations, and bit-identical
 /// numbers to the unfused composition.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct TriScaleLayer {
     /// `U_b` packed, `d_out × r`.
     ub: BitMatrix,
@@ -214,6 +214,36 @@ impl TriScaleLayer {
         }
     }
 
+    /// Rebuild from already-packed parts (the `.lb2` artifact load path:
+    /// bit-planes arrive word-verbatim via [`BitMatrix::from_words`], so no
+    /// re-packing happens). `ub` is `d_out × r`, `vbt` is the
+    /// **pre-transposed** `V_bᵀ` (`r × d_in`). Shape mismatches return
+    /// `Err` — this is a deserialization boundary, not a programmer-error
+    /// assert.
+    pub fn from_parts(
+        ub: BitMatrix,
+        vbt: BitMatrix,
+        h: Vec<f32>,
+        l: Vec<f32>,
+        g: Vec<f32>,
+    ) -> anyhow::Result<Self> {
+        if ub.rows() != h.len() {
+            anyhow::bail!("h length {} != d_out {}", h.len(), ub.rows());
+        }
+        if ub.cols() != l.len() || vbt.rows() != l.len() {
+            anyhow::bail!(
+                "rank mismatch: |l|={}, ub cols={}, vbt rows={}",
+                l.len(),
+                ub.cols(),
+                vbt.rows()
+            );
+        }
+        if vbt.cols() != g.len() {
+            anyhow::bail!("g length {} != d_in {}", g.len(), vbt.cols());
+        }
+        Ok(Self { ub, vbt, h, l, g })
+    }
+
     pub fn d_out(&self) -> usize {
         self.ub.rows()
     }
@@ -224,6 +254,31 @@ impl TriScaleLayer {
 
     pub fn rank(&self) -> usize {
         self.l.len()
+    }
+
+    /// Packed `U_b` (`d_out × r`) — serialized verbatim by the artifact.
+    pub fn ub_bits(&self) -> &BitMatrix {
+        &self.ub
+    }
+
+    /// Packed pre-transposed `V_bᵀ` (`r × d_in`) — serialized verbatim.
+    pub fn vbt_bits(&self) -> &BitMatrix {
+        &self.vbt
+    }
+
+    /// Row scale `h ∈ R^{d_out}`.
+    pub fn h(&self) -> &[f32] {
+        &self.h
+    }
+
+    /// Central latent scale `l ∈ R^r`.
+    pub fn l(&self) -> &[f32] {
+        &self.l
+    }
+
+    /// Column scale `g ∈ R^{d_in}`.
+    pub fn g(&self) -> &[f32] {
+        &self.g
     }
 
     /// Weight-storage bytes: two packed bit matrices + three FP16 scale

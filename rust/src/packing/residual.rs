@@ -11,7 +11,7 @@ use crate::linalg::Mat;
 ///
 /// Built via `littlebit::ResidualCompressed::pack`, or directly from
 /// [`TriScaleLayer`] values.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct PackedResidual {
     paths: Vec<TriScaleLayer>,
 }
@@ -25,6 +25,27 @@ impl PackedResidual {
             assert_eq!(p.d_out(), paths[0].d_out(), "path d_out mismatch");
         }
         Self { paths }
+    }
+
+    /// Fallible [`new`](Self::new) for deserialization boundaries (the
+    /// `.lb2` load path): malformed path sets return `Err` instead of
+    /// panicking.
+    pub fn try_new(paths: Vec<TriScaleLayer>) -> anyhow::Result<Self> {
+        if paths.is_empty() {
+            anyhow::bail!("residual layer needs at least one path");
+        }
+        for (k, p) in paths.iter().enumerate().skip(1) {
+            if p.d_in() != paths[0].d_in() || p.d_out() != paths[0].d_out() {
+                anyhow::bail!(
+                    "path {k} is {}x{} but path 0 is {}x{}",
+                    p.d_out(),
+                    p.d_in(),
+                    paths[0].d_out(),
+                    paths[0].d_in()
+                );
+            }
+        }
+        Ok(Self { paths })
     }
 
     pub fn paths(&self) -> &[TriScaleLayer] {

@@ -37,8 +37,22 @@ impl Json {
         }
     }
 
+    /// The value as a `usize` — strictly. A negative number, a fraction,
+    /// or a non-finite/oversized value is an `Err`: `"d_model": -64` or
+    /// `3.5` must fail the manifest load, not silently truncate to a wrong
+    /// shape (the old behavior of `as f64 as usize`, which maps -64 → 0
+    /// and 3.5 → 3).
     pub fn as_usize(&self) -> Result<usize> {
-        Ok(self.as_f64()? as usize)
+        let x = self.as_f64()?;
+        if !x.is_finite() || x < 0.0 || x.fract() != 0.0 {
+            bail!("not a non-negative integer: {x}");
+        }
+        // f64 represents integers exactly only below 2^53; anything at or
+        // past that (or past the platform word) is out of contract.
+        if x >= 9_007_199_254_740_992.0 || x > usize::MAX as f64 {
+            bail!("integer out of range: {x}");
+        }
+        Ok(x as usize)
     }
 
     pub fn as_bool(&self) -> Result<bool> {
@@ -72,7 +86,13 @@ impl Json {
 
 /// Parse a JSON document.
 pub fn parse_json(src: &str) -> Result<Json> {
-    let bytes = src.as_bytes();
+    parse_json_bytes(src.as_bytes())
+}
+
+/// Parse a JSON document from raw bytes (what [`Manifest::load`] reads off
+/// disk — no up-front UTF-8 pass; string contents are validated in place
+/// and malformed byte sequences are an `Err`, never a slice panic).
+pub fn parse_json_bytes(bytes: &[u8]) -> Result<Json> {
     let mut pos = 0usize;
     let v = parse_value(bytes, &mut pos)?;
     skip_ws(bytes, &mut pos);
@@ -198,23 +218,48 @@ fn parse_string(b: &[u8], pos: &mut usize) -> Result<String> {
                     Some(b'b') => out.push('\u{8}'),
                     Some(b'f') => out.push('\u{c}'),
                     Some(b'u') => {
-                        if *pos + 5 > b.len() {
-                            bail!("truncated \\u escape");
-                        }
-                        let hex = std::str::from_utf8(&b[*pos + 1..*pos + 5])?;
-                        let code = u32::from_str_radix(hex, 16)?;
+                        let hi = read_hex4(b, *pos + 1)?;
+                        *pos += 4; // now on the last hex digit
+                        let code = if (0xD800..=0xDBFF).contains(&hi) {
+                            // High surrogate: JSON encodes astral-plane
+                            // characters as a pair (e.g. U+1F600 arrives
+                            // as \uD83D\uDE00); the low half must follow.
+                            if b.len() < *pos + 3 || b[*pos + 1] != b'\\' || b[*pos + 2] != b'u' {
+                                bail!("high surrogate \\u{hi:04X} not followed by \\u escape");
+                            }
+                            let lo = read_hex4(b, *pos + 3)?;
+                            if !(0xDC00..=0xDFFF).contains(&lo) {
+                                bail!("high surrogate \\u{hi:04X} followed by non-low \\u{lo:04X}");
+                            }
+                            *pos += 6; // now on the pair's last hex digit
+                            0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                        } else if (0xDC00..=0xDFFF).contains(&hi) {
+                            bail!("unpaired low surrogate \\u{hi:04X}");
+                        } else {
+                            hi
+                        };
                         out.push(char::from_u32(code).context("bad \\u escape")?);
-                        *pos += 4;
                     }
                     _ => bail!("bad escape at byte {pos}"),
                 }
                 *pos += 1;
             }
             c => {
-                // Copy raw UTF-8 bytes through.
+                // Copy one UTF-8 scalar through, validating as we go: an
+                // invalid first byte, a sequence running past the buffer,
+                // or bad continuation bytes are all `Err` — the old code
+                // trusted the first byte and sliced `start + len` straight
+                // past the end of truncated input.
                 let start = *pos;
-                let len = utf8_len(c);
-                out.push_str(std::str::from_utf8(&b[start..start + len])?);
+                let len = utf8_len(c)
+                    .with_context(|| format!("invalid UTF-8 first byte {c:#04x} at byte {start}"))?;
+                if start + len > b.len() {
+                    bail!("truncated UTF-8 sequence at byte {start}");
+                }
+                out.push_str(
+                    std::str::from_utf8(&b[start..start + len])
+                        .with_context(|| format!("invalid UTF-8 sequence at byte {start}"))?,
+                );
                 *pos += len;
             }
         }
@@ -222,12 +267,31 @@ fn parse_string(b: &[u8], pos: &mut usize) -> Result<String> {
     bail!("unterminated string")
 }
 
-fn utf8_len(first: u8) -> usize {
+/// Exactly four hex digits at `b[at..at + 4]`, bounds-checked.
+/// (`from_str_radix` alone would accept a leading sign, letting invalid
+/// JSON like `\u+041` slip through as `A`.)
+fn read_hex4(b: &[u8], at: usize) -> Result<u32> {
+    if b.len() < at + 4 {
+        bail!("truncated \\u escape");
+    }
+    let digits = &b[at..at + 4];
+    if !digits.iter().all(|d| d.is_ascii_hexdigit()) {
+        bail!("non-hex digit in \\u escape at byte {at}");
+    }
+    let hex = std::str::from_utf8(digits).expect("hex digits are ASCII");
+    Ok(u32::from_str_radix(hex, 16)?)
+}
+
+/// Length of the UTF-8 sequence introduced by `first`, or `None` when
+/// `first` cannot start a sequence (continuation bytes 0x80–0xBF, the
+/// overlong-encoding leads 0xC0/0xC1, and everything past 0xF4).
+fn utf8_len(first: u8) -> Option<usize> {
     match first {
-        0x00..=0x7f => 1,
-        0xc0..=0xdf => 2,
-        0xe0..=0xef => 3,
-        _ => 4,
+        0x00..=0x7F => Some(1),
+        0xC2..=0xDF => Some(2),
+        0xE0..=0xEF => Some(3),
+        0xF0..=0xF4 => Some(4),
+        _ => None,
     }
 }
 
@@ -284,13 +348,22 @@ pub struct Manifest {
     pub teacher_init_dir: String,
 }
 
+/// A `[name, shape]` pair out of a spec/shape entry — length-checked, so a
+/// malformed manifest errors instead of panicking on `pair[1]`.
+fn as_pair(e: &Json) -> Result<(&Json, &Json)> {
+    match e.as_arr()? {
+        [a, b] => Ok((a, b)),
+        other => bail!("expected a [name, shape] pair, got {} elements", other.len()),
+    }
+}
+
 fn parse_spec(v: &Json) -> Result<Vec<(String, Vec<usize>)>> {
     v.as_arr()?
         .iter()
         .map(|e| {
-            let pair = e.as_arr()?;
-            let name = pair[0].as_str()?.to_string();
-            let shape = pair[1]
+            let (name, shape) = as_pair(e)?;
+            let name = name.as_str()?.to_string();
+            let shape = shape
                 .as_arr()?
                 .iter()
                 .map(|d| d.as_usize())
@@ -302,13 +375,19 @@ fn parse_spec(v: &Json) -> Result<Vec<(String, Vec<usize>)>> {
 
 impl Manifest {
     pub fn load(path: impl AsRef<Path>) -> Result<Self> {
-        let text = std::fs::read_to_string(path.as_ref())
+        // Read raw bytes: UTF-8 validation happens inside the parser,
+        // byte-by-byte with real error messages, instead of an up-front
+        // `read_to_string` rejection.
+        let bytes = std::fs::read(path.as_ref())
             .with_context(|| format!("reading {:?}", path.as_ref()))?;
-        Self::parse(&text)
+        Self::from_json(&parse_json_bytes(&bytes)?)
     }
 
     pub fn parse(text: &str) -> Result<Self> {
-        let root = parse_json(text)?;
+        Self::from_json(&parse_json(text)?)
+    }
+
+    fn from_json(root: &Json) -> Result<Self> {
         let cfg = root.get("config")?;
         let config = ModelConfigInfo {
             vocab: cfg.get("vocab")?.as_usize()?,
@@ -330,9 +409,9 @@ impl Manifest {
                 .as_arr()?
                 .iter()
                 .map(|e| {
-                    let pair = e.as_arr()?;
-                    let dt = pair[0].as_str()?.to_string();
-                    let shape = pair[1]
+                    let (dt, shape) = as_pair(e)?;
+                    let dt = dt.as_str()?.to_string();
+                    let shape = shape
                         .as_arr()?
                         .iter()
                         .map(|d| d.as_usize())
@@ -385,6 +464,98 @@ mod tests {
     #[test]
     fn parse_unicode_escape() {
         assert_eq!(parse_json("\"\\u00e9\"").unwrap(), Json::Str("é".into()));
+    }
+
+    /// Regression: astral-plane characters arrive as surrogate pairs in
+    /// valid JSON and used to be rejected ("bad \u escape").
+    #[test]
+    fn parse_surrogate_pair() {
+        assert_eq!(
+            parse_json("\"\\uD83D\\uDE00\"").unwrap(),
+            Json::Str("\u{1F600}".into())
+        );
+    }
+
+    /// `\u` escapes take exactly four hex digits — a sign is not a digit
+    /// (`from_str_radix` alone would have accepted `\u+041` as `A`).
+    #[test]
+    fn signed_unicode_escape_rejected() {
+        assert!(parse_json("\"\\u+041\"").is_err());
+        assert!(parse_json("\"\\u-041\"").is_err());
+        assert!(parse_json("\"\\u00 9\"").is_err());
+    }
+
+    /// Lone or mis-ordered surrogate halves are malformed, not panics.
+    #[test]
+    fn lone_surrogates_rejected() {
+        for doc in [
+            "\"\\uD83D\"",         // unpaired high
+            "\"\\uDE00\"",         // unpaired low
+            "\"\\uD83D\\u0041\"",  // high followed by non-surrogate
+            "\"\\uD83Dx\"",        // high followed by a plain char
+            "\"\\uD83D\\",         // high then truncation
+        ] {
+            assert!(parse_json_bytes(doc.as_bytes()).is_err(), "{doc:?}");
+        }
+    }
+
+    /// Regression: `utf8_len` trusted the first byte and `parse_string`
+    /// sliced past the buffer on truncated multi-byte input — these must
+    /// all be `Err`, never an out-of-bounds panic.
+    #[test]
+    fn malformed_utf8_bytes_rejected() {
+        let cases: &[&[u8]] = &[
+            b"\"\xe2\x82",         // truncated 3-byte sequence at EOF
+            b"\"\xe2\x82\"",       // truncated sequence swallowing the quote
+            b"\"\xf0\x9f\x98\"",   // truncated 4-byte sequence
+            b"\"\x80\"",           // bare continuation byte
+            b"\"\xc0\xaf\"",       // overlong-encoding lead
+            b"\"\xff\"",           // invalid byte
+            b"\"\xed\xa0\xbd\"",   // UTF-8-encoded surrogate (invalid scalar)
+        ];
+        for &case in cases {
+            assert!(parse_json_bytes(case).is_err(), "{case:?}");
+        }
+        // Well-formed multi-byte text still round-trips byte-exactly.
+        assert_eq!(
+            parse_json_bytes("\"héllo \u{1F600}\"".as_bytes()).unwrap(),
+            Json::Str("héllo \u{1F600}".into())
+        );
+    }
+
+    /// Regression: `as_usize` was `as_f64 as usize`, silently mapping
+    /// negatives to 0 and truncating fractions — a manifest with
+    /// `"d_model": -64` or `3.5` loaded as a wrong shape.
+    #[test]
+    fn as_usize_requires_nonnegative_integer() {
+        assert_eq!(Json::Num(64.0).as_usize().unwrap(), 64);
+        assert_eq!(Json::Num(0.0).as_usize().unwrap(), 0);
+        assert!(Json::Num(-64.0).as_usize().is_err());
+        assert!(Json::Num(3.5).as_usize().is_err());
+        assert!(Json::Num(-0.5).as_usize().is_err());
+        assert!(Json::Num(f64::NAN).as_usize().is_err());
+        assert!(Json::Num(f64::INFINITY).as_usize().is_err());
+        assert!(Json::Num(1e300).as_usize().is_err());
+        assert!(Json::Str("64".into()).as_usize().is_err());
+    }
+
+    /// A negative or fractional dimension anywhere in a manifest fails the
+    /// whole load instead of producing a wrong shape.
+    #[test]
+    fn manifest_with_negative_dim_rejected() {
+        let doc = r#"{"config": {"vocab": 256, "d_model": -64}}"#;
+        let root = parse_json(doc).unwrap();
+        assert!(root.get("config").unwrap().get("d_model").unwrap().as_usize().is_err());
+    }
+
+    /// Malformed spec entries (not a [name, shape] pair) are `Err`, not an
+    /// index panic.
+    #[test]
+    fn short_spec_pair_rejected() {
+        let v = parse_json(r#"[["embed"]]"#).unwrap();
+        assert!(parse_spec(&v).is_err());
+        let v = parse_json(r#"[["embed", [4, 4], "extra"]]"#).unwrap();
+        assert!(parse_spec(&v).is_err());
     }
 
     #[test]

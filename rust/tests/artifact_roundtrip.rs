@@ -1,0 +1,259 @@
+//! The `.lb2` artifact contract, end to end: compress → save → load →
+//! serve round-trips bit-exactly, and every malformed-input path — bad
+//! magic, bad version, truncation at every byte, any flipped bit, shape
+//! lies, empty stacks, trailing garbage — returns `Err`, never a panic.
+
+use littlebit2::artifact::{read_stack, ArtifactReader, ArtifactWriter, TAG_META, TAG_STACK};
+use littlebit2::coordinator::{InferenceServer, PackedStackBackend, ServerConfig};
+use littlebit2::linalg::Mat;
+use littlebit2::littlebit::{CompressionConfig, InitStrategy};
+use littlebit2::model::PackedStack;
+use littlebit2::rng::Pcg64;
+use littlebit2::spectral::{synth_weight, SynthSpec};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Compress a chain of synthetic weights into a packed stack. Every dim is
+/// deliberately not a multiple of 64, so the bit-planes carry ragged tail
+/// words whose padding invariants the artifact must preserve.
+fn packed_stack(dims: &[usize], seed: u64) -> PackedStack {
+    let mut rng = Pcg64::seed(seed);
+    let weights: Vec<Mat> = dims
+        .windows(2)
+        .map(|w| {
+            let spec =
+                SynthSpec { rows: w[1], cols: w[0], gamma: 0.3, coherence: 0.6, scale: 1.0 };
+            synth_weight(&spec, &mut rng)
+        })
+        .collect();
+    let cfg = CompressionConfig {
+        bpp: 1.0,
+        strategy: InitStrategy::JointItq { iters: 10 },
+        residual: true, // 2-path residual per layer — the paper's deployment
+        ..Default::default()
+    };
+    PackedStack::compress_chain(&weights, &cfg, &mut rng)
+}
+
+/// Save→load must reproduce the exact packed representation: every word of
+/// every bit-plane, every scale — and therefore bit-identical forwards.
+#[test]
+fn roundtrip_is_bit_exact() {
+    let stack = packed_stack(&[70, 130, 70], 11);
+    let bytes = stack.to_artifact_bytes().unwrap();
+    let loaded = PackedStack::from_artifact_bytes(&bytes).unwrap();
+    assert_eq!(loaded, stack, "packed representation must round-trip verbatim");
+
+    let mut rng = Pcg64::seed(12);
+    let b = 5;
+    let mut x = Mat::zeros(70, b);
+    rng.fill_normal(x.as_mut_slice());
+    let want = stack.forward_batch(&x);
+    let got = loaded.forward_batch(&x);
+    for t in 0..b {
+        for i in 0..70 {
+            assert_eq!(
+                got.at(i, t).to_bits(),
+                want.at(i, t).to_bits(),
+                "loaded forward differs at ({i},{t})"
+            );
+        }
+    }
+    let x1: Vec<f32> = x.col(0);
+    assert_eq!(loaded.forward(&x1), stack.forward(&x1));
+}
+
+/// The same contract through actual files — `PackedStack::{save,load}`.
+#[test]
+fn roundtrip_through_file() {
+    let stack = packed_stack(&[70, 90], 21);
+    let path = std::env::temp_dir().join(format!("lb2_roundtrip_{}.lb2", std::process::id()));
+    stack.save(&path).unwrap();
+    let loaded = PackedStack::load(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(loaded, stack);
+}
+
+/// Loading a missing file is an `Err` with the path in the message.
+#[test]
+fn missing_file_is_err() {
+    let err = PackedStack::load("/nonexistent/nope.lb2").unwrap_err();
+    assert!(format!("{err:?}").contains("nope.lb2"), "{err:?}");
+}
+
+/// The corrupt-file matrix: truncation at EVERY byte offset (which covers
+/// every section boundary) and a flipped bit at every byte must fail with
+/// `Err` — and must never panic, which `catch_unwind` enforces per case.
+#[test]
+fn corrupt_file_matrix_never_panics() {
+    let bytes = packed_stack(&[40, 70], 31).to_artifact_bytes().unwrap();
+
+    for len in 0..bytes.len() {
+        let prefix = bytes[..len].to_vec();
+        let result = std::panic::catch_unwind(|| read_stack(&prefix));
+        match result {
+            Ok(r) => assert!(r.is_err(), "truncation to {len} bytes parsed successfully"),
+            Err(_) => panic!("truncation to {len} bytes PANICKED instead of returning Err"),
+        }
+    }
+
+    for i in 0..bytes.len() {
+        let mut bad = bytes.clone();
+        bad[i] ^= 0x01;
+        let result = std::panic::catch_unwind(|| read_stack(&bad));
+        match result {
+            Ok(r) => assert!(r.is_err(), "bit flip at byte {i} parsed successfully"),
+            Err(_) => panic!("bit flip at byte {i} PANICKED instead of returning Err"),
+        }
+    }
+}
+
+#[test]
+fn bad_magic_version_and_trailing_garbage_rejected() {
+    let bytes = packed_stack(&[40, 70], 41).to_artifact_bytes().unwrap();
+
+    let mut bad = bytes.clone();
+    bad[0] = b'X';
+    let err = read_stack(&bad).unwrap_err();
+    assert!(err.to_string().contains("magic"), "{err}");
+
+    let mut bad = bytes.clone();
+    bad[4] = 99; // format version 99
+    let err = read_stack(&bad).unwrap_err();
+    assert!(err.to_string().contains("version"), "{err}");
+
+    let mut bad = bytes.clone();
+    bad.extend_from_slice(b"junk");
+    assert!(read_stack(&bad).is_err());
+}
+
+/// An artifact that declares an empty stack must be rejected at load.
+#[test]
+fn empty_stack_artifact_rejected() {
+    let mut w = ArtifactWriter::new(Vec::new()).unwrap();
+    w.section(TAG_META, b"test").unwrap();
+    w.section(TAG_STACK, &0u32.to_le_bytes()).unwrap(); // depth = 0
+    let bytes = w.finish().unwrap();
+    let err = read_stack(&bytes).unwrap_err();
+    assert!(err.to_string().contains("empty stack"), "{err}");
+}
+
+/// A shape header that lies about the layer sections must be rejected —
+/// the artifact is rebuilt with a tampered STAK section (valid CRC, valid
+/// framing) so only the cross-check can catch it.
+#[test]
+fn shape_header_lies_rejected() {
+    let bytes = packed_stack(&[40, 70], 51).to_artifact_bytes().unwrap();
+    let mut r = ArtifactReader::new(&bytes).unwrap();
+    let mut sections = Vec::new();
+    while let Some((tag, body)) = r.next_section() {
+        sections.push((tag, body.to_vec()));
+    }
+    assert_eq!(sections[1].0, TAG_STACK);
+    // STAK payload: depth u32, then (d_in, d_out, n_paths) u32s. Corrupt
+    // the declared d_in of layer 0.
+    sections[1].1[4..8].copy_from_slice(&41u32.to_le_bytes());
+    let mut w = ArtifactWriter::new(Vec::new()).unwrap();
+    for (tag, body) in &sections {
+        w.section(*tag, body).unwrap();
+    }
+    let tampered = w.finish().unwrap();
+    let err = read_stack(&tampered).unwrap_err();
+    assert!(format!("{err:?}").contains("shape header"), "{err:?}");
+}
+
+/// A chain whose layers don't compose (layer 0 emits 70, layer 1 consumes
+/// 40) must be rejected even when each layer is individually valid.
+#[test]
+fn broken_chain_rejected() {
+    let a = packed_stack(&[40, 70], 61); // 40 -> 70
+    let b = packed_stack(&[40, 70], 62); // 40 -> 70 again: 70 -/-> 40
+    let bytes_a = a.to_artifact_bytes().unwrap();
+    let bytes_b = b.to_artifact_bytes().unwrap();
+    let take = |bytes: &[u8]| -> Vec<([u8; 4], Vec<u8>)> {
+        let mut r = ArtifactReader::new(bytes).unwrap();
+        let mut out = Vec::new();
+        while let Some((tag, body)) = r.next_section() {
+            out.push((tag, body.to_vec()));
+        }
+        out
+    };
+    let sa = take(&bytes_a);
+    let sb = take(&bytes_b);
+    // Splice: META, STAK claiming depth 2 with both layers' true shapes,
+    // then layer A and layer B — shapes honest, chain broken.
+    let mut head = Vec::new();
+    head.extend_from_slice(&2u32.to_le_bytes());
+    head.extend_from_slice(&sa[1].1[4..16]); // layer A (d_in, d_out, paths)
+    head.extend_from_slice(&sb[1].1[4..16]); // layer B
+    let mut w = ArtifactWriter::new(Vec::new()).unwrap();
+    w.section(TAG_META, b"test").unwrap();
+    w.section(TAG_STACK, &head).unwrap();
+    w.section(sa[2].0, &sa[2].1).unwrap();
+    w.section(sb[2].0, &sb[2].1).unwrap();
+    let spliced = w.finish().unwrap();
+    let err = read_stack(&spliced).unwrap_err();
+    assert!(format!("{err:?}").contains("chain mismatch"), "{err:?}");
+}
+
+/// The acceptance pipeline: compress → save → load → SERVE. Responses off
+/// the multi-worker pool running the loaded artifact are bit-identical to
+/// the original in-memory stack's forwards.
+#[test]
+fn loaded_artifact_serves_bit_exactly() {
+    let stack = packed_stack(&[70, 130, 70], 71);
+    let bytes = stack.to_artifact_bytes().unwrap();
+    let loaded = Arc::new(PackedStack::from_artifact_bytes(&bytes).unwrap());
+
+    let server = InferenceServer::start_pool(
+        ServerConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            queue_depth: 64,
+            workers: 2,
+        },
+        |_worker| PackedStackBackend::new(Arc::clone(&loaded), 2),
+    );
+    let mut rng = Pcg64::seed(72);
+    let mut inputs = Vec::new();
+    for _ in 0..12 {
+        let mut x = vec![0.0f32; 70];
+        rng.fill_normal(&mut x);
+        inputs.push(x);
+    }
+    let rxs: Vec<_> = inputs
+        .iter()
+        .enumerate()
+        .map(|(i, x)| server.submit(i as u64, x.clone()))
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().unwrap();
+        let want = stack.forward(&inputs[i]);
+        assert_eq!(resp.output.len(), want.len());
+        for (j, (a, b)) in resp.output.iter().zip(&want).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "request {i} output {j}");
+        }
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.served, 12);
+    assert_eq!(stats.failed, 0);
+}
+
+/// Size sanity: the artifact is dominated by the packed weights — a small
+/// fixed container overhead over `storage_bytes`, far below the dense FP32
+/// footprint. (Scales are serialized as f32 while `storage_bytes` accounts
+/// them at their logical f16 width, hence the small slack term.)
+#[test]
+fn artifact_size_tracks_packed_storage() {
+    let stack = packed_stack(&[70, 130, 70], 81);
+    let bytes = stack.to_artifact_bytes().unwrap();
+    let packed = stack.storage_bytes();
+    assert!(bytes.len() >= packed, "artifact smaller than its payload?");
+    let dense_f32 = (70 * 130 + 130 * 70) * 4;
+    assert!(
+        bytes.len() < dense_f32 / 2,
+        "artifact {} bytes vs dense {} — not a compressed format",
+        bytes.len(),
+        dense_f32
+    );
+}
