@@ -4,7 +4,7 @@
 # PJRT-gated paths (`--features xla`): the train CLI, examples/e2e_qat,
 # tests/runtime_e2e.
 
-.PHONY: build test bench bench-build bench-gemm clippy artifacts doc roundtrip
+.PHONY: build test bench bench-build bench-gemm bench-compress clippy artifacts doc roundtrip
 
 build:
 	cargo build --release
@@ -17,8 +17,12 @@ test: build
 # from it on the worker pool. Run by the build-test CI job so
 # compress→save→load→serve stays green. (`serve` fails loudly on a
 # corrupt/truncated artifact — see ARCHITECTURE.md "Artifact format".)
+# The --jobs 4 re-run + cmp asserts the parallel-compression determinism
+# contract: worker count must not change a single artifact byte.
 roundtrip: build
 	cargo run --release -- compress --size 48 --layers 2 --bpp 1.0 --out target/roundtrip.lb2
+	cargo run --release -- compress --size 48 --layers 2 --bpp 1.0 --jobs 4 --out target/roundtrip_jobs4.lb2
+	cmp target/roundtrip.lb2 target/roundtrip_jobs4.lb2
 	cargo run --release -- serve --model target/roundtrip.lb2 --workers 2 --batch 8 --requests 32
 
 bench:
@@ -32,6 +36,13 @@ bench-build:
 # (the cross-PR perf-trajectory record — see EXPERIMENTS.md #Fused).
 bench-gemm:
 	cargo bench --bench gemm_speedup
+
+# The offline-pipeline sweep: layer-parallel + linalg-parallel compression
+# throughput; refreshes BENCH_compress.json at the repo root and asserts
+# byte-identical artifacts across worker counts (EXPERIMENTS.md
+# #Compression-throughput).
+bench-compress:
+	cargo bench --bench compress_speedup
 
 clippy:
 	cargo clippy --all-targets -- -D warnings

@@ -8,6 +8,7 @@
 //! ```
 
 use littlebit2::coordinator::{run_compression_jobs, CompressionJob};
+use littlebit2::rng::derive_seed;
 use littlebit2::littlebit::{CompressionConfig, InitStrategy};
 use littlebit2::model::{zoo, ArchSpec};
 
@@ -29,11 +30,13 @@ fn main() -> anyhow::Result<()> {
             let jobs: Vec<CompressionJob> = layers
                 .into_iter()
                 .enumerate()
-                .map(|(i, l)| CompressionJob {
-                    name: format!("b{}.{}", l.block, l.proj.name()),
-                    weight: l.weight,
-                    cfg: CompressionConfig { bpp, strategy, residual: true, ..Default::default() },
-                    seed: 500 + i as u64,
+                .map(|(i, l)| {
+                    CompressionJob::dense(
+                        format!("b{}.{}", l.block, l.proj.name()),
+                        l.weight,
+                        CompressionConfig { bpp, strategy, residual: true, ..Default::default() },
+                        derive_seed(500, i as u64),
+                    )
                 })
                 .collect();
             let t0 = std::time::Instant::now();
@@ -56,16 +59,18 @@ fn main() -> anyhow::Result<()> {
     let jobs: Vec<CompressionJob> = layers
         .into_iter()
         .enumerate()
-        .map(|(i, l)| CompressionJob {
-            name: format!("{} (γ={:.2})", l.proj.name(), l.gamma),
-            weight: l.weight,
-            cfg: CompressionConfig {
-                bpp: 0.55,
-                strategy: InitStrategy::JointItq { iters: 30 },
-                residual: true,
-                ..Default::default()
-            },
-            seed: 900 + i as u64,
+        .map(|(i, l)| {
+            CompressionJob::dense(
+                format!("{} (γ={:.2})", l.proj.name(), l.gamma),
+                l.weight,
+                CompressionConfig {
+                    bpp: 0.55,
+                    strategy: InitStrategy::JointItq { iters: 30 },
+                    residual: true,
+                    ..Default::default()
+                },
+                derive_seed(900, i as u64),
+            )
         })
         .collect();
     for r in run_compression_jobs(jobs, 2) {

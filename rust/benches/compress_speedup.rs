@@ -1,0 +1,191 @@
+//! Compression throughput — the offline half of the perf story.
+//!
+//! PRs 1–3 made *serving* fast; this bench tracks the quantization
+//! pipeline itself (truncated SVD → Joint-ITQ → Dual-SVID → pack) across
+//! the two parallelism axes PR 4 added:
+//!
+//! 1. **layer-parallel** — `run_compression_jobs_streaming` with one
+//!    claim-loop per core (the `compress --jobs N` path), per-layer linalg
+//!    serial;
+//! 2. **linalg-parallel** — a single layer with its SVD/ITQ/SVID products
+//!    row-partitioned over the shared pool (the `--jobs 1` path for one
+//!    huge matrix).
+//!
+//! Reported as layers/s for a synthetic chain (serial vs pooled, with the
+//! aggregated per-stage wall-clock split), plus single-layer serial-vs-pool
+//! wall-clock. Every configuration is **byte-identical** on the artifact
+//! encoding — asserted here, not assumed — so the ratios are pure
+//! scheduling measurements.
+//!
+//! Besides the `ROW:` lines, results are written machine-readable to
+//! `BENCH_compress.json` at the repository root (the cross-PR
+//! compression-throughput record; methodology in EXPERIMENTS.md
+//! #Compression-throughput).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use littlebit2::coordinator::{run_compression_jobs_streaming, CompressionJob, JobInput};
+use littlebit2::littlebit::{
+    compress_pipeline, CompressionConfig, CompressionReport, InitStrategy,
+};
+use littlebit2::model::PackedStack;
+use littlebit2::parallel::Pool;
+use littlebit2::rng::{derive_seed, Pcg64};
+use littlebit2::spectral::{synth_weight, SynthSpec};
+
+struct ModeRow {
+    mode: &'static str,
+    jobs: usize,
+    wall_s: f64,
+    layers_per_s: f64,
+    stages: CompressionReport,
+}
+
+fn main() {
+    let (size, layers) = if common::full_scale() { (512, 12) } else { (160, 8) };
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let cfg = CompressionConfig {
+        bpp: 0.55,
+        strategy: InitStrategy::JointItq { iters: 20 },
+        residual: true,
+        ..Default::default()
+    };
+    let spec = SynthSpec { rows: size, cols: size, gamma: 0.3, coherence: 0.6, scale: 1.0 };
+    println!(
+        "# compression throughput: {layers} layers of {size}x{size} at 0.55 bpp (ITQ 20), {threads} threads"
+    );
+
+    let mk_jobs = || -> Vec<CompressionJob> {
+        (0..layers)
+            .map(|k| CompressionJob {
+                name: format!("layer{k}"),
+                input: JobInput::Synth { spec: spec.clone(), seed: derive_seed(7, 2 * k as u64) },
+                cfg: cfg.clone(),
+                seed: derive_seed(7, 2 * k as u64 + 1),
+            })
+            .collect()
+    };
+    // Run a whole chain on `jobs` claim-loops, returning wall-clock, the
+    // aggregated stage split, and the artifact bytes (for the determinism
+    // assertion).
+    let run_chain = |jobs_n: usize| -> (f64, CompressionReport, Vec<u8>) {
+        let t0 = std::time::Instant::now();
+        let mut stages = CompressionReport::default();
+        let mut packed = Vec::with_capacity(layers);
+        run_compression_jobs_streaming(mk_jobs(), jobs_n, |_, outcome| {
+            stages.accumulate(&outcome.result.report);
+            packed.push(outcome.packed);
+            Ok(())
+        })
+        .expect("infallible sink");
+        let wall = t0.elapsed().as_secs_f64();
+        let bytes = PackedStack::new(packed).to_artifact_bytes().expect("encode artifact");
+        (wall, stages, bytes)
+    };
+
+    println!("ROW: mode jobs wall_s layers_per_s svd_ms itq_ms svid_ms pack_ms");
+    let mut rows = Vec::new();
+    let (serial_wall, serial_stages, serial_bytes) = run_chain(1);
+    rows.push(ModeRow {
+        mode: "serial",
+        jobs: 1,
+        wall_s: serial_wall,
+        layers_per_s: layers as f64 / serial_wall,
+        stages: serial_stages,
+    });
+    let (pool_wall, pool_stages, pool_bytes) = run_chain(threads);
+    rows.push(ModeRow {
+        mode: "pooled",
+        jobs: threads,
+        wall_s: pool_wall,
+        layers_per_s: layers as f64 / pool_wall,
+        stages: pool_stages,
+    });
+    // The acceptance contract: worker count must not change a single byte.
+    assert_eq!(serial_bytes, pool_bytes, "artifact bytes differ between --jobs 1 and --jobs N");
+    for r in &rows {
+        println!(
+            "ROW: {} {} {:.3} {:.2} {:.0} {:.0} {:.0} {:.0}",
+            r.mode,
+            r.jobs,
+            r.wall_s,
+            r.layers_per_s,
+            r.stages.svd_ms,
+            r.stages.itq_ms,
+            r.stages.svid_ms,
+            r.stages.pack_ms
+        );
+    }
+    println!(
+        "# layer-parallel speedup: {:.2}x on {threads} threads; artifacts byte-identical",
+        serial_wall / pool_wall
+    );
+
+    // Single-layer axis: same weight, serial vs pooled linalg.
+    let w = synth_weight(&spec, &mut Pcg64::seed(91));
+    let reps = 3;
+    let (single_serial_ms, _) = common::time_ms(reps, || {
+        std::hint::black_box(compress_pipeline(&w, &cfg, &mut Pcg64::seed(92), Pool::serial()));
+    });
+    let (single_pool_ms, _) = common::time_ms(reps, || {
+        std::hint::black_box(compress_pipeline(&w, &cfg, &mut Pcg64::seed(92), Pool::global()));
+    });
+    println!(
+        "ROW: single_layer_linalg serial_ms {single_serial_ms:.1} pooled_ms {single_pool_ms:.1} speedup {:.2}",
+        single_serial_ms / single_pool_ms
+    );
+
+    let json_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_compress.json");
+    match std::fs::write(
+        json_path,
+        render_json(size, layers, threads, &rows, single_serial_ms, single_pool_ms),
+    ) {
+        Ok(()) => println!("# wrote {json_path}"),
+        Err(e) => eprintln!("# could not write {json_path}: {e}"),
+    }
+}
+
+/// Hand-rolled JSON (no serde offline): the cross-PR compression-throughput
+/// record.
+fn render_json(
+    size: usize,
+    layers: usize,
+    threads: usize,
+    rows: &[ModeRow],
+    single_serial_ms: f64,
+    single_pool_ms: f64,
+) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"bench\": \"compress_speedup\",\n");
+    s.push_str("  \"status\": \"measured\",\n");
+    s.push_str(&format!(
+        "  \"shape\": {{\"size\": {size}, \"layers\": {layers}}},\n  \"bpp\": 0.55,\n  \"itq_iters\": 20,\n  \"threads\": {threads},\n"
+    ));
+    s.push_str("  \"modes\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"mode\": \"{}\", \"jobs\": {}, \"wall_s\": {:.3}, \"layers_per_s\": {:.2}, \"stage_ms\": {{\"svd\": {:.1}, \"itq\": {:.1}, \"svid\": {:.1}, \"pack\": {:.1}}}}}{}\n",
+            r.mode,
+            r.jobs,
+            r.wall_s,
+            r.layers_per_s,
+            r.stages.svd_ms,
+            r.stages.itq_ms,
+            r.stages.svid_ms,
+            r.stages.pack_ms,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str(&format!(
+        "  \"single_layer_linalg\": {{\"serial_ms\": {:.1}, \"pooled_ms\": {:.1}, \"speedup\": {:.2}}},\n",
+        single_serial_ms,
+        single_pool_ms,
+        single_serial_ms / single_pool_ms
+    ));
+    s.push_str("  \"determinism\": \"artifact bytes identical for jobs in {1, threads} (asserted)\"\n");
+    s.push_str("}\n");
+    s
+}

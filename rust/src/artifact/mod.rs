@@ -58,7 +58,7 @@ mod stack;
 mod writer;
 
 pub use reader::ArtifactReader;
-pub use stack::{load_stack, read_stack, save_stack, write_stack};
+pub use stack::{load_stack, read_stack, save_stack, write_stack, StackStreamWriter};
 pub use writer::ArtifactWriter;
 
 /// File magic: `\x89LB2`. The non-ASCII lead byte makes accidental

@@ -17,24 +17,38 @@ use std::io::Write;
 use std::path::Path;
 
 /// Serialize a stack into `.lb2` container bytes on `sink`.
+///
+/// Byte-identical to streaming the same layers through
+/// [`StackStreamWriter`] — both paths share the header and layer encoders.
 pub fn write_stack<W: Write>(stack: &PackedStack, sink: W) -> Result<W> {
-    let mut w = ArtifactWriter::new(sink)?;
-    w.section(TAG_META, format!("littlebit2 {}", crate::VERSION).as_bytes())?;
-
     let layers = stack.layers();
-    let mut head = Vec::with_capacity(4 + layers.len() * 12);
-    head.extend_from_slice(&u32_of(layers.len(), "depth")?.to_le_bytes());
-    for layer in layers {
-        head.extend_from_slice(&u32_of(layer.d_in(), "d_in")?.to_le_bytes());
-        head.extend_from_slice(&u32_of(layer.d_out(), "d_out")?.to_le_bytes());
-        head.extend_from_slice(&u32_of(layer.paths().len(), "path count")?.to_le_bytes());
-    }
-    w.section(TAG_STACK, &head)?;
-
+    let shapes: Vec<(usize, usize, usize)> = layers
+        .iter()
+        .map(|l| (l.d_in(), l.d_out(), l.paths().len()))
+        .collect();
+    let mut w = begin_stack(sink, &shapes)?;
     for layer in layers {
         w.section(TAG_LAYER, &encode_layer(layer)?)?;
     }
     w.finish()
+}
+
+/// Open an `.lb2` container on `sink` and emit the META + STAK sections
+/// for a stack with the given per-layer `(d_in, d_out, n_paths)` shapes.
+/// Shared by [`write_stack`] and [`StackStreamWriter`] so the two paths
+/// cannot drift byte-wise.
+fn begin_stack<W: Write>(sink: W, shapes: &[(usize, usize, usize)]) -> Result<ArtifactWriter<W>> {
+    let mut w = ArtifactWriter::new(sink)?;
+    w.section(TAG_META, format!("littlebit2 {}", crate::VERSION).as_bytes())?;
+    let mut head = Vec::with_capacity(4 + shapes.len() * 12);
+    head.extend_from_slice(&u32_of(shapes.len(), "depth")?.to_le_bytes());
+    for &(d_in, d_out, n_paths) in shapes {
+        head.extend_from_slice(&u32_of(d_in, "d_in")?.to_le_bytes());
+        head.extend_from_slice(&u32_of(d_out, "d_out")?.to_le_bytes());
+        head.extend_from_slice(&u32_of(n_paths, "path count")?.to_le_bytes());
+    }
+    w.section(TAG_STACK, &head)?;
+    Ok(w)
 }
 
 /// Deserialize a stack from `.lb2` container bytes.
@@ -124,6 +138,124 @@ pub fn save_stack(stack: &PackedStack, path: impl AsRef<Path>) -> Result<()> {
         let _ = std::fs::remove_file(&tmp);
     }
     result
+}
+
+/// Streams a `.lb2` model artifact to disk **one layer at a time** — the
+/// bounded-memory half of `compress --jobs N`: the shape table is known up
+/// front (from the job list), so each finished layer is appended the
+/// moment the in-order committer hands it over, encoded, written, and
+/// dropped. Peak memory is one encoded layer plus the scheduler's packed
+/// reorder buffer (typically O(workers) layers; see
+/// `coordinator::jobs` for the exact bound).
+///
+/// Produces **byte-identical** files to [`save_stack`] on the same layers
+/// (both share [`write_stack`]'s encoders; asserted by
+/// `tests/compress_pipeline.rs`), with the same durability contract: the
+/// container is written to `<path>.tmp`, fsynced, and renamed into place
+/// by [`finish`](Self::finish); an abandoned or failed write removes its
+/// temp file and never touches `path`.
+///
+/// Appended layers are validated against the declared shape table — a
+/// mismatched layer fails fast instead of sealing a container the loader
+/// would reject.
+pub struct StackStreamWriter {
+    writer: Option<ArtifactWriter<std::io::BufWriter<std::fs::File>>>,
+    shapes: Vec<(usize, usize, usize)>,
+    written: usize,
+    path: std::path::PathBuf,
+    tmp: std::path::PathBuf,
+}
+
+impl StackStreamWriter {
+    /// Open `<path>.tmp` and write the container header + shape table for
+    /// a stack of `shapes = [(d_in, d_out, n_paths); depth]`.
+    pub fn create(path: impl AsRef<Path>, shapes: &[(usize, usize, usize)]) -> Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        if shapes.is_empty() {
+            bail!("refusing to stream an empty stack (no layer shapes)");
+        }
+        // Same temp-name scheme as save_stack: append ".tmp" to the whole
+        // file name so "model.v1" and "model.lb2" cannot collide.
+        let mut tmp_name = path.as_os_str().to_os_string();
+        tmp_name.push(".tmp");
+        let tmp = std::path::PathBuf::from(tmp_name);
+        let file = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        let writer = match begin_stack(std::io::BufWriter::new(file), shapes) {
+            Ok(w) => w,
+            Err(e) => {
+                let _ = std::fs::remove_file(&tmp);
+                return Err(e);
+            }
+        };
+        Ok(Self { writer: Some(writer), shapes: shapes.to_vec(), written: 0, path, tmp })
+    }
+
+    /// Append the next layer (layers must arrive in chain order). The
+    /// layer's shape is checked against the declared table.
+    pub fn append_layer(&mut self, layer: &PackedResidual) -> Result<()> {
+        let k = self.written;
+        let Some(&(d_in, d_out, n_paths)) = self.shapes.get(k) else {
+            bail!("layer {k} appended but the shape table declares only {}", self.shapes.len());
+        };
+        if layer.d_in() != d_in || layer.d_out() != d_out || layer.paths().len() != n_paths {
+            bail!(
+                "layer {k} is {}x{} with {} paths but the shape table says {d_out}x{d_in} with {n_paths}",
+                layer.d_out(),
+                layer.d_in(),
+                layer.paths().len()
+            );
+        }
+        let w = self.writer.as_mut().expect("writer live until finish");
+        w.section(TAG_LAYER, &encode_layer(layer)?)?;
+        self.written += 1;
+        Ok(())
+    }
+
+    /// Layers appended so far.
+    pub fn layers_written(&self) -> usize {
+        self.written
+    }
+
+    /// Seal the container (trailer + CRC), fsync, and rename the temp file
+    /// into place. Fails — leaving no file at `path` — if any declared
+    /// layer is missing.
+    pub fn finish(mut self) -> Result<()> {
+        if self.written != self.shapes.len() {
+            bail!(
+                "artifact declares {} layers but only {} were appended",
+                self.shapes.len(),
+                self.written
+            );
+        }
+        let w = self.writer.take().expect("writer live until finish");
+        let seal = || -> Result<()> {
+            let buf = w.finish()?;
+            let file = buf
+                .into_inner()
+                .map_err(|e| anyhow::anyhow!("flushing {}: {}", self.tmp.display(), e.error()))?;
+            file.sync_all().with_context(|| format!("syncing {}", self.tmp.display()))?;
+            std::fs::rename(&self.tmp, &self.path).with_context(|| {
+                format!("renaming {} to {}", self.tmp.display(), self.path.display())
+            })?;
+            Ok(())
+        };
+        let result = seal();
+        if result.is_err() {
+            let _ = std::fs::remove_file(&self.tmp);
+        }
+        result
+    }
+}
+
+impl Drop for StackStreamWriter {
+    fn drop(&mut self) {
+        // Abandoned mid-stream (error or unwind before finish): never leave
+        // a half-written temp file behind.
+        if self.writer.take().is_some() {
+            let _ = std::fs::remove_file(&self.tmp);
+        }
+    }
 }
 
 /// Load a stack from a `.lb2` file.

@@ -1,99 +1,320 @@
-//! Parallel layer-compression scheduler.
+//! Layer-compression scheduling on the shared worker pool.
 //!
-//! Compressing a model is embarrassingly parallel across layers; this
-//! scheduler fans a job list out over a worker pool (std threads + channel
-//! work queue — no external runtime in this build), collecting per-layer
-//! results with deterministic per-job RNG streams so the output is
-//! independent of scheduling order.
+//! Compressing a model is embarrassingly parallel across layers. This
+//! scheduler fans a job list out as claim-loops on the process-wide
+//! [`Pool`] (no per-call OS-thread spawns — the PR 2 serving pool and the
+//! offline pipeline share one resident worker set) and hands finished
+//! layers to a caller-supplied sink **in job order** while later layers
+//! are still compressing — the streaming half of `compress --jobs N`,
+//! where the sink appends straight into the `.lb2`
+//! [`StackStreamWriter`](crate::artifact::StackStreamWriter).
+//!
+//! # Determinism
+//!
+//! Each job owns an independent RNG stream (its `seed`; derive per-layer
+//! seeds with [`crate::rng::derive_seed`], never by advancing one shared
+//! generator across the layer loop) and every pooled kernel is bit-exact,
+//! so a layer's bytes never depend on worker count or claim order. Commits
+//! are reordered to strict job order before reaching the sink, so the
+//! artifact byte stream is identical for any `workers`.
+//!
+//! # Inner parallelism
+//!
+//! With `workers == 1` the single claim-loop runs on the caller and each
+//! layer's linalg fans out across [`Pool::global`] (the d≈4096 single-layer
+//! case). With `workers > 1` layer-parallelism owns the cores: claim-loops
+//! run *on* pool workers, where nested dispatch inlines (see `parallel`),
+//! so per-layer linalg is serial by construction — the right trade at
+//! model scale, with no deadlock risk either way.
+//!
+//! Because claim-loops occupy the shared global workers until the job
+//! queue drains, compressing and *serving* from the same process at the
+//! same time makes serving's row-range jobs queue behind compression —
+//! whole-model latency, not microseconds. That mirrors the deployment
+//! contract (quantize once, then serve; no binary in this repo does
+//! both concurrently); a process that genuinely needs both should give
+//! the server its own `SignPool::new(..)` instead of the global one.
+//!
+//! # Failure semantics
+//!
+//! A panicking layer no longer tears down the batch blindly: every other
+//! in-flight layer completes, layers *before* the panic still reach the
+//! sink in order, and then the original panic payload is re-raised on the
+//! caller (the old implementation lost all completed results to a
+//! `join().expect` and leaked the panic message). A sink error cancels
+//! the remaining queue, drains in-flight work, and returns the error.
 
 use crate::linalg::Mat;
-use crate::littlebit::{compress, CompressionConfig};
+use crate::littlebit::{compress_pipeline, CompressionConfig, CompressionReport};
+use crate::packing::PackedResidual;
+use crate::parallel::{Pool, ScopedJob};
 use crate::rng::Pcg64;
+use crate::spectral::{synth_weight, SynthSpec};
+use std::any::Any;
+use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
-use std::thread;
+use std::sync::Mutex;
 
-/// One unit of work: compress `weight` under `cfg`.
+/// Where a job's weight matrix comes from. `Synth` keeps the dense matrix
+/// out of the job list entirely (it is fabricated inside the worker and
+/// dropped with the job), so a long synthetic chain streams at bounded
+/// memory; real pipelines hand in `Dense` weights they already hold.
+#[derive(Clone, Debug)]
+pub enum JobInput {
+    /// An explicit dense weight matrix.
+    Dense(Mat),
+    /// Fabricate `synth_weight(&spec, seed)` inside the job.
+    Synth { spec: SynthSpec, seed: u64 },
+}
+
+impl JobInput {
+    /// `(d_out, d_in)` of the weight this input will produce.
+    pub fn shape(&self) -> (usize, usize) {
+        match self {
+            JobInput::Dense(w) => w.shape(),
+            JobInput::Synth { spec, .. } => (spec.rows, spec.cols),
+        }
+    }
+}
+
+/// One unit of work: compress the input weight under `cfg`.
+#[derive(Clone, Debug)]
 pub struct CompressionJob {
     /// Stable identifier (e.g. "b12.q_proj").
     pub name: String,
-    pub weight: Mat,
+    pub input: JobInput,
     pub cfg: CompressionConfig,
-    /// Seed for this job's deterministic RNG stream.
+    /// Seed of this job's independent RNG stream
+    /// (see [`crate::rng::derive_seed`]).
     pub seed: u64,
 }
 
-/// Per-layer outcome.
+impl CompressionJob {
+    /// Convenience constructor for an explicit weight matrix.
+    pub fn dense(name: impl Into<String>, weight: Mat, cfg: CompressionConfig, seed: u64) -> Self {
+        Self { name: name.into(), input: JobInput::Dense(weight), cfg, seed }
+    }
+
+    /// `(d_out, d_in)` of the layer this job produces.
+    pub fn shape(&self) -> (usize, usize) {
+        self.input.shape()
+    }
+
+    /// Residual paths the compressed layer will carry (fixed by the
+    /// config), so artifact headers can be written before any layer
+    /// finishes.
+    pub fn n_paths(&self) -> usize {
+        if self.cfg.residual {
+            2
+        } else {
+            1
+        }
+    }
+}
+
+/// Per-layer metrics.
 #[derive(Clone, Debug)]
 pub struct JobResult {
     pub name: String,
     pub mse: f64,
     pub bpp: f64,
     pub rank: usize,
+    /// Mean / max λ over path 0's latent rows (the Fig. 3 diagnostic).
+    pub lambda_mean: f64,
+    pub lambda_max: f64,
+    /// End-to-end wall-clock of the job (compression + scoring).
     pub wall_ms: f64,
+    /// Per-stage wall-clock of the compression itself.
+    pub report: CompressionReport,
 }
 
-/// Run all jobs on `workers` threads; results return in job order.
-pub fn run_compression_jobs(jobs: Vec<CompressionJob>, workers: usize) -> Vec<JobResult> {
+/// Everything the sink receives per layer: metrics plus the packed
+/// deployment form ready to stream into an artifact. The full-precision
+/// factors are dropped inside the job, so in-flight memory is the packed
+/// reorder buffer: typically O(workers) layers (layers of one model are
+/// near-uniform cost), degrading toward the model tail only if an early
+/// layer is pathologically slower than its successors.
+pub struct LayerOutcome {
+    pub result: JobResult,
+    pub packed: PackedResidual,
+}
+
+/// Compress one job on `pool` and score it.
+fn run_job(job: CompressionJob, pool: &Pool) -> LayerOutcome {
+    let t0 = std::time::Instant::now();
+    let w = match job.input {
+        JobInput::Dense(w) => w,
+        JobInput::Synth { spec, seed } => synth_weight(&spec, &mut Pcg64::seed(seed)),
+    };
+    let mut rng = Pcg64::seed(job.seed);
+    let layer = compress_pipeline(&w, &job.cfg, &mut rng, pool);
+    let recon = layer.compressed.reconstruct_on(pool);
+    let lams = layer.compressed.paths[0].u_distortions();
+    let lambda_mean = lams.iter().sum::<f64>() / lams.len().max(1) as f64;
+    let lambda_max = lams.iter().fold(0.0f64, |m, &x| m.max(x));
+    LayerOutcome {
+        result: JobResult {
+            name: job.name,
+            mse: recon.mse(&w),
+            bpp: layer.compressed.bpp(),
+            rank: layer.compressed.paths[0].factors.rank(),
+            lambda_mean,
+            lambda_max,
+            wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+            report: layer.report,
+        },
+        packed: layer.packed,
+    }
+}
+
+type JobPayload = Box<dyn Any + Send + 'static>;
+type Slot = Result<LayerOutcome, JobPayload>;
+type JobQueue = Mutex<std::iter::Enumerate<std::vec::IntoIter<CompressionJob>>>;
+
+/// Run all jobs across `workers` claim-loops on the shared pool, invoking
+/// `sink(index, outcome)` **in job order** as layers complete. Returns
+/// when every layer has been committed (or on the first sink error, after
+/// in-flight work drains). See the module docs for the determinism,
+/// panic, and inner-parallelism contracts.
+pub fn run_compression_jobs_streaming(
+    jobs: Vec<CompressionJob>,
+    workers: usize,
+    mut sink: impl FnMut(usize, LayerOutcome) -> anyhow::Result<()>,
+) -> anyhow::Result<()> {
     let n = jobs.len();
     if n == 0 {
-        return Vec::new();
+        return Ok(());
     }
     let workers = workers.clamp(1, n);
-    let queue: Arc<Mutex<std::vec::IntoIter<(usize, CompressionJob)>>> = Arc::new(Mutex::new(
-        jobs.into_iter().enumerate().collect::<Vec<_>>().into_iter(),
-    ));
-    let (tx, rx) = mpsc::channel::<(usize, JobResult)>();
+    let pool = Pool::for_threads(workers);
+    // With one claim-loop the caller owns every layer and each layer fans
+    // its linalg across the global pool; with several, the loops own the
+    // cores and per-layer linalg stays serial (nested dispatch would
+    // inline anyway — this just skips the queue round-trip).
+    let inner: &Pool = if workers == 1 { Pool::global() } else { Pool::serial() };
 
-    let mut handles = Vec::new();
-    for _ in 0..workers {
-        let queue = Arc::clone(&queue);
-        let tx = tx.clone();
-        handles.push(thread::spawn(move || loop {
-            let job = { queue.lock().expect("queue lock").next() };
-            let Some((idx, job)) = job else { break };
-            let t0 = std::time::Instant::now();
-            let mut rng = Pcg64::seed(job.seed);
-            let compressed = compress(&job.weight, &job.cfg, &mut rng);
-            let recon = compressed.reconstruct();
-            let result = JobResult {
-                name: job.name,
-                mse: recon.mse(&job.weight),
-                bpp: compressed.bpp(),
-                rank: compressed.paths[0].factors.rank(),
-                wall_ms: t0.elapsed().as_secs_f64() * 1e3,
-            };
-            if tx.send((idx, result)).is_err() {
+    let queue: JobQueue = Mutex::new(jobs.into_iter().enumerate());
+    let cancel = AtomicBool::new(false);
+    let (tx, rx) = mpsc::channel::<(usize, Slot)>();
+
+    let claim = |queue: &JobQueue| queue.lock().expect("job queue lock").next();
+    // One claim-loop body, shared by the caller and the pool workers.
+    let work = |tx: mpsc::Sender<(usize, Slot)>| {
+        while !cancel.load(Ordering::Relaxed) {
+            let Some((idx, job)) = claim(&queue) else { break };
+            let slot = catch_unwind(AssertUnwindSafe(|| run_job(job, inner)));
+            if tx.send((idx, slot)).is_err() {
                 break;
             }
-        }));
-    }
-    drop(tx);
+        }
+    };
 
-    let mut out: Vec<Option<JobResult>> = (0..n).map(|_| None).collect();
-    for (idx, res) in rx {
-        out[idx] = Some(res);
+    let loops: Vec<ScopedJob<'_>> = (1..workers)
+        .map(|_| {
+            let tx = tx.clone();
+            let work = &work;
+            Box::new(move || work(tx)) as ScopedJob<'_>
+        })
+        .collect();
+    let guard = pool.dispatch(loops);
+
+    // The caller is claim-loop 0 — and also the committer: between its own
+    // layers it drains finished ones and hands them to the sink in strict
+    // job order (the streaming path that keeps memory bounded by the
+    // reorder buffer instead of the model depth).
+    let mut pending: BTreeMap<usize, Slot> = BTreeMap::new();
+    let mut next = 0usize;
+    let mut sink_err: Option<anyhow::Error> = None;
+    let mut commit_ready = |pending: &mut BTreeMap<usize, Slot>,
+                            next: &mut usize,
+                            sink_err: &mut Option<anyhow::Error>|
+     -> Option<JobPayload> {
+        while let Some(slot) = pending.remove(next) {
+            *next += 1;
+            match slot {
+                Ok(outcome) => {
+                    if sink_err.is_none() {
+                        if let Err(e) = sink(*next - 1, outcome) {
+                            *sink_err = Some(e);
+                            cancel.store(true, Ordering::Relaxed);
+                        }
+                    }
+                }
+                // Completed layers before this one are already committed;
+                // re-raise the original payload (after in-flight work
+                // drains at the caller).
+                Err(payload) => return Some(payload),
+            }
+        }
+        None
+    };
+
+    let mut panic_payload: Option<JobPayload> = None;
+    loop {
+        if cancel.load(Ordering::Relaxed) {
+            break;
+        }
+        let Some((idx, job)) = claim(&queue) else { break };
+        let slot = catch_unwind(AssertUnwindSafe(|| run_job(job, inner)));
+        pending.insert(idx, slot);
+        while let Ok((i, s)) = rx.try_recv() {
+            pending.insert(i, s);
+        }
+        if panic_payload.is_none() {
+            panic_payload = commit_ready(&mut pending, &mut next, &mut sink_err);
+            if panic_payload.is_some() {
+                cancel.store(true, Ordering::Relaxed);
+            }
+        }
     }
-    for h in handles {
-        h.join().expect("worker panicked");
+
+    // Wait for the worker loops, then drain everything still in flight.
+    guard.wait();
+    drop(tx);
+    for (i, s) in rx {
+        pending.insert(i, s);
     }
-    out.into_iter().map(|r| r.expect("job lost")).collect()
+    if panic_payload.is_none() {
+        panic_payload = commit_ready(&mut pending, &mut next, &mut sink_err);
+    }
+    if let Some(payload) = panic_payload {
+        std::panic::resume_unwind(payload);
+    }
+    if let Some(e) = sink_err {
+        return Err(e);
+    }
+    Ok(())
+}
+
+/// Run all jobs on `workers` claim-loops; results return in job order.
+/// The collect-everything convenience over
+/// [`run_compression_jobs_streaming`] — packed layers are dropped, only
+/// the metrics survive.
+pub fn run_compression_jobs(jobs: Vec<CompressionJob>, workers: usize) -> Vec<JobResult> {
+    let mut out = Vec::with_capacity(jobs.len());
+    run_compression_jobs_streaming(jobs, workers, |_, outcome| {
+        out.push(outcome.result);
+        Ok(())
+    })
+    .expect("infallible sink");
+    out
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::littlebit::InitStrategy;
-    use crate::spectral::{synth_weight, SynthSpec};
+    use crate::rng::derive_seed;
 
     fn jobs(n: usize) -> Vec<CompressionJob> {
-        let mut rng = Pcg64::seed(5);
         (0..n)
             .map(|i| {
                 let spec = SynthSpec { rows: 64, cols: 64, gamma: 0.3, coherence: 0.6, scale: 1.0 };
                 CompressionJob {
                     name: format!("layer{i}"),
-                    weight: synth_weight(&spec, &mut rng),
+                    input: JobInput::Synth { spec, seed: derive_seed(5, i as u64) },
                     cfg: CompressionConfig {
                         bpp: 1.2,
                         strategy: InitStrategy::JointItq { iters: 10 },
@@ -113,14 +334,95 @@ mod tests {
         assert_eq!(names, vec!["layer0", "layer1", "layer2", "layer3", "layer4", "layer5"]);
     }
 
+    /// The acceptance contract: identical layers for any worker count —
+    /// including byte-identical packed bit-planes, not just close metrics.
     #[test]
     fn deterministic_across_worker_counts() {
-        let a = run_compression_jobs(jobs(4), 1);
-        let b = run_compression_jobs(jobs(4), 4);
-        for (x, y) in a.iter().zip(&b) {
-            assert_eq!(x.name, y.name);
-            assert!((x.mse - y.mse).abs() < 1e-12, "{} vs {}", x.mse, y.mse);
+        let collect = |workers: usize| {
+            let mut packed = Vec::new();
+            let mut results = Vec::new();
+            run_compression_jobs_streaming(jobs(4), workers, |_, oc| {
+                packed.push(oc.packed);
+                results.push(oc.result);
+                Ok(())
+            })
+            .unwrap();
+            (packed, results)
+        };
+        let (p1, r1) = collect(1);
+        for workers in [2usize, 4, 7] {
+            let (pn, rn) = collect(workers);
+            for (a, b) in r1.iter().zip(&rn) {
+                assert_eq!(a.name, b.name, "workers={workers}");
+                assert_eq!(a.mse.to_bits(), b.mse.to_bits(), "workers={workers}");
+                assert_eq!(a.rank, b.rank);
+            }
+            for (la, lb) in p1.iter().zip(&pn) {
+                for (pa, pb) in la.paths().iter().zip(lb.paths()) {
+                    assert_eq!(pa.ub_bits().words(), pb.ub_bits().words(), "workers={workers}");
+                    assert_eq!(pa.vbt_bits().words(), pb.vbt_bits().words());
+                    assert_eq!(pa.h(), pb.h());
+                    assert_eq!(pa.l(), pb.l());
+                    assert_eq!(pa.g(), pb.g());
+                }
+            }
         }
+    }
+
+    /// Dense and Synth inputs with the same underlying weight + seed must
+    /// produce identical layers (Synth is just the lazy form).
+    #[test]
+    fn dense_and_synth_inputs_agree() {
+        let spec = SynthSpec { rows: 48, cols: 48, gamma: 0.3, coherence: 0.6, scale: 1.0 };
+        let w = synth_weight(&spec, &mut Pcg64::seed(77));
+        let cfg = CompressionConfig { bpp: 1.0, ..Default::default() };
+        let dense = run_compression_jobs(
+            vec![CompressionJob::dense("l", w, cfg.clone(), 9)],
+            1,
+        );
+        let synth = run_compression_jobs(
+            vec![CompressionJob {
+                name: "l".into(),
+                input: JobInput::Synth { spec, seed: 77 },
+                cfg,
+                seed: 9,
+            }],
+            1,
+        );
+        assert_eq!(dense[0].mse.to_bits(), synth[0].mse.to_bits());
+    }
+
+    /// Streaming: the sink must see indices in strict order, with metrics
+    /// attached, for any worker count.
+    #[test]
+    fn streaming_commits_in_order() {
+        let mut seen = Vec::new();
+        run_compression_jobs_streaming(jobs(5), 4, |idx, oc| {
+            seen.push((idx, oc.result.name.clone()));
+            assert!(oc.result.mse.is_finite());
+            Ok(())
+        })
+        .unwrap();
+        let want: Vec<(usize, String)> =
+            (0..5).map(|i| (i, format!("layer{i}"))).collect();
+        assert_eq!(seen, want);
+    }
+
+    /// A sink error cancels the rest of the queue and surfaces as Err —
+    /// not a hang, not a panic.
+    #[test]
+    fn sink_error_cancels_cleanly() {
+        let mut calls = 0usize;
+        let err = run_compression_jobs_streaming(jobs(6), 2, |idx, _| {
+            calls += 1;
+            if idx == 1 {
+                anyhow::bail!("sink full")
+            }
+            Ok(())
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("sink full"), "{err}");
+        assert!(calls >= 2);
     }
 
     #[test]
@@ -135,6 +437,9 @@ mod tests {
             assert!(r.mse.is_finite() && r.mse >= 0.0);
             assert!(r.bpp > 0.0 && r.bpp <= 1.3);
             assert!(r.rank >= 1);
+            assert!(r.lambda_mean > 0.0 && r.lambda_max >= r.lambda_mean);
+            assert!(r.report.svd_ms > 0.0 && r.wall_ms >= r.report.total_ms);
+            assert!(r.report.total_ms + 1e-9 >= r.report.stage_ms());
         }
     }
 }

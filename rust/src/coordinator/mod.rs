@@ -23,7 +23,10 @@ mod server;
 #[cfg(feature = "xla")]
 mod trainer;
 
-pub use jobs::{run_compression_jobs, CompressionJob, JobResult};
+pub use jobs::{
+    run_compression_jobs, run_compression_jobs_streaming, CompressionJob, JobInput, JobResult,
+    LayerOutcome,
+};
 pub use metrics::Metrics;
 pub use params::ParamStore;
 pub use server::{

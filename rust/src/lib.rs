@@ -56,6 +56,7 @@ pub mod littlebit;
 pub mod memory;
 pub mod model;
 pub mod packing;
+pub mod parallel;
 pub mod quant;
 pub mod rng;
 pub mod runtime;

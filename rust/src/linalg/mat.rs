@@ -1,5 +1,18 @@
-//! Row-major dense `f32` matrix with cache-blocked multiply.
+//! Row-major dense `f32` matrix with cache-blocked, pool-parallel
+//! multiplies.
+//!
+//! The product kernels come in two forms: the classic serial entry points
+//! (`matmul`, `t_matmul`, `matmul_t`, `matvec`) and `_on` variants taking
+//! a [`Pool`] that partition **output rows** into contiguous ranges across
+//! the pool's threads. Each output element keeps a fixed k-order
+//! accumulation — a range job computes exactly what the serial kernel
+//! would compute for those rows — so pooled results are **bit-identical**
+//! to serial for any thread count (asserted by `tests/parallel_linalg.rs`
+//! across thread counts {1, 2, 7, 64}). Shapes below [`PAR_MIN_FLOPS`]
+//! stay inline on the caller: dispatch overhead would dominate, and the
+//! threshold depends only on the shape, never on pool occupancy.
 
+use crate::parallel::Pool;
 use crate::rng::Pcg64;
 use std::fmt;
 
@@ -20,6 +33,12 @@ impl fmt::Debug for Mat {
 /// Blocking factor for the matmul micro-kernel. 64×64 f32 tiles (16 KiB)
 /// comfortably fit L1 alongside the accumulator.
 const BLOCK: usize = 64;
+
+/// Minimum multiply count (`m·k·n`) before a product is worth splitting
+/// across the pool — below this, channel dispatch costs more than the
+/// arithmetic. Shape-only, so the serial/parallel decision is
+/// deterministic (and bit-irrelevant either way).
+const PAR_MIN_FLOPS: usize = 128 * 1024;
 
 impl Default for Mat {
     /// Empty 0×0 matrix — the placeholder state of reusable scratch buffers
@@ -147,75 +166,131 @@ impl Mat {
     }
 
     /// `self @ other` — cache-blocked i-k-j loop with the k-panel of `other`
-    /// streaming through L1/L2.
+    /// streaming through L1/L2. Serial entry; [`matmul_on`](Self::matmul_on)
+    /// is the pool-parallel twin (bit-identical output).
     pub fn matmul(&self, other: &Mat) -> Mat {
+        self.matmul_on(other, Pool::serial())
+    }
+
+    /// `self @ other` with output rows partitioned across `pool`. Each row
+    /// range runs the exact serial blocked kernel (fixed k-order per output
+    /// element), so the result is bit-identical to [`matmul`](Self::matmul)
+    /// for any thread count. Products under [`PAR_MIN_FLOPS`] stay inline.
+    pub fn matmul_on(&self, other: &Mat, pool: &Pool) -> Mat {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch {:?} @ {:?}", self, other);
         let (m, k, n) = (self.rows, self.cols, other.cols);
         let mut out = Mat::zeros(m, n);
-        for bk in (0..k).step_by(BLOCK) {
-            let ke = (bk + BLOCK).min(k);
-            for i in 0..m {
-                let arow = &self.data[i * k..(i + 1) * k];
-                let orow = &mut out.data[i * n..(i + 1) * n];
-                for p in bk..ke {
-                    let a = arow[p];
+        if m == 0 || n == 0 {
+            return out;
+        }
+        let parts = if m * k * n < PAR_MIN_FLOPS { 1 } else { pool.threads() };
+        pool.run_row_chunks(&mut out.data, n, parts, |row0, orows| {
+            let nrows = orows.len() / n;
+            for bk in (0..k).step_by(BLOCK) {
+                let ke = (bk + BLOCK).min(k);
+                for di in 0..nrows {
+                    let arow = self.row(row0 + di);
+                    let orow = &mut orows[di * n..(di + 1) * n];
+                    for p in bk..ke {
+                        let a = arow[p];
+                        if a == 0.0 {
+                            continue;
+                        }
+                        let brow = other.row(p);
+                        // Inner j-loop is a saxpy the compiler vectorizes.
+                        for (o, b) in orow.iter_mut().zip(brow) {
+                            *o += a * *b;
+                        }
+                    }
+                }
+            }
+        });
+        out
+    }
+
+    /// `selfᵀ @ other` without materializing the transpose. Serial entry;
+    /// [`t_matmul_on`](Self::t_matmul_on) is the pool-parallel twin.
+    pub fn t_matmul(&self, other: &Mat) -> Mat {
+        self.t_matmul_on(other, Pool::serial())
+    }
+
+    /// `selfᵀ @ other` with output rows partitioned across `pool` —
+    /// bit-identical to [`t_matmul`](Self::t_matmul) for any thread count
+    /// (k ascends identically per output element in every range).
+    pub fn t_matmul_on(&self, other: &Mat, pool: &Pool) -> Mat {
+        assert_eq!(self.rows, other.rows, "t_matmul shape mismatch");
+        let (k, m, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        if m == 0 || n == 0 {
+            return out;
+        }
+        let parts = if m * k * n < PAR_MIN_FLOPS { 1 } else { pool.threads() };
+        pool.run_row_chunks(&mut out.data, n, parts, |row0, orows| {
+            let nrows = orows.len() / n;
+            for p in 0..k {
+                let arow = self.row(p);
+                let brow = other.row(p);
+                for di in 0..nrows {
+                    let a = arow[row0 + di];
                     if a == 0.0 {
                         continue;
                     }
-                    let brow = &other.data[p * n..(p + 1) * n];
-                    // Inner j-loop is a saxpy the compiler vectorizes.
+                    let orow = &mut orows[di * n..(di + 1) * n];
                     for (o, b) in orow.iter_mut().zip(brow) {
                         *o += a * *b;
                     }
                 }
             }
-        }
+        });
         out
     }
 
-    /// `selfᵀ @ other` without materializing the transpose.
-    pub fn t_matmul(&self, other: &Mat) -> Mat {
-        assert_eq!(self.rows, other.rows, "t_matmul shape mismatch");
-        let (k, m, n) = (self.rows, self.cols, other.cols);
-        let mut out = Mat::zeros(m, n);
-        for p in 0..k {
-            let arow = &self.data[p * m..(p + 1) * m];
-            let brow = &other.data[p * n..(p + 1) * n];
-            for i in 0..m {
-                let a = arow[i];
-                if a == 0.0 {
-                    continue;
-                }
-                let orow = &mut out.data[i * n..(i + 1) * n];
-                for (o, b) in orow.iter_mut().zip(brow) {
-                    *o += a * *b;
-                }
-            }
-        }
-        out
-    }
-
-    /// `self @ otherᵀ` without materializing the transpose.
+    /// `self @ otherᵀ` without materializing the transpose. Serial entry;
+    /// [`matmul_t_on`](Self::matmul_t_on) is the pool-parallel twin.
     pub fn matmul_t(&self, other: &Mat) -> Mat {
+        self.matmul_t_on(other, Pool::serial())
+    }
+
+    /// `self @ otherᵀ` with output rows partitioned across `pool` —
+    /// bit-identical to [`matmul_t`](Self::matmul_t) for any thread count
+    /// (each element is one fixed-order f64 dot).
+    pub fn matmul_t_on(&self, other: &Mat, pool: &Pool) -> Mat {
         assert_eq!(self.cols, other.cols, "matmul_t shape mismatch");
         let (m, k, n) = (self.rows, self.cols, other.rows);
         let mut out = Mat::zeros(m, n);
-        for i in 0..m {
-            let arow = &self.data[i * k..(i + 1) * k];
-            let orow = &mut out.data[i * n..(i + 1) * n];
-            for (j, o) in orow.iter_mut().enumerate() {
-                *o = super::dot(arow, &other.data[j * k..(j + 1) * k]) as f32;
-            }
+        if m == 0 || n == 0 {
+            return out;
         }
+        let parts = if m * k * n < PAR_MIN_FLOPS { 1 } else { pool.threads() };
+        pool.run_row_chunks(&mut out.data, n, parts, |row0, orows| {
+            for (di, orow) in orows.chunks_mut(n).enumerate() {
+                let arow = self.row(row0 + di);
+                for (j, o) in orow.iter_mut().enumerate() {
+                    *o = super::dot(arow, other.row(j)) as f32;
+                }
+            }
+        });
         out
     }
 
-    /// Matrix-vector product `self @ x`.
+    /// Matrix-vector product `self @ x`. Serial entry;
+    /// [`matvec_on`](Self::matvec_on) is the pool-parallel twin.
     pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        self.matvec_on(x, Pool::serial())
+    }
+
+    /// `self @ x` with output rows partitioned across `pool` —
+    /// bit-identical to [`matvec`](Self::matvec) for any thread count.
+    pub fn matvec_on(&self, x: &[f32], pool: &Pool) -> Vec<f32> {
         assert_eq!(self.cols, x.len());
-        (0..self.rows)
-            .map(|i| super::dot(self.row(i), x) as f32)
-            .collect()
+        let mut out = vec![0.0f32; self.rows];
+        let parts = if self.rows * self.cols < PAR_MIN_FLOPS { 1 } else { pool.threads() };
+        pool.run_row_chunks(&mut out, 1, parts, |row0, orows| {
+            for (di, o) in orows.iter_mut().enumerate() {
+                *o = super::dot(self.row(row0 + di), x) as f32;
+            }
+        });
+        out
     }
 
     /// Scale row `i` by `s[i]` — `diag(s) @ self`.

@@ -8,13 +8,22 @@
 //! actually hits:
 //!
 //! * `matmul` — cache-blocked, `f32` storage with per-tile accumulation.
-//! * `qr` — Householder, used both for orthonormalization and for the
-//!   random-orthogonal sampler.
+//! * `qr` — Householder on column-major scratch, used both for
+//!   orthonormalization and for the random-orthogonal sampler.
 //! * `svd_jacobi` — one-sided Jacobi, cubic but rock-solid; used on small
 //!   square matrices (the `r×r` Procrustes systems, `r ≤ ~1024`).
 //! * `svd_randomized` — Halko–Martinsson–Tropp randomized range finder with
 //!   power iterations; used for rank-`r` truncation of the big weight
 //!   matrices (`d×d`, `d` up to 4096+ here).
+//!
+//! The heavy kernels (`Mat::{matmul, t_matmul, matmul_t, matvec}`, the QR
+//! trailing updates, the randomized-SVD products) come in `_on` variants
+//! that partition output rows over a [`crate::parallel::Pool`]. Every
+//! output element keeps a fixed reduction order, so pooled results are
+//! **bit-identical** to serial for any thread count — the invariant the
+//! whole compression pipeline's `--jobs N` determinism rests on
+//! (`tests/parallel_linalg.rs`). `svd_randomized` defaults to the shared
+//! global pool; the plain `Mat` entry points stay serial.
 //!
 //! Storage is row-major `f32`; accumulations are `f32` with `f64` reductions
 //! where precision matters (norms, dot products over long vectors).
@@ -24,8 +33,8 @@ mod qr;
 mod svd;
 
 pub use mat::{f16_round, Mat};
-pub use qr::{householder_qr, orthogonality_defect, random_orthogonal};
-pub use svd::{svd_jacobi, svd_randomized, Svd};
+pub use qr::{householder_qr, householder_qr_on, orthogonality_defect, random_orthogonal};
+pub use svd::{svd_jacobi, svd_randomized, svd_randomized_on, Svd};
 
 /// Dot product with f64 accumulation.
 #[inline]

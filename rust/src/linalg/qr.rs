@@ -5,63 +5,105 @@
 //! initial `R`; (2) re-orthonormalizing the range basis between power
 //! iterations inside the randomized SVD; (3) the coherence-controlled
 //! synthetic singular-vector fabricator (`spectral::synth`).
+//!
+//! The factorization works on **column-major** f64 scratch: every
+//! Householder reflection touches whole columns, so column-major makes each
+//! update a contiguous streak AND lets the trailing-column updates split
+//! into disjoint `&mut` column chunks for the pool
+//! ([`householder_qr_on`]). Per column the reflection arithmetic (dot,
+//! then axpy, both in ascending row order) is identical in every chunk, so
+//! the pooled factorization is bit-identical to the serial one for any
+//! thread count.
 
 use super::Mat;
+use crate::parallel::Pool;
 use crate::rng::Pcg64;
+
+/// Minimum trailing-update size (`columns × active rows`) before a
+/// reflection is worth splitting across the pool. Shape-only, hence
+/// deterministic; bit-irrelevant either way.
+const PAR_MIN_CELLS: usize = 32 * 1024;
+
+/// Apply the reflection `H = I − 2 v vᵀ / ‖v‖²` to the active tail of one
+/// column (both loops ascend in row order — the source of bit-exactness
+/// across any column partitioning).
+#[inline]
+fn reflect(col: &mut [f64], v: &[f64], vnorm2: f64) {
+    let mut dot = 0.0f64;
+    for (a, b) in v.iter().zip(col.iter()) {
+        dot += a * b;
+    }
+    let c = 2.0 * dot / vnorm2;
+    for (a, b) in v.iter().zip(col.iter_mut()) {
+        *b -= c * a;
+    }
+}
 
 /// Thin Householder QR: `a (m×n, m ≥ n) = Q (m×n) · R (n×n)` with Q having
 /// orthonormal columns and R upper-triangular with non-negative diagonal
 /// (sign-fixed so the decomposition is unique, which also makes `Q` of a
-/// gaussian exactly Haar-distributed).
+/// gaussian exactly Haar-distributed). Serial entry;
+/// [`householder_qr_on`] is the pool-parallel twin (bit-identical).
 pub fn householder_qr(a: &Mat) -> (Mat, Mat) {
+    householder_qr_on(a, Pool::serial())
+}
+
+/// [`householder_qr`] with the per-reflection trailing-column updates (and
+/// the Q back-accumulation) partitioned into contiguous column chunks
+/// across `pool`. Columns are updated independently with fixed row-order
+/// arithmetic, so the result is bit-identical to the serial factorization
+/// for any thread count.
+pub fn householder_qr_on(a: &Mat, pool: &Pool) -> (Mat, Mat) {
     let (m, n) = a.shape();
     assert!(m >= n, "householder_qr expects tall matrix, got {m}x{n}");
-    // Work in f64 for stability of the reflections.
-    let mut r: Vec<f64> = a.as_slice().iter().map(|&x| x as f64).collect();
+    // Column-major f64 work matrix: column j occupies r[j*m..(j+1)*m].
+    let mut r = vec![0.0f64; m * n];
+    for j in 0..n {
+        for i in 0..m {
+            r[j * m + i] = a.at(i, j) as f64;
+        }
+    }
     let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n); // reflection vectors
 
     for k in 0..n {
         // Build the Householder vector for column k below the diagonal.
+        let col = &r[k * m..(k + 1) * m];
         let mut alpha = 0.0f64;
-        for i in k..m {
-            let x = r[i * n + k];
+        for &x in &col[k..] {
             alpha += x * x;
         }
         alpha = alpha.sqrt();
-        if r[k * n + k] > 0.0 {
+        if col[k] > 0.0 {
             alpha = -alpha;
         }
         let mut v = vec![0.0f64; m - k];
-        v[0] = r[k * n + k] - alpha;
-        for i in k + 1..m {
-            v[i - k] = r[i * n + k];
-        }
+        v[0] = col[k] - alpha;
+        v[1..].copy_from_slice(&col[k + 1..]);
         let vnorm2: f64 = v.iter().map(|x| x * x).sum();
         if vnorm2 > 1e-300 {
-            // Apply H = I − 2 v vᵀ / ‖v‖² to the trailing block of R.
-            for j in k..n {
-                let mut dot = 0.0;
-                for i in k..m {
-                    dot += v[i - k] * r[i * n + j];
+            // Apply H to the trailing columns k+1..n, chunked on the pool.
+            // (Column k itself collapses to (…, alpha, 0, …, 0) by
+            // construction; that is written directly below.)
+            let tail = &mut r[(k + 1) * m..];
+            let parts = if (n - k - 1) * (m - k) < PAR_MIN_CELLS { 1 } else { pool.threads() };
+            pool.run_row_chunks(tail, m, parts, |_, cols| {
+                for col in cols.chunks_mut(m) {
+                    reflect(&mut col[k..], &v, vnorm2);
                 }
-                let c = 2.0 * dot / vnorm2;
-                for i in k..m {
-                    r[i * n + j] -= c * v[i - k];
-                }
-            }
+            });
+        }
+        r[k * m + k] = alpha;
+        for i in k + 1..m {
+            r[k * m + i] = 0.0;
         }
         vs.push(v);
-        // Zero strictly-below-diagonal entries explicitly.
-        r[k * n + k] = alpha;
-        for i in k + 1..m {
-            r[i * n + k] = 0.0;
-        }
     }
 
-    // Accumulate Q = H_0 H_1 ... H_{n-1} applied to the first n columns of I.
+    // Accumulate Q = H_0 H_1 ... H_{n-1} applied to the first n columns of
+    // I, same column-chunked dispatch.
     let mut q = vec![0.0f64; m * n];
     for j in 0..n {
-        q[j * n + j] = 1.0;
+        q[j * m + j] = 1.0;
     }
     for k in (0..n).rev() {
         let v = &vs[k];
@@ -69,32 +111,28 @@ pub fn householder_qr(a: &Mat) -> (Mat, Mat) {
         if vnorm2 <= 1e-300 {
             continue;
         }
-        for j in 0..n {
-            let mut dot = 0.0;
-            for i in k..m {
-                dot += v[i - k] * q[i * n + j];
+        let parts = if n * (m - k) < PAR_MIN_CELLS { 1 } else { pool.threads() };
+        pool.run_row_chunks(&mut q, m, parts, |_, cols| {
+            for col in cols.chunks_mut(m) {
+                reflect(&mut col[k..], v, vnorm2);
             }
-            let c = 2.0 * dot / vnorm2;
-            for i in k..m {
-                q[i * n + j] -= c * v[i - k];
-            }
-        }
+        });
     }
 
     // Sign-fix: make diag(R) non-negative.
     for k in 0..n {
-        if r[k * n + k] < 0.0 {
+        if r[k * m + k] < 0.0 {
             for j in k..n {
-                r[k * n + j] = -r[k * n + j];
+                r[j * m + k] = -r[j * m + k];
             }
             for i in 0..m {
-                q[i * n + k] = -q[i * n + k];
+                q[k * m + i] = -q[k * m + i];
             }
         }
     }
 
-    let qm = Mat::from_vec(m, n, q.iter().map(|&x| x as f32).collect());
-    let rm = Mat::from_vec(n, n, r[..n * n].to_vec().iter().map(|&x| x as f32).collect());
+    let qm = Mat::from_fn(m, n, |i, j| q[j * m + i] as f32);
+    let rm = Mat::from_fn(n, n, |i, j| r[j * m + i] as f32);
     (qm, rm)
 }
 
@@ -154,6 +192,22 @@ mod tests {
             for j in 0..i {
                 assert!(r.at(i, j).abs() < 1e-6);
             }
+        }
+    }
+
+    /// The pooled factorization must be bit-identical to the serial one —
+    /// shapes chosen so the trailing updates actually cross the dispatch
+    /// threshold.
+    #[test]
+    fn pooled_qr_matches_serial_bit_exactly() {
+        let mut rng = Pcg64::seed(7);
+        let a = Mat::gaussian(300, 130, &mut rng);
+        let (q0, r0) = householder_qr(&a);
+        for threads in [2usize, 7] {
+            let pool = Pool::new(threads);
+            let (q1, r1) = householder_qr_on(&a, &pool);
+            assert_eq!(q0, q1, "Q differs at threads={threads}");
+            assert_eq!(r0, r1, "R differs at threads={threads}");
         }
     }
 

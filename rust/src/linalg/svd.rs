@@ -9,7 +9,8 @@
 //! * Rank-1 magnitude decomposition (`|U| ≈ h·lᵀ`) → [`svd_randomized`] with
 //!   `rank = 1` (power iteration dominated; very fast).
 
-use super::{householder_qr, Mat};
+use super::{householder_qr, householder_qr_on, Mat};
+use crate::parallel::Pool;
 use crate::rng::Pcg64;
 
 /// A (possibly truncated) SVD `a ≈ u · diag(s) · vᵀ`.
@@ -164,6 +165,12 @@ pub fn svd_jacobi(a: &Mat) -> Svd {
 ///
 /// `rank` — target rank; `oversample` — extra range dims (≥8 recommended);
 /// `power_iters` — subspace iterations (2 suffices for power-law spectra).
+///
+/// Runs on the process-wide [`Pool::global`]: the range-finding products
+/// and QR re-orthonormalizations — the compression pipeline's dominant
+/// cost on `d×d` weights — split across output rows/columns, bit-identical
+/// to the serial path for any thread count. Use
+/// [`svd_randomized_on`] to pin an explicit pool (e.g. `Pool::serial()`).
 pub fn svd_randomized(
     a: &Mat,
     rank: usize,
@@ -171,26 +178,40 @@ pub fn svd_randomized(
     power_iters: usize,
     rng: &mut Pcg64,
 ) -> Svd {
+    svd_randomized_on(a, rank, oversample, power_iters, rng, Pool::global())
+}
+
+/// [`svd_randomized`] on an explicit [`Pool`]. Bit-identical results for
+/// any pool (the dense products and QR keep fixed per-element reduction
+/// orders); the pool only changes wall-clock.
+pub fn svd_randomized_on(
+    a: &Mat,
+    rank: usize,
+    oversample: usize,
+    power_iters: usize,
+    rng: &mut Pcg64,
+    pool: &Pool,
+) -> Svd {
     let (m, n) = a.shape();
     let r = rank.min(m.min(n));
     let l = (r + oversample).min(n.min(m));
 
     // Range finding: Y = A Ω, then power iterations with QR stabilization.
     let omega = Mat::gaussian(n, l, rng);
-    let mut y = a.matmul(&omega); // m×l
-    let (mut q, _) = householder_qr(&y);
+    let mut y = a.matmul_on(&omega, pool); // m×l
+    let (mut q, _) = householder_qr_on(&y, pool);
     for _ in 0..power_iters {
-        let z = a.t_matmul(&q); // n×l
-        let (qz, _) = householder_qr(&z);
-        y = a.matmul(&qz); // m×l
-        let (q2, _) = householder_qr(&y);
+        let z = a.t_matmul_on(&q, pool); // n×l
+        let (qz, _) = householder_qr_on(&z, pool);
+        y = a.matmul_on(&qz, pool); // m×l
+        let (q2, _) = householder_qr_on(&y, pool);
         q = q2;
     }
 
     // Project: B = Qᵀ A (l×n), small SVD of Bᵀ (n×l) via Jacobi.
-    let b = q.t_matmul(a); // l×n
+    let b = q.t_matmul_on(a, pool); // l×n
     let small = svd_jacobi(&b); // b = us vᵀ with u l×l
-    let u = q.matmul(&small.u.take_cols(r)); // m×r
+    let u = q.matmul_on(&small.u.take_cols(r), pool); // m×r
     Svd {
         u,
         s: small.s[..r].to_vec(),

@@ -13,6 +13,7 @@
 //! sweep.
 
 use crate::linalg::{random_orthogonal, svd_jacobi, Mat};
+use crate::parallel::Pool;
 use crate::rng::Pcg64;
 
 /// Haar random orthogonal rotation (the §4.3 coarse alignment).
@@ -36,7 +37,24 @@ pub struct ItqReport {
 /// `u_hat` is `d_out×r`, `v_hat` is `d_in×r`; returns the optimal rotation
 /// `R` (`r×r`) and the convergence report. Callers apply `R` to both factors
 /// (`Ũ = ÛR`, `Ṽ = V̂R`), which preserves `ÛV̂ᵀ` exactly (Eq. 7).
+///
+/// Runs on the process-wide [`Pool::global`] — the two `Z`-sized products
+/// per iteration dominate at `d ≈ 4096`, and row-partitioning keeps the
+/// trajectory bit-identical for any thread count. Use [`joint_itq_on`] to
+/// pin an explicit pool.
 pub fn joint_itq(u_hat: &Mat, v_hat: &Mat, iters: usize, rng: &mut Pcg64) -> (Mat, ItqReport) {
+    joint_itq_on(u_hat, v_hat, iters, rng, Pool::global())
+}
+
+/// [`joint_itq`] on an explicit [`Pool`]. Bit-identical results for any
+/// pool; only wall-clock changes.
+pub fn joint_itq_on(
+    u_hat: &Mat,
+    v_hat: &Mat,
+    iters: usize,
+    rng: &mut Pcg64,
+    pool: &Pool,
+) -> (Mat, ItqReport) {
     assert_eq!(u_hat.cols(), v_hat.cols(), "latent ranks must match");
     let r = u_hat.cols();
     let z = u_hat.vcat(v_hat); // (d_out + d_in) × r
@@ -45,16 +63,16 @@ pub fn joint_itq(u_hat: &Mat, v_hat: &Mat, iters: usize, rng: &mut Pcg64) -> (Ma
     let mut report = ItqReport { objective: Vec::new(), l1_mass: Vec::new(), iters: 0 };
 
     for _t in 0..iters {
-        let zr = z.matmul(&rot);
+        let zr = z.matmul_on(&rot, pool);
         // Step A: project to binary vertices.
         let b = zr.signum();
         // Step B: Procrustes — SVD(BᵀZ) = Φ Ω Ψᵀ, R = Ψ Φᵀ.
-        let m = b.t_matmul(&z); // r×r
+        let m = b.t_matmul_on(&z, pool); // r×r
         let svd = svd_jacobi(&m);
         // svd: m = u s vᵀ, with Φ = svd.u, Ψ = svd.v.
-        rot = svd.v.matmul_t(&svd.u);
+        rot = svd.v.matmul_t_on(&svd.u, pool);
 
-        let zr2 = z.matmul(&rot);
+        let zr2 = z.matmul_on(&rot, pool);
         report.objective.push(zr2.signum().fro_dist2(&zr2));
         report.l1_mass.push(crate::linalg::norm1(zr2.as_slice()));
         report.iters += 1;

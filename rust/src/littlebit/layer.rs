@@ -3,6 +3,7 @@
 
 use crate::linalg::{f16_round, Mat};
 use crate::packing::{PackedResidual, TriScaleLayer};
+use crate::parallel::Pool;
 use crate::quant::row_distortions;
 
 /// Raw Dual-SVID output for one path:
@@ -29,10 +30,18 @@ pub struct TriScaleFactors {
 impl TriScaleFactors {
     /// Dense reconstruction of Eq. 1.
     pub fn reconstruct(&self) -> Mat {
+        self.reconstruct_on(Pool::serial())
+    }
+
+    /// [`reconstruct`](Self::reconstruct) with the `d_out×d_in` product
+    /// row-partitioned across `pool` — bit-identical for any thread count.
+    /// The compression pipeline uses this for the residual-error matrix
+    /// between paths.
+    pub fn reconstruct_on(&self, pool: &Pool) -> Mat {
         self.u_b
             .scale_rows(&self.h)
             .scale_cols(&self.l)
-            .matmul_t(&self.v_b.scale_rows(&self.g))
+            .matmul_t_on(&self.v_b.scale_rows(&self.g), pool)
     }
 
     pub fn rank(&self) -> usize {
@@ -71,6 +80,11 @@ impl CompressedLinear {
 
     pub fn reconstruct(&self) -> Mat {
         self.factors.reconstruct()
+    }
+
+    /// Pool-parallel [`reconstruct`](Self::reconstruct) (bit-identical).
+    pub fn reconstruct_on(&self, pool: &Pool) -> Mat {
+        self.factors.reconstruct_on(pool)
     }
 
     /// λ of every latent row of Ũ — the Fig. 3 diagnostic.
@@ -115,9 +129,15 @@ impl ResidualCompressed {
     }
 
     pub fn reconstruct(&self) -> Mat {
-        let mut acc = self.paths[0].reconstruct();
+        self.reconstruct_on(Pool::serial())
+    }
+
+    /// Pool-parallel [`reconstruct`](Self::reconstruct) (bit-identical) —
+    /// what the job scheduler uses to score per-layer MSE.
+    pub fn reconstruct_on(&self, pool: &Pool) -> Mat {
+        let mut acc = self.paths[0].reconstruct_on(pool);
         for p in &self.paths[1..] {
-            acc = acc.add(&p.reconstruct());
+            acc = acc.add(&p.reconstruct_on(pool));
         }
         acc
     }

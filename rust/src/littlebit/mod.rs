@@ -12,19 +12,29 @@
 //! * [`svid`] — Dual-SVID scale extraction (Alg. 2 / App. C).
 //! * [`layer`] — the tri-scale layer (Eq. 1), residual 2-path composition
 //!   (App. G), reconstruction and λ diagnostics.
+//! * [`pipeline`] — the staged driver: per-stage wall-clock
+//!   ([`CompressionReport`]) and the packed deployment view in one call
+//!   ([`compress_pipeline`]); this is what the L3 coordinator schedules.
 //! * [`compress`] — one-call compression of a weight matrix at a bpp budget
-//!   with any [`InitStrategy`]; this is what the L3 coordinator schedules.
+//!   with any [`InitStrategy`] (the pipeline minus the instrumentation).
+//!
+//! Every stage runs its heavy linalg on a [`crate::parallel::Pool`]
+//! (`compress` defaults to the process-wide pool; `compress_on` pins one)
+//! and is bit-exact for any thread count, so compression results never
+//! depend on parallelism.
 
 mod itq;
 mod layer;
+mod pipeline;
 mod svid;
 
-pub use itq::{joint_itq, random_rotation, ItqReport};
+pub use itq::{joint_itq, joint_itq_on, random_rotation, ItqReport};
 pub use layer::{CompressedLinear, ResidualCompressed, TriScaleFactors};
-pub use svid::{dual_svid, rank_one_decompose};
+pub use pipeline::{compress_pipeline, CompressedLayer, CompressionReport};
+pub use svid::{dual_svid, dual_svid_on, rank_one_decompose, rank_one_decompose_on};
 
-use crate::linalg::{svd_randomized, Mat};
-use crate::memory;
+use crate::linalg::Mat;
+use crate::parallel::Pool;
 use crate::rng::Pcg64;
 
 /// Initialization strategy — the paper's ablation axis (Table 3).
@@ -77,50 +87,51 @@ impl Default for CompressionConfig {
 /// Compress `w` under `cfg`, returning the residual composition. The rank
 /// per path follows App. H: the residual architecture stores two paths, so
 /// each path gets the Eq. 26 rank at the given budget.
+///
+/// Runs the staged pipeline on the process-wide [`Pool::global`]; use
+/// [`compress_on`] to pin a pool or [`compress_pipeline`] for the
+/// per-stage wall-clock and the packed deployment view.
 pub fn compress(w: &Mat, cfg: &CompressionConfig, rng: &mut Pcg64) -> ResidualCompressed {
-    let (d_out, d_in) = w.shape();
-    if cfg.residual {
-        let r = memory::littlebit_rank_for_budget(d_in, d_out, cfg.bpp);
-        let primary = compress_single(w, r, cfg, rng);
-        let err = w.sub(&primary.reconstruct());
-        let residual = compress_single(&err, r, cfg, rng);
-        ResidualCompressed::new(vec![primary, residual])
-    } else {
-        let r = memory::littlebit_single_rank_for_budget(d_in, d_out, cfg.bpp);
-        ResidualCompressed::new(vec![compress_single(w, r, cfg, rng)])
-    }
+    compress_on(w, cfg, rng, Pool::global())
+}
+
+/// [`compress`] on an explicit [`Pool`]. Bit-identical results for any
+/// pool.
+pub fn compress_on(
+    w: &Mat,
+    cfg: &CompressionConfig,
+    rng: &mut Pcg64,
+    pool: &Pool,
+) -> ResidualCompressed {
+    pipeline::compress_residual(w, cfg, rng, pool, &mut CompressionReport::default())
 }
 
 /// One path: SVD → (strategy rotation) → Dual-SVID → tri-scale layer.
+/// Runs on [`Pool::global`]; [`compress_single_on`] pins a pool.
 pub fn compress_single(
     w: &Mat,
     rank: usize,
     cfg: &CompressionConfig,
     rng: &mut Pcg64,
 ) -> CompressedLinear {
-    let rank = rank.max(1).min(w.rows().min(w.cols()));
-    let svd = svd_randomized(w, rank, cfg.oversample.min(rank + 8), cfg.power_iters, rng);
-    let (u_hat, v_hat) = svd.split_factors();
+    compress_single_on(w, rank, cfg, rng, Pool::global())
+}
 
-    let (u_rot, v_rot) = match cfg.strategy {
-        InitStrategy::Standard => (u_hat, v_hat),
-        InitStrategy::RandomRotation => {
-            let r = random_rotation(rank, rng);
-            (u_hat.matmul(&r), v_hat.matmul(&r))
-        }
-        InitStrategy::JointItq { iters } => {
-            let (r, _report) = joint_itq(&u_hat, &v_hat, iters, rng);
-            (u_hat.matmul(&r), v_hat.matmul(&r))
-        }
-    };
-
-    let factors = dual_svid(&u_rot, &v_rot);
-    CompressedLinear::from_factors(factors)
+/// [`compress_single`] on an explicit [`Pool`].
+pub fn compress_single_on(
+    w: &Mat,
+    rank: usize,
+    cfg: &CompressionConfig,
+    rng: &mut Pcg64,
+    pool: &Pool,
+) -> CompressedLinear {
+    pipeline::compress_single_staged(w, rank, cfg, rng, pool, &mut CompressionReport::default())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::svd_randomized;
     use crate::quant::local_distortion;
     use crate::spectral::{synth_weight, SynthSpec};
 

@@ -1,0 +1,257 @@
+//! The staged compression pipeline: SVD → rotation (Joint-ITQ) →
+//! Dual-SVID → pack, instrumented per stage and threaded over a
+//! [`Pool`].
+//!
+//! `littlebit::compress` used to be an opaque call; quantizing a
+//! Llama-scale stack spends minutes inside it, so the coordinator needs
+//! to know *where* (is ITQ the bottleneck, or the truncated SVD?) and the
+//! scheduler needs the packed deployment form without re-walking the
+//! factors. [`compress_pipeline`] returns all three: the FP-diagnostics
+//! view ([`ResidualCompressed`]), the serving/artifact view
+//! ([`PackedResidual`]), and the per-stage wall-clock
+//! ([`CompressionReport`]). Stage times are *accumulated across residual
+//! paths* (the App. G architecture runs every stage twice), so the report
+//! answers "where did this layer's seconds go" directly.
+//!
+//! Determinism: the pipeline consumes the caller's RNG exactly like the
+//! original `compress` (same draws, same order) and every pooled kernel is
+//! bit-exact against its serial form, so results are bit-identical across
+//! pool sizes — only the report's timings change.
+
+use super::layer::{CompressedLinear, ResidualCompressed};
+use super::{dual_svid_on, joint_itq_on, random_rotation, CompressionConfig, InitStrategy};
+use crate::linalg::{svd_randomized_on, Mat};
+use crate::memory;
+use crate::packing::PackedResidual;
+use crate::parallel::Pool;
+use crate::rng::Pcg64;
+use std::time::Instant;
+
+/// Per-stage wall-clock of one layer's compression, in milliseconds.
+/// `svd/itq/svid` accumulate across residual paths; `pack` is the final
+/// bit-plane packing; `total` covers the whole pipeline (including the
+/// residual-error reconstruction between paths, which is why it exceeds
+/// the stage sum).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CompressionReport {
+    /// Truncated randomized SVD (range finding + power iterations + Jacobi).
+    pub svd_ms: f64,
+    /// Rotation stage: Joint-ITQ iterations (or the random rotation; ~0 for
+    /// the Standard strategy).
+    pub itq_ms: f64,
+    /// Dual-SVID scale extraction (two rank-1 magnitude decompositions).
+    pub svid_ms: f64,
+    /// Bit-plane packing into the deployment layout.
+    pub pack_ms: f64,
+    /// End-to-end wall-clock for the layer.
+    pub total_ms: f64,
+}
+
+impl CompressionReport {
+    /// Field-wise accumulation — used to aggregate a whole model's stage
+    /// profile across layers.
+    pub fn accumulate(&mut self, other: &CompressionReport) {
+        self.svd_ms += other.svd_ms;
+        self.itq_ms += other.itq_ms;
+        self.svid_ms += other.svid_ms;
+        self.pack_ms += other.pack_ms;
+        self.total_ms += other.total_ms;
+    }
+
+    /// Sum of the four named stages (`total_ms` minus residual
+    /// reconstruction and bookkeeping).
+    pub fn stage_ms(&self) -> f64 {
+        self.svd_ms + self.itq_ms + self.svid_ms + self.pack_ms
+    }
+}
+
+/// Everything one layer's compression produces: the full-precision
+/// diagnostics view, the packed deployment view (what `.lb2` artifacts
+/// persist), and the stage profile.
+pub struct CompressedLayer {
+    pub compressed: ResidualCompressed,
+    pub packed: PackedResidual,
+    pub report: CompressionReport,
+}
+
+/// Compress one weight matrix through the full staged pipeline on `pool`.
+///
+/// Equivalent to `compress(w, cfg, rng)` followed by `.pack()`, with the
+/// per-stage wall-clock recorded — and bit-identical to it, for any pool.
+///
+/// # Examples
+///
+/// ```
+/// use littlebit2::littlebit::{compress_pipeline, CompressionConfig};
+/// use littlebit2::parallel::Pool;
+/// use littlebit2::rng::Pcg64;
+/// use littlebit2::spectral::{synth_weight, SynthSpec};
+///
+/// let mut rng = Pcg64::seed(0);
+/// let spec = SynthSpec { rows: 64, cols: 64, ..Default::default() };
+/// let w = synth_weight(&spec, &mut rng);
+/// let cfg = CompressionConfig { bpp: 1.0, ..Default::default() };
+/// let layer = compress_pipeline(&w, &cfg, &mut Pcg64::seed(7), Pool::serial());
+/// assert_eq!(layer.packed.d_in(), 64);
+/// assert!(layer.report.total_ms >= layer.report.stage_ms() - 1e-6);
+/// ```
+pub fn compress_pipeline(
+    w: &Mat,
+    cfg: &CompressionConfig,
+    rng: &mut Pcg64,
+    pool: &Pool,
+) -> CompressedLayer {
+    let t0 = Instant::now();
+    let mut report = CompressionReport::default();
+    let compressed = compress_residual(w, cfg, rng, pool, &mut report);
+    let tp = Instant::now();
+    let packed = compressed.pack();
+    report.pack_ms = ms_since(tp);
+    report.total_ms = ms_since(t0);
+    CompressedLayer { compressed, packed, report }
+}
+
+/// The residual-composition driver (App. G): path 1 compresses `w`, path 2
+/// compresses path 1's reconstruction error. Stage times accumulate into
+/// `report`.
+pub(super) fn compress_residual(
+    w: &Mat,
+    cfg: &CompressionConfig,
+    rng: &mut Pcg64,
+    pool: &Pool,
+    report: &mut CompressionReport,
+) -> ResidualCompressed {
+    let (d_out, d_in) = w.shape();
+    if cfg.residual {
+        let r = memory::littlebit_rank_for_budget(d_in, d_out, cfg.bpp);
+        let primary = compress_single_staged(w, r, cfg, rng, pool, report);
+        let err = w.sub(&primary.reconstruct_on(pool));
+        let residual = compress_single_staged(&err, r, cfg, rng, pool, report);
+        ResidualCompressed::new(vec![primary, residual])
+    } else {
+        let r = memory::littlebit_single_rank_for_budget(d_in, d_out, cfg.bpp);
+        ResidualCompressed::new(vec![compress_single_staged(w, r, cfg, rng, pool, report)])
+    }
+}
+
+/// One path through the stage graph:
+/// SVD → (strategy rotation) → Dual-SVID → tri-scale layer.
+pub(super) fn compress_single_staged(
+    w: &Mat,
+    rank: usize,
+    cfg: &CompressionConfig,
+    rng: &mut Pcg64,
+    pool: &Pool,
+    report: &mut CompressionReport,
+) -> CompressedLinear {
+    let rank = rank.max(1).min(w.rows().min(w.cols()));
+    let t = Instant::now();
+    let svd = svd_randomized_on(w, rank, cfg.oversample.min(rank + 8), cfg.power_iters, rng, pool);
+    let (u_hat, v_hat) = svd.split_factors();
+    report.svd_ms += ms_since(t);
+
+    let t = Instant::now();
+    let (u_rot, v_rot) = match cfg.strategy {
+        InitStrategy::Standard => (u_hat, v_hat),
+        InitStrategy::RandomRotation => {
+            let r = random_rotation(rank, rng);
+            (u_hat.matmul_on(&r, pool), v_hat.matmul_on(&r, pool))
+        }
+        InitStrategy::JointItq { iters } => {
+            let (r, _report) = joint_itq_on(&u_hat, &v_hat, iters, rng, pool);
+            (u_hat.matmul_on(&r, pool), v_hat.matmul_on(&r, pool))
+        }
+    };
+    report.itq_ms += ms_since(t);
+
+    let t = Instant::now();
+    let factors = dual_svid_on(&u_rot, &v_rot, pool);
+    report.svid_ms += ms_since(t);
+    CompressedLinear::from_factors(factors)
+}
+
+#[inline]
+fn ms_since(t: Instant) -> f64 {
+    t.elapsed().as_secs_f64() * 1e3
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::compress;
+    use super::*;
+    use crate::spectral::{synth_weight, SynthSpec};
+
+    fn weight(seed: u64) -> Mat {
+        let mut rng = Pcg64::seed(seed);
+        let spec = SynthSpec { rows: 96, cols: 96, gamma: 0.3, coherence: 0.7, scale: 1.0 };
+        synth_weight(&spec, &mut rng)
+    }
+
+    /// The staged pipeline must be bit-identical to plain `compress` +
+    /// `.pack()` — same RNG draws, same kernels — on any pool.
+    #[test]
+    fn pipeline_matches_compress_bit_exactly() {
+        let w = weight(31);
+        let cfg = CompressionConfig { bpp: 1.0, ..Default::default() };
+        let plain = compress(&w, &cfg, &mut Pcg64::seed(5));
+        for pool in [Pool::serial(), Pool::global()] {
+            let staged = compress_pipeline(&w, &cfg, &mut Pcg64::seed(5), pool);
+            assert_eq!(plain.reconstruct(), staged.compressed.reconstruct());
+            // Packed view serves identical numbers.
+            let mut rng = Pcg64::seed(9);
+            let mut x = vec![0.0f32; w.cols()];
+            rng.fill_normal(&mut x);
+            let a = plain.pack().forward(&x);
+            let b = staged.packed.forward(&x);
+            for (p, q) in a.iter().zip(&b) {
+                assert_eq!(p.to_bits(), q.to_bits());
+            }
+        }
+    }
+
+    /// Stage accounting: all stages ran (residual ⇒ twice), times are
+    /// finite and total covers the stage sum.
+    #[test]
+    fn report_accounts_for_all_stages() {
+        let w = weight(32);
+        let cfg = CompressionConfig { bpp: 0.8, ..Default::default() };
+        let layer = compress_pipeline(&w, &cfg, &mut Pcg64::seed(6), Pool::serial());
+        let r = &layer.report;
+        for v in [r.svd_ms, r.itq_ms, r.svid_ms, r.pack_ms, r.total_ms] {
+            assert!(v.is_finite() && v >= 0.0, "{r:?}");
+        }
+        assert!(r.svd_ms > 0.0, "{r:?}");
+        assert!(r.total_ms + 1e-9 >= r.stage_ms(), "{r:?}");
+        // Accumulation is field-wise.
+        let mut acc = CompressionReport::default();
+        acc.accumulate(r);
+        acc.accumulate(r);
+        assert!((acc.svd_ms - 2.0 * r.svd_ms).abs() < 1e-12);
+        assert!((acc.total_ms - 2.0 * r.total_ms).abs() < 1e-12);
+    }
+
+    /// The Standard strategy has no rotation stage: its itq_ms must be
+    /// (near) zero while ITQ's is not.
+    #[test]
+    fn itq_stage_reflects_strategy() {
+        let w = weight(33);
+        let std_cfg = CompressionConfig {
+            bpp: 1.0,
+            strategy: InitStrategy::Standard,
+            ..Default::default()
+        };
+        let itq_cfg = CompressionConfig {
+            bpp: 1.0,
+            strategy: InitStrategy::JointItq { iters: 30 },
+            ..Default::default()
+        };
+        let std_l = compress_pipeline(&w, &std_cfg, &mut Pcg64::seed(7), Pool::serial());
+        let itq_l = compress_pipeline(&w, &itq_cfg, &mut Pcg64::seed(7), Pool::serial());
+        assert!(
+            itq_l.report.itq_ms > std_l.report.itq_ms,
+            "itq {:?} vs std {:?}",
+            itq_l.report,
+            std_l.report
+        );
+    }
+}

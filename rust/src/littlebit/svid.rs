@@ -2,15 +2,23 @@
 //! (Algorithm 2 / Appendix C, and Listing 1–2 of Appendix J).
 
 use super::TriScaleFactors;
-use crate::linalg::{svd_randomized, Mat};
+use crate::linalg::{svd_randomized_on, Mat};
+use crate::parallel::Pool;
 use crate::rng::Pcg64;
 
 /// Rank-1 approximation of a non-negative magnitude matrix `X ≈ u·vᵀ`
 /// (Listing 1). Uses the power method, appropriate because the dominant
 /// singular triplet of a non-negative matrix is non-negative
-/// (Perron–Frobenius); signs are fixed positive on output.
+/// (Perron–Frobenius); signs are fixed positive on output. Runs on the
+/// process-wide [`Pool::global`]; [`rank_one_decompose_on`] pins a pool.
 pub fn rank_one_decompose(x: &Mat, rng: &mut Pcg64) -> (Vec<f32>, Vec<f32>) {
-    let svd = svd_randomized(x, 1, 6, 3, rng);
+    rank_one_decompose_on(x, rng, Pool::global())
+}
+
+/// [`rank_one_decompose`] on an explicit [`Pool`] (bit-identical for any
+/// pool).
+pub fn rank_one_decompose_on(x: &Mat, rng: &mut Pcg64, pool: &Pool) -> (Vec<f32>, Vec<f32>) {
+    let svd = svd_randomized_on(x, 1, 6, 3, rng, pool);
     let s0 = svd.s[0].max(0.0);
     let sqrt_s0 = s0.sqrt();
     let mut u: Vec<f32> = svd.u.col(0).iter().map(|&a| a * sqrt_s0).collect();
@@ -38,14 +46,23 @@ pub fn rank_one_decompose(x: &Mat, rng: &mut Pcg64) -> (Vec<f32>, Vec<f32>) {
 /// * binary factors `U_b = sign(Ũ)`, `V_b = sign(Ṽ)`,
 /// * scales from rank-1 decompositions `|Ũ| ≈ h·ℓ_uᵀ`, `|Ṽ| ≈ g·ℓ_vᵀ`,
 /// * central scale `l = ℓ_u ⊙ ℓ_v`.
+///
+/// Runs on the process-wide [`Pool::global`]; [`dual_svid_on`] pins a
+/// pool. Either way the factors are bit-identical — SVID stays a pure
+/// function of its inputs.
 pub fn dual_svid(u_tilde: &Mat, v_tilde: &Mat) -> TriScaleFactors {
+    dual_svid_on(u_tilde, v_tilde, Pool::global())
+}
+
+/// [`dual_svid`] on an explicit [`Pool`].
+pub fn dual_svid_on(u_tilde: &Mat, v_tilde: &Mat, pool: &Pool) -> TriScaleFactors {
     assert_eq!(u_tilde.cols(), v_tilde.cols());
     // Deterministic internal stream: SVID must be a pure function of its
     // inputs so compression results are reproducible independent of caller
     // RNG state.
     let mut rng = Pcg64::seed(0x5f1d);
-    let (h, l_u) = rank_one_decompose(&u_tilde.abs(), &mut rng);
-    let (g, l_v) = rank_one_decompose(&v_tilde.abs(), &mut rng);
+    let (h, l_u) = rank_one_decompose_on(&u_tilde.abs(), &mut rng, pool);
+    let (g, l_v) = rank_one_decompose_on(&v_tilde.abs(), &mut rng, pool);
     let l: Vec<f32> = l_u.iter().zip(&l_v).map(|(a, b)| a * b).collect();
     TriScaleFactors {
         u_b: u_tilde.signum(),

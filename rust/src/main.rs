@@ -8,7 +8,9 @@
 //! littlebit2 gamma-dist [--model NAME]           Fig 6 bottom / Fig 11/12
 //! littlebit2 spectral-gain                       Fig 9 energy curves
 //! littlebit2 compress [--size N] [--gamma G] [--bpp B] [--strategy S]
-//!                     [--layers L] [--out model.lb2]   quantize once → artifact
+//!                     [--layers L] [--jobs N] [--out model.lb2]
+//!                                                      quantize once → artifact
+//!                                                      (byte-identical for any --jobs)
 //! littlebit2 serve --model model.lb2 [--workers N] [--batch B]
 //!                  [--threads T] [--requests R]        serve from an artifact
 //! littlebit2 train [--artifacts DIR] [--teacher-steps N] [--student-steps N]
@@ -17,14 +19,18 @@
 //! ```
 
 use anyhow::{bail, Context, Result};
+use littlebit2::artifact::StackStreamWriter;
 #[cfg(feature = "xla")]
 use littlebit2::coordinator::{QatDriver, StudentVariant};
-use littlebit2::coordinator::{InferenceServer, PackedStackBackend, ServerConfig};
-use littlebit2::littlebit::{compress, CompressionConfig, InitStrategy};
+use littlebit2::coordinator::{
+    run_compression_jobs_streaming, CompressionJob, InferenceServer, JobInput, PackedStackBackend,
+    ServerConfig,
+};
+use littlebit2::littlebit::{compress, CompressionConfig, CompressionReport, InitStrategy};
 use littlebit2::memory::{model_memory, MethodKind};
 use littlebit2::model::{zoo, ArchSpec, PackedStack};
 use littlebit2::quant::tiny_rank_fp16;
-use littlebit2::rng::Pcg64;
+use littlebit2::rng::{derive_seed, Pcg64};
 use littlebit2::spectral::{
     estimate_gamma, quant_cost, synth_weight, tail_energy, SynthSpec,
 };
@@ -265,16 +271,21 @@ fn cmd_spectral_gain(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Compress a synthetic model (a chain of `--layers` square weights) and
-/// report the λ/MSE diagnostics; with `--out model.lb2` the packed stack is
-/// persisted as a versioned artifact — the quantize-once half of the
-/// quantize-once/serve-from-many pipeline (`serve` is the other half).
+/// Compress a synthetic model (a chain of `--layers` square weights) on
+/// `--jobs N` parallel claim-loops, streaming each finished layer straight
+/// into the `.lb2` artifact (`--out model.lb2`) — the quantize-once half
+/// of the quantize-once/serve-from-many pipeline (`serve` is the other
+/// half). Layer k's weight and compression each run on independent
+/// derived RNG streams, so the artifact bytes are identical for any
+/// `--jobs` value (and layer k never depends on how many layers precede
+/// it). Per-stage wall-clock (svd/itq/svid/pack) is reported at the end.
 fn cmd_compress(args: &Args) -> Result<()> {
-    args.known(&["size", "layers", "gamma", "bpp", "strategy", "out"])?;
+    args.known(&["size", "layers", "gamma", "bpp", "strategy", "out", "jobs"])?;
     let size = args.get_usize("size", 512)?;
     let layers = args.get_usize("layers", 1)?;
     let gamma = args.get_f64("gamma", 0.27)?;
     let bpp = args.get_f64("bpp", 0.55)?;
+    let jobs_n = args.get_usize("jobs", 1)?;
     let strategy = match args.get("strategy", "itq").as_str() {
         "standard" => InitStrategy::Standard,
         "rotation" => InitStrategy::RandomRotation,
@@ -284,52 +295,86 @@ fn cmd_compress(args: &Args) -> Result<()> {
     if layers == 0 {
         bail!("--layers must be at least 1");
     }
-    let mut rng = Pcg64::seed(42);
+    if jobs_n == 0 {
+        bail!("--jobs must be at least 1");
+    }
     let cfg = CompressionConfig { bpp, strategy, residual: true, ..Default::default() };
     let spec = SynthSpec { rows: size, cols: size, gamma, coherence: 0.7, scale: 1.0 };
 
+    // Per-layer derived streams: stream 2k fabricates layer k's weight,
+    // stream 2k+1 drives its compression. (The old CLI advanced one shared
+    // generator across the layer loop, so a layer's factors depended on
+    // how many layers preceded it — and could never parallelize.)
+    const BASE_SEED: u64 = 42;
+    let jobs: Vec<CompressionJob> = (0..layers)
+        .map(|k| CompressionJob {
+            name: format!("layer{k}"),
+            input: JobInput::Synth {
+                spec: spec.clone(),
+                seed: derive_seed(BASE_SEED, 2 * k as u64),
+            },
+            cfg: cfg.clone(),
+            seed: derive_seed(BASE_SEED, 2 * k as u64 + 1),
+        })
+        .collect();
+    let shapes: Vec<(usize, usize, usize)> = jobs
+        .iter()
+        .map(|j| {
+            let (d_out, d_in) = j.shape();
+            (d_in, d_out, j.n_paths())
+        })
+        .collect();
+    let mut writer = match args.flags.get("out") {
+        Some(out) => Some(StackStreamWriter::create(out, &shapes)?),
+        None => None,
+    };
+
     let t0 = std::time::Instant::now();
-    let mut packed = Vec::with_capacity(layers);
-    for k in 0..layers {
-        let w = synth_weight(&spec, &mut rng);
-        let c = compress(&w, &cfg, &mut rng);
-        if k == 0 {
-            let lams = c.paths[0].u_distortions();
-            let mean_lam: f64 = lams.iter().sum::<f64>() / lams.len() as f64;
-            let max_lam = lams.iter().fold(0.0f64, |m, &x| m.max(x));
+    let mut stages = CompressionReport::default();
+    let mut packed_bytes = 0usize;
+    run_compression_jobs_streaming(jobs, jobs_n, |idx, outcome| {
+        if idx == 0 {
             println!(
                 "size={size} γ={gamma} bpp={bpp} strategy={} rank={} | MSE={:.4e} bpp_actual={:.3} λ_mean={:.3} λ_max={:.3}",
                 strategy.label(),
-                c.paths[0].factors.rank(),
-                c.reconstruct().mse(&w),
-                c.bpp(),
-                mean_lam,
-                max_lam,
+                outcome.result.rank,
+                outcome.result.mse,
+                outcome.result.bpp,
+                outcome.result.lambda_mean,
+                outcome.result.lambda_max,
             );
         }
-        packed.push(c.pack());
-    }
-    let stack = PackedStack::new(packed);
+        stages.accumulate(&outcome.result.report);
+        packed_bytes += outcome.packed.storage_bytes();
+        if let Some(w) = writer.as_mut() {
+            w.append_layer(&outcome.packed)?;
+        }
+        Ok(())
+    })?;
+    let wall = t0.elapsed().as_secs_f64();
     println!(
-        "compressed {} layer(s) of {size}x{size} in {:.2}s | packed weights {} bytes",
-        stack.depth(),
-        t0.elapsed().as_secs_f64(),
-        stack.storage_bytes()
+        "compressed {layers} layer(s) of {size}x{size} on {jobs_n} job(s) in {wall:.2}s ({:.2} layers/s) | packed weights {packed_bytes} bytes",
+        layers as f64 / wall.max(1e-9),
+    );
+    println!(
+        "stage wall-clock (summed over layers): svd {:.0} ms | itq {:.0} ms | svid {:.0} ms | pack {:.0} ms",
+        stages.svd_ms, stages.itq_ms, stages.svid_ms, stages.pack_ms,
     );
 
-    if let Some(out) = args.flags.get("out") {
-        stack.save(out)?;
+    if let Some(w) = writer {
+        w.finish()?;
+        let out = args.flags.get("out").expect("writer implies --out");
         let file_bytes = std::fs::metadata(out)
             .with_context(|| format!("stat {out}"))?
             .len();
         let params = (layers * size * size) as f64;
-        // The delta over storage_bytes is mostly f32-on-disk scales vs
+        // The delta over packed_bytes is mostly f32-on-disk scales vs
         // their logical f16 accounting, plus O(sections) framing — see
         // EXPERIMENTS.md §Artifact.
         println!(
             "wrote {out}: {file_bytes} bytes ({:.3} bits/param on disk; framing + f32-scale slack {} bytes)",
             file_bytes as f64 * 8.0 / params,
-            file_bytes as i64 - stack.storage_bytes() as i64,
+            file_bytes as i64 - packed_bytes as i64,
         );
     }
     Ok(())

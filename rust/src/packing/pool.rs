@@ -1,144 +1,56 @@
-//! `SignPool` — the persistent worker pool behind every row-parallel sign
-//! kernel.
+//! `SignPool` — the sign-kernel client of the shared worker pool.
 //!
-//! PR 1's `*_mt` kernels spawned fresh OS threads on **every call**
-//! (`std::thread::scope`), which at serving batch sizes costs more than the
-//! sign-GEMM itself for small row ranges. The pool spawns its threads once;
-//! each call partitions the output rows into deterministic contiguous
-//! ranges, ships all but the first range to the workers as jobs over an
-//! MPSC channel, computes the first range on the calling thread, and blocks
-//! on per-job acknowledgements. Dispatch cost is a few channel sends
-//! instead of thread creations.
+//! PR 2 built the persistent pool (workers, acks, panic propagation)
+//! privately in this module; PR 4 promoted that machinery to
+//! [`crate::parallel::Pool`] so the offline compression pipeline can share
+//! the same resident threads. `SignPool` is now a thin client: it keeps
+//! the sign-GEMM/GEMV-specific contract (input scale applied **once per
+//! call** into a reused thread-local block before rows are partitioned,
+//! output scale folded into each row's lane reduction) and delegates the
+//! partitioned execution to [`Pool::run_row_chunks`].
 //!
 //! **Determinism / bit-exactness.** A job is a row range of the exact
-//! serial kernel ([`gemm_sign_out_rows`] and its GEMV twin; any input
-//! scale is applied once per call *before* partitioning, so jobs share the
-//! identical scaled activations). Row partitioning never changes any
-//! per-element reduction order, and ranges are disjoint, so the assembled
-//! output is bit-identical to the serial kernel **regardless of thread
-//! count, pool size, or which worker runs which range** — asserted across
-//! thread counts {1, 2, 7, 64} by the tests below.
-//!
-//! **Safety model.** Jobs carry raw pointers into the caller's operands
-//! (weights, activations, disjoint output sub-slices). The dispatching call
-//! does not release the operands' borrows until every job has
-//! acknowledged: on the happy path it blocks on one ack per job, and on an
-//! unwind (a panic in the caller's inline range, or a propagated worker
-//! panic) the [`AckGuard`] drop blocks until all outstanding jobs finish
-//! before the unwind continues — so job pointers never dangle. If a worker
-//! panics mid-job (impossible for valid shapes — the public entries
-//! validate first), the job's ack sender is dropped unsent; the caller
-//! then observes a disconnected ack channel after all other jobs drained
-//! and panics itself rather than returning a partially-written output.
-//!
-//! Workers block on the shared job channel when idle — zero CPU between
-//! calls — and exit when the pool is dropped. Concurrent dispatch from
-//! multiple threads (e.g. several server workers sharing
-//! [`SignPool::global`]) is supported: jobs interleave in the queue and
-//! each caller waits only on its own acks.
+//! serial kernel ([`gemm_sign_out_rows`] and its GEMV twin); row
+//! partitioning never changes any per-element reduction order, and ranges
+//! are disjoint, so the assembled output is bit-identical to the serial
+//! kernel **regardless of thread count, pool size, or which worker runs
+//! which range** — asserted across thread counts {1, 2, 7, 64} by the
+//! tests below. The safety story (jobs never outlive the caller's
+//! borrows, worker panics propagate, unwinds block on outstanding jobs)
+//! lives with the pool — see `parallel`'s module docs.
 
 use super::gemm::{gemm_sign_out_rows, with_scaled_block};
 use super::gemv::{gemv_sign_out_rows, with_scaled_vec};
 use super::BitMatrix;
 use crate::linalg::Mat;
-use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex, OnceLock};
-use std::thread::JoinHandle;
+use crate::parallel::Pool;
+use std::sync::OnceLock;
 
-/// `*const T` that may cross threads. Safety: the pointee is `Sync`, lives
-/// on the dispatching caller's stack, and the caller blocks until every job
-/// acknowledges — see the module-level safety model.
-struct SendConst<T: ?Sized>(*const T);
-unsafe impl<T: ?Sized + Sync> Send for SendConst<T> {}
-
-/// `*mut T` that may cross threads. Safety: each job's pointer targets a
-/// disjoint output sub-slice (no aliasing) under the same lifetime
-/// guarantee as [`SendConst`].
-struct SendMutPtr<T: ?Sized>(*mut T);
-unsafe impl<T: ?Sized + Send> Send for SendMutPtr<T> {}
-
-/// One row-range kernel execution. Jobs always see **post-input-scale**
-/// activations: the dispatching caller applies `in_scale` once per call
-/// (into a reused thread-local block shared read-only by every job), so
-/// scale work never multiplies with the partition count.
-enum Task {
-    Gemm {
-        s: SendConst<BitMatrix>,
-        x: SendConst<Mat>,
-        out_scale: Option<SendConst<[f32]>>,
-        ys: SendMutPtr<[f32]>,
-        row0: usize,
-    },
-    Gemv {
-        s: SendConst<BitMatrix>,
-        x: SendConst<[f32]>,
-        out_scale: Option<SendConst<[f32]>>,
-        ys: SendMutPtr<[f32]>,
-        row0: usize,
-    },
+/// Owned or process-shared backing pool — lets `SignPool::global()` reuse
+/// [`Pool::global`]'s workers instead of spawning a second resident set.
+enum PoolRef {
+    Owned(Pool),
+    Shared(&'static Pool),
 }
 
-struct Job {
-    task: Task,
-    /// Dropped unsent on panic — the caller turns that into its own panic.
-    ack: Sender<()>,
-}
-
-/// Execute one task: the shared row-range loop with the output scale (if
-/// any) folded into the lane reduction.
-///
-/// # Safety
-/// Every pointer in `task` must be live and (for `ys`) unaliased for the
-/// duration of the call — guaranteed by the dispatch protocol (the caller
-/// blocks on acks before its borrows end).
-unsafe fn run_task(task: &Task) {
-    match task {
-        Task::Gemm { s, x, out_scale, ys, row0 } => {
-            let s = unsafe { &*s.0 };
-            let x = unsafe { &*x.0 };
-            let ys = unsafe { &mut *ys.0 };
-            let outs = out_scale.as_ref().map(|p| unsafe { &*p.0 });
-            gemm_sign_out_rows(s, x, outs, ys, *row0);
-        }
-        Task::Gemv { s, x, out_scale, ys, row0 } => {
-            let s = unsafe { &*s.0 };
-            let x = unsafe { &*x.0 };
-            let ys = unsafe { &mut *ys.0 };
-            let outs = out_scale.as_ref().map(|p| unsafe { &*p.0 });
-            gemv_sign_out_rows(s, x, outs, ys, *row0);
+impl PoolRef {
+    #[inline]
+    fn get(&self) -> &Pool {
+        match self {
+            PoolRef::Owned(p) => p,
+            PoolRef::Shared(p) => *p,
         }
     }
 }
 
-fn worker_loop(rx: &Mutex<Receiver<Job>>) {
-    loop {
-        // Hold the lock only to pop one job so co-workers drain in parallel.
-        let job = {
-            let rx = rx.lock().expect("sign-pool rx lock");
-            match rx.recv() {
-                Ok(j) => j,
-                Err(_) => return, // pool dropped: shut down
-            }
-        };
-        // catch_unwind keeps the worker alive if a kernel panics; the ack
-        // is only sent on success, so the caller never mistakes a
-        // partially-written range for a completed one.
-        let ok = catch_unwind(AssertUnwindSafe(|| unsafe { run_task(&job.task) })).is_ok();
-        if ok {
-            let _ = job.ack.send(());
-        }
-    }
-}
-
-/// Persistent worker pool for the row-parallel sign kernels.
+/// Row-parallel dispatcher for the sign kernels, backed by a persistent
+/// [`Pool`].
 ///
-/// `SignPool::new(threads)` targets `threads` total parallelism: it spawns
-/// `threads − 1` long-lived workers and the dispatching caller always
-/// executes the first row range itself (so a 1-thread pool is purely
-/// serial and spawns nothing). [`SignPool::global`] is the process-wide
-/// instance sized to `available_parallelism`, shared by `gemm_sign_mt`,
-/// `gemv_sign_mt`, and every batched `forward_batch_mt`/`_into` path.
+/// `SignPool::new(threads)` owns a private pool targeting `threads` total
+/// parallelism (the dispatching caller always executes the first row range
+/// itself, so a 1-thread pool is purely serial and spawns nothing).
+/// [`SignPool::global`] shares the process-wide [`Pool::global`] workers
+/// with the pooled linalg kernels and the compression scheduler.
 ///
 /// # Examples
 ///
@@ -157,46 +69,30 @@ fn worker_loop(rx: &Mutex<Receiver<Job>>) {
 /// assert_eq!(pooled, serial);
 /// ```
 pub struct SignPool {
-    tx: Mutex<Option<Sender<Job>>>,
-    workers: Vec<JoinHandle<()>>,
-    threads: usize,
+    pool: PoolRef,
 }
 
 impl SignPool {
-    /// Build a pool targeting `threads` total parallelism (clamped to ≥ 1):
-    /// `threads − 1` worker threads plus the calling thread per dispatch.
+    /// Build a client over a private pool targeting `threads` total
+    /// parallelism (clamped to ≥ 1).
     pub fn new(threads: usize) -> Self {
-        let threads = threads.max(1);
-        let (tx, rx) = channel::<Job>();
-        let rx = Arc::new(Mutex::new(rx));
-        let workers = (0..threads - 1)
-            .map(|_| {
-                let rx = Arc::clone(&rx);
-                std::thread::spawn(move || worker_loop(&rx))
-            })
-            .collect();
-        Self { tx: Mutex::new(Some(tx)), workers, threads }
+        Self { pool: PoolRef::Owned(Pool::new(threads)) }
     }
 
-    /// The process-wide pool, created on first use and sized to
-    /// `std::thread::available_parallelism`. Never torn down (workers are
-    /// idle blocked between calls and die with the process).
+    /// The process-wide instance, sharing [`Pool::global`]'s workers —
+    /// used by `gemm_sign_mt`, `gemv_sign_mt`, and every batched
+    /// `forward_batch_mt`/`_into` path.
     pub fn global() -> &'static SignPool {
         static POOL: OnceLock<SignPool> = OnceLock::new();
-        POOL.get_or_init(|| {
-            let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-            SignPool::new(n)
-        })
+        POOL.get_or_init(|| SignPool { pool: PoolRef::Shared(Pool::global()) })
     }
 
-    /// A zero-worker pool: every call runs serially on the calling thread.
-    /// Exists so serial convenience wrappers (`forward_batch`,
-    /// `*_mt(.., 1)`) never instantiate [`global`](Self::global) — and its
-    /// `available_parallelism − 1` resident worker threads — as a side
-    /// effect of a purely serial call.
+    /// A zero-worker client: every call runs serially on the calling
+    /// thread, and [`global`](Self::global)'s resident workers are never
+    /// instantiated as a side effect of a purely serial call.
     pub fn serial() -> &'static SignPool {
         static SERIAL: OnceLock<SignPool> = OnceLock::new();
-        SERIAL.get_or_init(|| SignPool::new(1))
+        SERIAL.get_or_init(|| SignPool { pool: PoolRef::Shared(Pool::serial()) })
     }
 
     /// Pool selection for a `threads` knob: the shared
@@ -212,7 +108,7 @@ impl SignPool {
 
     /// Total parallelism this pool targets (workers + dispatching caller).
     pub fn threads(&self) -> usize {
-        self.threads
+        self.pool.get().threads()
     }
 
     /// Pool-dispatched [`gemm_sign_scaled`](super::gemm_sign_scaled),
@@ -228,23 +124,22 @@ impl SignPool {
     ) {
         assert_eq!(s.rows(), y.rows(), "output rows");
         assert_eq!(x.cols(), y.cols(), "batch width");
-        self.run_gemm(s, in_scale, x, out_scale, y.as_mut_slice(), self.threads);
+        self.run_gemm(s, in_scale, x, out_scale, y.as_mut_slice(), self.threads());
     }
 
     /// Pool-dispatched [`gemm_sign`](super::gemm_sign) (no scales).
     pub fn gemm_sign(&self, s: &BitMatrix, x: &Mat, y: &mut Mat) {
         assert_eq!(s.rows(), y.rows(), "output rows");
         assert_eq!(x.cols(), y.cols(), "batch width");
-        self.run_gemm(s, None, x, None, y.as_mut_slice(), self.threads);
+        self.run_gemm(s, None, x, None, y.as_mut_slice(), self.threads());
     }
 
     /// Partition `S X` (with optional fused scales) into `parts` contiguous
-    /// row ranges and execute them across the pool: ranges 1.. go to the
-    /// workers, range 0 runs on the calling thread, then the call blocks
-    /// until every worker range acknowledges. `parts <= 1`, an empty pool,
-    /// or a single row range all run serially inline. The partition depends
-    /// only on (`rows`, `parts`) — never on pool occupancy — and row ranges
-    /// cannot change per-element reduction order, so output is bit-exact
+    /// row ranges and execute them across the pool. The input scale is
+    /// applied ONCE per call — never once per job — into the reused
+    /// thread-local block; every row range (workers and the caller's
+    /// inline range alike) then reads it like it would read `x`. The
+    /// partition depends only on (`rows`, `parts`), so output is bit-exact
     /// against the serial kernel for every `parts`.
     pub(crate) fn run_gemm(
         &self,
@@ -268,45 +163,15 @@ impl SignPool {
         if rows == 0 || b == 0 {
             return;
         }
-        // Apply the input scale ONCE per call — never once per job — into
-        // the reused thread-local block; every row range (workers and the
-        // caller's inline range alike) then reads it like it would read x.
+        let run = |xs: &Mat| {
+            self.pool.get().run_row_chunks(ys, b, parts, |row0, range| {
+                gemm_sign_out_rows(s, xs, out_scale, range, row0);
+            });
+        };
         match in_scale {
-            Some(g) => {
-                with_scaled_block(x, g, |xg| self.run_gemm_ranges(s, xg, out_scale, ys, parts))
-            }
-            None => self.run_gemm_ranges(s, x, out_scale, ys, parts),
+            Some(g) => with_scaled_block(x, g, run),
+            None => run(x),
         }
-    }
-
-    /// Partitioned execution over post-input-scale activations.
-    fn run_gemm_ranges(
-        &self,
-        s: &BitMatrix,
-        x: &Mat,
-        out_scale: Option<&[f32]>,
-        ys: &mut [f32],
-        parts: usize,
-    ) {
-        let rows = s.rows();
-        let b = x.cols();
-        let parts = parts.clamp(1, rows);
-        if parts == 1 || self.workers.is_empty() {
-            gemm_sign_out_rows(s, x, out_scale, ys, 0);
-            return;
-        }
-        let chunk = rows.div_ceil(parts);
-        let mut ranges = ys.chunks_mut(chunk * b);
-        let first = ranges.next().expect("rows > 0");
-        let acks = self.dispatch(ranges, |ys_range, ti| Task::Gemm {
-            s: SendConst(s),
-            x: SendConst(x),
-            out_scale: out_scale.map(|v| SendConst(v as *const [f32])),
-            ys: SendMutPtr(ys_range),
-            row0: (ti + 1) * chunk,
-        });
-        gemm_sign_out_rows(s, x, out_scale, first, 0);
-        acks.wait();
     }
 
     /// GEMV twin of [`run_gemm`](Self::run_gemm): `ys` is a plain vector
@@ -332,121 +197,14 @@ impl SignPool {
         if rows == 0 {
             return;
         }
-        // Same hoist as run_gemm: the input scale is applied once per
-        // call, never once per job.
+        let run = |xs: &[f32]| {
+            self.pool.get().run_row_chunks(ys, 1, parts, |row0, range| {
+                gemv_sign_out_rows(s, xs, out_scale, range, row0);
+            });
+        };
         match in_scale {
-            Some(g) => {
-                with_scaled_vec(x, g, |xs| self.run_gemv_ranges(s, xs, out_scale, ys, parts))
-            }
-            None => self.run_gemv_ranges(s, x, out_scale, ys, parts),
-        }
-    }
-
-    /// Partitioned execution over post-input-scale activations.
-    fn run_gemv_ranges(
-        &self,
-        s: &BitMatrix,
-        x: &[f32],
-        out_scale: Option<&[f32]>,
-        ys: &mut [f32],
-        parts: usize,
-    ) {
-        let rows = s.rows();
-        let parts = parts.clamp(1, rows);
-        if parts == 1 || self.workers.is_empty() {
-            gemv_sign_out_rows(s, x, out_scale, ys, 0);
-            return;
-        }
-        let chunk = rows.div_ceil(parts);
-        let mut ranges = ys.chunks_mut(chunk);
-        let first = ranges.next().expect("rows > 0");
-        let acks = self.dispatch(ranges, |ys_range, ti| Task::Gemv {
-            s: SendConst(s),
-            x: SendConst(x as *const [f32]),
-            out_scale: out_scale.map(|v| SendConst(v as *const [f32])),
-            ys: SendMutPtr(ys_range),
-            row0: (ti + 1) * chunk,
-        });
-        gemv_sign_out_rows(s, x, out_scale, first, 0);
-        acks.wait();
-    }
-
-    /// Ship one job per remaining range; returns the guard that must
-    /// collect every acknowledgement before the operands' borrows end.
-    fn dispatch<'a>(
-        &self,
-        ranges: impl Iterator<Item = &'a mut [f32]>,
-        mut make_task: impl FnMut(*mut [f32], usize) -> Task,
-    ) -> AckGuard {
-        let (ack_tx, ack_rx) = channel::<()>();
-        let mut remaining = 0usize;
-        {
-            let tx = self.tx.lock().expect("sign-pool tx lock");
-            let tx = tx.as_ref().expect("sign-pool not shut down");
-            for (ti, ys_range) in ranges.enumerate() {
-                let job = Job {
-                    task: make_task(ys_range as *mut [f32], ti),
-                    ack: ack_tx.clone(),
-                };
-                tx.send(job).expect("sign-pool workers alive");
-                remaining += 1;
-            }
-        }
-        // Drop the caller's ack sender so a worker panic (its clone dropped
-        // unsent) disconnects the channel instead of hanging the guard.
-        drop(ack_tx);
-        AckGuard { rx: ack_rx, remaining }
-    }
-}
-
-/// Ack collector for one dispatch. The raw pointers shipped to the workers
-/// are only valid while the caller's borrows live, so the guard blocks
-/// until every outstanding job is finished — on the happy path via
-/// [`wait`](AckGuard::wait), and on **any unwind** (a caller-side panic in
-/// the inline range, or a propagated worker panic) via `Drop`, which keeps
-/// the "no job outlives the call" safety contract even when the call does
-/// not return normally.
-struct AckGuard {
-    rx: Receiver<()>,
-    remaining: usize,
-}
-
-impl AckGuard {
-    /// Drain every ack; propagate worker panics instead of returning
-    /// partial output.
-    fn wait(mut self) {
-        while self.remaining > 0 {
-            self.remaining -= 1;
-            self.rx.recv().expect("sign-pool worker panicked mid-job");
-        }
-    }
-}
-
-impl Drop for AckGuard {
-    fn drop(&mut self) {
-        // A `recv` error means every remaining ack sender is gone — all
-        // outstanding jobs have completed (or were abandoned after their
-        // own unwind), so no worker can still touch the caller's buffers.
-        while self.remaining > 0 {
-            self.remaining -= 1;
-            if self.rx.recv().is_err() {
-                break;
-            }
-        }
-    }
-}
-
-impl Drop for SignPool {
-    fn drop(&mut self) {
-        // Disconnect the job channel first so idle workers' recv errors
-        // out; then join them (same shutdown shape as InferenceServer).
-        // Tolerate a poisoned lock — panicking in Drop would abort.
-        match self.tx.lock() {
-            Ok(mut tx) => drop(tx.take()),
-            Err(poisoned) => drop(poisoned.into_inner().take()),
-        }
-        for w in self.workers.drain(..) {
-            let _ = w.join();
+            Some(g) => with_scaled_vec(x, g, run),
+            None => run(x),
         }
     }
 }
@@ -578,11 +336,13 @@ mod tests {
         drop(pool); // must not deadlock
     }
 
-    /// The global pool exists and reports at least one thread.
+    /// The global pool exists, reports at least one thread, and shares the
+    /// process-wide `parallel::Pool` workers.
     #[test]
     fn global_pool_is_usable() {
         let pool = SignPool::global();
         assert!(pool.threads() >= 1);
+        assert_eq!(pool.threads(), Pool::global().threads());
         let (s, x, _, _) = random_setup(5, 30, 3, 67);
         let mut serial = Mat::zeros(5, 3);
         gemm_sign(&s, &x, &mut serial);

@@ -1,0 +1,509 @@
+//! The shared persistent worker pool behind every row-parallel kernel and
+//! the layer-parallel compression scheduler.
+//!
+//! PR 2 built this machinery privately inside `packing::pool` for the two
+//! sign kernels; this module promotes it to a general substrate so the
+//! *offline* pipeline (blocked dense matmuls, Householder QR trailing
+//! updates, randomized SVD, Joint-ITQ, Dual-SVID, per-layer compression
+//! jobs) runs on the same resident threads as serving, instead of naive
+//! single-threaded triple loops. `packing::SignPool` is now a thin client.
+//!
+//! # Execution model
+//!
+//! A [`Pool`] owns `threads − 1` long-lived workers blocked on a shared
+//! MPSC job channel (zero CPU when idle). A dispatching caller ships
+//! scoped closures as jobs, always keeps one share of the work for itself
+//! (so a 1-thread pool is purely serial and spawns nothing), and blocks on
+//! per-job acknowledgements before its borrows end. The primitives:
+//!
+//! * [`Pool::run`] — execute a batch of jobs; job 0 runs inline on the
+//!   caller, the rest go to the workers.
+//! * `Pool::dispatch` (crate-private; the guard must not be forgettable
+//!   by safe downstream code) — ship jobs and return the ack guard; the
+//!   caller does its own (different) work, then waits. This is what the
+//!   compression scheduler uses: workers run claim-loops while the caller
+//!   claims layers *and* commits finished ones in order.
+//! * [`Pool::run_row_chunks`] — the common shape: split a `rows × width`
+//!   output buffer into at most `parts` contiguous row ranges and run a
+//!   kernel on each. The partition depends only on `(rows, parts)` —
+//!   never on pool occupancy.
+//!
+//! # Determinism / bit-exactness
+//!
+//! Every parallel kernel in this codebase is "a row range of the exact
+//! serial kernel": partitioning output rows changes no per-element
+//! reduction order, and ranges are disjoint, so assembled outputs are
+//! bit-identical to the serial kernel for **any** thread count, pool size,
+//! or scheduling order — asserted across thread counts {1, 2, 7, 64} by
+//! the linalg and packing tests. Work that is *scheduled* through the pool
+//! (compression jobs) gets determinism from per-job derived RNG seeds
+//! ([`crate::rng::derive_seed`]) plus in-order result commits.
+//!
+//! # Nested dispatch
+//!
+//! Dispatching from *inside* a pool worker would deadlock the moment every
+//! worker blocks on acks for sub-jobs that sit unpopped in the queue. The
+//! pool therefore never queues from a worker thread: [`Pool::dispatch`]
+//! (and everything built on it) detects that the current thread is a pool
+//! worker and runs the jobs inline instead. Layer-compression jobs can
+//! call pool-parallel linalg unconditionally; on a worker it degrades to
+//! the serial kernel, bit-identically.
+//!
+//! # Safety model
+//!
+//! Jobs are `'scope` closures (they borrow the caller's operands and
+//! disjoint `&mut` output ranges), lifetime-erased to cross the channel.
+//! The dispatching call does not release those borrows until every job
+//! has acknowledged: on the happy path it blocks in
+//! [`DispatchGuard::wait`], and on **any unwind** (a panic in the caller's
+//! inline share, or a propagated worker panic) the guard's `Drop` blocks
+//! until all outstanding jobs finish — so no job ever outlives the
+//! borrows it captured. If a worker panics mid-job, the job's ack sender
+//! is dropped unsent; the caller observes the disconnect after all other
+//! jobs drained and panics itself rather than returning partial output.
+
+use std::cell::Cell;
+use std::marker::PhantomData;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// One unit of caller-scoped work. Jobs may borrow from the dispatching
+/// caller's stack; the dispatch protocol guarantees they never outlive it.
+pub type ScopedJob<'scope> = Box<dyn FnOnce() + Send + 'scope>;
+
+/// The lifetime-erased form that crosses the worker channel.
+type StaticJob = Box<dyn FnOnce() + Send + 'static>;
+
+struct Envelope {
+    job: StaticJob,
+    /// Dropped unsent on panic — the caller turns that into its own panic.
+    ack: Sender<()>,
+}
+
+thread_local! {
+    /// True on pool-worker threads; used to inline nested dispatch.
+    static IN_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Whether the current thread is a pool worker (nested dispatch inlines).
+pub fn in_pool_worker() -> bool {
+    IN_POOL_WORKER.with(|c| c.get())
+}
+
+fn worker_loop(rx: &Mutex<Receiver<Envelope>>) {
+    IN_POOL_WORKER.with(|c| c.set(true));
+    loop {
+        // Hold the lock only to pop one job so co-workers drain in parallel.
+        let envelope = {
+            let rx = rx.lock().expect("pool rx lock");
+            match rx.recv() {
+                Ok(e) => e,
+                Err(_) => return, // pool dropped: shut down
+            }
+        };
+        // catch_unwind keeps the worker alive if a job panics; the ack is
+        // only sent on success, so the caller never mistakes a
+        // partially-run job for a completed one.
+        let ok = catch_unwind(AssertUnwindSafe(envelope.job)).is_ok();
+        if ok {
+            let _ = envelope.ack.send(());
+        }
+    }
+}
+
+/// Persistent worker pool for caller-scoped jobs.
+///
+/// `Pool::new(threads)` targets `threads` total parallelism: it spawns
+/// `threads − 1` long-lived workers and the dispatching caller always
+/// executes one share of the work itself (so a 1-thread pool is purely
+/// serial and spawns nothing). [`Pool::global`] is the process-wide
+/// instance sized to `available_parallelism`, shared by the sign kernels
+/// (via `packing::SignPool`), the pooled linalg kernels, and the
+/// compression job scheduler.
+///
+/// # Examples
+///
+/// ```
+/// use littlebit2::parallel::Pool;
+///
+/// let pool = Pool::new(4);
+/// let mut out = vec![0u64; 1000];
+/// // Square each "row" (width 1) across the pool; the partition is
+/// // deterministic, so the result never depends on the thread count.
+/// pool.run_row_chunks(&mut out, 1, pool.threads(), |row0, chunk| {
+///     for (i, v) in chunk.iter_mut().enumerate() {
+///         *v = ((row0 + i) as u64).pow(2);
+///     }
+/// });
+/// assert_eq!(out[31], 31 * 31);
+/// ```
+pub struct Pool {
+    tx: Mutex<Option<Sender<Envelope>>>,
+    workers: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl Pool {
+    /// Build a pool targeting `threads` total parallelism (clamped to ≥ 1):
+    /// `threads − 1` worker threads plus the calling thread per dispatch.
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let (tx, rx) = channel::<Envelope>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..threads - 1)
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                std::thread::spawn(move || worker_loop(&rx))
+            })
+            .collect();
+        Self { tx: Mutex::new(Some(tx)), workers, threads }
+    }
+
+    /// The process-wide pool, created on first use and sized to
+    /// `std::thread::available_parallelism`. Never torn down (workers are
+    /// idle blocked between calls and die with the process).
+    pub fn global() -> &'static Pool {
+        static POOL: OnceLock<Pool> = OnceLock::new();
+        POOL.get_or_init(|| {
+            let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            Pool::new(n)
+        })
+    }
+
+    /// A zero-worker pool: every call runs serially on the calling thread.
+    /// Exists so serial wrappers never instantiate [`global`](Self::global)
+    /// — and its `available_parallelism − 1` resident worker threads — as a
+    /// side effect of a purely serial call.
+    pub fn serial() -> &'static Pool {
+        static SERIAL: OnceLock<Pool> = OnceLock::new();
+        SERIAL.get_or_init(|| Pool::new(1))
+    }
+
+    /// Pool selection for a `threads` knob: the shared
+    /// [`global`](Self::global) pool when actual parallelism is requested,
+    /// the spawn-free [`serial`](Self::serial) pool otherwise.
+    pub fn for_threads(threads: usize) -> &'static Pool {
+        if threads > 1 {
+            Self::global()
+        } else {
+            Self::serial()
+        }
+    }
+
+    /// Total parallelism this pool targets (workers + dispatching caller).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Ship every job to the workers and return the guard the caller must
+    /// wait on before its borrows end. The caller is free to do its own
+    /// work between `dispatch` and [`DispatchGuard::wait`] — that is the
+    /// "caller keeps one share" pattern every `run_*` helper builds on.
+    ///
+    /// With no workers (a 1-thread pool), or when called from a pool
+    /// worker thread (nested dispatch), the jobs run inline, in order,
+    /// before this returns — never queued, so nesting cannot deadlock.
+    ///
+    /// Crate-private on purpose: the guard pattern is only sound if the
+    /// guard is actually waited on (or dropped), and safe downstream code
+    /// could `mem::forget` it — releasing the `'scope` borrows while the
+    /// lifetime-erased jobs still run. The public surface (`run`,
+    /// `run_row_chunks`) never lets the guard escape.
+    pub(crate) fn dispatch<'scope>(&self, jobs: Vec<ScopedJob<'scope>>) -> DispatchGuard<'scope> {
+        let (ack_tx, ack_rx) = channel::<()>();
+        let mut remaining = 0usize;
+        if jobs.is_empty() {
+            // Nothing outstanding; the guard is a no-op.
+        } else if self.workers.is_empty() || in_pool_worker() {
+            for job in jobs {
+                job();
+            }
+        } else {
+            let tx = self.tx.lock().expect("pool tx lock");
+            let tx = tx.as_ref().expect("pool not shut down");
+            for job in jobs {
+                // SAFETY: the returned guard blocks — in `wait` on the
+                // happy path, in `Drop` on every unwind path — until each
+                // job acknowledges or provably finished (ack channel
+                // disconnect after a job's own unwind), and the guard
+                // carries `'scope`, so no job outlives the borrows it
+                // captured. Output ranges are disjoint by construction of
+                // the callers.
+                let job = unsafe { std::mem::transmute::<ScopedJob<'scope>, StaticJob>(job) };
+                tx.send(Envelope { job, ack: ack_tx.clone() }).expect("pool workers alive");
+                remaining += 1;
+            }
+        }
+        // The caller's ack sender is dropped here so a worker panic (its
+        // clone dropped unsent) disconnects the channel instead of hanging
+        // the guard.
+        DispatchGuard { rx: ack_rx, remaining, _scope: PhantomData }
+    }
+
+    /// Execute a batch of jobs across the pool: job 0 runs inline on the
+    /// calling thread, jobs 1.. on the workers; returns once every job has
+    /// finished. Worker panics propagate to the caller after all other
+    /// jobs drain — never partial silence.
+    pub fn run(&self, mut jobs: Vec<ScopedJob<'_>>) {
+        if jobs.is_empty() {
+            return;
+        }
+        let rest = jobs.split_off(1);
+        let first = jobs.pop().expect("one job");
+        let guard = self.dispatch(rest);
+        first();
+        guard.wait();
+    }
+
+    /// Split `data` — `rows` records of `width` elements each — into at
+    /// most `parts` contiguous row ranges and run
+    /// `kernel(first_row, range)` for each across the pool (range 0 inline
+    /// on the caller). The partition depends only on `(rows, parts)`;
+    /// because ranges are disjoint and each range is computed exactly as
+    /// the serial kernel would compute those rows, output is bit-identical
+    /// for every `parts`. `parts <= 1`, an empty pool, a nested call from
+    /// a worker, or a single range all run serially inline.
+    pub fn run_row_chunks<T: Send, F: Fn(usize, &mut [T]) + Sync>(
+        &self,
+        data: &mut [T],
+        width: usize,
+        parts: usize,
+        kernel: F,
+    ) {
+        if data.is_empty() {
+            return;
+        }
+        assert!(width > 0, "run_row_chunks on non-empty data needs width > 0");
+        assert_eq!(data.len() % width, 0, "data must be whole rows");
+        let rows = data.len() / width;
+        let parts = parts.clamp(1, rows);
+        if parts == 1 || self.workers.is_empty() || in_pool_worker() {
+            kernel(0, data);
+            return;
+        }
+        let chunk_rows = rows.div_ceil(parts);
+        let mut chunks = data.chunks_mut(chunk_rows * width);
+        let first = chunks.next().expect("rows > 0");
+        let kernel = &kernel;
+        let jobs: Vec<ScopedJob<'_>> = chunks
+            .enumerate()
+            .map(|(i, range)| {
+                Box::new(move || kernel((i + 1) * chunk_rows, range)) as ScopedJob<'_>
+            })
+            .collect();
+        let guard = self.dispatch(jobs);
+        kernel(0, first);
+        guard.wait();
+    }
+}
+
+/// Ack collector for one dispatch. The lifetime-erased jobs shipped to the
+/// workers are only valid while the caller's borrows live, so the guard
+/// blocks until every outstanding job is finished — on the happy path via
+/// [`wait`](DispatchGuard::wait), and on **any unwind** via `Drop`, which
+/// keeps the "no job outlives the call" safety contract even when the call
+/// does not return normally.
+#[must_use = "the dispatch is only complete after wait()"]
+pub(crate) struct DispatchGuard<'scope> {
+    rx: Receiver<()>,
+    remaining: usize,
+    _scope: PhantomData<&'scope ()>,
+}
+
+impl DispatchGuard<'_> {
+    /// Drain every ack; propagate worker panics instead of returning with
+    /// partial output.
+    pub(crate) fn wait(mut self) {
+        while self.remaining > 0 {
+            self.remaining -= 1;
+            self.rx.recv().expect("pool worker panicked mid-job");
+        }
+    }
+}
+
+impl Drop for DispatchGuard<'_> {
+    fn drop(&mut self) {
+        // A `recv` error means every remaining ack sender is gone — all
+        // outstanding jobs have completed (or were abandoned after their
+        // own unwind), so no worker can still touch the caller's borrows.
+        while self.remaining > 0 {
+            self.remaining -= 1;
+            if self.rx.recv().is_err() {
+                break;
+            }
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        // Disconnect the job channel first so idle workers' recv errors
+        // out; then join them. Tolerate a poisoned lock — panicking in
+        // Drop would abort.
+        match self.tx.lock() {
+            Ok(mut tx) => drop(tx.take()),
+            Err(poisoned) => drop(poisoned.into_inner().take()),
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn run_executes_every_job_exactly_once() {
+        let pool = Pool::new(4);
+        let hits = AtomicUsize::new(0);
+        let jobs: Vec<ScopedJob<'_>> = (0..17)
+            .map(|_| {
+                Box::new(|| {
+                    hits.fetch_add(1, Ordering::SeqCst);
+                }) as ScopedJob<'_>
+            })
+            .collect();
+        pool.run(jobs);
+        assert_eq!(hits.load(Ordering::SeqCst), 17);
+    }
+
+    /// The determinism contract: identical bytes for thread counts
+    /// {1, 2, 7, 64} on a ragged row count.
+    #[test]
+    fn row_chunks_bit_deterministic_across_thread_counts() {
+        let width = 3;
+        let rows = 61;
+        let kernel = |row0: usize, chunk: &mut [f64]| {
+            for (i, row) in chunk.chunks_mut(width).enumerate() {
+                let r = (row0 + i) as f64;
+                // Deliberately order-sensitive float math.
+                row[0] = (r + 0.1).sin();
+                row[1] = row[0] * 1.00001 + r;
+                row[2] = row[1] / (r + 3.0);
+            }
+        };
+        let mut want = vec![0.0f64; rows * width];
+        kernel(0, &mut want);
+        for threads in [1usize, 2, 7, 64] {
+            let pool = Pool::new(threads);
+            let mut got = vec![0.0f64; rows * width];
+            pool.run_row_chunks(&mut got, width, threads, kernel);
+            for (a, b) in want.iter().zip(&got) {
+                assert_eq!(a.to_bits(), b.to_bits(), "threads={threads}");
+            }
+        }
+    }
+
+    /// More partitions than rows, a single row, and empty data all degrade
+    /// gracefully.
+    #[test]
+    fn row_chunks_edge_cases() {
+        let pool = Pool::new(3);
+        let mut one = vec![0u32; 5];
+        pool.run_row_chunks(&mut one, 5, 64, |row0, chunk| {
+            assert_eq!(row0, 0);
+            chunk.fill(7);
+        });
+        assert_eq!(one, vec![7; 5]);
+        let mut empty: Vec<u32> = Vec::new();
+        pool.run_row_chunks(&mut empty, 4, 8, |_, _| panic!("no rows"));
+    }
+
+    /// Nested dispatch from inside a pool job must inline, not deadlock:
+    /// every job here re-enters the pool for its own row split.
+    #[test]
+    fn nested_dispatch_inlines_without_deadlock() {
+        let pool = Pool::new(2); // one worker: trivially deadlocks if nested jobs queue
+        let mut out = vec![0usize; 8 * 4];
+        pool.run_row_chunks(&mut out, 4, 8, |row0, chunk| {
+            // Worker-side nested call — must run inline on this thread.
+            let inner = Pool::global();
+            inner.run_row_chunks(chunk, 1, 64, |i0, cells| {
+                for (i, c) in cells.iter_mut().enumerate() {
+                    *c = row0 * 100 + i0 + i;
+                }
+            });
+        });
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, (i / 4) * 100 + i % 4);
+        }
+    }
+
+    /// A panicking job propagates to the caller after the others drain —
+    /// and the pool survives for the next call.
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let pool = Pool::new(4);
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let jobs: Vec<ScopedJob<'_>> = (0..6)
+                .map(|i| {
+                    Box::new(move || {
+                        if i == 3 {
+                            panic!("job {i} exploded");
+                        }
+                    }) as ScopedJob<'_>
+                })
+                .collect();
+            pool.run(jobs);
+        }));
+        assert!(caught.is_err(), "panic must propagate");
+        // Pool still works.
+        let hits = AtomicUsize::new(0);
+        pool.run(
+            (0..5)
+                .map(|_| {
+                    Box::new(|| {
+                        hits.fetch_add(1, Ordering::SeqCst);
+                    }) as ScopedJob<'_>
+                })
+                .collect(),
+        );
+        assert_eq!(hits.load(Ordering::SeqCst), 5);
+    }
+
+    /// dispatch + caller-side work: the caller can interleave its own
+    /// processing while workers run.
+    #[test]
+    fn dispatch_then_wait_supports_caller_work() {
+        let pool = Pool::new(3);
+        let worker_sum = AtomicUsize::new(0);
+        let jobs: Vec<ScopedJob<'_>> = (1..=10)
+            .map(|i| {
+                Box::new(move || {
+                    worker_sum.fetch_add(i, Ordering::SeqCst);
+                }) as ScopedJob<'_>
+            })
+            .collect();
+        let guard = pool.dispatch(jobs);
+        let caller_side = 100usize; // the caller's own share
+        guard.wait();
+        assert_eq!(worker_sum.load(Ordering::SeqCst) + caller_side, 155);
+    }
+
+    #[test]
+    fn drop_shuts_down_cleanly() {
+        let pool = Pool::new(5);
+        let mut out = vec![0u8; 64];
+        pool.run_row_chunks(&mut out, 1, 5, |_, c| c.fill(1));
+        drop(pool); // must not deadlock
+    }
+
+    #[test]
+    fn global_and_serial_pools_are_usable() {
+        assert!(Pool::global().threads() >= 1);
+        assert_eq!(Pool::serial().threads(), 1);
+        assert_eq!(Pool::for_threads(1).threads(), 1);
+        let mut out = vec![0u16; 9];
+        Pool::global().run_row_chunks(&mut out, 1, 4, |r0, c| {
+            for (i, v) in c.iter_mut().enumerate() {
+                *v = (r0 + i) as u16;
+            }
+        });
+        assert_eq!(out[8], 8);
+    }
+}

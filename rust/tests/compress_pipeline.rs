@@ -1,0 +1,169 @@
+//! The PR 4 acceptance contract, pipeline half: `compress --jobs N` must
+//! produce **byte-identical** `.lb2` artifacts for any worker count, and
+//! the streaming writer must match the batch `save` path byte-for-byte.
+//!
+//! These tests drive the same library path the CLI uses
+//! (`run_compression_jobs_streaming` → `StackStreamWriter`), with the
+//! CLI's per-layer derived seeds, so `make roundtrip`'s `cmp` check is
+//! covered at unit scope too.
+
+use littlebit2::artifact::StackStreamWriter;
+use littlebit2::coordinator::{run_compression_jobs_streaming, CompressionJob, JobInput};
+use littlebit2::littlebit::{CompressionConfig, InitStrategy};
+use littlebit2::model::PackedStack;
+use littlebit2::rng::derive_seed;
+use littlebit2::spectral::SynthSpec;
+use std::path::PathBuf;
+
+fn jobs(layers: usize, size: usize, base_seed: u64) -> Vec<CompressionJob> {
+    let cfg = CompressionConfig {
+        bpp: 1.0,
+        strategy: InitStrategy::JointItq { iters: 8 },
+        residual: true,
+        ..Default::default()
+    };
+    (0..layers)
+        .map(|k| CompressionJob {
+            name: format!("layer{k}"),
+            input: JobInput::Synth {
+                spec: SynthSpec { rows: size, cols: size, gamma: 0.3, coherence: 0.7, scale: 1.0 },
+                seed: derive_seed(base_seed, 2 * k as u64),
+            },
+            cfg: cfg.clone(),
+            seed: derive_seed(base_seed, 2 * k as u64 + 1),
+        })
+        .collect()
+}
+
+fn shapes_of(jobs: &[CompressionJob]) -> Vec<(usize, usize, usize)> {
+    jobs.iter()
+        .map(|j| {
+            let (d_out, d_in) = j.shape();
+            (d_in, d_out, j.n_paths())
+        })
+        .collect()
+}
+
+fn tmp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("lb2_pipeline_{}_{tag}.lb2", std::process::id()))
+}
+
+/// Compress `layers` layers on `workers` claim-loops, streaming into a
+/// `.lb2` file; return its bytes.
+fn stream_artifact(workers: usize, tag: &str) -> Vec<u8> {
+    let jobs = jobs(3, 48, 42);
+    let path = tmp_path(tag);
+    let mut writer = StackStreamWriter::create(&path, &shapes_of(&jobs)).unwrap();
+    run_compression_jobs_streaming(jobs, workers, |_, outcome| {
+        writer.append_layer(&outcome.packed)?;
+        Ok(())
+    })
+    .unwrap();
+    writer.finish().unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    bytes
+}
+
+/// Same seed, any worker count → the same artifact, byte for byte.
+#[test]
+fn jobs_n_is_byte_identical() {
+    let base = stream_artifact(1, "w1");
+    for workers in [2usize, 7] {
+        let got = stream_artifact(workers, &format!("w{workers}"));
+        assert_eq!(base, got, "artifact bytes differ at workers={workers}");
+    }
+    // And the artifact is a valid, loadable stack.
+    let stack = PackedStack::from_artifact_bytes(&base).unwrap();
+    assert_eq!(stack.depth(), 3);
+    assert_eq!(stack.d_in(), 48);
+}
+
+/// The streaming writer and the batch `PackedStack::save` encoder must
+/// emit identical bytes for the same layers.
+#[test]
+fn stream_writer_matches_batch_save() {
+    let jobs = jobs(2, 40, 7);
+    let shapes = shapes_of(&jobs);
+
+    let stream_path = tmp_path("stream");
+    let mut writer = StackStreamWriter::create(&stream_path, &shapes).unwrap();
+    let mut layers = Vec::new();
+    run_compression_jobs_streaming(jobs, 2, |_, outcome| {
+        writer.append_layer(&outcome.packed)?;
+        layers.push(outcome.packed);
+        Ok(())
+    })
+    .unwrap();
+    writer.finish().unwrap();
+    let streamed = std::fs::read(&stream_path).unwrap();
+    let _ = std::fs::remove_file(&stream_path);
+
+    let batch = PackedStack::new(layers).to_artifact_bytes().unwrap();
+    assert_eq!(streamed, batch, "streamed vs batch-encoded artifact bytes");
+}
+
+/// Shape-table enforcement: a layer that does not match the declared
+/// shapes is rejected, as is sealing with layers missing; neither leaves
+/// a file behind.
+#[test]
+fn stream_writer_validates_shapes_and_completion() {
+    let jobs = jobs(2, 40, 9);
+    let shapes = shapes_of(&jobs);
+
+    // Wrong shape table → the first append fails.
+    let path = tmp_path("badshape");
+    let mut writer =
+        StackStreamWriter::create(&path, &[(13, 13, 2), (13, 13, 2)]).unwrap();
+    let mut first = None;
+    run_compression_jobs_streaming(jobs.clone(), 1, |_, outcome| {
+        if first.is_none() {
+            first = Some(outcome.packed);
+        }
+        Ok(())
+    })
+    .unwrap();
+    let err = writer.append_layer(&first.unwrap()).unwrap_err();
+    assert!(err.to_string().contains("shape table"), "{err}");
+    drop(writer);
+    assert!(!path.exists(), "abandoned stream must not leave {path:?}");
+
+    // Missing layers → finish fails and removes the temp file.
+    let path2 = tmp_path("short");
+    let writer2 = StackStreamWriter::create(&path2, &shapes).unwrap();
+    let err = writer2.finish().unwrap_err();
+    assert!(err.to_string().contains("only 0 were appended"), "{err}");
+    assert!(!path2.exists());
+
+    // An empty shape table is refused outright.
+    assert!(StackStreamWriter::create(tmp_path("empty"), &[]).is_err());
+}
+
+/// The CLI's bug regression: with per-layer derived seeds, dropping the
+/// first layer must not change the second layer's bytes (the old shared
+/// RNG chained layers together).
+#[test]
+fn layers_are_independent_of_preceding_layers() {
+    let all = jobs(3, 48, 42);
+    let tail: Vec<CompressionJob> = all[1..].to_vec();
+
+    let collect = |js: Vec<CompressionJob>| {
+        let mut out = Vec::new();
+        run_compression_jobs_streaming(js, 1, |_, oc| {
+            out.push(oc.packed);
+            Ok(())
+        })
+        .unwrap();
+        out
+    };
+    let full = collect(all);
+    let tail = collect(tail);
+    // full[1] and tail[0] are the same job — identical packed bits.
+    for (a, b) in full[1].paths().iter().zip(tail[0].paths()) {
+        assert_eq!(a.ub_bits().words(), b.ub_bits().words());
+        assert_eq!(a.vbt_bits().words(), b.vbt_bits().words());
+        assert_eq!(a.h(), b.h());
+        assert_eq!(a.l(), b.l());
+        assert_eq!(a.g(), b.g());
+    }
+}

@@ -109,16 +109,18 @@ fn zoo_compression_pipeline() {
     let jobs: Vec<CompressionJob> = layers
         .iter()
         .enumerate()
-        .map(|(i, l)| CompressionJob {
-            name: l.proj.name().to_string(),
-            weight: l.weight.clone(),
-            cfg: CompressionConfig {
-                bpp: 1.0,
-                strategy: InitStrategy::JointItq { iters: 10 },
-                residual: true,
-                ..Default::default()
-            },
-            seed: i as u64,
+        .map(|(i, l)| {
+            CompressionJob::dense(
+                l.proj.name(),
+                l.weight.clone(),
+                CompressionConfig {
+                    bpp: 1.0,
+                    strategy: InitStrategy::JointItq { iters: 10 },
+                    residual: true,
+                    ..Default::default()
+                },
+                i as u64,
+            )
         })
         .collect();
     let results = run_compression_jobs(jobs, 2);

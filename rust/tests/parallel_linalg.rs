@@ -1,0 +1,149 @@
+//! The PR 4 acceptance contract, linalg half: every pool-parallel kernel
+//! under the compression pipeline is **bit-exact** against its serial
+//! counterpart for thread counts {1, 2, 7, 64}, on ragged shapes (odd
+//! dimensions, non-square, above and below the dispatch threshold).
+//!
+//! Floating-point addition is not associative, so this only holds because
+//! the kernels partition *output rows* and keep a fixed reduction order
+//! per element — the property `compress --jobs N` determinism is built on.
+
+use littlebit2::linalg::{
+    householder_qr, householder_qr_on, svd_randomized, svd_randomized_on, Mat,
+};
+use littlebit2::littlebit::{
+    compress, compress_on, dual_svid, dual_svid_on, joint_itq, joint_itq_on, CompressionConfig,
+};
+use littlebit2::parallel::Pool;
+use littlebit2::rng::Pcg64;
+use littlebit2::spectral::{synth_weight, SynthSpec};
+
+const THREADS: [usize; 4] = [1, 2, 7, 64];
+
+fn assert_mats_bit_equal(a: &Mat, b: &Mat, what: &str) {
+    assert_eq!(a.shape(), b.shape(), "{what}: shape");
+    for (x, y) in a.as_slice().iter().zip(b.as_slice()) {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: {x} vs {y}");
+    }
+}
+
+/// matmul / t_matmul / matmul_t / matvec on ragged shapes, every thread
+/// count, both below and above the inline threshold.
+#[test]
+fn blocked_products_bit_exact_across_thread_counts() {
+    let mut rng = Pcg64::seed(41);
+    // (m, k, n): small (inline path) and large (real dispatch) shapes,
+    // none a multiple of the 64-wide block.
+    for (m, k, n) in [(7, 13, 5), (61, 130, 37), (129, 257, 66), (200, 90, 131)] {
+        let a = Mat::gaussian(m, k, &mut rng);
+        let b = Mat::gaussian(k, n, &mut rng);
+        let bt = Mat::gaussian(n, k, &mut rng);
+        let at = Mat::gaussian(k, m, &mut rng);
+        let mut x = vec![0.0f32; k];
+        rng.fill_normal(&mut x);
+
+        let mm = a.matmul(&b);
+        let tm = at.t_matmul(&b);
+        let mt = a.matmul_t(&bt);
+        let mv = a.matvec(&x);
+        for threads in THREADS {
+            let pool = Pool::new(threads);
+            assert_mats_bit_equal(&mm, &a.matmul_on(&b, &pool), &format!("matmul t={threads}"));
+            assert_mats_bit_equal(&tm, &at.t_matmul_on(&b, &pool), &format!("t_matmul t={threads}"));
+            assert_mats_bit_equal(&mt, &a.matmul_t_on(&bt, &pool), &format!("matmul_t t={threads}"));
+            let mv_p = a.matvec_on(&x, &pool);
+            for (p, q) in mv.iter().zip(&mv_p) {
+                assert_eq!(p.to_bits(), q.to_bits(), "matvec t={threads}");
+            }
+        }
+    }
+}
+
+/// The column-major QR: pooled trailing updates must reproduce the serial
+/// factorization bit-for-bit (Q and R both).
+#[test]
+fn householder_qr_bit_exact_across_thread_counts() {
+    let mut rng = Pcg64::seed(42);
+    for (m, n) in [(20, 8), (150, 150), (300, 130)] {
+        let a = Mat::gaussian(m, n, &mut rng);
+        let (q0, r0) = householder_qr(&a);
+        for threads in THREADS {
+            let pool = Pool::new(threads);
+            let (q1, r1) = householder_qr_on(&a, &pool);
+            assert_mats_bit_equal(&q0, &q1, &format!("QR.Q {m}x{n} t={threads}"));
+            assert_mats_bit_equal(&r0, &r1, &format!("QR.R {m}x{n} t={threads}"));
+        }
+    }
+}
+
+/// Randomized SVD consumes the caller's RNG identically on every pool, so
+/// U, S, V must all be bit-identical.
+#[test]
+fn svd_randomized_bit_exact_across_thread_counts() {
+    let mut wrng = Pcg64::seed(43);
+    let spec = SynthSpec { rows: 190, cols: 170, gamma: 0.3, coherence: 0.7, scale: 1.0 };
+    let w = synth_weight(&spec, &mut wrng);
+    let base = svd_randomized_on(&w, 24, 8, 2, &mut Pcg64::seed(5), Pool::serial());
+    for threads in THREADS {
+        let pool = Pool::new(threads);
+        let svd = svd_randomized_on(&w, 24, 8, 2, &mut Pcg64::seed(5), &pool);
+        assert_mats_bit_equal(&base.u, &svd.u, &format!("SVD.U t={threads}"));
+        assert_mats_bit_equal(&base.v, &svd.v, &format!("SVD.V t={threads}"));
+        for (a, b) in base.s.iter().zip(&svd.s) {
+            assert_eq!(a.to_bits(), b.to_bits(), "SVD.S t={threads}");
+        }
+    }
+    // The default entry (global pool) agrees too.
+    let global = svd_randomized(&w, 24, 8, 2, &mut Pcg64::seed(5));
+    assert_mats_bit_equal(&base.u, &global.u, "SVD.U default-vs-serial");
+}
+
+/// Joint-ITQ and Dual-SVID: identical rotations, factors, and trajectories
+/// on any pool.
+#[test]
+fn itq_and_svid_bit_exact_across_pools() {
+    let mut rng = Pcg64::seed(44);
+    let spec = SynthSpec { rows: 140, cols: 120, gamma: 0.3, coherence: 0.8, scale: 1.0 };
+    let w = synth_weight(&spec, &mut rng);
+    let svd = svd_randomized_on(&w, 20, 8, 2, &mut Pcg64::seed(6), Pool::serial());
+    let (u, v) = svd.split_factors();
+
+    let (rot0, rep0) = joint_itq_on(&u, &v, 25, &mut Pcg64::seed(7), Pool::serial());
+    for threads in [2usize, 7] {
+        let pool = Pool::new(threads);
+        let (rot1, rep1) = joint_itq_on(&u, &v, 25, &mut Pcg64::seed(7), &pool);
+        assert_mats_bit_equal(&rot0, &rot1, &format!("ITQ rotation t={threads}"));
+        for (a, b) in rep0.objective.iter().zip(&rep1.objective) {
+            assert_eq!(a.to_bits(), b.to_bits(), "ITQ objective t={threads}");
+        }
+    }
+    let (rotg, _) = joint_itq(&u, &v, 25, &mut Pcg64::seed(7));
+    assert_mats_bit_equal(&rot0, &rotg, "ITQ default-vs-serial");
+
+    let f0 = dual_svid_on(&u, &v, Pool::serial());
+    let f1 = dual_svid_on(&u, &v, &Pool::new(7));
+    let fg = dual_svid(&u, &v);
+    for (fa, what) in [(&f1, "pool-7"), (&fg, "default")] {
+        assert_eq!(f0.h, fa.h, "SVID h {what}");
+        assert_eq!(f0.l, fa.l, "SVID l {what}");
+        assert_eq!(f0.g, fa.g, "SVID g {what}");
+        assert_mats_bit_equal(&f0.u_b, &fa.u_b, &format!("SVID u_b {what}"));
+    }
+}
+
+/// End to end: the whole compression of one layer is bit-identical across
+/// pools (reconstruction compared element-wise).
+#[test]
+fn compress_bit_exact_across_pools() {
+    let mut rng = Pcg64::seed(45);
+    let spec = SynthSpec { rows: 128, cols: 128, gamma: 0.3, coherence: 0.7, scale: 1.0 };
+    let w = synth_weight(&spec, &mut rng);
+    let cfg = CompressionConfig { bpp: 0.8, ..Default::default() };
+    let base = compress_on(&w, &cfg, &mut Pcg64::seed(8), Pool::serial()).reconstruct();
+    for threads in [2usize, 7] {
+        let pool = Pool::new(threads);
+        let got = compress_on(&w, &cfg, &mut Pcg64::seed(8), &pool).reconstruct();
+        assert_mats_bit_equal(&base, &got, &format!("compress t={threads}"));
+    }
+    let default = compress(&w, &cfg, &mut Pcg64::seed(8)).reconstruct();
+    assert_mats_bit_equal(&base, &default, "compress default-vs-serial");
+}
