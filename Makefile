@@ -4,7 +4,7 @@
 # PJRT-gated paths (`--features xla`): the train CLI, examples/e2e_qat,
 # tests/runtime_e2e.
 
-.PHONY: build test bench bench-build bench-gemm bench-compress clippy artifacts doc roundtrip
+.PHONY: build test bench bench-build bench-gemm bench-compress clippy artifacts doc roundtrip eval
 
 build:
 	cargo build --release
@@ -24,6 +24,16 @@ roundtrip: build
 	cargo run --release -- compress --size 48 --layers 2 --bpp 1.0 --jobs 4 --out target/roundtrip_jobs4.lb2
 	cmp target/roundtrip.lb2 target/roundtrip_jobs4.lb2
 	cargo run --release -- serve --model target/roundtrip.lb2 --workers 2 --batch 8 --requests 32
+	# Second pass through the method-generic spine: a non-LittleBit-2
+	# method (OneBit) must survive the same compress→save→load→serve loop.
+	cargo run --release -- compress --method onebit --size 48 --layers 2 --out target/roundtrip_onebit.lb2
+	cargo run --release -- serve --model target/roundtrip_onebit.lb2 --workers 2 --batch 8 --requests 32
+
+# The methods × bpp fidelity/throughput sweep (Table 1 shape) at bounded
+# sizes; refreshes BENCH_methods.json at the repo root. Run by the
+# build-test CI job so every method stays green through the real pipeline.
+eval: build
+	cargo run --release -- eval --size 64 --blocks 1 --jobs 2 --requests 64 --out BENCH_methods.json
 
 bench:
 	cargo bench

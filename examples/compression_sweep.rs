@@ -41,7 +41,7 @@ fn main() -> anyhow::Result<()> {
                 .collect();
             let t0 = std::time::Instant::now();
             let workers = std::thread::available_parallelism()?.get();
-            let results = run_compression_jobs(jobs, workers);
+            let results = run_compression_jobs(jobs, workers)?;
             let dt = t0.elapsed().as_secs_f64();
             let mean_mse: f64 = results.iter().map(|r| r.mse).sum::<f64>() / results.len() as f64;
             let mean_bpp: f64 = results.iter().map(|r| r.bpp).sum::<f64>() / results.len() as f64;
@@ -73,7 +73,7 @@ fn main() -> anyhow::Result<()> {
             )
         })
         .collect();
-    for r in run_compression_jobs(jobs, 2) {
+    for r in run_compression_jobs(jobs, 2)? {
         println!(
             "  {:<22} rank={:>3} mse={:.4e} bpp={:.3} ({:.0} ms)",
             r.name, r.rank, r.mse, r.bpp, r.wall_ms

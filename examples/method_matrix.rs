@@ -1,0 +1,89 @@
+//! The method matrix: every registered compression method run over the
+//! same 3-layer synthetic chain through the full generic engine —
+//! `quant::Compressor` → `model::MethodStack` → `.lb2` v2 bytes — with a
+//! fidelity / bpp / size table at the end (the Table 1 shape, minus the
+//! GPU perplexity columns).
+//!
+//! ```bash
+//! cargo run --release --example method_matrix [d_model] [bpp]
+//! ```
+
+use littlebit2::linalg::Mat;
+use littlebit2::littlebit::InitStrategy;
+use littlebit2::model::MethodStack;
+use littlebit2::parallel::Pool;
+use littlebit2::quant::{MethodSpec, METHOD_NAMES};
+use littlebit2::rng::{derive_seed, Pcg64};
+use littlebit2::spectral::{synth_weight, SynthSpec};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let d: usize = args.first().map(|s| s.parse()).transpose()?.unwrap_or(96);
+    let bpp: f64 = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(1.0);
+
+    // One 3-layer heavy-tailed chain (d → 2d → d, the FFN shape); every
+    // method compresses the SAME weights.
+    let dims = [d, 2 * d, d];
+    let mut wrng = Pcg64::seed(17);
+    let weights: Vec<Mat> = dims
+        .windows(2)
+        .map(|w| {
+            let spec =
+                SynthSpec { rows: w[1], cols: w[0], gamma: 0.3, coherence: 0.7, scale: 1.0 };
+            synth_weight(&spec, &mut wrng)
+        })
+        .collect();
+    let params: usize = weights.iter().map(|w| w.rows() * w.cols()).sum();
+    println!("chain: {d} → {} → {d} ({params} params), budget {bpp} bpp where budgeted\n", 2 * d);
+
+    println!(
+        "{:<11} {:>12} {:>9} {:>9} {:>12} {:>11} {:>9}",
+        "method", "rel_err", "bpp_decl", "bpp_disk", "artifact_B", "compress_ms", "serve_ok"
+    );
+    for (mi, name) in METHOD_NAMES.iter().enumerate() {
+        let spec = MethodSpec::parse(name, bpp, InitStrategy::JointItq { iters: 30 })?;
+        let compressor = spec.compressor();
+        let mut rng = Pcg64::seed(derive_seed(23, mi as u64));
+        let mut layers = Vec::new();
+        let mut err_num = 0.0f64;
+        let mut err_den = 0.0f64;
+        // Time compression alone; the scoring reconstruction below is
+        // excluded, matching `eval` / EXPERIMENTS.md §Baselines.
+        let mut compress_ms = 0.0f64;
+        for w in &weights {
+            let t = std::time::Instant::now();
+            let layer = compressor.compress_layer(w, Pool::global(), &mut rng)?;
+            compress_ms += t.elapsed().as_secs_f64() * 1e3;
+            err_num += layer.reconstruct_on(Pool::global()).fro_dist2(w);
+            err_den += w.fro_norm().powi(2);
+            layers.push(layer);
+        }
+        let stack = MethodStack::uniform(name, layers)?;
+
+        // Through the artifact: bytes out, loaded back, forwards must be
+        // bit-identical to the in-memory stack.
+        let bytes = stack.to_artifact_bytes()?;
+        let loaded = MethodStack::from_artifact_bytes(&bytes)?;
+        let mut x = Mat::zeros(d, 4);
+        Pcg64::seed(29).fill_normal(x.as_mut_slice());
+        let serve_ok = loaded.forward_batch(&x) == stack.forward_batch(&x);
+
+        println!(
+            "{:<11} {:>12.4e} {:>9.3} {:>9.3} {:>12} {:>11.0} {:>9}",
+            name,
+            err_num / err_den,
+            stack.declared_bits() as f64 / params as f64,
+            bytes.len() as f64 * 8.0 / params as f64,
+            bytes.len(),
+            compress_ms,
+            if serve_ok { "bit-exact" } else { "MISMATCH" },
+        );
+        assert!(serve_ok, "{name}: loaded artifact must forward bit-exactly");
+    }
+    println!(
+        "\nbpp_decl = App. H accounting; bpp_disk = actual .lb2 v2 bytes (f32 scales,\n\
+         tail-word padding, framing — and the f32 reconstruction for rtn/billm's\n\
+         dense serving form). See EXPERIMENTS.md §Artifact for the reconciliation."
+    );
+    Ok(())
+}

@@ -31,6 +31,7 @@ use littlebit2::littlebit::{
 };
 use littlebit2::model::PackedStack;
 use littlebit2::parallel::Pool;
+use littlebit2::quant::MethodSpec;
 use littlebit2::rng::{derive_seed, Pcg64};
 use littlebit2::spectral::{synth_weight, SynthSpec};
 
@@ -61,7 +62,7 @@ fn main() {
             .map(|k| CompressionJob {
                 name: format!("layer{k}"),
                 input: JobInput::Synth { spec: spec.clone(), seed: derive_seed(7, 2 * k as u64) },
-                cfg: cfg.clone(),
+                method: MethodSpec::LittleBit2(cfg.clone()),
                 seed: derive_seed(7, 2 * k as u64 + 1),
             })
             .collect()
@@ -75,10 +76,10 @@ fn main() {
         let mut packed = Vec::with_capacity(layers);
         run_compression_jobs_streaming(mk_jobs(), jobs_n, |_, outcome| {
             stages.accumulate(&outcome.result.report);
-            packed.push(outcome.packed);
+            packed.push(outcome.layer.into_packed().expect("littlebit2 layer"));
             Ok(())
         })
-        .expect("infallible sink");
+        .expect("infallible jobs");
         let wall = t0.elapsed().as_secs_f64();
         let bytes = PackedStack::new(packed).to_artifact_bytes().expect("encode artifact");
         (wall, stages, bytes)

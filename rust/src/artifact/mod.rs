@@ -7,13 +7,13 @@
 //! OneBit/BTC-LLM-style sign-matrix + scale artifact contract, specialized
 //! to the tri-scale residual stack this reproduction deploys.
 //!
-//! ## Container layout (version 1, all integers little-endian)
+//! ## Container layout (versions 1–2, all integers little-endian)
 //!
 //! ```text
 //! ┌──────────────────────────────────────────────────────────────────┐
 //! │ magic   4 B   89 4C 42 32  ("\x89LB2" — high bit catches text    │
 //! │                             mangling, PNG-style)                 │
-//! │ version 4 B   u32 = 1                                            │
+//! │ version 4 B   u32 = 1 or 2                                       │
 //! ├──────────────────────────────────────────────────────────────────┤
 //! │ section ×N:   tag 4 B │ len u64 │ payload len B                  │
 //! ├──────────────────────────────────────────────────────────────────┤
@@ -30,50 +30,96 @@
 //! trailer all fail with `Err` before a single section is handed out —
 //! never a panic, never silently-wrong weights.
 //!
-//! ## Model payload (what [`crate::model::PackedStack::save`] writes)
+//! ## Model payload, format v2 (what [`crate::model::MethodStack::save`]
+//! and [`crate::model::PackedStack::save`] write)
 //!
 //! ```text
 //! "META"  tool-info bytes (crate version string; informational only)
 //! "STAK"  shape header: u32 depth, then depth × (u32 d_in, u32 d_out,
-//!         u32 n_paths) — the ArchSpec-style shape table, cross-checked
+//!         u32 n_paths) — n_paths is the residual path count for packed
+//!         layers and 0 for every other serving form; cross-checked
 //!         against the layer sections on load
-//! "LAYR"  × depth, in chain order:
-//!           u32 n_paths
-//!           per path: u32 d_out │ u32 d_in │ u32 rank
-//!                     h  d_out × f32   (row scale)
-//!                     l  rank  × f32   (latent scale)
-//!                     g  d_in  × f32   (column scale)
-//!                     U_b   d_out·⌈rank/64⌉ × u64  (packed bit-plane,
-//!                                                   BitMatrix words verbatim)
-//!                     V_bᵀ  rank·⌈d_in/64⌉  × u64  (pre-transposed, verbatim)
+//! per layer, in chain order:
+//!   "METH"  u8 variant code │ u8 name_len │ method name (ASCII,
+//!           e.g. "littlebit2", "onebit") — codes: 1 = packed,
+//!           2 = sign-scaled, 3 = dense-scaled, 4 = lowrank-fp; the
+//!           code pins the tag of the payload section that follows
+//!   then exactly one payload section:
+//!   "LAYR"  (code 1) packed tri-scale residual — identical encoding to
+//!           format v1:
+//!             u32 n_paths
+//!             per path: u32 d_out │ u32 d_in │ u32 rank
+//!                       h  d_out × f32   (row scale)
+//!                       l  rank  × f32   (latent scale)
+//!                       g  d_in  × f32   (column scale)
+//!                       U_b   d_out·⌈rank/64⌉ × u64  (packed bit-plane,
+//!                                                     BitMatrix words verbatim)
+//!                       V_bᵀ  rank·⌈d_in/64⌉  × u64  (pre-transposed)
+//!   "SGNS"  (code 2) one-level sign layer (OneBit / ARB family):
+//!             u32 d_out │ u32 d_in │ u64 declared_bits
+//!             row  d_out × f32 │ col  d_in × f32
+//!             S    d_out·⌈d_in/64⌉ × u64  (packed sign(W), verbatim)
+//!   "DNSE"  (code 3) dense reconstruction (RTN / BiLLM):
+//!             u32 d_out │ u32 d_in │ u64 declared_bits
+//!             W    d_out·d_in × f32  (row-major)
+//!   "LOWR"  (code 4) FP16 truncated-SVD factors (Strategy A):
+//!             u32 d_out │ u32 d_in │ u32 rank │ u64 declared_bits
+//!             U    d_out·rank × f32 │ Vᵀ  rank·d_in × f32  (row-major)
 //! ```
+//!
+//! A **format v1** payload is the v2 layout minus the METH sections (LAYR
+//! only — the PR 3/4 era wrote packed stacks exclusively); the reader
+//! decodes it as an all-`Packed` `littlebit2` stack with bit-identical
+//! forwards, and [`write_stack_v1`] keeps the v1 encoding producible for
+//! back-compat fixtures.
 //!
 //! Bit-planes are stored as the kernel-native packed `u64` words, so
 //! loading is a straight copy — no re-packing, no float round-trips — and
 //! a loaded stack's `forward_batch` is **bit-identical** to the stack that
-//! was saved (asserted by `tests/artifact_roundtrip.rs`).
+//! was saved (asserted by `tests/artifact_roundtrip.rs` and
+//! `tests/method_stack.rs`, the latter per method).
 
 mod reader;
 mod stack;
 mod writer;
 
 pub use reader::ArtifactReader;
-pub use stack::{load_stack, read_stack, save_stack, write_stack, StackStreamWriter};
+pub use stack::{
+    load_method_stack, load_stack, read_method_stack, read_stack, save_method_stack,
+    save_stack, write_method_stack, write_stack, write_stack_v1, StackStreamWriter,
+};
 pub use writer::ArtifactWriter;
 
 /// File magic: `\x89LB2`. The non-ASCII lead byte makes accidental
 /// text-mode transcoding fail the very first check.
 pub const MAGIC: [u8; 4] = [0x89, b'L', b'B', b'2'];
 
-/// Container format version written by this build.
-pub const FORMAT_VERSION: u32 = 1;
+/// Container format version written by this build (v2: method-generic
+/// stacks — a METHOD tag plus a per-variant payload section per layer).
+pub const FORMAT_VERSION: u32 = 2;
+
+/// The PR 3/4 era format: packed tri-scale layers only, no METHOD tags.
+/// Still fully readable (a v1 artifact loads as an all-`Packed`
+/// `littlebit2` stack, bit-identically); [`write_stack_v1`] keeps the
+/// encoding producible for back-compat fixtures.
+pub const FORMAT_VERSION_V1: u32 = 1;
 
 /// Tool-info section (informational bytes; content is not validated).
 pub const TAG_META: [u8; 4] = *b"META";
 /// Shape-header section: depth + per-layer `(d_in, d_out, n_paths)`.
 pub const TAG_STACK: [u8; 4] = *b"STAK";
-/// One packed layer (repeated `depth` times, in chain order).
+/// One packed tri-scale layer (v1: repeated `depth` times; v2: the
+/// payload section of a `Packed` METHOD entry).
 pub const TAG_LAYER: [u8; 4] = *b"LAYR";
+/// v2 per-layer method header: variant code + method name. Each METH
+/// section is immediately followed by its variant's payload section.
+pub const TAG_METHOD: [u8; 4] = *b"METH";
+/// v2 payload: one-level sign-GEMM layer (`row ⊙ (S · (col ⊙ x))`).
+pub const TAG_SIGN: [u8; 4] = *b"SGNS";
+/// v2 payload: dense f32 reconstruction with declared storage bits.
+pub const TAG_DENSE: [u8; 4] = *b"DNSE";
+/// v2 payload: FP16-rounded low-rank factors (`U`, `Vᵀ`).
+pub const TAG_LOWRANK: [u8; 4] = *b"LOWR";
 /// Trailer: section count + CRC32. Always last; nothing may follow it.
 pub const TAG_END: [u8; 4] = *b"END\0";
 

@@ -1,19 +1,21 @@
 //! Validating `.lb2` section reader.
 
-use super::{crc_finish, crc_update, CRC_INIT, FORMAT_VERSION, MAGIC, TAG_END};
+use super::{crc_finish, crc_update, CRC_INIT, FORMAT_VERSION, FORMAT_VERSION_V1, MAGIC, TAG_END};
 use anyhow::{bail, Result};
 use std::ops::Range;
 
 /// Reads a `.lb2` container from a byte slice.
 ///
 /// All validation happens in [`new`](Self::new), before any section is
-/// handed out: magic, format version, every section length bounds-checked
+/// handed out: magic, format version (1 or 2 — payload decoding dispatches
+/// on [`version`](Self::version)), every section length bounds-checked
 /// against the buffer, the trailer's section count, the CRC32 of every
 /// byte preceding the CRC field, and absence of trailing garbage. A file
 /// truncated at *any* byte or with *any* bit flipped fails here with
 /// `Err` — never a panic, never silently-wrong sections.
 pub struct ArtifactReader<'a> {
     buf: &'a [u8],
+    version: u32,
     sections: Vec<([u8; 4], Range<usize>)>,
     next: usize,
 }
@@ -28,8 +30,10 @@ impl<'a> ArtifactReader<'a> {
             bail!("bad magic {:02x?} (not a .lb2 artifact)", &buf[..4]);
         }
         let version = u32::from_le_bytes(buf[4..8].try_into().expect("4 bytes"));
-        if version != FORMAT_VERSION {
-            bail!("unsupported .lb2 format version {version} (this build reads {FORMAT_VERSION})");
+        if version != FORMAT_VERSION && version != FORMAT_VERSION_V1 {
+            bail!(
+                "unsupported .lb2 format version {version} (this build reads {FORMAT_VERSION_V1}-{FORMAT_VERSION})"
+            );
         }
 
         let mut sections = Vec::new();
@@ -76,7 +80,13 @@ impl<'a> ArtifactReader<'a> {
             sections.push((tag, body..body + len));
             pos = body + len;
         }
-        Ok(Self { buf, sections, next: 0 })
+        Ok(Self { buf, version, sections, next: 0 })
+    }
+
+    /// The container's declared format version (1 or 2) — payload decoders
+    /// dispatch on this.
+    pub fn version(&self) -> u32 {
+        self.version
     }
 
     /// Number of sections (trailer excluded).

@@ -1,44 +1,124 @@
-//! `PackedStack` ⇄ `.lb2` payload encoding.
+//! Model stacks ⇄ `.lb2` payload encoding — method-generic since format
+//! v2.
 //!
-//! The encoding is the kernel-native representation verbatim: packed
-//! bit-plane `u64` words ([`BitMatrix::words`]) and `f32` scale vectors,
-//! so save→load round-trips are straight copies and the loaded stack's
-//! forwards are bit-identical to the saved one's. Decoding validates
-//! every length against the section size *before* allocating, rejects
-//! set padding bits, and re-checks path/chain shape consistency — a
-//! corrupt or truncated artifact is an `Err`, never a panic or garbage
-//! weights.
+//! The encoding is the serving representation verbatim: packed bit-plane
+//! `u64` words ([`BitMatrix::words`]) and `f32` vectors, so save→load
+//! round-trips are straight copies and the loaded stack's forwards are
+//! bit-identical to the saved one's — **for every method variant**, not
+//! just the packed tri-scale path. Decoding validates every length
+//! against the section size *before* allocating, rejects set padding
+//! bits, pins every METHOD tag to its payload section, and re-checks
+//! path/chain shape consistency — a corrupt or truncated artifact is an
+//! `Err`, never a panic or garbage weights.
+//!
+//! A format-v1 artifact (PR 3/4 era: packed layers only, no METHOD
+//! sections) decodes as an all-`Packed` `littlebit2` [`MethodStack`],
+//! bit-identically; [`write_stack_v1`] keeps that encoding producible so
+//! back-compat fixtures never rot.
 
-use super::{ArtifactReader, ArtifactWriter, TAG_LAYER, TAG_META, TAG_STACK};
-use crate::model::PackedStack;
+use super::{
+    ArtifactReader, ArtifactWriter, TAG_DENSE, TAG_LAYER, TAG_LOWRANK, TAG_META, TAG_METHOD,
+    TAG_SIGN, TAG_STACK,
+};
+use crate::linalg::Mat;
+use crate::model::{
+    DenseScaledLayer, LowRankFpLayer, MethodLayer, MethodStack, MethodStackLayer, PackedStack,
+    SignScaledLayer,
+};
 use crate::packing::{BitMatrix, PackedResidual, TriScaleLayer};
 use anyhow::{bail, Context, Result};
 use std::io::Write;
 use std::path::Path;
 
-/// Serialize a stack into `.lb2` container bytes on `sink`.
+/// Per-layer METHOD variant codes (the first byte of a METH section).
+const VARIANT_PACKED: u8 = 1;
+const VARIANT_SIGN: u8 = 2;
+const VARIANT_DENSE: u8 = 3;
+const VARIANT_LOWRANK: u8 = 4;
+
+/// Serialize a packed stack into `.lb2` **v2** container bytes on `sink`
+/// (every layer tagged `littlebit2`).
 ///
 /// Byte-identical to streaming the same layers through
 /// [`StackStreamWriter`] — both paths share the header and layer encoders.
 pub fn write_stack<W: Write>(stack: &PackedStack, sink: W) -> Result<W> {
-    let layers = stack.layers();
-    let shapes: Vec<(usize, usize, usize)> = layers
+    let shapes: Vec<(usize, usize, usize)> = stack
+        .layers()
         .iter()
         .map(|l| (l.d_in(), l.d_out(), l.paths().len()))
         .collect();
     let mut w = begin_stack(sink, &shapes)?;
-    for layer in layers {
+    for layer in stack.layers() {
+        emit_packed_layer(&mut w, "littlebit2", layer)?;
+    }
+    w.finish()
+}
+
+/// Emit one packed layer's v2 METH + LAYR section pair — the single wire
+/// emitter shared by the batch writers and the streaming
+/// [`StackStreamWriter`], so the two paths cannot drift byte-wise.
+fn emit_packed_layer<W: Write>(
+    w: &mut ArtifactWriter<W>,
+    method: &str,
+    layer: &PackedResidual,
+) -> Result<()> {
+    w.section(TAG_METHOD, &encode_method_header(VARIANT_PACKED, method)?)?;
+    w.section(TAG_LAYER, &encode_layer(layer)?)
+}
+
+/// Serialize a method-generic stack into `.lb2` v2 container bytes.
+pub fn write_method_stack<W: Write>(stack: &MethodStack, sink: W) -> Result<W> {
+    let shapes: Vec<(usize, usize, usize)> =
+        stack.layers().iter().map(|l| shape_of(&l.layer)).collect();
+    let mut w = begin_stack(sink, &shapes)?;
+    for l in stack.layers() {
+        append_method_layer(&mut w, &l.method, &l.layer)?;
+    }
+    w.finish()
+}
+
+/// Serialize a packed stack in the **frozen v1** encoding (no METHOD
+/// sections) — byte-identical to what PR 3/4 builds wrote. Kept as a pub
+/// emitter so back-compat tests can fabricate v1 fixtures forever; new
+/// artifacts are always v2.
+pub fn write_stack_v1<W: Write>(stack: &PackedStack, sink: W) -> Result<W> {
+    let shapes: Vec<(usize, usize, usize)> = stack
+        .layers()
+        .iter()
+        .map(|l| (l.d_in(), l.d_out(), l.paths().len()))
+        .collect();
+    let mut w = ArtifactWriter::with_version(sink, super::FORMAT_VERSION_V1)?;
+    write_stack_header(&mut w, &shapes)?;
+    for layer in stack.layers() {
         w.section(TAG_LAYER, &encode_layer(layer)?)?;
     }
     w.finish()
 }
 
-/// Open an `.lb2` container on `sink` and emit the META + STAK sections
+/// `(d_in, d_out, n_paths)` as the STAK shape table declares it: residual
+/// path count for packed layers, 0 for every other serving form.
+fn shape_of(layer: &MethodLayer) -> (usize, usize, usize) {
+    let n_paths = match layer {
+        MethodLayer::Packed(p) => p.paths().len(),
+        _ => 0,
+    };
+    (layer.d_in(), layer.d_out(), n_paths)
+}
+
+/// Open a v2 `.lb2` container on `sink` and emit the META + STAK sections
 /// for a stack with the given per-layer `(d_in, d_out, n_paths)` shapes.
-/// Shared by [`write_stack`] and [`StackStreamWriter`] so the two paths
+/// Shared by every batch writer and [`StackStreamWriter`] so the paths
 /// cannot drift byte-wise.
 fn begin_stack<W: Write>(sink: W, shapes: &[(usize, usize, usize)]) -> Result<ArtifactWriter<W>> {
     let mut w = ArtifactWriter::new(sink)?;
+    write_stack_header(&mut w, shapes)?;
+    Ok(w)
+}
+
+fn write_stack_header<W: Write>(
+    w: &mut ArtifactWriter<W>,
+    shapes: &[(usize, usize, usize)],
+) -> Result<()> {
     w.section(TAG_META, format!("littlebit2 {}", crate::VERSION).as_bytes())?;
     let mut head = Vec::with_capacity(4 + shapes.len() * 12);
     head.extend_from_slice(&u32_of(shapes.len(), "depth")?.to_le_bytes());
@@ -48,11 +128,42 @@ fn begin_stack<W: Write>(sink: W, shapes: &[(usize, usize, usize)]) -> Result<Ar
         head.extend_from_slice(&u32_of(n_paths, "path count")?.to_le_bytes());
     }
     w.section(TAG_STACK, &head)?;
-    Ok(w)
+    Ok(())
 }
 
-/// Deserialize a stack from `.lb2` container bytes.
+/// Emit one layer's METH + payload section pair.
+fn append_method_layer<W: Write>(
+    w: &mut ArtifactWriter<W>,
+    method: &str,
+    layer: &MethodLayer,
+) -> Result<()> {
+    match layer {
+        MethodLayer::Packed(l) => emit_packed_layer(w, method, l)?,
+        MethodLayer::SignScaled(l) => {
+            w.section(TAG_METHOD, &encode_method_header(VARIANT_SIGN, method)?)?;
+            w.section(TAG_SIGN, &encode_sign_layer(l)?)?;
+        }
+        MethodLayer::DenseScaled(l) => {
+            w.section(TAG_METHOD, &encode_method_header(VARIANT_DENSE, method)?)?;
+            w.section(TAG_DENSE, &encode_dense_layer(l)?)?;
+        }
+        MethodLayer::LowRankFp(l) => {
+            w.section(TAG_METHOD, &encode_method_header(VARIANT_LOWRANK, method)?)?;
+            w.section(TAG_LOWRANK, &encode_lowrank_layer(l)?)?;
+        }
+    }
+    Ok(())
+}
+
+/// Deserialize a **packed** stack from `.lb2` bytes (v1 or v2). A v2
+/// artifact containing any non-packed method layer is an `Err` naming the
+/// offending layer — use [`read_method_stack`] for those.
 pub fn read_stack(bytes: &[u8]) -> Result<PackedStack> {
+    read_method_stack(bytes)?.try_into_packed()
+}
+
+/// Deserialize a method-generic stack from `.lb2` bytes, v1 or v2.
+pub fn read_method_stack(bytes: &[u8]) -> Result<MethodStack> {
     let mut r = ArtifactReader::new(bytes)?;
 
     let (tag, _meta) = r.next_section().context("empty artifact: no META section")?;
@@ -88,75 +199,140 @@ pub fn read_stack(bytes: &[u8]) -> Result<PackedStack> {
     }
     cur.done("STAK")?;
 
+    let v1 = r.version() == super::FORMAT_VERSION_V1;
     let mut layers = Vec::with_capacity(depth);
     for (k, &(d_in, d_out, n_paths)) in shapes.iter().enumerate() {
-        let (tag, body) = r
-            .next_section()
-            .with_context(|| format!("missing LAYR section for layer {k}"))?;
-        if tag != TAG_LAYER {
-            bail!("expected LAYR section for layer {k}, found {tag:?}");
-        }
-        let layer = decode_layer(body).with_context(|| format!("layer {k}"))?;
-        if layer.d_in() != d_in || layer.d_out() != d_out || layer.paths().len() != n_paths {
+        let (method, layer) = if v1 {
+            // v1: packed layers only, no METHOD sections.
+            let (tag, body) = r
+                .next_section()
+                .with_context(|| format!("missing LAYR section for layer {k}"))?;
+            if tag != TAG_LAYER {
+                bail!("expected LAYR section for layer {k}, found {tag:?}");
+            }
+            let layer = decode_layer(body).with_context(|| format!("layer {k}"))?;
+            ("littlebit2".to_string(), MethodLayer::Packed(layer))
+        } else {
+            let (tag, body) = r
+                .next_section()
+                .with_context(|| format!("missing METH section for layer {k}"))?;
+            if tag != TAG_METHOD {
+                bail!("expected METH section for layer {k}, found {tag:?}");
+            }
+            let (variant, method) =
+                decode_method_header(body).with_context(|| format!("layer {k}"))?;
+            let (tag, body) = r
+                .next_section()
+                .with_context(|| format!("missing payload section for layer {k}"))?;
+            let layer = decode_variant_payload(variant, tag, body)
+                .with_context(|| format!("layer {k} ({method})"))?;
+            (method, layer)
+        };
+        if layer.d_in() != d_in || layer.d_out() != d_out {
             bail!(
-                "layer {k} is {}x{} with {} paths but the shape header says {d_out}x{d_in} with {n_paths}",
+                "layer {k} is {}x{} but the shape header says {d_out}x{d_in}",
                 layer.d_out(),
-                layer.d_in(),
-                layer.paths().len()
+                layer.d_in()
             );
         }
-        layers.push(layer);
+        let layer_paths = match &layer {
+            MethodLayer::Packed(p) => p.paths().len(),
+            _ => 0,
+        };
+        if layer_paths != n_paths {
+            bail!(
+                "layer {k} carries {layer_paths} residual paths but the shape header declares {n_paths}"
+            );
+        }
+        layers.push(MethodStackLayer { method, layer });
     }
     if r.next_section().is_some() {
         bail!("unexpected extra sections after layer {depth}");
     }
-    PackedStack::try_new(layers)
+    MethodStack::try_new(layers)
 }
 
-/// Save a stack to a `.lb2` file (written via a temp file + rename, so a
+/// Dispatch a METH variant code to its payload decoder, pinning the
+/// payload section's tag to the declared variant first.
+fn decode_variant_payload(variant: u8, tag: [u8; 4], body: &[u8]) -> Result<MethodLayer> {
+    let expect = match variant {
+        VARIANT_PACKED => TAG_LAYER,
+        VARIANT_SIGN => TAG_SIGN,
+        VARIANT_DENSE => TAG_DENSE,
+        VARIANT_LOWRANK => TAG_LOWRANK,
+        other => bail!("unknown METHOD variant code {other}"),
+    };
+    if tag != expect {
+        bail!("METHOD variant {variant} requires a {expect:?} payload section, found {tag:?}");
+    }
+    Ok(match variant {
+        VARIANT_PACKED => MethodLayer::Packed(decode_layer(body)?),
+        VARIANT_SIGN => MethodLayer::SignScaled(decode_sign_layer(body)?),
+        VARIANT_DENSE => MethodLayer::DenseScaled(decode_dense_layer(body)?),
+        VARIANT_LOWRANK => MethodLayer::LowRankFp(decode_lowrank_layer(body)?),
+        _ => unreachable!("variant validated above"),
+    })
+}
+
+/// Save a packed stack to a `.lb2` v2 file (temp file + rename, so a
 /// crash mid-write never leaves a half-written artifact at `path`; a
 /// failed write removes its temp file).
 pub fn save_stack(stack: &PackedStack, path: impl AsRef<Path>) -> Result<()> {
-    let path = path.as_ref();
+    save_via(path.as_ref(), |sink| write_stack(stack, sink).map(|_| ()))
+}
+
+/// Save a method-generic stack to a `.lb2` v2 file (same durability
+/// contract as [`save_stack`]).
+pub fn save_method_stack(stack: &MethodStack, path: impl AsRef<Path>) -> Result<()> {
+    save_via(path.as_ref(), |sink| write_method_stack(stack, sink).map(|_| ()))
+}
+
+/// Shared temp-file + fsync + rename save path.
+fn save_via(
+    path: &Path,
+    write: impl FnOnce(std::io::BufWriter<&mut std::fs::File>) -> Result<()>,
+) -> Result<()> {
     // Append ".tmp" to the whole file name (with_extension would *replace*
     // the last extension, making "model.v1" and "model.lb2" collide on the
     // same temp path).
     let mut tmp_name = path.as_os_str().to_os_string();
     tmp_name.push(".tmp");
     let tmp = std::path::PathBuf::from(tmp_name);
-    let write = || -> Result<()> {
+    let run = || -> Result<()> {
         let mut file = std::fs::File::create(&tmp)
             .with_context(|| format!("creating {}", tmp.display()))?;
-        write_stack(stack, std::io::BufWriter::new(&mut file))?;
+        write(std::io::BufWriter::new(&mut file))?;
         file.sync_all().with_context(|| format!("syncing {}", tmp.display()))?;
         std::fs::rename(&tmp, path)
             .with_context(|| format!("renaming {} to {}", tmp.display(), path.display()))?;
         Ok(())
     };
-    let result = write();
+    let result = run();
     if result.is_err() {
         let _ = std::fs::remove_file(&tmp);
     }
     result
 }
 
-/// Streams a `.lb2` model artifact to disk **one layer at a time** — the
-/// bounded-memory half of `compress --jobs N`: the shape table is known up
-/// front (from the job list), so each finished layer is appended the
-/// moment the in-order committer hands it over, encoded, written, and
+/// Streams a `.lb2` v2 model artifact to disk **one layer at a time** —
+/// the bounded-memory half of `compress --jobs N`: the shape table is
+/// known up front (from the job list), so each finished layer is appended
+/// the moment the in-order committer hands it over, encoded, written, and
 /// dropped. Peak memory is one encoded layer plus the scheduler's packed
-/// reorder buffer (typically O(workers) layers; see
-/// `coordinator::jobs` for the exact bound).
+/// reorder buffer (typically O(workers) layers; see `coordinator::jobs`
+/// for the exact bound).
 ///
-/// Produces **byte-identical** files to [`save_stack`] on the same layers
-/// (both share [`write_stack`]'s encoders; asserted by
-/// `tests/compress_pipeline.rs`), with the same durability contract: the
-/// container is written to `<path>.tmp`, fsynced, and renamed into place
-/// by [`finish`](Self::finish); an abandoned or failed write removes its
+/// Produces **byte-identical** files to [`save_stack`] /
+/// [`save_method_stack`] on the same layers (all paths share the header
+/// and layer encoders; asserted by `tests/compress_pipeline.rs`), with
+/// the same durability contract: the container is written to
+/// `<path>.tmp`, fsynced, and renamed into place by
+/// [`finish`](Self::finish); an abandoned or failed write removes its
 /// temp file and never touches `path`.
 ///
 /// Appended layers are validated against the declared shape table — a
-/// mismatched layer fails fast instead of sealing a container the loader
+/// mismatched layer (or a non-packed layer where the table declared
+/// residual paths) fails fast instead of sealing a container the loader
 /// would reject.
 pub struct StackStreamWriter {
     writer: Option<ArtifactWriter<std::io::BufWriter<std::fs::File>>>,
@@ -168,7 +344,8 @@ pub struct StackStreamWriter {
 
 impl StackStreamWriter {
     /// Open `<path>.tmp` and write the container header + shape table for
-    /// a stack of `shapes = [(d_in, d_out, n_paths); depth]`.
+    /// a stack of `shapes = [(d_in, d_out, n_paths); depth]` (`n_paths` is
+    /// 0 for layers whose method has a non-packed serving form).
     pub fn create(path: impl AsRef<Path>, shapes: &[(usize, usize, usize)]) -> Result<Self> {
         let path = path.as_ref().to_path_buf();
         if shapes.is_empty() {
@@ -191,23 +368,44 @@ impl StackStreamWriter {
         Ok(Self { writer: Some(writer), shapes: shapes.to_vec(), written: 0, path, tmp })
     }
 
-    /// Append the next layer (layers must arrive in chain order). The
-    /// layer's shape is checked against the declared table.
-    pub fn append_layer(&mut self, layer: &PackedResidual) -> Result<()> {
+    /// Check the next layer's shape tuple against the declared table.
+    /// Does NOT advance the append cursor — `written` is only bumped
+    /// after the layer's sections hit the sink, so a failed append can
+    /// never satisfy [`finish`](Self::finish)'s completeness check.
+    fn admit(&self, got: (usize, usize, usize)) -> Result<()> {
         let k = self.written;
         let Some(&(d_in, d_out, n_paths)) = self.shapes.get(k) else {
             bail!("layer {k} appended but the shape table declares only {}", self.shapes.len());
         };
-        if layer.d_in() != d_in || layer.d_out() != d_out || layer.paths().len() != n_paths {
+        if got != (d_in, d_out, n_paths) {
             bail!(
                 "layer {k} is {}x{} with {} paths but the shape table says {d_out}x{d_in} with {n_paths}",
-                layer.d_out(),
-                layer.d_in(),
-                layer.paths().len()
+                got.1,
+                got.0,
+                got.2
             );
         }
+        Ok(())
+    }
+
+    /// Append the next layer under its METHOD tag (layers must arrive in
+    /// chain order). The layer's shape — including its packed path count
+    /// or 0 — is checked against the declared table.
+    pub fn append(&mut self, method: &str, layer: &MethodLayer) -> Result<()> {
+        self.admit(shape_of(layer))?;
         let w = self.writer.as_mut().expect("writer live until finish");
-        w.section(TAG_LAYER, &encode_layer(layer)?)?;
+        append_method_layer(w, method, layer)?;
+        self.written += 1;
+        Ok(())
+    }
+
+    /// [`append`](Self::append) sugar for the packed `littlebit2` path —
+    /// encodes straight from the borrowed layer (no clone of the
+    /// bit-planes; this is the bounded-memory streaming path).
+    pub fn append_layer(&mut self, layer: &PackedResidual) -> Result<()> {
+        self.admit((layer.d_in(), layer.d_out(), layer.paths().len()))?;
+        let w = self.writer.as_mut().expect("writer live until finish");
+        emit_packed_layer(w, "littlebit2", layer)?;
         self.written += 1;
         Ok(())
     }
@@ -258,7 +456,8 @@ impl Drop for StackStreamWriter {
     }
 }
 
-/// Load a stack from a `.lb2` file.
+/// Load a packed stack from a `.lb2` file (v1 or v2; every layer must be
+/// packed).
 pub fn load_stack(path: impl AsRef<Path>) -> Result<PackedStack> {
     let path = path.as_ref();
     let bytes =
@@ -266,8 +465,54 @@ pub fn load_stack(path: impl AsRef<Path>) -> Result<PackedStack> {
     read_stack(&bytes).with_context(|| format!("loading {}", path.display()))
 }
 
+/// Load a method-generic stack from a `.lb2` file, v1 or v2.
+pub fn load_method_stack(path: impl AsRef<Path>) -> Result<MethodStack> {
+    let path = path.as_ref();
+    let bytes =
+        std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    read_method_stack(&bytes).with_context(|| format!("loading {}", path.display()))
+}
+
 fn u32_of(v: usize, what: &str) -> Result<u32> {
     u32::try_from(v).map_err(|_| anyhow::anyhow!("{what} {v} exceeds the u32 format field"))
+}
+
+/// METH payload: `[variant code][name length][name bytes]`.
+fn encode_method_header(variant: u8, method: &str) -> Result<Vec<u8>> {
+    let name = method.as_bytes();
+    if name.is_empty() || name.len() > u8::MAX as usize {
+        bail!("method name must be 1-255 bytes, got {}", name.len());
+    }
+    if !name.iter().all(|b| b.is_ascii_graphic()) {
+        bail!("method name {method:?} contains non-printable or non-ASCII bytes");
+    }
+    let mut out = Vec::with_capacity(2 + name.len());
+    out.push(variant);
+    out.push(name.len() as u8);
+    out.extend_from_slice(name);
+    Ok(out)
+}
+
+fn decode_method_header(body: &[u8]) -> Result<(u8, String)> {
+    if body.len() < 2 {
+        bail!("METH section is {} bytes; need at least variant + name length", body.len());
+    }
+    let variant = body[0];
+    let name_len = body[1] as usize;
+    if name_len == 0 {
+        bail!("METH section declares an empty method name");
+    }
+    if body.len() != 2 + name_len {
+        bail!(
+            "METH section is {} bytes but declares a {name_len}-byte method name",
+            body.len()
+        );
+    }
+    let name = &body[2..];
+    if !name.iter().all(|b| b.is_ascii_graphic()) {
+        bail!("method name contains non-printable or non-ASCII bytes");
+    }
+    Ok((variant, String::from_utf8(name.to_vec()).expect("ASCII validated")))
 }
 
 fn encode_layer(layer: &PackedResidual) -> Result<Vec<u8>> {
@@ -316,6 +561,96 @@ fn decode_path(cur: &mut Cur<'_>) -> Result<TriScaleLayer> {
     TriScaleLayer::from_parts(ub, vbt, h, l, g)
 }
 
+fn encode_sign_layer(layer: &SignScaledLayer) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&u32_of(layer.d_out(), "d_out")?.to_le_bytes());
+    out.extend_from_slice(&u32_of(layer.d_in(), "d_in")?.to_le_bytes());
+    out.extend_from_slice(&layer.declared_bits().to_le_bytes());
+    for &v in layer.row_scale().iter().chain(layer.col_scale()) {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    for &w in layer.bits().words() {
+        out.extend_from_slice(&w.to_le_bytes());
+    }
+    Ok(out)
+}
+
+fn decode_sign_layer(body: &[u8]) -> Result<SignScaledLayer> {
+    let mut cur = Cur::new(body);
+    let d_out = cur.u32()? as usize;
+    let d_in = cur.u32()? as usize;
+    let declared_bits = cur.u64()?;
+    if d_out == 0 || d_in == 0 {
+        bail!("degenerate sign layer shape {d_out}x{d_in}");
+    }
+    let row = cur.f32s(d_out)?;
+    let col = cur.f32s(d_in)?;
+    let words = d_out
+        .checked_mul(d_in.div_ceil(64))
+        .context("sign word count overflow")?;
+    let bits = BitMatrix::from_words(d_out, d_in, cur.u64s(words)?)?;
+    cur.done("SGNS")?;
+    SignScaledLayer::try_new(bits, row, col, declared_bits)
+}
+
+fn encode_dense_layer(layer: &DenseScaledLayer) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&u32_of(layer.d_out(), "d_out")?.to_le_bytes());
+    out.extend_from_slice(&u32_of(layer.d_in(), "d_in")?.to_le_bytes());
+    out.extend_from_slice(&layer.declared_bits().to_le_bytes());
+    for &v in layer.weight().as_slice() {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    Ok(out)
+}
+
+fn decode_dense_layer(body: &[u8]) -> Result<DenseScaledLayer> {
+    let mut cur = Cur::new(body);
+    let d_out = cur.u32()? as usize;
+    let d_in = cur.u32()? as usize;
+    let declared_bits = cur.u64()?;
+    if d_out == 0 || d_in == 0 {
+        bail!("degenerate dense layer shape {d_out}x{d_in}");
+    }
+    let n = d_out.checked_mul(d_in).context("dense element count overflow")?;
+    let data = cur.f32s(n)?;
+    cur.done("DNSE")?;
+    DenseScaledLayer::try_new(Mat::from_vec(d_out, d_in, data), declared_bits)
+}
+
+fn encode_lowrank_layer(layer: &LowRankFpLayer) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&u32_of(layer.d_out(), "d_out")?.to_le_bytes());
+    out.extend_from_slice(&u32_of(layer.d_in(), "d_in")?.to_le_bytes());
+    out.extend_from_slice(&u32_of(layer.rank(), "rank")?.to_le_bytes());
+    out.extend_from_slice(&layer.declared_bits().to_le_bytes());
+    for &v in layer.u().as_slice().iter().chain(layer.vt().as_slice()) {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    Ok(out)
+}
+
+fn decode_lowrank_layer(body: &[u8]) -> Result<LowRankFpLayer> {
+    let mut cur = Cur::new(body);
+    let d_out = cur.u32()? as usize;
+    let d_in = cur.u32()? as usize;
+    let rank = cur.u32()? as usize;
+    let declared_bits = cur.u64()?;
+    if d_out == 0 || d_in == 0 || rank == 0 {
+        bail!("degenerate low-rank layer shape {d_out}x{d_in} rank {rank}");
+    }
+    let u_n = d_out.checked_mul(rank).context("U element count overflow")?;
+    let vt_n = rank.checked_mul(d_in).context("Vᵀ element count overflow")?;
+    let u = cur.f32s(u_n)?;
+    let vt = cur.f32s(vt_n)?;
+    cur.done("LOWR")?;
+    LowRankFpLayer::try_new(
+        Mat::from_vec(d_out, rank, u),
+        Mat::from_vec(rank, d_in, vt),
+        declared_bits,
+    )
+}
+
 /// Bounds-checked little-endian cursor over one section payload. Vector
 /// reads verify the byte count against the remaining payload *before*
 /// allocating, so a corrupt length field cannot trigger a huge allocation.
@@ -344,6 +679,10 @@ impl<'a> Cur<'a> {
 
     fn u32(&mut self) -> Result<u32> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
     }
 
     fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {

@@ -28,11 +28,22 @@ pub struct ArtifactWriter<W: Write> {
 }
 
 impl<W: Write> ArtifactWriter<W> {
-    /// Start a container: writes the magic and format version.
+    /// Start a container: writes the magic and the current format version
+    /// ([`FORMAT_VERSION`]).
     pub fn new(sink: W) -> Result<Self> {
+        Self::with_version(sink, FORMAT_VERSION)
+    }
+
+    /// Start a container at an explicit format version — the legacy-v1
+    /// emitter path ([`super::write_stack_v1`]) uses this; everything else
+    /// writes the current version via [`new`](Self::new).
+    pub fn with_version(sink: W, version: u32) -> Result<Self> {
+        if version != FORMAT_VERSION && version != super::FORMAT_VERSION_V1 {
+            anyhow::bail!("cannot write unknown .lb2 format version {version}");
+        }
         let mut w = Self { sink, crc: CRC_INIT, sections: 0 };
         w.emit(&MAGIC)?;
-        w.emit(&FORMAT_VERSION.to_le_bytes())?;
+        w.emit(&version.to_le_bytes())?;
         Ok(w)
     }
 

@@ -46,16 +46,19 @@
 
 use crate::linalg::Mat;
 use crate::littlebit::{compress_pipeline, CompressionConfig, CompressionReport};
-use crate::packing::PackedResidual;
+use crate::model::MethodLayer;
 use crate::parallel::{Pool, ScopedJob};
+use crate::quant::MethodSpec;
 use crate::rng::Pcg64;
 use crate::spectral::{synth_weight, SynthSpec};
+use anyhow::Context;
 use std::any::Any;
 use std::collections::BTreeMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::Mutex;
+use std::time::Instant;
 
 /// Where a job's weight matrix comes from. `Synth` keeps the dense matrix
 /// out of the job list entirely (it is fabricated inside the worker and
@@ -79,22 +82,30 @@ impl JobInput {
     }
 }
 
-/// One unit of work: compress the input weight under `cfg`.
+/// One unit of work: compress the input weight under `method`.
 #[derive(Clone, Debug)]
 pub struct CompressionJob {
     /// Stable identifier (e.g. "b12.q_proj").
     pub name: String,
     pub input: JobInput,
-    pub cfg: CompressionConfig,
+    /// Which quantizer runs (LittleBit-2 or any Table 1 baseline) and its
+    /// knobs — see [`MethodSpec`].
+    pub method: MethodSpec,
     /// Seed of this job's independent RNG stream
     /// (see [`crate::rng::derive_seed`]).
     pub seed: u64,
 }
 
 impl CompressionJob {
-    /// Convenience constructor for an explicit weight matrix.
+    /// Convenience constructor for an explicit weight matrix compressed
+    /// with the LittleBit-2 pipeline (the pre-method-registry call shape).
     pub fn dense(name: impl Into<String>, weight: Mat, cfg: CompressionConfig, seed: u64) -> Self {
-        Self { name: name.into(), input: JobInput::Dense(weight), cfg, seed }
+        Self {
+            name: name.into(),
+            input: JobInput::Dense(weight),
+            method: MethodSpec::LittleBit2(cfg),
+            seed,
+        }
     }
 
     /// `(d_out, d_in)` of the layer this job produces.
@@ -102,15 +113,11 @@ impl CompressionJob {
         self.input.shape()
     }
 
-    /// Residual paths the compressed layer will carry (fixed by the
-    /// config), so artifact headers can be written before any layer
-    /// finishes.
+    /// Residual paths the produced layer will carry (fixed by the method;
+    /// 0 for non-packed serving forms), so artifact shape tables can be
+    /// written before any layer finishes.
     pub fn n_paths(&self) -> usize {
-        if self.cfg.residual {
-            2
-        } else {
-            1
-        }
+        self.method.n_paths()
     }
 }
 
@@ -118,59 +125,103 @@ impl CompressionJob {
 #[derive(Clone, Debug)]
 pub struct JobResult {
     pub name: String,
+    /// Method name (`"littlebit2"`, `"onebit"`, …).
+    pub method: String,
     pub mse: f64,
+    /// Relative Frobenius error `‖W − Ŵ‖²_F / ‖W‖²_F` — the
+    /// method-comparable fidelity number the `eval` sweep reports.
+    pub rel_err: f64,
+    /// Declared bits-per-parameter (App. H accounting).
     pub bpp: f64,
+    /// Latent rank where the method has one (packed path 0 / low-rank
+    /// factor width); 0 for full-matrix serving forms.
     pub rank: usize,
-    /// Mean / max λ over path 0's latent rows (the Fig. 3 diagnostic).
-    pub lambda_mean: f64,
-    pub lambda_max: f64,
+    /// Mean / max λ over path 0's latent rows (the Fig. 3 diagnostic) —
+    /// only the littlebit pipeline exposes FP latents, so baselines
+    /// report `None`.
+    pub lambda_mean: Option<f64>,
+    pub lambda_max: Option<f64>,
     /// End-to-end wall-clock of the job (compression + scoring).
     pub wall_ms: f64,
-    /// Per-stage wall-clock of the compression itself.
+    /// Per-stage wall-clock of the compression itself (baselines fill
+    /// only `total_ms`).
     pub report: CompressionReport,
 }
 
-/// Everything the sink receives per layer: metrics plus the packed
-/// deployment form ready to stream into an artifact. The full-precision
+/// Everything the sink receives per layer: metrics plus the serving-form
+/// [`MethodLayer`] ready to stream into an artifact. The full-precision
 /// factors are dropped inside the job, so in-flight memory is the packed
 /// reorder buffer: typically O(workers) layers (layers of one model are
 /// near-uniform cost), degrading toward the model tail only if an early
 /// layer is pathologically slower than its successors.
 pub struct LayerOutcome {
     pub result: JobResult,
-    pub packed: PackedResidual,
+    pub layer: MethodLayer,
 }
 
-/// Compress one job on `pool` and score it.
-fn run_job(job: CompressionJob, pool: &Pool) -> LayerOutcome {
-    let t0 = std::time::Instant::now();
+/// Compress one job on `pool` and score it. The LittleBit-2 arm keeps the
+/// instrumented `compress_pipeline` fast path (per-stage wall-clock, λ
+/// diagnostics from the FP latents); every other method goes through its
+/// [`crate::quant::Compressor`]. Both arms are bit-identical to the trait
+/// path (asserted by `quant::compressor` tests), so the scheduler's
+/// determinism contract is method-independent.
+fn run_job(job: CompressionJob, pool: &Pool) -> anyhow::Result<LayerOutcome> {
+    let t0 = Instant::now();
     let w = match job.input {
         JobInput::Dense(w) => w,
         JobInput::Synth { spec, seed } => synth_weight(&spec, &mut Pcg64::seed(seed)),
     };
     let mut rng = Pcg64::seed(job.seed);
-    let layer = compress_pipeline(&w, &job.cfg, &mut rng, pool);
-    let recon = layer.compressed.reconstruct_on(pool);
-    let lams = layer.compressed.paths[0].u_distortions();
-    let lambda_mean = lams.iter().sum::<f64>() / lams.len().max(1) as f64;
-    let lambda_max = lams.iter().fold(0.0f64, |m, &x| m.max(x));
-    LayerOutcome {
+    let (layer, report, lambda, recon) = match &job.method {
+        MethodSpec::LittleBit2(cfg) => {
+            let out = compress_pipeline(&w, cfg, &mut rng, pool);
+            let recon = out.compressed.reconstruct_on(pool);
+            let lams = out.compressed.paths[0].u_distortions();
+            let mean = lams.iter().sum::<f64>() / lams.len().max(1) as f64;
+            let max = lams.iter().fold(0.0f64, |m, &x| m.max(x));
+            (MethodLayer::Packed(out.packed), out.report, Some((mean, max)), recon)
+        }
+        spec => {
+            let t = Instant::now();
+            let layer = spec
+                .compressor()
+                .compress_layer(&w, pool, &mut rng)
+                .with_context(|| format!("compressing {:?} with {}", job.name, spec.name()))?;
+            let report = CompressionReport {
+                total_ms: t.elapsed().as_secs_f64() * 1e3,
+                ..Default::default()
+            };
+            let recon = layer.reconstruct_on(pool);
+            (layer, report, None, recon)
+        }
+    };
+    // One pass over the recon-vs-w pairs scores both metrics (mse is
+    // dist²/N by definition — same bits as Mat::mse).
+    let dist2 = recon.fro_dist2(&w);
+    let fro = w.fro_norm().powi(2);
+    let rel_err = if fro > 0.0 { dist2 / fro } else { 0.0 };
+    Ok(LayerOutcome {
         result: JobResult {
             name: job.name,
-            mse: recon.mse(&w),
-            bpp: layer.compressed.bpp(),
-            rank: layer.compressed.paths[0].factors.rank(),
-            lambda_mean,
-            lambda_max,
+            method: job.method.name().to_string(),
+            mse: dist2 / (w.rows() * w.cols()) as f64,
+            rel_err,
+            bpp: layer.bpp(),
+            rank: layer.rank(),
+            lambda_mean: lambda.map(|(m, _)| m),
+            lambda_max: lambda.map(|(_, m)| m),
             wall_ms: t0.elapsed().as_secs_f64() * 1e3,
-            report: layer.report,
+            report,
         },
-        packed: layer.packed,
-    }
+        layer,
+    })
 }
 
 type JobPayload = Box<dyn Any + Send + 'static>;
-type Slot = Result<LayerOutcome, JobPayload>;
+/// Outer `Err` = the job panicked (payload re-raised on the caller);
+/// inner `Err` = the compressor returned an error (surfaced as the run's
+/// `Err` after earlier layers committed and in-flight work drained).
+type Slot = Result<anyhow::Result<LayerOutcome>, JobPayload>;
 type JobQueue = Mutex<std::iter::Enumerate<std::vec::IntoIter<CompressionJob>>>;
 
 /// Run all jobs across `workers` claim-loops on the shared pool, invoking
@@ -226,20 +277,29 @@ pub fn run_compression_jobs_streaming(
     // reorder buffer instead of the model depth).
     let mut pending: BTreeMap<usize, Slot> = BTreeMap::new();
     let mut next = 0usize;
-    let mut sink_err: Option<anyhow::Error> = None;
+    // First sink *or* compressor error: either cancels the queue and
+    // suppresses further commits (a stream sink must never receive layer
+    // k+1 after layer k failed — the artifact would be mis-ordered).
+    let mut first_err: Option<anyhow::Error> = None;
     let mut commit_ready = |pending: &mut BTreeMap<usize, Slot>,
                             next: &mut usize,
-                            sink_err: &mut Option<anyhow::Error>|
+                            first_err: &mut Option<anyhow::Error>|
      -> Option<JobPayload> {
         while let Some(slot) = pending.remove(next) {
             *next += 1;
             match slot {
-                Ok(outcome) => {
-                    if sink_err.is_none() {
+                Ok(Ok(outcome)) => {
+                    if first_err.is_none() {
                         if let Err(e) = sink(*next - 1, outcome) {
-                            *sink_err = Some(e);
+                            *first_err = Some(e);
                             cancel.store(true, Ordering::Relaxed);
                         }
+                    }
+                }
+                Ok(Err(e)) => {
+                    if first_err.is_none() {
+                        *first_err = Some(e);
+                        cancel.store(true, Ordering::Relaxed);
                     }
                 }
                 // Completed layers before this one are already committed;
@@ -263,7 +323,7 @@ pub fn run_compression_jobs_streaming(
             pending.insert(i, s);
         }
         if panic_payload.is_none() {
-            panic_payload = commit_ready(&mut pending, &mut next, &mut sink_err);
+            panic_payload = commit_ready(&mut pending, &mut next, &mut first_err);
             if panic_payload.is_some() {
                 cancel.store(true, Ordering::Relaxed);
             }
@@ -277,12 +337,12 @@ pub fn run_compression_jobs_streaming(
         pending.insert(i, s);
     }
     if panic_payload.is_none() {
-        panic_payload = commit_ready(&mut pending, &mut next, &mut sink_err);
+        panic_payload = commit_ready(&mut pending, &mut next, &mut first_err);
     }
     if let Some(payload) = panic_payload {
         std::panic::resume_unwind(payload);
     }
-    if let Some(e) = sink_err {
+    if let Some(e) = first_err {
         return Err(e);
     }
     Ok(())
@@ -290,16 +350,18 @@ pub fn run_compression_jobs_streaming(
 
 /// Run all jobs on `workers` claim-loops; results return in job order.
 /// The collect-everything convenience over
-/// [`run_compression_jobs_streaming`] — packed layers are dropped, only
-/// the metrics survive.
-pub fn run_compression_jobs(jobs: Vec<CompressionJob>, workers: usize) -> Vec<JobResult> {
+/// [`run_compression_jobs_streaming`] — serving-form layers are dropped,
+/// only the metrics survive. `Err` on the first compressor failure.
+pub fn run_compression_jobs(
+    jobs: Vec<CompressionJob>,
+    workers: usize,
+) -> anyhow::Result<Vec<JobResult>> {
     let mut out = Vec::with_capacity(jobs.len());
     run_compression_jobs_streaming(jobs, workers, |_, outcome| {
         out.push(outcome.result);
         Ok(())
-    })
-    .expect("infallible sink");
-    out
+    })?;
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -315,12 +377,12 @@ mod tests {
                 CompressionJob {
                     name: format!("layer{i}"),
                     input: JobInput::Synth { spec, seed: derive_seed(5, i as u64) },
-                    cfg: CompressionConfig {
+                    method: MethodSpec::LittleBit2(CompressionConfig {
                         bpp: 1.2,
                         strategy: InitStrategy::JointItq { iters: 10 },
                         residual: true,
                         ..Default::default()
-                    },
+                    }),
                     seed: 100 + i as u64,
                 }
             })
@@ -329,7 +391,7 @@ mod tests {
 
     #[test]
     fn results_in_job_order() {
-        let res = run_compression_jobs(jobs(6), 3);
+        let res = run_compression_jobs(jobs(6), 3).unwrap();
         let names: Vec<_> = res.iter().map(|r| r.name.as_str()).collect();
         assert_eq!(names, vec!["layer0", "layer1", "layer2", "layer3", "layer4", "layer5"]);
     }
@@ -342,7 +404,7 @@ mod tests {
             let mut packed = Vec::new();
             let mut results = Vec::new();
             run_compression_jobs_streaming(jobs(4), workers, |_, oc| {
-                packed.push(oc.packed);
+                packed.push(oc.layer.into_packed().expect("littlebit2 layer"));
                 results.push(oc.result);
                 Ok(())
             })
@@ -379,16 +441,18 @@ mod tests {
         let dense = run_compression_jobs(
             vec![CompressionJob::dense("l", w, cfg.clone(), 9)],
             1,
-        );
+        )
+        .unwrap();
         let synth = run_compression_jobs(
             vec![CompressionJob {
                 name: "l".into(),
                 input: JobInput::Synth { spec, seed: 77 },
-                cfg,
+                method: MethodSpec::LittleBit2(cfg),
                 seed: 9,
             }],
             1,
-        );
+        )
+        .unwrap();
         assert_eq!(dense[0].mse.to_bits(), synth[0].mse.to_bits());
     }
 
@@ -427,19 +491,89 @@ mod tests {
 
     #[test]
     fn empty_job_list() {
-        assert!(run_compression_jobs(Vec::new(), 4).is_empty());
+        assert!(run_compression_jobs(Vec::new(), 4).unwrap().is_empty());
     }
 
     #[test]
     fn reports_sane_metrics() {
-        let res = run_compression_jobs(jobs(2), 2);
+        let res = run_compression_jobs(jobs(2), 2).unwrap();
         for r in res {
+            assert_eq!(r.method, "littlebit2");
             assert!(r.mse.is_finite() && r.mse >= 0.0);
+            assert!(r.rel_err.is_finite() && r.rel_err >= 0.0 && r.rel_err < 1.0);
             assert!(r.bpp > 0.0 && r.bpp <= 1.3);
             assert!(r.rank >= 1);
-            assert!(r.lambda_mean > 0.0 && r.lambda_max >= r.lambda_mean);
+            let (lm, lx) = (r.lambda_mean.unwrap(), r.lambda_max.unwrap());
+            assert!(lm > 0.0 && lx >= lm);
             assert!(r.report.svd_ms > 0.0 && r.wall_ms >= r.report.total_ms);
             assert!(r.report.total_ms + 1e-9 >= r.report.stage_ms());
         }
+    }
+
+    /// Mixed-method job lists flow through one scheduler run: every
+    /// method's layer arrives in order, tagged, with baseline λ = None.
+    #[test]
+    fn mixed_method_jobs_stream_in_order() {
+        let spec = SynthSpec { rows: 48, cols: 48, gamma: 0.3, coherence: 0.6, scale: 1.0 };
+        let methods = [
+            MethodSpec::LittleBit2(CompressionConfig { bpp: 1.0, ..Default::default() }),
+            MethodSpec::OneBit { als_iters: 10 },
+            MethodSpec::Rtn { k: 2, group: 32 },
+            MethodSpec::TinyRankFp16 { bpp: 1.0 },
+        ];
+        let jobs: Vec<CompressionJob> = methods
+            .iter()
+            .enumerate()
+            .map(|(i, m)| CompressionJob {
+                name: format!("l{i}"),
+                input: JobInput::Synth { spec: spec.clone(), seed: derive_seed(3, i as u64) },
+                method: m.clone(),
+                seed: derive_seed(4, i as u64),
+            })
+            .collect();
+        let mut seen = Vec::new();
+        run_compression_jobs_streaming(jobs, 3, |idx, oc| {
+            // rel_err can exceed 1 only for the known 2-bit RTN collapse
+            // on spiky weights; everything stays finite and bounded.
+            assert!(oc.result.rel_err < 4.0, "{}: rel_err {}", oc.result.method, oc.result.rel_err);
+            if oc.result.method != "littlebit2" {
+                assert!(oc.result.lambda_mean.is_none());
+            }
+            seen.push((idx, oc.result.method.clone()));
+            Ok(())
+        })
+        .unwrap();
+        let want: Vec<(usize, String)> = ["littlebit2", "onebit", "rtn", "tinyrank"]
+            .iter()
+            .enumerate()
+            .map(|(i, m)| (i, m.to_string()))
+            .collect();
+        assert_eq!(seen, want);
+    }
+
+    /// A compressor error (not a panic) surfaces as the run's `Err` after
+    /// earlier layers committed — and never reaches the sink out of order.
+    #[test]
+    fn compressor_error_surfaces_as_err() {
+        let spec = SynthSpec { rows: 32, cols: 32, gamma: 0.3, coherence: 0.6, scale: 1.0 };
+        let mk = |i: usize, method: MethodSpec| CompressionJob {
+            name: format!("l{i}"),
+            input: JobInput::Synth { spec: spec.clone(), seed: i as u64 },
+            method,
+            seed: 10 + i as u64,
+        };
+        let jobs = vec![
+            mk(0, MethodSpec::OneBit { als_iters: 5 }),
+            mk(1, MethodSpec::Rtn { k: 0, group: 128 }), // invalid bit width
+            mk(2, MethodSpec::OneBit { als_iters: 5 }),
+        ];
+        let mut committed = Vec::new();
+        let err = run_compression_jobs_streaming(jobs, 1, |idx, _| {
+            committed.push(idx);
+            Ok(())
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("l1"), "{err}");
+        assert_eq!(committed, vec![0], "only the layer before the failure commits");
     }
 }

@@ -30,8 +30,8 @@ pub use jobs::{
 pub use metrics::Metrics;
 pub use params::ParamStore;
 pub use server::{
-    BatchBackend, InferenceServer, PackedResidualBackend, PackedStackBackend, Request, Response,
-    ServerConfig, ServerStats,
+    BatchBackend, InferenceServer, MethodStackBackend, PackedResidualBackend, PackedStackBackend,
+    Request, Response, ServerConfig, ServerStats,
 };
 #[cfg(feature = "xla")]
 pub use trainer::{QakdOutcome, QatDriver, StudentVariant, TrainTrace};

@@ -19,7 +19,7 @@
 //! one request = one token-step here) are tracked for the §6.2 experiments.
 
 use crate::linalg::Mat;
-use crate::model::PackedStack;
+use crate::model::{MethodStack, PackedStack};
 use crate::packing::{BatchScratch, PackedResidual, SignPool};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
@@ -148,6 +148,35 @@ impl PackedStackBackend {
 }
 
 impl BatchBackend for PackedStackBackend {
+    fn forward_batch_into(&mut self, x: &Mat, y: &mut Mat) {
+        let pool = SignPool::for_threads(self.threads);
+        self.model.forward_batch_into(x, y, &mut self.scratch, pool, self.threads);
+    }
+}
+
+/// The method-generic production backend: a [`MethodStack`] chain —
+/// typically loaded from a `.lb2` v2 artifact, possibly mixing methods
+/// per layer — driven through the uniform batched pipeline. Serving
+/// dispatches on each layer's serving form (packed tri-scale, one-level
+/// sign, dense, low-rank) with the same feature-major zero-dispatch
+/// contract as [`PackedStackBackend`]; this is what `serve --model`
+/// runs, so every Table 1 baseline is servable, not just LittleBit-2.
+pub struct MethodStackBackend {
+    model: Arc<MethodStack>,
+    threads: usize,
+    scratch: BatchScratch,
+}
+
+impl MethodStackBackend {
+    /// `threads` is the row-parallelism inside one batch execution (1 =
+    /// serial kernels); worker-level parallelism is
+    /// [`ServerConfig::workers`].
+    pub fn new(model: Arc<MethodStack>, threads: usize) -> Self {
+        Self { model, threads, scratch: BatchScratch::default() }
+    }
+}
+
+impl BatchBackend for MethodStackBackend {
     fn forward_batch_into(&mut self, x: &Mat, y: &mut Mat) {
         let pool = SignPool::for_threads(self.threads);
         self.model.forward_batch_into(x, y, &mut self.scratch, pool, self.threads);
@@ -714,6 +743,53 @@ mod tests {
             backend.forward_batch_into(&x, &mut y);
             assert_eq!(y, stack.forward_batch(&x), "b={b}");
         }
+    }
+
+    /// The method-generic stack backend (what `serve --model model.lb2`
+    /// runs since format v2) must serve a non-LittleBit-2 method
+    /// bit-identically to the stack's direct batched forward.
+    #[test]
+    fn method_stack_backend_serves_baseline_methods_bit_exactly() {
+        use crate::model::MethodStack;
+        use crate::parallel::Pool;
+        use crate::quant::MethodSpec;
+        use crate::rng::Pcg64;
+        use crate::spectral::{synth_weight, SynthSpec};
+
+        let mut rng = Pcg64::seed(91);
+        let spec = SynthSpec { rows: 56, cols: 56, gamma: 0.3, coherence: 0.6, scale: 1.0 };
+        let w = synth_weight(&spec, &mut rng);
+        let layer = MethodSpec::OneBit { als_iters: 10 }
+            .compressor()
+            .compress_layer(&w, Pool::serial(), &mut rng)
+            .unwrap();
+        let stack = Arc::new(MethodStack::uniform("onebit", vec![layer]).unwrap());
+
+        let server = InferenceServer::start_pool(
+            ServerConfig { workers: 2, max_wait: Duration::from_millis(1), ..Default::default() },
+            |_worker| MethodStackBackend::new(Arc::clone(&stack), 2),
+        );
+        let mut inputs = Vec::new();
+        for _ in 0..8 {
+            let mut x = vec![0.0f32; 56];
+            rng.fill_normal(&mut x);
+            inputs.push(x);
+        }
+        let rxs: Vec<_> = inputs
+            .iter()
+            .enumerate()
+            .map(|(i, x)| server.submit(i as u64, x.clone()))
+            .collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let resp = rx.recv().unwrap();
+            let want = stack.forward(&inputs[i]);
+            for (j, (a, b)) in resp.output.iter().zip(&want).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "request {i} output {j}");
+            }
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.served, 8);
+        assert_eq!(stats.failed, 0);
     }
 
     /// The packed backend returns the same numbers the dense reconstruction

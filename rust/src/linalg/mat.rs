@@ -177,13 +177,35 @@ impl Mat {
     /// element), so the result is bit-identical to [`matmul`](Self::matmul)
     /// for any thread count. Products under [`PAR_MIN_FLOPS`] stay inline.
     pub fn matmul_on(&self, other: &Mat, pool: &Pool) -> Mat {
+        let mut out = Mat::default();
+        self.matmul_into_on(other, &mut out, pool);
+        out
+    }
+
+    /// [`matmul_on`](Self::matmul_on) into a caller-owned output buffer:
+    /// `out` is resized to `m × n` in place (reusing its allocation), so a
+    /// steady-state serving loop performs zero heap allocations — the
+    /// dense-variant twin of the packed `forward_batch_into` contract.
+    /// Bit-identical to [`matmul`](Self::matmul).
+    pub fn matmul_into_on(&self, other: &Mat, out: &mut Mat, pool: &Pool) {
+        self.matmul_into_parts_on(other, out, pool, pool.threads())
+    }
+
+    /// [`matmul_into_on`](Self::matmul_into_on) with an explicit row-range
+    /// partition count (≤ pool width is typical): the serving path's
+    /// per-worker `threads` knob, matching the sign kernels' contract —
+    /// the partition never changes a bit, only the parallelism budget.
+    pub fn matmul_into_parts_on(&self, other: &Mat, out: &mut Mat, pool: &Pool, parts: usize) {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch {:?} @ {:?}", self, other);
         let (m, k, n) = (self.rows, self.cols, other.cols);
-        let mut out = Mat::zeros(m, n);
+        out.resize(m, n);
+        // The blocked kernel accumulates; clear whatever the reused buffer
+        // last held.
+        out.data.fill(0.0);
         if m == 0 || n == 0 {
-            return out;
+            return;
         }
-        let parts = if m * k * n < PAR_MIN_FLOPS { 1 } else { pool.threads() };
+        let parts = if m * k * n < PAR_MIN_FLOPS { 1 } else { parts.max(1) };
         pool.run_row_chunks(&mut out.data, n, parts, |row0, orows| {
             let nrows = orows.len() / n;
             for bk in (0..k).step_by(BLOCK) {
@@ -205,7 +227,6 @@ impl Mat {
                 }
             }
         });
-        out
     }
 
     /// `selfᵀ @ other` without materializing the transpose. Serial entry;
@@ -485,6 +506,22 @@ mod tests {
         let b = Mat::from_vec(3, 2, vec![7., 8., 9., 10., 11., 12.]);
         let c = a.matmul(&b);
         assert_eq!(c.as_slice(), &[58., 64., 139., 154.]);
+    }
+
+    /// The into-buffer form must be bit-identical to `matmul` while
+    /// reusing one output across differently-shaped (and stale-valued)
+    /// calls — the dense serving-path contract.
+    #[test]
+    fn matmul_into_on_reuses_buffer_cleanly() {
+        let mut rng = Pcg64::seed(91);
+        let mut out = Mat::zeros(40, 40);
+        rng.fill_normal(out.as_mut_slice()); // stale garbage to overwrite
+        for (m, k, n) in [(7usize, 9usize, 5usize), (3, 2, 8), (12, 4, 1)] {
+            let a = Mat::gaussian(m, k, &mut rng);
+            let b = Mat::gaussian(k, n, &mut rng);
+            a.matmul_into_on(&b, &mut out, Pool::serial());
+            assert_eq!(out, a.matmul(&b), "{m}x{k}x{n}");
+        }
     }
 
     #[test]

@@ -93,12 +93,15 @@ impl CompressedLinear {
     }
 
     /// Storage bits for this single path: binary factors + 16-bit scales
-    /// (`r(d_in+d_out) + 16(d_in+d_out) + 16r`).
+    /// (`r(d_in+d_out) + 16(d_in+d_out) + 16r` —
+    /// [`crate::memory::littlebit_path_bits`], the shared accounting also
+    /// charged by the packed serving view's `declared_bits`).
     pub fn storage_bits(&self) -> u64 {
-        let r = self.factors.rank() as u64;
-        let d_out = self.factors.d_out() as u64;
-        let d_in = self.factors.d_in() as u64;
-        r * (d_in + d_out) + 16 * (d_in + d_out) + 16 * r
+        crate::memory::littlebit_path_bits(
+            self.factors.d_in(),
+            self.factors.d_out(),
+            self.factors.rank(),
+        )
     }
 
     /// Pack into the bit-level inference layer. The packed layer executes

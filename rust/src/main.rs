@@ -7,12 +7,18 @@
 //! littlebit2 breakeven [--size N] [--bpp B]      Fig 6 top: MSE vs γ sweep
 //! littlebit2 gamma-dist [--model NAME]           Fig 6 bottom / Fig 11/12
 //! littlebit2 spectral-gain                       Fig 9 energy curves
-//! littlebit2 compress [--size N] [--gamma G] [--bpp B] [--strategy S]
-//!                     [--layers L] [--jobs N] [--out model.lb2]
-//!                                                      quantize once → artifact
-//!                                                      (byte-identical for any --jobs)
+//! littlebit2 compress [--method M] [--size N] [--gamma G] [--bpp B]
+//!                     [--strategy S] [--layers L] [--jobs N]
+//!                     [--out model.lb2]                quantize once → artifact
+//!                                                      (byte-identical for any --jobs;
+//!                                                       M: littlebit2|onebit|rtn|billm|arb|tinyrank)
 //! littlebit2 serve --model model.lb2 [--workers N] [--batch B]
-//!                  [--threads T] [--requests R]        serve from an artifact
+//!                  [--threads T] [--requests R]        serve from an artifact,
+//!                                                      dispatching on its METHOD tags
+//! littlebit2 eval [--size N] [--blocks B] [--methods CSV] [--bpp-list CSV]
+//!                 [--jobs N] [--requests R] [--out BENCH_methods.json]
+//!                                                      methods × bpp fidelity/
+//!                                                      throughput sweep (Table 1 shape)
 //! littlebit2 train [--artifacts DIR] [--teacher-steps N] [--student-steps N]
 //!                  [--variant V] [--lr LR]       e2e QAKD driver
 //! littlebit2 version
@@ -23,13 +29,13 @@ use littlebit2::artifact::StackStreamWriter;
 #[cfg(feature = "xla")]
 use littlebit2::coordinator::{QatDriver, StudentVariant};
 use littlebit2::coordinator::{
-    run_compression_jobs_streaming, CompressionJob, InferenceServer, JobInput, PackedStackBackend,
+    run_compression_jobs_streaming, CompressionJob, InferenceServer, JobInput, MethodStackBackend,
     ServerConfig,
 };
 use littlebit2::littlebit::{compress, CompressionConfig, CompressionReport, InitStrategy};
 use littlebit2::memory::{model_memory, MethodKind};
-use littlebit2::model::{zoo, ArchSpec, PackedStack};
-use littlebit2::quant::tiny_rank_fp16;
+use littlebit2::model::{zoo, ArchSpec, MethodStack, MethodStackLayer};
+use littlebit2::quant::{tiny_rank_fp16, MethodSpec, METHOD_NAMES};
 use littlebit2::rng::{derive_seed, Pcg64};
 use littlebit2::spectral::{
     estimate_gamma, quant_cost, synth_weight, tail_energy, SynthSpec,
@@ -115,6 +121,7 @@ fn main() -> Result<()> {
         "spectral-gain" => cmd_spectral_gain(&args),
         "compress" => cmd_compress(&args),
         "serve" => cmd_serve(&args),
+        "eval" => cmd_eval(&args),
         "train" => cmd_train(&args),
         "version" => {
             println!("littlebit2 {}", littlebit2::VERSION);
@@ -130,7 +137,7 @@ fn main() -> Result<()> {
 fn print_usage() {
     println!(
         "littlebit2 {} — sub-1-bit LLM compression via Latent Geometry Alignment\n\
-         commands: memory-table | breakeven | gamma-dist | spectral-gain | compress | serve | train | version",
+         commands: memory-table | breakeven | gamma-dist | spectral-gain | compress | serve | eval | train | version",
         littlebit2::VERSION
     );
 }
@@ -271,16 +278,19 @@ fn cmd_spectral_gain(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Compress a synthetic model (a chain of `--layers` square weights) on
-/// `--jobs N` parallel claim-loops, streaming each finished layer straight
-/// into the `.lb2` artifact (`--out model.lb2`) — the quantize-once half
-/// of the quantize-once/serve-from-many pipeline (`serve` is the other
-/// half). Layer k's weight and compression each run on independent
-/// derived RNG streams, so the artifact bytes are identical for any
-/// `--jobs` value (and layer k never depends on how many layers precede
-/// it). Per-stage wall-clock (svd/itq/svid/pack) is reported at the end.
+/// Compress a synthetic model (a chain of `--layers` square weights) with
+/// any registered `--method` on `--jobs N` parallel claim-loops, streaming
+/// each finished layer straight into the `.lb2` v2 artifact
+/// (`--out model.lb2`) — the quantize-once half of the
+/// quantize-once/serve-from-many pipeline (`serve` is the other half).
+/// Layer k's weight and compression each run on independent derived RNG
+/// streams, so the artifact bytes are identical for any `--jobs` value
+/// (and layer k never depends on how many layers precede it). For the
+/// littlebit pipeline the per-stage wall-clock (svd/itq/svid/pack) is
+/// reported at the end.
 fn cmd_compress(args: &Args) -> Result<()> {
-    args.known(&["size", "layers", "gamma", "bpp", "strategy", "out", "jobs"])?;
+    args.known(&["method", "size", "layers", "gamma", "bpp", "strategy", "out", "jobs"])?;
+    let method_name = args.get("method", "littlebit2");
     let size = args.get_usize("size", 512)?;
     let layers = args.get_usize("layers", 1)?;
     let gamma = args.get_f64("gamma", 0.27)?;
@@ -298,7 +308,10 @@ fn cmd_compress(args: &Args) -> Result<()> {
     if jobs_n == 0 {
         bail!("--jobs must be at least 1");
     }
-    let cfg = CompressionConfig { bpp, strategy, residual: true, ..Default::default() };
+    let method = MethodSpec::parse(&method_name, bpp, strategy)?;
+    // Fixed-rate methods (onebit/rtn/billm/arb) never consume the bpp
+    // budget; don't echo a knob that had no effect.
+    let budgeted = method.is_budgeted();
     let spec = SynthSpec { rows: size, cols: size, gamma, coherence: 0.7, scale: 1.0 };
 
     // Per-layer derived streams: stream 2k fabricates layer k's weight,
@@ -313,7 +326,7 @@ fn cmd_compress(args: &Args) -> Result<()> {
                 spec: spec.clone(),
                 seed: derive_seed(BASE_SEED, 2 * k as u64),
             },
-            cfg: cfg.clone(),
+            method: method.clone(),
             seed: derive_seed(BASE_SEED, 2 * k as u64 + 1),
         })
         .collect();
@@ -334,32 +347,38 @@ fn cmd_compress(args: &Args) -> Result<()> {
     let mut packed_bytes = 0usize;
     run_compression_jobs_streaming(jobs, jobs_n, |idx, outcome| {
         if idx == 0 {
+            let lambda = match (outcome.result.lambda_mean, outcome.result.lambda_max) {
+                (Some(m), Some(x)) => format!(" λ_mean={m:.3} λ_max={x:.3}"),
+                _ => String::new(),
+            };
+            let budget = if budgeted { format!(" bpp={bpp}") } else { String::new() };
             println!(
-                "size={size} γ={gamma} bpp={bpp} strategy={} rank={} | MSE={:.4e} bpp_actual={:.3} λ_mean={:.3} λ_max={:.3}",
-                strategy.label(),
+                "method={} size={size} γ={gamma}{budget} rank={} | MSE={:.4e} rel_err={:.4e} bpp_actual={:.3}{lambda}",
+                outcome.result.method,
                 outcome.result.rank,
                 outcome.result.mse,
+                outcome.result.rel_err,
                 outcome.result.bpp,
-                outcome.result.lambda_mean,
-                outcome.result.lambda_max,
             );
         }
         stages.accumulate(&outcome.result.report);
-        packed_bytes += outcome.packed.storage_bytes();
+        packed_bytes += outcome.layer.storage_bytes();
         if let Some(w) = writer.as_mut() {
-            w.append_layer(&outcome.packed)?;
+            w.append(&outcome.result.method, &outcome.layer)?;
         }
         Ok(())
     })?;
     let wall = t0.elapsed().as_secs_f64();
     println!(
-        "compressed {layers} layer(s) of {size}x{size} on {jobs_n} job(s) in {wall:.2}s ({:.2} layers/s) | packed weights {packed_bytes} bytes",
+        "compressed {layers} layer(s) of {size}x{size} on {jobs_n} job(s) in {wall:.2}s ({:.2} layers/s) | serving-form weights {packed_bytes} bytes",
         layers as f64 / wall.max(1e-9),
     );
-    println!(
-        "stage wall-clock (summed over layers): svd {:.0} ms | itq {:.0} ms | svid {:.0} ms | pack {:.0} ms",
-        stages.svd_ms, stages.itq_ms, stages.svid_ms, stages.pack_ms,
-    );
+    if matches!(method, MethodSpec::LittleBit2(_)) {
+        println!(
+            "stage wall-clock (summed over layers): svd {:.0} ms | itq {:.0} ms | svid {:.0} ms | pack {:.0} ms",
+            stages.svd_ms, stages.itq_ms, stages.svid_ms, stages.pack_ms,
+        );
+    }
 
     if let Some(w) = writer {
         w.finish()?;
@@ -380,9 +399,10 @@ fn cmd_compress(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Serve a `.lb2` artifact on the dynamic-batching worker pool: load once,
-/// drive `--requests` synthetic token-steps through the full batched
-/// sign-GEMM pipeline, report throughput and latency percentiles. The
+/// Serve a `.lb2` artifact on the dynamic-batching worker pool: load
+/// once, dispatch on each layer's METHOD tag (any registered method, or a
+/// mix per layer), drive `--requests` synthetic token-steps through the
+/// full batched pipeline, report throughput and latency percentiles. The
 /// in-process load generator stands in for a network front end — the
 /// serving loop itself is the production path.
 fn cmd_serve(args: &Args) -> Result<()> {
@@ -399,9 +419,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         bail!("--workers, --batch, and --threads must be at least 1");
     }
 
-    let stack = Arc::new(PackedStack::load(model_path)?);
+    let stack = Arc::new(MethodStack::load(model_path)?);
     println!(
-        "loaded {model_path}: depth {} | {} -> {} features | packed weights {} bytes",
+        "loaded {model_path}: method {} | depth {} | {} -> {} features | serving-form weights {} bytes",
+        stack.method_summary(),
         stack.depth(),
         stack.d_in(),
         stack.d_out(),
@@ -415,7 +436,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             queue_depth: 1024,
             workers,
         },
-        |_worker| PackedStackBackend::new(Arc::clone(&stack), threads),
+        |_worker| MethodStackBackend::new(Arc::clone(&stack), threads),
     );
 
     let d_in = stack.d_in();
@@ -448,6 +469,265 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if failed > 0 {
         bail!("{failed} of {requests} requests failed");
     }
+    Ok(())
+}
+
+/// One `eval` measurement: a method (at one bpp where the method is
+/// budgeted) swept over the whole compress → artifact → serve pipeline.
+struct EvalRow {
+    method: String,
+    /// The requested bpp budget — `None` for fixed-rate methods, which
+    /// never consume the knob (the JSON writes `null`, not a value that
+    /// was silently ignored).
+    bpp_requested: Option<f64>,
+    bpp_declared: f64,
+    bpp_disk: f64,
+    frobenius_rel_err: f64,
+    lambda_mean: Option<f64>,
+    compress_ms: f64,
+    artifact_bytes: u64,
+    serve_tokens_per_s: f64,
+    serve_p50_ms: f64,
+}
+
+/// `eval` — the repo's first end-to-end reproduction of the paper's
+/// baseline table shape: sweep `--methods` × `--bpp-list` over a
+/// zoo-fabricated heavy-tailed FFN chain (γ per the Fig. 12 projection
+/// profiles), run every method through the *real* pipeline
+/// (compress → `.lb2` v2 → load → serve on the worker pool), and write
+/// `BENCH_methods.json` with fidelity (relative Frobenius error), bpp
+/// (declared App. H accounting *and* on-disk), λ coherence (littlebit
+/// latents; null for baselines), compression wall-clock, and serve
+/// throughput. Fixed-rate methods (onebit/rtn/billm/arb) ignore the bpp
+/// axis and appear once.
+fn cmd_eval(args: &Args) -> Result<()> {
+    args.known(&["size", "blocks", "methods", "bpp-list", "jobs", "requests", "out", "seed"])?;
+    let size = args.get_usize("size", 128)?;
+    let blocks = args.get_usize("blocks", 1)?;
+    let jobs_n = args.get_usize("jobs", 2)?;
+    let requests = args.get_usize("requests", 128)?;
+    let seed = args.get_usize("seed", 7)? as u64;
+    let out_path = args.get("out", "BENCH_methods.json");
+    let methods_csv = args.get("methods", &METHOD_NAMES.join(","));
+    let bpp_csv = args.get("bpp-list", "1.0,0.55");
+    if size == 0 || blocks == 0 || jobs_n == 0 || requests == 0 {
+        bail!("--size, --blocks, --jobs, and --requests must be at least 1");
+    }
+    let methods: Vec<String> = methods_csv.split(',').map(|s| s.trim().to_string()).collect();
+    let bpps: Vec<f64> = bpp_csv
+        .split(',')
+        .map(|s| s.trim().parse::<f64>().map_err(|e| anyhow::anyhow!("bad bpp {s:?}: {e}")))
+        .collect::<Result<_>>()?;
+    if bpps.iter().any(|&b| !(b > 0.0)) {
+        bail!("every --bpp-list entry must be positive");
+    }
+
+    // Zoo-fabricated heavy-tailed chain: `blocks` SwiGLU FFN pairs
+    // (up: d_ff×d_model, down: d_model×d_ff) at the paper's γ profile,
+    // dims scaled so d_model ≈ --size. All methods compress the SAME
+    // weights — the apples-to-apples requirement.
+    let arch = ArchSpec::llama2_7b();
+    let shrink = (arch.d_model / size).max(1);
+    let weights: Vec<littlebit2::linalg::Mat> = (0..blocks)
+        .flat_map(|b| zoo::fabricate_ffn_chain(&arch, shrink, derive_seed(seed, b as u64)))
+        .collect();
+    let params: u64 = weights.iter().map(|w| (w.rows() * w.cols()) as u64).sum();
+    println!(
+        "eval chain: {} layers ({} params), dims {}",
+        weights.len(),
+        params,
+        weights
+            .iter()
+            .map(|w| format!("{}x{}", w.rows(), w.cols()))
+            .collect::<Vec<_>>()
+            .join(" → ")
+    );
+
+    let tmp_dir = std::env::temp_dir();
+    let mut rows: Vec<EvalRow> = Vec::new();
+    for name in &methods {
+        // Budgeted methods sweep the bpp axis; fixed-rate methods run
+        // once, with no requested-bpp value (the knob has no effect —
+        // MethodSpec::is_budgeted is the single source of that split).
+        let sweep: Vec<Option<f64>> =
+            if MethodSpec::parse(name, 1.0, InitStrategy::Standard)?.is_budgeted() {
+                bpps.iter().map(|&b| Some(b)).collect()
+            } else {
+                vec![None]
+            };
+        for requested in sweep {
+            let bpp = requested.unwrap_or(1.0);
+            let method = MethodSpec::parse(name, bpp, InitStrategy::JointItq { iters: 50 })?;
+            let jobs: Vec<CompressionJob> = weights
+                .iter()
+                .enumerate()
+                .map(|(k, w)| CompressionJob {
+                    name: format!("layer{k}"),
+                    input: JobInput::Dense(w.clone()),
+                    method: method.clone(),
+                    seed: derive_seed(seed.wrapping_add(1), k as u64),
+                })
+                .collect();
+
+            let mut layers: Vec<MethodStackLayer> = Vec::with_capacity(jobs.len());
+            let mut err_num = 0.0f64;
+            let mut err_den = 0.0f64;
+            let mut declared_bits = 0u64;
+            let mut compress_ms = 0.0f64;
+            let mut lambdas: Vec<f64> = Vec::new();
+            run_compression_jobs_streaming(jobs, jobs_n, |_, outcome| {
+                let r = &outcome.result;
+                // rel_err is per-layer ‖W−Ŵ‖²/‖W‖²; re-weight by ‖W‖² to
+                // aggregate over the chain exactly.
+                let w = &weights[layers.len()];
+                let fro = w.fro_norm().powi(2);
+                err_num += r.rel_err * fro;
+                err_den += fro;
+                declared_bits += outcome.layer.declared_bits();
+                // Compression-only wall-clock (wall_ms additionally
+                // counts the reconstruction + scoring pass, which would
+                // skew the cross-method timing column).
+                compress_ms += r.report.total_ms;
+                if let Some(l) = r.lambda_mean {
+                    lambdas.push(l);
+                }
+                layers.push(MethodStackLayer {
+                    method: r.method.clone(),
+                    layer: outcome.layer,
+                });
+                Ok(())
+            })?;
+            let stack = MethodStack::try_new(layers)?;
+
+            // Through the real artifact: save, stat, load, serve.
+            let path = tmp_dir.join(format!(
+                "lb2_eval_{}_{name}_{bpp}.lb2",
+                std::process::id()
+            ));
+
+            stack.save(&path)?;
+            // Cleanup-on-error: a failed stat/load must not strand the
+            // temp artifact (same discipline as the artifact writers).
+            let reload = || -> Result<(u64, MethodStack)> {
+                let bytes = std::fs::metadata(&path)
+                    .with_context(|| format!("stat {path:?}"))?
+                    .len();
+                Ok((bytes, MethodStack::load(&path)?))
+            };
+            let result = reload();
+            let _ = std::fs::remove_file(&path);
+            let (artifact_bytes, loaded) = result?;
+            let loaded = Arc::new(loaded);
+
+            let server = InferenceServer::start_pool(
+                ServerConfig {
+                    max_batch: 16,
+                    max_wait: Duration::from_millis(1),
+                    queue_depth: 1024,
+                    workers: 2,
+                },
+                |_worker| MethodStackBackend::new(Arc::clone(&loaded), 1),
+            );
+            let mut rng = Pcg64::seed(derive_seed(seed, 99));
+            let d_in = loaded.d_in();
+            let rxs: Vec<_> = (0..requests)
+                .map(|i| {
+                    let mut x = vec![0.0f32; d_in];
+                    rng.fill_normal(&mut x);
+                    server.submit(i as u64, x)
+                })
+                .collect();
+            let failed = rxs.into_iter().filter(|rx| rx.recv().is_err()).count();
+            let stats = server.shutdown();
+            if failed > 0 {
+                bail!("{name}: {failed} of {requests} eval requests failed");
+            }
+
+            let row = EvalRow {
+                method: name.clone(),
+                bpp_requested: requested,
+                bpp_declared: declared_bits as f64 / params as f64,
+                bpp_disk: artifact_bytes as f64 * 8.0 / params as f64,
+                frobenius_rel_err: if err_den > 0.0 { err_num / err_den } else { 0.0 },
+                lambda_mean: if lambdas.is_empty() {
+                    None
+                } else {
+                    Some(lambdas.iter().sum::<f64>() / lambdas.len() as f64)
+                },
+                compress_ms,
+                artifact_bytes,
+                serve_tokens_per_s: stats.tokens_per_s,
+                serve_p50_ms: stats.p50_ms,
+            };
+            let req = row
+                .bpp_requested
+                .map(|b| b.to_string())
+                .unwrap_or_else(|| "-".to_string());
+            println!(
+                "{:<11} bpp_req={:<5} bpp_decl={:>6.3} bpp_disk={:>7.3} rel_err={:.4e} compress={:>7.0} ms serve={:>8.0} tok/s",
+                row.method,
+                req,
+                row.bpp_declared,
+                row.bpp_disk,
+                row.frobenius_rel_err,
+                row.compress_ms,
+                row.serve_tokens_per_s,
+            );
+            rows.push(row);
+        }
+    }
+
+    write_eval_json(&out_path, size, blocks, requests, params, &rows)?;
+    println!("wrote {out_path} ({} method rows)", rows.len());
+    Ok(())
+}
+
+/// Hand-rolled JSON emitter for `BENCH_methods.json` (no serde in the
+/// offline build; same style as the bench JSON writers).
+fn write_eval_json(
+    path: &str,
+    size: usize,
+    blocks: usize,
+    requests: usize,
+    params: u64,
+    rows: &[EvalRow],
+) -> Result<()> {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"bench\": \"method_matrix\",\n");
+    s.push_str("  \"status\": \"ok\",\n");
+    s.push_str(&format!(
+        "  \"generated_by\": \"littlebit2 {} eval\",\n",
+        littlebit2::VERSION
+    ));
+    s.push_str(&format!(
+        "  \"config\": {{\"size\": {size}, \"blocks\": {blocks}, \"requests\": {requests}, \"params\": {params}}},\n"
+    ));
+    s.push_str("  \"methods\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let lambda = match r.lambda_mean {
+            Some(l) => format!("{l:.6}"),
+            None => "null".to_string(),
+        };
+        let requested = match r.bpp_requested {
+            Some(b) => b.to_string(),
+            None => "null".to_string(),
+        };
+        s.push_str(&format!(
+            "    {{\"method\": \"{}\", \"bpp_requested\": {requested}, \"bpp_declared\": {:.6}, \"bpp_disk\": {:.6}, \"frobenius_rel_err\": {:.8e}, \"lambda_mean\": {lambda}, \"compress_ms\": {:.3}, \"artifact_bytes\": {}, \"serve_tokens_per_s\": {:.1}, \"serve_p50_ms\": {:.4}}}{}\n",
+            r.method,
+            r.bpp_declared,
+            r.bpp_disk,
+            r.frobenius_rel_err,
+            r.compress_ms,
+            r.artifact_bytes,
+            r.serve_tokens_per_s,
+            r.serve_p50_ms,
+            if i + 1 < rows.len() { "," } else { "" },
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    std::fs::write(path, s).with_context(|| format!("writing {path}"))?;
     Ok(())
 }
 

@@ -1,10 +1,15 @@
 //! Per-layer storage formulas, Eqs. 21–26 of Appendix H.
 
-/// Eq. 21 — k-bit group RTN (GPTQ / EfficientQAT): `k·N + ⌈N/g⌉·(16+16)`
-/// bits (FP16 scale + zero per group).
+/// Eq. 21 — k-bit group RTN (GPTQ / EfficientQAT): `k·N + groups·(16+16)`
+/// bits (FP16 scale + zero per group). Groups are **per row** — the
+/// quantizer scopes each group to `group` consecutive in-row weights, so a
+/// ragged final group exists in *every* row: `groups = d_out·⌈d_in/g⌉`.
+/// (The accounting previously pooled the tail across rows as `⌈N/g⌉`,
+/// undercounting one scale pair per row whenever `d_in % g ≠ 0`; identical
+/// for the divisible shapes of Table 1. See EXPERIMENTS.md §Artifact.)
 pub fn rtn_bits(d_out: usize, d_in: usize, k: u32, group: usize) -> u64 {
     let n = (d_out * d_in) as u64;
-    let groups = n.div_ceil(group as u64);
+    let groups = d_out as u64 * (d_in as u64).div_ceil(group as u64);
     n * k as u64 + groups * 32
 }
 
@@ -41,10 +46,19 @@ pub fn arb_bits(d_out: usize, d_in: usize, c: usize, k: usize) -> u64 {
     second_order + first_order + bitmaps
 }
 
+/// One LittleBit tri-scale path: `r(d_in + d_out)` binary bits plus FP16
+/// scales `16(d_in + d_out) + 16r`. The single source of the per-path
+/// accounting — `CompressedLinear::storage_bits` (FP side) and
+/// `MethodLayer::declared_bits` (packed serving side) both charge this,
+/// so the two views can never drift.
+pub fn littlebit_path_bits(d_in: usize, d_out: usize, r: usize) -> u64 {
+    (r * (d_in + d_out)) as u64 + (16 * (d_in + d_out)) as u64 + (16 * r) as u64
+}
+
 /// Eq. 25 — LittleBit / LittleBit-2 (identical storage), residual (2-path)
 /// architecture: `2r(d_in + d_out + 16) + 32(d_in + d_out)`.
 pub fn littlebit_bits(d_in: usize, d_out: usize, r: usize) -> u64 {
-    (2 * r * (d_in + d_out + 16)) as u64 + (32 * (d_in + d_out)) as u64
+    2 * littlebit_path_bits(d_in, d_out, r)
 }
 
 /// Eq. 26 — maximum rank under a bpp budget `B`:
@@ -109,6 +123,15 @@ mod tests {
     #[test]
     fn fp16_sanity() {
         assert_eq!(fp16_bits(2, 3), 96);
+    }
+
+    /// Ragged-row regression for the per-row group accounting: 3 rows of
+    /// 100 columns at group 64 quantize as 3 × 2 = 6 groups, not ⌈300/64⌉.
+    #[test]
+    fn rtn_groups_are_scoped_per_row() {
+        assert_eq!(rtn_bits(3, 100, 2, 64), 300 * 2 + 6 * 32);
+        // Divisible shapes are unchanged by the fix.
+        assert_eq!(rtn_bits(256, 256, 2, 128), 256 * 256 * 2 + 512 * 32);
     }
 
     #[test]

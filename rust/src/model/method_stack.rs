@@ -1,0 +1,318 @@
+//! Method-generic sequential model execution: a chain of
+//! [`MethodLayer`]s — each possibly produced by a *different* quantizer —
+//! run end to end on whole batches, persisted as a `.lb2` v2 artifact.
+//!
+//! [`MethodStack`] is the generalization of [`PackedStack`]: the serving
+//! spine (server backends, streaming compression jobs, the artifact
+//! reader/writer) consumes this type, so every baseline of the paper's
+//! Table 1 — not just LittleBit-2 — flows through the real
+//! compress → save → load → serve pipeline. Activations stay
+//! feature-major (`d × b`) across the whole chain, exactly like
+//! `PackedStack`, and the batch never deinterleaves.
+
+use super::method::MethodLayer;
+use super::PackedStack;
+use crate::linalg::Mat;
+use crate::packing::{BatchScratch, SignPool};
+
+/// One chained layer: the [`MethodLayer`] plus the name of the method
+/// that produced it (the `.lb2` v2 METHOD tag, e.g. `"onebit"`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MethodStackLayer {
+    pub method: String,
+    pub layer: MethodLayer,
+}
+
+/// A chain of method-generic layers with matching inner dimensions.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MethodStack {
+    layers: Vec<MethodStackLayer>,
+}
+
+impl MethodStack {
+    /// Compose layers; panics on a broken chain (programmer error).
+    pub fn new(layers: Vec<MethodStackLayer>) -> Self {
+        Self::try_new(layers).expect("valid method chain")
+    }
+
+    /// Fallible [`new`](Self::new) for deserialization boundaries: a
+    /// malformed chain is `Err`, never a panic.
+    pub fn try_new(layers: Vec<MethodStackLayer>) -> anyhow::Result<Self> {
+        if layers.is_empty() {
+            anyhow::bail!("stack needs at least one layer");
+        }
+        for k in 1..layers.len() {
+            if layers[k - 1].layer.d_out() != layers[k].layer.d_in() {
+                anyhow::bail!(
+                    "chain mismatch: layer {} emits {} features but layer {k} consumes {}",
+                    k - 1,
+                    layers[k - 1].layer.d_out(),
+                    layers[k].layer.d_in()
+                );
+            }
+        }
+        Ok(Self { layers })
+    }
+
+    /// Uniform-method convenience: every layer tagged with `method`.
+    pub fn uniform(method: &str, layers: Vec<MethodLayer>) -> anyhow::Result<Self> {
+        Self::try_new(
+            layers
+                .into_iter()
+                .map(|layer| MethodStackLayer { method: method.to_string(), layer })
+                .collect(),
+        )
+    }
+
+    pub fn depth(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn d_in(&self) -> usize {
+        self.layers[0].layer.d_in()
+    }
+
+    pub fn d_out(&self) -> usize {
+        self.layers[self.layers.len() - 1].layer.d_out()
+    }
+
+    pub fn layers(&self) -> &[MethodStackLayer] {
+        &self.layers
+    }
+
+    /// `"littlebit2"` when every layer shares one method, `"mixed"`
+    /// otherwise — the serve-time banner label.
+    pub fn method_summary(&self) -> &str {
+        let first = self.layers[0].method.as_str();
+        if self.layers.iter().all(|l| l.method == first) {
+            first
+        } else {
+            "mixed"
+        }
+    }
+
+    /// Total serving-form weight bytes across the chain.
+    pub fn storage_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.layer.storage_bytes()).sum()
+    }
+
+    /// Total declared App. H storage bits across the chain.
+    pub fn declared_bits(&self) -> u64 {
+        self.layers.iter().map(|l| l.layer.declared_bits()).sum()
+    }
+
+    /// Persist as a `.lb2` **format v2** artifact (per-layer METHOD tags;
+    /// see [`crate::artifact`] for the byte layout). Round-trips
+    /// bit-exactly through [`load`](Self::load).
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> anyhow::Result<()> {
+        crate::artifact::save_method_stack(self, path)
+    }
+
+    /// Load a `.lb2` artifact — **either** format version: v2 loads each
+    /// layer under its METHOD tag; a v1 artifact (PR 3/4 era) decodes as
+    /// an all-`Packed` `littlebit2` stack with bit-identical forwards.
+    pub fn load(path: impl AsRef<std::path::Path>) -> anyhow::Result<Self> {
+        crate::artifact::load_method_stack(path)
+    }
+
+    /// Serialize to v2 container bytes (in-memory [`save`](Self::save)).
+    pub fn to_artifact_bytes(&self) -> anyhow::Result<Vec<u8>> {
+        crate::artifact::write_method_stack(self, Vec::new())
+    }
+
+    /// Deserialize from container bytes, v1 or v2 (in-memory
+    /// [`load`](Self::load)).
+    pub fn from_artifact_bytes(bytes: &[u8]) -> anyhow::Result<Self> {
+        crate::artifact::read_method_stack(bytes)
+    }
+
+    /// Collapse into a [`PackedStack`] when every layer is a packed
+    /// tri-scale composition; `Err` naming the offending layer otherwise.
+    pub fn try_into_packed(self) -> anyhow::Result<PackedStack> {
+        let mut packed = Vec::with_capacity(self.layers.len());
+        for (k, l) in self.layers.into_iter().enumerate() {
+            match l.layer {
+                MethodLayer::Packed(p) => packed.push(p),
+                other => anyhow::bail!(
+                    "layer {k} uses method {:?} ({} serving form); load it as a MethodStack",
+                    l.method,
+                    other.variant_label()
+                ),
+            }
+        }
+        PackedStack::try_new(packed)
+    }
+
+    /// Single-request forward through the whole chain.
+    pub fn forward(&self, x: &[f32]) -> Vec<f32> {
+        let mut cur = x.to_vec();
+        for l in &self.layers {
+            cur = l.layer.forward(&cur);
+        }
+        cur
+    }
+
+    /// Batched forward (serial kernels): `X` is `d_in × b` feature-major.
+    pub fn forward_batch(&self, x: &Mat) -> Mat {
+        let mut y = Mat::default();
+        let mut scratch = BatchScratch::default();
+        self.forward_batch_into(x, &mut y, &mut scratch, SignPool::serial(), 1);
+        y
+    }
+
+    /// Allocation-free batched forward through the whole chain — the
+    /// serving hot path, identical in structure to
+    /// [`PackedStack::forward_batch_into`]: `y` is resized in place and
+    /// activations ping-pong between the two blocks carried by `scratch`.
+    pub fn forward_batch_into(
+        &self,
+        x: &Mat,
+        y: &mut Mat,
+        scratch: &mut BatchScratch,
+        pool: &SignPool,
+        threads: usize,
+    ) {
+        let n = self.layers.len();
+        if n == 1 {
+            self.layers[0].layer.forward_batch_into(x, y, scratch, pool, threads);
+            return;
+        }
+        let mut cur = std::mem::take(&mut scratch.ping);
+        let mut nxt = std::mem::take(&mut scratch.pong);
+        self.layers[0].layer.forward_batch_into(x, &mut cur, scratch, pool, threads);
+        for l in &self.layers[1..n - 1] {
+            l.layer.forward_batch_into(&cur, &mut nxt, scratch, pool, threads);
+            std::mem::swap(&mut cur, &mut nxt);
+        }
+        self.layers[n - 1].layer.forward_batch_into(&cur, y, scratch, pool, threads);
+        scratch.ping = cur;
+        scratch.pong = nxt;
+    }
+}
+
+impl From<PackedStack> for MethodStack {
+    /// Every LittleBit-2 deployment is a method stack: the lossless view
+    /// that lets legacy packed chains flow through the generic spine.
+    fn from(stack: PackedStack) -> Self {
+        // PackedStack already validated the chain.
+        Self {
+            layers: stack
+                .into_layers()
+                .into_iter()
+                .map(|l| MethodStackLayer {
+                    method: "littlebit2".to_string(),
+                    layer: MethodLayer::Packed(l),
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::littlebit::CompressionConfig;
+    use crate::rng::Pcg64;
+    use crate::spectral::{synth_weight, SynthSpec};
+
+    fn packed_chain(dims: &[usize], seed: u64) -> PackedStack {
+        let mut rng = Pcg64::seed(seed);
+        let weights: Vec<Mat> = dims
+            .windows(2)
+            .map(|w| {
+                let spec =
+                    SynthSpec { rows: w[1], cols: w[0], gamma: 0.3, coherence: 0.6, scale: 1.0 };
+                synth_weight(&spec, &mut rng)
+            })
+            .collect();
+        let cfg = CompressionConfig { bpp: 1.0, ..Default::default() };
+        PackedStack::compress_chain(&weights, &cfg, &mut rng)
+    }
+
+    /// A packed stack viewed as a method stack must forward bit-identically
+    /// through the generic spine.
+    #[test]
+    fn packed_view_forwards_bit_identically() {
+        let packed = packed_chain(&[40, 56, 40], 11);
+        let generic = MethodStack::from(packed.clone());
+        assert_eq!(generic.depth(), 2);
+        assert_eq!(generic.method_summary(), "littlebit2");
+        assert_eq!(generic.storage_bytes(), packed.storage_bytes());
+
+        let mut rng = Pcg64::seed(12);
+        let b = 5;
+        let mut x = Mat::zeros(40, b);
+        rng.fill_normal(x.as_mut_slice());
+        let want = packed.forward_batch(&x);
+        let got = generic.forward_batch(&x);
+        assert_eq!(want, got);
+        // And back again, losslessly.
+        let roundtrip = generic.try_into_packed().unwrap();
+        assert_eq!(roundtrip, packed);
+    }
+
+    /// Mixed-method chains compose and report "mixed"; broken chains and
+    /// non-packed downcasts are `Err`.
+    #[test]
+    fn mixed_chain_composes_and_downcast_fails() {
+        use crate::model::method::DenseScaledLayer;
+        let packed = packed_chain(&[40, 56], 21);
+        let mut rng = Pcg64::seed(22);
+        let dense = MethodLayer::DenseScaled(
+            DenseScaledLayer::try_new(Mat::gaussian(32, 56, &mut rng), 100).unwrap(),
+        );
+        let stack = MethodStack::try_new(vec![
+            MethodStackLayer {
+                method: "littlebit2".into(),
+                layer: MethodLayer::Packed(packed.layers()[0].clone()),
+            },
+            MethodStackLayer { method: "rtn".into(), layer: dense.clone() },
+        ])
+        .unwrap();
+        assert_eq!(stack.method_summary(), "mixed");
+        assert_eq!((stack.d_in(), stack.d_out()), (40, 32));
+        // Chain forward: batch column equals composed per-layer forwards.
+        let mut x = Mat::zeros(40, 3);
+        rng.fill_normal(x.as_mut_slice());
+        let y = stack.forward_batch(&x);
+        for t in 0..3 {
+            let want = stack.forward(&x.col(t));
+            for (i, w) in want.iter().enumerate() {
+                assert_eq!(y.at(i, t).to_bits(), w.to_bits(), "({i},{t})");
+            }
+        }
+        assert!(stack.try_into_packed().is_err());
+
+        // Broken chain rejected.
+        let bad = MethodStack::try_new(vec![
+            MethodStackLayer {
+                method: "littlebit2".into(),
+                layer: MethodLayer::Packed(packed.layers()[0].clone()),
+            },
+            MethodStackLayer { method: "rtn".into(), layer: {
+                let w = Mat::gaussian(32, 55, &mut rng);
+                MethodLayer::DenseScaled(DenseScaledLayer::try_new(w, 1).unwrap())
+            } },
+        ]);
+        assert!(bad.unwrap_err().to_string().contains("chain mismatch"));
+    }
+
+    /// One scratch serving varying widths and depths stays bit-clean —
+    /// the server worker reuse contract, generic-spine edition.
+    #[test]
+    fn scratch_reuse_is_clean() {
+        let stack = MethodStack::from(packed_chain(&[40, 56, 48, 40], 31));
+        let single = MethodStack::from(packed_chain(&[40, 56], 32));
+        let mut rng = Pcg64::seed(33);
+        let mut scratch = BatchScratch::default();
+        let mut y = Mat::default();
+        for b in [4usize, 1, 7] {
+            let mut x = Mat::zeros(40, b);
+            rng.fill_normal(x.as_mut_slice());
+            stack.forward_batch_into(&x, &mut y, &mut scratch, SignPool::global(), 2);
+            assert_eq!(y, stack.forward_batch(&x), "depth-3 b={b}");
+            single.forward_batch_into(&x, &mut y, &mut scratch, SignPool::global(), 2);
+            assert_eq!(y, single.forward_batch(&x), "depth-1 b={b}");
+        }
+    }
+}

@@ -7,11 +7,19 @@
 //! Fig. 11/12 measurements — the checkpoint substitute for every
 //! fidelity experiment. The [`stack`] submodule chains the packed layers
 //! into a batched sequential model ([`PackedStack`]) so whole request
-//! batches flow through every layer without per-request dispatch.
+//! batches flow through every layer without per-request dispatch; the
+//! [`method`] and [`method_stack`] submodules generalize that chain to
+//! every registered compression method ([`MethodLayer`] /
+//! [`MethodStack`]) — the serving spine behind `.lb2` v2 artifacts and
+//! the Table 1 baseline comparisons.
 
+pub mod method;
+pub mod method_stack;
 pub mod stack;
 pub mod zoo;
 
+pub use method::{DenseScaledLayer, LowRankFpLayer, MethodLayer, SignScaledLayer};
+pub use method_stack::{MethodStack, MethodStackLayer};
 pub use stack::PackedStack;
 
 /// One linear projection inside a transformer block.

@@ -106,6 +106,13 @@ impl PackedStack {
         &self.layers
     }
 
+    /// Consume the stack into its layers (the
+    /// [`MethodStack`](crate::model::MethodStack) conversion path — no
+    /// clone of the packed bit-planes).
+    pub fn into_layers(self) -> Vec<PackedResidual> {
+        self.layers
+    }
+
     /// Total weight-storage bytes across the chain.
     pub fn storage_bytes(&self) -> usize {
         self.layers.iter().map(|l| l.storage_bytes()).sum()

@@ -111,6 +111,13 @@ impl SignPool {
         self.pool.get().threads()
     }
 
+    /// The backing [`Pool`] — for dense kernels (blocked matmul) that run
+    /// alongside the sign kernels in a method-generic serving chain, so
+    /// every layer variant shares one resident worker set.
+    pub fn backing(&self) -> &Pool {
+        self.pool.get()
+    }
+
     /// Pool-dispatched [`gemm_sign_scaled`](super::gemm_sign_scaled),
     /// partitioned into [`threads`](Self::threads) row ranges. Bit-exact
     /// against the serial kernel for any pool size.

@@ -60,10 +60,11 @@ pub fn rtn(w: &Mat, k: u32, group: usize) -> QuantResult {
     }
 }
 
-/// OneBit: `Ŵ = diag(a) · sign(W) · diag(b)` — a 1-bit sign matrix plus FP16
-/// row/column value vectors, fitted by alternating least squares on the
-/// element-wise model `|W_ij| ≈ a_i·b_j` (the SVID of the OneBit paper).
-pub fn onebit(w: &Mat, als_iters: usize) -> QuantResult {
+/// The OneBit ALS core: fit `|W_ij| ≈ a_i·b_j` by alternating least
+/// squares and return the FP16-rounded `(a, b)` scale vectors. Shared by
+/// the reconstruction-level [`onebit`] baseline and the serving-form
+/// `quant::Compressor` implementation, so both produce identical numbers.
+pub(crate) fn onebit_scales(w: &Mat, als_iters: usize) -> (Vec<f32>, Vec<f32>) {
     let (m, n) = w.shape();
     let absw = w.abs();
     // ALS for rank-1 non-negative factorization of |W|.
@@ -98,6 +99,15 @@ pub fn onebit(w: &Mat, als_iters: usize) -> QuantResult {
     for v in b.iter_mut() {
         *v = f16_round(*v);
     }
+    (a, b)
+}
+
+/// OneBit: `Ŵ = diag(a) · sign(W) · diag(b)` — a 1-bit sign matrix plus FP16
+/// row/column value vectors, fitted by alternating least squares on the
+/// element-wise model `|W_ij| ≈ a_i·b_j` (the SVID of the OneBit paper).
+pub fn onebit(w: &Mat, als_iters: usize) -> QuantResult {
+    let (m, n) = w.shape();
+    let (a, b) = onebit_scales(w, als_iters);
     let recon = w.signum().scale_rows(&a).scale_cols(&b);
     QuantResult {
         reconstruction: recon,
@@ -166,17 +176,22 @@ pub fn billm_style(w: &Mat, c: usize, block: usize) -> QuantResult {
     }
 }
 
-/// ARB-LLM-style alternating refined binarization (RC variant):
-/// `Ŵ = diag(a) · B · diag(b)` with B=sign refit against the scaled
-/// residual each iteration — alternate (B | a | b) updates to a local optimum.
-pub fn arb_style(w: &Mat, iters: usize) -> QuantResult {
+/// The ARB alternating-refinement core: return the FP16-rounded `(a, b)`
+/// scale vectors of `Ŵ = diag(a)·sign(W)·diag(b)` after `iters` rounds of
+/// alternating least-squares scale refits. Shared by the
+/// reconstruction-level [`arb_style`] baseline and the serving-form
+/// `quant::Compressor` implementation.
+pub(crate) fn arb_scales(w: &Mat, iters: usize) -> (Vec<f32>, Vec<f32>) {
     let (m, n) = w.shape();
     let mut a = vec![0.0f32; m];
     for (i, ai) in a.iter_mut().enumerate() {
         *ai = (crate::linalg::norm1(w.row(i)) / n as f64) as f32;
     }
     let mut b = vec![1.0f32; n];
-    let mut signs = w.signum();
+    // B = sign(W) is optimal given positive scales and stays fixed:
+    // sign(W_ij / (a_i b_j)) = sign(W_ij) for positive scales, so ARB's
+    // refinement bites via the row/column scale updates below.
+    let signs = w.signum();
     for _ in 0..iters {
         // B = sign(W) is optimal given positive scales; keep but refit scales
         // against the current residual structure.
@@ -198,10 +213,6 @@ pub fn arb_style(w: &Mat, iters: usize) -> QuantResult {
             }
             b[j] = (num / aa.max(1e-30)).max(0.0) as f32;
         }
-        // Refit B given scales: sign(W_ij / (a_i b_j)) = sign(W_ij) for
-        // positive scales, so B is stable — ARB's refinement bites via the
-        // row/column residual rescaling above.
-        signs = w.signum();
     }
     for v in a.iter_mut() {
         *v = f16_round(*v);
@@ -209,7 +220,16 @@ pub fn arb_style(w: &Mat, iters: usize) -> QuantResult {
     for v in b.iter_mut() {
         *v = f16_round(*v);
     }
-    let recon = signs.scale_rows(&a).scale_cols(&b);
+    (a, b)
+}
+
+/// ARB-LLM-style alternating refined binarization (RC variant):
+/// `Ŵ = diag(a) · B · diag(b)` with B=sign refit against the scaled
+/// residual each iteration — alternate (B | a | b) updates to a local optimum.
+pub fn arb_style(w: &Mat, iters: usize) -> QuantResult {
+    let (m, n) = w.shape();
+    let (a, b) = arb_scales(w, iters);
+    let recon = w.signum().scale_rows(&a).scale_cols(&b);
     QuantResult {
         reconstruction: recon,
         bits: memory::arb_bits(m, n, 128, 128),
@@ -217,14 +237,23 @@ pub fn arb_style(w: &Mat, iters: usize) -> QuantResult {
     }
 }
 
+/// The Strategy A core: rank-`rank` randomized SVD (oversample/power
+/// constants fixed here, nowhere else) split into balanced factors and
+/// rounded to FP16 — `Ŵ = U·Vᵀ`. Shared by the reconstruction-level
+/// [`tiny_rank_fp16`] baseline and the serving-form `quant::Compressor`
+/// implementation, so the two views cannot drift.
+pub(crate) fn tiny_rank_factors(w: &Mat, rank: usize, rng: &mut Pcg64) -> (Mat, Mat) {
+    let svd = svd_randomized(w, rank, 8.min(rank + 4), 2, rng);
+    let (u, v) = svd.split_factors();
+    (u.to_f16_precision(), v.to_f16_precision())
+}
+
 /// Strategy A: truncated SVD stored in FP16 — `U_r·diag(σ)·V_rᵀ` with all
 /// three factors rounded to half precision.
 pub fn tiny_rank_fp16(w: &Mat, rank: usize, rng: &mut Pcg64) -> QuantResult {
-    let svd = svd_randomized(w, rank, 8.min(rank + 4), 2, rng);
-    let (u, v) = svd.split_factors();
-    let recon = u.to_f16_precision().matmul_t(&v.to_f16_precision());
+    let (u, v) = tiny_rank_factors(w, rank, rng);
     QuantResult {
-        reconstruction: recon,
+        reconstruction: u.matmul_t(&v),
         bits: memory::tiny_rank_fp16_bits(w.rows(), w.cols(), rank),
         method: "tiny_rank_fp16",
     }

@@ -17,12 +17,20 @@
 //! * [`arb_style`] — alternating refined binarization (ARB-LLM-like):
 //!   iteratively refit row+column scales and the binary code.
 //! * [`tiny_rank_fp16`] — Strategy A: truncated SVD stored at FP16.
+//!
+//! Since PR 5 every method — LittleBit-2 included — also implements the
+//! method-generic [`Compressor`] trait (weight in, servable
+//! [`crate::model::MethodLayer`] out); [`MethodSpec`] is the cloneable
+//! registry form behind `compress --method ...` and the `eval` sweep. See
+//! ARCHITECTURE.md "Method registry".
 
 mod baselines;
 mod binary;
+mod compressor;
 
 pub use baselines::{arb_style, billm_style, onebit, rtn, tiny_rank_fp16, QuantResult};
 pub use binary::{binarize_optimal, local_distortion, row_distortions, BinVec};
+pub use compressor::{Compressor, LittleBit2Compressor, MethodSpec, METHOD_NAMES};
 
 #[cfg(test)]
 mod tests {

@@ -181,7 +181,8 @@ fn broken_chain_rejected() {
     let sa = take(&bytes_a);
     let sb = take(&bytes_b);
     // Splice: META, STAK claiming depth 2 with both layers' true shapes,
-    // then layer A and layer B — shapes honest, chain broken.
+    // then layer A and layer B (each a v2 METH + LAYR section pair) —
+    // shapes honest, chain broken.
     let mut head = Vec::new();
     head.extend_from_slice(&2u32.to_le_bytes());
     head.extend_from_slice(&sa[1].1[4..16]); // layer A (d_in, d_out, paths)
@@ -189,8 +190,9 @@ fn broken_chain_rejected() {
     let mut w = ArtifactWriter::new(Vec::new()).unwrap();
     w.section(TAG_META, b"test").unwrap();
     w.section(TAG_STACK, &head).unwrap();
-    w.section(sa[2].0, &sa[2].1).unwrap();
-    w.section(sb[2].0, &sb[2].1).unwrap();
+    for (tag, body) in [&sa[2], &sa[3], &sb[2], &sb[3]] {
+        w.section(*tag, body).unwrap();
+    }
     let spliced = w.finish().unwrap();
     let err = read_stack(&spliced).unwrap_err();
     assert!(format!("{err:?}").contains("chain mismatch"), "{err:?}");

@@ -11,6 +11,7 @@ use littlebit2::artifact::StackStreamWriter;
 use littlebit2::coordinator::{run_compression_jobs_streaming, CompressionJob, JobInput};
 use littlebit2::littlebit::{CompressionConfig, InitStrategy};
 use littlebit2::model::PackedStack;
+use littlebit2::quant::MethodSpec;
 use littlebit2::rng::derive_seed;
 use littlebit2::spectral::SynthSpec;
 use std::path::PathBuf;
@@ -29,7 +30,7 @@ fn jobs(layers: usize, size: usize, base_seed: u64) -> Vec<CompressionJob> {
                 spec: SynthSpec { rows: size, cols: size, gamma: 0.3, coherence: 0.7, scale: 1.0 },
                 seed: derive_seed(base_seed, 2 * k as u64),
             },
-            cfg: cfg.clone(),
+            method: MethodSpec::LittleBit2(cfg.clone()),
             seed: derive_seed(base_seed, 2 * k as u64 + 1),
         })
         .collect()
@@ -55,7 +56,7 @@ fn stream_artifact(workers: usize, tag: &str) -> Vec<u8> {
     let path = tmp_path(tag);
     let mut writer = StackStreamWriter::create(&path, &shapes_of(&jobs)).unwrap();
     run_compression_jobs_streaming(jobs, workers, |_, outcome| {
-        writer.append_layer(&outcome.packed)?;
+        writer.append(&outcome.result.method, &outcome.layer)?;
         Ok(())
     })
     .unwrap();
@@ -90,8 +91,8 @@ fn stream_writer_matches_batch_save() {
     let mut writer = StackStreamWriter::create(&stream_path, &shapes).unwrap();
     let mut layers = Vec::new();
     run_compression_jobs_streaming(jobs, 2, |_, outcome| {
-        writer.append_layer(&outcome.packed)?;
-        layers.push(outcome.packed);
+        writer.append(&outcome.result.method, &outcome.layer)?;
+        layers.push(outcome.layer.into_packed().unwrap());
         Ok(())
     })
     .unwrap();
@@ -118,7 +119,7 @@ fn stream_writer_validates_shapes_and_completion() {
     let mut first = None;
     run_compression_jobs_streaming(jobs.clone(), 1, |_, outcome| {
         if first.is_none() {
-            first = Some(outcome.packed);
+            first = Some(outcome.layer.into_packed().unwrap());
         }
         Ok(())
     })
@@ -150,7 +151,7 @@ fn layers_are_independent_of_preceding_layers() {
     let collect = |js: Vec<CompressionJob>| {
         let mut out = Vec::new();
         run_compression_jobs_streaming(js, 1, |_, oc| {
-            out.push(oc.packed);
+            out.push(oc.layer.into_packed().unwrap());
             Ok(())
         })
         .unwrap();

@@ -123,7 +123,7 @@ fn zoo_compression_pipeline() {
             )
         })
         .collect();
-    let results = run_compression_jobs(jobs, 2);
+    let results = run_compression_jobs(jobs, 2).unwrap();
     assert_eq!(results.len(), 7);
     for r in &results {
         assert!(r.mse.is_finite());

@@ -1,0 +1,416 @@
+//! The method-generic engine contract, end to end: every registered
+//! method compresses → saves (`.lb2` v2) → loads → serves **bit-exactly**;
+//! a frozen v1 artifact still decodes as an all-`Packed` littlebit2 stack
+//! with bit-identical forwards; and every malformed METHOD tag, spliced
+//! payload, truncation, or bit flip is an `Err` — never a panic.
+
+use littlebit2::artifact::{
+    read_method_stack, write_stack_v1, ArtifactReader, ArtifactWriter, TAG_META, TAG_METHOD,
+    TAG_STACK,
+};
+use littlebit2::coordinator::{InferenceServer, MethodStackBackend, ServerConfig};
+use littlebit2::linalg::Mat;
+use littlebit2::littlebit::{CompressionConfig, InitStrategy};
+use littlebit2::model::{MethodStack, MethodStackLayer, PackedStack};
+use littlebit2::parallel::Pool;
+use littlebit2::quant::{MethodSpec, METHOD_NAMES};
+use littlebit2::rng::Pcg64;
+use littlebit2::spectral::{synth_weight, SynthSpec};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Synthetic heavy-tailed chain weights; every dim deliberately not a
+/// multiple of 64 so the packed variants carry ragged tail words.
+fn chain_weights(dims: &[usize], seed: u64) -> Vec<Mat> {
+    let mut rng = Pcg64::seed(seed);
+    dims.windows(2)
+        .map(|w| {
+            let spec =
+                SynthSpec { rows: w[1], cols: w[0], gamma: 0.3, coherence: 0.6, scale: 1.0 };
+            synth_weight(&spec, &mut rng)
+        })
+        .collect()
+}
+
+/// Compress a chain with one method via the `Compressor` registry.
+fn method_stack(method: &MethodSpec, dims: &[usize], seed: u64) -> MethodStack {
+    let weights = chain_weights(dims, seed);
+    let compressor = method.compressor();
+    let mut rng = Pcg64::seed(seed ^ 0x5eed);
+    let layers = weights
+        .iter()
+        .map(|w| compressor.compress_layer(w, Pool::serial(), &mut rng).unwrap())
+        .collect();
+    MethodStack::uniform(method.name(), layers).unwrap()
+}
+
+fn all_method_specs() -> Vec<MethodSpec> {
+    METHOD_NAMES
+        .iter()
+        .map(|name| {
+            MethodSpec::parse(name, 1.0, InitStrategy::JointItq { iters: 8 }).unwrap()
+        })
+        .collect()
+}
+
+/// The acceptance pipeline, per method: compress → v2 bytes → load →
+/// bit-identical representation AND bit-identical batched forwards —
+/// then through actual files and the serving pool.
+#[test]
+fn every_method_roundtrips_bit_exactly() {
+    for spec in all_method_specs() {
+        let stack = method_stack(&spec, &[44, 70, 44], 11);
+        let bytes = stack.to_artifact_bytes().unwrap();
+        let loaded = MethodStack::from_artifact_bytes(&bytes).unwrap();
+        assert_eq!(loaded, stack, "{}: representation must round-trip verbatim", spec.name());
+        assert_eq!(loaded.method_summary(), spec.name());
+
+        let mut rng = Pcg64::seed(12);
+        let b = 5;
+        let mut x = Mat::zeros(44, b);
+        rng.fill_normal(x.as_mut_slice());
+        let want = stack.forward_batch(&x);
+        let got = loaded.forward_batch(&x);
+        for t in 0..b {
+            for i in 0..44 {
+                assert_eq!(
+                    got.at(i, t).to_bits(),
+                    want.at(i, t).to_bits(),
+                    "{}: loaded forward differs at ({i},{t})",
+                    spec.name()
+                );
+            }
+        }
+    }
+}
+
+/// compress → save file → load → SERVE, per method: responses off the
+/// multi-worker pool running the loaded artifact are bit-identical to the
+/// original stack's forwards. (`--method onebit` end-to-end is the
+/// issue's named acceptance case; every other method rides the same
+/// assertion.)
+#[test]
+fn every_method_serves_loaded_artifact_bit_exactly() {
+    for spec in all_method_specs() {
+        let stack = method_stack(&spec, &[40, 56], 21);
+        let path = std::env::temp_dir().join(format!(
+            "lb2_method_{}_{}.lb2",
+            spec.name(),
+            std::process::id()
+        ));
+        stack.save(&path).unwrap();
+        let loaded = Arc::new(MethodStack::load(&path).unwrap());
+        let _ = std::fs::remove_file(&path);
+
+        let server = InferenceServer::start_pool(
+            ServerConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(2),
+                queue_depth: 64,
+                workers: 2,
+            },
+            |_worker| MethodStackBackend::new(Arc::clone(&loaded), 2),
+        );
+        let mut rng = Pcg64::seed(22);
+        let mut inputs = Vec::new();
+        for _ in 0..8 {
+            let mut x = vec![0.0f32; 40];
+            rng.fill_normal(&mut x);
+            inputs.push(x);
+        }
+        let rxs: Vec<_> = inputs
+            .iter()
+            .enumerate()
+            .map(|(i, x)| server.submit(i as u64, x.clone()))
+            .collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let resp = rx.recv().unwrap();
+            let want = stack.forward(&inputs[i]);
+            for (j, (a, b)) in resp.output.iter().zip(&want).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{}: request {i} output {j}",
+                    spec.name()
+                );
+            }
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.failed, 0, "{}", spec.name());
+    }
+}
+
+/// A mixed-method chain (one layer per serving-form variant) survives the
+/// full artifact roundtrip with bit-exact forwards.
+#[test]
+fn mixed_method_chain_roundtrips() {
+    let weights = chain_weights(&[44, 70, 52, 44, 60], 31);
+    let specs = [
+        MethodSpec::parse("littlebit2", 1.0, InitStrategy::JointItq { iters: 8 }).unwrap(),
+        MethodSpec::OneBit { als_iters: 10 },
+        MethodSpec::Rtn { k: 2, group: 32 },
+        MethodSpec::TinyRankFp16 { bpp: 1.0 },
+    ];
+    let mut rng = Pcg64::seed(32);
+    let layers: Vec<MethodStackLayer> = weights
+        .iter()
+        .zip(&specs)
+        .map(|(w, spec)| MethodStackLayer {
+            method: spec.name().to_string(),
+            layer: spec.compressor().compress_layer(w, Pool::serial(), &mut rng).unwrap(),
+        })
+        .collect();
+    let stack = MethodStack::try_new(layers).unwrap();
+    assert_eq!(stack.method_summary(), "mixed");
+
+    let loaded = MethodStack::from_artifact_bytes(&stack.to_artifact_bytes().unwrap()).unwrap();
+    assert_eq!(loaded, stack);
+    let mut x = Mat::zeros(44, 3);
+    rng.fill_normal(x.as_mut_slice());
+    assert_eq!(loaded.forward_batch(&x), stack.forward_batch(&x));
+    // Methods survive per layer, in order.
+    let methods: Vec<&str> = loaded.layers().iter().map(|l| l.method.as_str()).collect();
+    assert_eq!(methods, vec!["littlebit2", "onebit", "rtn", "tinyrank"]);
+}
+
+/// v1 back-compat: bytes produced by the frozen v1 emitter (what PR 3/4
+/// builds wrote) load under the v2 reader as an all-`Packed` littlebit2
+/// stack whose forwards are bit-identical — through both the
+/// `MethodStack` and the legacy `PackedStack` entry points.
+#[test]
+fn v1_artifact_loads_as_packed_stack_bit_exactly() {
+    let weights = chain_weights(&[70, 90, 70], 41);
+    let cfg = CompressionConfig {
+        bpp: 1.0,
+        strategy: InitStrategy::JointItq { iters: 8 },
+        residual: true,
+        ..Default::default()
+    };
+    let mut rng = Pcg64::seed(42);
+    let packed = PackedStack::compress_chain(&weights, &cfg, &mut rng);
+    let v1_bytes = write_stack_v1(&packed, Vec::new()).unwrap();
+    assert_eq!(
+        &v1_bytes[4..8],
+        1u32.to_le_bytes().as_slice(),
+        "fixture must be format v1"
+    );
+
+    // v2 reader, method entry point: all layers Packed + littlebit2.
+    let via_method = MethodStack::from_artifact_bytes(&v1_bytes).unwrap();
+    assert_eq!(via_method.method_summary(), "littlebit2");
+    assert_eq!(via_method.depth(), 2);
+    // Legacy packed entry point still reads v1 directly.
+    let via_packed = PackedStack::from_artifact_bytes(&v1_bytes).unwrap();
+    assert_eq!(via_packed, packed, "v1 decode must reproduce the packed representation");
+
+    let mut x = Mat::zeros(70, 4);
+    rng.fill_normal(x.as_mut_slice());
+    let want = packed.forward_batch(&x);
+    assert_eq!(via_method.forward_batch(&x), want);
+    assert_eq!(via_packed.forward_batch(&x), want);
+
+    // And a v1 fixture re-saved through the modern path upgrades to v2
+    // with identical numbers.
+    let v2_bytes = via_method.to_artifact_bytes().unwrap();
+    assert_eq!(&v2_bytes[4..8], 2u32.to_le_bytes().as_slice());
+    let upgraded = MethodStack::from_artifact_bytes(&v2_bytes).unwrap();
+    assert_eq!(upgraded.forward_batch(&x), want);
+}
+
+/// The truncate-every-byte / flip-every-byte harness (from
+/// `artifact_roundtrip.rs`), run against a **mixed-method v2** artifact:
+/// every prefix and every one-bit corruption is an `Err`, never a panic.
+#[test]
+fn corrupt_v2_matrix_never_panics() {
+    let weights = chain_weights(&[33, 40], 51);
+    let specs =
+        [MethodSpec::OneBit { als_iters: 5 }, MethodSpec::TinyRankFp16 { bpp: 1.0 }];
+    let mut rng = Pcg64::seed(52);
+    // Two single-layer stacks → two artifacts exercised; keep sizes tiny
+    // because the harness is O(bytes²).
+    for spec in specs {
+        let layer = spec.compressor().compress_layer(&weights[0], Pool::serial(), &mut rng);
+        let stack = MethodStack::uniform(spec.name(), vec![layer.unwrap()]).unwrap();
+        let bytes = stack.to_artifact_bytes().unwrap();
+
+        for len in 0..bytes.len() {
+            let prefix = bytes[..len].to_vec();
+            let result = std::panic::catch_unwind(|| read_method_stack(&prefix));
+            match result {
+                Ok(r) => {
+                    assert!(r.is_err(), "{}: truncation to {len} bytes parsed", spec.name())
+                }
+                Err(_) => panic!("{}: truncation to {len} bytes PANICKED", spec.name()),
+            }
+        }
+        for i in 0..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0x01;
+            let result = std::panic::catch_unwind(|| read_method_stack(&bad));
+            match result {
+                Ok(r) => assert!(r.is_err(), "{}: bit flip at byte {i} parsed", spec.name()),
+                Err(_) => panic!("{}: bit flip at byte {i} PANICKED", spec.name()),
+            }
+        }
+    }
+}
+
+/// Rebuild a valid artifact with one section's payload swapped — valid
+/// CRC and framing, so only the METHOD-tag semantic checks can reject it.
+fn resplice(bytes: &[u8], mutate: impl FnOnce(&mut Vec<([u8; 4], Vec<u8>)>)) -> Vec<u8> {
+    let mut r = ArtifactReader::new(bytes).unwrap();
+    let mut sections = Vec::new();
+    while let Some((tag, body)) = r.next_section() {
+        sections.push((tag, body.to_vec()));
+    }
+    mutate(&mut sections);
+    let mut w = ArtifactWriter::new(Vec::new()).unwrap();
+    for (tag, body) in &sections {
+        w.section(*tag, body).unwrap();
+    }
+    w.finish().unwrap()
+}
+
+/// Corrupt METHOD tags — unknown variant code, truncated/lying name
+/// length, name/payload tag mismatch, missing METH section — are all
+/// `Err` naming the problem, never a panic or a mis-decoded layer.
+#[test]
+fn corrupt_method_tags_rejected() {
+    let spec = MethodSpec::OneBit { als_iters: 5 };
+    let stack = method_stack(&spec, &[33, 40], 61);
+    let bytes = stack.to_artifact_bytes().unwrap();
+    // Sections: [META, STAK, METH, SGNS].
+    {
+        let mut r = ArtifactReader::new(&bytes).unwrap();
+        let tags: Vec<[u8; 4]> = std::iter::from_fn(|| r.next_section().map(|(t, _)| t)).collect();
+        assert_eq!(tags, vec![TAG_META, TAG_STACK, TAG_METHOD, *b"SGNS"]);
+    }
+
+    // Unknown variant code.
+    let bad = resplice(&bytes, |s| s[2].1[0] = 9);
+    let err = read_method_stack(&bad).unwrap_err();
+    assert!(format!("{err:?}").contains("variant"), "{err:?}");
+
+    // Name length lies about the section size.
+    let bad = resplice(&bytes, |s| s[2].1[1] = 200);
+    assert!(read_method_stack(&bad).is_err());
+
+    // Non-printable method name bytes.
+    let bad = resplice(&bytes, |s| s[2].1[2] = 0x07);
+    assert!(read_method_stack(&bad).is_err());
+
+    // Variant code pins the payload tag: claim packed, supply SGNS.
+    let bad = resplice(&bytes, |s| s[2].1[0] = 1);
+    let err = read_method_stack(&bad).unwrap_err();
+    assert!(format!("{err:?}").contains("payload"), "{err:?}");
+
+    // Drop the METH section entirely: v2 requires it before each payload.
+    let bad = resplice(&bytes, |s| {
+        s.remove(2);
+    });
+    let err = read_method_stack(&bad).unwrap_err();
+    assert!(format!("{err:?}").contains("METH"), "{err:?}");
+
+    // Swap in a DNSE payload whose shape matches the table but whose tag
+    // contradicts the sign variant.
+    let bad = resplice(&bytes, |s| s[3].0 = *b"DNSE");
+    assert!(read_method_stack(&bad).is_err());
+
+    // The intact bytes still load (the resplice harness itself is sound).
+    assert!(read_method_stack(&bytes).is_ok());
+}
+
+/// The exact v2 layer-payload byte count, derived from the layer's public
+/// shape — the independently-written oracle the on-disk audit checks the
+/// encoders against (EXPERIMENTS.md §Artifact records the reconciliation
+/// between these sizes and the declared App. H bits).
+fn expected_payload_bytes(layer: &littlebit2::model::MethodLayer) -> usize {
+    use littlebit2::model::MethodLayer;
+    match layer {
+        MethodLayer::Packed(l) => {
+            4 + l
+                .paths()
+                .iter()
+                .map(|p| {
+                    12 + 4 * (p.d_out() + p.rank() + p.d_in())
+                        + 8 * (p.d_out() * p.rank().div_ceil(64)
+                            + p.rank() * p.d_in().div_ceil(64))
+                })
+                .sum::<usize>()
+        }
+        MethodLayer::SignScaled(l) => {
+            16 + 4 * (l.d_out() + l.d_in()) + 8 * l.d_out() * l.d_in().div_ceil(64)
+        }
+        MethodLayer::DenseScaled(l) => 16 + 4 * l.d_out() * l.d_in(),
+        MethodLayer::LowRankFp(l) => {
+            20 + 4 * (l.d_out() * l.rank() + l.rank() * l.d_in())
+        }
+    }
+}
+
+/// Declared-vs-disk accounting audit (the EXPERIMENTS.md §Artifact
+/// reconciliation, as a pinned test). Per method: the artifact's size is
+/// exactly the per-variant payload (scales at f32, bit-planes word-padded
+/// per row) plus bounded container framing — so every byte of drift
+/// between `declared_bits()` (App. H / `QuantResult::bpp` accounting) and
+/// the file is attributable to the three documented terms: f32-on-disk
+/// scales, tail-word padding, and O(sections) framing. Dense-form
+/// baselines persist their f32 reconstruction (32 bpp on disk) while
+/// their declared accounting stays method-faithful — by design.
+#[test]
+fn declared_vs_disk_accounting_reconciles() {
+    let dims = [60, 100]; // ragged: tail-word padding must be accounted
+    let params = (dims[0] * dims[1]) as f64;
+    for spec in all_method_specs() {
+        let stack = method_stack(&spec, &dims, 71);
+        let bytes = stack.to_artifact_bytes().unwrap();
+        let payload: usize =
+            stack.layers().iter().map(|l| expected_payload_bytes(&l.layer)).sum();
+        // Framing: 8 header + META/STAK/METH sections + per-section 12-byte
+        // tag+len + 20 trailer — bounded, independent of weight bytes.
+        let framing = bytes.len() as i64 - payload as i64;
+        assert!(
+            (0..=300).contains(&framing),
+            "{}: file {} vs payload {payload} (framing {framing})",
+            spec.name(),
+            bytes.len()
+        );
+        match spec.name() {
+            // Disk adds slack (f32 scales, padding, framing) but never
+            // hides bits: declared ≤ disk for these serving forms.
+            name @ ("littlebit2" | "onebit" | "tinyrank") => assert!(
+                stack.declared_bits() as f64 / 8.0 <= bytes.len() as f64,
+                "{name}: declared exceeds disk"
+            ),
+            // ARB declares the full App. H Eq. 24 structure (residual
+            // copies + bitmaps) while this repo serves the collapsed
+            // diag(a)·B·diag(b) — declared intentionally exceeds disk
+            // (recorded in EXPERIMENTS.md §Artifact).
+            "arb" => assert!(
+                stack.declared_bits() as f64 / 8.0 > bytes.len() as f64,
+                "arb: Eq. 24 accounting should exceed the collapsed serving form"
+            ),
+            // Dense-form baselines are 32 bpp on disk with
+            // method-faithful declared bits (the recorded deviation).
+            name => {
+                let disk_bpp = bytes.len() as f64 * 8.0 / params;
+                assert!(disk_bpp > 32.0 && disk_bpp < 34.0, "{name}: disk bpp {disk_bpp}");
+                assert!(stack.declared_bits() as f64 / params < 8.0, "{name}");
+            }
+        }
+    }
+}
+
+/// The RTN group-accounting regression at the QuantResult level: per-row
+/// ragged groups are charged per row (the quantizer's actual layout), so
+/// declared bpp matches a hand count on a ragged shape.
+#[test]
+fn rtn_bpp_accounts_ragged_groups_per_row() {
+    let mut rng = Pcg64::seed(81);
+    let w = Mat::gaussian(3, 100, &mut rng);
+    let q = littlebit2::quant::rtn(&w, 2, 64);
+    // 3 rows × 2 groups each (64 + 36), 32 bits of FP16 scale+zero per
+    // group, 2 bits per weight.
+    assert_eq!(q.bits, 300 * 2 + 6 * 32);
+    assert!((q.bpp() - (600.0 + 192.0) / 300.0).abs() < 1e-12);
+}
