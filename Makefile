@@ -4,7 +4,7 @@
 # PJRT-gated paths (`--features xla`): the train CLI, examples/e2e_qat,
 # tests/runtime_e2e.
 
-.PHONY: build test bench bench-build bench-gemm bench-compress clippy artifacts doc roundtrip eval
+.PHONY: build test bench bench-build bench-gemm bench-compress clippy artifacts doc roundtrip eval serve-smoke
 
 build:
 	cargo build --release
@@ -28,6 +28,24 @@ roundtrip: build
 	# method (OneBit) must survive the same compress→save→load→serve loop.
 	cargo run --release -- compress --method onebit --size 48 --layers 2 --out target/roundtrip_onebit.lb2
 	cargo run --release -- serve --model target/roundtrip_onebit.lb2 --workers 2 --batch 8 --requests 32
+
+# Loopback TCP smoke: compress a tiny model, `serve --listen` it in the
+# background, then drive 64 pipelined requests over 4 connections with
+# the sequential-replay bit-identity check (--verify 1: every wire reply
+# must be byte-for-byte stable across batch shapes), scrape the metrics
+# frame, and shut the server down over the wire. `wait` propagates the
+# server's exit code so either side of the socket failing fails the
+# target; --serve-secs 60 is the watchdog that unhangs CI if the client
+# dies before sending SHUTDOWN. Run by the build-test CI job.
+serve-smoke: build
+	cargo run --release -- compress --size 48 --layers 2 --bpp 1.0 --out target/serve_smoke.lb2
+	cargo run --release -- serve --model target/serve_smoke.lb2 --listen 127.0.0.1:41512 --workers 2 --batch 8 --serve-secs 60 & \
+	srv=$$!; \
+	sleep 1; \
+	rc=0; \
+	cargo run --release -- client --connect 127.0.0.1:41512 --width 48 --requests 64 --concurrency 4 --verify 1 --stats 1 --shutdown 1 || rc=$$?; \
+	wait $$srv || rc=$$?; \
+	exit $$rc
 
 # The methods × bpp fidelity/throughput sweep (Table 1 shape) at bounded
 # sizes; refreshes BENCH_methods.json at the repo root. Run by the

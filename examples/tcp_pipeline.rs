@@ -1,0 +1,117 @@
+//! TCP serving demo: the whole wire in one process — compress a synthetic
+//! chain, serve it on a loopback `TcpFrontend`, hammer it with concurrent
+//! wire-protocol clients, and verify every response bit-matches the
+//! in-process forward before draining the server with a SHUTDOWN frame.
+//!
+//! This is the network edition of `examples/serve.rs`: requests from many
+//! sockets coalesce into single `forward_batch_into` calls (cross-
+//! connection dynamic batching), admission control answers BUSY instead
+//! of queueing unboundedly, and the metrics frame shows the batch-fill
+//! histogram the batching bought.
+//!
+//! ```bash
+//! cargo run --release --example tcp_pipeline [clients] [requests_per_client] [d] [bpp]
+//! ```
+
+use littlebit2::coordinator::{MethodStackBackend, ServerConfig};
+use littlebit2::littlebit::InitStrategy;
+use littlebit2::model::MethodStack;
+use littlebit2::parallel::Pool;
+use littlebit2::quant::MethodSpec;
+use littlebit2::rng::Pcg64;
+use littlebit2::serving::{ServingConfig, TcpFrontend, WireClient};
+use littlebit2::spectral::{synth_weight, SynthSpec};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let clients: usize = args.first().map(|s| s.parse()).transpose()?.unwrap_or(4);
+    let per_client: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(64);
+    let d: usize = args.get(2).map(|s| s.parse()).transpose()?.unwrap_or(256);
+    let bpp: f64 = args.get(3).map(|s| s.parse()).transpose()?.unwrap_or(0.55);
+
+    // Compress a depth-2 chain (the quantize-once half).
+    let mut rng = Pcg64::seed(7);
+    let spec = MethodSpec::parse("littlebit2", bpp, InitStrategy::JointItq { iters: 30 })?;
+    let t0 = Instant::now();
+    let layers = (0..2)
+        .map(|_| {
+            let w = synth_weight(
+                &SynthSpec { rows: d, cols: d, gamma: 0.3, coherence: 0.7, scale: 1.0 },
+                &mut rng,
+            );
+            spec.compressor().compress_layer(&w, Pool::serial(), &mut rng)
+        })
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let stack = Arc::new(MethodStack::uniform("littlebit2", layers)?);
+    println!(
+        "compressed depth-{} chain ({d}x{d}, bpp {bpp}) in {:.2}s | serving form {} bytes",
+        stack.depth(),
+        t0.elapsed().as_secs_f64(),
+        stack.storage_bytes()
+    );
+
+    // Serve it over loopback TCP (the serve-from-many half).
+    let cfg = ServingConfig {
+        expect_width: Some(stack.d_in()),
+        batch: ServerConfig {
+            max_batch: 32,
+            max_wait: Duration::from_millis(2),
+            queue_depth: 1024,
+            workers: 2,
+        },
+        ..Default::default()
+    };
+    let backend_stack = Arc::clone(&stack);
+    let front = TcpFrontend::start("127.0.0.1:0", cfg, move |_worker| {
+        MethodStackBackend::new(Arc::clone(&backend_stack), 1)
+    })?;
+    let addr = front.local_addr();
+    println!("listening on {addr}; driving {clients} client(s) x {per_client} request(s)");
+
+    let t1 = Instant::now();
+    let mut threads = Vec::new();
+    for c in 0..clients {
+        let stack = Arc::clone(&stack);
+        threads.push(std::thread::spawn(move || -> anyhow::Result<usize> {
+            let mut client = WireClient::connect(addr)?;
+            let mut rng = Pcg64::seed(100 + c as u64);
+            let mut mismatches = 0;
+            for r in 0..per_client {
+                let mut x = vec![0.0f32; stack.d_in()];
+                rng.fill_normal(&mut x);
+                let got = client.infer((c * per_client + r) as u64, &x, 0)?;
+                let want = stack.forward(&x);
+                if got.len() != want.len()
+                    || got.iter().zip(&want).any(|(a, b)| a.to_bits() != b.to_bits())
+                {
+                    mismatches += 1;
+                }
+            }
+            Ok(mismatches)
+        }));
+    }
+    let mut mismatches = 0;
+    for t in threads {
+        mismatches += t.join().expect("client thread")?;
+    }
+    let wall = t1.elapsed().as_secs_f64();
+
+    let mut probe = WireClient::connect(addr)?;
+    println!("\n--- server metrics ---\n{}", probe.stats_text()?);
+    probe.shutdown_server()?;
+    let stats = front.shutdown();
+
+    let total = clients * per_client;
+    println!(
+        "{total} requests in {wall:.3}s ({:.0} req/s) | batches {} (mean size {:.1}) | verify: {}",
+        total as f64 / wall.max(1e-9),
+        stats.batches,
+        stats.mean_batch,
+        if mismatches == 0 { "every response bit-identical to in-process forward".to_string() }
+        else { format!("{mismatches} MISMATCHES") },
+    );
+    anyhow::ensure!(mismatches == 0, "wire responses diverged from in-process forward");
+    Ok(())
+}

@@ -31,7 +31,8 @@ pub use metrics::Metrics;
 pub use params::ParamStore;
 pub use server::{
     BatchBackend, InferenceServer, MethodStackBackend, PackedResidualBackend, PackedStackBackend,
-    Request, Response, ServerConfig, ServerStats,
+    ReplySink, Request, RequestOutcome, Response, ServerConfig, ServerStats, SubmitHandle,
+    TrySubmitError, FILL_BUCKETS, FILL_BUCKET_COUNT,
 };
 #[cfg(feature = "xla")]
 pub use trainer::{QakdOutcome, QatDriver, StudentVariant, TrainTrace};

@@ -22,7 +22,8 @@ use crate::linalg::Mat;
 use crate::model::{MethodStack, PackedStack};
 use crate::packing::{BatchScratch, PackedResidual, SignPool};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -35,9 +36,17 @@ const LAT_CAP: usize = 16_384;
 pub struct Request {
     pub id: u64,
     pub input: Vec<f32>,
-    /// Filled with the output and latency on completion.
-    pub reply: SyncSender<Response>,
+    /// Completion route: a per-request channel (in-process [`submit`]
+    /// path) or a shared per-connection sink (the TCP front-end's
+    /// response funnel).
+    ///
+    /// [`submit`]: InferenceServer::submit
+    reply: ReplyTx,
     enqueued: Instant,
+    /// Queue-time deadline: a request still waiting when this passes is
+    /// dropped at drain time with [`RequestOutcome::Expired`] instead of
+    /// spending a batch slot on an answer nobody is waiting for.
+    deadline: Option<Instant>,
 }
 
 /// Completed response.
@@ -47,6 +56,74 @@ pub struct Response {
     pub latency: Duration,
     pub batch_size: usize,
 }
+
+/// How a request left the server — the precise completion signal the
+/// sink-based submit path receives. (The legacy channel path keeps its
+/// original contract: only `Ok` is delivered; `Expired`/`Failed` surface
+/// as the caller's `RecvError` when the reply sender drops.)
+#[derive(Debug)]
+pub enum RequestOutcome {
+    /// Served: the batched forward produced this request's column.
+    Ok(Response),
+    /// The queue-time deadline passed before a worker drained it.
+    Expired,
+    /// The backend panicked or returned the wrong shape for its batch.
+    Failed,
+}
+
+/// Completion sink for [`SubmitHandle::try_submit`]. The TCP front-end
+/// hands every request of one connection the same funnel, so completions
+/// from any worker serialize onto that connection's writer thread without
+/// a per-request channel. `complete` is called exactly once per request,
+/// from a worker thread; implementations must not block (the worker is
+/// holding up its whole batch).
+pub trait ReplySink: Send {
+    fn complete(&self, id: u64, outcome: RequestOutcome);
+}
+
+/// Internal completion route (see [`Request::reply`]).
+enum ReplyTx {
+    /// [`InferenceServer::submit`]: one bounded channel per request.
+    Channel(SyncSender<Response>),
+    /// [`SubmitHandle::try_submit`]: shared sink, precise outcome.
+    Sink(Box<dyn ReplySink>),
+}
+
+impl ReplyTx {
+    fn complete(&self, id: u64, outcome: RequestOutcome) {
+        match self {
+            ReplyTx::Channel(tx) => {
+                // Expired/Failed deliberately send nothing: dropping the
+                // sender (with the Request) is the pre-TCP failure signal.
+                if let RequestOutcome::Ok(resp) = outcome {
+                    let _ = tx.send(resp);
+                }
+            }
+            ReplyTx::Sink(sink) => sink.complete(id, outcome),
+        }
+    }
+}
+
+/// Why [`SubmitHandle::try_submit`] rejected a request at admission.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrySubmitError {
+    /// The bounded ingress queue is full — admission control says BUSY
+    /// now rather than unbounded memory later.
+    QueueFull,
+    /// The server is shutting down (ingress disconnected).
+    Closed,
+}
+
+impl std::fmt::Display for TrySubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TrySubmitError::QueueFull => write!(f, "ingress queue full"),
+            TrySubmitError::Closed => write!(f, "server shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for TrySubmitError {}
 
 /// Executes one drained batch as a single batched forward call.
 ///
@@ -207,6 +284,21 @@ impl Default for ServerConfig {
     }
 }
 
+/// Upper bounds of the batch-fill histogram buckets; the implicit last
+/// bucket is +Inf. Power-of-two spacing: batching pays off in doublings.
+pub const FILL_BUCKETS: [usize; 7] = [1, 2, 4, 8, 16, 32, 64];
+
+/// Number of batch-fill buckets ([`FILL_BUCKETS`] plus the +Inf bucket).
+pub const FILL_BUCKET_COUNT: usize = FILL_BUCKETS.len() + 1;
+
+/// Histogram bucket index for a batch of `bsize` requests: bucket `i`
+/// covers `(FILL_BUCKETS[i-1], FILL_BUCKETS[i]]`, the last bucket is
+/// everything above 64.
+fn fill_bucket(bsize: usize) -> usize {
+    (usize::BITS - bsize.saturating_sub(1).leading_zeros())
+        .min(FILL_BUCKET_COUNT as u32 - 1) as usize
+}
+
 /// Aggregate serving statistics.
 #[derive(Clone, Debug, Default)]
 pub struct ServerStats {
@@ -223,6 +315,49 @@ pub struct ServerStats {
     /// Requests whose batch execution panicked or returned the wrong shape
     /// (their reply channels are dropped; clients observe a recv error).
     pub failed: u64,
+    /// Requests rejected at admission (bounded queue full → BUSY).
+    pub rejected: u64,
+    /// Requests dropped at drain time because their deadline had passed.
+    pub deadline_missed: u64,
+    /// Requests currently waiting in the ingress queue (gauge).
+    pub queue_depth: usize,
+    /// Batch-fill histogram (non-cumulative counts per [`fill_bucket`]
+    /// bucket: ≤1, ≤2, ≤4, … ≤64, +Inf).
+    pub batch_fill: [u64; FILL_BUCKET_COUNT],
+}
+
+impl ServerStats {
+    /// Plain-text metrics dump (Prometheus-style exposition format) — the
+    /// payload of the wire protocol's STATS frame, also printed by the
+    /// CLI after a `serve --listen` run.
+    pub fn render_metrics(&self) -> String {
+        use std::fmt::Write;
+        let mut s = String::new();
+        let _ = writeln!(s, "lb2_requests_served_total {}", self.served);
+        let _ = writeln!(s, "lb2_requests_failed_total {}", self.failed);
+        let _ = writeln!(s, "lb2_requests_rejected_total {}", self.rejected);
+        let _ = writeln!(s, "lb2_requests_deadline_missed_total {}", self.deadline_missed);
+        let _ = writeln!(s, "lb2_queue_depth {}", self.queue_depth);
+        let _ = writeln!(s, "lb2_batches_total {}", self.batches);
+        let _ = writeln!(s, "lb2_batch_mean_size {:.3}", self.mean_batch);
+        let mut cum = 0u64;
+        for (i, &count) in self.batch_fill.iter().enumerate() {
+            cum += count;
+            match FILL_BUCKETS.get(i) {
+                Some(le) => {
+                    let _ = writeln!(s, "lb2_batch_fill_bucket{{le=\"{le}\"}} {cum}");
+                }
+                None => {
+                    let _ = writeln!(s, "lb2_batch_fill_bucket{{le=\"+Inf\"}} {cum}");
+                }
+            }
+        }
+        let _ = writeln!(s, "lb2_latency_p50_ms {:.4}", self.p50_ms);
+        let _ = writeln!(s, "lb2_latency_p99_ms {:.4}", self.p99_ms);
+        let _ = writeln!(s, "lb2_tokens_per_s {:.1}", self.tokens_per_s);
+        let _ = writeln!(s, "lb2_batch_tokens_per_s {:.1}", self.mean_batch_tokens_per_s);
+        s
+    }
 }
 
 /// The server: owns the queue and worker pool. `tx` is an Option so
@@ -232,14 +367,75 @@ pub struct InferenceServer {
     tx: Option<SyncSender<Request>>,
     workers: Vec<JoinHandle<()>>,
     stats: Arc<Mutex<StatsInner>>,
+    queue_depth: Arc<AtomicUsize>,
+}
+
+/// Cloneable ingress handle — what the TCP front-end's connection threads
+/// hold. Submission through a handle never blocks: the bounded queue is
+/// the admission-control boundary ([`TrySubmitError::QueueFull`] → BUSY on
+/// the wire). Every clone keeps the ingress channel alive, so drop all
+/// handles before expecting [`InferenceServer::shutdown`]'s workers to
+/// observe disconnection.
+#[derive(Clone)]
+pub struct SubmitHandle {
+    tx: SyncSender<Request>,
+    stats: Arc<Mutex<StatsInner>>,
+    queue_depth: Arc<AtomicUsize>,
+}
+
+impl SubmitHandle {
+    /// Non-blocking submit with an optional queue-time deadline and a
+    /// completion sink. On success the sink's `complete` fires exactly
+    /// once (from a worker thread) with the request's
+    /// [`RequestOutcome`]; on `Err` the sink is returned to the caller
+    /// unused (inside the dropped request) and nothing fires.
+    pub fn try_submit(
+        &self,
+        id: u64,
+        input: Vec<f32>,
+        deadline: Option<Instant>,
+        sink: Box<dyn ReplySink>,
+    ) -> Result<(), TrySubmitError> {
+        let req = Request {
+            id,
+            input,
+            reply: ReplyTx::Sink(sink),
+            enqueued: Instant::now(),
+            deadline,
+        };
+        // Gauge before send: the worker-side decrement can never observe
+        // a count it outruns.
+        self.queue_depth.fetch_add(1, Ordering::SeqCst);
+        match self.tx.try_send(req) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                self.queue_depth.fetch_sub(1, Ordering::SeqCst);
+                match e {
+                    TrySendError::Full(_) => {
+                        self.stats.lock().expect("stats lock").rejected += 1;
+                        Err(TrySubmitError::QueueFull)
+                    }
+                    TrySendError::Disconnected(_) => Err(TrySubmitError::Closed),
+                }
+            }
+        }
+    }
+
+    /// Snapshot statistics (same numbers as [`InferenceServer::stats`]).
+    pub fn stats(&self) -> ServerStats {
+        snapshot(&self.stats, &self.queue_depth)
+    }
 }
 
 struct StatsInner {
     started: Instant,
     served: u64,
     failed: u64,
+    rejected: u64,
+    deadline_missed: u64,
     batches: u64,
     batch_total: u64,
+    fill_hist: [u64; FILL_BUCKET_COUNT],
     /// Ring buffer of the most recent `LAT_CAP` request latencies —
     /// bounded memory; percentiles reflect the recent window.
     latencies_ms: Vec<f64>,
@@ -256,8 +452,11 @@ impl StatsInner {
             started: Instant::now(),
             served: 0,
             failed: 0,
+            rejected: 0,
+            deadline_missed: 0,
             batches: 0,
             batch_total: 0,
+            fill_hist: [0; FILL_BUCKET_COUNT],
             latencies_ms: Vec::new(),
             lat_next: 0,
             rate_sum: 0.0,
@@ -322,17 +521,19 @@ impl InferenceServer {
         let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
         let rx = Arc::new(Mutex::new(rx));
         let stats = Arc::new(Mutex::new(StatsInner::new()));
+        let queue_depth = Arc::new(AtomicUsize::new(0));
         let mut workers = Vec::with_capacity(cfg.workers);
         for w in 0..cfg.workers {
             let rx = Arc::clone(&rx);
             let stats = Arc::clone(&stats);
+            let queue_depth = Arc::clone(&queue_depth);
             let mut backend = factory(w);
             let cfg = cfg.clone();
             workers.push(std::thread::spawn(move || {
-                Self::worker_loop(&rx, &cfg, &mut backend, &stats)
+                Self::worker_loop(&rx, &cfg, &mut backend, &stats, &queue_depth)
             }));
         }
-        Self { tx: Some(tx), workers, stats }
+        Self { tx: Some(tx), workers, stats, queue_depth }
     }
 
     fn worker_loop<B: BatchBackend>(
@@ -340,6 +541,7 @@ impl InferenceServer {
         cfg: &ServerConfig,
         backend: &mut B,
         stats: &Mutex<StatsInner>,
+        queue_depth: &AtomicUsize,
     ) {
         // Per-worker output buffer, reused across batches so the backend
         // hot path stays allocation-free (`Mat::resize` keeps capacity).
@@ -353,6 +555,7 @@ impl InferenceServer {
                     Ok(r) => r,
                     Err(_) => return, // all senders dropped: shut down
                 };
+                queue_depth.fetch_sub(1, Ordering::SeqCst);
                 let deadline = Instant::now() + cfg.max_wait;
                 let mut batch = vec![first];
                 while batch.len() < cfg.max_batch {
@@ -361,13 +564,37 @@ impl InferenceServer {
                         break;
                     }
                     match rx.recv_timeout(deadline - now) {
-                        Ok(r) => batch.push(r),
+                        Ok(r) => {
+                            queue_depth.fetch_sub(1, Ordering::SeqCst);
+                            batch.push(r);
+                        }
                         Err(RecvTimeoutError::Timeout) => break,
                         Err(RecvTimeoutError::Disconnected) => break,
                     }
                 }
                 batch
             };
+
+            // Per-request deadlines are a queue-time contract: anything
+            // that expired while waiting is completed as `Expired` here —
+            // never executed — so live requests get its batch slot and a
+            // stalled client cannot make the whole batch late.
+            let now = Instant::now();
+            let mut live = Vec::with_capacity(batch.len());
+            let mut expired = 0u64;
+            for req in batch {
+                match req.deadline {
+                    Some(d) if d <= now => {
+                        expired += 1;
+                        req.reply.complete(req.id, RequestOutcome::Expired);
+                    }
+                    _ => live.push(req),
+                }
+            }
+            if expired > 0 {
+                stats.lock().expect("stats lock").deadline_missed += expired;
+            }
+            let batch = live;
 
             // Requests of one drained batch may have different input widths
             // (legal since the beginning of this API); execute each maximal
@@ -424,12 +651,20 @@ impl InferenceServer {
                     y.cols()
                 );
                 stats.lock().expect("stats lock").failed += bsize as u64;
-                return; // replies drop: clients observe RecvError
+                for req in group {
+                    // Channel replies drop (clients observe RecvError);
+                    // sinks get the precise Failed outcome.
+                    req.reply.complete(req.id, RequestOutcome::Failed);
+                }
+                return;
             }
             Err(_) => {
                 eprintln!("serving: backend panicked on a {bsize}x{d_in} group; failing the group");
                 stats.lock().expect("stats lock").failed += bsize as u64;
-                return; // replies drop: clients observe RecvError
+                for req in group {
+                    req.reply.complete(req.id, RequestOutcome::Failed);
+                }
+                return;
             }
         };
 
@@ -440,6 +675,7 @@ impl InferenceServer {
             s.batch_total += bsize as u64;
             s.rate_sum += bsize as f64 / exec_s.max(1e-9);
             s.rate_count += 1;
+            s.fill_hist[fill_bucket(bsize)] += 1;
             for req in group {
                 s.served += 1;
                 s.push_latency(done.duration_since(req.enqueued).as_secs_f64() * 1e3);
@@ -447,12 +683,15 @@ impl InferenceServer {
         }
         for (t, req) in group.iter().enumerate() {
             let latency = done.duration_since(req.enqueued);
-            let _ = req.reply.send(Response {
-                id: req.id,
-                output: y.col(t),
-                latency,
-                batch_size: bsize,
-            });
+            req.reply.complete(
+                req.id,
+                RequestOutcome::Ok(Response {
+                    id: req.id,
+                    output: y.col(t),
+                    latency,
+                    batch_size: bsize,
+                }),
+            );
         }
     }
 
@@ -462,46 +701,35 @@ impl InferenceServer {
     /// server itself keeps running (see [`ServerStats::failed`]).
     pub fn submit(&self, id: u64, input: Vec<f32>) -> Receiver<Response> {
         let (reply, rx) = sync_channel(1);
-        let req = Request { id, input, reply, enqueued: Instant::now() };
-        self.tx
-            .as_ref()
-            .expect("server not shut down")
-            .send(req)
-            .expect("server worker alive");
+        let req = Request {
+            id,
+            input,
+            reply: ReplyTx::Channel(reply),
+            enqueued: Instant::now(),
+            deadline: None,
+        };
+        self.queue_depth.fetch_add(1, Ordering::SeqCst);
+        let sent = self.tx.as_ref().expect("server not shut down").send(req);
+        if sent.is_err() {
+            self.queue_depth.fetch_sub(1, Ordering::SeqCst);
+            panic!("server worker alive");
+        }
         rx
+    }
+
+    /// Cloneable non-blocking ingress handle for the TCP front-end's
+    /// connection threads (see [`SubmitHandle`]).
+    pub fn handle(&self) -> SubmitHandle {
+        SubmitHandle {
+            tx: self.tx.as_ref().expect("server not shut down").clone(),
+            stats: Arc::clone(&self.stats),
+            queue_depth: Arc::clone(&self.queue_depth),
+        }
     }
 
     /// Snapshot statistics.
     pub fn stats(&self) -> ServerStats {
-        let s = self.stats.lock().expect("stats lock");
-        let mut lat = s.latencies_ms.clone();
-        lat.sort_by(|a, b| a.partial_cmp(b).expect("finite"));
-        let pct = |p: f64| -> f64 {
-            if lat.is_empty() {
-                0.0
-            } else {
-                lat[((lat.len() as f64 - 1.0) * p) as usize]
-            }
-        };
-        let elapsed = s.started.elapsed().as_secs_f64();
-        ServerStats {
-            served: s.served,
-            batches: s.batches,
-            mean_batch: if s.batches > 0 {
-                s.batch_total as f64 / s.batches as f64
-            } else {
-                0.0
-            },
-            p50_ms: pct(0.5),
-            p99_ms: pct(0.99),
-            tokens_per_s: if elapsed > 0.0 { s.served as f64 / elapsed } else { 0.0 },
-            mean_batch_tokens_per_s: if s.rate_count > 0 {
-                s.rate_sum / s.rate_count as f64
-            } else {
-                0.0
-            },
-            failed: s.failed,
-        }
+        snapshot(&self.stats, &self.queue_depth)
     }
 
     /// Graceful shutdown: drop the sender, join the workers, then snapshot —
@@ -513,6 +741,41 @@ impl InferenceServer {
             let _ = w.join();
         }
         self.stats()
+    }
+}
+
+/// Build a [`ServerStats`] snapshot from the shared counters — the one
+/// implementation behind [`InferenceServer::stats`] and
+/// [`SubmitHandle::stats`].
+fn snapshot(stats: &Mutex<StatsInner>, queue_depth: &AtomicUsize) -> ServerStats {
+    let s = stats.lock().expect("stats lock");
+    let mut lat = s.latencies_ms.clone();
+    lat.sort_by(|a, b| a.partial_cmp(b).expect("finite"));
+    let pct = |p: f64| -> f64 {
+        if lat.is_empty() {
+            0.0
+        } else {
+            lat[((lat.len() as f64 - 1.0) * p) as usize]
+        }
+    };
+    let elapsed = s.started.elapsed().as_secs_f64();
+    ServerStats {
+        served: s.served,
+        batches: s.batches,
+        mean_batch: if s.batches > 0 { s.batch_total as f64 / s.batches as f64 } else { 0.0 },
+        p50_ms: pct(0.5),
+        p99_ms: pct(0.99),
+        tokens_per_s: if elapsed > 0.0 { s.served as f64 / elapsed } else { 0.0 },
+        mean_batch_tokens_per_s: if s.rate_count > 0 {
+            s.rate_sum / s.rate_count as f64
+        } else {
+            0.0
+        },
+        failed: s.failed,
+        rejected: s.rejected,
+        deadline_missed: s.deadline_missed,
+        queue_depth: queue_depth.load(Ordering::SeqCst),
+        batch_fill: s.fill_hist,
     }
 }
 
@@ -836,5 +1099,174 @@ mod tests {
             }
         }
         server.shutdown();
+    }
+
+    /// Test sink: funnels every completion into one channel, like the TCP
+    /// front-end's per-connection writer funnel.
+    struct CaptureSink {
+        tx: std::sync::mpsc::Sender<(u64, RequestOutcome)>,
+    }
+
+    impl ReplySink for CaptureSink {
+        fn complete(&self, id: u64, outcome: RequestOutcome) {
+            let _ = self.tx.send((id, outcome));
+        }
+    }
+
+    /// Gate backend: signals `started` when a batch reaches it, then blocks
+    /// until the test releases `gate` — makes queue occupancy deterministic.
+    fn gated_backend(
+        started: std::sync::mpsc::Sender<()>,
+        gate: std::sync::mpsc::Receiver<()>,
+    ) -> impl FnMut(&Mat) -> Mat + Send + 'static {
+        move |x: &Mat| -> Mat {
+            started.send(()).unwrap();
+            gate.recv().unwrap();
+            x.clone()
+        }
+    }
+
+    /// Admission control: with a 1-deep queue and the single worker pinned
+    /// inside the backend, the third submit must be rejected as QueueFull —
+    /// never block, never queue unboundedly — and the rejection is counted.
+    #[test]
+    fn try_submit_reports_queue_full() {
+        let (started_tx, started_rx) = std::sync::mpsc::channel();
+        let (gate_tx, gate_rx) = std::sync::mpsc::channel();
+        let cfg = ServerConfig {
+            max_batch: 1,
+            max_wait: Duration::from_millis(1),
+            queue_depth: 1,
+            workers: 1,
+        };
+        let mut backend = Some(gated_backend(started_tx, gate_rx));
+        let server = InferenceServer::start_pool(cfg, move |_w| backend.take().unwrap());
+        let handle = server.handle();
+        let (cap_tx, cap_rx) = std::sync::mpsc::channel();
+        let sink = |tx: &std::sync::mpsc::Sender<(u64, RequestOutcome)>| {
+            Box::new(CaptureSink { tx: tx.clone() })
+        };
+
+        // A occupies the worker; B occupies the only queue slot; C bounces.
+        handle.try_submit(1, vec![1.0], None, sink(&cap_tx)).unwrap();
+        started_rx.recv().unwrap();
+        handle.try_submit(2, vec![2.0], None, sink(&cap_tx)).unwrap();
+        assert_eq!(handle.stats().queue_depth, 1, "B should be queued");
+        let err = handle.try_submit(3, vec![3.0], None, sink(&cap_tx)).unwrap_err();
+        assert_eq!(err, TrySubmitError::QueueFull);
+
+        gate_tx.send(()).unwrap(); // release A
+        started_rx.recv().unwrap(); // B reached the backend
+        gate_tx.send(()).unwrap(); // release B
+        let mut ok_ids: Vec<u64> = (0..2)
+            .map(|_| match cap_rx.recv().unwrap() {
+                (id, RequestOutcome::Ok(resp)) => {
+                    assert_eq!(resp.id, id);
+                    id
+                }
+                (id, other) => panic!("request {id}: unexpected outcome {other:?}"),
+            })
+            .collect();
+        ok_ids.sort_unstable();
+        assert_eq!(ok_ids, vec![1, 2], "rejected request must never complete");
+
+        drop(handle); // handles keep ingress alive; drop before shutdown
+        let stats = server.shutdown();
+        assert_eq!(stats.rejected, 1);
+        assert_eq!(stats.served, 2);
+        assert_eq!(stats.queue_depth, 0);
+    }
+
+    /// A request whose deadline passes while queued is completed as
+    /// Expired at drain time; requests sharing its batch are still served.
+    #[test]
+    fn expired_request_fails_only_itself() {
+        let (started_tx, started_rx) = std::sync::mpsc::channel();
+        let (gate_tx, gate_rx) = std::sync::mpsc::channel();
+        let cfg = ServerConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            queue_depth: 16,
+            workers: 1,
+        };
+        let mut backend = Some(gated_backend(started_tx, gate_rx));
+        let server = InferenceServer::start_pool(cfg, move |_w| backend.take().unwrap());
+        let handle = server.handle();
+        let (cap_tx, cap_rx) = std::sync::mpsc::channel();
+
+        // A pins the worker; B (10ms deadline) and C wait in the queue past
+        // B's deadline; the next drain expires B and serves C.
+        handle
+            .try_submit(1, vec![1.0], None, Box::new(CaptureSink { tx: cap_tx.clone() }))
+            .unwrap();
+        started_rx.recv().unwrap();
+        let deadline = Instant::now() + Duration::from_millis(10);
+        handle
+            .try_submit(2, vec![2.0], Some(deadline), Box::new(CaptureSink { tx: cap_tx.clone() }))
+            .unwrap();
+        handle
+            .try_submit(3, vec![3.0], None, Box::new(CaptureSink { tx: cap_tx.clone() }))
+            .unwrap();
+        std::thread::sleep(Duration::from_millis(40));
+        gate_tx.send(()).unwrap(); // release A
+        started_rx.recv().unwrap(); // C's batch reached the backend
+        gate_tx.send(()).unwrap(); // release C
+
+        let mut outcomes = std::collections::HashMap::new();
+        for _ in 0..3 {
+            let (id, outcome) = cap_rx.recv().unwrap();
+            outcomes.insert(id, outcome);
+        }
+        assert!(matches!(outcomes[&1], RequestOutcome::Ok(_)), "A served");
+        assert!(matches!(outcomes[&2], RequestOutcome::Expired), "B expired");
+        assert!(matches!(outcomes[&3], RequestOutcome::Ok(_)), "C served");
+
+        drop(handle);
+        let stats = server.shutdown();
+        assert_eq!(stats.deadline_missed, 1);
+        assert_eq!(stats.served, 2);
+        assert_eq!(stats.failed, 0);
+    }
+
+    /// Bucket layout contract: bucket i covers (FILL_BUCKETS[i-1],
+    /// FILL_BUCKETS[i]], last bucket is +Inf.
+    #[test]
+    fn fill_bucket_boundaries() {
+        assert_eq!(fill_bucket(1), 0);
+        assert_eq!(fill_bucket(2), 1);
+        assert_eq!(fill_bucket(3), 2);
+        assert_eq!(fill_bucket(4), 2);
+        assert_eq!(fill_bucket(5), 3);
+        assert_eq!(fill_bucket(8), 3);
+        assert_eq!(fill_bucket(64), 6);
+        assert_eq!(fill_bucket(65), 7);
+        assert_eq!(fill_bucket(10_000), 7);
+    }
+
+    /// The metrics exposition carries every counter the ops story needs,
+    /// with the histogram rendered cumulatively.
+    #[test]
+    fn render_metrics_exposes_counters() {
+        let mut stats = ServerStats {
+            served: 12,
+            failed: 1,
+            rejected: 2,
+            deadline_missed: 3,
+            queue_depth: 4,
+            batches: 5,
+            ..Default::default()
+        };
+        stats.batch_fill[0] = 3; // three 1-request batches
+        stats.batch_fill[2] = 2; // two batches of 3..=4
+        let text = stats.render_metrics();
+        assert!(text.contains("lb2_requests_served_total 12"), "{text}");
+        assert!(text.contains("lb2_requests_failed_total 1"), "{text}");
+        assert!(text.contains("lb2_requests_rejected_total 2"), "{text}");
+        assert!(text.contains("lb2_requests_deadline_missed_total 3"), "{text}");
+        assert!(text.contains("lb2_queue_depth 4"), "{text}");
+        assert!(text.contains("lb2_batches_total 5"), "{text}");
+        assert!(text.contains("lb2_batch_fill_bucket{le=\"1\"} 3"), "{text}");
+        assert!(text.contains("lb2_batch_fill_bucket{le=\"4\"} 5"), "{text}");
+        assert!(text.contains("lb2_batch_fill_bucket{le=\"+Inf\"} 5"), "{text}");
     }
 }

@@ -60,6 +60,7 @@ pub mod parallel;
 pub mod quant;
 pub mod rng;
 pub mod runtime;
+pub mod serving;
 pub mod spectral;
 
 /// Crate version, reported by the CLI and stamped into experiment logs.

@@ -14,7 +14,12 @@
 //!                                                       M: littlebit2|onebit|rtn|billm|arb|tinyrank)
 //! littlebit2 serve --model model.lb2 [--workers N] [--batch B]
 //!                  [--threads T] [--requests R]        serve from an artifact,
-//!                                                      dispatching on its METHOD tags
+//!                  [--listen ADDR] [--serve-secs S]     dispatching on its METHOD tags;
+//!                  [--deadline-ms D] [--max-wait-ms W]  with --listen: TCP front-end
+//!                                                      (cross-connection batching)
+//! littlebit2 client --connect HOST:PORT --width D [--requests R]
+//!                   [--concurrency C] [--deadline-ms D] [--verify 1]
+//!                   [--stats 1] [--shutdown 1]          wire-protocol load client
 //! littlebit2 eval [--size N] [--blocks B] [--methods CSV] [--bpp-list CSV]
 //!                 [--jobs N] [--requests R] [--out BENCH_methods.json]
 //!                                                      methods × bpp fidelity/
@@ -37,6 +42,7 @@ use littlebit2::memory::{model_memory, MethodKind};
 use littlebit2::model::{zoo, ArchSpec, MethodStack, MethodStackLayer};
 use littlebit2::quant::{tiny_rank_fp16, MethodSpec, METHOD_NAMES};
 use littlebit2::rng::{derive_seed, Pcg64};
+use littlebit2::serving::{payload_f32, FrameKind, ServingConfig, TcpFrontend, WireClient};
 use littlebit2::spectral::{
     estimate_gamma, quant_cost, synth_weight, tail_energy, SynthSpec,
 };
@@ -121,6 +127,7 @@ fn main() -> Result<()> {
         "spectral-gain" => cmd_spectral_gain(&args),
         "compress" => cmd_compress(&args),
         "serve" => cmd_serve(&args),
+        "client" => cmd_client(&args),
         "eval" => cmd_eval(&args),
         "train" => cmd_train(&args),
         "version" => {
@@ -137,7 +144,7 @@ fn main() -> Result<()> {
 fn print_usage() {
     println!(
         "littlebit2 {} — sub-1-bit LLM compression via Latent Geometry Alignment\n\
-         commands: memory-table | breakeven | gamma-dist | spectral-gain | compress | serve | eval | train | version",
+         commands: memory-table | breakeven | gamma-dist | spectral-gain | compress | serve | client | eval | train | version",
         littlebit2::VERSION
     );
 }
@@ -406,7 +413,17 @@ fn cmd_compress(args: &Args) -> Result<()> {
 /// in-process load generator stands in for a network front end — the
 /// serving loop itself is the production path.
 fn cmd_serve(args: &Args) -> Result<()> {
-    args.known(&["model", "workers", "batch", "threads", "requests"])?;
+    args.known(&[
+        "model",
+        "workers",
+        "batch",
+        "threads",
+        "requests",
+        "listen",
+        "serve-secs",
+        "deadline-ms",
+        "max-wait-ms",
+    ])?;
     let model_path = args
         .flags
         .get("model")
@@ -415,6 +432,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let batch = args.get_usize("batch", 32)?;
     let threads = args.get_usize("threads", 1)?;
     let requests = args.get_usize("requests", 256)?;
+    let max_wait_ms = args.get_usize("max-wait-ms", 2)?;
     if workers == 0 || batch == 0 || threads == 0 {
         bail!("--workers, --batch, and --threads must be at least 1");
     }
@@ -429,10 +447,58 @@ fn cmd_serve(args: &Args) -> Result<()> {
         stack.storage_bytes()
     );
 
+    // --listen: the TCP front-end replaces the in-process load generator;
+    // requests arrive over the wire and batch across connections.
+    if let Some(listen) = args.flags.get("listen") {
+        let serve_secs = args.get_usize("serve-secs", 0)?;
+        let deadline_ms = args.get_usize("deadline-ms", 0)?;
+        let cfg = ServingConfig {
+            expect_width: Some(stack.d_in()),
+            default_deadline: if deadline_ms > 0 {
+                Some(Duration::from_millis(deadline_ms as u64))
+            } else {
+                None
+            },
+            batch: littlebit2::coordinator::ServerConfig {
+                max_batch: batch,
+                max_wait: Duration::from_millis(max_wait_ms as u64),
+                queue_depth: 1024,
+                workers,
+            },
+            ..Default::default()
+        };
+        let front = TcpFrontend::start(listen.as_str(), cfg, |_worker| {
+            MethodStackBackend::new(Arc::clone(&stack), threads)
+        })?;
+        println!("listening on {} (shutdown: SHUTDOWN frame{})", front.local_addr(),
+            if serve_secs > 0 { format!(" or after {serve_secs}s") } else { String::new() });
+        let t0 = std::time::Instant::now();
+        while !front.is_shutting_down() {
+            if serve_secs > 0 && t0.elapsed() >= Duration::from_secs(serve_secs as u64) {
+                front.trigger_shutdown();
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        let stats = front.shutdown();
+        println!(
+            "shutdown after {:.1}s: served {} | batches {} (mean size {:.1}) | rejected {} | deadline missed {} | failed {}",
+            t0.elapsed().as_secs_f64(),
+            stats.served,
+            stats.batches,
+            stats.mean_batch,
+            stats.rejected,
+            stats.deadline_missed,
+            stats.failed
+        );
+        print!("{}", stats.render_metrics());
+        return Ok(());
+    }
+
     let server = InferenceServer::start_pool(
         ServerConfig {
             max_batch: batch,
-            max_wait: Duration::from_millis(2),
+            max_wait: Duration::from_millis(max_wait_ms as u64),
             queue_depth: 1024,
             workers,
         },
@@ -468,6 +534,122 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     if failed > 0 {
         bail!("{failed} of {requests} requests failed");
+    }
+    Ok(())
+}
+
+/// Wire-protocol load client for a `serve --listen` front-end:
+/// `--concurrency` connections each pipeline `--requests / --concurrency`
+/// INFER frames and match RESULT frames back by id. `--verify 1` replays
+/// every input sequentially afterwards and asserts the replies are
+/// bit-identical to the pipelined pass (the batching-invariance check,
+/// end to end over real sockets). `--stats 1` prints the server metrics,
+/// `--shutdown 1` asks the server to drain and exit.
+fn cmd_client(args: &Args) -> Result<()> {
+    args.known(&[
+        "connect",
+        "requests",
+        "concurrency",
+        "width",
+        "deadline-ms",
+        "verify",
+        "stats",
+        "shutdown",
+    ])?;
+    let connect = args
+        .flags
+        .get("connect")
+        .context("client requires --connect HOST:PORT")?
+        .clone();
+    let requests = args.get_usize("requests", 64)?;
+    let concurrency = args.get_usize("concurrency", 4)?;
+    let width = args.get_usize("width", 0)?;
+    let deadline_ms = args.get_usize("deadline-ms", 0)? as u32;
+    let verify = matches!(args.get("verify", "0").as_str(), "1" | "true");
+    let want_stats = matches!(args.get("stats", "0").as_str(), "1" | "true");
+    let want_shutdown = matches!(args.get("shutdown", "0").as_str(), "1" | "true");
+    if width == 0 {
+        bail!("client requires --width <model d_in>");
+    }
+    if concurrency == 0 || requests == 0 {
+        bail!("--requests and --concurrency must be at least 1");
+    }
+
+    let t0 = std::time::Instant::now();
+    let mut threads = Vec::new();
+    for c in 0..concurrency {
+        // Spread the remainder so every request is issued.
+        let n = requests / concurrency + usize::from(c < requests % concurrency);
+        let connect = connect.clone();
+        threads.push(std::thread::spawn(move || -> Result<usize> {
+            if n == 0 {
+                return Ok(0);
+            }
+            let mut client = WireClient::connect(connect.as_str())?;
+            let mut rng = Pcg64::seed(derive_seed(4242, c as u64));
+            let id = |r: usize| (c * 1_000_000 + r) as u64;
+            let mut inputs = Vec::with_capacity(n);
+            for _ in 0..n {
+                let mut x = vec![0.0f32; width];
+                rng.fill_normal(&mut x);
+                inputs.push(x);
+            }
+            // Pipelined pass: all sends first, then collect by id — this
+            // is what lets the server coalesce cross-connection batches.
+            for (r, x) in inputs.iter().enumerate() {
+                client.send_infer(id(r), x, deadline_ms)?;
+            }
+            let mut got: std::collections::HashMap<u64, Vec<f32>> = std::collections::HashMap::new();
+            for _ in 0..n {
+                let f = client.recv()?;
+                match f.kind {
+                    FrameKind::Result => {
+                        got.insert(f.id, payload_f32(&f.payload)?);
+                    }
+                    other => bail!("connection {c}: unexpected {other:?} frame for id {}", f.id),
+                }
+            }
+            if verify {
+                // Sequential replay: same inputs, one at a time (different
+                // batch shapes server-side) — replies must not change.
+                for (r, x) in inputs.iter().enumerate() {
+                    let again = client.infer(id(r) + 500_000, x, deadline_ms)?;
+                    let first = got
+                        .get(&id(r))
+                        .with_context(|| format!("connection {c}: no reply for id {}", id(r)))?;
+                    if again.len() != first.len()
+                        || again
+                            .iter()
+                            .zip(first)
+                            .any(|(a, b)| a.to_bits() != b.to_bits())
+                    {
+                        bail!("connection {c} request {r}: replay differs from pipelined reply");
+                    }
+                }
+            }
+            Ok(n)
+        }));
+    }
+    let mut served = 0usize;
+    for (c, t) in threads.into_iter().enumerate() {
+        served += t.join().map_err(|_| anyhow::anyhow!("client thread {c} panicked"))??;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "{served} requests over {concurrency} connection(s) in {wall:.3}s ({:.0} req/s){}",
+        served as f64 / wall.max(1e-9),
+        if verify { " | verify: replay bit-identical" } else { "" }
+    );
+
+    if want_stats || want_shutdown {
+        let mut client = WireClient::connect(connect.as_str())?;
+        if want_stats {
+            print!("{}", client.stats_text()?);
+        }
+        if want_shutdown {
+            client.shutdown_server()?;
+            println!("server acknowledged shutdown");
+        }
     }
     Ok(())
 }

@@ -1,0 +1,119 @@
+//! Blocking wire-protocol client — the test harness's and CLI's view of
+//! the server. Deliberately symmetric with the server reader: header
+//! first, declared length capped before allocation, CRC checked, and only
+//! server→client frame kinds accepted.
+
+use super::frame::{
+    err_code, frame_crc, parse_header, payload_f32, Frame, FrameKind, CRC_OFFSET,
+    DEFAULT_MAX_PAYLOAD, HEADER_LEN,
+};
+use std::io::{Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+/// One blocking connection to a [`TcpFrontend`](super::TcpFrontend).
+pub struct WireClient {
+    stream: TcpStream,
+    max_payload: usize,
+}
+
+impl WireClient {
+    /// Connect with a 30 s read timeout (a wedged server surfaces as an
+    /// `Err`, not a hang).
+    pub fn connect(addr: impl ToSocketAddrs) -> anyhow::Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+        Ok(Self { stream, max_payload: DEFAULT_MAX_PAYLOAD })
+    }
+
+    /// Send any frame (pipelining: responses arrive via [`recv`](Self::recv)
+    /// in server completion order, matched by id).
+    pub fn send(&mut self, frame: &Frame) -> anyhow::Result<()> {
+        self.stream.write_all(&frame.encode())?;
+        Ok(())
+    }
+
+    /// Send one INFER frame without waiting for its response.
+    pub fn send_infer(&mut self, id: u64, input: &[f32], deadline_ms: u32) -> anyhow::Result<()> {
+        self.send(&Frame::infer(id, input, deadline_ms))
+    }
+
+    /// Receive the next server frame (CRC-checked; only server→client
+    /// kinds accepted).
+    pub fn recv(&mut self) -> anyhow::Result<Frame> {
+        let mut header = [0u8; HEADER_LEN];
+        self.stream.read_exact(&mut header)?;
+        let h = parse_header(&header, self.max_payload)?;
+        let mut payload = vec![0u8; h.len];
+        self.stream.read_exact(&mut payload)?;
+        let got = frame_crc(&header[..CRC_OFFSET], &payload);
+        if got != h.crc {
+            anyhow::bail!("response frame CRC mismatch (expected {:08x}, got {got:08x})", h.crc);
+        }
+        match h.kind {
+            FrameKind::Result
+            | FrameKind::Error
+            | FrameKind::Busy
+            | FrameKind::StatsText
+            | FrameKind::ShutdownAck => {}
+            other => anyhow::bail!("unexpected server frame kind {other:?}"),
+        }
+        Ok(Frame { kind: h.kind, id: h.id, aux: h.aux, payload })
+    }
+
+    /// Blocking single request: send INFER, wait for its frame, return the
+    /// output column. BUSY, ERROR, and id mismatches are `Err`.
+    pub fn infer(&mut self, id: u64, input: &[f32], deadline_ms: u32) -> anyhow::Result<Vec<f32>> {
+        self.send_infer(id, input, deadline_ms)?;
+        let f = self.recv()?;
+        match f.kind {
+            FrameKind::Result => {
+                if f.id != id {
+                    anyhow::bail!("response id {} for request id {id}", f.id);
+                }
+                Ok(payload_f32(&f.payload)?)
+            }
+            FrameKind::Busy => anyhow::bail!("server busy (admission control rejected {id})"),
+            FrameKind::Error => anyhow::bail!(
+                "server error {} on request {}: {}",
+                error_name(f.aux),
+                f.id,
+                String::from_utf8_lossy(&f.payload)
+            ),
+            other => anyhow::bail!("unexpected reply kind {other:?} to INFER"),
+        }
+    }
+
+    /// Fetch the Prometheus-style metrics text.
+    pub fn stats_text(&mut self) -> anyhow::Result<String> {
+        self.send(&Frame::stats(0))?;
+        let f = self.recv()?;
+        match f.kind {
+            FrameKind::StatsText => Ok(String::from_utf8_lossy(&f.payload).into_owned()),
+            other => anyhow::bail!("unexpected reply kind {other:?} to STATS"),
+        }
+    }
+
+    /// Ask the server to shut down gracefully; waits for the ack.
+    pub fn shutdown_server(&mut self) -> anyhow::Result<()> {
+        self.send(&Frame::shutdown(0))?;
+        let f = self.recv()?;
+        match f.kind {
+            FrameKind::ShutdownAck => Ok(()),
+            other => anyhow::bail!("unexpected reply kind {other:?} to SHUTDOWN"),
+        }
+    }
+}
+
+/// Human-readable name for an ERROR frame's aux code.
+pub fn error_name(code: u32) -> &'static str {
+    match code {
+        err_code::PROTOCOL => "PROTOCOL",
+        err_code::BAD_REQUEST => "BAD_REQUEST",
+        err_code::BACKEND => "BACKEND",
+        err_code::DEADLINE => "DEADLINE",
+        err_code::SHUTTING_DOWN => "SHUTTING_DOWN",
+        _ => "UNKNOWN",
+    }
+}

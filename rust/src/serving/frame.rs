@@ -1,0 +1,380 @@
+//! The LB2 wire protocol: length-prefixed, CRC-checked binary frames.
+//!
+//! Mirrors the `.lb2` artifact framing discipline ([`crate::artifact`]):
+//! magic + version up front, an explicit declared length that is bounded
+//! **before** any allocation, and an IEEE CRC32 over everything else so a
+//! single flipped bit anywhere in a frame is detected rather than decoded
+//! into a wrong-id or wrong-payload response. Decoding is a pure function
+//! over bytes (`decode`) so the adversarial harness can exercise every
+//! truncation and bit flip without a socket.
+//!
+//! ## Byte layout (little-endian, 28-byte header)
+//!
+//! | offset | size | field                                  |
+//! |--------|------|----------------------------------------|
+//! | 0      | 4    | magic `0x89 'L' 'B' 'W'`               |
+//! | 4      | 2    | protocol version (= 1)                 |
+//! | 6      | 2    | frame kind ([`FrameKind`])             |
+//! | 8      | 8    | request id                             |
+//! | 16     | 4    | aux (kind-specific, see below)         |
+//! | 20     | 4    | payload length in bytes                |
+//! | 24     | 4    | CRC32 over header\[0..24\] ++ payload  |
+//! | 28     | len  | payload                                |
+//!
+//! `aux` carries the deadline in ms on INFER (0 = server default), the
+//! executed batch size on RESULT, and the error code on ERROR. Payloads
+//! are raw little-endian f32s on INFER/RESULT, UTF-8 text on
+//! ERROR/STATS_TEXT, and empty elsewhere.
+
+use crate::artifact::{crc_finish, crc_update, CRC_INIT};
+
+/// Wire magic: like the artifact's `\x89LB2`, the high bit up front
+/// catches 7-bit-stripping transports; `W` marks the wire protocol.
+pub const WIRE_MAGIC: [u8; 4] = [0x89, b'L', b'B', b'W'];
+
+/// Protocol version carried by every frame.
+pub const WIRE_VERSION: u16 = 1;
+
+/// Fixed header size in bytes (payload follows).
+pub const HEADER_LEN: usize = 28;
+
+/// Byte offset of the CRC field inside the header: the CRC covers
+/// `header[0..CRC_OFFSET] ++ payload`.
+pub const CRC_OFFSET: usize = 24;
+
+/// Default cap on declared payload length — enforced before allocation,
+/// so a hostile 4 GiB length field cannot balloon memory.
+pub const DEFAULT_MAX_PAYLOAD: usize = 1 << 20;
+
+/// Frame kinds. Requests flow client → server (INFER, STATS, SHUTDOWN),
+/// the rest flow server → client.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u16)]
+pub enum FrameKind {
+    /// Client → server: run one forward pass on the f32 payload.
+    Infer = 1,
+    /// Server → client: the f32 output column; aux = executed batch size.
+    Result = 2,
+    /// Server → client: request failed; aux = [`err_code`], payload = text.
+    Error = 3,
+    /// Server → client: admission control rejected the request (queue full).
+    Busy = 4,
+    /// Client → server: request a metrics snapshot.
+    Stats = 5,
+    /// Server → client: Prometheus-style text exposition payload.
+    StatsText = 6,
+    /// Client → server: ask the server to shut down gracefully.
+    Shutdown = 7,
+    /// Server → client: shutdown acknowledged; in-flight work will drain.
+    ShutdownAck = 8,
+}
+
+impl FrameKind {
+    pub fn from_u16(v: u16) -> Option<Self> {
+        Some(match v {
+            1 => FrameKind::Infer,
+            2 => FrameKind::Result,
+            3 => FrameKind::Error,
+            4 => FrameKind::Busy,
+            5 => FrameKind::Stats,
+            6 => FrameKind::StatsText,
+            7 => FrameKind::Shutdown,
+            8 => FrameKind::ShutdownAck,
+            _ => return None,
+        })
+    }
+}
+
+/// ERROR-frame `aux` codes.
+pub mod err_code {
+    /// Malformed frame (bad magic/version/kind/CRC/length).
+    pub const PROTOCOL: u32 = 1;
+    /// Frame was well-formed but the request is invalid (e.g. payload not
+    /// a whole number of f32s, wrong input width).
+    pub const BAD_REQUEST: u32 = 2;
+    /// The backend failed the request's batch (panic or wrong shape).
+    pub const BACKEND: u32 = 3;
+    /// The request's queue-time deadline passed before execution.
+    pub const DEADLINE: u32 = 4;
+    /// The server is shutting down and no longer admits requests.
+    pub const SHUTTING_DOWN: u32 = 5;
+}
+
+/// Decoding/encoding failure — always an `Err`, never a panic: this enum
+/// is the complete list of ways untrusted bytes can be wrong.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WireError {
+    /// Fewer bytes than the header (or declared payload) requires.
+    Truncated { need: usize, have: usize },
+    BadMagic([u8; 4]),
+    BadVersion(u16),
+    BadKind(u16),
+    /// Declared payload length exceeds the negotiated cap.
+    Oversize { declared: usize, max: usize },
+    /// CRC mismatch: the frame was damaged in flight.
+    BadCrc { expect: u32, got: u32 },
+    /// Payload malformed for its kind (e.g. not a multiple of 4 bytes).
+    BadPayload(String),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Truncated { need, have } => {
+                write!(f, "truncated frame: need {need} bytes, have {have}")
+            }
+            WireError::BadMagic(m) => write!(f, "bad wire magic {m:02x?}"),
+            WireError::BadVersion(v) => {
+                write!(f, "unsupported wire version {v} (expected {WIRE_VERSION})")
+            }
+            WireError::BadKind(k) => write!(f, "unknown frame kind {k}"),
+            WireError::Oversize { declared, max } => {
+                write!(f, "declared payload {declared} exceeds cap {max}")
+            }
+            WireError::BadCrc { expect, got } => {
+                write!(f, "frame CRC mismatch: expected {expect:08x}, got {got:08x}")
+            }
+            WireError::BadPayload(msg) => write!(f, "bad payload: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// Parsed header fields, pre-CRC-check.
+pub struct Header {
+    pub kind: FrameKind,
+    pub id: u64,
+    pub aux: u32,
+    pub len: usize,
+    pub crc: u32,
+}
+
+/// Parse and validate a 28-byte header: magic, version, kind, and the
+/// declared-length cap are all checked **here**, before the caller reads
+/// or allocates a payload.
+pub fn parse_header(buf: &[u8; HEADER_LEN], max_payload: usize) -> Result<Header, WireError> {
+    if buf[0..4] != WIRE_MAGIC {
+        return Err(WireError::BadMagic([buf[0], buf[1], buf[2], buf[3]]));
+    }
+    let version = u16::from_le_bytes([buf[4], buf[5]]);
+    if version != WIRE_VERSION {
+        return Err(WireError::BadVersion(version));
+    }
+    let kind_raw = u16::from_le_bytes([buf[6], buf[7]]);
+    let kind = FrameKind::from_u16(kind_raw).ok_or(WireError::BadKind(kind_raw))?;
+    let id = u64::from_le_bytes(buf[8..16].try_into().expect("8 bytes"));
+    let aux = u32::from_le_bytes(buf[16..20].try_into().expect("4 bytes"));
+    let len = u32::from_le_bytes(buf[20..24].try_into().expect("4 bytes")) as usize;
+    if len > max_payload {
+        return Err(WireError::Oversize { declared: len, max: max_payload });
+    }
+    let crc = u32::from_le_bytes(buf[24..28].try_into().expect("4 bytes"));
+    Ok(Header { kind, id, aux, len, crc })
+}
+
+/// CRC32 over the pre-CRC header prefix and the payload.
+pub fn frame_crc(header_prefix: &[u8], payload: &[u8]) -> u32 {
+    crc_finish(crc_update(crc_update(CRC_INIT, header_prefix), payload))
+}
+
+/// One wire frame, fully decoded.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Frame {
+    pub kind: FrameKind,
+    pub id: u64,
+    pub aux: u32,
+    pub payload: Vec<u8>,
+}
+
+impl Frame {
+    /// INFER request: `deadline_ms` rides aux (0 = server default).
+    pub fn infer(id: u64, input: &[f32], deadline_ms: u32) -> Self {
+        Self { kind: FrameKind::Infer, id, aux: deadline_ms, payload: f32_payload(input) }
+    }
+
+    /// RESULT response: aux carries the executed batch size.
+    pub fn result(id: u64, output: &[f32], batch_size: u32) -> Self {
+        Self { kind: FrameKind::Result, id, aux: batch_size, payload: f32_payload(output) }
+    }
+
+    /// ERROR response: aux carries an [`err_code`], payload a UTF-8 message.
+    pub fn error(id: u64, code: u32, msg: &str) -> Self {
+        Self { kind: FrameKind::Error, id, aux: code, payload: msg.as_bytes().to_vec() }
+    }
+
+    /// BUSY response: admission control rejected the request.
+    pub fn busy(id: u64) -> Self {
+        Self { kind: FrameKind::Busy, id, aux: 0, payload: Vec::new() }
+    }
+
+    /// STATS request.
+    pub fn stats(id: u64) -> Self {
+        Self { kind: FrameKind::Stats, id, aux: 0, payload: Vec::new() }
+    }
+
+    /// STATS_TEXT response carrying the metrics exposition text.
+    pub fn stats_text(id: u64, text: &str) -> Self {
+        Self { kind: FrameKind::StatsText, id, aux: 0, payload: text.as_bytes().to_vec() }
+    }
+
+    /// SHUTDOWN request.
+    pub fn shutdown(id: u64) -> Self {
+        Self { kind: FrameKind::Shutdown, id, aux: 0, payload: Vec::new() }
+    }
+
+    /// SHUTDOWN_ACK response.
+    pub fn shutdown_ack(id: u64) -> Self {
+        Self { kind: FrameKind::ShutdownAck, id, aux: 0, payload: Vec::new() }
+    }
+
+    /// Serialize to header ++ payload with the CRC filled in.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(HEADER_LEN + self.payload.len());
+        buf.extend_from_slice(&WIRE_MAGIC);
+        buf.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+        buf.extend_from_slice(&(self.kind as u16).to_le_bytes());
+        buf.extend_from_slice(&self.id.to_le_bytes());
+        buf.extend_from_slice(&self.aux.to_le_bytes());
+        buf.extend_from_slice(&(self.payload.len() as u32).to_le_bytes());
+        let crc = frame_crc(&buf[..CRC_OFFSET], &self.payload);
+        buf.extend_from_slice(&crc.to_le_bytes());
+        buf.extend_from_slice(&self.payload);
+        buf
+    }
+
+    /// Decode one frame from the front of `buf`; returns the frame and how
+    /// many bytes it consumed. Pure function over untrusted bytes: every
+    /// failure is a typed `Err`, the declared length is capped before the
+    /// payload is copied, and the CRC must match.
+    pub fn decode(buf: &[u8], max_payload: usize) -> Result<(Frame, usize), WireError> {
+        if buf.len() < HEADER_LEN {
+            return Err(WireError::Truncated { need: HEADER_LEN, have: buf.len() });
+        }
+        let header: &[u8; HEADER_LEN] = buf[..HEADER_LEN].try_into().expect("checked");
+        let h = parse_header(header, max_payload)?;
+        let total = HEADER_LEN + h.len;
+        if buf.len() < total {
+            return Err(WireError::Truncated { need: total, have: buf.len() });
+        }
+        let payload = &buf[HEADER_LEN..total];
+        let got = frame_crc(&buf[..CRC_OFFSET], payload);
+        if got != h.crc {
+            return Err(WireError::BadCrc { expect: h.crc, got });
+        }
+        Ok((Frame { kind: h.kind, id: h.id, aux: h.aux, payload: payload.to_vec() }, total))
+    }
+}
+
+/// Little-endian f32 slice → payload bytes.
+pub fn f32_payload(values: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(values.len() * 4);
+    for v in values {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Payload bytes → f32s; `Err` when not a whole number of f32s.
+pub fn payload_f32(payload: &[u8]) -> Result<Vec<f32>, WireError> {
+    if payload.len() % 4 != 0 {
+        return Err(WireError::BadPayload(format!(
+            "f32 payload length {} not a multiple of 4",
+            payload.len()
+        )));
+    }
+    Ok(payload
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().expect("4 bytes")))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The header layout is a wire contract: pin every byte offset so a
+    /// refactor cannot silently renumber fields.
+    #[test]
+    fn header_byte_layout_is_pinned() {
+        let f = Frame::infer(0x1122_3344_5566_7788, &[1.0], 0xAABB_CCDD);
+        let bytes = f.encode();
+        assert_eq!(bytes.len(), HEADER_LEN + 4);
+        assert_eq!(&bytes[0..4], &WIRE_MAGIC);
+        assert_eq!(u16::from_le_bytes([bytes[4], bytes[5]]), WIRE_VERSION);
+        assert_eq!(u16::from_le_bytes([bytes[6], bytes[7]]), FrameKind::Infer as u16);
+        assert_eq!(
+            u64::from_le_bytes(bytes[8..16].try_into().unwrap()),
+            0x1122_3344_5566_7788
+        );
+        assert_eq!(u32::from_le_bytes(bytes[16..20].try_into().unwrap()), 0xAABB_CCDD);
+        assert_eq!(u32::from_le_bytes(bytes[20..24].try_into().unwrap()), 4);
+        assert_eq!(&bytes[HEADER_LEN..], &1.0f32.to_le_bytes());
+    }
+
+    #[test]
+    fn roundtrip_every_kind() {
+        let frames = [
+            Frame::infer(1, &[1.5, -2.5], 30),
+            Frame::result(2, &[0.25], 8),
+            Frame::error(3, err_code::BACKEND, "boom"),
+            Frame::busy(4),
+            Frame::stats(5),
+            Frame::stats_text(6, "lb2_queue_depth 0\n"),
+            Frame::shutdown(7),
+            Frame::shutdown_ack(8),
+        ];
+        for f in frames {
+            let bytes = f.encode();
+            let (back, used) = Frame::decode(&bytes, DEFAULT_MAX_PAYLOAD).unwrap();
+            assert_eq!(used, bytes.len());
+            assert_eq!(back, f);
+        }
+    }
+
+    #[test]
+    fn oversize_declared_length_rejected_before_payload() {
+        let mut bytes = Frame::infer(1, &[1.0; 8], 0).encode();
+        bytes[20..24].copy_from_slice(&u32::MAX.to_le_bytes());
+        // Only the header is present — decode must reject on the declared
+        // length, not try to read (or allocate) 4 GiB.
+        let err = Frame::decode(&bytes[..HEADER_LEN], DEFAULT_MAX_PAYLOAD).unwrap_err();
+        assert!(matches!(err, WireError::Oversize { .. }), "{err:?}");
+    }
+
+    #[test]
+    fn f32_payload_roundtrip_and_ragged_rejection() {
+        let vals = [1.0f32, -0.5, f32::MIN_POSITIVE, 3.25e7];
+        assert_eq!(payload_f32(&f32_payload(&vals)).unwrap(), vals);
+        assert!(matches!(payload_f32(&[0u8; 5]), Err(WireError::BadPayload(_))));
+    }
+
+    #[test]
+    fn bad_magic_version_kind_crc_all_rejected() {
+        let good = Frame::busy(9).encode();
+        let mut m = good.clone();
+        m[0] = b'X';
+        assert!(matches!(
+            Frame::decode(&m, DEFAULT_MAX_PAYLOAD),
+            Err(WireError::BadMagic(_))
+        ));
+        let mut v = good.clone();
+        v[4] = 0xFF;
+        assert!(matches!(
+            Frame::decode(&v, DEFAULT_MAX_PAYLOAD),
+            Err(WireError::BadVersion(_))
+        ));
+        let mut k = good.clone();
+        k[6] = 0xEE;
+        assert!(matches!(
+            Frame::decode(&k, DEFAULT_MAX_PAYLOAD),
+            Err(WireError::BadKind(_))
+        ));
+        let mut c = good;
+        c[CRC_OFFSET] ^= 0x01;
+        assert!(matches!(
+            Frame::decode(&c, DEFAULT_MAX_PAYLOAD),
+            Err(WireError::BadCrc { .. })
+        ));
+    }
+}

@@ -1,0 +1,27 @@
+//! TCP serving front-end: the network face of the batched inference
+//! server.
+//!
+//! Three pieces, each its own module:
+//!
+//! - [`frame`]: the LB2 wire protocol — length-prefixed, CRC-checked
+//!   binary frames mirroring the `.lb2` artifact framing discipline.
+//!   Decoding is a pure function over untrusted bytes (the adversarial
+//!   harness exercises every truncation and bit flip without a socket).
+//! - [`server`]: [`TcpFrontend`] — a std::net accept loop with
+//!   per-connection reader/writer threads feeding the cross-connection
+//!   dynamic batcher ([`crate::coordinator::InferenceServer`]), with
+//!   admission control (BUSY), per-request deadlines, a slow-loris frame
+//!   timer, and graceful drain-on-shutdown.
+//! - [`client`]: [`WireClient`] — the blocking client used by the CLI's
+//!   `client` subcommand, the examples, and the test suites.
+
+pub mod client;
+pub mod frame;
+pub mod server;
+
+pub use client::{error_name, WireClient};
+pub use frame::{
+    err_code, f32_payload, payload_f32, Frame, FrameKind, WireError, DEFAULT_MAX_PAYLOAD,
+    HEADER_LEN, WIRE_MAGIC, WIRE_VERSION,
+};
+pub use server::{ServingConfig, TcpFrontend};

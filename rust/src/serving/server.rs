@@ -1,0 +1,482 @@
+//! The TCP front-end: std::net sockets in front of the cross-connection
+//! dynamic batcher ([`InferenceServer`]).
+//!
+//! One accept loop hands each connection a reader thread and a writer
+//! thread. Readers parse frames incrementally (header first — so the
+//! declared length is capped before any payload allocation), validate the
+//! CRC, and submit INFER requests through a non-blocking [`SubmitHandle`];
+//! admission control answers BUSY instead of queueing unboundedly. Every
+//! request of a connection carries the same [`ConnSink`] funnel, so worker
+//! completions from **any** batch serialize onto that connection's writer
+//! thread — requests from many connections coalesce into one
+//! `forward_batch_into` call, and their responses fan back out without a
+//! per-request channel.
+//!
+//! ## Batcher state machine (per worker, inherited from the coordinator)
+//!
+//! ```text
+//!        ┌──────────── idle: block on queue ◄───────────────┐
+//!        ▼                                                  │
+//!   first request ──► gather: recv_timeout until            │
+//!                     max_batch OR max_wait ──► expire:     │
+//!                     drop requests past deadline ──► run:  │
+//!                     ONE feature-major batch ──► complete ─┘
+//! ```
+//!
+//! ## Shutdown sequencing
+//!
+//! `shutdown()` sets the flag, joins the accept loop (which joins every
+//! connection: readers observe the flag at their next poll tick and drop
+//! their side of the writer funnel — the writer keeps draining until every
+//! in-flight request's sink has fired, because the inner workers are still
+//! alive at this point), and only then drains and joins the inner server.
+//! Accepted requests are therefore answered, not lost.
+
+use super::frame::{
+    err_code, frame_crc, parse_header, payload_f32, Frame, FrameKind, CRC_OFFSET,
+    DEFAULT_MAX_PAYLOAD, HEADER_LEN,
+};
+use crate::coordinator::{
+    BatchBackend, InferenceServer, ReplySink, RequestOutcome, ServerConfig, ServerStats,
+    SubmitHandle, TrySubmitError,
+};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// TCP front-end configuration; `batch` is the inner dynamic batcher's.
+#[derive(Clone, Debug)]
+pub struct ServingConfig {
+    /// Cap on a frame's declared payload length (checked pre-allocation).
+    pub max_payload: usize,
+    /// Slow-loris guard: once a frame's first byte arrives, the rest must
+    /// follow within this window or the connection is closed. Idle
+    /// connections (no partial frame) never time out.
+    pub frame_timeout: Duration,
+    /// Poll interval for the nonblocking accept loop and reader shutdown
+    /// checks.
+    pub poll: Duration,
+    /// Deadline applied to INFER frames that carry `deadline_ms = 0`.
+    pub default_deadline: Option<Duration>,
+    /// Bound of each connection's outbound frame funnel.
+    pub outbound_depth: usize,
+    /// When set, INFER inputs of any other width are rejected as
+    /// BAD_REQUEST before touching the queue (serving a model of known
+    /// `d_in`).
+    pub expect_width: Option<usize>,
+    /// Inner batcher configuration (batch size, wait, queue bound, workers).
+    pub batch: ServerConfig,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        Self {
+            max_payload: DEFAULT_MAX_PAYLOAD,
+            frame_timeout: Duration::from_secs(10),
+            poll: Duration::from_millis(25),
+            default_deadline: None,
+            outbound_depth: 1024,
+            expect_width: None,
+            batch: ServerConfig::default(),
+        }
+    }
+}
+
+/// A running TCP serving front-end. Dropping it shuts down gracefully.
+pub struct TcpFrontend {
+    local_addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    inner: Option<InferenceServer>,
+}
+
+impl TcpFrontend {
+    /// Bind `listen` and start serving. `factory(worker_index)` builds one
+    /// [`BatchBackend`] per inner worker (same contract as
+    /// [`InferenceServer::start_pool`]).
+    pub fn start<B: BatchBackend>(
+        listen: impl ToSocketAddrs,
+        cfg: ServingConfig,
+        factory: impl FnMut(usize) -> B,
+    ) -> anyhow::Result<Self> {
+        let listener = TcpListener::bind(listen)?;
+        listener.set_nonblocking(true)?;
+        let local_addr = listener.local_addr()?;
+        let inner = InferenceServer::start_pool(cfg.batch.clone(), factory);
+        let handle = inner.handle();
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let accept = {
+            let shutdown = Arc::clone(&shutdown);
+            std::thread::spawn(move || accept_loop(&listener, &cfg, &handle, &shutdown))
+        };
+        Ok(Self { local_addr, shutdown, accept: Some(accept), inner: Some(inner) })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// True once shutdown has been requested (locally or by a SHUTDOWN
+    /// frame from a client).
+    pub fn is_shutting_down(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Request shutdown without blocking (the accept loop and connections
+    /// wind down on their next poll tick; call [`shutdown`](Self::shutdown)
+    /// to join them).
+    pub fn trigger_shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+    }
+
+    /// Snapshot the inner batcher's statistics.
+    pub fn stats(&self) -> ServerStats {
+        self.inner.as_ref().expect("frontend running").stats()
+    }
+
+    /// Graceful shutdown: stop accepting, drain every connection's
+    /// in-flight work, then drain and join the inner batcher. Returns the
+    /// final statistics.
+    pub fn shutdown(mut self) -> ServerStats {
+        self.halt().expect("first shutdown call")
+    }
+
+    fn halt(&mut self) -> Option<ServerStats> {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+        // Only after every connection thread has been joined (no live
+        // SubmitHandle clones, no in-flight sinks) is it safe to drain and
+        // join the workers.
+        self.inner.take().map(InferenceServer::shutdown)
+    }
+}
+
+impl Drop for TcpFrontend {
+    fn drop(&mut self) {
+        self.halt();
+    }
+}
+
+/// Nonblocking accept loop: spawns one connection handler per accept,
+/// reaps finished handlers opportunistically, joins all of them on
+/// shutdown (which is what makes [`TcpFrontend::halt`]'s drain ordering
+/// sound).
+fn accept_loop(
+    listener: &TcpListener,
+    cfg: &ServingConfig,
+    handle: &SubmitHandle,
+    shutdown: &Arc<AtomicBool>,
+) {
+    let conns = Arc::new(AtomicUsize::new(0));
+    let mut children: Vec<JoinHandle<()>> = Vec::new();
+    while !shutdown.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let cfg = cfg.clone();
+                let handle = handle.clone();
+                let shutdown = Arc::clone(shutdown);
+                let conns = Arc::clone(&conns);
+                conns.fetch_add(1, Ordering::SeqCst);
+                children.push(std::thread::spawn(move || {
+                    if let Err(e) = connection(stream, &cfg, &handle, &shutdown, &conns) {
+                        eprintln!("serving: connection setup failed: {e}");
+                    }
+                    conns.fetch_sub(1, Ordering::SeqCst);
+                }));
+                if children.len() >= 64 {
+                    children.retain(|c| !c.is_finished());
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(cfg.poll);
+            }
+            Err(e) => {
+                eprintln!("serving: accept failed: {e}");
+                std::thread::sleep(cfg.poll);
+            }
+        }
+    }
+    for c in children {
+        let _ = c.join();
+    }
+}
+
+/// One connection: reader runs on this thread, writer on its own, joined
+/// before return. The writer outlives the reader for as long as in-flight
+/// requests hold [`ConnSink`] clones of the funnel sender — that is the
+/// mechanism by which accepted work is answered even when the client's
+/// reader side has already wound down for shutdown.
+fn connection(
+    stream: TcpStream,
+    cfg: &ServingConfig,
+    handle: &SubmitHandle,
+    shutdown: &AtomicBool,
+    conns: &AtomicUsize,
+) -> std::io::Result<()> {
+    let _ = stream.set_nodelay(true);
+    stream.set_read_timeout(Some(cfg.poll))?;
+    let write_half = stream.try_clone()?;
+    let _ = write_half.set_write_timeout(Some(Duration::from_secs(10)));
+    let (tx, rx) = sync_channel::<Frame>(cfg.outbound_depth);
+    let writer = std::thread::spawn(move || writer_loop(write_half, &rx));
+    reader_loop(stream, cfg, handle, shutdown, conns, &tx);
+    drop(tx);
+    let _ = writer.join();
+    Ok(())
+}
+
+/// Why a polled exact-read stopped.
+enum ReadStatus {
+    /// Buffer filled.
+    Done,
+    /// EOF on a frame boundary: the client closed cleanly.
+    CleanEof,
+    /// Server shutdown was requested.
+    Shutdown,
+    /// Anything else: mid-frame EOF, frame timeout, socket error.
+    Error(String),
+}
+
+/// `read_exact` with a poll-interval read timeout so the reader can
+/// observe shutdown, plus the slow-loris frame timer: `started` is set at
+/// the first byte of a frame and the whole frame must land within
+/// `cfg.frame_timeout` of it. A connection idling **between** frames
+/// (`started == None`, nothing read) never times out.
+fn read_exact_polled(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    shutdown: &AtomicBool,
+    started: &mut Option<Instant>,
+    cfg: &ServingConfig,
+) -> ReadStatus {
+    let mut filled = 0;
+    while filled < buf.len() {
+        if shutdown.load(Ordering::SeqCst) {
+            return ReadStatus::Shutdown;
+        }
+        if let Some(t0) = *started {
+            if t0.elapsed() > cfg.frame_timeout {
+                return ReadStatus::Error("frame timeout".into());
+            }
+        }
+        match stream.read(&mut buf[filled..]) {
+            Ok(0) => {
+                return if filled == 0 && started.is_none() {
+                    ReadStatus::CleanEof
+                } else {
+                    ReadStatus::Error("eof mid-frame".into())
+                };
+            }
+            Ok(n) => {
+                if started.is_none() {
+                    *started = Some(Instant::now());
+                }
+                filled += n;
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::Interrupted
+                ) => {}
+            Err(e) => return ReadStatus::Error(e.to_string()),
+        }
+    }
+    ReadStatus::Done
+}
+
+/// Per-connection reader: parse → validate → dispatch, one frame at a
+/// time. Malformed *frames* close the connection (the stream position is
+/// unrecoverable); malformed *requests* inside valid frames fail only
+/// themselves.
+fn reader_loop(
+    mut stream: TcpStream,
+    cfg: &ServingConfig,
+    handle: &SubmitHandle,
+    shutdown: &AtomicBool,
+    conns: &AtomicUsize,
+    tx: &SyncSender<Frame>,
+) {
+    let mut header = [0u8; HEADER_LEN];
+    loop {
+        let mut started: Option<Instant> = None;
+        match read_exact_polled(&mut stream, &mut header, shutdown, &mut started, cfg) {
+            ReadStatus::Done => {}
+            ReadStatus::CleanEof | ReadStatus::Shutdown => return,
+            ReadStatus::Error(_) => return,
+        }
+        let h = match parse_header(&header, cfg.max_payload) {
+            Ok(h) => h,
+            Err(e) => {
+                // id 0: the header is untrusted, including its id field.
+                let _ = tx.try_send(Frame::error(0, err_code::PROTOCOL, &e.to_string()));
+                return;
+            }
+        };
+        // Length was capped by parse_header, so this allocation is bounded.
+        let mut payload = vec![0u8; h.len];
+        match read_exact_polled(&mut stream, &mut payload, shutdown, &mut started, cfg) {
+            ReadStatus::Done => {}
+            ReadStatus::CleanEof | ReadStatus::Shutdown => return,
+            ReadStatus::Error(_) => return,
+        }
+        let got = frame_crc(&header[..CRC_OFFSET], &payload);
+        if got != h.crc {
+            // Damaged in flight: fields (the id included) are untrusted,
+            // so never answer under the frame's id — close instead.
+            let _ = tx.try_send(Frame::error(0, err_code::PROTOCOL, "frame CRC mismatch"));
+            return;
+        }
+        match h.kind {
+            FrameKind::Infer => {
+                let input = match payload_f32(&payload) {
+                    Ok(v) => v,
+                    Err(e) => {
+                        let _ =
+                            tx.try_send(Frame::error(h.id, err_code::BAD_REQUEST, &e.to_string()));
+                        continue;
+                    }
+                };
+                if let Some(w) = cfg.expect_width {
+                    if input.len() != w {
+                        let _ = tx.try_send(Frame::error(
+                            h.id,
+                            err_code::BAD_REQUEST,
+                            &format!("input width {} != model d_in {w}", input.len()),
+                        ));
+                        continue;
+                    }
+                }
+                let deadline = if h.aux > 0 {
+                    Some(Instant::now() + Duration::from_millis(u64::from(h.aux)))
+                } else {
+                    cfg.default_deadline.map(|d| Instant::now() + d)
+                };
+                let sink = Box::new(ConnSink { tx: tx.clone() });
+                match handle.try_submit(h.id, input, deadline, sink) {
+                    Ok(()) => {}
+                    Err(TrySubmitError::QueueFull) => {
+                        let _ = tx.try_send(Frame::busy(h.id));
+                    }
+                    Err(TrySubmitError::Closed) => {
+                        let _ = tx.try_send(Frame::error(
+                            h.id,
+                            err_code::SHUTTING_DOWN,
+                            "server shutting down",
+                        ));
+                        return;
+                    }
+                }
+            }
+            FrameKind::Stats => {
+                let mut text = handle.stats().render_metrics();
+                text.push_str(&format!("lb2_connections {}\n", conns.load(Ordering::SeqCst)));
+                let _ = tx.try_send(Frame::stats_text(h.id, &text));
+            }
+            FrameKind::Shutdown => {
+                let _ = tx.try_send(Frame::shutdown_ack(h.id));
+                shutdown.store(true, Ordering::SeqCst);
+                return;
+            }
+            other => {
+                let _ = tx.try_send(Frame::error(
+                    h.id,
+                    err_code::PROTOCOL,
+                    &format!("unexpected client frame kind {other:?}"),
+                ));
+                return;
+            }
+        }
+    }
+}
+
+/// The per-connection completion funnel: all of a connection's in-flight
+/// requests complete into its one writer channel.
+struct ConnSink {
+    tx: SyncSender<Frame>,
+}
+
+impl ReplySink for ConnSink {
+    fn complete(&self, id: u64, outcome: RequestOutcome) {
+        let frame = match outcome {
+            RequestOutcome::Ok(resp) => Frame::result(id, &resp.output, resp.batch_size as u32),
+            RequestOutcome::Expired => {
+                Frame::error(id, err_code::DEADLINE, "deadline expired in queue")
+            }
+            RequestOutcome::Failed => {
+                Frame::error(id, err_code::BACKEND, "backend failed the batch")
+            }
+        };
+        // try_send: a worker thread must never block on a slow or dead
+        // client's writer — a full/closed funnel drops the frame instead.
+        let _ = self.tx.try_send(frame);
+    }
+}
+
+/// Per-connection writer: drains the funnel to the socket. On a write
+/// error it flips to discard mode (keeps draining so senders never see a
+/// wedged channel) and exits once every sender — the reader and all
+/// in-flight sinks — has dropped.
+fn writer_loop(mut stream: TcpStream, rx: &Receiver<Frame>) {
+    let mut dead = false;
+    while let Ok(frame) = rx.recv() {
+        if dead {
+            continue;
+        }
+        if stream.write_all(&frame.encode()).is_err() {
+            dead = true;
+        }
+    }
+    let _ = stream.flush();
+    let _ = stream.shutdown(std::net::Shutdown::Both);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::client::WireClient;
+    use super::*;
+    use crate::linalg::Mat;
+
+    fn echo_frontend(cfg: ServingConfig) -> TcpFrontend {
+        TcpFrontend::start("127.0.0.1:0", cfg, |_w| |x: &Mat| -> Mat { x.clone() }).unwrap()
+    }
+
+    /// Loopback smoke: one request in, the echoed column out, stats sane.
+    #[test]
+    fn loopback_roundtrip() {
+        let front = echo_frontend(ServingConfig::default());
+        let mut client = WireClient::connect(front.local_addr()).unwrap();
+        let out = client.infer(7, &[1.0, -2.5, 3.25], 0).unwrap();
+        assert_eq!(out, vec![1.0, -2.5, 3.25]);
+        let text = client.stats_text().unwrap();
+        assert!(text.contains("lb2_requests_served_total 1"), "{text}");
+        assert!(text.contains("lb2_connections 1"), "{text}");
+        drop(client);
+        let stats = front.shutdown();
+        assert_eq!(stats.served, 1);
+    }
+
+    /// A SHUTDOWN frame from a client winds the whole front-end down.
+    #[test]
+    fn client_initiated_shutdown() {
+        let front = echo_frontend(ServingConfig::default());
+        let mut client = WireClient::connect(front.local_addr()).unwrap();
+        client.shutdown_server().unwrap();
+        for _ in 0..200 {
+            if front.is_shutting_down() {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(front.is_shutting_down());
+        front.shutdown();
+    }
+}

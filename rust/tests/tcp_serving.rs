@@ -1,0 +1,379 @@
+//! TCP serving end to end: batching invariance (responses over sockets
+//! are bit-identical to in-process `forward`, however requests land in
+//! batches), the loopback `.lb2` acceptance path, and robustness —
+//! slow-loris, mid-flight disconnect, deadline expiry, BUSY admission
+//! control, and shutdown-under-load draining.
+
+use littlebit2::coordinator::ServerConfig;
+use littlebit2::linalg::Mat;
+use littlebit2::littlebit::InitStrategy;
+use littlebit2::model::MethodStack;
+use littlebit2::parallel::Pool;
+use littlebit2::quant::MethodSpec;
+use littlebit2::rng::Pcg64;
+use littlebit2::serving::{
+    err_code, FrameKind, ServingConfig, TcpFrontend, WireClient,
+};
+use littlebit2::spectral::{synth_weight, SynthSpec};
+use std::io::{Read, Write};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// A depth-2 48-feature stack compressed with `method`.
+fn method_stack(method: &str, seed: u64) -> Arc<MethodStack> {
+    let mut rng = Pcg64::seed(seed);
+    let spec = MethodSpec::parse(method, 1.0, InitStrategy::JointItq { iters: 10 }).unwrap();
+    let layers = (0..2)
+        .map(|_| {
+            let w = synth_weight(
+                &SynthSpec { rows: 48, cols: 48, gamma: 0.3, coherence: 0.6, scale: 1.0 },
+                &mut rng,
+            );
+            spec.compressor().compress_layer(&w, Pool::serial(), &mut rng).unwrap()
+        })
+        .collect();
+    Arc::new(MethodStack::uniform(method, layers).unwrap())
+}
+
+fn stack_frontend(stack: &Arc<MethodStack>, cfg: ServingConfig) -> TcpFrontend {
+    let stack = Arc::clone(stack);
+    TcpFrontend::start("127.0.0.1:0", cfg, move |_w| {
+        littlebit2::coordinator::MethodStackBackend::new(Arc::clone(&stack), 2)
+    })
+    .unwrap()
+}
+
+fn batching_cfg() -> ServingConfig {
+    ServingConfig {
+        batch: ServerConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(30),
+            queue_depth: 1024,
+            workers: 2,
+        },
+        ..Default::default()
+    }
+}
+
+fn inputs(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Pcg64::seed(seed);
+    (0..n)
+        .map(|_| {
+            let mut x = vec![0.0f32; d];
+            rng.fill_normal(&mut x);
+            x
+        })
+        .collect()
+}
+
+fn assert_bits_eq(got: &[f32], want: &[f32], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length");
+    for (j, (a, b)) in got.iter().zip(want).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: element {j}: {a} vs {b}");
+    }
+}
+
+/// Batching invariance across every `MethodLayer` variant: the same
+/// inputs through (A) one pipelined connection filling batches, (B) many
+/// connections racing one request each, and (C) strictly sequential
+/// requests (every batch flushed by the deadline at size 1) must all be
+/// bit-identical to the in-process `MethodStack::forward`.
+#[test]
+fn responses_bit_identical_for_every_method_and_batching_shape() {
+    for method in ["littlebit2", "onebit", "rtn", "tinyrank"] {
+        let stack = method_stack(method, 0xA0);
+        let xs = inputs(16, stack.d_in(), 0xB0);
+        let want: Vec<Vec<f32>> = xs.iter().map(|x| stack.forward(x)).collect();
+        let front = stack_frontend(&stack, batching_cfg());
+        let addr = front.local_addr();
+
+        // (A) one client, 16 pipelined requests → coalesced batches.
+        let mut client = WireClient::connect(addr).unwrap();
+        for (i, x) in xs.iter().enumerate() {
+            client.send_infer(i as u64, x, 0).unwrap();
+        }
+        let mut got = vec![Vec::new(); xs.len()];
+        for _ in 0..xs.len() {
+            let f = client.recv().unwrap();
+            assert_eq!(f.kind, FrameKind::Result, "{method}: {f:?}");
+            assert!(f.aux >= 1, "{method}: batch size 0");
+            got[f.id as usize] = littlebit2::serving::payload_f32(&f.payload).unwrap();
+        }
+        for (i, g) in got.iter().enumerate() {
+            assert_bits_eq(g, &want[i], &format!("{method} pipelined req {i}"));
+        }
+
+        // (B) 16 connections, one request each, racing → cross-connection
+        // batches.
+        let mut threads = Vec::new();
+        for (i, x) in xs.iter().enumerate() {
+            let x = x.clone();
+            threads.push(std::thread::spawn(move || {
+                let mut c = WireClient::connect(addr).unwrap();
+                (i, c.infer(i as u64, &x, 0).unwrap())
+            }));
+        }
+        for t in threads {
+            let (i, g) = t.join().unwrap();
+            assert_bits_eq(&g, &want[i], &format!("{method} concurrent req {i}"));
+        }
+
+        // (C) strictly sequential → every batch a deadline-flushed 1.
+        let mut client = WireClient::connect(addr).unwrap();
+        for (i, x) in xs.iter().enumerate() {
+            let g = client.infer(i as u64, x, 0).unwrap();
+            assert_bits_eq(&g, &want[i], &format!("{method} sequential req {i}"));
+        }
+
+        let stats = front.shutdown();
+        assert_eq!(stats.served, 3 * xs.len() as u64, "{method}");
+        assert_eq!(stats.failed, 0, "{method}");
+    }
+}
+
+/// The acceptance case: compress → save `.lb2` → load → serve over
+/// 127.0.0.1 → N concurrent clients get responses bit-identical to the
+/// loaded stack's in-process forward; the metrics frame reports the run.
+#[test]
+fn loopback_lb2_artifact_end_to_end() {
+    let stack = method_stack("littlebit2", 0xC0);
+    let path = std::env::temp_dir().join(format!("lb2_tcp_e2e_{}.lb2", std::process::id()));
+    stack.save(&path).unwrap();
+    let loaded = Arc::new(MethodStack::load(&path).unwrap());
+    let _ = std::fs::remove_file(&path);
+
+    let front = stack_frontend(&loaded, batching_cfg());
+    let addr = front.local_addr();
+    let mut threads = Vec::new();
+    for c in 0..4u64 {
+        let loaded = Arc::clone(&loaded);
+        threads.push(std::thread::spawn(move || {
+            let xs = inputs(8, loaded.d_in(), 0xD0 + c);
+            let mut client = WireClient::connect(addr).unwrap();
+            for (i, x) in xs.iter().enumerate() {
+                let id = c * 100 + i as u64;
+                let got = client.infer(id, x, 0).unwrap();
+                assert_bits_eq(&got, &loaded.forward(x), &format!("client {c} req {i}"));
+            }
+        }));
+    }
+    for t in threads {
+        t.join().unwrap();
+    }
+
+    let mut client = WireClient::connect(addr).unwrap();
+    let text = client.stats_text().unwrap();
+    assert!(text.contains("lb2_requests_served_total 32"), "{text}");
+    assert!(text.contains("lb2_batch_fill_bucket"), "{text}");
+    assert!(text.contains("lb2_connections"), "{text}");
+    drop(client);
+
+    let stats = front.shutdown();
+    assert_eq!(stats.served, 32);
+    assert_eq!(stats.failed, 0);
+    assert_eq!(stats.rejected, 0);
+}
+
+fn echo_cfg() -> ServingConfig {
+    ServingConfig {
+        poll: Duration::from_millis(5),
+        batch: ServerConfig { max_wait: Duration::from_millis(1), ..Default::default() },
+        ..Default::default()
+    }
+}
+
+/// Slow-loris: a connection that dribbles half a header and stalls is cut
+/// off by the frame timer — while a concurrent honest client is served.
+#[test]
+fn slow_loris_partial_frame_is_cut_off() {
+    let cfg = ServingConfig { frame_timeout: Duration::from_millis(100), ..echo_cfg() };
+    let front =
+        TcpFrontend::start("127.0.0.1:0", cfg, |_w| |x: &Mat| -> Mat { x.clone() }).unwrap();
+    let addr = front.local_addr();
+
+    let mut loris = std::net::TcpStream::connect(addr).unwrap();
+    loris.write_all(&[0x89, b'L', b'B', b'W', 1, 0]).unwrap(); // 6 of 28 header bytes
+    // While the loris stalls, an honest client gets served normally.
+    let mut honest = WireClient::connect(addr).unwrap();
+    assert_eq!(honest.infer(1, &[2.0, 3.0], 0).unwrap(), vec![2.0, 3.0]);
+
+    // Past the frame timeout the server must close the loris connection.
+    loris.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let mut buf = [0u8; 64];
+    let t0 = std::time::Instant::now();
+    loop {
+        match loris.read(&mut buf) {
+            Ok(0) => break, // server closed: the guard fired
+            Ok(_) => continue,
+            Err(e) => panic!("expected server-side close, got read error {e}"),
+        }
+    }
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "loris connection not closed by the frame timer"
+    );
+    // The server is still healthy afterwards.
+    assert_eq!(honest.infer(2, &[4.0], 0).unwrap(), vec![4.0]);
+    front.shutdown();
+}
+
+/// A client that disconnects with requests in flight fails only itself:
+/// the worker's completion lands in a closed funnel and is dropped, and
+/// the server keeps serving everyone else.
+#[test]
+fn client_disconnect_mid_flight_does_not_kill_the_server() {
+    let cfg = echo_cfg();
+    let front = TcpFrontend::start("127.0.0.1:0", cfg, |_w| {
+        |x: &Mat| -> Mat {
+            std::thread::sleep(Duration::from_millis(100));
+            x.clone()
+        }
+    })
+    .unwrap();
+    let addr = front.local_addr();
+
+    {
+        let mut doomed = WireClient::connect(addr).unwrap();
+        doomed.send_infer(1, &[1.0, 2.0], 0).unwrap();
+        // Dropped here — the socket closes while the request executes.
+    }
+    std::thread::sleep(Duration::from_millis(50));
+    let mut honest = WireClient::connect(addr).unwrap();
+    assert_eq!(honest.infer(2, &[5.0], 0).unwrap(), vec![5.0]);
+    let stats = front.shutdown();
+    assert_eq!(stats.served, 2, "the doomed request still executed");
+    assert_eq!(stats.failed, 0);
+}
+
+/// Deadline expiry over the wire: with the single worker pinned by a slow
+/// batch, a 20 ms-deadline request queued behind it comes back as an
+/// ERROR/DEADLINE frame, while an unbounded request queued alongside is
+/// served normally.
+#[test]
+fn deadline_expiry_fails_only_that_request() {
+    let cfg = ServingConfig {
+        poll: Duration::from_millis(5),
+        batch: ServerConfig {
+            max_batch: 1,
+            max_wait: Duration::from_millis(1),
+            queue_depth: 16,
+            workers: 1,
+        },
+        ..Default::default()
+    };
+    let front = TcpFrontend::start("127.0.0.1:0", cfg, |_w| {
+        |x: &Mat| -> Mat {
+            std::thread::sleep(Duration::from_millis(150));
+            x.clone()
+        }
+    })
+    .unwrap();
+    let mut client = WireClient::connect(front.local_addr()).unwrap();
+
+    client.send_infer(1, &[1.0], 0).unwrap();
+    std::thread::sleep(Duration::from_millis(50)); // worker is now inside request 1
+    client.send_infer(2, &[2.0], 20).unwrap(); // will expire in the queue
+    client.send_infer(3, &[3.0], 0).unwrap(); // no deadline: must be served
+
+    let mut outcomes = std::collections::HashMap::new();
+    for _ in 0..3 {
+        let f = client.recv().unwrap();
+        outcomes.insert(f.id, f);
+    }
+    assert_eq!(outcomes[&1].kind, FrameKind::Result);
+    assert_eq!(outcomes[&2].kind, FrameKind::Error, "{:?}", outcomes[&2]);
+    assert_eq!(outcomes[&2].aux, err_code::DEADLINE);
+    assert_eq!(outcomes[&3].kind, FrameKind::Result);
+
+    let stats = front.shutdown();
+    assert_eq!(stats.deadline_missed, 1);
+    assert_eq!(stats.served, 2);
+}
+
+/// Admission control: a 1-deep queue behind a slow single worker answers
+/// BUSY for the overflow — explicitly, immediately, and without ever
+/// failing the requests that were admitted.
+#[test]
+fn overflow_is_answered_with_busy_frames() {
+    let cfg = ServingConfig {
+        poll: Duration::from_millis(5),
+        batch: ServerConfig {
+            max_batch: 1,
+            max_wait: Duration::from_millis(1),
+            queue_depth: 1,
+            workers: 1,
+        },
+        ..Default::default()
+    };
+    let front = TcpFrontend::start("127.0.0.1:0", cfg, |_w| {
+        |x: &Mat| -> Mat {
+            std::thread::sleep(Duration::from_millis(200));
+            x.clone()
+        }
+    })
+    .unwrap();
+    let mut client = WireClient::connect(front.local_addr()).unwrap();
+    for i in 0..5u64 {
+        client.send_infer(i, &[i as f32], 0).unwrap();
+    }
+    let (mut results, mut busy) = (0, 0);
+    for _ in 0..5 {
+        let f = client.recv().unwrap();
+        match f.kind {
+            FrameKind::Result => results += 1,
+            FrameKind::Busy => busy += 1,
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+    assert!(busy >= 1, "no BUSY frames from a 1-deep queue under burst");
+    assert!(results >= 1, "nothing served");
+    assert_eq!(results + busy, 5);
+    let stats = front.shutdown();
+    assert_eq!(stats.served as i32, results);
+    assert_eq!(stats.rejected as i32, busy);
+}
+
+/// Shutdown under load: requests accepted before the SHUTDOWN frame are
+/// all answered (the in-flight drain), the ack arrives, and the final
+/// stats account for every one of them.
+#[test]
+fn shutdown_under_load_drains_accepted_requests() {
+    let cfg = ServingConfig {
+        poll: Duration::from_millis(5),
+        batch: ServerConfig {
+            max_batch: 2,
+            max_wait: Duration::from_millis(1),
+            queue_depth: 64,
+            workers: 1,
+        },
+        ..Default::default()
+    };
+    let front = TcpFrontend::start("127.0.0.1:0", cfg, |_w| {
+        |x: &Mat| -> Mat {
+            std::thread::sleep(Duration::from_millis(40));
+            x.clone()
+        }
+    })
+    .unwrap();
+    let mut client = WireClient::connect(front.local_addr()).unwrap();
+    for i in 0..6u64 {
+        client.send_infer(i, &[i as f32], 0).unwrap();
+    }
+    client.send(&littlebit2::serving::Frame::shutdown(99)).unwrap();
+
+    let (mut results, mut acked) = (0u32, false);
+    for _ in 0..7 {
+        let f = client.recv().unwrap();
+        match f.kind {
+            FrameKind::Result => results += 1,
+            FrameKind::ShutdownAck => acked = true,
+            other => panic!("unexpected {other:?} during shutdown drain"),
+        }
+    }
+    assert_eq!(results, 6, "accepted requests lost during shutdown");
+    assert!(acked, "no SHUTDOWN_ACK");
+
+    let stats = front.shutdown();
+    assert_eq!(stats.served, 6);
+    assert_eq!(stats.failed, 0);
+}

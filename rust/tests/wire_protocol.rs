@@ -1,0 +1,213 @@
+//! Adversarial wire-protocol harness (the PR 3 artifact-harness pattern
+//! applied to the first *network* untrusted-input surface): truncate a
+//! valid frame at every byte, flip every bit of every byte, and declare
+//! hostile lengths — decoding must return `Err`, never panic, and a live
+//! server fed the same corruptions must never answer with a RESULT frame
+//! (a wrong-id or wrong-payload response) and must keep serving honest
+//! clients afterwards.
+
+use littlebit2::linalg::Mat;
+use littlebit2::serving::{
+    frame::frame_crc, Frame, FrameKind, ServingConfig, TcpFrontend, WireClient,
+    DEFAULT_MAX_PAYLOAD, HEADER_LEN, WIRE_MAGIC, WIRE_VERSION,
+};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+fn sample_frame() -> Frame {
+    Frame::infer(0xDEAD_BEEF, &[1.0, -2.5, 3.25, 0.5], 250)
+}
+
+/// Truncation at EVERY byte offset: decode must be a typed `Err`
+/// (`catch_unwind` proves it never panics).
+#[test]
+fn decode_truncation_at_every_byte_never_panics() {
+    let bytes = sample_frame().encode();
+    for len in 0..bytes.len() {
+        let prefix = bytes[..len].to_vec();
+        let result = std::panic::catch_unwind(|| Frame::decode(&prefix, DEFAULT_MAX_PAYLOAD));
+        match result {
+            Ok(r) => assert!(r.is_err(), "truncation to {len} bytes decoded successfully"),
+            Err(_) => panic!("truncation to {len} bytes PANICKED instead of returning Err"),
+        }
+    }
+}
+
+/// Every bit of every byte flipped: the per-frame CRC (over header and
+/// payload alike) must catch all of them — no flip may decode into a
+/// frame, which is precisely the "never a wrong-id response" guarantee.
+#[test]
+fn decode_bit_flip_matrix_never_panics_or_misdecodes() {
+    let bytes = sample_frame().encode();
+    for i in 0..bytes.len() {
+        for bit in 0..8 {
+            let mut bad = bytes.clone();
+            bad[i] ^= 1 << bit;
+            let result = std::panic::catch_unwind(|| Frame::decode(&bad, DEFAULT_MAX_PAYLOAD));
+            match result {
+                Ok(r) => assert!(
+                    r.is_err(),
+                    "flip of byte {i} bit {bit} decoded successfully: {:?}",
+                    r.unwrap().0
+                ),
+                Err(_) => panic!("flip of byte {i} bit {bit} PANICKED"),
+            }
+        }
+    }
+}
+
+/// A hostile declared length — even with a *valid* CRC over the header —
+/// is rejected on the cap alone, before any payload allocation.
+#[test]
+fn oversize_declared_length_rejected_before_allocation() {
+    let mut header = Vec::new();
+    header.extend_from_slice(&WIRE_MAGIC);
+    header.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+    header.extend_from_slice(&(FrameKind::Infer as u16).to_le_bytes());
+    header.extend_from_slice(&7u64.to_le_bytes());
+    header.extend_from_slice(&0u32.to_le_bytes());
+    header.extend_from_slice(&u32::MAX.to_le_bytes()); // declared 4 GiB payload
+    let crc = frame_crc(&header, &[]);
+    header.extend_from_slice(&crc.to_le_bytes());
+    assert_eq!(header.len(), HEADER_LEN);
+    let err = Frame::decode(&header, DEFAULT_MAX_PAYLOAD).unwrap_err();
+    assert!(
+        matches!(err, littlebit2::serving::WireError::Oversize { .. }),
+        "{err:?}"
+    );
+}
+
+fn echo_frontend() -> TcpFrontend {
+    let cfg = ServingConfig {
+        poll: Duration::from_millis(5),
+        batch: littlebit2::coordinator::ServerConfig {
+            max_wait: Duration::from_millis(1),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    TcpFrontend::start("127.0.0.1:0", cfg, |_w| |x: &Mat| -> Mat { x.clone() }).unwrap()
+}
+
+/// Write raw bytes, half-close, and collect everything the server sends
+/// back until it closes (or stops talking).
+fn send_raw(addr: std::net::SocketAddr, bytes: &[u8]) -> Vec<u8> {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let _ = stream.set_nodelay(true);
+    stream.write_all(bytes).unwrap();
+    let _ = stream.shutdown(std::net::Shutdown::Write);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(500)));
+    let mut out = Vec::new();
+    let mut tmp = [0u8; 4096];
+    loop {
+        match stream.read(&mut tmp) {
+            Ok(0) => break,
+            Ok(n) => out.extend_from_slice(&tmp[..n]),
+            Err(_) => break, // read timeout: server kept quiet — also fine
+        }
+    }
+    out
+}
+
+/// Decode every well-formed frame in a raw response byte stream.
+fn frames_in(mut bytes: &[u8]) -> Vec<Frame> {
+    let mut out = Vec::new();
+    while let Ok((f, used)) = Frame::decode(bytes, DEFAULT_MAX_PAYLOAD) {
+        out.push(f);
+        bytes = &bytes[used..];
+    }
+    out
+}
+
+fn assert_alive(front: &TcpFrontend) {
+    let mut client = WireClient::connect(front.local_addr()).unwrap();
+    let out = client.infer(99, &[4.0, 5.0], 0).unwrap();
+    assert_eq!(out, vec![4.0, 5.0], "server no longer echoes after corruption");
+}
+
+/// Garbage that shares no structure with the protocol: the server must
+/// error or close — and keep serving a well-behaved client afterwards.
+#[test]
+fn live_garbage_bytes_do_not_kill_the_server() {
+    let front = echo_frontend();
+    for garbage in [
+        b"GET / HTTP/1.1\r\n\r\n".to_vec(),
+        vec![0u8; 64],
+        vec![0xFFu8; 64],
+        vec![0x89, b'L', b'B', b'2'], // the ARTIFACT magic, not the wire magic
+    ] {
+        let reply = send_raw(front.local_addr(), &garbage);
+        for f in frames_in(&reply) {
+            assert_ne!(f.kind, FrameKind::Result, "garbage produced a RESULT: {f:?}");
+        }
+        assert_alive(&front);
+    }
+    front.shutdown();
+}
+
+/// Every truncation of a valid frame, delivered over a real socket and
+/// then half-closed: the server must treat it as a dead/hostile peer —
+/// never execute it, never panic, never stop serving others.
+#[test]
+fn live_truncation_at_every_byte_keeps_server_alive() {
+    let front = echo_frontend();
+    let bytes = sample_frame().encode();
+    for len in 0..bytes.len() {
+        let reply = send_raw(front.local_addr(), &bytes[..len]);
+        for f in frames_in(&reply) {
+            assert_ne!(
+                f.kind,
+                FrameKind::Result,
+                "truncation to {len} bytes produced a RESULT: {f:?}"
+            );
+        }
+    }
+    assert_alive(&front);
+    front.shutdown();
+}
+
+/// Every single-bit flip of a valid frame over a real socket: the CRC
+/// must stop all of them — the server may error or close, but it must
+/// never answer with a RESULT frame (under any id), and it keeps serving.
+#[test]
+fn live_bit_flips_never_produce_a_result_frame() {
+    let front = echo_frontend();
+    let bytes = sample_frame().encode();
+    for i in 0..bytes.len() {
+        let mut bad = bytes.clone();
+        bad[i] ^= 0x01;
+        let reply = send_raw(front.local_addr(), &bad);
+        for f in frames_in(&reply) {
+            assert_ne!(
+                f.kind,
+                FrameKind::Result,
+                "flip at byte {i} produced a RESULT: {f:?}"
+            );
+        }
+    }
+    assert_alive(&front);
+    front.shutdown();
+}
+
+/// The hostile-length frame over a live socket: rejected (error or
+/// close) without ballooning memory, and the server keeps serving.
+#[test]
+fn live_oversize_length_rejected() {
+    let front = echo_frontend();
+    let mut header = Vec::new();
+    header.extend_from_slice(&WIRE_MAGIC);
+    header.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+    header.extend_from_slice(&(FrameKind::Infer as u16).to_le_bytes());
+    header.extend_from_slice(&1u64.to_le_bytes());
+    header.extend_from_slice(&0u32.to_le_bytes());
+    header.extend_from_slice(&u32::MAX.to_le_bytes());
+    let crc = frame_crc(&header, &[]);
+    header.extend_from_slice(&crc.to_le_bytes());
+    let reply = send_raw(front.local_addr(), &header);
+    for f in frames_in(&reply) {
+        assert_ne!(f.kind, FrameKind::Result, "oversize frame produced a RESULT: {f:?}");
+    }
+    assert_alive(&front);
+    front.shutdown();
+}
