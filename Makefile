@@ -4,7 +4,7 @@
 # PJRT-gated paths (`--features xla`): the train CLI, examples/e2e_qat,
 # tests/runtime_e2e.
 
-.PHONY: build test bench bench-build bench-gemm bench-compress clippy artifacts doc roundtrip eval serve-smoke
+.PHONY: build test bench bench-build bench-gemm bench-compress clippy artifacts doc roundtrip eval serve-smoke chaos
 
 build:
 	cargo build --release
@@ -46,6 +46,18 @@ serve-smoke: build
 	cargo run --release -- client --connect 127.0.0.1:41512 --width 48 --requests 64 --concurrency 4 --verify 1 --stats 1 --shutdown 1 || rc=$$?; \
 	wait $$srv || rc=$$?; \
 	exit $$rc
+
+# The chaos soak (tests/chaos_soak.rs): the serving stack under seeded
+# fault injection at the wire AND backend boundaries, driven by retrying
+# clients until every request is answered bit-identical to the in-process
+# forward, with exactly-once counter reconciliation and a deadlock
+# watchdog. One seed fully determines the fault schedule — override
+# LB2_CHAOS_SEED to explore, and replay a red CI run locally with the
+# seed it prints. Run by the build-test CI job next to serve-smoke.
+# 3298842093 == 0xC4A055ED, the harness's built-in default.
+LB2_CHAOS_SEED ?= 3298842093
+chaos: build
+	LB2_CHAOS_SEED=$(LB2_CHAOS_SEED) cargo test --release --test chaos_soak -- --nocapture
 
 # The methods × bpp fidelity/throughput sweep (Table 1 shape) at bounded
 # sizes; refreshes BENCH_methods.json at the repo root. Run by the

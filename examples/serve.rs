@@ -80,6 +80,7 @@ fn main() -> anyhow::Result<()> {
             max_wait: Duration::from_millis(2),
             queue_depth: 1024,
             workers,
+            ..Default::default()
         },
         |_worker| PackedStackBackend::new(Arc::clone(&stack), threads),
     );

@@ -60,6 +60,7 @@ fn main() -> anyhow::Result<()> {
             max_wait: Duration::from_millis(2),
             queue_depth: 1024,
             workers: 2,
+            ..Default::default()
         },
         ..Default::default()
     };

@@ -30,9 +30,9 @@ pub use jobs::{
 pub use metrics::Metrics;
 pub use params::ParamStore;
 pub use server::{
-    BatchBackend, InferenceServer, MethodStackBackend, PackedResidualBackend, PackedStackBackend,
-    ReplySink, Request, RequestOutcome, Response, ServerConfig, ServerStats, SubmitHandle,
-    TrySubmitError, FILL_BUCKETS, FILL_BUCKET_COUNT,
+    BatchBackend, HealthPolicy, HealthState, InferenceServer, MethodStackBackend,
+    PackedResidualBackend, PackedStackBackend, ReplySink, Request, RequestOutcome, Response,
+    ServerConfig, ServerStats, SubmitHandle, TrySubmitError, FILL_BUCKETS, FILL_BUCKET_COUNT,
 };
 #[cfg(feature = "xla")]
 pub use trainer::{QakdOutcome, QatDriver, StudentVariant, TrainTrace};

@@ -22,7 +22,7 @@ use crate::linalg::Mat;
 use crate::model::{MethodStack, PackedStack};
 use crate::packing::{BatchScratch, PackedResidual, SignPool};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -105,25 +105,112 @@ impl ReplyTx {
 }
 
 /// Why [`SubmitHandle::try_submit`] rejected a request at admission.
+/// The rejecting variants carry a retry-after hint (milliseconds, ≥ 1)
+/// derived from the observed batch-execution EMA — the TCP front-end
+/// forwards it in the BUSY frame's `aux` so well-behaved clients back off
+/// for roughly as long as the queue actually needs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TrySubmitError {
     /// The bounded ingress queue is full — admission control says BUSY
     /// now rather than unbounded memory later.
-    QueueFull,
+    QueueFull { retry_after_ms: u32 },
+    /// Load shedding: the request's deadline has already passed, or the
+    /// estimated queue wait exceeds the time it has left — rejecting now
+    /// is strictly better than accepting work guaranteed to expire.
+    DeadlineUnmeetable { retry_after_ms: u32 },
     /// The server is shutting down (ingress disconnected).
     Closed,
+}
+
+impl TrySubmitError {
+    /// The retry-after hint, if this rejection carries one.
+    pub fn retry_after_ms(&self) -> Option<u32> {
+        match self {
+            TrySubmitError::QueueFull { retry_after_ms }
+            | TrySubmitError::DeadlineUnmeetable { retry_after_ms } => Some(*retry_after_ms),
+            TrySubmitError::Closed => None,
+        }
+    }
 }
 
 impl std::fmt::Display for TrySubmitError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
-            TrySubmitError::QueueFull => write!(f, "ingress queue full"),
+            TrySubmitError::QueueFull { retry_after_ms } => {
+                write!(f, "ingress queue full (retry after {retry_after_ms}ms)")
+            }
+            TrySubmitError::DeadlineUnmeetable { retry_after_ms } => {
+                write!(f, "deadline unmeetable at current load (retry after {retry_after_ms}ms)")
+            }
             TrySubmitError::Closed => write!(f, "server shutting down"),
         }
     }
 }
 
 impl std::error::Error for TrySubmitError {}
+
+/// Coarse server health, the degradation state machine the HEALTH frame
+/// and the `lb2_health` gauge expose. Driven by queue occupancy and the
+/// recent failure rate (see [`HealthPolicy`]); `Draining` is entered
+/// explicitly at shutdown and never left.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum HealthState {
+    /// Accepting traffic, failure rate nominal.
+    #[default]
+    Healthy = 0,
+    /// Still serving, but the queue is deep or recent failures are
+    /// elevated — clients should back off and operators should look.
+    Degraded = 1,
+    /// Shutdown has begun: in-flight work drains, new work is refused.
+    Draining = 2,
+}
+
+impl HealthState {
+    /// Numeric code carried in the HEALTH_REPORT frame's `aux` and the
+    /// `lb2_health` gauge.
+    pub fn code(&self) -> u32 {
+        *self as u32
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            HealthState::Healthy => "healthy",
+            HealthState::Degraded => "degraded",
+            HealthState::Draining => "draining",
+        }
+    }
+
+    pub fn from_code(code: u32) -> Option<Self> {
+        Some(match code {
+            0 => HealthState::Healthy,
+            1 => HealthState::Degraded,
+            2 => HealthState::Draining,
+            _ => return None,
+        })
+    }
+}
+
+/// When the server reports [`HealthState::Degraded`]. Both triggers are
+/// recoverable observations, so health flaps back to `Healthy` as soon as
+/// the queue drains / the failure window clears.
+#[derive(Clone, Debug)]
+pub struct HealthPolicy {
+    /// Degraded when the ingress queue holds at least this fraction of
+    /// `queue_depth`.
+    pub degraded_queue_frac: f64,
+    /// Degraded when the recent-window failure rate (failed + expired over
+    /// completed) exceeds this.
+    pub degraded_failure_rate: f64,
+    /// Minimum completions in the window before the failure-rate trigger
+    /// may fire (a 1-for-1 start must not flag a fresh server).
+    pub min_window: u64,
+}
+
+impl Default for HealthPolicy {
+    fn default() -> Self {
+        Self { degraded_queue_frac: 0.5, degraded_failure_rate: 0.10, min_window: 32 }
+    }
+}
 
 /// Executes one drained batch as a single batched forward call.
 ///
@@ -169,6 +256,14 @@ where
 {
     fn forward_batch_into(&mut self, x: &Mat, y: &mut Mat) {
         *y = self(x);
+    }
+}
+
+/// Boxed backends work too, so a factory can pick a backend (or a chaos
+/// wrapper around one) at run time.
+impl BatchBackend for Box<dyn BatchBackend> {
+    fn forward_batch_into(&mut self, x: &Mat, y: &mut Mat) {
+        (**self).forward_batch_into(x, y);
     }
 }
 
@@ -271,6 +366,8 @@ pub struct ServerConfig {
     pub queue_depth: usize,
     /// Worker threads draining the queue; each owns one backend instance.
     pub workers: usize,
+    /// When the server self-reports [`HealthState::Degraded`].
+    pub health: HealthPolicy,
 }
 
 impl Default for ServerConfig {
@@ -280,6 +377,7 @@ impl Default for ServerConfig {
             max_wait: Duration::from_millis(2),
             queue_depth: 1024,
             workers: 1,
+            health: HealthPolicy::default(),
         }
     }
 }
@@ -317,10 +415,22 @@ pub struct ServerStats {
     pub failed: u64,
     /// Requests rejected at admission (bounded queue full → BUSY).
     pub rejected: u64,
+    /// Requests shed at admission because their deadline was already
+    /// unmeetable (also BUSY on the wire, with a retry-after hint).
+    pub shed: u64,
     /// Requests dropped at drain time because their deadline had passed.
     pub deadline_missed: u64,
+    /// Requests admitted to the ingress queue. The reconciliation
+    /// invariant the chaos soak pins:
+    /// `accepted == served + failed + deadline_missed` once drained.
+    pub accepted: u64,
     /// Requests currently waiting in the ingress queue (gauge).
     pub queue_depth: usize,
+    /// Current health (gauge; see [`HealthState`]).
+    pub health: HealthState,
+    /// Live TCP connection-handler threads (gauge; populated by the TCP
+    /// front-end, 0 on the in-process path).
+    pub conn_threads: usize,
     /// Batch-fill histogram (non-cumulative counts per [`fill_bucket`]
     /// bucket: ≤1, ≤2, ≤4, … ≤64, +Inf).
     pub batch_fill: [u64; FILL_BUCKET_COUNT],
@@ -333,10 +443,15 @@ impl ServerStats {
     pub fn render_metrics(&self) -> String {
         use std::fmt::Write;
         let mut s = String::new();
+        let _ = writeln!(s, "lb2_requests_accepted_total {}", self.accepted);
         let _ = writeln!(s, "lb2_requests_served_total {}", self.served);
         let _ = writeln!(s, "lb2_requests_failed_total {}", self.failed);
         let _ = writeln!(s, "lb2_requests_rejected_total {}", self.rejected);
+        let _ = writeln!(s, "lb2_requests_shed_total {}", self.shed);
         let _ = writeln!(s, "lb2_requests_deadline_missed_total {}", self.deadline_missed);
+        let _ = writeln!(s, "# lb2_health: 0=healthy 1=degraded 2=draining");
+        let _ = writeln!(s, "lb2_health {}", self.health.code());
+        let _ = writeln!(s, "lb2_conn_threads {}", self.conn_threads);
         let _ = writeln!(s, "lb2_queue_depth {}", self.queue_depth);
         let _ = writeln!(s, "lb2_batches_total {}", self.batches);
         let _ = writeln!(s, "lb2_batch_mean_size {:.3}", self.mean_batch);
@@ -368,6 +483,7 @@ pub struct InferenceServer {
     workers: Vec<JoinHandle<()>>,
     stats: Arc<Mutex<StatsInner>>,
     queue_depth: Arc<AtomicUsize>,
+    accepted: Arc<AtomicU64>,
 }
 
 /// Cloneable ingress handle — what the TCP front-end's connection threads
@@ -381,6 +497,7 @@ pub struct SubmitHandle {
     tx: SyncSender<Request>,
     stats: Arc<Mutex<StatsInner>>,
     queue_depth: Arc<AtomicUsize>,
+    accepted: Arc<AtomicU64>,
 }
 
 impl SubmitHandle {
@@ -396,24 +513,38 @@ impl SubmitHandle {
         deadline: Option<Instant>,
         sink: Box<dyn ReplySink>,
     ) -> Result<(), TrySubmitError> {
-        let req = Request {
-            id,
-            input,
-            reply: ReplyTx::Sink(sink),
-            enqueued: Instant::now(),
-            deadline,
-        };
+        let now = Instant::now();
+        // Load shedding: refuse work whose deadline is already unmeetable
+        // — either outright passed, or shorter than the estimated queue
+        // wait at current occupancy. Conservative while the batch-time EMA
+        // is cold (estimate 0 ⇒ only an already-passed deadline sheds).
+        if let Some(d) = deadline {
+            let remaining_ms = d.saturating_duration_since(now).as_secs_f64() * 1e3;
+            let mut s = self.stats.lock().expect("stats lock");
+            let est_ms = s.estimated_wait_ms(self.queue_depth.load(Ordering::SeqCst));
+            if d <= now || remaining_ms < est_ms {
+                s.shed += 1;
+                return Err(TrySubmitError::DeadlineUnmeetable {
+                    retry_after_ms: s.retry_after_ms(),
+                });
+            }
+        }
+        let req = Request { id, input, reply: ReplyTx::Sink(sink), enqueued: now, deadline };
         // Gauge before send: the worker-side decrement can never observe
         // a count it outruns.
         self.queue_depth.fetch_add(1, Ordering::SeqCst);
         match self.tx.try_send(req) {
-            Ok(()) => Ok(()),
+            Ok(()) => {
+                self.accepted.fetch_add(1, Ordering::SeqCst);
+                Ok(())
+            }
             Err(e) => {
                 self.queue_depth.fetch_sub(1, Ordering::SeqCst);
                 match e {
                     TrySendError::Full(_) => {
-                        self.stats.lock().expect("stats lock").rejected += 1;
-                        Err(TrySubmitError::QueueFull)
+                        let mut s = self.stats.lock().expect("stats lock");
+                        s.rejected += 1;
+                        Err(TrySubmitError::QueueFull { retry_after_ms: s.retry_after_ms() })
                     }
                     TrySendError::Disconnected(_) => Err(TrySubmitError::Closed),
                 }
@@ -423,15 +554,33 @@ impl SubmitHandle {
 
     /// Snapshot statistics (same numbers as [`InferenceServer::stats`]).
     pub fn stats(&self) -> ServerStats {
-        snapshot(&self.stats, &self.queue_depth)
+        snapshot(&self.stats, &self.queue_depth, &self.accepted)
+    }
+
+    /// Current health, computed from live queue depth and the recent
+    /// failure window — the HEALTH frame handler's one call.
+    pub fn health(&self) -> HealthState {
+        let s = self.stats.lock().expect("stats lock");
+        s.health(self.queue_depth.load(Ordering::SeqCst))
+    }
+
+    /// Mark the server draining: health reports [`HealthState::Draining`]
+    /// from now on. Called by the front-end when shutdown begins.
+    pub fn set_draining(&self) {
+        self.stats.lock().expect("stats lock").draining = true;
     }
 }
+
+/// Completions in the failure-rate window before it is halved — recent
+/// history dominates, old incidents age out.
+const FAIL_WINDOW: u64 = 512;
 
 struct StatsInner {
     started: Instant,
     served: u64,
     failed: u64,
     rejected: u64,
+    shed: u64,
     deadline_missed: u64,
     batches: u64,
     batch_total: u64,
@@ -444,15 +593,32 @@ struct StatsInner {
     /// (batch size / exec seconds) — O(1) memory on long-running servers.
     rate_sum: f64,
     rate_count: u64,
+    /// EMA of batch execution time — the queue-wait estimator behind
+    /// deadline load shedding and BUSY retry-after hints. 0.0 until the
+    /// first batch completes (shedding stays conservative while cold).
+    ema_batch_ms: f64,
+    /// Decayed completion window for the failure-rate health trigger:
+    /// (completions, failed-or-expired completions), both halved at
+    /// [`FAIL_WINDOW`].
+    win_total: u64,
+    win_failed: u64,
+    /// Set once at shutdown; health reports Draining from then on.
+    draining: bool,
+    /// Copied from [`ServerConfig`] so health can be computed at snapshot.
+    policy: HealthPolicy,
+    queue_cap: usize,
+    max_batch: usize,
+    workers: usize,
 }
 
 impl StatsInner {
-    fn new() -> Self {
+    fn new(cfg: &ServerConfig) -> Self {
         Self {
             started: Instant::now(),
             served: 0,
             failed: 0,
             rejected: 0,
+            shed: 0,
             deadline_missed: 0,
             batches: 0,
             batch_total: 0,
@@ -461,6 +627,14 @@ impl StatsInner {
             lat_next: 0,
             rate_sum: 0.0,
             rate_count: 0,
+            ema_batch_ms: 0.0,
+            win_total: 0,
+            win_failed: 0,
+            draining: false,
+            policy: cfg.health.clone(),
+            queue_cap: cfg.queue_depth,
+            max_batch: cfg.max_batch,
+            workers: cfg.workers,
         }
     }
 
@@ -471,6 +645,51 @@ impl StatsInner {
             self.latencies_ms[self.lat_next] = ms;
         }
         self.lat_next = (self.lat_next + 1) % LAT_CAP;
+    }
+
+    /// Record `n` completions, `bad` of them failed/expired, into the
+    /// decayed failure window.
+    fn window_complete(&mut self, n: u64, bad: u64) {
+        self.win_total += n;
+        self.win_failed += bad;
+        if self.win_total >= FAIL_WINDOW {
+            self.win_total /= 2;
+            self.win_failed /= 2;
+        }
+    }
+
+    /// Expected milliseconds until a newly admitted request would start
+    /// executing, from the batch-time EMA and current queue occupancy.
+    /// 0.0 while the EMA is cold — shedding never fires before the server
+    /// has executed a single batch.
+    fn estimated_wait_ms(&self, depth: usize) -> f64 {
+        let lanes = (self.max_batch * self.workers).max(1);
+        self.ema_batch_ms * (depth as f64 / lanes as f64 + 1.0)
+    }
+
+    /// Retry-after hint: roughly one batch period, clamped to [1, 30000]
+    /// ms; a 5ms default while the EMA is cold.
+    fn retry_after_ms(&self) -> u32 {
+        if self.ema_batch_ms > 0.0 {
+            (self.ema_batch_ms.ceil() as u32).clamp(1, 30_000)
+        } else {
+            5
+        }
+    }
+
+    fn health(&self, depth: usize) -> HealthState {
+        if self.draining {
+            return HealthState::Draining;
+        }
+        let deep = self.queue_cap > 0
+            && depth as f64 >= self.policy.degraded_queue_frac * self.queue_cap as f64;
+        let failing = self.win_total >= self.policy.min_window.max(1)
+            && self.win_failed as f64 / self.win_total as f64 > self.policy.degraded_failure_rate;
+        if deep || failing {
+            HealthState::Degraded
+        } else {
+            HealthState::Healthy
+        }
     }
 }
 
@@ -485,7 +704,7 @@ impl InferenceServer {
         queue_depth: usize,
         backend: impl FnMut(&[Vec<f32>]) -> Vec<Vec<f32>> + Send + 'static,
     ) -> Self {
-        let cfg = ServerConfig { max_batch, max_wait, queue_depth, workers: 1 };
+        let cfg = ServerConfig { max_batch, max_wait, queue_depth, workers: 1, ..Default::default() };
         // The factory is FnMut but runs exactly once (workers = 1); move the
         // backend out through an Option.
         let mut backend = Some(backend);
@@ -520,8 +739,9 @@ impl InferenceServer {
         assert!(cfg.max_batch >= 1, "need max_batch >= 1");
         let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
         let rx = Arc::new(Mutex::new(rx));
-        let stats = Arc::new(Mutex::new(StatsInner::new()));
+        let stats = Arc::new(Mutex::new(StatsInner::new(&cfg)));
         let queue_depth = Arc::new(AtomicUsize::new(0));
+        let accepted = Arc::new(AtomicU64::new(0));
         let mut workers = Vec::with_capacity(cfg.workers);
         for w in 0..cfg.workers {
             let rx = Arc::clone(&rx);
@@ -533,7 +753,7 @@ impl InferenceServer {
                 Self::worker_loop(&rx, &cfg, &mut backend, &stats, &queue_depth)
             }));
         }
-        Self { tx: Some(tx), workers, stats, queue_depth }
+        Self { tx: Some(tx), workers, stats, queue_depth, accepted }
     }
 
     fn worker_loop<B: BatchBackend>(
@@ -592,7 +812,9 @@ impl InferenceServer {
                 }
             }
             if expired > 0 {
-                stats.lock().expect("stats lock").deadline_missed += expired;
+                let mut s = stats.lock().expect("stats lock");
+                s.deadline_missed += expired;
+                s.window_complete(expired, expired);
             }
             let batch = live;
 
@@ -650,7 +872,10 @@ impl InferenceServer {
                     "serving: backend left {} columns for a {bsize}-request group; failing the group",
                     y.cols()
                 );
-                stats.lock().expect("stats lock").failed += bsize as u64;
+                let mut s = stats.lock().expect("stats lock");
+                s.failed += bsize as u64;
+                s.window_complete(bsize as u64, bsize as u64);
+                drop(s);
                 for req in group {
                     // Channel replies drop (clients observe RecvError);
                     // sinks get the precise Failed outcome.
@@ -660,7 +885,10 @@ impl InferenceServer {
             }
             Err(_) => {
                 eprintln!("serving: backend panicked on a {bsize}x{d_in} group; failing the group");
-                stats.lock().expect("stats lock").failed += bsize as u64;
+                let mut s = stats.lock().expect("stats lock");
+                s.failed += bsize as u64;
+                s.window_complete(bsize as u64, bsize as u64);
+                drop(s);
                 for req in group {
                     req.reply.complete(req.id, RequestOutcome::Failed);
                 }
@@ -676,6 +904,11 @@ impl InferenceServer {
             s.rate_sum += bsize as f64 / exec_s.max(1e-9);
             s.rate_count += 1;
             s.fill_hist[fill_bucket(bsize)] += 1;
+            // Batch-time EMA feeding the load-shedding wait estimate.
+            let exec_ms = exec_s * 1e3;
+            s.ema_batch_ms =
+                if s.ema_batch_ms > 0.0 { 0.8 * s.ema_batch_ms + 0.2 * exec_ms } else { exec_ms };
+            s.window_complete(bsize as u64, 0);
             for req in group {
                 s.served += 1;
                 s.push_latency(done.duration_since(req.enqueued).as_secs_f64() * 1e3);
@@ -714,6 +947,7 @@ impl InferenceServer {
             self.queue_depth.fetch_sub(1, Ordering::SeqCst);
             panic!("server worker alive");
         }
+        self.accepted.fetch_add(1, Ordering::SeqCst);
         rx
     }
 
@@ -724,12 +958,26 @@ impl InferenceServer {
             tx: self.tx.as_ref().expect("server not shut down").clone(),
             stats: Arc::clone(&self.stats),
             queue_depth: Arc::clone(&self.queue_depth),
+            accepted: Arc::clone(&self.accepted),
         }
     }
 
     /// Snapshot statistics.
     pub fn stats(&self) -> ServerStats {
-        snapshot(&self.stats, &self.queue_depth)
+        snapshot(&self.stats, &self.queue_depth, &self.accepted)
+    }
+
+    /// Current health (see [`SubmitHandle::health`]).
+    pub fn health(&self) -> HealthState {
+        let s = self.stats.lock().expect("stats lock");
+        s.health(self.queue_depth.load(Ordering::SeqCst))
+    }
+
+    /// Mark the server draining (health-only; ingress stays connected so
+    /// already-accepted work still drains — actual disconnection happens
+    /// in [`shutdown`](Self::shutdown)).
+    pub fn begin_drain(&self) {
+        self.stats.lock().expect("stats lock").draining = true;
     }
 
     /// Graceful shutdown: drop the sender, join the workers, then snapshot —
@@ -747,7 +995,11 @@ impl InferenceServer {
 /// Build a [`ServerStats`] snapshot from the shared counters — the one
 /// implementation behind [`InferenceServer::stats`] and
 /// [`SubmitHandle::stats`].
-fn snapshot(stats: &Mutex<StatsInner>, queue_depth: &AtomicUsize) -> ServerStats {
+fn snapshot(
+    stats: &Mutex<StatsInner>,
+    queue_depth: &AtomicUsize,
+    accepted: &AtomicU64,
+) -> ServerStats {
     let s = stats.lock().expect("stats lock");
     let mut lat = s.latencies_ms.clone();
     lat.sort_by(|a, b| a.partial_cmp(b).expect("finite"));
@@ -773,8 +1025,12 @@ fn snapshot(stats: &Mutex<StatsInner>, queue_depth: &AtomicUsize) -> ServerStats
         },
         failed: s.failed,
         rejected: s.rejected,
+        shed: s.shed,
         deadline_missed: s.deadline_missed,
+        accepted: accepted.load(Ordering::SeqCst),
         queue_depth: queue_depth.load(Ordering::SeqCst),
+        health: s.health(queue_depth.load(Ordering::SeqCst)),
+        conn_threads: 0,
         batch_fill: s.fill_hist,
     }
 }
@@ -876,6 +1132,7 @@ mod tests {
             max_wait: Duration::from_millis(250),
             queue_depth: 64,
             workers: 2,
+            ..Default::default()
         };
         let server = InferenceServer::start_pool(cfg, |_worker| {
             let max_cols = Arc::clone(&max_cols);
@@ -909,6 +1166,7 @@ mod tests {
             max_wait: Duration::from_millis(1),
             queue_depth: 64,
             workers: 4,
+            ..Default::default()
         };
         let server = InferenceServer::start_pool(cfg, |_worker| {
             |x: &Mat| -> Mat { x.clone() }
@@ -1077,6 +1335,7 @@ mod tests {
                 max_wait: Duration::from_millis(2),
                 queue_depth: 64,
                 workers: 2,
+                ..Default::default()
             },
             |_worker| PackedResidualBackend::new(Arc::clone(&model), 1),
         );
@@ -1138,6 +1397,7 @@ mod tests {
             max_wait: Duration::from_millis(1),
             queue_depth: 1,
             workers: 1,
+            ..Default::default()
         };
         let mut backend = Some(gated_backend(started_tx, gate_rx));
         let server = InferenceServer::start_pool(cfg, move |_w| backend.take().unwrap());
@@ -1153,7 +1413,7 @@ mod tests {
         handle.try_submit(2, vec![2.0], None, sink(&cap_tx)).unwrap();
         assert_eq!(handle.stats().queue_depth, 1, "B should be queued");
         let err = handle.try_submit(3, vec![3.0], None, sink(&cap_tx)).unwrap_err();
-        assert_eq!(err, TrySubmitError::QueueFull);
+        assert!(matches!(err, TrySubmitError::QueueFull { .. }), "{err:?}");
 
         gate_tx.send(()).unwrap(); // release A
         started_rx.recv().unwrap(); // B reached the backend
@@ -1188,6 +1448,7 @@ mod tests {
             max_wait: Duration::from_millis(1),
             queue_depth: 16,
             workers: 1,
+            ..Default::default()
         };
         let mut backend = Some(gated_backend(started_tx, gate_rx));
         let server = InferenceServer::start_pool(cfg, move |_w| backend.take().unwrap());
@@ -1251,22 +1512,185 @@ mod tests {
             served: 12,
             failed: 1,
             rejected: 2,
+            shed: 6,
             deadline_missed: 3,
+            accepted: 16,
             queue_depth: 4,
             batches: 5,
+            health: HealthState::Degraded,
+            conn_threads: 7,
             ..Default::default()
         };
         stats.batch_fill[0] = 3; // three 1-request batches
         stats.batch_fill[2] = 2; // two batches of 3..=4
         let text = stats.render_metrics();
+        assert!(text.contains("lb2_requests_accepted_total 16"), "{text}");
         assert!(text.contains("lb2_requests_served_total 12"), "{text}");
         assert!(text.contains("lb2_requests_failed_total 1"), "{text}");
         assert!(text.contains("lb2_requests_rejected_total 2"), "{text}");
+        assert!(text.contains("lb2_requests_shed_total 6"), "{text}");
         assert!(text.contains("lb2_requests_deadline_missed_total 3"), "{text}");
+        assert!(text.contains("lb2_health 1"), "{text}");
+        assert!(text.contains("lb2_conn_threads 7"), "{text}");
         assert!(text.contains("lb2_queue_depth 4"), "{text}");
         assert!(text.contains("lb2_batches_total 5"), "{text}");
         assert!(text.contains("lb2_batch_fill_bucket{le=\"1\"} 3"), "{text}");
         assert!(text.contains("lb2_batch_fill_bucket{le=\"4\"} 5"), "{text}");
         assert!(text.contains("lb2_batch_fill_bucket{le=\"+Inf\"} 5"), "{text}");
+    }
+
+    /// Health state machine: a fresh server is Healthy; a burst of
+    /// backend failures past the window threshold flips it to Degraded;
+    /// successes age the window back out; `begin_drain` pins Draining.
+    #[test]
+    fn health_degrades_on_failure_rate_and_drains_on_shutdown() {
+        let bad = Arc::new(std::sync::atomic::AtomicBool::new(true));
+        let cfg = ServerConfig {
+            max_batch: 1,
+            max_wait: Duration::from_millis(1),
+            queue_depth: 64,
+            workers: 1,
+            health: HealthPolicy {
+                degraded_failure_rate: 0.5,
+                min_window: 4,
+                ..Default::default()
+            },
+        };
+        let bad_flag = Arc::clone(&bad);
+        let server = InferenceServer::start_pool(cfg, move |_w| {
+            let bad = Arc::clone(&bad_flag);
+            move |x: &Mat| -> Mat {
+                if bad.load(Ordering::SeqCst) {
+                    panic!("injected");
+                }
+                x.clone()
+            }
+        });
+        assert_eq!(server.health(), HealthState::Healthy);
+
+        // 8 failures: window (8, 8) → rate 1.0 > 0.5 with ≥ 4 samples.
+        for i in 0..8 {
+            let _ = server.submit(i, vec![1.0]).recv();
+        }
+        assert_eq!(server.health(), HealthState::Degraded);
+
+        // A long run of successes dilutes the window below the threshold.
+        bad.store(false, Ordering::SeqCst);
+        for i in 8..32 {
+            server.submit(i, vec![1.0]).recv().unwrap();
+        }
+        assert_eq!(server.health(), HealthState::Healthy);
+
+        server.begin_drain();
+        assert_eq!(server.health(), HealthState::Draining);
+        let stats = server.shutdown();
+        assert_eq!(stats.accepted, 32);
+        assert_eq!(stats.accepted, stats.served + stats.failed + stats.deadline_missed);
+    }
+
+    /// Queue-occupancy health trigger: pin the worker and stack requests
+    /// past the configured fraction of queue_depth.
+    #[test]
+    fn health_degrades_on_queue_depth() {
+        let (started_tx, started_rx) = std::sync::mpsc::channel();
+        let (gate_tx, gate_rx) = std::sync::mpsc::channel();
+        let cfg = ServerConfig {
+            max_batch: 1,
+            max_wait: Duration::from_millis(1),
+            queue_depth: 4,
+            workers: 1,
+            health: HealthPolicy { degraded_queue_frac: 0.5, ..Default::default() },
+        };
+        let mut backend = Some(gated_backend(started_tx, gate_rx));
+        let server = InferenceServer::start_pool(cfg, move |_w| backend.take().unwrap());
+        let handle = server.handle();
+        let (cap_tx, cap_rx) = std::sync::mpsc::channel();
+
+        // One pins the worker, two occupy half the 4-deep queue.
+        for id in 0..3 {
+            handle
+                .try_submit(id, vec![1.0], None, Box::new(CaptureSink { tx: cap_tx.clone() }))
+                .unwrap();
+        }
+        started_rx.recv().unwrap();
+        assert_eq!(handle.health(), HealthState::Degraded, "queue half full");
+
+        gate_tx.send(()).unwrap(); // release request 0
+        started_rx.recv().unwrap(); // request 1 reached the backend
+        gate_tx.send(()).unwrap(); // release request 1
+        started_rx.recv().unwrap(); // request 2 reached the backend
+        gate_tx.send(()).unwrap(); // release request 2
+        for _ in 0..3 {
+            cap_rx.recv().unwrap();
+        }
+        assert_eq!(handle.health(), HealthState::Healthy, "queue drained");
+        drop(handle);
+        server.shutdown();
+    }
+
+    /// Load shedding: a deadline that has already passed is refused at
+    /// admission as DeadlineUnmeetable (never queued, counted as shed),
+    /// and once the batch-time EMA is warm, a deadline shorter than the
+    /// estimated queue wait is refused too — with a retry-after hint.
+    #[test]
+    fn unmeetable_deadlines_are_shed_at_admission() {
+        let cfg = ServerConfig {
+            max_batch: 1,
+            max_wait: Duration::from_millis(1),
+            queue_depth: 16,
+            workers: 1,
+            ..Default::default()
+        };
+        // Slow backend: ~40ms per batch, so the EMA warms to ~40ms.
+        let server = InferenceServer::start_pool(cfg, |_w| {
+            |x: &Mat| -> Mat {
+                std::thread::sleep(Duration::from_millis(40));
+                x.clone()
+            }
+        });
+        let handle = server.handle();
+        let (cap_tx, cap_rx) = std::sync::mpsc::channel();
+
+        // Already-passed deadline: shed even with a cold EMA.
+        let past = Instant::now() - Duration::from_millis(1);
+        let err = handle
+            .try_submit(0, vec![1.0], Some(past), Box::new(CaptureSink { tx: cap_tx.clone() }))
+            .unwrap_err();
+        assert!(matches!(err, TrySubmitError::DeadlineUnmeetable { .. }), "{err:?}");
+        assert!(err.retry_after_ms().unwrap() >= 1);
+
+        // Warm the EMA with one served request...
+        handle
+            .try_submit(1, vec![1.0], None, Box::new(CaptureSink { tx: cap_tx.clone() }))
+            .unwrap();
+        match cap_rx.recv().unwrap() {
+            (1, RequestOutcome::Ok(_)) => {}
+            other => panic!("unexpected {other:?}"),
+        }
+        // ...then a 2ms deadline against a ~40ms estimated wait is shed.
+        let tight = Instant::now() + Duration::from_millis(2);
+        let err = handle
+            .try_submit(2, vec![1.0], Some(tight), Box::new(CaptureSink { tx: cap_tx.clone() }))
+            .unwrap_err();
+        assert!(matches!(err, TrySubmitError::DeadlineUnmeetable { .. }), "{err:?}");
+        // The hint tracks the EMA: roughly one batch period.
+        assert!(err.retry_after_ms().unwrap() >= 10, "{err:?}");
+
+        // A generous deadline is still admitted and served.
+        let ok = Instant::now() + Duration::from_secs(10);
+        handle
+            .try_submit(3, vec![1.0], Some(ok), Box::new(CaptureSink { tx: cap_tx.clone() }))
+            .unwrap();
+        match cap_rx.recv().unwrap() {
+            (3, RequestOutcome::Ok(_)) => {}
+            other => panic!("unexpected {other:?}"),
+        }
+
+        drop(handle);
+        let stats = server.shutdown();
+        assert_eq!(stats.shed, 2);
+        assert_eq!(stats.accepted, 2);
+        assert_eq!(stats.served, 2);
+        assert_eq!(stats.accepted, stats.served + stats.failed + stats.deadline_missed);
     }
 }

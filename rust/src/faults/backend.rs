@@ -1,0 +1,196 @@
+//! Backend-boundary fault injection: a [`BatchBackend`] wrapper that
+//! injects panics, stalls, and wrong-shape outputs into the worker drain
+//! loop — exactly the faults the coordinator's `catch_unwind` isolation
+//! and output-shape check exist to absorb.
+
+use super::{draw_delay, FaultSpec};
+use crate::coordinator::BatchBackend;
+use crate::linalg::Mat;
+use crate::rng::Pcg64;
+use std::time::Duration;
+
+/// One drawn fault for one batch execution.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum BackendFault {
+    /// Execute the batch normally.
+    Pass,
+    /// Panic instead of executing — the worker's `catch_unwind` must fail
+    /// the whole group, not the process.
+    Panic,
+    /// Sleep, then execute normally. Models a GC pause / page-fault storm;
+    /// requests queued behind it may miss their deadlines.
+    Stall(Duration),
+    /// Execute normally, then truncate one column from the output so the
+    /// coordinator's shape check rejects the batch. The surviving columns
+    /// are never value-corrupted — any answer that *does* reach a client
+    /// stays bit-identical to the clean forward.
+    WrongShape,
+}
+
+/// A seeded per-worker fault source, same determinism contract as
+/// [`StreamInjector`](super::StreamInjector): the schedule is a pure
+/// function of the seed and the batch count.
+#[derive(Clone, Debug)]
+pub struct BackendInjector {
+    spec: FaultSpec,
+    rng: Pcg64,
+}
+
+impl BackendInjector {
+    pub(super) fn new(spec: FaultSpec, rng: Pcg64) -> Self {
+        Self { spec, rng }
+    }
+
+    fn rate_sum(&self) -> f64 {
+        self.spec.backend_panic + self.spec.backend_stall + self.spec.backend_wrong_shape
+    }
+
+    /// Draw the fault for the next batch. Cumulative thresholds over
+    /// (panic, stall, wrong_shape) in that fixed order.
+    pub fn next(&mut self) -> BackendFault {
+        if self.rate_sum() <= 0.0 {
+            return BackendFault::Pass;
+        }
+        let s = &self.spec;
+        let u = self.rng.uniform();
+        let mut t = s.backend_panic;
+        if u < t {
+            return BackendFault::Panic;
+        }
+        t += s.backend_stall;
+        if u < t {
+            return BackendFault::Stall(draw_delay(&mut self.rng, s.backend_stall_ms));
+        }
+        t += s.backend_wrong_shape;
+        if u < t {
+            return BackendFault::WrongShape;
+        }
+        BackendFault::Pass
+    }
+
+    /// Record the next `n` draws — the replayable fault schedule.
+    pub fn schedule(mut self, n: usize) -> Vec<BackendFault> {
+        (0..n).map(|_| self.next()).collect()
+    }
+}
+
+/// Wraps any [`BatchBackend`] with injected execution faults. Only built
+/// by an explicit chaos factory — the production worker loop never sees
+/// this type, so the no-fault drain path is untouched.
+pub struct ChaosBackend<B> {
+    inner: B,
+    injector: BackendInjector,
+}
+
+impl<B: BatchBackend> ChaosBackend<B> {
+    pub fn new(inner: B, injector: BackendInjector) -> Self {
+        Self { inner, injector }
+    }
+}
+
+impl<B: BatchBackend> BatchBackend for ChaosBackend<B> {
+    fn forward_batch_into(&mut self, x: &Mat, y: &mut Mat) {
+        match self.injector.next() {
+            BackendFault::Pass => self.inner.forward_batch_into(x, y),
+            BackendFault::Panic => panic!("injected backend panic"),
+            BackendFault::Stall(d) => {
+                std::thread::sleep(d);
+                self.inner.forward_batch_into(x, y);
+            }
+            BackendFault::WrongShape => {
+                self.inner.forward_batch_into(x, y);
+                // Drop one column (or fabricate one if the batch was a
+                // single request) so the coordinator's `cols() == batch`
+                // check fires and the group fails loudly.
+                let r = y.rows();
+                let c = y.cols();
+                if c > 1 {
+                    let mut t = Mat::zeros(r, c - 1);
+                    for j in 0..c - 1 {
+                        for (i, v) in y.col(j).iter().enumerate() {
+                            *t.at_mut(i, j) = *v;
+                        }
+                    }
+                    *y = t;
+                } else {
+                    y.resize(r.max(1), c + 1);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{FaultPlan, FaultSpec};
+    use super::*;
+    use std::panic::AssertUnwindSafe;
+
+    fn double_backend() -> impl BatchBackend {
+        |x: &Mat| -> Mat {
+            let mut y = x.clone();
+            for v in y.as_mut_slice() {
+                *v *= 2.0;
+            }
+            y
+        }
+    }
+
+    /// A zero-fault chaos wrapper is computationally transparent: outputs
+    /// are bit-identical to the bare backend's.
+    #[test]
+    fn zero_fault_backend_is_bit_exact() {
+        let plan = FaultPlan::new(3, FaultSpec::default());
+        let mut bare = double_backend();
+        let mut chaos = ChaosBackend::new(double_backend(), plan.backend_injector(0));
+
+        let mut x = Mat::zeros(4, 3);
+        for j in 0..3 {
+            for i in 0..4 {
+                *x.at_mut(i, j) = (i * 3 + j) as f32 * 0.25 - 1.0;
+            }
+        }
+        let mut y0 = Mat::zeros(0, 0);
+        let mut y1 = Mat::zeros(0, 0);
+        bare.forward_batch_into(&x, &mut y0);
+        chaos.forward_batch_into(&x, &mut y1);
+        assert_eq!(y0.rows(), y1.rows());
+        assert_eq!(y0.cols(), y1.cols());
+        for j in 0..y0.cols() {
+            for (a, b) in y0.col(j).iter().zip(y1.col(j)) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    /// Injected panics actually unwind out of `forward_batch_into`, and a
+    /// wrong-shape injection changes the column count but never the bits
+    /// of surviving columns.
+    #[test]
+    fn panic_and_wrong_shape_fire_as_drawn() {
+        let plan = FaultPlan::new(44, FaultSpec { backend_panic: 1.0, ..FaultSpec::default() });
+        let mut chaos = ChaosBackend::new(double_backend(), plan.backend_injector(0));
+        let x = Mat::zeros(2, 2);
+        let mut y = Mat::zeros(0, 0);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| chaos.forward_batch_into(&x, &mut y)));
+        assert!(r.is_err(), "injected panic must unwind");
+
+        let plan =
+            FaultPlan::new(44, FaultSpec { backend_wrong_shape: 1.0, ..FaultSpec::default() });
+        let mut chaos = ChaosBackend::new(double_backend(), plan.backend_injector(0));
+        let mut x = Mat::zeros(2, 3);
+        for j in 0..3 {
+            for i in 0..2 {
+                *x.at_mut(i, j) = (j + 1) as f32;
+            }
+        }
+        let mut y = Mat::zeros(0, 0);
+        chaos.forward_batch_into(&x, &mut y);
+        assert_eq!(y.cols(), 2, "one column dropped");
+        for j in 0..2 {
+            for (i, v) in y.col(j).iter().enumerate() {
+                assert_eq!(v.to_bits(), (x.col(j)[i] * 2.0).to_bits(), "survivors unaltered");
+            }
+        }
+    }
+}

@@ -1,0 +1,239 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! Chaos testing is only useful when a failure found once can be found
+//! again: every fault this module injects is drawn from a seeded
+//! [`Pcg64`](crate::rng::Pcg64) stream, so one `u64` seed fully determines
+//! the fault *schedule* — which operation gets a short read, which frame
+//! gets a flipped bit, which batch panics. Re-running with the same seed
+//! replays the same schedule byte for byte (`LB2_CHAOS_SEED` in `make
+//! chaos` carries it into CI and back to a laptop).
+//!
+//! Two injection boundaries, matching where real deployments fail:
+//!
+//! - **The wire** ([`FaultyStream`]): a `Read`/`Write` wrapper over any
+//!   stream (a `TcpStream` half in production, a `Cursor` in unit tests)
+//!   that injects short reads/writes, delays, single-bit corruption, and
+//!   mid-frame connection resets. [`TcpFrontend`](crate::serving::TcpFrontend)
+//!   wraps each accepted connection's halves when
+//!   [`ServingConfig::faults`](crate::serving::ServingConfig) is set;
+//!   [`WireClient`](crate::serving::WireClient) can be constructed over one
+//!   directly.
+//! - **The backend** ([`ChaosBackend`]): a
+//!   [`BatchBackend`](crate::coordinator::BatchBackend) wrapper that
+//!   injects panics, stalls, and wrong-shape outputs into the worker drain
+//!   loop — the faults the server's panic isolation and shape check are
+//!   supposed to absorb.
+//!
+//! Injected faults are *detectable-by-construction*: corruption is caught
+//! by the frame CRC, wrong shapes by the server's column check, panics by
+//! `catch_unwind` — so a chaos soak can still assert that every answer
+//! that does come back is bit-identical to the in-process forward. The
+//! injectors never silently alter a payload that passes validation.
+//!
+//! **Zero-cost when disabled.** Fault injection is opt-in at construction:
+//! the server's no-fault path never builds a [`FaultyStream`] (streams are
+//! used bare), a `FaultyStream` with no injector is a branch-only
+//! passthrough, and a backend is only wrapped in [`ChaosBackend`] by an
+//! explicit factory. No allocation or syscall is added to frame
+//! encode/decode or the worker drain loop when faults are off.
+
+mod backend;
+mod stream;
+
+pub use backend::{BackendFault, BackendInjector, ChaosBackend};
+pub use stream::{FaultyStream, StreamFault, StreamInjector};
+
+use crate::rng::{derive_seed, Pcg64};
+use std::time::Duration;
+
+/// Per-operation fault rates. All rates are probabilities in `[0, 1]`
+/// drawn against one uniform per operation, so at most one fault fires per
+/// read/write/batch; the default is all-zero (fully transparent).
+#[derive(Clone, Debug)]
+pub struct FaultSpec {
+    /// P(connection reset) per stream op (`ConnectionReset` on read,
+    /// `BrokenPipe` on write) — the mid-frame socket death.
+    pub reset: f64,
+    /// P(flip one bit of the transferred bytes) per stream op. Always
+    /// caught by the frame CRC downstream.
+    pub corrupt: f64,
+    /// P(truncate the op to 1..=`short_max` bytes) per stream op.
+    pub short: f64,
+    /// Cap on the bytes a shortened op may transfer.
+    pub short_max: usize,
+    /// P(sleep before the op) per stream op.
+    pub delay: f64,
+    /// Cap on an injected delay (uniform in `1..=delay_ms` milliseconds).
+    pub delay_ms: u64,
+    /// P(panic) per backend batch execution.
+    pub backend_panic: f64,
+    /// P(stall before executing) per backend batch execution.
+    pub backend_stall: f64,
+    /// Cap on an injected backend stall (uniform in `1..=backend_stall_ms`).
+    pub backend_stall_ms: u64,
+    /// P(return a wrong-column-count output) per backend batch execution.
+    pub backend_wrong_shape: f64,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        Self {
+            reset: 0.0,
+            corrupt: 0.0,
+            short: 0.0,
+            short_max: 16,
+            delay: 0.0,
+            delay_ms: 5,
+            backend_panic: 0.0,
+            backend_stall: 0.0,
+            backend_stall_ms: 20,
+            backend_wrong_shape: 0.0,
+        }
+    }
+}
+
+impl FaultSpec {
+    /// The preset the chaos soak and `serve --chaos-seed` use: frequent
+    /// partial I/O, occasional corruption/resets/panics — aggressive
+    /// enough to exercise every recovery path, bounded enough that a
+    /// retrying client converges in a handful of attempts.
+    pub fn moderate() -> Self {
+        Self {
+            reset: 0.01,
+            corrupt: 0.01,
+            short: 0.10,
+            short_max: 16,
+            delay: 0.05,
+            delay_ms: 3,
+            backend_panic: 0.04,
+            backend_stall: 0.04,
+            backend_stall_ms: 15,
+            backend_wrong_shape: 0.02,
+        }
+    }
+
+    fn stream_rate_sum(&self) -> f64 {
+        self.reset + self.corrupt + self.short + self.delay
+    }
+}
+
+/// A seeded, reproducible fault schedule factory. One plan covers a whole
+/// server run; each connection half and each worker backend derives its
+/// own independent sub-stream from `(seed, index)`, so schedules do not
+/// depend on accept order or worker interleaving — connection `k` sees the
+/// same faults no matter what the other connections are doing.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    spec: FaultSpec,
+}
+
+/// Domain separators so stream and backend injectors with equal indices
+/// never share an RNG stream.
+const STREAM_DOMAIN: u64 = 1;
+const BACKEND_DOMAIN: u64 = 2;
+
+impl FaultPlan {
+    pub fn new(seed: u64, spec: FaultSpec) -> Self {
+        Self { seed, spec }
+    }
+
+    /// The seed the plan was built from (logged so failures are replayable).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Injector for stream sub-stream `index`. The TCP front-end uses
+    /// `2*conn` for connection `conn`'s read half and `2*conn + 1` for its
+    /// write half.
+    pub fn stream_injector(&self, index: u64) -> StreamInjector {
+        StreamInjector::new(
+            self.spec.clone(),
+            Pcg64::seed(derive_seed(derive_seed(self.seed, STREAM_DOMAIN), index)),
+        )
+    }
+
+    /// Injector for worker backend `index`.
+    pub fn backend_injector(&self, index: u64) -> BackendInjector {
+        BackendInjector::new(
+            self.spec.clone(),
+            Pcg64::seed(derive_seed(derive_seed(self.seed, BACKEND_DOMAIN), index)),
+        )
+    }
+}
+
+/// Draw an injected delay duration: uniform in `1..=cap_ms` milliseconds.
+fn draw_delay(rng: &mut Pcg64, cap_ms: u64) -> Duration {
+    Duration::from_millis(1 + rng.below(cap_ms.max(1)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The acceptance contract: one seed fully determines the fault
+    /// schedule — two plans built from the same seed replay identical
+    /// schedules at every injector index, for both boundaries.
+    #[test]
+    fn same_seed_replays_identical_schedules() {
+        let a = FaultPlan::new(0xC4A0, FaultSpec::moderate());
+        let b = FaultPlan::new(0xC4A0, FaultSpec::moderate());
+        for idx in [0u64, 1, 7, 63] {
+            assert_eq!(
+                a.stream_injector(idx).schedule(512),
+                b.stream_injector(idx).schedule(512),
+                "stream schedule diverged at index {idx}"
+            );
+            assert_eq!(
+                a.backend_injector(idx).schedule(512),
+                b.backend_injector(idx).schedule(512),
+                "backend schedule diverged at index {idx}"
+            );
+        }
+    }
+
+    /// Distinct seeds and distinct injector indices produce distinct
+    /// schedules (independent sub-streams, not one shared clock).
+    #[test]
+    fn distinct_seeds_and_indices_diverge() {
+        let a = FaultPlan::new(1, FaultSpec::moderate());
+        let b = FaultPlan::new(2, FaultSpec::moderate());
+        assert_ne!(a.stream_injector(0).schedule(512), b.stream_injector(0).schedule(512));
+        assert_ne!(a.stream_injector(0).schedule(512), a.stream_injector(1).schedule(512));
+        // Stream and backend domains are separated even at equal indices.
+        let s: Vec<String> =
+            a.stream_injector(3).schedule(64).iter().map(|f| format!("{f:?}")).collect();
+        let k: Vec<String> =
+            a.backend_injector(3).schedule(64).iter().map(|f| format!("{f:?}")).collect();
+        assert_ne!(s, k);
+    }
+
+    /// An all-zero spec draws only `Pass`: the plan exists but is inert.
+    #[test]
+    fn zero_spec_is_all_pass() {
+        let plan = FaultPlan::new(9, FaultSpec::default());
+        for f in plan.stream_injector(0).schedule(256) {
+            assert_eq!(f, StreamFault::Pass);
+        }
+        for f in plan.backend_injector(0).schedule(256) {
+            assert_eq!(f, BackendFault::Pass);
+        }
+    }
+
+    /// The moderate preset actually fires every fault kind within a
+    /// bounded window (rates are not accidentally zeroed by the cumulative
+    /// threshold arithmetic).
+    #[test]
+    fn moderate_preset_covers_every_fault_kind() {
+        let plan = FaultPlan::new(0x5EED, FaultSpec::moderate());
+        let stream = plan.stream_injector(0).schedule(4096);
+        assert!(stream.iter().any(|f| matches!(f, StreamFault::Reset)));
+        assert!(stream.iter().any(|f| matches!(f, StreamFault::Corrupt { .. })));
+        assert!(stream.iter().any(|f| matches!(f, StreamFault::Short { .. })));
+        assert!(stream.iter().any(|f| matches!(f, StreamFault::Delay(_))));
+        let backend = plan.backend_injector(0).schedule(4096);
+        assert!(backend.iter().any(|f| matches!(f, BackendFault::Panic)));
+        assert!(backend.iter().any(|f| matches!(f, BackendFault::Stall(_))));
+        assert!(backend.iter().any(|f| matches!(f, BackendFault::WrongShape)));
+    }
+}

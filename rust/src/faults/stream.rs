@@ -1,0 +1,361 @@
+//! Wire-boundary fault injection: a `Read`/`Write` wrapper that applies a
+//! seeded schedule of short ops, delays, bit flips, and resets.
+
+use super::{draw_delay, FaultSpec};
+use crate::rng::Pcg64;
+use std::io::{self, Read, Write};
+use std::time::Duration;
+
+/// One drawn fault for one stream operation. `Delay` is resolved to a
+/// concrete duration at draw time so a recorded schedule (`schedule`) is
+/// comparable across runs.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum StreamFault {
+    /// No fault: delegate the op unchanged.
+    Pass,
+    /// Sleep, then delegate the op unchanged.
+    Delay(Duration),
+    /// Truncate the op to at most `max` bytes (never below 1, so progress
+    /// is still guaranteed and `read_exact`/`write_all` loops terminate).
+    Short { max: usize },
+    /// Flip bit `bit % 8` of byte `at % len` of the transferred bytes.
+    /// Downstream the frame CRC rejects the frame — corruption is loud.
+    Corrupt { at: usize, bit: u32 },
+    /// Kill the op: `ConnectionReset` on read, `BrokenPipe` on write.
+    Reset,
+}
+
+/// A seeded per-stream fault source. Draws exactly one `u64` plus any
+/// fault parameters per operation, so the schedule is a pure function of
+/// the seed and the op count — independent of payload sizes or timing.
+#[derive(Clone, Debug)]
+pub struct StreamInjector {
+    spec: FaultSpec,
+    rng: Pcg64,
+}
+
+impl StreamInjector {
+    pub(super) fn new(spec: FaultSpec, rng: Pcg64) -> Self {
+        Self { spec, rng }
+    }
+
+    /// Draw the fault for the next operation. Thresholds are cumulative
+    /// over (reset, corrupt, short, delay) in that fixed order; anything
+    /// past the sum is `Pass`.
+    pub fn next(&mut self) -> StreamFault {
+        let s = &self.spec;
+        if s.stream_rate_sum() <= 0.0 {
+            // Keep the zero-spec stream cheap *and* schedule-stable: no
+            // uniform is burned, so later raising one rate does not shift
+            // unrelated draws.
+            return StreamFault::Pass;
+        }
+        let u = self.rng.uniform();
+        let mut t = s.reset;
+        if u < t {
+            return StreamFault::Reset;
+        }
+        t += s.corrupt;
+        if u < t {
+            return StreamFault::Corrupt {
+                at: self.rng.below(u64::MAX) as usize,
+                bit: (self.rng.next_u64() % 8) as u32,
+            };
+        }
+        t += s.short;
+        if u < t {
+            return StreamFault::Short { max: 1 + self.rng.below(s.short_max.max(1) as u64) as usize };
+        }
+        t += s.delay;
+        if u < t {
+            return StreamFault::Delay(draw_delay(&mut self.rng, s.delay_ms));
+        }
+        StreamFault::Pass
+    }
+
+    /// Record the next `n` draws — the replayable fault schedule. Consumes
+    /// the injector's stream exactly like `n` live operations would, which
+    /// is what makes "same seed → same schedule" directly testable.
+    pub fn schedule(mut self, n: usize) -> Vec<StreamFault> {
+        (0..n).map(|_| self.next()).collect()
+    }
+}
+
+/// A fault-injecting wrapper over any byte stream. With `injector: None`
+/// every call is a plain delegate (one branch, no allocation, no extra
+/// syscall); with an injector, one fault is drawn per `read`/`write` and
+/// applied to that op.
+///
+/// A drawn fault that cannot be applied because the underlying op would
+/// not have transferred bytes (`WouldBlock`/`Interrupted`/`TimedOut`, as
+/// the front-end's polled reads produce constantly) is stashed and retried
+/// on the next call, so poll ticks don't silently burn the schedule.
+pub struct FaultyStream<S> {
+    inner: S,
+    injector: Option<StreamInjector>,
+    pending: Option<StreamFault>,
+}
+
+impl<S> FaultyStream<S> {
+    /// Wrap `inner` with a fault source.
+    pub fn new(inner: S, injector: StreamInjector) -> Self {
+        Self { inner, injector: Some(injector), pending: None }
+    }
+
+    /// A transparent wrapper: every op is a straight delegate. Exists so
+    /// call sites can be generic over `FaultyStream<S>` without paying for
+    /// injection.
+    pub fn passthrough(inner: S) -> Self {
+        Self { inner, injector: None, pending: None }
+    }
+
+    pub fn get_ref(&self) -> &S {
+        &self.inner
+    }
+
+    pub fn get_mut(&mut self) -> &mut S {
+        &mut self.inner
+    }
+
+    pub fn into_inner(self) -> S {
+        self.inner
+    }
+
+    /// Take the fault for this op: the stashed one from a no-progress
+    /// retry if present, else a fresh draw.
+    fn draw(&mut self) -> StreamFault {
+        if let Some(f) = self.pending.take() {
+            return f;
+        }
+        match self.injector.as_mut() {
+            Some(inj) => inj.next(),
+            None => StreamFault::Pass,
+        }
+    }
+
+    /// `WouldBlock`-family errors mean the op transferred nothing; keep
+    /// the drawn fault for the retry instead of dropping it.
+    fn stash_if_no_progress(&mut self, fault: StreamFault, err: &io::Error) {
+        if matches!(
+            err.kind(),
+            io::ErrorKind::WouldBlock | io::ErrorKind::Interrupted | io::ErrorKind::TimedOut
+        ) {
+            self.pending = Some(fault);
+        }
+    }
+}
+
+fn flip_bit(buf: &mut [u8], at: usize, bit: u32) {
+    if !buf.is_empty() {
+        buf[at % buf.len()] ^= 1u8 << (bit % 8);
+    }
+}
+
+impl<S: Read> Read for FaultyStream<S> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        if self.injector.is_none() && self.pending.is_none() {
+            return self.inner.read(buf);
+        }
+        let fault = self.draw();
+        match fault {
+            StreamFault::Pass => self.inner.read(buf),
+            StreamFault::Delay(d) => {
+                std::thread::sleep(d);
+                self.inner.read(buf)
+            }
+            StreamFault::Short { max } => {
+                let cap = max.min(buf.len()).max(1.min(buf.len()));
+                match self.inner.read(&mut buf[..cap]) {
+                    Ok(n) => Ok(n),
+                    Err(e) => {
+                        self.stash_if_no_progress(StreamFault::Short { max }, &e);
+                        Err(e)
+                    }
+                }
+            }
+            StreamFault::Corrupt { at, bit } => match self.inner.read(buf) {
+                Ok(n) => {
+                    flip_bit(&mut buf[..n], at, bit);
+                    Ok(n)
+                }
+                Err(e) => {
+                    self.stash_if_no_progress(StreamFault::Corrupt { at, bit }, &e);
+                    Err(e)
+                }
+            },
+            StreamFault::Reset => {
+                Err(io::Error::new(io::ErrorKind::ConnectionReset, "injected connection reset"))
+            }
+        }
+    }
+}
+
+impl<S: Write> Write for FaultyStream<S> {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        if self.injector.is_none() && self.pending.is_none() {
+            return self.inner.write(buf);
+        }
+        let fault = self.draw();
+        match fault {
+            StreamFault::Pass => self.inner.write(buf),
+            StreamFault::Delay(d) => {
+                std::thread::sleep(d);
+                self.inner.write(buf)
+            }
+            StreamFault::Short { max } => {
+                let cap = max.min(buf.len()).max(1.min(buf.len()));
+                match self.inner.write(&buf[..cap]) {
+                    Ok(n) => Ok(n),
+                    Err(e) => {
+                        self.stash_if_no_progress(StreamFault::Short { max }, &e);
+                        Err(e)
+                    }
+                }
+            }
+            StreamFault::Corrupt { at, bit } => {
+                // The only allocating path, and it only exists when a
+                // corruption fault actually fires.
+                let mut poisoned = buf.to_vec();
+                flip_bit(&mut poisoned, at, bit);
+                match self.inner.write(&poisoned) {
+                    Ok(n) => Ok(n),
+                    Err(e) => {
+                        self.stash_if_no_progress(StreamFault::Corrupt { at, bit }, &e);
+                        Err(e)
+                    }
+                }
+            }
+            StreamFault::Reset => {
+                Err(io::Error::new(io::ErrorKind::BrokenPipe, "injected broken pipe"))
+            }
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{FaultPlan, FaultSpec};
+    use super::*;
+    use std::io::Cursor;
+
+    /// Zero-fault plan = transparent passthrough: reading a buffer through
+    /// the wrapper is bit-exact against reading the plain stream, and
+    /// writes come out byte-identical.
+    #[test]
+    fn zero_fault_plan_is_bit_exact_passthrough() {
+        let data: Vec<u8> = (0..4096u32).map(|i| (i * 2654435761 >> 13) as u8).collect();
+
+        let plan = FaultPlan::new(7, FaultSpec::default());
+        let mut wrapped = FaultyStream::new(Cursor::new(data.clone()), plan.stream_injector(0));
+        let mut via_wrapper = Vec::new();
+        wrapped.read_to_end(&mut via_wrapper).unwrap();
+        assert_eq!(via_wrapper, data);
+
+        let mut sink = FaultyStream::new(Cursor::new(Vec::new()), plan.stream_injector(1));
+        sink.write_all(&data).unwrap();
+        sink.flush().unwrap();
+        assert_eq!(sink.into_inner().into_inner(), data);
+
+        // The explicit passthrough constructor behaves identically.
+        let mut plain = FaultyStream::passthrough(Cursor::new(data.clone()));
+        let mut out = Vec::new();
+        plain.read_to_end(&mut out).unwrap();
+        assert_eq!(out, data);
+    }
+
+    /// Short faults still make progress, so `read_exact`/`write_all`
+    /// loops over a shortened stream terminate with the full payload.
+    #[test]
+    fn short_ops_preserve_payload_under_read_exact_and_write_all() {
+        let spec = FaultSpec { short: 1.0, short_max: 3, ..FaultSpec::default() };
+        let plan = FaultPlan::new(21, spec);
+        let data: Vec<u8> = (0..777u32).map(|i| (i % 251) as u8).collect();
+
+        let mut rd = FaultyStream::new(Cursor::new(data.clone()), plan.stream_injector(0));
+        let mut got = vec![0u8; data.len()];
+        rd.read_exact(&mut got).unwrap();
+        assert_eq!(got, data);
+
+        let mut wr = FaultyStream::new(Cursor::new(Vec::new()), plan.stream_injector(1));
+        wr.write_all(&data).unwrap();
+        assert_eq!(wr.into_inner().into_inner(), data);
+    }
+
+    /// A corrupting write changes exactly one bit of the payload — loud to
+    /// a CRC, but deterministic: the same seed flips the same bit.
+    #[test]
+    fn corruption_flips_exactly_one_bit_deterministically() {
+        let spec = FaultSpec { corrupt: 1.0, ..FaultSpec::default() };
+        let data = vec![0u8; 64];
+
+        let flipped: Vec<Vec<u8>> = (0..2)
+            .map(|_| {
+                let plan = FaultPlan::new(33, spec.clone());
+                let mut wr = FaultyStream::new(Cursor::new(Vec::new()), plan.stream_injector(0));
+                wr.write_all(&data).unwrap();
+                wr.into_inner().into_inner()
+            })
+            .collect();
+        assert_eq!(flipped[0], flipped[1], "same seed must corrupt the same bit");
+        let diff_bits: u32 = flipped[0].iter().map(|b| b.count_ones()).sum();
+        assert_eq!(diff_bits, 1, "exactly one bit flipped in one write op");
+    }
+
+    /// Reset faults surface as the right error kind per direction.
+    #[test]
+    fn reset_maps_to_connection_reset_and_broken_pipe() {
+        let spec = FaultSpec { reset: 1.0, ..FaultSpec::default() };
+        let plan = FaultPlan::new(5, spec);
+
+        let mut rd = FaultyStream::new(Cursor::new(vec![1, 2, 3]), plan.stream_injector(0));
+        let mut buf = [0u8; 3];
+        assert_eq!(rd.read(&mut buf).unwrap_err().kind(), io::ErrorKind::ConnectionReset);
+
+        let mut wr = FaultyStream::new(Cursor::new(Vec::new()), plan.stream_injector(1));
+        assert_eq!(wr.write(&[1, 2, 3]).unwrap_err().kind(), io::ErrorKind::BrokenPipe);
+    }
+
+    /// A fault drawn against an op that made no progress (`WouldBlock`) is
+    /// replayed on the retry, not dropped — poll ticks don't consume the
+    /// schedule.
+    #[test]
+    fn no_progress_ops_do_not_burn_the_schedule() {
+        struct Flaky {
+            blocks_left: usize,
+            data: Cursor<Vec<u8>>,
+        }
+        impl Read for Flaky {
+            fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+                if self.blocks_left > 0 {
+                    self.blocks_left -= 1;
+                    return Err(io::Error::new(io::ErrorKind::WouldBlock, "not ready"));
+                }
+                self.data.read(buf)
+            }
+        }
+
+        // One guaranteed Short fault per op; the first three underlying
+        // reads block. The short cap must still apply to the read that
+        // finally succeeds.
+        let spec = FaultSpec { short: 1.0, short_max: 2, ..FaultSpec::default() };
+        let plan = FaultPlan::new(11, spec);
+        let flaky = Flaky { blocks_left: 3, data: Cursor::new(vec![9u8; 64]) };
+        let mut rd = FaultyStream::new(flaky, plan.stream_injector(0));
+
+        let mut buf = [0u8; 64];
+        let mut blocked = 0;
+        let n = loop {
+            match rd.read(&mut buf) {
+                Ok(n) => break n,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => blocked += 1,
+                Err(e) => panic!("unexpected error: {e}"),
+            }
+        };
+        assert_eq!(blocked, 3);
+        assert!(n >= 1 && n <= 2, "short cap survived the WouldBlock retries, got {n}");
+    }
+}

@@ -51,6 +51,7 @@
 pub mod artifact;
 pub mod coordinator;
 pub mod data;
+pub mod faults;
 pub mod linalg;
 pub mod littlebit;
 pub mod memory;

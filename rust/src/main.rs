@@ -16,10 +16,13 @@
 //!                  [--threads T] [--requests R]        serve from an artifact,
 //!                  [--listen ADDR] [--serve-secs S]     dispatching on its METHOD tags;
 //!                  [--deadline-ms D] [--max-wait-ms W]  with --listen: TCP front-end
-//!                                                      (cross-connection batching)
+//!                  [--chaos-seed S]                     (cross-connection batching;
+//!                                                      chaos-seed injects seeded faults)
 //! littlebit2 client --connect HOST:PORT --width D [--requests R]
 //!                   [--concurrency C] [--deadline-ms D] [--verify 1]
 //!                   [--stats 1] [--shutdown 1]          wire-protocol load client
+//!                   [--retries N] [--backoff-ms B] [--budget-ms T]
+//!                                                      (retries>0: self-healing client)
 //! littlebit2 eval [--size N] [--blocks B] [--methods CSV] [--bpp-list CSV]
 //!                 [--jobs N] [--requests R] [--out BENCH_methods.json]
 //!                                                      methods × bpp fidelity/
@@ -37,12 +40,15 @@ use littlebit2::coordinator::{
     run_compression_jobs_streaming, CompressionJob, InferenceServer, JobInput, MethodStackBackend,
     ServerConfig,
 };
+use littlebit2::faults::{ChaosBackend, FaultPlan, FaultSpec};
 use littlebit2::littlebit::{compress, CompressionConfig, CompressionReport, InitStrategy};
 use littlebit2::memory::{model_memory, MethodKind};
 use littlebit2::model::{zoo, ArchSpec, MethodStack, MethodStackLayer};
 use littlebit2::quant::{tiny_rank_fp16, MethodSpec, METHOD_NAMES};
 use littlebit2::rng::{derive_seed, Pcg64};
-use littlebit2::serving::{payload_f32, FrameKind, ServingConfig, TcpFrontend, WireClient};
+use littlebit2::serving::{
+    payload_f32, FrameKind, RetryPolicy, RetryingClient, ServingConfig, TcpFrontend, WireClient,
+};
 use littlebit2::spectral::{
     estimate_gamma, quant_cost, synth_weight, tail_energy, SynthSpec,
 };
@@ -423,6 +429,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "serve-secs",
         "deadline-ms",
         "max-wait-ms",
+        "chaos-seed",
     ])?;
     let model_path = args
         .flags
@@ -447,11 +454,30 @@ fn cmd_serve(args: &Args) -> Result<()> {
         stack.storage_bytes()
     );
 
+    // --chaos-seed: deterministic fault injection on both the wire and the
+    // backend (the `make chaos` harness flips this on; production never
+    // constructs the wrappers). Only meaningful for the TCP front-end.
+    let chaos_seed = args.flags.get("chaos-seed").map(|s| {
+        s.parse::<u64>()
+            .with_context(|| format!("--chaos-seed must be a u64, got {s:?}"))
+    });
+    let chaos_seed = match chaos_seed {
+        Some(r) => Some(r?),
+        None => None,
+    };
+    if chaos_seed.is_some() && !args.flags.contains_key("listen") {
+        bail!("--chaos-seed requires --listen (faults inject at the wire and worker boundaries)");
+    }
+
     // --listen: the TCP front-end replaces the in-process load generator;
     // requests arrive over the wire and batch across connections.
     if let Some(listen) = args.flags.get("listen") {
         let serve_secs = args.get_usize("serve-secs", 0)?;
         let deadline_ms = args.get_usize("deadline-ms", 0)?;
+        let plan = chaos_seed.map(|seed| Arc::new(FaultPlan::new(seed, FaultSpec::moderate())));
+        if let Some(p) = &plan {
+            println!("chaos mode: injecting faults from seed {:#x}", p.seed());
+        }
         let cfg = ServingConfig {
             expect_width: Some(stack.d_in()),
             default_deadline: if deadline_ms > 0 {
@@ -464,11 +490,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 max_wait: Duration::from_millis(max_wait_ms as u64),
                 queue_depth: 1024,
                 workers,
+                ..Default::default()
             },
+            faults: plan.clone(),
             ..Default::default()
         };
-        let front = TcpFrontend::start(listen.as_str(), cfg, |_worker| {
-            MethodStackBackend::new(Arc::clone(&stack), threads)
+        let front = TcpFrontend::start(listen.as_str(), cfg, move |worker| {
+            let inner = MethodStackBackend::new(Arc::clone(&stack), threads);
+            match &plan {
+                Some(p) => Box::new(ChaosBackend::new(inner, p.backend_injector(worker as u64)))
+                    as Box<dyn littlebit2::coordinator::BatchBackend>,
+                None => Box::new(inner),
+            }
         })?;
         println!("listening on {} (shutdown: SHUTDOWN frame{})", front.local_addr(),
             if serve_secs > 0 { format!(" or after {serve_secs}s") } else { String::new() });
@@ -501,6 +534,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             max_wait: Duration::from_millis(max_wait_ms as u64),
             queue_depth: 1024,
             workers,
+            ..Default::default()
         },
         |_worker| MethodStackBackend::new(Arc::clone(&stack), threads),
     );
@@ -555,6 +589,9 @@ fn cmd_client(args: &Args) -> Result<()> {
         "verify",
         "stats",
         "shutdown",
+        "retries",
+        "backoff-ms",
+        "budget-ms",
     ])?;
     let connect = args
         .flags
@@ -568,6 +605,11 @@ fn cmd_client(args: &Args) -> Result<()> {
     let verify = matches!(args.get("verify", "0").as_str(), "1" | "true");
     let want_stats = matches!(args.get("stats", "0").as_str(), "1" | "true");
     let want_shutdown = matches!(args.get("shutdown", "0").as_str(), "1" | "true");
+    // --retries 0 (the default) keeps the plain fail-fast client; N > 0
+    // switches to RetryingClient with N rounds per batch of requests.
+    let retries = args.get_usize("retries", 0)?;
+    let backoff_ms = args.get_usize("backoff-ms", 10)? as u64;
+    let budget_ms = args.get_usize("budget-ms", 0)? as u64;
     if width == 0 {
         bail!("client requires --width <model d_in>");
     }
@@ -585,7 +627,6 @@ fn cmd_client(args: &Args) -> Result<()> {
             if n == 0 {
                 return Ok(0);
             }
-            let mut client = WireClient::connect(connect.as_str())?;
             let mut rng = Pcg64::seed(derive_seed(4242, c as u64));
             let id = |r: usize| (c * 1_000_000 + r) as u64;
             let mut inputs = Vec::with_capacity(n);
@@ -594,6 +635,48 @@ fn cmd_client(args: &Args) -> Result<()> {
                 rng.fill_normal(&mut x);
                 inputs.push(x);
             }
+
+            // Retrying mode: the self-healing client owns pipelining,
+            // reconnects, and BUSY backoff; verify replays one-at-a-time
+            // through the same client (retries must not change the bits).
+            if retries > 0 {
+                let policy = RetryPolicy {
+                    max_attempts: retries,
+                    base_backoff: Duration::from_millis(backoff_ms),
+                    budget: (budget_ms > 0).then(|| Duration::from_millis(budget_ms)),
+                    jitter_seed: derive_seed(0x7E7A, c as u64),
+                    ..Default::default()
+                };
+                let mut client = RetryingClient::connect(connect.clone(), policy);
+                let reqs: Vec<(u64, Vec<f32>)> = inputs
+                    .iter()
+                    .enumerate()
+                    .map(|(r, x)| (id(r), x.clone()))
+                    .collect();
+                let got = client.infer_many(&reqs, deadline_ms)?;
+                if verify {
+                    for (r, x) in inputs.iter().enumerate() {
+                        let again = client.infer(id(r) + 500_000, x, deadline_ms)?;
+                        if again.len() != got[r].len()
+                            || again
+                                .iter()
+                                .zip(&got[r])
+                                .any(|(a, b)| a.to_bits() != b.to_bits())
+                        {
+                            bail!("connection {c} request {r}: replay differs from pipelined reply");
+                        }
+                    }
+                }
+                if client.retried > 0 || client.reconnects > 0 {
+                    eprintln!(
+                        "connection {c}: {} request-retries, {} reconnects",
+                        client.retried, client.reconnects
+                    );
+                }
+                return Ok(n);
+            }
+
+            let mut client = WireClient::connect(connect.as_str())?;
             // Pipelined pass: all sends first, then collect by id — this
             // is what lets the server coalesce cross-connection batches.
             for (r, x) in inputs.iter().enumerate() {
@@ -807,6 +890,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
                     max_wait: Duration::from_millis(1),
                     queue_depth: 1024,
                     workers: 2,
+                    ..Default::default()
                 },
                 |_worker| MethodStackBackend::new(Arc::clone(&loaded), 1),
             );

@@ -2,29 +2,61 @@
 //! the server. Deliberately symmetric with the server reader: header
 //! first, declared length capped before allocation, CRC checked, and only
 //! server→client frame kinds accepted.
+//!
+//! Two layers:
+//!
+//! - [`WireClient`]: one connection, no recovery — any BUSY frame, CRC
+//!   mismatch, or socket error is a terminal `Err`. Generic over the
+//!   stream so the chaos harness can drive it over a
+//!   [`FaultyStream`](crate::faults::FaultyStream).
+//! - [`RetryingClient`]: a [`WireClient`] plus a [`RetryPolicy`] —
+//!   exponential backoff with seeded jitter, BUSY retry-after hints
+//!   honored, broken connections reconnected and unanswered requests
+//!   resent by id. Retries are invisible in the answers: the server's
+//!   outputs are deterministic, so a resent request returns bits
+//!   identical to what the first attempt would have.
 
 use super::frame::{
     err_code, frame_crc, parse_header, payload_f32, Frame, FrameKind, CRC_OFFSET,
     DEFAULT_MAX_PAYLOAD, HEADER_LEN,
 };
+use crate::coordinator::HealthState;
+use crate::rng::Pcg64;
+use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::net::{TcpStream, ToSocketAddrs};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// One blocking connection to a [`TcpFrontend`](super::TcpFrontend).
-pub struct WireClient {
-    stream: TcpStream,
+pub struct WireClient<S: Read + Write = TcpStream> {
+    stream: S,
     max_payload: usize,
 }
 
-impl WireClient {
+impl WireClient<TcpStream> {
     /// Connect with a 30 s read timeout (a wedged server surfaces as an
     /// `Err`, not a hang).
     pub fn connect(addr: impl ToSocketAddrs) -> anyhow::Result<Self> {
+        Self::connect_with_timeout(addr, Duration::from_secs(30))
+    }
+
+    /// Connect with an explicit per-read timeout.
+    pub fn connect_with_timeout(
+        addr: impl ToSocketAddrs,
+        read_timeout: Duration,
+    ) -> anyhow::Result<Self> {
         let stream = TcpStream::connect(addr)?;
         let _ = stream.set_nodelay(true);
-        stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+        stream.set_read_timeout(Some(read_timeout))?;
         Ok(Self { stream, max_payload: DEFAULT_MAX_PAYLOAD })
+    }
+}
+
+impl<S: Read + Write> WireClient<S> {
+    /// Build a client over an arbitrary stream — how the chaos harness
+    /// speaks the protocol through a fault-injected wrapper.
+    pub fn over(stream: S) -> Self {
+        Self { stream, max_payload: DEFAULT_MAX_PAYLOAD }
     }
 
     /// Send any frame (pipelining: responses arrive via [`recv`](Self::recv)
@@ -56,7 +88,8 @@ impl WireClient {
             | FrameKind::Error
             | FrameKind::Busy
             | FrameKind::StatsText
-            | FrameKind::ShutdownAck => {}
+            | FrameKind::ShutdownAck
+            | FrameKind::HealthReport => {}
             other => anyhow::bail!("unexpected server frame kind {other:?}"),
         }
         Ok(Frame { kind: h.kind, id: h.id, aux: h.aux, payload })
@@ -95,6 +128,17 @@ impl WireClient {
         }
     }
 
+    /// Probe server health: send HEALTH, return the reported state.
+    pub fn health(&mut self) -> anyhow::Result<HealthState> {
+        self.send(&Frame::health(0))?;
+        let f = self.recv()?;
+        match f.kind {
+            FrameKind::HealthReport => HealthState::from_code(f.aux)
+                .ok_or_else(|| anyhow::anyhow!("unknown health code {}", f.aux)),
+            other => anyhow::bail!("unexpected reply kind {other:?} to HEALTH"),
+        }
+    }
+
     /// Ask the server to shut down gracefully; waits for the ack.
     pub fn shutdown_server(&mut self) -> anyhow::Result<()> {
         self.send(&Frame::shutdown(0))?;
@@ -115,5 +159,253 @@ pub fn error_name(code: u32) -> &'static str {
         err_code::DEADLINE => "DEADLINE",
         err_code::SHUTTING_DOWN => "SHUTTING_DOWN",
         _ => "UNKNOWN",
+    }
+}
+
+/// Retry behavior for [`RetryingClient`]: exponential backoff with seeded
+/// jitter and an optional wall-clock budget. All randomness comes from
+/// `jitter_seed`, so a retry sequence — like everything else in this
+/// crate — is reproducible.
+#[derive(Clone, Debug)]
+pub struct RetryPolicy {
+    /// Rounds before giving up. One round sends every unanswered request
+    /// once; the first round counts.
+    pub max_attempts: usize,
+    /// Backoff before round 2 (doubles each round, capped at
+    /// `max_backoff`).
+    pub base_backoff: Duration,
+    pub max_backoff: Duration,
+    /// Overall wall-clock budget across all rounds; `None` = bounded by
+    /// `max_attempts` alone.
+    pub budget: Option<Duration>,
+    /// Per-read socket timeout applied by the built-in connector, so a
+    /// dead server costs one timeout, not a 30 s hang per round.
+    pub op_timeout: Duration,
+    /// Seed for backoff jitter (decorrelates clients that fail together).
+    pub jitter_seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self {
+            max_attempts: 5,
+            base_backoff: Duration::from_millis(10),
+            max_backoff: Duration::from_millis(500),
+            budget: None,
+            op_timeout: Duration::from_secs(5),
+            jitter_seed: 0x5EED,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff before round `attempt + 1` (attempt counts completed
+    /// rounds): exponential with cap, jittered to 50–100% of nominal.
+    fn backoff(&self, attempt: usize, rng: &mut Pcg64) -> Duration {
+        let exp = self
+            .base_backoff
+            .saturating_mul(1u32 << attempt.min(16).min(31) as u32)
+            .min(self.max_backoff);
+        let half = exp.as_secs_f64() / 2.0;
+        Duration::from_secs_f64(half + rng.uniform() * half)
+    }
+}
+
+/// How one send/receive round ended (fatal errors return early instead).
+enum RoundOutcome {
+    /// The connection survived the round; `hint_ms` is the largest BUSY
+    /// retry-after received (0 if none).
+    Progress { hint_ms: u32 },
+    /// The connection died (send/recv error) — reconnect next round.
+    ConnLost,
+}
+
+type Connector<S> = Box<dyn FnMut() -> anyhow::Result<WireClient<S>> + Send>;
+
+/// A self-healing wire client: wraps a [`WireClient`] with reconnect and
+/// retry per its [`RetryPolicy`]. Requests are identified by caller ids
+/// (which must be unique within one call), so a retried request is the
+/// *same* request to the server's accounting, and — the server being
+/// deterministic — returns the same bits on whichever attempt succeeds.
+pub struct RetryingClient<S: Read + Write = TcpStream> {
+    policy: RetryPolicy,
+    rng: Pcg64,
+    conn: Option<WireClient<S>>,
+    connect: Connector<S>,
+    connected_once: bool,
+    /// Requests that needed more than one round (counter, for reporting).
+    pub retried: u64,
+    /// Successful reconnects after a lost connection (counter).
+    pub reconnects: u64,
+}
+
+impl RetryingClient<TcpStream> {
+    /// Retrying client over real TCP connections to `addr`.
+    pub fn connect(
+        addr: impl ToSocketAddrs + Clone + Send + 'static,
+        policy: RetryPolicy,
+    ) -> Self {
+        let op_timeout = policy.op_timeout;
+        Self::with_connector(policy, move || {
+            WireClient::connect_with_timeout(addr.clone(), op_timeout)
+        })
+    }
+}
+
+impl<S: Read + Write> RetryingClient<S> {
+    /// Retrying client over a custom connector — how the chaos harness
+    /// dials through client-side [`FaultyStream`](crate::faults::FaultyStream)s.
+    pub fn with_connector(
+        policy: RetryPolicy,
+        connect: impl FnMut() -> anyhow::Result<WireClient<S>> + Send + 'static,
+    ) -> Self {
+        let rng = Pcg64::seed(policy.jitter_seed);
+        Self {
+            policy,
+            rng,
+            conn: None,
+            connect: Box::new(connect),
+            connected_once: false,
+            retried: 0,
+            reconnects: 0,
+        }
+    }
+
+    /// One request with retries; see [`infer_many`](Self::infer_many).
+    pub fn infer(&mut self, id: u64, input: &[f32], deadline_ms: u32) -> anyhow::Result<Vec<f32>> {
+        let mut out = self.infer_many(&[(id, input.to_vec())], deadline_ms)?;
+        Ok(out.pop().expect("one request, one answer"))
+    }
+
+    /// Run a batch of requests to completion, pipelined, retrying across
+    /// BUSY frames, retryable errors (BACKEND, DEADLINE), and broken
+    /// connections. Ids must be unique within the call. Returns outputs
+    /// in request order.
+    ///
+    /// Fatal server verdicts (BAD_REQUEST, PROTOCOL, SHUTTING_DOWN) abort
+    /// the whole call — retrying can't fix a malformed request, and a
+    /// draining server has said it won't take new work.
+    pub fn infer_many(
+        &mut self,
+        reqs: &[(u64, Vec<f32>)],
+        deadline_ms: u32,
+    ) -> anyhow::Result<Vec<Vec<f32>>> {
+        let started = Instant::now();
+        let mut answers: HashMap<u64, Vec<f32>> = HashMap::with_capacity(reqs.len());
+        let mut attempt = 0usize;
+        while answers.len() < reqs.len() {
+            if attempt >= self.policy.max_attempts {
+                anyhow::bail!(
+                    "gave up after {attempt} attempts with {} of {} unanswered",
+                    reqs.len() - answers.len(),
+                    reqs.len()
+                );
+            }
+            if let Some(budget) = self.policy.budget {
+                if started.elapsed() >= budget {
+                    anyhow::bail!(
+                        "retry budget {budget:?} exhausted with {} of {} unanswered",
+                        reqs.len() - answers.len(),
+                        reqs.len()
+                    );
+                }
+            }
+            if attempt > 0 {
+                self.retried += (reqs.len() - answers.len()) as u64;
+            }
+            let hint_ms = match self.round(reqs, deadline_ms, &mut answers)? {
+                RoundOutcome::Progress { hint_ms } => hint_ms,
+                RoundOutcome::ConnLost => 0,
+            };
+            attempt += 1;
+            if answers.len() < reqs.len() {
+                // Honor the server's retry-after hint when it exceeds our
+                // own backoff — the queue knows its drain rate better
+                // than an exponential curve does.
+                let backoff = self.policy.backoff(attempt - 1, &mut self.rng);
+                std::thread::sleep(backoff.max(Duration::from_millis(u64::from(hint_ms))));
+            }
+        }
+        Ok(reqs.iter().map(|(id, _)| answers.remove(id).expect("answered")).collect())
+    }
+
+    /// One round: (re)connect if needed, send every unanswered request,
+    /// receive exactly as many replies as sends succeeded. `Err` only on
+    /// fatal verdicts.
+    fn round(
+        &mut self,
+        reqs: &[(u64, Vec<f32>)],
+        deadline_ms: u32,
+        answers: &mut HashMap<u64, Vec<f32>>,
+    ) -> anyhow::Result<RoundOutcome> {
+        if self.conn.is_none() {
+            match (self.connect)() {
+                Ok(c) => {
+                    if self.connected_once {
+                        self.reconnects += 1;
+                    }
+                    self.connected_once = true;
+                    self.conn = Some(c);
+                }
+                // Server not reachable right now: back off and redial.
+                Err(_) => return Ok(RoundOutcome::ConnLost),
+            }
+        }
+        let conn = self.conn.as_mut().expect("just connected");
+
+        let mut sent = 0usize;
+        for (id, input) in reqs.iter().filter(|(id, _)| !answers.contains_key(id)) {
+            match conn.send_infer(*id, input, deadline_ms) {
+                Ok(()) => sent += 1,
+                Err(_) => {
+                    // Mid-round send failure: replies for what was sent die
+                    // with the connection; resend everything next round.
+                    self.conn = None;
+                    return Ok(RoundOutcome::ConnLost);
+                }
+            }
+        }
+
+        let mut hint_ms = 0u32;
+        for _ in 0..sent {
+            let f = match conn.recv() {
+                Ok(f) => f,
+                Err(_) => {
+                    // Damaged or dead wire (CRC mismatch included): the
+                    // stream position is unrecoverable — reconnect.
+                    self.conn = None;
+                    return Ok(RoundOutcome::ConnLost);
+                }
+            };
+            match f.kind {
+                FrameKind::Result => {
+                    if reqs.iter().any(|(id, _)| *id == f.id) {
+                        answers.insert(f.id, payload_f32(&f.payload)?);
+                    }
+                }
+                FrameKind::Busy => hint_ms = hint_ms.max(f.aux),
+                FrameKind::Error => match f.aux {
+                    // Transient: the batch failed or the deadline expired
+                    // in queue — a retry goes to a fresh batch.
+                    err_code::BACKEND | err_code::DEADLINE => {}
+                    // The server answers PROTOCOL under id 0 and closes
+                    // when a frame is damaged in flight. This client only
+                    // sends well-formed frames, so that verdict means wire
+                    // corruption, not a bad request: reconnect and resend.
+                    err_code::PROTOCOL => {
+                        self.conn = None;
+                        return Ok(RoundOutcome::ConnLost);
+                    }
+                    code => anyhow::bail!(
+                        "fatal server error {} on request {}: {}",
+                        error_name(code),
+                        f.id,
+                        String::from_utf8_lossy(&f.payload)
+                    ),
+                },
+                other => anyhow::bail!("unexpected reply kind {other:?} to INFER"),
+            }
+        }
+        Ok(RoundOutcome::Progress { hint_ms })
     }
 }

@@ -22,9 +22,10 @@
 //! | 28     | len  | payload                                |
 //!
 //! `aux` carries the deadline in ms on INFER (0 = server default), the
-//! executed batch size on RESULT, and the error code on ERROR. Payloads
-//! are raw little-endian f32s on INFER/RESULT, UTF-8 text on
-//! ERROR/STATS_TEXT, and empty elsewhere.
+//! executed batch size on RESULT, the error code on ERROR, a retry-after
+//! hint in ms on BUSY (0 = no hint), and the health code on
+//! HEALTH_REPORT. Payloads are raw little-endian f32s on INFER/RESULT,
+//! UTF-8 text on ERROR/STATS_TEXT/HEALTH_REPORT, and empty elsewhere.
 
 use crate::artifact::{crc_finish, crc_update, CRC_INIT};
 
@@ -67,6 +68,11 @@ pub enum FrameKind {
     Shutdown = 7,
     /// Server → client: shutdown acknowledged; in-flight work will drain.
     ShutdownAck = 8,
+    /// Client → server: request a health probe.
+    Health = 9,
+    /// Server → client: health state; aux = [`crate::coordinator::HealthState`]
+    /// code (0 healthy / 1 degraded / 2 draining), payload = state name.
+    HealthReport = 10,
 }
 
 impl FrameKind {
@@ -80,6 +86,8 @@ impl FrameKind {
             6 => FrameKind::StatsText,
             7 => FrameKind::Shutdown,
             8 => FrameKind::ShutdownAck,
+            9 => FrameKind::Health,
+            10 => FrameKind::HealthReport,
             _ => return None,
         })
     }
@@ -203,9 +211,23 @@ impl Frame {
         Self { kind: FrameKind::Error, id, aux: code, payload: msg.as_bytes().to_vec() }
     }
 
-    /// BUSY response: admission control rejected the request.
-    pub fn busy(id: u64) -> Self {
-        Self { kind: FrameKind::Busy, id, aux: 0, payload: Vec::new() }
+    /// BUSY response: admission control rejected the request. `aux`
+    /// carries a retry-after hint in milliseconds (0 = no hint) that
+    /// [`RetryPolicy`](crate::serving::RetryPolicy)-driven clients honor
+    /// before resending.
+    pub fn busy(id: u64, retry_after_ms: u32) -> Self {
+        Self { kind: FrameKind::Busy, id, aux: retry_after_ms, payload: Vec::new() }
+    }
+
+    /// HEALTH probe request.
+    pub fn health(id: u64) -> Self {
+        Self { kind: FrameKind::Health, id, aux: 0, payload: Vec::new() }
+    }
+
+    /// HEALTH_REPORT response: aux carries the numeric health code,
+    /// payload the human-readable state name.
+    pub fn health_report(id: u64, code: u32, name: &str) -> Self {
+        Self { kind: FrameKind::HealthReport, id, aux: code, payload: name.as_bytes().to_vec() }
     }
 
     /// STATS request.
@@ -318,11 +340,13 @@ mod tests {
             Frame::infer(1, &[1.5, -2.5], 30),
             Frame::result(2, &[0.25], 8),
             Frame::error(3, err_code::BACKEND, "boom"),
-            Frame::busy(4),
+            Frame::busy(4, 25),
             Frame::stats(5),
             Frame::stats_text(6, "lb2_queue_depth 0\n"),
             Frame::shutdown(7),
             Frame::shutdown_ack(8),
+            Frame::health(9),
+            Frame::health_report(10, 1, "degraded"),
         ];
         for f in frames {
             let bytes = f.encode();
@@ -351,7 +375,7 @@ mod tests {
 
     #[test]
     fn bad_magic_version_kind_crc_all_rejected() {
-        let good = Frame::busy(9).encode();
+        let good = Frame::busy(9, 0).encode();
         let mut m = good.clone();
         m[0] = b'X';
         assert!(matches!(

@@ -13,13 +13,15 @@
 //!   admission control (BUSY), per-request deadlines, a slow-loris frame
 //!   timer, and graceful drain-on-shutdown.
 //! - [`client`]: [`WireClient`] — the blocking client used by the CLI's
-//!   `client` subcommand, the examples, and the test suites.
+//!   `client` subcommand, the examples, and the test suites — and
+//!   [`RetryingClient`], its self-healing wrapper (reconnect, resend by
+//!   id, exponential backoff with seeded jitter, BUSY retry-after hints).
 
 pub mod client;
 pub mod frame;
 pub mod server;
 
-pub use client::{error_name, WireClient};
+pub use client::{error_name, RetryPolicy, RetryingClient, WireClient};
 pub use frame::{
     err_code, f32_payload, payload_f32, Frame, FrameKind, WireError, DEFAULT_MAX_PAYLOAD,
     HEADER_LEN, WIRE_MAGIC, WIRE_VERSION,

@@ -37,9 +37,10 @@ use super::frame::{
     DEFAULT_MAX_PAYLOAD, HEADER_LEN,
 };
 use crate::coordinator::{
-    BatchBackend, InferenceServer, ReplySink, RequestOutcome, ServerConfig, ServerStats,
-    SubmitHandle, TrySubmitError,
+    BatchBackend, HealthState, InferenceServer, ReplySink, RequestOutcome, ServerConfig,
+    ServerStats, SubmitHandle, TrySubmitError,
 };
+use crate::faults::{FaultPlan, FaultyStream};
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -68,6 +69,12 @@ pub struct ServingConfig {
     /// BAD_REQUEST before touching the queue (serving a model of known
     /// `d_in`).
     pub expect_width: Option<usize>,
+    /// Seeded wire-fault injection for chaos testing: when set, every
+    /// accepted connection's read half is wrapped in a
+    /// [`FaultyStream`] over `plan.stream_injector(2·conn)` and its write
+    /// half over `2·conn + 1`. `None` (the default) keeps connections on
+    /// bare `TcpStream`s — the production path pays nothing.
+    pub faults: Option<Arc<FaultPlan>>,
     /// Inner batcher configuration (batch size, wait, queue bound, workers).
     pub batch: ServerConfig,
 }
@@ -81,6 +88,7 @@ impl Default for ServingConfig {
             default_deadline: None,
             outbound_depth: 1024,
             expect_width: None,
+            faults: None,
             batch: ServerConfig::default(),
         }
     }
@@ -129,9 +137,17 @@ impl TcpFrontend {
 
     /// Request shutdown without blocking (the accept loop and connections
     /// wind down on their next poll tick; call [`shutdown`](Self::shutdown)
-    /// to join them).
+    /// to join them). Health flips to Draining immediately.
     pub fn trigger_shutdown(&self) {
+        if let Some(inner) = self.inner.as_ref() {
+            inner.begin_drain();
+        }
         self.shutdown.store(true, Ordering::SeqCst);
+    }
+
+    /// Current health of the inner batcher.
+    pub fn health(&self) -> HealthState {
+        self.inner.as_ref().expect("frontend running").health()
     }
 
     /// Snapshot the inner batcher's statistics.
@@ -147,6 +163,9 @@ impl TcpFrontend {
     }
 
     fn halt(&mut self) -> Option<ServerStats> {
+        if let Some(inner) = self.inner.as_ref() {
+            inner.begin_drain();
+        }
         self.shutdown.store(true, Ordering::SeqCst);
         if let Some(a) = self.accept.take() {
             let _ = a.join();
@@ -165,9 +184,8 @@ impl Drop for TcpFrontend {
 }
 
 /// Nonblocking accept loop: spawns one connection handler per accept,
-/// reaps finished handlers opportunistically, joins all of them on
-/// shutdown (which is what makes [`TcpFrontend::halt`]'s drain ordering
-/// sound).
+/// reaps finished handlers on every pass, joins all of them on shutdown
+/// (which is what makes [`TcpFrontend::halt`]'s drain ordering sound).
 fn accept_loop(
     listener: &TcpListener,
     cfg: &ServingConfig,
@@ -176,23 +194,37 @@ fn accept_loop(
 ) {
     let conns = Arc::new(AtomicUsize::new(0));
     let mut children: Vec<JoinHandle<()>> = Vec::new();
+    // Monotone connection counter: the fault plan's per-connection stream
+    // index, so a connection's injected fault schedule depends only on its
+    // accept ordinal, never on how long earlier connections lived.
+    let mut conn_idx: u64 = 0;
     while !shutdown.load(Ordering::SeqCst) {
+        // Reap every pass (allocation-free swap_remove scan): a long-lived
+        // low-concurrency server must not pin dead handlers' stacks until
+        // some high-water mark is reached.
+        let mut i = 0;
+        while i < children.len() {
+            if children[i].is_finished() {
+                let _ = children.swap_remove(i).join();
+            } else {
+                i += 1;
+            }
+        }
         match listener.accept() {
             Ok((stream, _peer)) => {
                 let cfg = cfg.clone();
                 let handle = handle.clone();
                 let shutdown = Arc::clone(shutdown);
                 let conns = Arc::clone(&conns);
+                let idx = conn_idx;
+                conn_idx += 1;
                 conns.fetch_add(1, Ordering::SeqCst);
                 children.push(std::thread::spawn(move || {
-                    if let Err(e) = connection(stream, &cfg, &handle, &shutdown, &conns) {
+                    if let Err(e) = connection(stream, &cfg, &handle, &shutdown, &conns, idx) {
                         eprintln!("serving: connection setup failed: {e}");
                     }
                     conns.fetch_sub(1, Ordering::SeqCst);
                 }));
-                if children.len() >= 64 {
-                    children.retain(|c| !c.is_finished());
-                }
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 std::thread::sleep(cfg.poll);
@@ -208,28 +240,76 @@ fn accept_loop(
     }
 }
 
+/// The writer thread's stream: a plain sink plus the ability to shut the
+/// underlying socket down once the funnel drains. Implemented for bare
+/// `TcpStream` (production) and the fault-injected wrapper (chaos), which
+/// is how the no-fault path stays monomorphized over plain sockets with
+/// zero added work per frame.
+trait WriteHalf: Write + Send + 'static {
+    fn shutdown_conn(&self);
+}
+
+impl WriteHalf for TcpStream {
+    fn shutdown_conn(&self) {
+        let _ = self.shutdown(std::net::Shutdown::Both);
+    }
+}
+
+impl WriteHalf for FaultyStream<TcpStream> {
+    fn shutdown_conn(&self) {
+        let _ = self.get_ref().shutdown(std::net::Shutdown::Both);
+    }
+}
+
 /// One connection: reader runs on this thread, writer on its own, joined
 /// before return. The writer outlives the reader for as long as in-flight
 /// requests hold [`ConnSink`] clones of the funnel sender — that is the
 /// mechanism by which accepted work is answered even when the client's
 /// reader side has already wound down for shutdown.
+///
+/// With [`ServingConfig::faults`] set, both halves are wrapped in
+/// [`FaultyStream`]s seeded from the connection's accept ordinal `idx`;
+/// otherwise the bare `TcpStream` halves are used directly.
 fn connection(
     stream: TcpStream,
     cfg: &ServingConfig,
     handle: &SubmitHandle,
     shutdown: &AtomicBool,
     conns: &AtomicUsize,
+    idx: u64,
 ) -> std::io::Result<()> {
     let _ = stream.set_nodelay(true);
     stream.set_read_timeout(Some(cfg.poll))?;
     let write_half = stream.try_clone()?;
     let _ = write_half.set_write_timeout(Some(Duration::from_secs(10)));
+    match cfg.faults.as_ref() {
+        None => run_connection(stream, write_half, cfg, handle, shutdown, conns),
+        Some(plan) => run_connection(
+            FaultyStream::new(stream, plan.stream_injector(2 * idx)),
+            FaultyStream::new(write_half, plan.stream_injector(2 * idx + 1)),
+            cfg,
+            handle,
+            shutdown,
+            conns,
+        ),
+    }
+    Ok(())
+}
+
+/// The stream-generic connection body behind [`connection`].
+fn run_connection<R: Read, W: WriteHalf>(
+    read_half: R,
+    write_half: W,
+    cfg: &ServingConfig,
+    handle: &SubmitHandle,
+    shutdown: &AtomicBool,
+    conns: &AtomicUsize,
+) {
     let (tx, rx) = sync_channel::<Frame>(cfg.outbound_depth);
     let writer = std::thread::spawn(move || writer_loop(write_half, &rx));
-    reader_loop(stream, cfg, handle, shutdown, conns, &tx);
+    reader_loop(read_half, cfg, handle, shutdown, conns, &tx);
     drop(tx);
     let _ = writer.join();
-    Ok(())
 }
 
 /// Why a polled exact-read stopped.
@@ -249,8 +329,8 @@ enum ReadStatus {
 /// the first byte of a frame and the whole frame must land within
 /// `cfg.frame_timeout` of it. A connection idling **between** frames
 /// (`started == None`, nothing read) never times out.
-fn read_exact_polled(
-    stream: &mut TcpStream,
+fn read_exact_polled<R: Read>(
+    stream: &mut R,
     buf: &mut [u8],
     shutdown: &AtomicBool,
     started: &mut Option<Instant>,
@@ -297,8 +377,8 @@ fn read_exact_polled(
 /// time. Malformed *frames* close the connection (the stream position is
 /// unrecoverable); malformed *requests* inside valid frames fail only
 /// themselves.
-fn reader_loop(
-    mut stream: TcpStream,
+fn reader_loop<R: Read>(
+    mut stream: R,
     cfg: &ServingConfig,
     handle: &SubmitHandle,
     shutdown: &AtomicBool,
@@ -363,8 +443,13 @@ fn reader_loop(
                 let sink = Box::new(ConnSink { tx: tx.clone() });
                 match handle.try_submit(h.id, input, deadline, sink) {
                     Ok(()) => {}
-                    Err(TrySubmitError::QueueFull) => {
-                        let _ = tx.try_send(Frame::busy(h.id));
+                    Err(
+                        e @ (TrySubmitError::QueueFull { .. }
+                        | TrySubmitError::DeadlineUnmeetable { .. }),
+                    ) => {
+                        // Rejected-with-retry-after: BUSY carries the
+                        // queue's own estimate of when to come back.
+                        let _ = tx.try_send(Frame::busy(h.id, e.retry_after_ms().unwrap_or(0)));
                     }
                     Err(TrySubmitError::Closed) => {
                         let _ = tx.try_send(Frame::error(
@@ -377,12 +462,25 @@ fn reader_loop(
                 }
             }
             FrameKind::Stats => {
-                let mut text = handle.stats().render_metrics();
+                let mut stats = handle.stats();
+                stats.conn_threads = conns.load(Ordering::SeqCst);
+                let mut text = stats.render_metrics();
                 text.push_str(&format!("lb2_connections {}\n", conns.load(Ordering::SeqCst)));
                 let _ = tx.try_send(Frame::stats_text(h.id, &text));
             }
+            FrameKind::Health => {
+                // The shutdown flag wins over the batcher's own view so a
+                // probe racing the drain never reports Healthy.
+                let state = if shutdown.load(Ordering::SeqCst) {
+                    HealthState::Draining
+                } else {
+                    handle.health()
+                };
+                let _ = tx.try_send(Frame::health_report(h.id, state.code(), state.name()));
+            }
             FrameKind::Shutdown => {
                 let _ = tx.try_send(Frame::shutdown_ack(h.id));
+                handle.set_draining();
                 shutdown.store(true, Ordering::SeqCst);
                 return;
             }
@@ -425,7 +523,7 @@ impl ReplySink for ConnSink {
 /// error it flips to discard mode (keeps draining so senders never see a
 /// wedged channel) and exits once every sender — the reader and all
 /// in-flight sinks — has dropped.
-fn writer_loop(mut stream: TcpStream, rx: &Receiver<Frame>) {
+fn writer_loop<W: WriteHalf>(mut stream: W, rx: &Receiver<Frame>) {
     let mut dead = false;
     while let Ok(frame) = rx.recv() {
         if dead {
@@ -436,7 +534,7 @@ fn writer_loop(mut stream: TcpStream, rx: &Receiver<Frame>) {
         }
     }
     let _ = stream.flush();
-    let _ = stream.shutdown(std::net::Shutdown::Both);
+    stream.shutdown_conn();
 }
 
 #[cfg(test)]

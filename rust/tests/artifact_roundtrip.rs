@@ -213,6 +213,7 @@ fn loaded_artifact_serves_bit_exactly() {
             max_wait: Duration::from_millis(2),
             queue_depth: 64,
             workers: 2,
+            ..Default::default()
         },
         |_worker| PackedStackBackend::new(Arc::clone(&loaded), 2),
     );

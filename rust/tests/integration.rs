@@ -208,6 +208,7 @@ fn batched_serving_pipeline_correctness() {
             max_wait: Duration::from_millis(250),
             queue_depth: 64,
             workers: 2,
+            ..Default::default()
         },
         |_worker| PackedResidualBackend::new(Arc::clone(&model), 2),
     );

@@ -108,6 +108,7 @@ fn every_method_serves_loaded_artifact_bit_exactly() {
                 max_wait: Duration::from_millis(2),
                 queue_depth: 64,
                 workers: 2,
+                ..Default::default()
             },
             |_worker| MethodStackBackend::new(Arc::clone(&loaded), 2),
         );

@@ -50,6 +50,7 @@ fn batching_cfg() -> ServingConfig {
             max_wait: Duration::from_millis(30),
             queue_depth: 1024,
             workers: 2,
+            ..Default::default()
         },
         ..Default::default()
     }
@@ -71,6 +72,17 @@ fn assert_bits_eq(got: &[f32], want: &[f32], ctx: &str) {
     for (j, (a, b)) in got.iter().zip(want).enumerate() {
         assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: element {j}: {a} vs {b}");
     }
+}
+
+/// Counter reconciliation: after a drain, every accepted request must be
+/// accounted for exactly once — served, failed, or expired. (Rejected and
+/// shed requests were never accepted, so they sit outside the identity.)
+fn assert_reconciled(stats: &littlebit2::coordinator::ServerStats, ctx: &str) {
+    assert_eq!(
+        stats.accepted,
+        stats.served + stats.failed + stats.deadline_missed,
+        "{ctx}: accepted != served + failed + deadline_missed ({stats:?})"
+    );
 }
 
 /// Batching invariance across every `MethodLayer` variant: the same
@@ -128,6 +140,7 @@ fn responses_bit_identical_for_every_method_and_batching_shape() {
         let stats = front.shutdown();
         assert_eq!(stats.served, 3 * xs.len() as u64, "{method}");
         assert_eq!(stats.failed, 0, "{method}");
+        assert_reconciled(&stats, method);
     }
 }
 
@@ -172,6 +185,7 @@ fn loopback_lb2_artifact_end_to_end() {
     assert_eq!(stats.served, 32);
     assert_eq!(stats.failed, 0);
     assert_eq!(stats.rejected, 0);
+    assert_reconciled(&stats, "loopback e2e");
 }
 
 fn echo_cfg() -> ServingConfig {
@@ -214,7 +228,8 @@ fn slow_loris_partial_frame_is_cut_off() {
     );
     // The server is still healthy afterwards.
     assert_eq!(honest.infer(2, &[4.0], 0).unwrap(), vec![4.0]);
-    front.shutdown();
+    let stats = front.shutdown();
+    assert_reconciled(&stats, "slow loris");
 }
 
 /// A client that disconnects with requests in flight fails only itself:
@@ -243,6 +258,7 @@ fn client_disconnect_mid_flight_does_not_kill_the_server() {
     let stats = front.shutdown();
     assert_eq!(stats.served, 2, "the doomed request still executed");
     assert_eq!(stats.failed, 0);
+    assert_reconciled(&stats, "mid-flight disconnect");
 }
 
 /// Deadline expiry over the wire: with the single worker pinned by a slow
@@ -258,6 +274,7 @@ fn deadline_expiry_fails_only_that_request() {
             max_wait: Duration::from_millis(1),
             queue_depth: 16,
             workers: 1,
+            ..Default::default()
         },
         ..Default::default()
     };
@@ -288,6 +305,7 @@ fn deadline_expiry_fails_only_that_request() {
     let stats = front.shutdown();
     assert_eq!(stats.deadline_missed, 1);
     assert_eq!(stats.served, 2);
+    assert_reconciled(&stats, "deadline expiry");
 }
 
 /// Admission control: a 1-deep queue behind a slow single worker answers
@@ -302,6 +320,7 @@ fn overflow_is_answered_with_busy_frames() {
             max_wait: Duration::from_millis(1),
             queue_depth: 1,
             workers: 1,
+            ..Default::default()
         },
         ..Default::default()
     };
@@ -331,6 +350,7 @@ fn overflow_is_answered_with_busy_frames() {
     let stats = front.shutdown();
     assert_eq!(stats.served as i32, results);
     assert_eq!(stats.rejected as i32, busy);
+    assert_reconciled(&stats, "busy overflow");
 }
 
 /// Shutdown under load: requests accepted before the SHUTDOWN frame are
@@ -345,6 +365,7 @@ fn shutdown_under_load_drains_accepted_requests() {
             max_wait: Duration::from_millis(1),
             queue_depth: 64,
             workers: 1,
+            ..Default::default()
         },
         ..Default::default()
     };
@@ -376,4 +397,5 @@ fn shutdown_under_load_drains_accepted_requests() {
     let stats = front.shutdown();
     assert_eq!(stats.served, 6);
     assert_eq!(stats.failed, 0);
+    assert_reconciled(&stats, "shutdown under load");
 }
