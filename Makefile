@@ -4,13 +4,19 @@
 # PJRT-gated paths (`--features xla`): the train CLI, examples/e2e_qat,
 # tests/runtime_e2e.
 
-.PHONY: build test bench bench-build bench-gemm bench-compress clippy artifacts doc roundtrip eval serve-smoke chaos
+.PHONY: build test test-scalar bench bench-build bench-gemm bench-compress clippy artifacts doc roundtrip eval serve-smoke chaos
 
 build:
 	cargo build --release
 
 test: build
 	cargo test -q
+
+# The full suite with the scalar kernel lane pinned (the portable
+# bit-exactness oracle; see packing::simd). CI runs this as the `scalar`
+# leg of the build-test matrix so both lanes stay green on every push.
+test-scalar: build
+	LB2_FORCE_SCALAR=1 cargo test -q
 
 # The deployment pipeline, end to end: quantize a tiny model once, persist
 # it as a versioned .lb2 artifact, then load + serve a batch of requests

@@ -18,7 +18,7 @@ fn stats(name: &str, m: &Mat) {
     let max = lam.iter().fold(0.0f64, |a, &b| a.max(b));
     // Kurtosis of the entries (Fisher, excess+3) — §4.2 quotes ≈16.8 for
     // raw SVD factors of Llama-2 q_proj.
-    let xs: Vec<f64> = m.as_slice().iter().map(|&x| x as f64).collect();
+    let xs: Vec<f64> = m.to_vec().iter().map(|&x| x as f64).collect();
     let n = xs.len() as f64;
     let mu = xs.iter().sum::<f64>() / n;
     let var = xs.iter().map(|x| (x - mu).powi(2)).sum::<f64>() / n;

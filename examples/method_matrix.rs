@@ -65,7 +65,7 @@ fn main() -> anyhow::Result<()> {
         let bytes = stack.to_artifact_bytes()?;
         let loaded = MethodStack::from_artifact_bytes(&bytes)?;
         let mut x = Mat::zeros(d, 4);
-        Pcg64::seed(29).fill_normal(x.as_mut_slice());
+        x.fill_normal(&mut Pcg64::seed(29));
         let serve_ok = loaded.forward_batch(&x) == stack.forward_batch(&x);
 
         println!(

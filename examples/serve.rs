@@ -147,7 +147,7 @@ fn main() -> anyhow::Result<()> {
 
     let b = 32;
     let mut xb = Mat::zeros(d, b);
-    rng.fill_normal(xb.as_mut_slice());
+    xb.fill_normal(&mut rng);
     // Fused pool path, allocation-free (the serving hot loop).
     let pool = littlebit2::packing::SignPool::global();
     let mut bscratch = littlebit2::packing::BatchScratch::default();

@@ -23,6 +23,11 @@
 //! every ratio is a pure overhead measurement. Methodology in
 //! EXPERIMENTS.md §Fused.
 //!
+//! The whole sweep runs once per available SIMD lane (scalar always; AVX2
+//! when the machine has it), pinned via `packing::force_scalar` — the
+//! lanes are bit-identical (enforced by the packing tests), so the
+//! per-lane rows isolate pure kernel throughput.
+//!
 //! Besides the `ROW:` lines, the sweep is written machine-readable to
 //! `BENCH_gemm.json` at the repository root so the perf trajectory is
 //! trackable across PRs.
@@ -33,11 +38,14 @@ mod common;
 use common::time_ms;
 use littlebit2::linalg::Mat;
 use littlebit2::littlebit::{compress, CompressionConfig, InitStrategy};
-use littlebit2::packing::{gemv_dense, BatchScratch, Scratch, SignPool};
+use littlebit2::packing::{
+    active_lane, force_scalar, gemv_dense, scalar_forced, BatchScratch, Lane, Scratch, SignPool,
+};
 use littlebit2::rng::Pcg64;
 use littlebit2::spectral::{synth_weight, SynthSpec};
 
 struct Row {
+    lane: &'static str,
     batch: usize,
     dense: f64,
     gemv: f64,
@@ -69,28 +77,62 @@ fn main() {
     let pool = SignPool::global();
 
     println!(
-        "ROW: batch dense_rows_s gemv_rows_s scoped_mt_rows_s fused_rows_s fused_pool_rows_s fused_pool_vs_scoped"
+        "ROW: lane batch dense_rows_s gemv_rows_s scoped_mt_rows_s fused_rows_s fused_pool_rows_s fused_pool_vs_scoped"
     );
+    // One full sweep per available lane, scalar last so a leftover pin
+    // from the environment is preserved faithfully.
+    let lanes: &[Lane] =
+        if active_lane() == Lane::Avx2 { &[Lane::Avx2, Lane::Scalar] } else { &[Lane::Scalar] };
+    let pinned = scalar_forced();
     let mut rows: Vec<Row> = Vec::new();
+    for &lane in lanes {
+        force_scalar(lane == Lane::Scalar);
+        sweep(lane, &w, &packed, pool, threads, &mut rng, &mut rows);
+    }
+    force_scalar(pinned);
+    let (adds, mults) = packed.op_counts();
+    println!(
+        "# per-item ops: {adds} sign-adds + {mults} fp-mults vs {} dense fp-MACs; fused kernels make zero separate scale passes, pool dispatch spawns zero threads",
+        d_out * d_in
+    );
+
+    let json_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_gemm.json");
+    match std::fs::write(json_path, render_json(d_out, d_in, bpp, threads, &rows)) {
+        Ok(()) => println!("# wrote {json_path}"),
+        Err(e) => eprintln!("# could not write {json_path}: {e}"),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn sweep(
+    lane: Lane,
+    w: &Mat,
+    packed: &littlebit2::packing::PackedResidual,
+    pool: &SignPool,
+    threads: usize,
+    rng: &mut Pcg64,
+    rows: &mut Vec<Row>,
+) {
+    let d_in = packed.d_in();
     for &b in &[1usize, 8, 32, 128] {
         // Feature-major activation block (column t = item t) + per-item views.
         let mut xblock = Mat::zeros(d_in, b);
-        rng.fill_normal(xblock.as_mut_slice());
+        xblock.fill_normal(rng);
         let items: Vec<Vec<f32>> = (0..b).map(|t| xblock.col(t)).collect();
         let reps = (256 / b).max(3);
 
         // Dense f32 GEMV, one pass per item.
-        let mut y = vec![0.0f32; d_out];
+        let mut y = vec![0.0f32; packed.d_out()];
         let (dense_ms, _) = time_ms(reps, || {
             for x in &items {
-                gemv_dense(&w, x, &mut y);
+                gemv_dense(w, x, &mut y);
             }
             std::hint::black_box(&y);
         });
 
         // Packed tri-scale GEMV, one pass per item (fused, scratch reused).
         let mut scratch = Scratch::default();
-        let mut out = vec![0.0f32; d_out];
+        let mut out = vec![0.0f32; packed.d_out()];
         let (gemv_ms, _) = time_ms(reps, || {
             for x in &items {
                 packed.forward_into(x, &mut out, &mut scratch);
@@ -119,6 +161,7 @@ fn main() {
 
         let rate = |ms: f64| b as f64 / (ms / 1e3);
         let row = Row {
+            lane: lane.name(),
             batch: b,
             dense: rate(dense_ms),
             gemv: rate(gemv_ms),
@@ -127,7 +170,8 @@ fn main() {
             fused_pool: rate(pool_ms),
         };
         println!(
-            "ROW: {b} {:.0} {:.0} {:.0} {:.0} {:.0} {:.2}",
+            "ROW: {} {b} {:.0} {:.0} {:.0} {:.0} {:.0} {:.2}",
+            row.lane,
             row.dense,
             row.gemv,
             row.scoped,
@@ -136,17 +180,6 @@ fn main() {
             row.fused_pool / row.scoped
         );
         rows.push(row);
-    }
-    let (adds, mults) = packed.op_counts();
-    println!(
-        "# per-item ops: {adds} sign-adds + {mults} fp-mults vs {} dense fp-MACs; fused kernels make zero separate scale passes, pool dispatch spawns zero threads",
-        d_out * d_in
-    );
-
-    let json_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_gemm.json");
-    match std::fs::write(json_path, render_json(d_out, d_in, bpp, threads, &rows)) {
-        Ok(()) => println!("# wrote {json_path}"),
-        Err(e) => eprintln!("# could not write {json_path}: {e}"),
     }
 }
 
@@ -162,7 +195,8 @@ fn render_json(d_out: usize, d_in: usize, bpp: f64, threads: usize, rows: &[Row]
     s.push_str("  \"rows_per_s\": [\n");
     for (i, r) in rows.iter().enumerate() {
         s.push_str(&format!(
-            "    {{\"batch\": {}, \"dense_gemv\": {:.1}, \"packed_gemv\": {:.1}, \"scoped_mt\": {:.1}, \"fused\": {:.1}, \"fused_pool_mt\": {:.1}, \"fused_pool_vs_scoped\": {:.3}}}{}\n",
+            "    {{\"lane\": \"{}\", \"batch\": {}, \"dense_gemv\": {:.1}, \"packed_gemv\": {:.1}, \"scoped_mt\": {:.1}, \"fused\": {:.1}, \"fused_pool_mt\": {:.1}, \"fused_pool_vs_scoped\": {:.3}}}{}\n",
+            r.lane,
             r.batch,
             r.dense,
             r.gemv,

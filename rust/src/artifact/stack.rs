@@ -525,7 +525,10 @@ fn encode_layer(layer: &PackedResidual) -> Result<Vec<u8>> {
         for &v in p.h().iter().chain(p.l()).chain(p.g()) {
             out.extend_from_slice(&v.to_le_bytes());
         }
-        for &w in p.ub_bits().words().iter().chain(p.vbt_bits().words()) {
+        // tight_words strips the in-memory stride padding: the on-disk
+        // encoding stays ⌈cols/64⌉ words per row, byte-identical to the
+        // pre-padding format.
+        for w in p.ub_bits().tight_words().chain(p.vbt_bits().tight_words()) {
             out.extend_from_slice(&w.to_le_bytes());
         }
     }
@@ -569,7 +572,7 @@ fn encode_sign_layer(layer: &SignScaledLayer) -> Result<Vec<u8>> {
     for &v in layer.row_scale().iter().chain(layer.col_scale()) {
         out.extend_from_slice(&v.to_le_bytes());
     }
-    for &w in layer.bits().words() {
+    for w in layer.bits().tight_words() {
         out.extend_from_slice(&w.to_le_bytes());
     }
     Ok(out)
@@ -598,8 +601,11 @@ fn encode_dense_layer(layer: &DenseScaledLayer) -> Result<Vec<u8>> {
     out.extend_from_slice(&u32_of(layer.d_out(), "d_out")?.to_le_bytes());
     out.extend_from_slice(&u32_of(layer.d_in(), "d_in")?.to_le_bytes());
     out.extend_from_slice(&layer.declared_bits().to_le_bytes());
-    for &v in layer.weight().as_slice() {
-        out.extend_from_slice(&v.to_le_bytes());
+    let w = layer.weight();
+    for i in 0..w.rows() {
+        for &v in w.row(i) {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
     }
     Ok(out)
 }
@@ -624,8 +630,12 @@ fn encode_lowrank_layer(layer: &LowRankFpLayer) -> Result<Vec<u8>> {
     out.extend_from_slice(&u32_of(layer.d_in(), "d_in")?.to_le_bytes());
     out.extend_from_slice(&u32_of(layer.rank(), "rank")?.to_le_bytes());
     out.extend_from_slice(&layer.declared_bits().to_le_bytes());
-    for &v in layer.u().as_slice().iter().chain(layer.vt().as_slice()) {
-        out.extend_from_slice(&v.to_le_bytes());
+    for m in [layer.u(), layer.vt()] {
+        for i in 0..m.rows() {
+            for &v in m.row(i) {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
     }
     Ok(out)
 }

@@ -421,8 +421,8 @@ mod tests {
             }
             for (la, lb) in p1.iter().zip(&pn) {
                 for (pa, pb) in la.paths().iter().zip(lb.paths()) {
-                    assert_eq!(pa.ub_bits().words(), pb.ub_bits().words(), "workers={workers}");
-                    assert_eq!(pa.vbt_bits().words(), pb.vbt_bits().words());
+                    assert_eq!(pa.ub_bits().padded_words(), pb.ub_bits().padded_words(), "workers={workers}");
+                    assert_eq!(pa.vbt_bits().padded_words(), pb.vbt_bits().padded_words());
                     assert_eq!(pa.h(), pb.h());
                     assert_eq!(pa.l(), pb.l());
                     assert_eq!(pa.g(), pb.g());

@@ -155,8 +155,8 @@ pub fn init_student(
                 let recon = u.matmul_t(&v);
                 target = target.sub(&recon);
                 paths.push((
-                    u.as_slice().to_vec(),
-                    v.as_slice().to_vec(),
+                    u.to_vec(),
+                    v.to_vec(),
                     vec![1.0f32; shape[0]],
                     vec![1.0f32; rank],
                     vec![1.0f32; shape[1]],
@@ -167,8 +167,8 @@ pub fn init_student(
                 target = target.sub(&recon);
                 let f = &c.factors;
                 paths.push((
-                    f.latent_u.as_slice().to_vec(),
-                    f.latent_v.as_slice().to_vec(),
+                    f.latent_u.to_vec(),
+                    f.latent_v.to_vec(),
                     f.h.clone(),
                     f.l.clone(),
                     f.g.clone(),

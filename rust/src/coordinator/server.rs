@@ -232,13 +232,7 @@ impl Default for HealthPolicy {
 /// // matrix replaces the worker's output buffer).
 /// let cfg = ServerConfig { workers: 2, ..Default::default() };
 /// let server = InferenceServer::start_pool(cfg, |_worker| {
-///     |x: &Mat| -> Mat {
-///         let mut y = x.clone();
-///         for v in y.as_mut_slice() {
-///             *v *= 2.0;
-///         }
-///         y
-///     }
+///     |x: &Mat| -> Mat { x.scale(2.0) }
 /// });
 /// let reply = server.submit(7, vec![1.0, 2.0]);
 /// assert_eq!(reply.recv().unwrap().output, vec![2.0, 4.0]);
@@ -1230,7 +1224,7 @@ mod tests {
         let mut y = Mat::default();
         for b in [3usize, 1, 7, 3] {
             let mut x = Mat::zeros(56, b);
-            rng.fill_normal(x.as_mut_slice());
+            x.fill_normal(&mut rng);
             backend.forward_batch_into(&x, &mut y);
             assert_eq!(y, model.forward_batch(&x), "b={b}");
         }
@@ -1260,7 +1254,7 @@ mod tests {
         let mut y = Mat::default();
         for b in [3usize, 1, 7, 3] {
             let mut x = Mat::zeros(48, b);
-            rng.fill_normal(x.as_mut_slice());
+            x.fill_normal(&mut rng);
             backend.forward_batch_into(&x, &mut y);
             assert_eq!(y, stack.forward_batch(&x), "b={b}");
         }

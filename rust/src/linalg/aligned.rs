@@ -1,0 +1,156 @@
+//! 32-byte-aligned backing buffers for the padded-stride storage layouts.
+//!
+//! [`Mat`](super::Mat) and [`BitMatrix`](crate::packing::BitMatrix) both pad
+//! their row stride to a 32-byte boundary (8 `f32`s / 4 `u64`s) so every row
+//! starts on an AVX2 vector boundary. Stable Rust has no aligned-`Vec`
+//! allocator, so these buffers get their alignment structurally: the backing
+//! store is a `Vec` of `#[repr(C, align(32))]` blocks, re-viewed as a flat
+//! element slice. A block is exactly 32 bytes with no internal padding, so
+//! `n` blocks are `8n` contiguous `f32`s (resp. `4n` `u64`s) and the slice
+//! cast is layout-sound.
+//!
+//! Both buffers only exist in whole blocks — lengths must be multiples of
+//! the block width, which the stride-padding of the owning types guarantees.
+
+/// One 32-byte-aligned block of eight `f32`s.
+#[repr(C, align(32))]
+#[derive(Clone, Copy, Debug, PartialEq)]
+struct F32Block([f32; 8]);
+
+/// One 32-byte-aligned block of four `u64`s.
+#[repr(C, align(32))]
+#[derive(Clone, Copy, Debug, PartialEq)]
+struct U64Block([u64; 4]);
+
+/// Width of an [`AlignedF32`] block in elements.
+pub const F32_BLOCK: usize = 8;
+
+/// Width of an [`AlignedU64`] block in elements.
+pub const U64_BLOCK: usize = 4;
+
+/// 32-byte-aligned `f32` buffer; length is always a multiple of
+/// [`F32_BLOCK`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct AlignedF32 {
+    blocks: Vec<F32Block>,
+}
+
+impl AlignedF32 {
+    /// Zero-filled buffer of `len` elements (`len % 8 == 0`).
+    pub fn zeros(len: usize) -> Self {
+        assert_eq!(len % F32_BLOCK, 0, "AlignedF32 length must be a block multiple");
+        Self { blocks: vec![F32Block([0.0; 8]); len / F32_BLOCK] }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.blocks.len() * F32_BLOCK
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.blocks.is_empty()
+    }
+
+    /// Resize to `len` elements (`len % 8 == 0`), reusing the allocation
+    /// where possible. Grown blocks are zero; carried-over blocks keep their
+    /// last-written values.
+    pub fn resize(&mut self, len: usize) {
+        assert_eq!(len % F32_BLOCK, 0, "AlignedF32 length must be a block multiple");
+        self.blocks.resize(len / F32_BLOCK, F32Block([0.0; 8]));
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        // Sound: F32Block is repr(C, align(32)) over [f32; 8] — 32 bytes,
+        // no padding — so the block array is a contiguous f32 array.
+        unsafe { std::slice::from_raw_parts(self.blocks.as_ptr() as *const f32, self.len()) }
+    }
+
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        let len = self.len();
+        unsafe { std::slice::from_raw_parts_mut(self.blocks.as_mut_ptr() as *mut f32, len) }
+    }
+}
+
+/// 32-byte-aligned `u64` buffer; length is always a multiple of
+/// [`U64_BLOCK`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct AlignedU64 {
+    blocks: Vec<U64Block>,
+}
+
+impl AlignedU64 {
+    /// Zero-filled buffer of `len` elements (`len % 4 == 0`).
+    pub fn zeros(len: usize) -> Self {
+        assert_eq!(len % U64_BLOCK, 0, "AlignedU64 length must be a block multiple");
+        Self { blocks: vec![U64Block([0; 4]); len / U64_BLOCK] }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.blocks.len() * U64_BLOCK
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.blocks.is_empty()
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[u64] {
+        unsafe { std::slice::from_raw_parts(self.blocks.as_ptr() as *const u64, self.len()) }
+    }
+
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [u64] {
+        let len = self.len();
+        unsafe { std::slice::from_raw_parts_mut(self.blocks.as_mut_ptr() as *mut u64, len) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_buffer_is_32_byte_aligned_and_contiguous() {
+        let mut b = AlignedF32::zeros(24);
+        assert_eq!(b.len(), 24);
+        assert_eq!(b.as_slice().as_ptr() as usize % 32, 0);
+        for (i, v) in b.as_mut_slice().iter_mut().enumerate() {
+            *v = i as f32;
+        }
+        // Contiguity: flat writes read back in order.
+        assert!(b.as_slice().iter().enumerate().all(|(i, &v)| v == i as f32));
+    }
+
+    #[test]
+    fn u64_buffer_is_32_byte_aligned_and_contiguous() {
+        let mut b = AlignedU64::zeros(12);
+        assert_eq!(b.len(), 12);
+        assert_eq!(b.as_slice().as_ptr() as usize % 32, 0);
+        for (i, v) in b.as_mut_slice().iter_mut().enumerate() {
+            *v = i as u64;
+        }
+        assert!(b.as_slice().iter().enumerate().all(|(i, &v)| v == i as u64));
+    }
+
+    #[test]
+    fn resize_zero_fills_new_blocks() {
+        let mut b = AlignedF32::zeros(8);
+        b.as_mut_slice().fill(7.0);
+        b.resize(16);
+        assert_eq!(&b.as_slice()[..8], &[7.0; 8]);
+        assert_eq!(&b.as_slice()[8..], &[0.0; 8]);
+        b.resize(0);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "block multiple")]
+    fn non_block_length_rejected() {
+        AlignedF32::zeros(5);
+    }
+}

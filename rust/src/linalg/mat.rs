@@ -1,5 +1,18 @@
-//! Row-major dense `f32` matrix with cache-blocked, pool-parallel
-//! multiplies.
+//! Row-major dense `f32` matrix with an aligned, padded row stride and
+//! cache-blocked, pool-parallel multiplies.
+//!
+//! Storage follows the TinyNet `real_col` idiom: each logical row of `cols`
+//! elements occupies [`stride`](Mat::stride) = `cols` rounded up to 8 floats
+//! (one 32-byte AVX2 vector) in a 32-byte-aligned backing buffer
+//! ([`AlignedF32`]), so every row starts on a vector boundary and SIMD lanes
+//! never straddle rows. The padding tail of every row is kept **zero** as a
+//! type invariant — every constructor and mutating op re-establishes it
+//! (checked by [`padding_is_clear`](Mat::padding_is_clear)), which lets
+//! whole-buffer reductions (`fro_norm`, `l1_norm`) run over the padded
+//! backing with bit-identical results. The logical API (`row`/`at`/`col`)
+//! is unchanged; flat iteration over `rows*cols` contiguous data is gone —
+//! use [`to_vec`](Mat::to_vec) for a logical copy or
+//! [`padded`](Mat::padded) + [`stride`](Mat::stride) for the raw layout.
 //!
 //! The product kernels come in two forms: the classic serial entry points
 //! (`matmul`, `t_matmul`, `matmul_t`, `matvec`) and `_on` variants taking
@@ -8,25 +21,51 @@
 //! accumulation — a range job computes exactly what the serial kernel
 //! would compute for those rows — so pooled results are **bit-identical**
 //! to serial for any thread count (asserted by `tests/parallel_linalg.rs`
-//! across thread counts {1, 2, 7, 64}). Shapes below [`PAR_MIN_FLOPS`]
-//! stay inline on the caller: dispatch overhead would dominate, and the
-//! threshold depends only on the shape, never on pool occupancy.
+//! across thread counts {1, 2, 7, 64}). The saxpy inner loop dispatches to
+//! the AVX2 lane of [`crate::packing::simd`] when available — element-wise,
+//! no reduction-order change, so SIMD stays bit-identical too. Shapes below
+//! [`PAR_MIN_FLOPS`] stay inline on the caller: dispatch overhead would
+//! dominate, and the threshold depends only on the shape, never on pool
+//! occupancy.
 
+use super::aligned::{AlignedF32, F32_BLOCK};
+use crate::packing::simd;
 use crate::parallel::Pool;
 use crate::rng::Pcg64;
 use std::fmt;
 
-/// Dense row-major matrix.
-#[derive(Clone, PartialEq)]
+/// Padded row stride (in `f32`s) for a logical width of `cols`.
+#[inline]
+pub(crate) fn row_stride(cols: usize) -> usize {
+    cols.div_ceil(F32_BLOCK) * F32_BLOCK
+}
+
+/// Dense row-major matrix with an 8-float padded row stride.
+#[derive(Clone)]
 pub struct Mat {
     rows: usize,
     cols: usize,
-    data: Vec<f32>,
+    /// Allocated row width; `cols.div_ceil(8) * 8`.
+    stride: usize,
+    /// `rows * stride` elements, 32-byte aligned; per-row tail past `cols`
+    /// is always zero.
+    data: AlignedF32,
 }
 
 impl fmt::Debug for Mat {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(f, "Mat({}x{})", self.rows, self.cols)
+    }
+}
+
+impl PartialEq for Mat {
+    /// Logical equality: shape plus per-row element comparison (IEEE `f32`
+    /// semantics). Padding never participates, so two equal matrices with
+    /// different padding histories still compare equal.
+    fn eq(&self, other: &Self) -> bool {
+        self.rows == other.rows
+            && self.cols == other.cols
+            && (0..self.rows).all(|i| self.row(i) == other.row(i))
     }
 }
 
@@ -50,34 +89,48 @@ impl Default for Mat {
 
 impl Mat {
     pub fn zeros(rows: usize, cols: usize) -> Self {
-        Self { rows, cols, data: vec![0.0; rows * cols] }
+        let stride = row_stride(cols);
+        Self { rows, cols, stride, data: AlignedF32::zeros(rows * stride) }
     }
 
     /// Reshape in place, reusing the existing allocation where possible
-    /// (only grows when `rows·cols` exceeds every earlier size). Newly
-    /// exposed elements are zero; elements carried over keep whatever was
-    /// last written — callers that read before writing must clear. The
-    /// batched serving scratch uses this to stay allocation-free across
-    /// requests of varying batch size.
+    /// (only grows when the padded size exceeds every earlier size). A
+    /// same-shape call is a no-op that keeps the contents; any shape change
+    /// clears the whole buffer to zero — the stride may change, so flat
+    /// carry-over of old values would be meaningless, and clearing
+    /// re-establishes the padding invariant in one pass. The batched
+    /// serving scratch uses this to stay allocation-free across requests
+    /// of varying batch size (those kernels fully overwrite their logical
+    /// outputs anyway).
     pub fn resize(&mut self, rows: usize, cols: usize) {
+        if rows == self.rows && cols == self.cols {
+            return;
+        }
         self.rows = rows;
         self.cols = cols;
-        self.data.resize(rows * cols, 0.0);
+        self.stride = row_stride(cols);
+        self.data.resize(rows * self.stride);
+        self.data.as_mut_slice().fill(0.0);
     }
 
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
         assert_eq!(data.len(), rows * cols, "shape/data mismatch");
-        Self { rows, cols, data }
+        let mut m = Self::zeros(rows, cols);
+        for i in 0..rows {
+            m.row_mut(i).copy_from_slice(&data[i * cols..(i + 1) * cols]);
+        }
+        m
     }
 
     pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
-        let mut data = Vec::with_capacity(rows * cols);
+        let mut m = Self::zeros(rows, cols);
         for i in 0..rows {
-            for j in 0..cols {
-                data.push(f(i, j));
+            let row = m.row_mut(i);
+            for (j, v) in row.iter_mut().enumerate() {
+                *v = f(i, j);
             }
         }
-        Self { rows, cols, data }
+        m
     }
 
     pub fn eye(n: usize) -> Self {
@@ -87,8 +140,26 @@ impl Mat {
     /// i.i.d. standard normal entries.
     pub fn gaussian(rows: usize, cols: usize, rng: &mut Pcg64) -> Self {
         let mut m = Self::zeros(rows, cols);
-        rng.fill_normal(&mut m.data);
+        m.fill_normal(rng);
         m
+    }
+
+    /// Fill every logical element with i.i.d. standard normals, row by row.
+    /// Draws exactly `rows*cols` variates in row-major order — the same
+    /// stream a flat fill of the old contiguous layout consumed, so seeded
+    /// expectations are layout-independent.
+    pub fn fill_normal(&mut self, rng: &mut Pcg64) {
+        for i in 0..self.rows {
+            rng.fill_normal(self.row_mut(i));
+        }
+    }
+
+    /// Fill every logical element with i.i.d. uniforms on `[lo, hi)`,
+    /// row-major order (see [`fill_normal`](Self::fill_normal)).
+    pub fn fill_uniform(&mut self, rng: &mut Pcg64, lo: f32, hi: f32) {
+        for i in 0..self.rows {
+            rng.fill_uniform(self.row_mut(i), lo, hi);
+        }
     }
 
     /// Diagonal matrix from a vector.
@@ -112,52 +183,92 @@ impl Mat {
         (self.rows, self.cols)
     }
 
+    /// Allocated row width in `f32`s — `cols` rounded up to a multiple of 8.
+    #[inline]
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
     #[inline]
     pub fn at(&self, i: usize, j: usize) -> f32 {
         debug_assert!(i < self.rows && j < self.cols);
-        self.data[i * self.cols + j]
+        self.data.as_slice()[i * self.stride + j]
     }
 
     #[inline]
     pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
         debug_assert!(i < self.rows && j < self.cols);
-        &mut self.data[i * self.cols + j]
+        &mut self.data.as_mut_slice()[i * self.stride + j]
     }
 
+    /// Logical row `i` — `cols` elements, excluding padding.
     #[inline]
     pub fn row(&self, i: usize) -> &[f32] {
-        &self.data[i * self.cols..(i + 1) * self.cols]
+        &self.data.as_slice()[i * self.stride..i * self.stride + self.cols]
     }
 
     #[inline]
     pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
-        &mut self.data[i * self.cols..(i + 1) * self.cols]
+        let (s, c) = (self.stride, self.cols);
+        &mut self.data.as_mut_slice()[i * s..i * s + c]
     }
 
     pub fn col(&self, j: usize) -> Vec<f32> {
         (0..self.rows).map(|i| self.at(i, j)).collect()
     }
 
+    /// The full padded backing buffer (`rows * stride` elements, 32-byte
+    /// aligned). Row `i` starts at `i * stride`; elements past `cols` in
+    /// each row are zero by invariant. Read-only — writers go through
+    /// [`padded_mut`](Self::padded_mut) inside the crate so the padding
+    /// invariant stays enforceable.
     #[inline]
-    pub fn as_slice(&self) -> &[f32] {
-        &self.data
+    pub fn padded(&self) -> &[f32] {
+        self.data.as_slice()
     }
 
+    /// Mutable padded backing, for the stride-aware kernels. Callers must
+    /// leave the per-row tail past `cols` zero.
     #[inline]
-    pub fn as_mut_slice(&mut self) -> &mut [f32] {
-        &mut self.data
+    pub(crate) fn padded_mut(&mut self) -> &mut [f32] {
+        self.data.as_mut_slice()
+    }
+
+    /// Copy out the logical `rows*cols` elements, row-major and contiguous
+    /// (the pre-padding memory layout) — the bridge to APIs that want a
+    /// flat buffer.
+    pub fn to_vec(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.rows * self.cols);
+        for i in 0..self.rows {
+            out.extend_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// True when every per-row padding tail is exactly `+0.0` — the layout
+    /// invariant all mutating ops preserve and the SIMD kernels rely on.
+    pub fn padding_is_clear(&self) -> bool {
+        let d = self.data.as_slice();
+        (0..self.rows).all(|i| {
+            d[i * self.stride + self.cols..(i + 1) * self.stride]
+                .iter()
+                .all(|v| v.to_bits() == 0)
+        })
     }
 
     pub fn transpose(&self) -> Mat {
         // Blocked transpose to stay cache-friendly on the 4096² inputs.
         let mut t = Mat::zeros(self.cols, self.rows);
+        let ts = t.stride;
+        let td = t.data.as_mut_slice();
         for bi in (0..self.rows).step_by(BLOCK) {
             for bj in (0..self.cols).step_by(BLOCK) {
                 let ie = (bi + BLOCK).min(self.rows);
                 let je = (bj + BLOCK).min(self.cols);
                 for i in bi..ie {
+                    let row = self.row(i);
                     for j in bj..je {
-                        t.data[j * self.rows + i] = self.data[i * self.cols + j];
+                        td[j * ts + i] = row[j];
                     }
                 }
             }
@@ -200,29 +311,28 @@ impl Mat {
         let (m, k, n) = (self.rows, self.cols, other.cols);
         out.resize(m, n);
         // The blocked kernel accumulates; clear whatever the reused buffer
-        // last held.
-        out.data.fill(0.0);
+        // last held (padding included — one pass keeps the invariant).
+        out.data.as_mut_slice().fill(0.0);
         if m == 0 || n == 0 {
             return;
         }
+        let os = out.stride;
         let parts = if m * k * n < PAR_MIN_FLOPS { 1 } else { parts.max(1) };
-        pool.run_row_chunks(&mut out.data, n, parts, |row0, orows| {
-            let nrows = orows.len() / n;
+        pool.run_row_chunks(out.data.as_mut_slice(), os, parts, |row0, orows| {
+            let nrows = orows.len() / os;
             for bk in (0..k).step_by(BLOCK) {
                 let ke = (bk + BLOCK).min(k);
                 for di in 0..nrows {
                     let arow = self.row(row0 + di);
-                    let orow = &mut orows[di * n..(di + 1) * n];
+                    let orow = &mut orows[di * os..di * os + n];
                     for p in bk..ke {
                         let a = arow[p];
                         if a == 0.0 {
                             continue;
                         }
-                        let brow = other.row(p);
-                        // Inner j-loop is a saxpy the compiler vectorizes.
-                        for (o, b) in orow.iter_mut().zip(brow) {
-                            *o += a * *b;
-                        }
+                        // Inner j-loop is a saxpy: element-wise, so the
+                        // AVX2 lane is bit-identical to scalar.
+                        simd::axpy(a, other.row(p), orow);
                     }
                 }
             }
@@ -245,9 +355,10 @@ impl Mat {
         if m == 0 || n == 0 {
             return out;
         }
+        let os = out.stride;
         let parts = if m * k * n < PAR_MIN_FLOPS { 1 } else { pool.threads() };
-        pool.run_row_chunks(&mut out.data, n, parts, |row0, orows| {
-            let nrows = orows.len() / n;
+        pool.run_row_chunks(out.data.as_mut_slice(), os, parts, |row0, orows| {
+            let nrows = orows.len() / os;
             for p in 0..k {
                 let arow = self.row(p);
                 let brow = other.row(p);
@@ -256,10 +367,8 @@ impl Mat {
                     if a == 0.0 {
                         continue;
                     }
-                    let orow = &mut orows[di * n..(di + 1) * n];
-                    for (o, b) in orow.iter_mut().zip(brow) {
-                        *o += a * *b;
-                    }
+                    let orow = &mut orows[di * os..di * os + n];
+                    simd::axpy(a, brow, orow);
                 }
             }
         });
@@ -282,11 +391,12 @@ impl Mat {
         if m == 0 || n == 0 {
             return out;
         }
+        let os = out.stride;
         let parts = if m * k * n < PAR_MIN_FLOPS { 1 } else { pool.threads() };
-        pool.run_row_chunks(&mut out.data, n, parts, |row0, orows| {
-            for (di, orow) in orows.chunks_mut(n).enumerate() {
+        pool.run_row_chunks(out.data.as_mut_slice(), os, parts, |row0, orows| {
+            for (di, orow) in orows.chunks_mut(os).enumerate() {
                 let arow = self.row(row0 + di);
-                for (j, o) in orow.iter_mut().enumerate() {
+                for (j, o) in orow[..n].iter_mut().enumerate() {
                     *o = super::dot(arow, other.row(j)) as f32;
                 }
             }
@@ -314,7 +424,8 @@ impl Mat {
         out
     }
 
-    /// Scale row `i` by `s[i]` — `diag(s) @ self`.
+    /// Scale row `i` by `s[i]` — `diag(s) @ self`. Per-row so padding never
+    /// sees `s` (a non-finite scale must not contaminate the zero tail).
     pub fn scale_rows(&self, s: &[f32]) -> Mat {
         assert_eq!(s.len(), self.rows);
         let mut out = self.clone();
@@ -339,51 +450,76 @@ impl Mat {
         out
     }
 
-    pub fn add(&self, other: &Mat) -> Mat {
+    /// Element-wise map over logical elements; padding stays untouched
+    /// (zero). The shared body of the unary ops below.
+    fn map_rows(&self, mut f: impl FnMut(f32) -> f32) -> Mat {
+        let mut out = Mat::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            for (o, &v) in out.row_mut(i).iter_mut().zip(self.row(i)) {
+                *o = f(v);
+            }
+        }
+        out
+    }
+
+    /// Element-wise zip with `other` (same shape ⇒ same stride).
+    fn zip_rows(&self, other: &Mat, mut f: impl FnMut(f32, f32) -> f32) -> Mat {
         assert_eq!(self.shape(), other.shape());
-        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
-        Mat { rows: self.rows, cols: self.cols, data }
+        let mut out = Mat::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let (a, b) = (self.row(i), other.row(i));
+            for (j, o) in out.row_mut(i).iter_mut().enumerate() {
+                *o = f(a[j], b[j]);
+            }
+        }
+        out
+    }
+
+    pub fn add(&self, other: &Mat) -> Mat {
+        self.zip_rows(other, |a, b| a + b)
     }
 
     pub fn sub(&self, other: &Mat) -> Mat {
-        assert_eq!(self.shape(), other.shape());
-        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
-        Mat { rows: self.rows, cols: self.cols, data }
+        self.zip_rows(other, |a, b| a - b)
     }
 
     pub fn scale(&self, s: f32) -> Mat {
-        let data = self.data.iter().map(|a| a * s).collect();
-        Mat { rows: self.rows, cols: self.cols, data }
+        self.map_rows(|a| a * s)
     }
 
     /// Element-wise absolute value.
     pub fn abs(&self) -> Mat {
-        let data = self.data.iter().map(|a| a.abs()).collect();
-        Mat { rows: self.rows, cols: self.cols, data }
+        self.map_rows(|a| a.abs())
     }
 
     /// Element-wise sign in {−1, +1} (zero maps to +1, matching
     /// `torch.sign`-with-STE conventions used by the paper's Listing 2 where
-    /// exact zeros are measure-zero).
+    /// exact zeros are measure-zero). Logical elements only — the 0 → +1
+    /// mapping must never touch the zero padding tail.
     pub fn signum(&self) -> Mat {
-        let data = self
-            .data
-            .iter()
-            .map(|a| if *a < 0.0 { -1.0 } else { 1.0 })
-            .collect();
-        Mat { rows: self.rows, cols: self.cols, data }
+        self.map_rows(|a| if a < 0.0 { -1.0 } else { 1.0 })
     }
 
-    /// Frobenius norm (f64 accumulation).
+    /// Frobenius norm (f64 accumulation). Runs over the padded backing:
+    /// the zero tail contributes exact `+0.0` terms, so the fold is
+    /// bit-identical to the logical-only reduction.
     pub fn fro_norm(&self) -> f64 {
-        super::dot(&self.data, &self.data).sqrt()
+        super::dot(self.data.as_slice(), self.data.as_slice()).sqrt()
+    }
+
+    /// L1 norm over logical elements (f64 accumulation; padded fold — the
+    /// zero tail is a no-op, as in [`fro_norm`](Self::fro_norm)).
+    pub fn l1_norm(&self) -> f64 {
+        super::norm1(self.data.as_slice())
     }
 
     /// Squared Frobenius distance ‖self − other‖²_F.
     pub fn fro_dist2(&self, other: &Mat) -> f64 {
         assert_eq!(self.shape(), other.shape());
+        // Same shape ⇒ same stride; paddings are both zero, so the padded
+        // zip adds exact zeros and matches the logical fold bit for bit.
         let mut acc = 0.0f64;
-        for (a, b) in self.data.iter().zip(&other.data) {
+        for (a, b) in self.data.as_slice().iter().zip(other.data.as_slice()) {
             let d = (*a - *b) as f64;
             acc += d * d;
         }
@@ -408,33 +544,34 @@ impl Mat {
     /// Vertical concatenation `[self; other]`.
     pub fn vcat(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.cols);
-        let mut data = Vec::with_capacity((self.rows + other.rows) * self.cols);
-        data.extend_from_slice(&self.data);
-        data.extend_from_slice(&other.data);
-        Mat { rows: self.rows + other.rows, cols: self.cols, data }
+        let mut out = Mat::zeros(self.rows + other.rows, self.cols);
+        for i in 0..self.rows {
+            out.row_mut(i).copy_from_slice(self.row(i));
+        }
+        for i in 0..other.rows {
+            out.row_mut(self.rows + i).copy_from_slice(other.row(i));
+        }
+        out
     }
 
     /// Split vertically after `k` rows.
     pub fn vsplit(&self, k: usize) -> (Mat, Mat) {
         assert!(k <= self.rows);
-        let top = Mat {
-            rows: k,
-            cols: self.cols,
-            data: self.data[..k * self.cols].to_vec(),
-        };
-        let bottom = Mat {
-            rows: self.rows - k,
-            cols: self.cols,
-            data: self.data[k * self.cols..].to_vec(),
-        };
+        let mut top = Mat::zeros(k, self.cols);
+        for i in 0..k {
+            top.row_mut(i).copy_from_slice(self.row(i));
+        }
+        let mut bottom = Mat::zeros(self.rows - k, self.cols);
+        for i in k..self.rows {
+            bottom.row_mut(i - k).copy_from_slice(self.row(i));
+        }
         (top, bottom)
     }
 
     /// Round-trip through IEEE half precision, modelling FP16 storage of
     /// scales/weights in the memory-budget comparisons.
     pub fn to_f16_precision(&self) -> Mat {
-        let data = self.data.iter().map(|a| f16_round(*a)).collect();
-        Mat { rows: self.rows, cols: self.cols, data }
+        self.map_rows(f16_round)
     }
 }
 
@@ -505,7 +642,7 @@ mod tests {
         let a = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
         let b = Mat::from_vec(3, 2, vec![7., 8., 9., 10., 11., 12.]);
         let c = a.matmul(&b);
-        assert_eq!(c.as_slice(), &[58., 64., 139., 154.]);
+        assert_eq!(c.to_vec(), vec![58., 64., 139., 154.]);
     }
 
     /// The into-buffer form must be bit-identical to `matmul` while
@@ -515,12 +652,13 @@ mod tests {
     fn matmul_into_on_reuses_buffer_cleanly() {
         let mut rng = Pcg64::seed(91);
         let mut out = Mat::zeros(40, 40);
-        rng.fill_normal(out.as_mut_slice()); // stale garbage to overwrite
+        out.fill_normal(&mut rng); // stale garbage to overwrite
         for (m, k, n) in [(7usize, 9usize, 5usize), (3, 2, 8), (12, 4, 1)] {
             let a = Mat::gaussian(m, k, &mut rng);
             let b = Mat::gaussian(k, n, &mut rng);
             a.matmul_into_on(&b, &mut out, Pool::serial());
             assert_eq!(out, a.matmul(&b), "{m}x{k}x{n}");
+            assert!(out.padding_is_clear(), "{m}x{k}x{n}");
         }
     }
 
@@ -563,9 +701,9 @@ mod tests {
     fn scale_rows_cols() {
         let a = Mat::from_vec(2, 2, vec![1., 2., 3., 4.]);
         let r = a.scale_rows(&[2., 3.]);
-        assert_eq!(r.as_slice(), &[2., 4., 9., 12.]);
+        assert_eq!(r.to_vec(), vec![2., 4., 9., 12.]);
         let c = a.scale_cols(&[2., 3.]);
-        assert_eq!(c.as_slice(), &[2., 6., 6., 12.]);
+        assert_eq!(c.to_vec(), vec![2., 6., 6., 12.]);
     }
 
     #[test]
@@ -582,7 +720,7 @@ mod tests {
     #[test]
     fn signum_maps_zero_to_plus_one() {
         let a = Mat::from_vec(1, 3, vec![-0.5, 0.0, 0.5]);
-        assert_eq!(a.signum().as_slice(), &[-1., 1., 1.]);
+        assert_eq!(a.signum().to_vec(), vec![-1., 1., 1.]);
     }
 
     #[test]
@@ -611,18 +749,23 @@ mod tests {
         }
     }
 
+    /// New resize contract under the padded layout: same shape keeps
+    /// contents, any shape change zeroes the buffer (stride may differ, so
+    /// flat carry-over is gone), and growth always exposes zeros.
     #[test]
-    fn resize_reuses_and_zero_fills_growth() {
+    fn resize_clears_on_shape_change() {
         let mut m = Mat::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        let before = m.clone();
+        m.resize(2, 2); // no-op keeps contents
+        assert_eq!(m, before);
         m.resize(1, 3);
         assert_eq!(m.shape(), (1, 3));
-        assert_eq!(m.as_slice(), &[1., 2., 3.]); // carried-over prefix
-        m.resize(2, 3);
-        assert_eq!(&m.as_slice()[3..], &[0., 0., 0.]); // growth is zeroed
+        assert_eq!(m.to_vec(), vec![0., 0., 0.]);
         let mut e = Mat::default();
         assert_eq!(e.shape(), (0, 0));
         e.resize(2, 2);
-        assert_eq!(e.as_slice(), &[0.; 4]);
+        assert_eq!(e.to_vec(), vec![0.; 4]);
+        assert!(e.padding_is_clear());
     }
 
     #[test]
@@ -631,5 +774,68 @@ mod tests {
         let b = Mat::from_vec(1, 2, vec![4., 3.]);
         assert!((a.fro_dist2(&b) - 16.0).abs() < 1e-9);
         assert!((a.mse(&b) - 8.0).abs() < 1e-9);
+    }
+
+    /// Stride geometry: rows are padded to 8 floats and 32-byte aligned,
+    /// logical accessors never see the tail.
+    #[test]
+    fn stride_is_padded_and_aligned() {
+        for (c, s) in [(0usize, 0usize), (1, 8), (7, 8), (8, 8), (9, 16), (65, 72)] {
+            let m = Mat::zeros(3, c);
+            assert_eq!(m.stride(), s, "cols={c}");
+            assert_eq!(m.padded().len(), 3 * s);
+            assert_eq!(m.row(1).len(), c);
+        }
+        let m = Mat::zeros(4, 5);
+        assert_eq!(m.padded().as_ptr() as usize % 32, 0);
+    }
+
+    /// Every mutating / constructing op must leave the padding tail zero —
+    /// the invariant the SIMD kernels and padded reductions rely on.
+    #[test]
+    fn padding_stays_clear_after_every_op() {
+        let mut rng = Pcg64::seed(77);
+        // cols = 5: three padding floats per row to contaminate.
+        let a = Mat::gaussian(6, 5, &mut rng);
+        let b = Mat::gaussian(6, 5, &mut rng);
+        assert!(a.padding_is_clear());
+        for (name, m) in [
+            ("add", a.add(&b)),
+            ("sub", a.sub(&b)),
+            ("scale", a.scale(-1.5)),
+            ("abs", a.abs()),
+            ("signum", a.signum()),
+            ("scale_rows", a.scale_rows(&[1., 2., 3., 4., 5., 6.])),
+            ("scale_cols", a.scale_cols(&[1., 2., 3., 4., 5.])),
+            ("transpose", a.transpose()),
+            ("take_cols", a.take_cols(3)),
+            ("vcat", a.vcat(&b)),
+            ("f16", a.to_f16_precision()),
+            ("matmul", a.matmul(&b.transpose())),
+            ("t_matmul", a.t_matmul(&b)),
+            ("matmul_t", a.matmul_t(&b)),
+            ("from_fn", Mat::from_fn(3, 5, |i, j| (i + j) as f32)),
+            ("from_vec", Mat::from_vec(1, 5, vec![1.; 5])),
+            ("diag", Mat::diag(&[1., 2., 3.])),
+        ] {
+            assert!(m.padding_is_clear(), "{name} contaminated padding");
+        }
+        let (t, bot) = a.vsplit(2);
+        assert!(t.padding_is_clear() && bot.padding_is_clear());
+        // signum on a scale(0.0) result: logical zeros become +1 but the
+        // padding tail must stay zero, not +1.
+        let z = a.scale(0.0).signum();
+        assert!(z.padding_is_clear());
+        assert!(z.to_vec().iter().all(|&v| v == 1.0));
+    }
+
+    /// `to_vec` strips padding back to the flat logical layout.
+    #[test]
+    fn to_vec_is_logical_row_major() {
+        let m = Mat::from_fn(3, 5, |i, j| (i * 5 + j) as f32);
+        let v = m.to_vec();
+        assert_eq!(v.len(), 15);
+        assert!(v.iter().enumerate().all(|(i, &x)| x == i as f32));
+        assert_eq!(Mat::from_vec(3, 5, v), m);
     }
 }

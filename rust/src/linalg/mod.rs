@@ -28,10 +28,12 @@
 //! Storage is row-major `f32`; accumulations are `f32` with `f64` reductions
 //! where precision matters (norms, dot products over long vectors).
 
+pub mod aligned;
 mod mat;
 mod qr;
 mod svd;
 
+pub use aligned::{AlignedF32, AlignedU64};
 pub use mat::{f16_round, Mat};
 pub use qr::{householder_qr, householder_qr_on, orthogonality_defect, random_orthogonal};
 pub use svd::{svd_jacobi, svd_randomized, svd_randomized_on, Svd};

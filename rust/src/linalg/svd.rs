@@ -60,7 +60,7 @@ pub fn svd_jacobi(a: &Mat) -> Svd {
     }
 
     // Work matrix in f64: columns get rotated until mutually orthogonal.
-    let mut w: Vec<f64> = a.as_slice().iter().map(|&x| x as f64).collect();
+    let mut w: Vec<f64> = a.to_vec().iter().map(|&x| x as f64).collect();
     let stride = n;
     let eps = 1e-13;
     let max_sweeps = 60;
@@ -315,8 +315,9 @@ mod tests {
         assert_eq!(svd.u.shape(), (40, 1));
         assert_eq!(svd.v.shape(), (12, 1));
         // Rank-1 of a positive matrix: factors should be single-signed.
+        let u = svd.u.to_vec();
         let all_same_sign =
-            svd.u.as_slice().iter().all(|&x| x >= -1e-6) || svd.u.as_slice().iter().all(|&x| x <= 1e-6);
+            u.iter().all(|&x| x >= -1e-6) || u.iter().all(|&x| x <= 1e-6);
         assert!(all_same_sign);
     }
 

@@ -74,7 +74,7 @@ pub fn joint_itq_on(
 
         let zr2 = z.matmul_on(&rot, pool);
         report.objective.push(zr2.signum().fro_dist2(&zr2));
-        report.l1_mass.push(crate::linalg::norm1(zr2.as_slice()));
+        report.l1_mass.push(zr2.l1_norm());
         report.iters += 1;
     }
 

@@ -244,7 +244,7 @@ mod tests {
         let mut rng = Pcg64::seed(11);
         let batch = 5;
         let mut x = Mat::zeros(40, batch);
-        rng.fill_normal(x.as_mut_slice());
+        x.fill_normal(&mut rng);
         let batched = rc.forward_packed_batch(&x);
         assert_eq!(batched.shape(), (48, batch));
         for t in 0..batch {

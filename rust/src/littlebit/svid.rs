@@ -140,6 +140,6 @@ mod tests {
         let f = dual_svid(&u, &v);
         assert_eq!(f.u_b, u.signum());
         assert_eq!(f.v_b, v.signum());
-        assert!(f.u_b.as_slice().iter().all(|&x| x == 1.0 || x == -1.0));
+        assert!(f.u_b.to_vec().iter().all(|&x| x == 1.0 || x == -1.0));
     }
 }

@@ -107,7 +107,7 @@ impl SignScaledLayer {
     fn forward_batch_into(&self, x: &Mat, y: &mut Mat, pool: &SignPool, threads: usize) {
         assert_eq!(x.rows(), self.d_in(), "X must be d_in × b feature-major");
         y.resize(self.d_out(), x.cols());
-        pool.run_gemm(&self.bits, Some(&self.col), x, Some(&self.row), y.as_mut_slice(), threads);
+        pool.run_gemm(&self.bits, Some(&self.col), x, Some(&self.row), y, threads);
     }
 
     fn reconstruct_on(&self, pool: &Pool) -> Mat {
@@ -438,7 +438,7 @@ mod tests {
         let mut rng = Pcg64::seed(4);
         let b = 7;
         let mut x = Mat::zeros(70, b);
-        rng.fill_normal(x.as_mut_slice());
+        x.fill_normal(&mut rng);
         let batched = layer.forward_batch(&x);
         for t in 0..b {
             let want = layer.forward(&x.col(t));
@@ -480,7 +480,7 @@ mod tests {
         let mut y = Mat::default();
         for b in [3usize, 1, 5] {
             let mut x = Mat::zeros(30, b);
-            rng.fill_normal(x.as_mut_slice());
+            x.fill_normal(&mut rng);
             dense.forward_batch_into(&x, &mut y, &mut scratch, SignPool::serial(), 1);
             assert_eq!(y, w.matmul(&x), "dense b={b}");
             lowrank.forward_batch_into(&x, &mut y, &mut scratch, SignPool::serial(), 1);

@@ -242,7 +242,7 @@ mod tests {
         let mut rng = Pcg64::seed(12);
         let b = 5;
         let mut x = Mat::zeros(40, b);
-        rng.fill_normal(x.as_mut_slice());
+        x.fill_normal(&mut rng);
         let want = packed.forward_batch(&x);
         let got = generic.forward_batch(&x);
         assert_eq!(want, got);
@@ -273,7 +273,7 @@ mod tests {
         assert_eq!((stack.d_in(), stack.d_out()), (40, 32));
         // Chain forward: batch column equals composed per-layer forwards.
         let mut x = Mat::zeros(40, 3);
-        rng.fill_normal(x.as_mut_slice());
+        x.fill_normal(&mut rng);
         let y = stack.forward_batch(&x);
         for t in 0..3 {
             let want = stack.forward(&x.col(t));
@@ -308,7 +308,7 @@ mod tests {
         let mut y = Mat::default();
         for b in [4usize, 1, 7] {
             let mut x = Mat::zeros(40, b);
-            rng.fill_normal(x.as_mut_slice());
+            x.fill_normal(&mut rng);
             stack.forward_batch_into(&x, &mut y, &mut scratch, SignPool::global(), 2);
             assert_eq!(y, stack.forward_batch(&x), "depth-3 b={b}");
             single.forward_batch_into(&x, &mut y, &mut scratch, SignPool::global(), 2);

@@ -220,7 +220,7 @@ mod tests {
 
         let b = 7;
         let mut x = Mat::zeros(48, b);
-        rng.fill_normal(x.as_mut_slice());
+        x.fill_normal(&mut rng);
         let batched = stack.forward_batch(&x);
         let threaded = stack.forward_batch_mt(&x, 3);
         assert_eq!(batched, threaded);
@@ -246,7 +246,7 @@ mod tests {
         let pool = SignPool::global();
         for b in [5usize, 1, 8] {
             let mut x = Mat::zeros(48, b);
-            rng.fill_normal(x.as_mut_slice());
+            x.fill_normal(&mut rng);
             stack.forward_batch_into(&x, &mut y, &mut scratch, pool, 2);
             assert_eq!(y, stack.forward_batch(&x), "depth-3 b={b}");
             single.forward_batch_into(&x, &mut y, &mut scratch, pool, 2);

@@ -1,18 +1,41 @@
-//! Bit-packed ±1 matrix.
+//! Bit-packed ±1 matrix with an aligned, padded word stride.
 
-use crate::linalg::Mat;
+use crate::linalg::{AlignedU64, Mat};
 use anyhow::{bail, Result};
 
+/// Words per 32-byte block — the row-stride quantum.
+const WORD_BLOCK: usize = crate::linalg::aligned::U64_BLOCK;
+
 /// Row-major bit-packed sign matrix. Set bit = +1, clear bit = −1.
-/// Each row occupies `words_per_row` u64 words; trailing padding bits in the
-/// last word of each row are kept **clear** and must be ignored by kernels
-/// (they are, via explicit column bounds).
+///
+/// In memory each row occupies [`words_per_row`](BitMatrix::words_per_row)
+/// `u64` words — the tight `⌈cols/64⌉` count rounded up to a 4-word
+/// (32-byte) block — in a 32-byte-aligned buffer, so AVX2 loads of a row
+/// are aligned and never straddle rows. **All** padding bits are kept
+/// clear as a type invariant: the trailing bits of the last tight word
+/// *and* every whole padding word (validated by
+/// [`padding_is_clear`](BitMatrix::padding_is_clear), asserted at kernel
+/// entry) — clear padding is load-bearing for the popcount and
+/// whole-word-XOR kernels.
+///
+/// On disk the `.lb2` artifact stores the **tight** form only
+/// ([`tight_words`](BitMatrix::tight_words)); [`from_words`] accepts that
+/// tight form and re-strides on load, so the padded layout never changes a
+/// serialized byte.
 #[derive(Clone, Debug, PartialEq)]
 pub struct BitMatrix {
     rows: usize,
     cols: usize,
+    /// Padded row stride: `⌈cols/64⌉` rounded up to a multiple of 4.
     words_per_row: usize,
-    words: Vec<u64>,
+    /// `rows * words_per_row` words, 32-byte aligned.
+    words: AlignedU64,
+}
+
+/// Padded row stride (in words) for a logical width of `cols` bits.
+#[inline]
+fn padded_words_per_row(cols: usize) -> usize {
+    cols.div_ceil(64).div_ceil(WORD_BLOCK) * WORD_BLOCK
 }
 
 impl BitMatrix {
@@ -20,14 +43,15 @@ impl BitMatrix {
     /// `Mat::signum`).
     pub fn from_dense(m: &Mat) -> Self {
         let (rows, cols) = m.shape();
-        let words_per_row = cols.div_ceil(64);
-        let mut words = vec![0u64; rows * words_per_row];
+        let words_per_row = padded_words_per_row(cols);
+        let mut words = AlignedU64::zeros(rows * words_per_row);
+        let w = words.as_mut_slice();
         for i in 0..rows {
             let row = m.row(i);
             let base = i * words_per_row;
             for (j, &v) in row.iter().enumerate() {
                 if v >= 0.0 {
-                    words[base + j / 64] |= 1u64 << (j % 64);
+                    w[base + j / 64] |= 1u64 << (j % 64);
                 }
             }
         }
@@ -40,15 +64,16 @@ impl BitMatrix {
         Self::from_dense(&m)
     }
 
-    /// Rebuild from the packed word buffer verbatim (the `.lb2` artifact
-    /// load path — no re-packing). Fails with `Err` when the word count
-    /// doesn't match `rows × ⌈cols/64⌉` or any padding bit past `cols` in a
-    /// row's last word is set — the kernels rely on clear padding, so a
-    /// corrupt buffer must be rejected here, loudly, not served.
+    /// Rebuild from the **tight** packed word buffer (the `.lb2` artifact
+    /// load path: `rows × ⌈cols/64⌉` words, exactly the bytes on disk),
+    /// re-striding into the padded aligned layout. Fails with `Err` when
+    /// the word count doesn't match or any padding bit past `cols` in a
+    /// row's last tight word is set — the kernels rely on clear padding,
+    /// so a corrupt buffer must be rejected here, loudly, not served.
     pub fn from_words(rows: usize, cols: usize, words: Vec<u64>) -> Result<Self> {
-        let words_per_row = cols.div_ceil(64);
+        let tight = cols.div_ceil(64);
         let expect = rows
-            .checked_mul(words_per_row)
+            .checked_mul(tight)
             .ok_or_else(|| anyhow::anyhow!("bit-plane {rows}x{cols} overflows"))?;
         if words.len() != expect {
             bail!(
@@ -56,23 +81,39 @@ impl BitMatrix {
                 words.len()
             );
         }
-        if cols % 64 != 0 && words_per_row > 0 {
+        if cols % 64 != 0 && tight > 0 {
             let pad_mask = !0u64 << (cols % 64);
             for i in 0..rows {
-                let last = words[i * words_per_row + words_per_row - 1];
+                let last = words[i * tight + tight - 1];
                 if last & pad_mask != 0 {
                     bail!("bit-plane row {i} has set padding bits past column {cols}");
                 }
             }
         }
-        Ok(Self { rows, cols, words_per_row, words })
+        let words_per_row = padded_words_per_row(cols);
+        let mut padded = AlignedU64::zeros(rows * words_per_row);
+        let dst = padded.as_mut_slice();
+        for i in 0..rows {
+            dst[i * words_per_row..i * words_per_row + tight]
+                .copy_from_slice(&words[i * tight..(i + 1) * tight]);
+        }
+        Ok(Self { rows, cols, words_per_row, words: padded })
     }
 
-    /// The packed word buffer, row-major (`rows × words_per_row` words) —
-    /// what the `.lb2` artifact stores verbatim.
+    /// The padded in-memory word buffer, row-major
+    /// (`rows × words_per_row` words, 32-byte aligned). Per-row words past
+    /// [`tight_words_per_row`](Self::tight_words_per_row) are zero.
     #[inline]
-    pub fn words(&self) -> &[u64] {
-        &self.words
+    pub fn padded_words(&self) -> &[u64] {
+        self.words.as_slice()
+    }
+
+    /// The tight `rows × ⌈cols/64⌉` words in row-major order — exactly
+    /// what the `.lb2` artifact stores, byte-identical to the pre-padding
+    /// layout's buffer.
+    pub fn tight_words(&self) -> impl Iterator<Item = u64> + '_ {
+        let tight = self.tight_words_per_row();
+        (0..self.rows).flat_map(move |i| self.row_words(i)[..tight].iter().copied())
     }
 
     #[inline]
@@ -85,21 +126,30 @@ impl BitMatrix {
         self.cols
     }
 
+    /// Padded (allocated) words per row — a multiple of 4.
     #[inline]
     pub fn words_per_row(&self) -> usize {
         self.words_per_row
     }
 
+    /// Words per row that carry data: `⌈cols/64⌉`.
+    #[inline]
+    pub fn tight_words_per_row(&self) -> usize {
+        self.cols.div_ceil(64)
+    }
+
+    /// The padded words of row `i` (length [`words_per_row`](Self::words_per_row),
+    /// 32-byte aligned; trailing padding words are zero).
     #[inline]
     pub fn row_words(&self, i: usize) -> &[u64] {
-        &self.words[i * self.words_per_row..(i + 1) * self.words_per_row]
+        &self.words.as_slice()[i * self.words_per_row..(i + 1) * self.words_per_row]
     }
 
     /// Sign at (i, j) as ±1.0.
     #[inline]
     pub fn sign_at(&self, i: usize, j: usize) -> f32 {
         debug_assert!(i < self.rows && j < self.cols);
-        let w = self.words[i * self.words_per_row + j / 64];
+        let w = self.words.as_slice()[i * self.words_per_row + j / 64];
         if (w >> (j % 64)) & 1 == 1 {
             1.0
         } else {
@@ -112,42 +162,97 @@ impl BitMatrix {
         Mat::from_fn(self.rows, self.cols, |i, j| self.sign_at(i, j))
     }
 
+    /// True when every padding bit is clear: the trailing bits past `cols`
+    /// in each row's last tight word, and every whole padding word beyond
+    /// the tight count. The kernels `debug_assert!` this at entry — clear
+    /// padding is what lets them stream whole words without column masks.
+    pub fn padding_is_clear(&self) -> bool {
+        let tight = self.tight_words_per_row();
+        let tail_mask = if self.cols % 64 != 0 { !0u64 << (self.cols % 64) } else { 0 };
+        (0..self.rows).all(|i| {
+            let row = self.row_words(i);
+            let tail_ok = tail_mask == 0 || tight == 0 || row[tight - 1] & tail_mask == 0;
+            tail_ok && row[tight..].iter().all(|&w| w == 0)
+        })
+    }
+
     /// Transposed copy (used to turn `V_b` into `V_bᵀ` once at load time so
-    /// the GEMV streams rows).
+    /// the GEMV streams rows). Word-blocked: the matrix is processed as
+    /// 64×64 bit tiles, each transposed in-register by the log-step
+    /// delta-swap network (6 rounds of masked exchanges) instead of
+    /// bit-at-a-time probing — the `.lb2` open-path cost this pays on
+    /// every load.
     pub fn transpose(&self) -> BitMatrix {
-        let mut out_words = vec![0u64; self.cols * self.rows.div_ceil(64)];
-        let wpr_out = self.rows.div_ceil(64);
-        for i in 0..self.rows {
-            let base = i * self.words_per_row;
-            for w in 0..self.words_per_row {
-                let mut word = self.words[base + w];
-                while word != 0 {
-                    let b = word.trailing_zeros() as usize;
-                    let j = w * 64 + b;
-                    if j < self.cols {
-                        out_words[j * wpr_out + i / 64] |= 1u64 << (i % 64);
-                    }
-                    word &= word - 1;
+        let (rows, cols) = (self.rows, self.cols);
+        let wpr_out = padded_words_per_row(rows);
+        let mut out = AlignedU64::zeros(cols * wpr_out);
+        let dst = out.as_mut_slice();
+        let tight_in = self.tight_words_per_row();
+        // Tile (bi, bj) covers input rows 64·bi.. and input cols 64·bj..
+        for bi in 0..rows.div_ceil(64) {
+            let tile_rows = (rows - bi * 64).min(64);
+            for bj in 0..tight_in {
+                // Gather: word bj of 64 consecutive input rows; missing
+                // rows stay zero (their transposed bits must be clear).
+                let mut tile = [0u64; 64];
+                for (r, t) in tile.iter_mut().enumerate().take(tile_rows) {
+                    *t = self.row_words(bi * 64 + r)[bj];
+                }
+                transpose_64x64(&mut tile);
+                // Scatter: tile row c is output row 64·bj + c, word bi.
+                // Input-column padding bits (≥ cols) were clear, so the
+                // out-of-range tile rows are zero and are simply skipped.
+                let out_rows = (cols - bj * 64).min(64);
+                for (c, &t) in tile.iter().enumerate().take(out_rows) {
+                    dst[(bj * 64 + c) * wpr_out + bi] = t;
                 }
             }
         }
-        BitMatrix {
-            rows: self.cols,
-            cols: self.rows,
-            words_per_row: wpr_out,
-            words: out_words,
-        }
+        BitMatrix { rows: cols, cols: rows, words_per_row: wpr_out, words: out }
     }
 
-    /// Storage in bytes (the sub-1-bit story: `rows·cols/8` plus padding).
+    /// Storage in bytes of the **tight** packed form — what the artifact
+    /// ships and what the sub-1-bit accounting counts (`rows·cols/8` plus
+    /// sub-word padding). Alignment padding is a transient in-memory cost;
+    /// see [`resident_bytes`](Self::resident_bytes).
     pub fn storage_bytes(&self) -> usize {
+        self.rows * self.tight_words_per_row() * 8
+    }
+
+    /// Resident in-memory bytes of the padded, aligned buffer
+    /// (≥ [`storage_bytes`](Self::storage_bytes)).
+    pub fn resident_bytes(&self) -> usize {
         self.words.len() * 8
     }
 
     /// Fraction of +1 entries.
     pub fn density(&self) -> f64 {
-        let set: u64 = self.words.iter().map(|w| w.count_ones() as u64).sum();
+        // Padding is clear by invariant, so the padded popcount is exact.
+        let set: u64 = self.words.as_slice().iter().map(|w| w.count_ones() as u64).sum();
         set as f64 / (self.rows * self.cols) as f64
+    }
+}
+
+/// In-place transpose of a 64×64 bit tile (`tile[i]` bit `j` ⇄ `tile[j]`
+/// bit `i`): the classic recursive block-swap — exchange the off-diagonal
+/// 32×32 blocks, then 16×16 within each half, … down to 1×1 — each round a
+/// masked delta swap.
+fn transpose_64x64(tile: &mut [u64; 64]) {
+    // LSB-first variant (bit j = column j): each round exchanges the high
+    // column half of the low row half with the low column half of the high
+    // row half inside every 2j×2j block.
+    let mut j = 32;
+    let mut m: u64 = 0x0000_0000_FFFF_FFFF;
+    while j != 0 {
+        let mut k = 0;
+        while k < 64 {
+            let t = ((tile[k] >> j) ^ tile[k | j]) & m;
+            tile[k] ^= t << j;
+            tile[k | j] ^= t;
+            k = ((k | j) + 1) & !j;
+        }
+        j >>= 1;
+        m ^= m << j;
     }
 }
 
@@ -166,6 +271,12 @@ mod tests {
         }
     }
 
+    /// The old bit-at-a-time transpose, kept as the oracle for the
+    /// word-blocked 64×64 implementation.
+    fn transpose_reference(b: &BitMatrix) -> Mat {
+        Mat::from_fn(b.cols(), b.rows(), |i, j| b.sign_at(j, i))
+    }
+
     #[test]
     fn transpose_matches_dense_transpose() {
         let mut rng = Pcg64::seed(2);
@@ -174,12 +285,61 @@ mod tests {
         assert_eq!(packed.transpose().to_dense(), m.transpose());
     }
 
+    /// Block-transpose bit-exactness across ragged tile geometries: square
+    /// one-tile, sub-tile, exact multi-tile, and every % 64 edge class —
+    /// identical bits to the per-element oracle, clear padding throughout.
+    #[test]
+    fn block_transpose_matches_reference_on_ragged_shapes() {
+        let mut rng = Pcg64::seed(21);
+        for (r, c) in
+            [(1, 1), (64, 64), (63, 65), (65, 63), (128, 192), (130, 1), (1, 130), (100, 129)]
+        {
+            let m = Mat::gaussian(r, c, &mut rng).signum();
+            let packed = BitMatrix::from_dense(&m);
+            let t = packed.transpose();
+            assert_eq!(t.to_dense(), transpose_reference(&packed), "{r}x{c}");
+            assert!(t.padding_is_clear(), "{r}x{c}: transpose contaminated padding");
+            // Double transpose is the identity, including word buffers.
+            assert_eq!(t.transpose(), packed, "{r}x{c}");
+        }
+    }
+
     #[test]
     fn storage_is_one_bit_per_entry_plus_padding() {
         let b = BitMatrix::ones(128, 128);
         assert_eq!(b.storage_bytes(), 128 * 128 / 8);
         let b = BitMatrix::ones(10, 65);
-        assert_eq!(b.storage_bytes(), 10 * 2 * 8); // 2 words per row
+        assert_eq!(b.storage_bytes(), 10 * 2 * 8); // 2 tight words per row
+    }
+
+    /// The aligned layout: stride is a 4-word multiple, the buffer is
+    /// 32-byte aligned, and resident bytes exceed tight bytes only by the
+    /// per-row block padding.
+    #[test]
+    fn padded_stride_geometry() {
+        for (c, wpr) in [(1usize, 4usize), (64, 4), (256, 4), (257, 8), (130, 4)] {
+            let b = BitMatrix::ones(3, c);
+            assert_eq!(b.words_per_row(), wpr, "cols={c}");
+            assert_eq!(b.padded_words().len(), 3 * wpr);
+            assert_eq!(b.padded_words().as_ptr() as usize % 32, 0);
+            assert_eq!(b.resident_bytes(), 3 * wpr * 8);
+            assert_eq!(b.row_words(1).len(), wpr);
+            assert!(b.padding_is_clear());
+        }
+    }
+
+    /// `tight_words` strips the padding back to the serialized layout.
+    #[test]
+    fn tight_words_roundtrip_through_from_words() {
+        let mut rng = Pcg64::seed(22);
+        for (r, c) in [(3, 3), (7, 64), (5, 65), (16, 130), (2, 257)] {
+            let m = Mat::gaussian(r, c, &mut rng).signum();
+            let packed = BitMatrix::from_dense(&m);
+            let tight: Vec<u64> = packed.tight_words().collect();
+            assert_eq!(tight.len(), r * c.div_ceil(64), "{r}x{c}");
+            let rebuilt = BitMatrix::from_words(r, c, tight).unwrap();
+            assert_eq!(rebuilt, packed, "{r}x{c}");
+        }
     }
 
     #[test]
@@ -196,7 +356,7 @@ mod tests {
         for (r, c) in [(3, 3), (7, 64), (5, 65), (16, 130)] {
             let m = Mat::gaussian(r, c, &mut rng).signum();
             let packed = BitMatrix::from_dense(&m);
-            let rebuilt = BitMatrix::from_words(r, c, packed.words().to_vec()).unwrap();
+            let rebuilt = BitMatrix::from_words(r, c, packed.tight_words().collect()).unwrap();
             assert_eq!(rebuilt, packed, "{r}x{c}");
         }
     }
@@ -204,11 +364,12 @@ mod tests {
     #[test]
     fn from_words_rejects_corruption() {
         let b = BitMatrix::from_dense(&Mat::from_fn(2, 65, |_, _| 1.0));
+        let tight: Vec<u64> = b.tight_words().collect();
         // Wrong word count.
-        assert!(BitMatrix::from_words(2, 65, b.words()[..3].to_vec()).is_err());
-        assert!(BitMatrix::from_words(3, 65, b.words().to_vec()).is_err());
+        assert!(BitMatrix::from_words(2, 65, tight[..3].to_vec()).is_err());
+        assert!(BitMatrix::from_words(3, 65, tight.clone()).is_err());
         // Set padding bit past column 65.
-        let mut words = b.words().to_vec();
+        let mut words = tight;
         words[1] |= 1u64 << 7;
         assert!(BitMatrix::from_words(2, 65, words).is_err());
     }
@@ -220,6 +381,9 @@ mod tests {
         for i in 0..2 {
             let last = b.row_words(i)[1];
             assert_eq!(last & !1u64, 0, "padding contaminated: {last:#x}");
+            // Whole padding words (2 and 3 of the 4-word stride) are zero.
+            assert_eq!(&b.row_words(i)[2..], &[0, 0]);
         }
+        assert!(b.padding_is_clear());
     }
 }

@@ -33,7 +33,7 @@
 //! `benches/gemm_speedup.rs`.
 
 use super::pool::SignPool;
-use super::BitMatrix;
+use super::{simd, BitMatrix};
 use crate::linalg::Mat;
 use std::cell::RefCell;
 
@@ -41,6 +41,15 @@ use std::cell::RefCell;
 /// reduction accumulators = 64 live scalars — two AVX2 register files'
 /// worth, which the compiler keeps in registers on x86-64 and aarch64.
 pub(crate) const COL_STRIP: usize = 8;
+
+/// Output rows per cache tile. The batch loop runs column strips outermost
+/// within a tile of this many sign rows, so one activation strip
+/// (`n × COL_STRIP` floats) is reused across the whole tile while the
+/// tile's packed rows (`ROW_TILE × words_per_row` words) stay resident —
+/// both comfortably under typical L2. Tiling only reorders *which*
+/// (row, strip) block runs when; each block's reduction is self-contained,
+/// so results stay bit-identical to the untiled loop.
+pub(crate) const ROW_TILE: usize = 64;
 
 thread_local! {
     /// Per-thread input-scaled activation block for the fused GEMM
@@ -99,7 +108,8 @@ pub fn gemm_sign(s: &BitMatrix, x: &Mat, y: &mut Mat) {
     if b == 0 || s.rows() == 0 {
         return;
     }
-    gemm_sign_rows(s, x, y.as_mut_slice(), 0);
+    let stride = y.stride();
+    gemm_sign_rows(s, x, y.padded_mut(), stride, 0);
 }
 
 /// Scale-fused sign-GEMM:
@@ -147,7 +157,8 @@ pub fn gemm_sign_scaled(
     if b == 0 || s.rows() == 0 {
         return;
     }
-    gemm_sign_scaled_rows(s, in_scale, x, out_scale, y.as_mut_slice(), 0);
+    let stride = y.stride();
+    gemm_sign_scaled_rows(s, in_scale, x, out_scale, y.padded_mut(), stride, 0);
 }
 
 /// Row-parallel sign-GEMM: identical output to [`gemm_sign`] (bit-exact;
@@ -160,7 +171,7 @@ pub fn gemm_sign_mt(s: &BitMatrix, x: &Mat, y: &mut Mat, threads: usize) {
     assert_eq!(s.cols(), x.rows(), "inner dims: S is m×n, X is n×b");
     assert_eq!(s.rows(), y.rows(), "output rows");
     assert_eq!(x.cols(), y.cols(), "batch width");
-    SignPool::for_threads(threads).run_gemm(s, None, x, None, y.as_mut_slice(), threads);
+    SignPool::for_threads(threads).run_gemm(s, None, x, None, y, threads);
 }
 
 /// The PR 1 row-parallel sign-GEMM, spawning `threads` OS threads per call
@@ -178,26 +189,29 @@ pub fn gemm_sign_mt_scoped(s: &BitMatrix, x: &Mat, y: &mut Mat, threads: usize) 
         return;
     }
     let threads = threads.max(1).min(rows);
+    let stride = y.stride();
     if threads == 1 {
-        gemm_sign_rows(s, x, y.as_mut_slice(), 0);
+        gemm_sign_rows(s, x, y.padded_mut(), stride, 0);
         return;
     }
     let chunk = rows.div_ceil(threads);
-    let y_all = y.as_mut_slice();
+    let y_all = y.padded_mut();
     std::thread::scope(|scope| {
-        for (ti, ys) in y_all.chunks_mut(chunk * b).enumerate() {
-            scope.spawn(move || gemm_sign_rows(s, x, ys, ti * chunk));
+        for (ti, ys) in y_all.chunks_mut(chunk * stride).enumerate() {
+            scope.spawn(move || gemm_sign_rows(s, x, ys, stride, ti * chunk));
         }
     });
 }
 
-/// Compute output rows `row0..row0 + ys.len()/b` of `S X` into `ys`.
+/// Compute output rows `row0..row0 + ys.len()/ys_stride` of `S X` into
+/// `ys`, whose rows live `ys_stride` floats apart (the output `Mat`'s
+/// padded stride; only the leading `b` floats of each row are written).
 ///
 /// Per output element the reduction mirrors `gemv_sign` exactly: eight
 /// accumulators fed word-by-word, strip-by-strip, then summed in lane
 /// order — the source of the bit-exactness guarantee.
-pub(crate) fn gemm_sign_rows(s: &BitMatrix, x: &Mat, ys: &mut [f32], row0: usize) {
-    gemm_sign_out_rows(s, x, None, ys, row0);
+pub(crate) fn gemm_sign_rows(s: &BitMatrix, x: &Mat, ys: &mut [f32], ys_stride: usize, row0: usize) {
+    gemm_sign_out_rows(s, x, None, ys, ys_stride, row0);
 }
 
 /// The shared sign-GEMM row-range loop — [`gemm_sign_rows`]'s body with the
@@ -206,64 +220,101 @@ pub(crate) fn gemm_sign_rows(s: &BitMatrix, x: &Mat, ys: &mut [f32], row0: usize
 /// separate output pass would apply. This is the kernel every pool job
 /// runs; input scaling happens once per *call* (not per job) via
 /// [`with_scaled_block`] before rows are partitioned.
+///
+/// The range is walked in [`ROW_TILE`]-row cache tiles with the column
+/// strips outermost inside each tile; every (row, strip) block dispatches
+/// to the AVX2 strip kernel when available (full strips only) or to the
+/// scalar oracle [`gemm_strip_scalar`]. Blocks are reduction-independent,
+/// so tiling and dispatch change no rounding.
 pub(crate) fn gemm_sign_out_rows(
     s: &BitMatrix,
     x: &Mat,
     out_scale: Option<&[f32]>,
     ys: &mut [f32],
+    ys_stride: usize,
     row0: usize,
 ) {
+    debug_assert!(s.padding_is_clear(), "sign-GEMM on corrupt bit-plane padding");
     let b = x.cols();
     let cols = s.cols();
-    let full_words = cols / 64;
-    let nrows = ys.len() / b;
-    for di in 0..nrows {
-        let words = s.row_words(row0 + di);
-        let yrow = &mut ys[di * b..(di + 1) * b];
-        let hi = out_scale.map(|h| h[row0 + di]);
+    debug_assert!(ys_stride >= b && ys.len() % ys_stride == 0);
+    let nrows = ys.len() / ys_stride;
+    let avx2 = simd::use_avx2();
+    let mut tile0 = 0;
+    while tile0 < nrows {
+        let tile_end = (tile0 + ROW_TILE).min(nrows);
         let mut c0 = 0;
         while c0 < b {
             let cw = (b - c0).min(COL_STRIP);
-            // acc[k][t] is gemv_sign's acc[k], replicated per batch column
-            // t — the sign word is read once for all cw columns.
-            let mut acc = [[0.0f32; COL_STRIP]; 8];
-            for (c, &w) in words[..full_words].iter().enumerate() {
-                for strip in 0..8 {
-                    let bits = (w >> (strip * 8)) as u32;
-                    for k in 0..8 {
-                        let neg = ((bits >> k) & 1 ^ 1) << 31;
-                        let xrow = &x.row(c * 64 + strip * 8 + k)[c0..c0 + cw];
-                        let lane = &mut acc[k];
+            for di in tile0..tile_end {
+                let words = s.row_words(row0 + di);
+                let sums = if avx2 && cw == COL_STRIP {
+                    simd::gemm_row_strip_avx2(words, x, cols, c0)
+                } else {
+                    gemm_strip_scalar(words, x, cols, c0, cw)
+                };
+                let yrow = &mut ys[di * ys_stride..di * ys_stride + b];
+                match out_scale.map(|h| h[row0 + di]) {
+                    Some(hv) => {
                         for t in 0..cw {
-                            lane[t] += f32::from_bits(xrow[t].to_bits() ^ neg);
+                            yrow[c0 + t] = sums[t] * hv;
                         }
                     }
+                    None => yrow[c0..c0 + cw].copy_from_slice(&sums[..cw]),
                 }
-            }
-            if full_words < words.len() {
-                let w = words[full_words];
-                for (k, j) in (full_words * 64..cols).enumerate() {
-                    let neg = (((w >> k) & 1) as u32 ^ 1) << 31;
-                    let xrow = &x.row(j)[c0..c0 + cw];
-                    let lane = &mut acc[k & 7];
-                    for t in 0..cw {
-                        lane[t] += f32::from_bits(xrow[t].to_bits() ^ neg);
-                    }
-                }
-            }
-            for t in 0..cw {
-                let mut sum = 0.0f32;
-                for lane in &acc {
-                    sum += lane[t];
-                }
-                yrow[c0 + t] = match hi {
-                    Some(hv) => sum * hv,
-                    None => sum,
-                };
             }
             c0 += cw;
         }
+        tile0 = tile_end;
     }
+}
+
+/// One packed row × one strip of `cw ≤ 8` batch columns on the scalar lane
+/// — the pre-SIMD kernel body kept verbatim as the bit-exactness oracle,
+/// the ragged-strip path, and the non-x86 fallback. Returns the pre-scale
+/// per-column sums.
+pub(crate) fn gemm_strip_scalar(
+    words: &[u64],
+    x: &Mat,
+    cols: usize,
+    c0: usize,
+    cw: usize,
+) -> [f32; COL_STRIP] {
+    let full_words = cols / 64;
+    // acc[k][t] is gemv_sign's acc[k], replicated per batch column
+    // t — the sign word is read once for all cw columns.
+    let mut acc = [[0.0f32; COL_STRIP]; 8];
+    for (c, &w) in words[..full_words].iter().enumerate() {
+        for strip in 0..8 {
+            let bits = (w >> (strip * 8)) as u32;
+            for k in 0..8 {
+                let neg = ((bits >> k) & 1 ^ 1) << 31;
+                let xrow = &x.row(c * 64 + strip * 8 + k)[c0..c0 + cw];
+                let lane = &mut acc[k];
+                for t in 0..cw {
+                    lane[t] += f32::from_bits(xrow[t].to_bits() ^ neg);
+                }
+            }
+        }
+    }
+    if cols % 64 != 0 {
+        let w = words[full_words];
+        for (k, j) in (full_words * 64..cols).enumerate() {
+            let neg = (((w >> k) & 1) as u32 ^ 1) << 31;
+            let xrow = &x.row(j)[c0..c0 + cw];
+            let lane = &mut acc[k & 7];
+            for t in 0..cw {
+                lane[t] += f32::from_bits(xrow[t].to_bits() ^ neg);
+            }
+        }
+    }
+    let mut sums = [0.0f32; COL_STRIP];
+    for (t, sum) in sums.iter_mut().enumerate().take(cw) {
+        for lane in &acc {
+            *sum += lane[t];
+        }
+    }
+    sums
 }
 
 /// Row-range form of the fused GEMM used by the serial entry: the input
@@ -280,11 +331,14 @@ fn gemm_sign_scaled_rows(
     x: &Mat,
     out_scale: Option<&[f32]>,
     ys: &mut [f32],
+    ys_stride: usize,
     row0: usize,
 ) {
     match in_scale {
-        Some(g) => with_scaled_block(x, g, |xg| gemm_sign_out_rows(s, xg, out_scale, ys, row0)),
-        None => gemm_sign_out_rows(s, x, out_scale, ys, row0),
+        Some(g) => {
+            with_scaled_block(x, g, |xg| gemm_sign_out_rows(s, xg, out_scale, ys, ys_stride, row0))
+        }
+        None => gemm_sign_out_rows(s, x, out_scale, ys, ys_stride, row0),
     }
 }
 
@@ -306,7 +360,7 @@ mod tests {
 
     fn random_block(rows: usize, cols: usize, rng: &mut Pcg64) -> Mat {
         let mut m = Mat::zeros(rows, cols);
-        rng.fill_normal(m.as_mut_slice());
+        m.fill_normal(rng);
         m
     }
 
@@ -382,7 +436,7 @@ mod tests {
                 };
                 let mut got = Mat::zeros(m, b);
                 gemm_sign_scaled(&s, ins, &x, outs, &mut got);
-                for (i, (a, c)) in want.as_slice().iter().zip(got.as_slice()).enumerate() {
+                for (i, (a, c)) in want.to_vec().iter().zip(got.to_vec()).enumerate() {
                     assert_eq!(
                         a.to_bits(),
                         c.to_bits(),
@@ -444,7 +498,7 @@ mod tests {
         let want = sd.matmul(&x);
         let mut got = Mat::zeros(m, b);
         gemm_sign(&s, &x, &mut got);
-        for (a, c) in want.as_slice().iter().zip(got.as_slice()) {
+        for (a, c) in want.to_vec().iter().zip(got.to_vec()) {
             assert!((a - c).abs() < 1e-3 * (n as f32).sqrt(), "{a} vs {c}");
         }
     }
@@ -465,7 +519,7 @@ mod tests {
         let want = sd.scale_rows(&h).scale_cols(&g).matmul(&x);
         let mut got = Mat::zeros(m, b);
         gemm_sign_scaled(&s, Some(&g), &x, Some(&h), &mut got);
-        for (a, c) in want.as_slice().iter().zip(got.as_slice()) {
+        for (a, c) in want.to_vec().iter().zip(got.to_vec()) {
             assert!((a - c).abs() < 2e-3 * (n as f32).sqrt(), "{a} vs {c}");
         }
     }

@@ -3,7 +3,7 @@
 //! layer), and an XNOR-popcount GEMM for the binary-binary BOPs story.
 
 use super::pool::SignPool;
-use super::BitMatrix;
+use super::{simd, BitMatrix};
 use crate::linalg::Mat;
 use std::cell::RefCell;
 
@@ -87,6 +87,12 @@ pub(crate) fn gemv_sign_rows(s: &BitMatrix, x: &[f32], y: &mut [f32], row0: usiz
 /// the reduced sum, the same rounding a separate output pass would apply.
 /// This is the kernel every pool GEMV job runs; input scaling happens once
 /// per call via [`with_scaled_vec`] before rows are partitioned.
+///
+/// Dispatch: the AVX2 lane of [`simd`] when available (the scalar
+/// accumulators become vector lanes — bit-identical per-row sums), the
+/// scalar oracle [`gemv_row_scalar`] otherwise. Clear bit-plane padding is
+/// load-bearing (whole padded words stream through the XOR loop on the
+/// SIMD side), so it is asserted here at kernel entry.
 pub(crate) fn gemv_sign_out_rows(
     s: &BitMatrix,
     x: &[f32],
@@ -94,39 +100,52 @@ pub(crate) fn gemv_sign_out_rows(
     y: &mut [f32],
     row0: usize,
 ) {
+    debug_assert!(s.padding_is_clear(), "sign-GEMV on corrupt bit-plane padding");
     let cols = s.cols();
-    let full_words = cols / 64;
+    let avx2 = simd::use_avx2();
     for (i, yi) in y.iter_mut().enumerate() {
         let words = s.row_words(row0 + i);
-        let mut acc = [0.0f32; 8];
-        for (c, &w) in words[..full_words].iter().enumerate() {
-            let xs = &x[c * 64..c * 64 + 64];
-            // Eight 8-lane strips; clear bit ⇒ flip the sign bit.
-            for strip in 0..8 {
-                let bits = (w >> (strip * 8)) as u32;
-                let xv = &xs[strip * 8..strip * 8 + 8];
-                for k in 0..8 {
-                    let neg = ((bits >> k) & 1 ^ 1) << 31;
-                    acc[k] += f32::from_bits(xv[k].to_bits() ^ neg);
-                }
-            }
-        }
-        // Ragged tail: when r < 64 (typical for U_b at sub-1-bit ranks)
-        // this path carries the WHOLE row, so it needs the same
-        // multi-accumulator treatment as the full words.
-        if full_words < words.len() {
-            let w = words[full_words];
-            for (k, &xv) in x[full_words * 64..].iter().enumerate() {
-                let neg = (((w >> k) & 1) as u32 ^ 1) << 31;
-                acc[k & 7] += f32::from_bits(xv.to_bits() ^ neg);
-            }
-        }
-        let sum = acc.iter().sum::<f32>();
+        let sum = if avx2 {
+            simd::gemv_row_avx2(words, x, cols)
+        } else {
+            gemv_row_scalar(words, x, cols)
+        };
         *yi = match out_scale {
             Some(h) => sum * h[row0 + i],
             None => sum,
         };
     }
+}
+
+/// One packed row · `x` on the scalar lane — the pre-SIMD kernel body kept
+/// verbatim as the bit-exactness oracle and non-x86 path. Eight
+/// independent accumulators fed strip-by-strip, summed in lane order.
+pub(crate) fn gemv_row_scalar(words: &[u64], x: &[f32], cols: usize) -> f32 {
+    let full_words = cols / 64;
+    let mut acc = [0.0f32; 8];
+    for (c, &w) in words[..full_words].iter().enumerate() {
+        let xs = &x[c * 64..c * 64 + 64];
+        // Eight 8-lane strips; clear bit ⇒ flip the sign bit.
+        for strip in 0..8 {
+            let bits = (w >> (strip * 8)) as u32;
+            let xv = &xs[strip * 8..strip * 8 + 8];
+            for k in 0..8 {
+                let neg = ((bits >> k) & 1 ^ 1) << 31;
+                acc[k] += f32::from_bits(xv[k].to_bits() ^ neg);
+            }
+        }
+    }
+    // Ragged tail: when r < 64 (typical for U_b at sub-1-bit ranks)
+    // this path carries the WHOLE row, so it needs the same
+    // multi-accumulator treatment as the full words.
+    if cols % 64 != 0 {
+        let w = words[full_words];
+        for (k, &xv) in x[full_words * 64..].iter().enumerate() {
+            let neg = (((w >> k) & 1) as u32 ^ 1) << 31;
+            acc[k & 7] += f32::from_bits(xv.to_bits() ^ neg);
+        }
+    }
+    acc.iter().sum::<f32>()
 }
 
 /// Scale-fused sign-GEMV:
@@ -366,15 +385,8 @@ impl TriScaleLayer {
         let b = x.cols();
         scratch.latent.resize(self.rank(), b);
         y.resize(self.d_out(), b);
-        pool.run_gemm(&self.vbt, Some(&self.g), x, None, scratch.latent.as_mut_slice(), threads);
-        pool.run_gemm(
-            &self.ub,
-            Some(&self.l),
-            &scratch.latent,
-            Some(&self.h),
-            y.as_mut_slice(),
-            threads,
-        );
+        pool.run_gemm(&self.vbt, Some(&self.g), x, None, &mut scratch.latent, threads);
+        pool.run_gemm(&self.ub, Some(&self.l), &scratch.latent, Some(&self.h), y, threads);
     }
 
     /// The pre-pool, pre-fusion batched forward kept as the measured
@@ -453,17 +465,28 @@ pub struct BatchScratch {
 /// This is the BOPs primitive of §6.2 — 64 MACs per instruction pair.
 pub fn xnor_popcount_gemm(a: &BitMatrix, bt: &BitMatrix) -> Mat {
     assert_eq!(a.cols(), bt.cols(), "inner dims (k) must match");
+    debug_assert!(a.padding_is_clear(), "XNOR GEMM on corrupt bit-plane padding");
+    debug_assert!(bt.padding_is_clear(), "XNOR GEMM on corrupt bit-plane padding");
     let k = a.cols();
+    let avx2 = simd::use_avx2();
     let mut out = Mat::zeros(a.rows(), bt.rows());
     for i in 0..a.rows() {
         let arow = a.row_words(i);
+        let orow = out.row_mut(i);
         for j in 0..bt.rows() {
             let brow = bt.row_words(j);
-            let mut diff = 0u32;
-            for (wa, wb) in arow.iter().zip(brow) {
-                diff += (wa ^ wb).count_ones();
-            }
-            *out.at_mut(i, j) = (k as i64 - 2 * diff as i64) as f32;
+            // Clear padding means pad words XOR to 0 and add nothing to the
+            // popcount on either lane — both are integer-exact.
+            let diff = if avx2 {
+                simd::xnor_row_popcount_avx2(arow, brow)
+            } else {
+                let mut d = 0u32;
+                for (wa, wb) in arow.iter().zip(brow) {
+                    d += (wa ^ wb).count_ones();
+                }
+                d
+            };
+            orow[j] = (k as i64 - 2 * diff as i64) as f32;
         }
     }
     out
@@ -580,7 +603,7 @@ mod tests {
             &BitMatrix::from_dense(&b.transpose()),
         );
         assert_eq!(want.shape(), got.shape());
-        for (x, y) in want.as_slice().iter().zip(got.as_slice()) {
+        for (x, y) in want.to_vec().iter().zip(got.to_vec()) {
             assert!((x - y).abs() < 1e-3, "{x} vs {y}");
         }
     }
@@ -624,7 +647,7 @@ mod tests {
         let layer = random_layer(d_out, d_in, r, &mut rng);
 
         let mut x = Mat::zeros(d_in, b);
-        rng.fill_normal(x.as_mut_slice());
+        x.fill_normal(&mut rng);
         let batched = layer.forward_batch(&x);
         let threaded = layer.forward_batch_mt(&x, 4);
         assert_eq!(batched, threaded, "threading changed the result");
@@ -651,7 +674,7 @@ mod tests {
         for (d_out, d_in, r, b) in [(96, 80, 16, 11), (33, 130, 24, 8), (20, 200, 16, 5)] {
             let layer = random_layer(d_out, d_in, r, &mut rng);
             let mut x = Mat::zeros(d_in, b);
-            rng.fill_normal(x.as_mut_slice());
+            x.fill_normal(&mut rng);
             for threads in [1usize, 2, 7, 64] {
                 let scoped = layer.forward_batch_scoped(&x, threads);
                 let fused = layer.forward_batch_mt(&x, threads);
@@ -673,7 +696,7 @@ mod tests {
         let pool = SignPool::global();
         for (layer, b) in [(&wide, 9usize), (&tall, 3), (&wide, 1), (&tall, 12), (&wide, 5)] {
             let mut x = Mat::zeros(layer.d_in(), b);
-            rng.fill_normal(x.as_mut_slice());
+            x.fill_normal(&mut rng);
             layer.forward_batch_into(&x, &mut y, &mut scratch, pool, 2);
             let fresh = layer.forward_batch(&x);
             assert_eq!(y, fresh, "b={b}");

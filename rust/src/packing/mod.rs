@@ -14,10 +14,22 @@
 //! cuBLAS FP16 on a 70B MLP; `benches/gemv_speedup.rs` reproduces the shape
 //! of that claim on this CPU.
 //!
-//! Layout: one row = ⌈cols/64⌉ `u64` words, bit j of word w = sign of column
-//! `64·w + j` (set bit ⇒ +1). Sign application in the GEMV is a single XOR
-//! on the IEEE sign bit; row reductions run on eight independent
+//! Layout: bit j of word w = sign of column `64·w + j` (set bit ⇒ +1).
+//! In memory each row is padded to a 4-word (32-byte) boundary and the
+//! backing allocation is 32-byte aligned ([`BitMatrix::words_per_row`];
+//! padding bits are always zero — an invariant the kernels assert); on
+//! disk rows stay tight at ⌈cols/64⌉ words, byte-identical to the
+//! pre-padding `.lb2` encoding. Sign application in the GEMV is a single
+//! XOR on the IEEE sign bit; row reductions run on eight independent
 //! accumulators to keep the FP-add chain off the critical path (§Perf).
+//!
+//! Every sign kernel dispatches at runtime between a scalar lane — the
+//! original loop, kept verbatim as the bit-exactness oracle and non-x86
+//! path — and an AVX2 lane gated on `is_x86_feature_detected!` (`simd`
+//! module). The AVX2 lanes map the scalar code's eight accumulators onto
+//! vector lanes without reassociating any reduction, so both lanes produce
+//! identical bits; `LB2_FORCE_SCALAR=1` (or [`simd::force_scalar`]) pins
+//! the scalar lane for A/B testing and CI.
 //!
 //! At batch > 1 the same weights are driven through the batched sign-GEMM
 //! ([`gemm_sign`], `gemm` module): activations are handled as a feature-
@@ -39,8 +51,10 @@ mod gemm;
 mod gemv;
 mod pool;
 mod residual;
+pub mod simd;
 
 pub use bitmat::BitMatrix;
+pub use simd::{active_lane, force_scalar, scalar_forced, Lane};
 pub use gemm::{gemm_sign, gemm_sign_mt, gemm_sign_mt_scoped, gemm_sign_scaled, gemv_sign_mt};
 pub use gemv::{
     gemv_dense, gemv_sign, gemv_sign_scaled, tri_scale_gemv, xnor_popcount_gemm,

@@ -129,16 +129,12 @@ impl SignPool {
         out_scale: Option<&[f32]>,
         y: &mut Mat,
     ) {
-        assert_eq!(s.rows(), y.rows(), "output rows");
-        assert_eq!(x.cols(), y.cols(), "batch width");
-        self.run_gemm(s, in_scale, x, out_scale, y.as_mut_slice(), self.threads());
+        self.run_gemm(s, in_scale, x, out_scale, y, self.threads());
     }
 
     /// Pool-dispatched [`gemm_sign`](super::gemm_sign) (no scales).
     pub fn gemm_sign(&self, s: &BitMatrix, x: &Mat, y: &mut Mat) {
-        assert_eq!(s.rows(), y.rows(), "output rows");
-        assert_eq!(x.cols(), y.cols(), "batch width");
-        self.run_gemm(s, None, x, None, y.as_mut_slice(), self.threads());
+        self.run_gemm(s, None, x, None, y, self.threads());
     }
 
     /// Partition `S X` (with optional fused scales) into `parts` contiguous
@@ -148,19 +144,23 @@ impl SignPool {
     /// inline range alike) then reads it like it would read `x`. The
     /// partition depends only on (`rows`, `parts`), so output is bit-exact
     /// against the serial kernel for every `parts`.
+    ///
+    /// `y` is partitioned over its **padded** backing at its row stride —
+    /// jobs land on aligned row starts and never write the padding tail.
     pub(crate) fn run_gemm(
         &self,
         s: &BitMatrix,
         in_scale: Option<&[f32]>,
         x: &Mat,
         out_scale: Option<&[f32]>,
-        ys: &mut [f32],
+        y: &mut Mat,
         parts: usize,
     ) {
         let rows = s.rows();
         let b = x.cols();
         assert_eq!(s.cols(), x.rows(), "inner dims: S is m×n, X is n×b");
-        assert_eq!(ys.len(), rows * b, "output block size");
+        assert_eq!(y.rows(), rows, "output rows");
+        assert_eq!(y.cols(), b, "batch width");
         if let Some(g) = in_scale {
             assert_eq!(g.len(), s.cols(), "in_scale length");
         }
@@ -170,9 +170,11 @@ impl SignPool {
         if rows == 0 || b == 0 {
             return;
         }
+        let stride = y.stride();
+        let ys = y.padded_mut();
         let run = |xs: &Mat| {
-            self.pool.get().run_row_chunks(ys, b, parts, |row0, range| {
-                gemm_sign_out_rows(s, xs, out_scale, range, row0);
+            self.pool.get().run_row_chunks(ys, stride, parts, |row0, range| {
+                gemm_sign_out_rows(s, xs, out_scale, range, stride, row0);
             });
         };
         match in_scale {
@@ -231,7 +233,7 @@ mod tests {
         let mut rng = Pcg64::seed(seed);
         let s = BitMatrix::from_dense(&Mat::gaussian(m, n, &mut rng).signum());
         let mut x = Mat::zeros(n, b);
-        rng.fill_normal(x.as_mut_slice());
+        x.fill_normal(&mut rng);
         let mut g = vec![0.0f32; n];
         let mut h = vec![0.0f32; m];
         rng.fill_uniform(&mut g, 0.2, 1.8);
@@ -272,7 +274,7 @@ mod tests {
         let pool = SignPool::new(2);
         for parts in [1usize, 3, 64] {
             let mut y = Mat::zeros(3, 4);
-            pool.run_gemm(&s, Some(&g), &x, Some(&h), y.as_mut_slice(), parts);
+            pool.run_gemm(&s, Some(&g), &x, Some(&h), &mut y, parts);
             assert_eq!(serial, y, "parts={parts}");
         }
         let (s1, x1, _, _) = random_setup(1, 70, 2, 63);

@@ -126,7 +126,10 @@ impl PackedResidual {
             let mut tmp = std::mem::take(&mut scratch.path_out);
             for p in &self.paths[1..] {
                 p.forward_batch_into(x, &mut tmp, scratch, pool, threads);
-                for (o, v) in y.as_mut_slice().iter_mut().zip(tmp.as_slice()) {
+                // Padded strides match (same shape), and padding is zero on
+                // both sides, so accumulating over the padded backing keeps
+                // logical values and padding exact alike.
+                for (o, v) in y.padded_mut().iter_mut().zip(tmp.padded()) {
                     *o += v;
                 }
             }
@@ -143,7 +146,7 @@ impl PackedResidual {
         let mut out = self.paths[0].forward_batch_scoped(x, threads);
         for p in &self.paths[1..] {
             let y = p.forward_batch_scoped(x, threads);
-            for (o, v) in out.as_mut_slice().iter_mut().zip(y.as_slice()) {
+            for (o, v) in out.padded_mut().iter_mut().zip(y.padded()) {
                 *o += v;
             }
         }
@@ -187,7 +190,7 @@ mod tests {
         let mut rng = Pcg64::seed(34);
         let b = 9;
         let mut x = Mat::zeros(packed.d_in(), b);
-        rng.fill_normal(x.as_mut_slice());
+        x.fill_normal(&mut rng);
         let batched = packed.forward_batch(&x);
         let threaded = packed.forward_batch_mt(&x, 3);
         assert_eq!(batched, threaded);
@@ -211,7 +214,7 @@ mod tests {
         let pool = SignPool::global();
         for b in [4usize, 1, 9, 2] {
             let mut x = Mat::zeros(packed.d_in(), b);
-            rng.fill_normal(x.as_mut_slice());
+            x.fill_normal(&mut rng);
             packed.forward_batch_into(&x, &mut y, &mut scratch, pool, 2);
             assert_eq!(y, packed.forward_batch(&x), "b={b}");
             // The kept PR 1 engine must stay bit-identical to the fused

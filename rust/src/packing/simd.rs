@@ -1,0 +1,411 @@
+//! Runtime-dispatched SIMD lanes for the sign kernels and the dense saxpy.
+//!
+//! Every hot kernel exists twice: the scalar path (in `gemv.rs` / `gemm.rs`
+//! / `mat.rs`, unchanged from the pre-SIMD revisions — it is the
+//! bit-exactness oracle and the non-x86 fallback) and an AVX2 path here.
+//! Dispatch happens once per kernel call via [`use_avx2`]:
+//! `is_x86_feature_detected!("avx2")` (cached by the standard library) AND
+//! not forced off. The `LB2_FORCE_SCALAR=1` environment variable (read
+//! once) or the programmatic [`force_scalar`] toggle pin the scalar lane —
+//! CI runs the whole suite once per lane, and the benches flip the toggle
+//! in-process to measure both.
+//!
+//! **Bit-exactness.** The AVX2 lanes are constructed to perform the exact
+//! FP operations of their scalar oracles in the exact order, per output
+//! element:
+//!
+//! * The sign-GEMV keeps the scalar's eight accumulators as the eight
+//!   lanes of one `__m256`; each 64-bit sign word feeds eight 8-lane
+//!   strips in strip order, so lane `k` sees the same additions in the
+//!   same order as scalar `acc[k]`. The ragged tail (cols % 64) runs the
+//!   verbatim scalar tail on the extracted lanes, and the final reduction
+//!   is the same sequential lane-order sum.
+//! * The sign-GEMM vectorizes across the **batch** dimension: scalar
+//!   `acc[k][0..8]` becomes one `__m256` per `k`, updated in the same
+//!   `(word, strip, k)` order. Partial strips (batch % 8) fall back to the
+//!   scalar strip kernel.
+//! * No FMA anywhere — `mul` then `add` keeps the scalar's two roundings.
+//! * XNOR-popcount is integer (vpshufb nibble LUT + vpsadbw), exact by
+//!   construction.
+//! * `axpy` is element-wise (no reduction), so vectorization cannot
+//!   reorder anything.
+//!
+//! All lanes tolerate (and exploit) the padded layouts: `BitMatrix` rows
+//! are 4-word / 32-byte blocks with clear padding (asserted at kernel
+//! entry), `Mat` rows are 8-float / 32-byte blocks with zero padding, so
+//! 256-bit loads never straddle a row boundary.
+
+use crate::linalg::Mat;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+
+/// Which kernel implementation the dispatcher selects.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Lane {
+    /// Portable scalar kernels — the bit-exactness oracle.
+    Scalar,
+    /// AVX2 256-bit kernels (x86-64 with runtime AVX2 support).
+    Avx2,
+}
+
+impl Lane {
+    /// Stable lowercase name, used by the bench JSON `lane` field.
+    pub fn name(self) -> &'static str {
+        match self {
+            Lane::Scalar => "scalar",
+            Lane::Avx2 => "avx2",
+        }
+    }
+}
+
+/// Parse a force-scalar environment value: "1", "true", "yes", "on"
+/// (case-insensitive) engage the override; anything else (or unset)
+/// leaves dispatch to hardware detection.
+fn parse_force_scalar(v: Option<&str>) -> bool {
+    matches!(
+        v.map(|s| s.trim().to_ascii_lowercase()).as_deref(),
+        Some("1" | "true" | "yes" | "on")
+    )
+}
+
+/// The force-scalar flag: seeded once from `LB2_FORCE_SCALAR`, then
+/// adjustable in-process via [`force_scalar`] (tests and benches exercise
+/// both lanes without re-exec'ing under a different environment).
+fn force_flag() -> &'static AtomicBool {
+    static FLAG: OnceLock<AtomicBool> = OnceLock::new();
+    FLAG.get_or_init(|| {
+        AtomicBool::new(parse_force_scalar(std::env::var("LB2_FORCE_SCALAR").ok().as_deref()))
+    })
+}
+
+/// Pin (or unpin) the scalar lane for this process, overriding hardware
+/// detection. Takes effect on the next kernel call.
+pub fn force_scalar(on: bool) {
+    force_flag().store(on, Ordering::Relaxed);
+}
+
+/// True when the scalar lane is pinned (env var or [`force_scalar`]).
+pub fn scalar_forced() -> bool {
+    force_flag().load(Ordering::Relaxed)
+}
+
+/// True when kernel calls will take the AVX2 lane right now.
+#[inline]
+pub fn use_avx2() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        !scalar_forced() && std::arch::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// The lane the next kernel call will run on.
+pub fn active_lane() -> Lane {
+    if use_avx2() {
+        Lane::Avx2
+    } else {
+        Lane::Scalar
+    }
+}
+
+/// `y[i] += a * x[i]` — the dense matmul's saxpy inner loop. Element-wise
+/// (one mul + one add per element in both lanes), so the AVX2 path is
+/// bit-identical to scalar.
+#[inline]
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    #[cfg(target_arch = "x86_64")]
+    if x.len() >= 8 && use_avx2() {
+        unsafe { avx2::axpy(a, x, y) };
+        return;
+    }
+    axpy_scalar(a, x, y);
+}
+
+#[inline]
+pub(crate) fn axpy_scalar(a: f32, x: &[f32], y: &mut [f32]) {
+    for (o, b) in y.iter_mut().zip(x) {
+        *o += a * *b;
+    }
+}
+
+/// AVX2 sign-GEMV over one packed row: returns the lane-order sum the
+/// scalar `gemv_row_scalar` would produce, bit for bit. Caller guarantees
+/// [`use_avx2`] (only reachable on x86-64).
+#[cfg(target_arch = "x86_64")]
+#[inline]
+pub(crate) fn gemv_row_avx2(words: &[u64], x: &[f32], cols: usize) -> f32 {
+    unsafe { avx2::gemv_row(words, x, cols) }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+pub(crate) fn gemv_row_avx2(_words: &[u64], _x: &[f32], _cols: usize) -> f32 {
+    unreachable!("AVX2 lane dispatched on non-x86 target")
+}
+
+/// AVX2 sign-GEMM strip: the per-(row, 8-column-strip) sums the scalar
+/// strip kernel would produce for a **full** strip (`cw == 8`), bit for
+/// bit. Caller guarantees [`use_avx2`] and `c0 + 8 <= x.cols()`.
+#[cfg(target_arch = "x86_64")]
+#[inline]
+pub(crate) fn gemm_row_strip_avx2(words: &[u64], x: &Mat, cols: usize, c0: usize) -> [f32; 8] {
+    unsafe { avx2::gemm_row_strip(words, x, cols, c0) }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+pub(crate) fn gemm_row_strip_avx2(_words: &[u64], _x: &Mat, _cols: usize, _c0: usize) -> [f32; 8] {
+    unreachable!("AVX2 lane dispatched on non-x86 target")
+}
+
+/// AVX2 XNOR-popcount over two equal-length padded rows (lengths are
+/// 4-word multiples by the `BitMatrix` stride invariant). Integer-exact
+/// against the scalar `count_ones` loop.
+#[cfg(target_arch = "x86_64")]
+#[inline]
+pub(crate) fn xnor_row_popcount_avx2(a: &[u64], b: &[u64]) -> u32 {
+    unsafe { avx2::xnor_row_popcount(a, b) }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+pub(crate) fn xnor_row_popcount_avx2(_a: &[u64], _b: &[u64]) -> u32 {
+    unreachable!("AVX2 lane dispatched on non-x86 target")
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use crate::linalg::Mat;
+    use std::arch::x86_64::*;
+
+    /// # Safety
+    /// AVX2 must be available (dispatcher-checked); `x.len() == y.len()`.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+        let n = x.len();
+        let av = _mm256_set1_ps(a);
+        let mut i = 0;
+        while i + 8 <= n {
+            let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+            let yv = _mm256_loadu_ps(y.as_ptr().add(i));
+            // mul + add, NOT fma: the scalar oracle rounds twice.
+            _mm256_storeu_ps(y.as_mut_ptr().add(i), _mm256_add_ps(yv, _mm256_mul_ps(av, xv)));
+            i += 8;
+        }
+        while i < n {
+            *y.get_unchecked_mut(i) += a * *x.get_unchecked(i);
+            i += 1;
+        }
+    }
+
+    /// One packed sign row · `x`, `cols` logical columns (`x.len() ==
+    /// cols`). The eight scalar accumulators live as the eight lanes of
+    /// `accv`; strip order and the sequential lane-order reduction match
+    /// the scalar kernel exactly.
+    ///
+    /// # Safety
+    /// AVX2 available; `words` holds at least `⌈cols/64⌉` words.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn gemv_row(words: &[u64], x: &[f32], cols: usize) -> f32 {
+        debug_assert_eq!(x.len(), cols);
+        let full_words = cols / 64;
+        // Lane k selects bit k of the strip byte.
+        let bitsel = _mm256_setr_epi32(1, 2, 4, 8, 16, 32, 64, 128);
+        let signbit = _mm256_set1_epi32(i32::MIN);
+        let mut accv = _mm256_setzero_ps();
+        for c in 0..full_words {
+            let w = *words.get_unchecked(c);
+            let base = x.as_ptr().add(c * 64);
+            for strip in 0..8 {
+                let bits = _mm256_set1_epi32(((w >> (strip * 8)) & 0xff) as i32);
+                // Bit set ⇒ +1 ⇒ flip nothing; bit clear ⇒ xor the IEEE
+                // sign bit — identical to the scalar `(bit̄) << 31` mask.
+                let is_set = _mm256_cmpeq_epi32(_mm256_and_si256(bits, bitsel), bitsel);
+                let neg = _mm256_andnot_si256(is_set, signbit);
+                let xv = _mm256_loadu_ps(base.add(strip * 8));
+                let signed =
+                    _mm256_castsi256_ps(_mm256_xor_si256(_mm256_castps_si256(xv), neg));
+                accv = _mm256_add_ps(accv, signed);
+            }
+        }
+        let mut acc = [0.0f32; 8];
+        _mm256_storeu_ps(acc.as_mut_ptr(), accv);
+        // Ragged tail: verbatim scalar tail on the extracted lanes.
+        if cols % 64 != 0 {
+            let w = *words.get_unchecked(full_words);
+            for (k, &xv) in x[full_words * 64..].iter().enumerate() {
+                let neg = (((w >> k) & 1) as u32 ^ 1) << 31;
+                acc[k & 7] += f32::from_bits(xv.to_bits() ^ neg);
+            }
+        }
+        acc.iter().sum()
+    }
+
+    /// One packed sign row against a full 8-column batch strip of `x`
+    /// (feature-major `n × b`): returns the eight per-column sums. Scalar
+    /// `acc[k][t]` becomes `accv[k]` lane `t`, updated in identical
+    /// `(word, strip, k)` order; the tail and the k-sequential final
+    /// reduction run in scalar on the extracted lanes.
+    ///
+    /// # Safety
+    /// AVX2 available; `c0 + 8 <= x.cols()`; `words` holds at least
+    /// `⌈cols/64⌉` words; `x.rows() == cols`.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn gemm_row_strip(
+        words: &[u64],
+        x: &Mat,
+        cols: usize,
+        c0: usize,
+    ) -> [f32; 8] {
+        let full_words = cols / 64;
+        let mut accv = [_mm256_setzero_ps(); 8];
+        for c in 0..full_words {
+            let w = *words.get_unchecked(c);
+            for strip in 0..8 {
+                let bits = (w >> (strip * 8)) as u32;
+                for k in 0..8 {
+                    // One sign bit governs the whole batch strip: broadcast
+                    // the scalar's `(bit̄) << 31` mask across all 8 lanes.
+                    let neg = _mm256_set1_epi32(((((bits >> k) & 1) ^ 1) << 31) as i32);
+                    let xrow = x.row(c * 64 + strip * 8 + k);
+                    let xv = _mm256_loadu_ps(xrow.as_ptr().add(c0));
+                    let signed =
+                        _mm256_castsi256_ps(_mm256_xor_si256(_mm256_castps_si256(xv), neg));
+                    accv[k] = _mm256_add_ps(accv[k], signed);
+                }
+            }
+        }
+        let mut acc = [[0.0f32; 8]; 8];
+        for k in 0..8 {
+            _mm256_storeu_ps(acc[k].as_mut_ptr(), accv[k]);
+        }
+        if cols % 64 != 0 {
+            let w = *words.get_unchecked(full_words);
+            for (k, j) in (full_words * 64..cols).enumerate() {
+                let neg = (((w >> k) & 1) as u32 ^ 1) << 31;
+                let xrow = &x.row(j)[c0..c0 + 8];
+                let lane = &mut acc[k & 7];
+                for t in 0..8 {
+                    lane[t] += f32::from_bits(xrow[t].to_bits() ^ neg);
+                }
+            }
+        }
+        let mut out = [0.0f32; 8];
+        for (t, o) in out.iter_mut().enumerate() {
+            let mut sum = 0.0f32;
+            for lane in &acc {
+                sum += lane[t];
+            }
+            *o = sum;
+        }
+        out
+    }
+
+    /// popcount(a ⊕ b) over two equal-length rows via the vpshufb nibble
+    /// LUT + vpsadbw reduction. Integer arithmetic — exact regardless of
+    /// order. Rows are whole 4-word (32-byte) blocks by the stride
+    /// invariant, so no scalar tail exists.
+    ///
+    /// # Safety
+    /// AVX2 available; `a.len() == b.len()` and `len % 4 == 0`.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn xnor_row_popcount(a: &[u64], b: &[u64]) -> u32 {
+        debug_assert_eq!(a.len(), b.len());
+        debug_assert_eq!(a.len() % 4, 0);
+        #[rustfmt::skip]
+        let lut = _mm256_setr_epi8(
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+        );
+        let low = _mm256_set1_epi8(0x0f);
+        let zero = _mm256_setzero_si256();
+        let mut sums = _mm256_setzero_si256(); // four u64 partial counts
+        let mut i = 0;
+        while i < a.len() {
+            let va = _mm256_loadu_si256(a.as_ptr().add(i) as *const __m256i);
+            let vb = _mm256_loadu_si256(b.as_ptr().add(i) as *const __m256i);
+            let x = _mm256_xor_si256(va, vb);
+            let lo = _mm256_shuffle_epi8(lut, _mm256_and_si256(x, low));
+            let hi = _mm256_shuffle_epi8(lut, _mm256_and_si256(_mm256_srli_epi16::<4>(x), low));
+            let cnt = _mm256_add_epi8(lo, hi); // per-byte popcounts, ≤ 8
+            sums = _mm256_add_epi64(sums, _mm256_sad_epu8(cnt, zero));
+            i += 4;
+        }
+        let mut parts = [0u64; 4];
+        _mm256_storeu_si256(parts.as_mut_ptr() as *mut __m256i, sums);
+        (parts[0] + parts[1] + parts[2] + parts[3]) as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn env_values_parse() {
+        for on in ["1", "true", "yes", "on", " TRUE ", "On"] {
+            assert!(parse_force_scalar(Some(on)), "{on:?} should force scalar");
+        }
+        for off in ["0", "false", "no", "off", "", "2", "avx2"] {
+            assert!(!parse_force_scalar(Some(off)), "{off:?} should not force scalar");
+        }
+        assert!(!parse_force_scalar(None));
+    }
+
+    #[test]
+    fn force_scalar_toggle_pins_the_lane() {
+        let was = scalar_forced();
+        force_scalar(true);
+        assert_eq!(active_lane(), Lane::Scalar);
+        assert!(!use_avx2());
+        force_scalar(was);
+    }
+
+    #[test]
+    fn lane_names_are_stable() {
+        assert_eq!(Lane::Scalar.name(), "scalar");
+        assert_eq!(Lane::Avx2.name(), "avx2");
+    }
+
+    #[test]
+    fn axpy_lanes_are_bit_identical() {
+        use crate::rng::Pcg64;
+        let mut rng = Pcg64::seed(40);
+        for n in [1usize, 7, 8, 9, 64, 65] {
+            let mut x = vec![0.0f32; n];
+            let mut y0 = vec![0.0f32; n];
+            rng.fill_normal(&mut x);
+            rng.fill_normal(&mut y0);
+            let a = rng.normal_f32();
+            let mut y1 = y0.clone();
+            axpy_scalar(a, &x, &mut y0);
+            axpy(a, &x, &mut y1); // whichever lane is active
+            for (p, q) in y0.iter().zip(&y1) {
+                assert_eq!(p.to_bits(), q.to_bits(), "n={n}");
+            }
+        }
+    }
+
+    /// The wider lane-vs-oracle suites live with the kernels; this checks
+    /// the AVX2 axpy directly whenever the machine has it.
+    #[test]
+    #[cfg(target_arch = "x86_64")]
+    fn axpy_avx2_matches_scalar_when_available() {
+        if !std::arch::is_x86_feature_detected!("avx2") {
+            return;
+        }
+        use crate::rng::Pcg64;
+        let mut rng = Pcg64::seed(41);
+        let mut x = vec![0.0f32; 100];
+        let mut ys = vec![0.0f32; 100];
+        rng.fill_normal(&mut x);
+        rng.fill_normal(&mut ys);
+        let mut ya = ys.clone();
+        axpy_scalar(1.75, &x, &mut ys);
+        unsafe { avx2::axpy(1.75, &x, &mut ya) };
+        for (p, q) in ys.iter().zip(&ya) {
+            assert_eq!(p.to_bits(), q.to_bits());
+        }
+    }
+}

@@ -296,7 +296,7 @@ mod tests {
         );
         let q = onebit(&w, 30);
         // Naive: sign(W) * global mean |W|.
-        let mean = crate::linalg::norm1(w.as_slice()) as f32 / (64.0 * 64.0);
+        let mean = w.l1_norm() as f32 / (64.0 * 64.0);
         let naive = w.signum().scale(mean);
         assert!(q.reconstruction.fro_dist2(&w) < naive.fro_dist2(&w));
     }

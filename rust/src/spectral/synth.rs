@@ -52,8 +52,10 @@ pub fn coherent_basis(n: usize, r: usize, coherence: f64, rng: &mut Pcg64) -> Ma
         rng.shuffle(&mut axes);
         let spike = (coherence * (n as f64).sqrt()) as f32 * 3.0;
         let damp = (1.0 - coherence) as f32;
-        for v in g.as_mut_slice() {
-            *v *= damp;
+        for i in 0..g.rows() {
+            for v in g.row_mut(i) {
+                *v *= damp;
+            }
         }
         for j in 0..r {
             let i = axes[j];
@@ -79,9 +81,8 @@ pub fn synth_weight(spec: &SynthSpec, rng: &mut Pcg64) -> Mat {
 
 /// Coordinate incoherence μ(U) = √d · max|U_ij| (Definition 4.3).
 pub fn coordinate_incoherence(u: &Mat) -> f64 {
-    let max = u
-        .as_slice()
-        .iter()
+    let max = (0..u.rows())
+        .flat_map(|i| u.row(i))
         .fold(0.0f32, |m, &x| m.max(x.abs()));
     (u.rows() as f64).sqrt() * max as f64
 }

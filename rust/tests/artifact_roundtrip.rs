@@ -47,7 +47,7 @@ fn roundtrip_is_bit_exact() {
     let mut rng = Pcg64::seed(12);
     let b = 5;
     let mut x = Mat::zeros(70, b);
-    rng.fill_normal(x.as_mut_slice());
+    x.fill_normal(&mut rng);
     let want = stack.forward_batch(&x);
     let got = loaded.forward_batch(&x);
     for t in 0..b {

@@ -161,8 +161,8 @@ fn layers_are_independent_of_preceding_layers() {
     let tail = collect(tail);
     // full[1] and tail[0] are the same job — identical packed bits.
     for (a, b) in full[1].paths().iter().zip(tail[0].paths()) {
-        assert_eq!(a.ub_bits().words(), b.ub_bits().words());
-        assert_eq!(a.vbt_bits().words(), b.vbt_bits().words());
+        assert_eq!(a.ub_bits().padded_words(), b.ub_bits().padded_words());
+        assert_eq!(a.vbt_bits().padded_words(), b.vbt_bits().padded_words());
         assert_eq!(a.h(), b.h());
         assert_eq!(a.l(), b.l());
         assert_eq!(a.g(), b.g());

@@ -259,7 +259,7 @@ fn zoo_ffn_stack_batched_forward() {
 
     let b = 6;
     let mut x = littlebit2::linalg::Mat::zeros(stack.d_in(), b);
-    rng.fill_normal(x.as_mut_slice());
+    x.fill_normal(&mut rng);
     let batched = stack.forward_batch_mt(&x, 2);
     assert_eq!(batched.shape(), (128, b));
     for t in 0..b {

@@ -68,7 +68,7 @@ fn every_method_roundtrips_bit_exactly() {
         let mut rng = Pcg64::seed(12);
         let b = 5;
         let mut x = Mat::zeros(44, b);
-        rng.fill_normal(x.as_mut_slice());
+        x.fill_normal(&mut rng);
         let want = stack.forward_batch(&x);
         let got = loaded.forward_batch(&x);
         for t in 0..b {
@@ -167,7 +167,7 @@ fn mixed_method_chain_roundtrips() {
     let loaded = MethodStack::from_artifact_bytes(&stack.to_artifact_bytes().unwrap()).unwrap();
     assert_eq!(loaded, stack);
     let mut x = Mat::zeros(44, 3);
-    rng.fill_normal(x.as_mut_slice());
+    x.fill_normal(&mut rng);
     assert_eq!(loaded.forward_batch(&x), stack.forward_batch(&x));
     // Methods survive per layer, in order.
     let methods: Vec<&str> = loaded.layers().iter().map(|l| l.method.as_str()).collect();
@@ -205,7 +205,7 @@ fn v1_artifact_loads_as_packed_stack_bit_exactly() {
     assert_eq!(via_packed, packed, "v1 decode must reproduce the packed representation");
 
     let mut x = Mat::zeros(70, 4);
-    rng.fill_normal(x.as_mut_slice());
+    x.fill_normal(&mut rng);
     let want = packed.forward_batch(&x);
     assert_eq!(via_method.forward_batch(&x), want);
     assert_eq!(via_packed.forward_batch(&x), want);

@@ -21,8 +21,10 @@ const THREADS: [usize; 4] = [1, 2, 7, 64];
 
 fn assert_mats_bit_equal(a: &Mat, b: &Mat, what: &str) {
     assert_eq!(a.shape(), b.shape(), "{what}: shape");
-    for (x, y) in a.as_slice().iter().zip(b.as_slice()) {
-        assert_eq!(x.to_bits(), y.to_bits(), "{what}: {x} vs {y}");
+    for i in 0..a.rows() {
+        for (x, y) in a.row(i).iter().zip(b.row(i)) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: row {i}: {x} vs {y}");
+        }
     }
 }
 

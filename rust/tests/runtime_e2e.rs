@@ -68,9 +68,9 @@ fn littlebit_layer_artifact_matches_rust_packed_forward() {
 
     let exe = rt.load_checked("littlebit_layer").expect("compile");
     let inputs = vec![
-        lit::array_f32(x.as_slice(), &[b, d_in]).unwrap(),
-        lit::array_f32(ub.as_slice(), &[d_out, r]).unwrap(),
-        lit::array_f32(vb.as_slice(), &[d_in, r]).unwrap(),
+        lit::array_f32(&x.to_vec(), &[b, d_in]).unwrap(),
+        lit::array_f32(&ub.to_vec(), &[d_out, r]).unwrap(),
+        lit::array_f32(&vb.to_vec(), &[d_in, r]).unwrap(),
         lit::array_f32(&h, &[d_out]).unwrap(),
         lit::array_f32(&l, &[r]).unwrap(),
         lit::array_f32(&g, &[d_in]).unwrap(),

@@ -1,0 +1,198 @@
+//! SIMD-lane bit-exactness and padded-layout invariants — the acceptance
+//! contract of the aligned-layout + runtime-dispatch PR.
+//!
+//! Every sign kernel dispatches between the scalar oracle (the pre-SIMD
+//! body, kept verbatim) and the AVX2 lane at runtime. The AVX2 lanes map
+//! the scalar accumulators onto vector lanes without reassociating any
+//! reduction, so the two lanes must agree **bit-for-bit** — not within a
+//! tolerance — on every shape, including the ragged ones (cols % 64 ∈
+//! {0, 1, 63}, rows not a multiple of the 64-row cache tile, batch widths
+//! straddling the 8-column strip).
+//!
+//! On a machine without AVX2 the dispatch resolves to scalar on both sides
+//! and the comparisons hold trivially; the CI matrix also runs the whole
+//! suite under `LB2_FORCE_SCALAR=1` so the scalar lane stays exercised on
+//! AVX2 runners too.
+//!
+//! The lane pin (`force_scalar`) is process-global, so every test that
+//! toggles it serializes on one mutex and restores the prior pin before
+//! returning.
+
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use littlebit2::linalg::Mat;
+use littlebit2::packing::{
+    force_scalar, gemm_sign, gemm_sign_scaled, gemv_sign, gemv_sign_scaled, scalar_forced,
+    xnor_popcount_gemm, BitMatrix,
+};
+use littlebit2::rng::Pcg64;
+
+/// Serialize lane-pin manipulation across the test binary's threads.
+fn lane_lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    // A test that panicked while holding the lock already failed; the pin
+    // state it leaves behind is restored by `with_lane`'s caller pattern,
+    // so a poisoned lock is safe to re-enter.
+    match LOCK.get_or_init(|| Mutex::new(())).lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Run `f` with the scalar pin set to `scalar`, restoring the prior pin.
+fn with_lane<R>(scalar: bool, f: impl FnOnce() -> R) -> R {
+    let pinned = scalar_forced();
+    force_scalar(scalar);
+    let out = f();
+    force_scalar(pinned);
+    out
+}
+
+fn assert_bits_equal(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: element {i}: {x} vs {y}");
+    }
+}
+
+fn assert_mats_bit_equal(a: &Mat, b: &Mat, what: &str) {
+    assert_eq!(a.shape(), b.shape(), "{what}: shape");
+    for i in 0..a.rows() {
+        assert_bits_equal(a.row(i), b.row(i), &format!("{what}: row {i}"));
+    }
+}
+
+/// Ragged shapes exercising every tail path: cols % 64 ∈ {0, 1, 63} (full
+/// words only, 1-bit tail, 63-bit tail) and rows off the 64-row cache tile.
+const SHAPES: [(usize, usize); 6] =
+    [(1, 63), (7, 64), (65, 65), (66, 127), (130, 128), (67, 191)];
+
+#[test]
+fn gemv_sign_lanes_bit_identical_on_ragged_shapes() {
+    let _guard = lane_lock();
+    let mut rng = Pcg64::seed(801);
+    for (rows, cols) in SHAPES {
+        let s = BitMatrix::from_dense(&Mat::gaussian(rows, cols, &mut rng).signum());
+        let mut x = vec![0.0f32; cols];
+        rng.fill_normal(&mut x);
+        let mut y_scalar = vec![0.0f32; rows];
+        let mut y_auto = vec![0.0f32; rows];
+        with_lane(true, || gemv_sign(&s, &x, &mut y_scalar));
+        with_lane(false, || gemv_sign(&s, &x, &mut y_auto));
+        assert_bits_equal(&y_scalar, &y_auto, &format!("gemv_sign {rows}x{cols}"));
+    }
+}
+
+#[test]
+fn gemv_sign_scaled_lanes_bit_identical() {
+    let _guard = lane_lock();
+    let mut rng = Pcg64::seed(802);
+    for (rows, cols) in SHAPES {
+        let s = BitMatrix::from_dense(&Mat::gaussian(rows, cols, &mut rng).signum());
+        let mut x = vec![0.0f32; cols];
+        rng.fill_normal(&mut x);
+        let mut g = vec![0.0f32; cols];
+        let mut h = vec![0.0f32; rows];
+        rng.fill_uniform(&mut g, 0.5, 1.5);
+        rng.fill_uniform(&mut h, 0.5, 1.5);
+        let mut y_scalar = vec![0.0f32; rows];
+        let mut y_auto = vec![0.0f32; rows];
+        with_lane(true, || gemv_sign_scaled(&s, Some(&g), &x, Some(&h), &mut y_scalar));
+        with_lane(false, || gemv_sign_scaled(&s, Some(&g), &x, Some(&h), &mut y_auto));
+        assert_bits_equal(&y_scalar, &y_auto, &format!("gemv_sign_scaled {rows}x{cols}"));
+    }
+}
+
+/// Batch widths straddling the 8-column strip (1, partial, exact, strip+1,
+/// multi-strip ragged) on a rows-off-tile shape.
+#[test]
+fn gemm_sign_lanes_bit_identical_across_batch_widths() {
+    let _guard = lane_lock();
+    let mut rng = Pcg64::seed(803);
+    let (rows, cols) = (130, 191);
+    let s = BitMatrix::from_dense(&Mat::gaussian(rows, cols, &mut rng).signum());
+    for b in [1usize, 7, 8, 9, 17, 32] {
+        let x = Mat::gaussian(cols, b, &mut rng);
+        let mut y_scalar = Mat::zeros(rows, b);
+        let mut y_auto = Mat::zeros(rows, b);
+        with_lane(true, || gemm_sign(&s, &x, &mut y_scalar));
+        with_lane(false, || gemm_sign(&s, &x, &mut y_auto));
+        assert_mats_bit_equal(&y_scalar, &y_auto, &format!("gemm_sign b={b}"));
+        assert!(y_auto.padding_is_clear(), "gemm output stride padding stayed clear");
+    }
+}
+
+#[test]
+fn gemm_sign_scaled_lanes_bit_identical() {
+    let _guard = lane_lock();
+    let mut rng = Pcg64::seed(804);
+    let (rows, cols, b) = (67, 127, 9);
+    let s = BitMatrix::from_dense(&Mat::gaussian(rows, cols, &mut rng).signum());
+    let x = Mat::gaussian(cols, b, &mut rng);
+    let mut g = vec![0.0f32; cols];
+    let mut h = vec![0.0f32; rows];
+    rng.fill_uniform(&mut g, 0.5, 1.5);
+    rng.fill_uniform(&mut h, 0.5, 1.5);
+    let mut y_scalar = Mat::zeros(rows, b);
+    let mut y_auto = Mat::zeros(rows, b);
+    with_lane(true, || gemm_sign_scaled(&s, Some(&g), &x, Some(&h), &mut y_scalar));
+    with_lane(false, || gemm_sign_scaled(&s, Some(&g), &x, Some(&h), &mut y_auto));
+    assert_mats_bit_equal(&y_scalar, &y_auto, "gemm_sign_scaled");
+}
+
+#[test]
+fn xnor_popcount_lanes_identical() {
+    let _guard = lane_lock();
+    let mut rng = Pcg64::seed(805);
+    for (rows, cols) in [(5, 63), (33, 64), (66, 129), (17, 191)] {
+        let a = BitMatrix::from_dense(&Mat::gaussian(rows, cols, &mut rng).signum());
+        let bt = BitMatrix::from_dense(&Mat::gaussian(rows, cols, &mut rng).signum());
+        let scalar = with_lane(true, || xnor_popcount_gemm(&a, &bt));
+        let auto = with_lane(false, || xnor_popcount_gemm(&a, &bt));
+        assert_mats_bit_equal(&scalar, &auto, &format!("xnor {rows}x{cols}"));
+    }
+}
+
+/// The padded-layout invariants the kernels lean on: 4-word (32-byte) row
+/// stride, padding words always zero through every construction path, and
+/// a tight on-disk word stream unchanged from the pre-padding format.
+#[test]
+fn bitmatrix_padded_stride_invariants() {
+    let mut rng = Pcg64::seed(806);
+    for (rows, cols) in SHAPES {
+        let s = BitMatrix::from_dense(&Mat::gaussian(rows, cols, &mut rng).signum());
+        let tight = cols.div_ceil(64);
+        assert_eq!(s.tight_words_per_row(), tight, "tight stride {rows}x{cols}");
+        assert_eq!(s.words_per_row() % 4, 0, "padded stride 32-byte multiple");
+        assert!(s.words_per_row() >= tight);
+        assert!(s.padding_is_clear(), "from_dense padding {rows}x{cols}");
+        assert_eq!(s.padded_words().as_ptr() as usize % 32, 0, "32-byte base alignment");
+        // Disk form is the tight ⌈cols/64⌉ layout, byte-identical to the
+        // pre-padding format.
+        assert_eq!(s.storage_bytes(), rows * tight * 8, "storage reports tight bytes");
+        let words: Vec<u64> = s.tight_words().collect();
+        assert_eq!(words.len(), rows * tight);
+        let back = BitMatrix::from_words(rows, cols, words).expect("re-stride tight words");
+        assert!(back.padding_is_clear(), "from_words padding {rows}x{cols}");
+        assert_eq!(s.padded_words(), back.padded_words(), "tight roundtrip {rows}x{cols}");
+
+        let t = s.transpose();
+        assert!(t.padding_is_clear(), "transpose padding {rows}x{cols}");
+        assert_mats_bit_equal(&t.to_dense(), &s.to_dense().transpose(), "transpose dense");
+    }
+}
+
+#[test]
+fn mat_padded_stride_invariants() {
+    let mut rng = Pcg64::seed(807);
+    for (rows, cols) in [(1usize, 1usize), (3, 7), (9, 8), (65, 130)] {
+        let m = Mat::gaussian(rows, cols, &mut rng);
+        assert_eq!(m.stride() % 8, 0, "row stride 32-byte multiple");
+        assert!(m.stride() >= cols);
+        assert!(m.padding_is_clear(), "gaussian padding {rows}x{cols}");
+        assert_eq!(m.padded().as_ptr() as usize % 32, 0, "32-byte base alignment");
+        assert_eq!(m.to_vec().len(), rows * cols, "to_vec is tight");
+        let p = m.matmul(&Mat::gaussian(cols, 5, &mut rng));
+        assert!(p.padding_is_clear(), "matmul output padding");
+    }
+}
