@@ -4,7 +4,7 @@
 # PJRT-gated paths (`--features xla`): the train CLI, examples/e2e_qat,
 # tests/runtime_e2e.
 
-.PHONY: build test test-scalar bench bench-build bench-gemm bench-compress clippy artifacts doc roundtrip eval serve-smoke chaos
+.PHONY: build test test-scalar bench bench-build bench-gemm bench-compress bench-load clippy artifacts doc roundtrip eval serve-smoke chaos
 
 build:
 	cargo build --release
@@ -34,6 +34,11 @@ roundtrip: build
 	# method (OneBit) must survive the same compress→save→load→serve loop.
 	cargo run --release -- compress --method onebit --size 48 --layers 2 --out target/roundtrip_onebit.lb2
 	cargo run --release -- serve --model target/roundtrip_onebit.lb2 --workers 2 --batch 8 --requests 32
+	# Third pass, zero-copy: the v3 aligned encoding served through the
+	# mmap loader (both CI lanes run this, so the borrowed planes feed the
+	# scalar oracle and the AVX2 kernels alike).
+	cargo run --release -- compress --size 48 --layers 2 --bpp 1.0 --aligned 1 --out target/roundtrip_v3.lb2
+	cargo run --release -- serve --model target/roundtrip_v3.lb2 --mmap 1 --workers 2 --batch 8 --requests 32
 
 # Loopback TCP smoke: compress a tiny model, `serve --listen` it in the
 # background, then drive 64 pipelined requests over 4 connections with
@@ -89,6 +94,12 @@ bench-gemm:
 # #Compression-throughput).
 bench-compress:
 	cargo bench --bench compress_speedup
+
+# Eager vs mmap load latency (cold/warm load, RSS delta,
+# time-to-first-response); refreshes BENCH_load.json at the repo root
+# (EXPERIMENTS.md #Load-latency).
+bench-load:
+	cargo bench --bench load_latency
 
 clippy:
 	cargo clippy --all-targets -- -D warnings

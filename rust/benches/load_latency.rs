@@ -1,0 +1,186 @@
+//! Zero-copy load latency: eager `.lb2` read vs mmap-backed serving.
+//!
+//! The tentpole claim of the v3 aligned format is that serving startup
+//! stops paying a weight copy: `load_mmap` on an aligned artifact maps the
+//! file and borrows every bit-plane and scale vector straight from the
+//! page cache, so load time is O(sections) instead of O(bytes) and the
+//! process's own heap stays near-empty. This bench measures, per load
+//! mode:
+//!
+//! * `cold_ms` — the first load in the process. The artifact was just
+//!   written, so the page cache is warm; a true cold-cache number needs
+//!   `echo 3 > /proc/sys/vm/drop_caches` between runs, which a bench
+//!   binary must not do itself.
+//! * `warm_ms` (mean ± sd) — repeated loads, page cache hot.
+//! * `rss_delta_kb` — RSS growth across the load, **before** any forward
+//!   touches the mapping (mapped pages only enter RSS when faulted in).
+//! * `ttfr_ms` — time-to-first-response: load + one single-request
+//!   forward, the "process start to first token" proxy.
+//! * `resident_bytes` / `mapped_bytes` — the stack's own accounting,
+//!   disjoint by construction.
+//!
+//! Modes: `eager_v2` (the pre-mmap baseline), `mmap_v3` (the zero-copy
+//! path), `mmap_v2_fallback` (the mmap entry point on a v2 file, which
+//! must copy-and-restride — same bits, no borrowing). Results land in
+//! `BENCH_load.json` at the repository root.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::time_ms;
+use littlebit2::linalg::Mat;
+use littlebit2::littlebit::{CompressionConfig, InitStrategy};
+use littlebit2::model::{MethodStack, PackedStack};
+use littlebit2::rng::Pcg64;
+use littlebit2::spectral::{synth_weight, SynthSpec};
+
+struct Row {
+    mode: &'static str,
+    cold_ms: f64,
+    warm_ms: f64,
+    warm_sd: f64,
+    rss_delta_kb: i64,
+    ttfr_ms: f64,
+    resident_bytes: usize,
+    mapped_bytes: usize,
+}
+
+/// Current RSS in KiB from /proc/self/status (0 where unavailable).
+fn rss_kb() -> i64 {
+    let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
+        return 0;
+    };
+    status
+        .lines()
+        .find_map(|l| l.strip_prefix("VmRSS:"))
+        .and_then(|l| l.trim().trim_end_matches("kB").trim().parse().ok())
+        .unwrap_or(0)
+}
+
+fn measure(
+    mode: &'static str,
+    load: impl Fn() -> MethodStack,
+    d_in: usize,
+    reps: usize,
+) -> Row {
+    // Cold-ish: first load in this mode (page cache warm from the write).
+    let t0 = std::time::Instant::now();
+    let first = load();
+    let cold_ms = t0.elapsed().as_secs_f64() * 1e3;
+    drop(first);
+
+    // RSS delta across a load, holding the result, before any forward.
+    let rss_before = rss_kb();
+    let held = load();
+    let rss_delta_kb = rss_kb() - rss_before;
+    let resident_bytes = held.resident_bytes();
+    let mapped_bytes = held.mapped_bytes();
+    drop(held);
+
+    let (warm_ms, warm_sd) = time_ms(reps, || {
+        std::hint::black_box(load());
+    });
+
+    // Time-to-first-response: load + one single-request forward.
+    let mut rng = Pcg64::seed(77);
+    let mut x = vec![0.0f32; d_in];
+    rng.fill_normal(&mut x);
+    let t0 = std::time::Instant::now();
+    let stack = load();
+    std::hint::black_box(stack.forward(&x));
+    let ttfr_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    println!(
+        "ROW: {mode} {cold_ms:.3} {warm_ms:.3} {warm_sd:.3} {rss_delta_kb} {ttfr_ms:.3} {resident_bytes} {mapped_bytes}"
+    );
+    Row { mode, cold_ms, warm_ms, warm_sd, rss_delta_kb, ttfr_ms, resident_bytes, mapped_bytes }
+}
+
+fn main() {
+    let (size, depth) = if common::full_scale() { (1024, 8) } else { (384, 4) };
+    let reps = if common::full_scale() { 5 } else { 10 };
+    println!("# zero-copy load latency: {depth} layers of {size}x{size}, reps={reps}");
+
+    let mut rng = Pcg64::seed(70);
+    let dims = vec![size; depth + 1];
+    let weights: Vec<Mat> = dims
+        .windows(2)
+        .map(|w| {
+            let spec =
+                SynthSpec { rows: w[1], cols: w[0], gamma: 0.3, coherence: 0.6, scale: 1.0 };
+            synth_weight(&spec, &mut rng)
+        })
+        .collect();
+    // Load latency is independent of compression quality — use the cheap
+    // init so the bench spends its time on the thing it measures.
+    let cfg = CompressionConfig {
+        bpp: 1.0,
+        strategy: InitStrategy::Standard,
+        residual: true,
+        ..Default::default()
+    };
+    let stack = MethodStack::from(PackedStack::compress_chain(&weights, &cfg, &mut rng));
+
+    let dir = std::env::temp_dir();
+    let p2 = dir.join(format!("lb2_bench_load_v2_{}.lb2", std::process::id()));
+    let p3 = dir.join(format!("lb2_bench_load_v3_{}.lb2", std::process::id()));
+    stack.save(&p2).expect("save v2");
+    stack.save_aligned(&p3).expect("save v3 aligned");
+    let v2_bytes = std::fs::metadata(&p2).map(|m| m.len()).unwrap_or(0);
+    let v3_bytes = std::fs::metadata(&p3).map(|m| m.len()).unwrap_or(0);
+    println!("# artifact bytes: v2 {v2_bytes}, v3 aligned {v3_bytes} (alignment padding {:+})",
+        v3_bytes as i64 - v2_bytes as i64);
+    println!("ROW: mode cold_ms warm_ms warm_sd rss_delta_kb ttfr_ms resident_bytes mapped_bytes");
+
+    let d_in = stack.d_in();
+    let rows = [
+        measure("eager_v2", || MethodStack::load(&p2).expect("eager v2"), d_in, reps),
+        measure("mmap_v3", || MethodStack::load_mmap(&p3).expect("mmap v3"), d_in, reps),
+        measure(
+            "mmap_v2_fallback",
+            || MethodStack::load_mmap(&p2).expect("mmap v2 fallback"),
+            d_in,
+            reps,
+        ),
+    ];
+    let _ = std::fs::remove_file(&p2);
+    let _ = std::fs::remove_file(&p3);
+
+    let json_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_load.json");
+    match std::fs::write(json_path, render_json(size, depth, v2_bytes, v3_bytes, &rows)) {
+        Ok(()) => println!("# wrote {json_path}"),
+        Err(e) => eprintln!("# could not write {json_path}: {e}"),
+    }
+}
+
+fn render_json(size: usize, depth: usize, v2_bytes: u64, v3_bytes: u64, rows: &[Row]) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"bench\": \"load_latency\",\n");
+    s.push_str("  \"status\": \"ok\",\n");
+    s.push_str(&format!(
+        "  \"generated_by\": \"littlebit2 {} benches/load_latency.rs\",\n",
+        littlebit2::VERSION
+    ));
+    s.push_str(&format!(
+        "  \"config\": {{\"size\": {size}, \"depth\": {depth}, \"v2_artifact_bytes\": {v2_bytes}, \"v3_artifact_bytes\": {v3_bytes}}},\n"
+    ));
+    s.push_str("  \"note\": \"cold_ms is the first in-process load; the page cache is warm from writing the artifact. Drop caches externally for true cold numbers.\",\n");
+    s.push_str("  \"modes\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"mode\": \"{}\", \"cold_ms\": {:.4}, \"warm_ms\": {:.4}, \"warm_sd_ms\": {:.4}, \"rss_delta_kb\": {}, \"ttfr_ms\": {:.4}, \"resident_bytes\": {}, \"mapped_bytes\": {}}}{}\n",
+            r.mode,
+            r.cold_ms,
+            r.warm_ms,
+            r.warm_sd,
+            r.rss_delta_kb,
+            r.ttfr_ms,
+            r.resident_bytes,
+            r.mapped_bytes,
+            if i + 1 < rows.len() { "," } else { "" },
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}

@@ -73,11 +73,41 @@
 //! forwards, and [`write_stack_v1`] keeps the v1 encoding producible for
 //! back-compat fixtures.
 //!
+//! ## Format v3: the "aligned" encoding (`compress --aligned`)
+//!
+//! v3 carries the **same sections in the same order** as v2 and decodes to
+//! the same stack; what changes is only *where bytes sit* so that a
+//! memory-mapped file region can be handed to the kernels as-is:
+//!
+//! * Bit-planes inside LAYR/SGNS payloads are stored at the **padded
+//!   in-memory row stride** (`BitMatrix::padded_stride(cols)` u64 words
+//!   per row, pad words zero) instead of the tight `⌈cols/64⌉` stride, so
+//!   a plane's file bytes are byte-for-byte the kernel operand.
+//! * Inside a v3 LAYR/SGNS payload, each bit-plane is preceded by zero
+//!   bytes padding its offset (relative to the payload start) to a
+//!   multiple of 32. Padded-stride planes are themselves a multiple of
+//!   32 bytes, so consecutive planes stay aligned.
+//! * Before each LAYR/SGNS section the writer emits a `PADD` section
+//!   (zero bytes, length 0–31) whenever needed so that the *next*
+//!   section's payload starts at a file offset that is a multiple of 32.
+//!   Since `mmap` bases are page-aligned, a 32-aligned file offset is a
+//!   32-aligned address. Readers skip `PADD` sections wherever they
+//!   appear, in every version.
+//! * DNSE/LOWR payloads are unchanged (they decode into owned matrices
+//!   regardless), as are META/STAK/METH.
+//!
+//! An eager load of a v3 artifact copies the padded planes verbatim; an
+//! mmap load ([`load_method_stack_mmap`]) borrows planes and scale vectors
+//! straight out of the mapping (falling back to copy-and-restride for
+//! v1/v2 or any payload that lands misaligned), so all serving workers —
+//! and all serving *processes* — share one page-cache copy of the weights.
+//!
 //! Bit-planes are stored as the kernel-native packed `u64` words, so
 //! loading is a straight copy — no re-packing, no float round-trips — and
 //! a loaded stack's `forward_batch` is **bit-identical** to the stack that
 //! was saved (asserted by `tests/artifact_roundtrip.rs` and
-//! `tests/method_stack.rs`, the latter per method).
+//! `tests/method_stack.rs`, the latter per method; `tests/mmap_load.rs`
+//! extends the contract across v3 and the borrowed load path).
 
 mod reader;
 mod stack;
@@ -85,8 +115,10 @@ mod writer;
 
 pub use reader::ArtifactReader;
 pub use stack::{
-    load_method_stack, load_stack, read_method_stack, read_stack, save_method_stack,
-    save_stack, write_method_stack, write_stack, write_stack_v1, StackStreamWriter,
+    load_method_stack, load_method_stack_mmap, load_stack, load_stack_mmap, read_method_stack,
+    read_method_stack_mapped, read_stack, save_method_stack, save_method_stack_aligned,
+    save_stack, save_stack_aligned, write_method_stack, write_method_stack_aligned, write_stack,
+    write_stack_v1, StackStreamWriter,
 };
 pub use writer::ArtifactWriter;
 
@@ -97,6 +129,12 @@ pub const MAGIC: [u8; 4] = [0x89, b'L', b'B', b'2'];
 /// Container format version written by this build (v2: method-generic
 /// stacks — a METHOD tag plus a per-variant payload section per layer).
 pub const FORMAT_VERSION: u32 = 2;
+
+/// The "aligned" encoding (`compress --aligned`): v2's sections with
+/// bit-planes at the padded in-memory stride and every plane/payload
+/// 32-byte aligned in the file, so an mmap of the artifact is directly
+/// servable. See the module docs for the exact padding rules.
+pub const FORMAT_VERSION_V3: u32 = 3;
 
 /// The PR 3/4 era format: packed tri-scale layers only, no METHOD tags.
 /// Still fully readable (a v1 artifact loads as an all-`Packed`
@@ -120,6 +158,10 @@ pub const TAG_SIGN: [u8; 4] = *b"SGNS";
 pub const TAG_DENSE: [u8; 4] = *b"DNSE";
 /// v2 payload: FP16-rounded low-rank factors (`U`, `Vᵀ`).
 pub const TAG_LOWRANK: [u8; 4] = *b"LOWR";
+/// v3 alignment filler: a zero-byte payload (length 0–31) emitted so the
+/// next section's payload starts at a 32-byte-aligned file offset.
+/// Carries no data; readers of every version skip it wherever it appears.
+pub const TAG_PAD: [u8; 4] = *b"PADD";
 /// Trailer: section count + CRC32. Always last; nothing may follow it.
 pub const TAG_END: [u8; 4] = *b"END\0";
 

@@ -1,6 +1,9 @@
 //! Validating `.lb2` section reader.
 
-use super::{crc_finish, crc_update, CRC_INIT, FORMAT_VERSION, FORMAT_VERSION_V1, MAGIC, TAG_END};
+use super::{
+    crc_finish, crc_update, CRC_INIT, FORMAT_VERSION, FORMAT_VERSION_V1, FORMAT_VERSION_V3, MAGIC,
+    TAG_END,
+};
 use anyhow::{bail, Result};
 use std::ops::Range;
 
@@ -30,9 +33,10 @@ impl<'a> ArtifactReader<'a> {
             bail!("bad magic {:02x?} (not a .lb2 artifact)", &buf[..4]);
         }
         let version = u32::from_le_bytes(buf[4..8].try_into().expect("4 bytes"));
-        if version != FORMAT_VERSION && version != FORMAT_VERSION_V1 {
+        if version != FORMAT_VERSION && version != FORMAT_VERSION_V1 && version != FORMAT_VERSION_V3
+        {
             bail!(
-                "unsupported .lb2 format version {version} (this build reads {FORMAT_VERSION_V1}-{FORMAT_VERSION})"
+                "unsupported .lb2 format version {version} (this build reads {FORMAT_VERSION_V1}-{FORMAT_VERSION_V3})"
             );
         }
 
@@ -83,8 +87,8 @@ impl<'a> ArtifactReader<'a> {
         Ok(Self { buf, version, sections, next: 0 })
     }
 
-    /// The container's declared format version (1 or 2) — payload decoders
-    /// dispatch on this.
+    /// The container's declared format version (1, 2, or 3) — payload
+    /// decoders dispatch on this.
     pub fn version(&self) -> u32 {
         self.version
     }
@@ -99,6 +103,16 @@ impl<'a> ArtifactReader<'a> {
         let (tag, range) = self.sections.get(self.next)?;
         self.next += 1;
         Some((*tag, &self.buf[range.clone()]))
+    }
+
+    /// Like [`next_section`](Self::next_section), but also yields the
+    /// payload's **absolute byte range** in the container — the mmap load
+    /// path builds borrowed views from these offsets (file offset ≡
+    /// mapping offset, since the reader sees the whole mapped file).
+    pub fn next_section_range(&mut self) -> Option<([u8; 4], &'a [u8], Range<usize>)> {
+        let (tag, range) = self.sections.get(self.next)?;
+        self.next += 1;
+        Some((*tag, &self.buf[range.clone()], range.clone()))
     }
 }
 

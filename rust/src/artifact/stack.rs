@@ -18,7 +18,7 @@
 
 use super::{
     ArtifactReader, ArtifactWriter, TAG_DENSE, TAG_LAYER, TAG_LOWRANK, TAG_META, TAG_METHOD,
-    TAG_SIGN, TAG_STACK,
+    TAG_PAD, TAG_SIGN, TAG_STACK,
 };
 use crate::linalg::Mat;
 use crate::model::{
@@ -26,9 +26,12 @@ use crate::model::{
     SignScaledLayer,
 };
 use crate::packing::{BitMatrix, PackedResidual, TriScaleLayer};
+use crate::sys::{MappedArtifact, MappedF32s, MappedWords, ScaleVec};
 use anyhow::{bail, Context, Result};
 use std::io::Write;
+use std::ops::Range;
 use std::path::Path;
+use std::sync::Arc;
 
 /// Per-layer METHOD variant codes (the first byte of a METH section).
 const VARIANT_PACKED: u8 = 1;
@@ -95,6 +98,77 @@ pub fn write_stack_v1<W: Write>(stack: &PackedStack, sink: W) -> Result<W> {
     w.finish()
 }
 
+/// Serialize a method-generic stack in the **v3 aligned** encoding:
+/// same sections in the same order as [`write_method_stack`], but
+/// bit-planes at the padded in-memory stride and every LAYR/SGNS payload
+/// (and every plane within it) 32-byte aligned in the file, so
+/// [`read_method_stack_mapped`] can borrow kernel operands straight out
+/// of a mapping. Decodes to the same stack as the v2 encoding,
+/// bit-identically.
+pub fn write_method_stack_aligned<W: Write>(stack: &MethodStack, sink: W) -> Result<W> {
+    let shapes: Vec<(usize, usize, usize)> =
+        stack.layers().iter().map(|l| shape_of(&l.layer)).collect();
+    let mut w = ArtifactWriter::with_version(sink, super::FORMAT_VERSION_V3)?;
+    write_stack_header(&mut w, &shapes)?;
+    for l in stack.layers() {
+        append_method_layer_aligned(&mut w, &l.method, &l.layer)?;
+    }
+    w.finish()
+}
+
+/// Emit a `PADD` filler section (0–31 zero bytes) so the *next* section's
+/// payload — which starts 12 bytes (tag + u64 length) after the section
+/// header — lands at a 32-byte-aligned file offset. No-op when it already
+/// would.
+fn pad_to_32<W: Write>(w: &mut ArtifactWriter<W>) -> Result<()> {
+    if (w.offset() + 12) % 32 == 0 {
+        return Ok(());
+    }
+    // A PADD section occupies 12 + L bytes, so the following payload
+    // starts at offset + 24 + L; pick L ∈ [0, 31] to make that ≡ 0 (mod 32).
+    let l = (32 - (w.offset() + 24) % 32) % 32;
+    const ZEROS: [u8; 31] = [0; 31];
+    w.section(TAG_PAD, &ZEROS[..l])
+}
+
+/// v3 twin of [`append_method_layer`]: METH, then an aligned payload for
+/// the bit-plane variants (DNSE/LOWR decode into owned matrices either
+/// way, so their payloads stay byte-identical to v2).
+fn append_method_layer_aligned<W: Write>(
+    w: &mut ArtifactWriter<W>,
+    method: &str,
+    layer: &MethodLayer,
+) -> Result<()> {
+    match layer {
+        MethodLayer::Packed(l) => emit_packed_layer_aligned(w, method, l)?,
+        MethodLayer::SignScaled(l) => {
+            w.section(TAG_METHOD, &encode_method_header(VARIANT_SIGN, method)?)?;
+            pad_to_32(w)?;
+            w.section(TAG_SIGN, &encode_sign_layer_aligned(l)?)?;
+        }
+        MethodLayer::DenseScaled(l) => {
+            w.section(TAG_METHOD, &encode_method_header(VARIANT_DENSE, method)?)?;
+            w.section(TAG_DENSE, &encode_dense_layer(l)?)?;
+        }
+        MethodLayer::LowRankFp(l) => {
+            w.section(TAG_METHOD, &encode_method_header(VARIANT_LOWRANK, method)?)?;
+            w.section(TAG_LOWRANK, &encode_lowrank_layer(l)?)?;
+        }
+    }
+    Ok(())
+}
+
+/// v3 twin of [`emit_packed_layer`].
+fn emit_packed_layer_aligned<W: Write>(
+    w: &mut ArtifactWriter<W>,
+    method: &str,
+    layer: &PackedResidual,
+) -> Result<()> {
+    w.section(TAG_METHOD, &encode_method_header(VARIANT_PACKED, method)?)?;
+    pad_to_32(w)?;
+    w.section(TAG_LAYER, &encode_layer_aligned(layer)?)
+}
+
 /// `(d_in, d_out, n_paths)` as the STAK shape table declares it: residual
 /// path count for packed layers, 0 for every other serving form.
 fn shape_of(layer: &MethodLayer) -> (usize, usize, usize) {
@@ -110,7 +184,15 @@ fn shape_of(layer: &MethodLayer) -> (usize, usize, usize) {
 /// Shared by every batch writer and [`StackStreamWriter`] so the paths
 /// cannot drift byte-wise.
 fn begin_stack<W: Write>(sink: W, shapes: &[(usize, usize, usize)]) -> Result<ArtifactWriter<W>> {
-    let mut w = ArtifactWriter::new(sink)?;
+    begin_stack_at(sink, shapes, super::FORMAT_VERSION)
+}
+
+fn begin_stack_at<W: Write>(
+    sink: W,
+    shapes: &[(usize, usize, usize)],
+    version: u32,
+) -> Result<ArtifactWriter<W>> {
+    let mut w = ArtifactWriter::with_version(sink, version)?;
     write_stack_header(&mut w, shapes)?;
     Ok(w)
 }
@@ -155,22 +237,48 @@ fn append_method_layer<W: Write>(
     Ok(())
 }
 
-/// Deserialize a **packed** stack from `.lb2` bytes (v1 or v2). A v2
+/// Deserialize a **packed** stack from `.lb2` bytes (any version). An
 /// artifact containing any non-packed method layer is an `Err` naming the
 /// offending layer — use [`read_method_stack`] for those.
 pub fn read_stack(bytes: &[u8]) -> Result<PackedStack> {
     read_method_stack(bytes)?.try_into_packed()
 }
 
-/// Deserialize a method-generic stack from `.lb2` bytes, v1 or v2.
+/// Deserialize a method-generic stack from `.lb2` bytes — v1, v2, or v3
+/// (v3 payloads are copied-and-restrided here; use
+/// [`read_method_stack_mapped`] to borrow them from a mapping instead).
 pub fn read_method_stack(bytes: &[u8]) -> Result<MethodStack> {
+    read_method_stack_impl(bytes, None)
+}
+
+/// Deserialize a method-generic stack **out of a mapped artifact**: for a
+/// v3 aligned container, bit-planes and scale vectors borrow the mapping
+/// (each view holds an `Arc` clone, so the mapping outlives the stack);
+/// v1/v2 containers — and any payload that lands misaligned — fall back
+/// to the owned copy path. Forwards are bit-identical either way.
+pub fn read_method_stack_mapped(art: &Arc<MappedArtifact>) -> Result<MethodStack> {
+    read_method_stack_impl(art.bytes(), Some(art))
+}
+
+/// The next non-filler section: `PADD` sections are pure file-offset
+/// alignment and may appear anywhere, in any version.
+fn next_nonpad<'a>(r: &mut ArtifactReader<'a>) -> Option<([u8; 4], &'a [u8], Range<usize>)> {
+    loop {
+        let (tag, body, range) = r.next_section_range()?;
+        if tag != TAG_PAD {
+            return Some((tag, body, range));
+        }
+    }
+}
+
+fn read_method_stack_impl(bytes: &[u8], art: Option<&Arc<MappedArtifact>>) -> Result<MethodStack> {
     let mut r = ArtifactReader::new(bytes)?;
 
-    let (tag, _meta) = r.next_section().context("empty artifact: no META section")?;
+    let (tag, _meta, _) = next_nonpad(&mut r).context("empty artifact: no META section")?;
     if tag != TAG_META {
         bail!("expected META as first section, found {tag:?}");
     }
-    let (tag, head) = r.next_section().context("missing STAK section")?;
+    let (tag, head, _) = next_nonpad(&mut r).context("missing STAK section")?;
     if tag != TAG_STACK {
         bail!("expected STAK as second section, found {tag:?}");
     }
@@ -200,12 +308,12 @@ pub fn read_method_stack(bytes: &[u8]) -> Result<MethodStack> {
     cur.done("STAK")?;
 
     let v1 = r.version() == super::FORMAT_VERSION_V1;
+    let v3 = r.version() == super::FORMAT_VERSION_V3;
     let mut layers = Vec::with_capacity(depth);
     for (k, &(d_in, d_out, n_paths)) in shapes.iter().enumerate() {
         let (method, layer) = if v1 {
             // v1: packed layers only, no METHOD sections.
-            let (tag, body) = r
-                .next_section()
+            let (tag, body, _) = next_nonpad(&mut r)
                 .with_context(|| format!("missing LAYR section for layer {k}"))?;
             if tag != TAG_LAYER {
                 bail!("expected LAYR section for layer {k}, found {tag:?}");
@@ -213,19 +321,21 @@ pub fn read_method_stack(bytes: &[u8]) -> Result<MethodStack> {
             let layer = decode_layer(body).with_context(|| format!("layer {k}"))?;
             ("littlebit2".to_string(), MethodLayer::Packed(layer))
         } else {
-            let (tag, body) = r
-                .next_section()
+            let (tag, body, _) = next_nonpad(&mut r)
                 .with_context(|| format!("missing METH section for layer {k}"))?;
             if tag != TAG_METHOD {
                 bail!("expected METH section for layer {k}, found {tag:?}");
             }
             let (variant, method) =
                 decode_method_header(body).with_context(|| format!("layer {k}"))?;
-            let (tag, body) = r
-                .next_section()
+            let (tag, body, range) = next_nonpad(&mut r)
                 .with_context(|| format!("missing payload section for layer {k}"))?;
-            let layer = decode_variant_payload(variant, tag, body)
-                .with_context(|| format!("layer {k} ({method})"))?;
+            let layer = if v3 {
+                decode_variant_payload_v3(variant, tag, body, range.start, art)
+            } else {
+                decode_variant_payload(variant, tag, body)
+            }
+            .with_context(|| format!("layer {k} ({method})"))?;
             (method, layer)
         };
         if layer.d_in() != d_in || layer.d_out() != d_out {
@@ -246,28 +356,58 @@ pub fn read_method_stack(bytes: &[u8]) -> Result<MethodStack> {
         }
         layers.push(MethodStackLayer { method, layer });
     }
-    if r.next_section().is_some() {
+    if next_nonpad(&mut r).is_some() {
         bail!("unexpected extra sections after layer {depth}");
     }
     MethodStack::try_new(layers)
 }
 
-/// Dispatch a METH variant code to its payload decoder, pinning the
-/// payload section's tag to the declared variant first.
-fn decode_variant_payload(variant: u8, tag: [u8; 4], body: &[u8]) -> Result<MethodLayer> {
-    let expect = match variant {
+/// The payload tag a METH variant code pins its following section to.
+fn expect_tag(variant: u8) -> Result<[u8; 4]> {
+    Ok(match variant {
         VARIANT_PACKED => TAG_LAYER,
         VARIANT_SIGN => TAG_SIGN,
         VARIANT_DENSE => TAG_DENSE,
         VARIANT_LOWRANK => TAG_LOWRANK,
         other => bail!("unknown METHOD variant code {other}"),
-    };
+    })
+}
+
+/// Dispatch a METH variant code to its payload decoder, pinning the
+/// payload section's tag to the declared variant first.
+fn decode_variant_payload(variant: u8, tag: [u8; 4], body: &[u8]) -> Result<MethodLayer> {
+    let expect = expect_tag(variant)?;
     if tag != expect {
         bail!("METHOD variant {variant} requires a {expect:?} payload section, found {tag:?}");
     }
     Ok(match variant {
         VARIANT_PACKED => MethodLayer::Packed(decode_layer(body)?),
         VARIANT_SIGN => MethodLayer::SignScaled(decode_sign_layer(body)?),
+        VARIANT_DENSE => MethodLayer::DenseScaled(decode_dense_layer(body)?),
+        VARIANT_LOWRANK => MethodLayer::LowRankFp(decode_lowrank_layer(body)?),
+        _ => unreachable!("variant validated above"),
+    })
+}
+
+/// [`decode_variant_payload`] for the v3 aligned encoding: LAYR/SGNS
+/// payloads decode through the borrow-or-copy cursor (`base` is the
+/// payload's absolute offset in the container, `art` the mapping to
+/// borrow from — `None` decodes owned); DNSE/LOWR are byte-identical to
+/// v2 and always owned.
+fn decode_variant_payload_v3(
+    variant: u8,
+    tag: [u8; 4],
+    body: &[u8],
+    base: usize,
+    art: Option<&Arc<MappedArtifact>>,
+) -> Result<MethodLayer> {
+    let expect = expect_tag(variant)?;
+    if tag != expect {
+        bail!("METHOD variant {variant} requires a {expect:?} payload section, found {tag:?}");
+    }
+    Ok(match variant {
+        VARIANT_PACKED => MethodLayer::Packed(decode_layer_v3(body, base, art)?),
+        VARIANT_SIGN => MethodLayer::SignScaled(decode_sign_layer_v3(body, base, art)?),
         VARIANT_DENSE => MethodLayer::DenseScaled(decode_dense_layer(body)?),
         VARIANT_LOWRANK => MethodLayer::LowRankFp(decode_lowrank_layer(body)?),
         _ => unreachable!("variant validated above"),
@@ -285,6 +425,31 @@ pub fn save_stack(stack: &PackedStack, path: impl AsRef<Path>) -> Result<()> {
 /// contract as [`save_stack`]).
 pub fn save_method_stack(stack: &MethodStack, path: impl AsRef<Path>) -> Result<()> {
     save_via(path.as_ref(), |sink| write_method_stack(stack, sink).map(|_| ()))
+}
+
+/// Save a method-generic stack as a **v3 aligned** `.lb2` file (same
+/// durability contract as [`save_stack`]) — the `compress --aligned`
+/// output, servable zero-copy via [`load_method_stack_mmap`].
+pub fn save_method_stack_aligned(stack: &MethodStack, path: impl AsRef<Path>) -> Result<()> {
+    save_via(path.as_ref(), |sink| write_method_stack_aligned(stack, sink).map(|_| ()))
+}
+
+/// Save a packed stack as a **v3 aligned** `.lb2` file (every layer
+/// tagged `littlebit2`; same durability contract as [`save_stack`]).
+pub fn save_stack_aligned(stack: &PackedStack, path: impl AsRef<Path>) -> Result<()> {
+    save_via(path.as_ref(), |sink| {
+        let shapes: Vec<(usize, usize, usize)> = stack
+            .layers()
+            .iter()
+            .map(|l| (l.d_in(), l.d_out(), l.paths().len()))
+            .collect();
+        let mut w = ArtifactWriter::with_version(sink, super::FORMAT_VERSION_V3)?;
+        write_stack_header(&mut w, &shapes)?;
+        for layer in stack.layers() {
+            emit_packed_layer_aligned(&mut w, "littlebit2", layer)?;
+        }
+        w.finish().map(|_| ())
+    })
 }
 
 /// Shared temp-file + fsync + rename save path.
@@ -340,6 +505,7 @@ pub struct StackStreamWriter {
     written: usize,
     path: std::path::PathBuf,
     tmp: std::path::PathBuf,
+    aligned: bool,
 }
 
 impl StackStreamWriter {
@@ -347,6 +513,24 @@ impl StackStreamWriter {
     /// a stack of `shapes = [(d_in, d_out, n_paths); depth]` (`n_paths` is
     /// 0 for layers whose method has a non-packed serving form).
     pub fn create(path: impl AsRef<Path>, shapes: &[(usize, usize, usize)]) -> Result<Self> {
+        Self::create_at(path, shapes, false)
+    }
+
+    /// [`create`](Self::create) in the **v3 aligned** encoding — the
+    /// streaming half of `compress --aligned --jobs N`. Byte-identical to
+    /// [`save_method_stack_aligned`] on the same layers.
+    pub fn create_aligned(
+        path: impl AsRef<Path>,
+        shapes: &[(usize, usize, usize)],
+    ) -> Result<Self> {
+        Self::create_at(path, shapes, true)
+    }
+
+    fn create_at(
+        path: impl AsRef<Path>,
+        shapes: &[(usize, usize, usize)],
+        aligned: bool,
+    ) -> Result<Self> {
         let path = path.as_ref().to_path_buf();
         if shapes.is_empty() {
             bail!("refusing to stream an empty stack (no layer shapes)");
@@ -358,14 +542,16 @@ impl StackStreamWriter {
         let tmp = std::path::PathBuf::from(tmp_name);
         let file = std::fs::File::create(&tmp)
             .with_context(|| format!("creating {}", tmp.display()))?;
-        let writer = match begin_stack(std::io::BufWriter::new(file), shapes) {
+        let version =
+            if aligned { super::FORMAT_VERSION_V3 } else { super::FORMAT_VERSION };
+        let writer = match begin_stack_at(std::io::BufWriter::new(file), shapes, version) {
             Ok(w) => w,
             Err(e) => {
                 let _ = std::fs::remove_file(&tmp);
                 return Err(e);
             }
         };
-        Ok(Self { writer: Some(writer), shapes: shapes.to_vec(), written: 0, path, tmp })
+        Ok(Self { writer: Some(writer), shapes: shapes.to_vec(), written: 0, path, tmp, aligned })
     }
 
     /// Check the next layer's shape tuple against the declared table.
@@ -394,7 +580,11 @@ impl StackStreamWriter {
     pub fn append(&mut self, method: &str, layer: &MethodLayer) -> Result<()> {
         self.admit(shape_of(layer))?;
         let w = self.writer.as_mut().expect("writer live until finish");
-        append_method_layer(w, method, layer)?;
+        if self.aligned {
+            append_method_layer_aligned(w, method, layer)?;
+        } else {
+            append_method_layer(w, method, layer)?;
+        }
         self.written += 1;
         Ok(())
     }
@@ -405,7 +595,11 @@ impl StackStreamWriter {
     pub fn append_layer(&mut self, layer: &PackedResidual) -> Result<()> {
         self.admit((layer.d_in(), layer.d_out(), layer.paths().len()))?;
         let w = self.writer.as_mut().expect("writer live until finish");
-        emit_packed_layer(w, "littlebit2", layer)?;
+        if self.aligned {
+            emit_packed_layer_aligned(w, "littlebit2", layer)?;
+        } else {
+            emit_packed_layer(w, "littlebit2", layer)?;
+        }
         self.written += 1;
         Ok(())
     }
@@ -456,8 +650,8 @@ impl Drop for StackStreamWriter {
     }
 }
 
-/// Load a packed stack from a `.lb2` file (v1 or v2; every layer must be
-/// packed).
+/// Load a packed stack from a `.lb2` file (any version; every layer must
+/// be packed).
 pub fn load_stack(path: impl AsRef<Path>) -> Result<PackedStack> {
     let path = path.as_ref();
     let bytes =
@@ -465,12 +659,35 @@ pub fn load_stack(path: impl AsRef<Path>) -> Result<PackedStack> {
     read_stack(&bytes).with_context(|| format!("loading {}", path.display()))
 }
 
-/// Load a method-generic stack from a `.lb2` file, v1 or v2.
+/// Load a method-generic stack from a `.lb2` file, any version (eager:
+/// the whole file is read and every plane copied onto the heap).
 pub fn load_method_stack(path: impl AsRef<Path>) -> Result<MethodStack> {
     let path = path.as_ref();
     let bytes =
         std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
     read_method_stack(&bytes).with_context(|| format!("loading {}", path.display()))
+}
+
+/// Load a method-generic stack by **mapping** the `.lb2` file: a v3
+/// aligned artifact's bit-planes and scale vectors borrow the mapping
+/// (one page-cache copy of the weights, shared across every worker and
+/// process that maps the same file); v1/v2 or misaligned payloads fall
+/// back to copy-and-restride. Bit-identical forwards either way.
+pub fn load_method_stack_mmap(path: impl AsRef<Path>) -> Result<MethodStack> {
+    let path = path.as_ref();
+    let art =
+        MappedArtifact::open(path).with_context(|| format!("mapping {}", path.display()))?;
+    read_method_stack_mapped(&art).with_context(|| format!("loading {}", path.display()))
+}
+
+/// [`load_method_stack_mmap`] for all-packed stacks.
+pub fn load_stack_mmap(path: impl AsRef<Path>) -> Result<PackedStack> {
+    let path = path.as_ref();
+    let art =
+        MappedArtifact::open(path).with_context(|| format!("mapping {}", path.display()))?;
+    read_method_stack_mapped(&art)
+        .and_then(MethodStack::try_into_packed)
+        .with_context(|| format!("loading {}", path.display()))
 }
 
 fn u32_of(v: usize, what: &str) -> Result<u32> {
@@ -564,6 +781,73 @@ fn decode_path(cur: &mut Cur<'_>) -> Result<TriScaleLayer> {
     TriScaleLayer::from_parts(ub, vbt, h, l, g)
 }
 
+/// Zero-pad a v3 payload-in-progress to the next 32-byte boundary
+/// (relative to the payload start, which the `PADD` filler sections pin
+/// to a 32-aligned file offset).
+fn pad32(out: &mut Vec<u8>) {
+    let l = (32 - out.len() % 32) % 32;
+    out.extend(std::iter::repeat(0u8).take(l));
+}
+
+/// v3 LAYR payload: v2's fields, but each bit-plane is preceded by zero
+/// padding to a 32-byte boundary and stored at the **padded in-memory
+/// stride** (`BitMatrix::padded_words` verbatim — a padded plane is
+/// itself a multiple of 32 bytes, so consecutive planes stay aligned).
+fn encode_layer_aligned(layer: &PackedResidual) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&u32_of(layer.paths().len(), "path count")?.to_le_bytes());
+    for p in layer.paths() {
+        out.extend_from_slice(&u32_of(p.d_out(), "d_out")?.to_le_bytes());
+        out.extend_from_slice(&u32_of(p.d_in(), "d_in")?.to_le_bytes());
+        out.extend_from_slice(&u32_of(p.rank(), "rank")?.to_le_bytes());
+        for &v in p.h().iter().chain(p.l()).chain(p.g()) {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        for plane in [p.ub_bits(), p.vbt_bits()] {
+            pad32(&mut out);
+            for &w in plane.padded_words() {
+                out.extend_from_slice(&w.to_le_bytes());
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// v3 twin of [`decode_layer`]: planes and scales go through the
+/// borrow-or-copy cursor.
+fn decode_layer_v3(
+    body: &[u8],
+    base: usize,
+    art: Option<&Arc<MappedArtifact>>,
+) -> Result<PackedResidual> {
+    let mut cur = Cur::borrowing(body, base, art);
+    let n_paths = cur.u32()? as usize;
+    if n_paths == 0 {
+        bail!("layer declares zero residual paths");
+    }
+    let mut paths = Vec::with_capacity(n_paths.min(64));
+    for p in 0..n_paths {
+        paths.push(decode_path_v3(&mut cur).with_context(|| format!("path {p}"))?);
+    }
+    cur.done("LAYR")?;
+    PackedResidual::try_new(paths)
+}
+
+fn decode_path_v3(cur: &mut Cur<'_>) -> Result<TriScaleLayer> {
+    let d_out = cur.u32()? as usize;
+    let d_in = cur.u32()? as usize;
+    let rank = cur.u32()? as usize;
+    if d_out == 0 || d_in == 0 || rank == 0 {
+        bail!("degenerate path shape {d_out}x{d_in} rank {rank}");
+    }
+    let h = cur.scales(d_out)?;
+    let l = cur.scales(rank)?;
+    let g = cur.scales(d_in)?;
+    let ub = cur.padded_plane(d_out, rank)?;
+    let vbt = cur.padded_plane(rank, d_in)?;
+    TriScaleLayer::from_parts(ub, vbt, h, l, g)
+}
+
 fn encode_sign_layer(layer: &SignScaledLayer) -> Result<Vec<u8>> {
     let mut out = Vec::new();
     out.extend_from_slice(&u32_of(layer.d_out(), "d_out")?.to_le_bytes());
@@ -592,6 +876,42 @@ fn decode_sign_layer(body: &[u8]) -> Result<SignScaledLayer> {
         .checked_mul(d_in.div_ceil(64))
         .context("sign word count overflow")?;
     let bits = BitMatrix::from_words(d_out, d_in, cur.u64s(words)?)?;
+    cur.done("SGNS")?;
+    SignScaledLayer::try_new(bits, row, col, declared_bits)
+}
+
+/// v3 SGNS payload: v2's fields with the sign plane 32-padded and at the
+/// padded stride (see [`encode_layer_aligned`]).
+fn encode_sign_layer_aligned(layer: &SignScaledLayer) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&u32_of(layer.d_out(), "d_out")?.to_le_bytes());
+    out.extend_from_slice(&u32_of(layer.d_in(), "d_in")?.to_le_bytes());
+    out.extend_from_slice(&layer.declared_bits().to_le_bytes());
+    for &v in layer.row_scale().iter().chain(layer.col_scale()) {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    pad32(&mut out);
+    for &w in layer.bits().padded_words() {
+        out.extend_from_slice(&w.to_le_bytes());
+    }
+    Ok(out)
+}
+
+fn decode_sign_layer_v3(
+    body: &[u8],
+    base: usize,
+    art: Option<&Arc<MappedArtifact>>,
+) -> Result<SignScaledLayer> {
+    let mut cur = Cur::borrowing(body, base, art);
+    let d_out = cur.u32()? as usize;
+    let d_in = cur.u32()? as usize;
+    let declared_bits = cur.u64()?;
+    if d_out == 0 || d_in == 0 {
+        bail!("degenerate sign layer shape {d_out}x{d_in}");
+    }
+    let row = cur.scales(d_out)?;
+    let col = cur.scales(d_in)?;
+    let bits = cur.padded_plane(d_out, d_in)?;
     cur.done("SGNS")?;
     SignScaledLayer::try_new(bits, row, col, declared_bits)
 }
@@ -664,14 +984,90 @@ fn decode_lowrank_layer(body: &[u8]) -> Result<LowRankFpLayer> {
 /// Bounds-checked little-endian cursor over one section payload. Vector
 /// reads verify the byte count against the remaining payload *before*
 /// allocating, so a corrupt length field cannot trigger a huge allocation.
+///
+/// In **borrowing** mode ([`borrowing`](Self::borrowing)) the cursor also
+/// knows the payload's absolute container offset and (optionally) the
+/// mapping it came from, so [`scales`](Self::scales) and
+/// [`padded_plane`](Self::padded_plane) can hand out views that borrow
+/// the mapped bytes in place, copying only when no mapping is available
+/// or the bytes land misaligned.
 struct Cur<'a> {
     b: &'a [u8],
     pos: usize,
+    /// Absolute offset of `b[0]` within the container (= within the
+    /// mapping, since the reader sees the whole mapped file).
+    base: usize,
+    art: Option<&'a Arc<MappedArtifact>>,
 }
 
 impl<'a> Cur<'a> {
     fn new(b: &'a [u8]) -> Self {
-        Self { b, pos: 0 }
+        Self { b, pos: 0, base: 0, art: None }
+    }
+
+    fn borrowing(b: &'a [u8], base: usize, art: Option<&'a Arc<MappedArtifact>>) -> Self {
+        Self { b, pos: 0, base, art }
+    }
+
+    /// Skip to the next 32-byte boundary relative to the payload start,
+    /// requiring the skipped filler to be zero (matching the encoder).
+    fn align32(&mut self) -> Result<()> {
+        let skip = (32 - self.pos % 32) % 32;
+        let at = self.pos;
+        if self.take(skip)?.iter().any(|&b| b != 0) {
+            bail!("nonzero alignment filler at payload offset {at}");
+        }
+        Ok(())
+    }
+
+    /// An `n`-float scale vector: borrowed from the mapping when one is
+    /// attached (file f32s are little-endian and 4-aligned by the v3
+    /// layout), copied otherwise.
+    fn scales(&mut self, n: usize) -> Result<ScaleVec> {
+        if let Some(art) = self.art {
+            let need = n.checked_mul(4).context("f32 vector length overflow")?;
+            if need <= self.b.len() - self.pos {
+                if let Ok(v) = MappedF32s::new(art, self.base + self.pos, n) {
+                    self.pos += need;
+                    return Ok(ScaleVec::Mapped(v));
+                }
+            }
+        }
+        Ok(self.f32s(n)?.into())
+    }
+
+    /// A `rows × cols` bit-plane stored at the padded in-memory stride
+    /// behind a 32-byte alignment boundary: borrowed from the mapping
+    /// when attached and aligned (the plane bytes *are* the kernel
+    /// operand), copied-and-restrided otherwise. Pad words and pad bits
+    /// must be zero on both paths — dirty padding is corruption, not a
+    /// fallback trigger.
+    fn padded_plane(&mut self, rows: usize, cols: usize) -> Result<BitMatrix> {
+        self.align32()?;
+        let stride = BitMatrix::padded_stride(cols);
+        let n_words = rows.checked_mul(stride).context("bit-plane word count overflow")?;
+        let need = n_words.checked_mul(8).context("bit-plane byte count overflow")?;
+        if let Some(art) = self.art {
+            if need <= self.b.len() - self.pos {
+                if let Ok(mw) = MappedWords::new(art, self.base + self.pos, n_words) {
+                    let m = BitMatrix::from_mapped(rows, cols, mw)?;
+                    self.pos += need;
+                    return Ok(m);
+                }
+            }
+        }
+        let words = self.u64s(n_words)?;
+        let tight = cols.div_ceil(64);
+        let mut out = Vec::with_capacity(rows * tight);
+        for r in 0..rows {
+            let row = &words[r * stride..(r + 1) * stride];
+            if row[tight..].iter().any(|&w| w != 0) {
+                bail!("padded bit-plane {rows}x{cols} has nonzero pad words in row {r}");
+            }
+            out.extend_from_slice(&row[..tight]);
+        }
+        // from_words re-checks the in-word padding bits past `cols`.
+        BitMatrix::from_words(rows, cols, out)
     }
 
     fn take(&mut self, n: usize) -> Result<&'a [u8]> {

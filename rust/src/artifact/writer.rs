@@ -25,6 +25,7 @@ pub struct ArtifactWriter<W: Write> {
     sink: W,
     crc: u32,
     sections: u32,
+    offset: usize,
 }
 
 impl<W: Write> ArtifactWriter<W> {
@@ -35,13 +36,17 @@ impl<W: Write> ArtifactWriter<W> {
     }
 
     /// Start a container at an explicit format version — the legacy-v1
-    /// emitter path ([`super::write_stack_v1`]) uses this; everything else
+    /// emitter ([`super::write_stack_v1`]) and the aligned-v3 emitter
+    /// ([`super::write_method_stack_aligned`]) use this; everything else
     /// writes the current version via [`new`](Self::new).
     pub fn with_version(sink: W, version: u32) -> Result<Self> {
-        if version != FORMAT_VERSION && version != super::FORMAT_VERSION_V1 {
+        if version != FORMAT_VERSION
+            && version != super::FORMAT_VERSION_V1
+            && version != super::FORMAT_VERSION_V3
+        {
             anyhow::bail!("cannot write unknown .lb2 format version {version}");
         }
-        let mut w = Self { sink, crc: CRC_INIT, sections: 0 };
+        let mut w = Self { sink, crc: CRC_INIT, sections: 0, offset: 0 };
         w.emit(&MAGIC)?;
         w.emit(&version.to_le_bytes())?;
         Ok(w)
@@ -50,7 +55,16 @@ impl<W: Write> ArtifactWriter<W> {
     fn emit(&mut self, bytes: &[u8]) -> Result<()> {
         self.sink.write_all(bytes)?;
         self.crc = crc_update(self.crc, bytes);
+        self.offset += bytes.len();
         Ok(())
+    }
+
+    /// File offset of the next byte to be written (bytes emitted so far).
+    /// The aligned-v3 emitter sizes its `PADD` filler from this so that
+    /// the following section's payload (which starts 12 bytes after the
+    /// section itself: tag + u64 length) lands 32-byte aligned.
+    pub fn offset(&self) -> usize {
+        self.offset
     }
 
     /// Append one section. `TAG_END` is reserved for the trailer.

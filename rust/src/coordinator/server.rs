@@ -425,6 +425,14 @@ pub struct ServerStats {
     /// Live TCP connection-handler threads (gauge; populated by the TCP
     /// front-end, 0 on the in-process path).
     pub conn_threads: usize,
+    /// Model weight bytes held on this process's heap (gauge; populated
+    /// by the CLI/front-end from the loaded stack — disjoint from
+    /// [`model_mapped_bytes`](Self::model_mapped_bytes), so the pair sums
+    /// to the serving footprint without double-counting).
+    pub model_resident_bytes: u64,
+    /// Model weight bytes served from the page cache through a live
+    /// `.lb2` mapping (gauge; 0 for eager loads).
+    pub model_mapped_bytes: u64,
     /// Batch-fill histogram (non-cumulative counts per [`fill_bucket`]
     /// bucket: ≤1, ≤2, ≤4, … ≤64, +Inf).
     pub batch_fill: [u64; FILL_BUCKET_COUNT],
@@ -446,6 +454,8 @@ impl ServerStats {
         let _ = writeln!(s, "# lb2_health: 0=healthy 1=degraded 2=draining");
         let _ = writeln!(s, "lb2_health {}", self.health.code());
         let _ = writeln!(s, "lb2_conn_threads {}", self.conn_threads);
+        let _ = writeln!(s, "lb2_model_resident_bytes {}", self.model_resident_bytes);
+        let _ = writeln!(s, "lb2_model_mapped_bytes {}", self.model_mapped_bytes);
         let _ = writeln!(s, "lb2_queue_depth {}", self.queue_depth);
         let _ = writeln!(s, "lb2_batches_total {}", self.batches);
         let _ = writeln!(s, "lb2_batch_mean_size {:.3}", self.mean_batch);
@@ -1025,6 +1035,8 @@ fn snapshot(
         queue_depth: queue_depth.load(Ordering::SeqCst),
         health: s.health(queue_depth.load(Ordering::SeqCst)),
         conn_threads: 0,
+        model_resident_bytes: 0,
+        model_mapped_bytes: 0,
         batch_fill: s.fill_hist,
     }
 }

@@ -63,6 +63,7 @@ pub mod rng;
 pub mod runtime;
 pub mod serving;
 pub mod spectral;
+pub mod sys;
 
 /// Crate version, reported by the CLI and stamped into experiment logs.
 pub const VERSION: &str = env!("CARGO_PKG_VERSION");

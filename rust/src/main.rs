@@ -9,15 +9,17 @@
 //! littlebit2 spectral-gain                       Fig 9 energy curves
 //! littlebit2 compress [--method M] [--size N] [--gamma G] [--bpp B]
 //!                     [--strategy S] [--layers L] [--jobs N]
-//!                     [--out model.lb2]                quantize once → artifact
+//!                     [--out model.lb2] [--aligned 1]  quantize once → artifact
 //!                                                      (byte-identical for any --jobs;
+//!                                                       --aligned 1: v3 mmap-servable;
 //!                                                       M: littlebit2|onebit|rtn|billm|arb|tinyrank)
 //! littlebit2 serve --model model.lb2 [--workers N] [--batch B]
 //!                  [--threads T] [--requests R]        serve from an artifact,
 //!                  [--listen ADDR] [--serve-secs S]     dispatching on its METHOD tags;
 //!                  [--deadline-ms D] [--max-wait-ms W]  with --listen: TCP front-end
-//!                  [--chaos-seed S]                     (cross-connection batching;
-//!                                                      chaos-seed injects seeded faults)
+//!                  [--chaos-seed S] [--mmap 1]          (cross-connection batching;
+//!                                                      chaos-seed injects seeded faults;
+//!                                                      mmap 1: zero-copy page-cache load)
 //! littlebit2 client --connect HOST:PORT --width D [--requests R]
 //!                   [--concurrency C] [--deadline-ms D] [--verify 1]
 //!                   [--stats 1] [--shutdown 1]          wire-protocol load client
@@ -302,13 +304,17 @@ fn cmd_spectral_gain(args: &Args) -> Result<()> {
 /// littlebit pipeline the per-stage wall-clock (svd/itq/svid/pack) is
 /// reported at the end.
 fn cmd_compress(args: &Args) -> Result<()> {
-    args.known(&["method", "size", "layers", "gamma", "bpp", "strategy", "out", "jobs"])?;
+    args.known(&["method", "size", "layers", "gamma", "bpp", "strategy", "out", "jobs", "aligned"])?;
     let method_name = args.get("method", "littlebit2");
     let size = args.get_usize("size", 512)?;
     let layers = args.get_usize("layers", 1)?;
     let gamma = args.get_f64("gamma", 0.27)?;
     let bpp = args.get_f64("bpp", 0.55)?;
     let jobs_n = args.get_usize("jobs", 1)?;
+    // --aligned 1: emit format v3, whose bit-plane payloads sit 32-byte
+    // aligned at their in-memory stride so `serve --mmap` can borrow the
+    // page cache directly (costs a few pad bytes per section on disk).
+    let aligned = matches!(args.get("aligned", "0").as_str(), "1" | "true");
     let strategy = match args.get("strategy", "itq").as_str() {
         "standard" => InitStrategy::Standard,
         "rotation" => InitStrategy::RandomRotation,
@@ -351,6 +357,7 @@ fn cmd_compress(args: &Args) -> Result<()> {
         })
         .collect();
     let mut writer = match args.flags.get("out") {
+        Some(out) if aligned => Some(StackStreamWriter::create_aligned(out, &shapes)?),
         Some(out) => Some(StackStreamWriter::create(out, &shapes)?),
         None => None,
     };
@@ -404,7 +411,8 @@ fn cmd_compress(args: &Args) -> Result<()> {
         // their logical f16 accounting, plus O(sections) framing — see
         // EXPERIMENTS.md §Artifact.
         println!(
-            "wrote {out}: {file_bytes} bytes ({:.3} bits/param on disk; framing + f32-scale slack {} bytes)",
+            "wrote {out}{}: {file_bytes} bytes ({:.3} bits/param on disk; framing + f32-scale slack {} bytes)",
+            if aligned { " (v3 aligned, mmap-servable)" } else { "" },
             file_bytes as f64 * 8.0 / params,
             file_bytes as i64 - packed_bytes as i64,
         );
@@ -430,6 +438,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "deadline-ms",
         "max-wait-ms",
         "chaos-seed",
+        "mmap",
     ])?;
     let model_path = args
         .flags
@@ -440,11 +449,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let threads = args.get_usize("threads", 1)?;
     let requests = args.get_usize("requests", 256)?;
     let max_wait_ms = args.get_usize("max-wait-ms", 2)?;
+    // --mmap 1: map the artifact instead of reading it; a v3 aligned file
+    // serves its bit-planes straight from the page cache (every worker
+    // shares the one mapping), anything else falls back to copied storage.
+    let use_mmap = matches!(args.get("mmap", "0").as_str(), "1" | "true");
     if workers == 0 || batch == 0 || threads == 0 {
         bail!("--workers, --batch, and --threads must be at least 1");
     }
 
-    let stack = Arc::new(MethodStack::load(model_path)?);
+    let stack = Arc::new(if use_mmap {
+        MethodStack::load_mmap(model_path)?
+    } else {
+        MethodStack::load(model_path)?
+    });
     println!(
         "loaded {model_path}: method {} | depth {} | {} -> {} features | serving-form weights {} bytes",
         stack.method_summary(),
@@ -453,6 +470,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         stack.d_out(),
         stack.storage_bytes()
     );
+    let model_resident_bytes = stack.resident_bytes() as u64;
+    let model_mapped_bytes = stack.mapped_bytes() as u64;
+    if use_mmap {
+        println!(
+            "zero-copy load: {model_mapped_bytes} bytes borrowed from the page cache, {model_resident_bytes} bytes resident on the heap{}",
+            if model_mapped_bytes == 0 { " (artifact not v3-aligned: copied)" } else { "" }
+        );
+    }
 
     // --chaos-seed: deterministic fault injection on both the wire and the
     // backend (the `make chaos` harness flips this on; production never
@@ -493,6 +518,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 ..Default::default()
             },
             faults: plan.clone(),
+            model_resident_bytes,
+            model_mapped_bytes,
             ..Default::default()
         };
         let front = TcpFrontend::start(listen.as_str(), cfg, move |worker| {
@@ -751,6 +778,14 @@ struct EvalRow {
     lambda_mean: Option<f64>,
     compress_ms: f64,
     artifact_bytes: u64,
+    /// Heap bytes held by the served stack (owned storage plus any
+    /// heap-fallback borrows) — disjoint from `mapped_bytes` by
+    /// construction, so resident + mapped is the true working set and the
+    /// bpp audit never double-counts a plane.
+    resident_bytes: u64,
+    /// Page-cache bytes borrowed through the v3 mmap load (0 for layers
+    /// that had to fall back to copied storage).
+    mapped_bytes: u64,
     serve_tokens_per_s: f64,
     serve_p50_ms: f64,
 }
@@ -759,7 +794,8 @@ struct EvalRow {
 /// baseline table shape: sweep `--methods` × `--bpp-list` over a
 /// zoo-fabricated heavy-tailed FFN chain (γ per the Fig. 12 projection
 /// profiles), run every method through the *real* pipeline
-/// (compress → `.lb2` v2 → load → serve on the worker pool), and write
+/// (compress → `.lb2` v3 aligned → mmap load → serve on the worker pool —
+/// the zero-copy path, so every eval run exercises it), and write
 /// `BENCH_methods.json` with fidelity (relative Frobenius error), bpp
 /// (declared App. H accounting *and* on-disk), λ coherence (littlebit
 /// latents; null for baselines), compression wall-clock, and serve
@@ -870,19 +906,23 @@ fn cmd_eval(args: &Args) -> Result<()> {
                 std::process::id()
             ));
 
-            stack.save(&path)?;
+            stack.save_aligned(&path)?;
             // Cleanup-on-error: a failed stat/load must not strand the
             // temp artifact (same discipline as the artifact writers).
+            // Unlinking after the mmap load is fine on unix — the mapping
+            // keeps the pages alive until the stack is dropped.
             let reload = || -> Result<(u64, MethodStack)> {
                 let bytes = std::fs::metadata(&path)
                     .with_context(|| format!("stat {path:?}"))?
                     .len();
-                Ok((bytes, MethodStack::load(&path)?))
+                Ok((bytes, MethodStack::load_mmap(&path)?))
             };
             let result = reload();
             let _ = std::fs::remove_file(&path);
             let (artifact_bytes, loaded) = result?;
             let loaded = Arc::new(loaded);
+            let resident_bytes = loaded.resident_bytes() as u64;
+            let mapped_bytes = loaded.mapped_bytes() as u64;
 
             let server = InferenceServer::start_pool(
                 ServerConfig {
@@ -922,6 +962,8 @@ fn cmd_eval(args: &Args) -> Result<()> {
                 },
                 compress_ms,
                 artifact_bytes,
+                resident_bytes,
+                mapped_bytes,
                 serve_tokens_per_s: stats.tokens_per_s,
                 serve_p50_ms: stats.p50_ms,
             };
@@ -930,7 +972,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
                 .map(|b| b.to_string())
                 .unwrap_or_else(|| "-".to_string());
             println!(
-                "{:<11} bpp_req={:<5} bpp_decl={:>6.3} bpp_disk={:>7.3} rel_err={:.4e} compress={:>7.0} ms serve={:>8.0} tok/s",
+                "{:<11} bpp_req={:<5} bpp_decl={:>6.3} bpp_disk={:>7.3} rel_err={:.4e} compress={:>7.0} ms serve={:>8.0} tok/s mapped={} B resident={} B",
                 row.method,
                 req,
                 row.bpp_declared,
@@ -938,6 +980,8 @@ fn cmd_eval(args: &Args) -> Result<()> {
                 row.frobenius_rel_err,
                 row.compress_ms,
                 row.serve_tokens_per_s,
+                row.mapped_bytes,
+                row.resident_bytes,
             );
             rows.push(row);
         }
@@ -980,13 +1024,15 @@ fn write_eval_json(
             None => "null".to_string(),
         };
         s.push_str(&format!(
-            "    {{\"method\": \"{}\", \"bpp_requested\": {requested}, \"bpp_declared\": {:.6}, \"bpp_disk\": {:.6}, \"frobenius_rel_err\": {:.8e}, \"lambda_mean\": {lambda}, \"compress_ms\": {:.3}, \"artifact_bytes\": {}, \"serve_tokens_per_s\": {:.1}, \"serve_p50_ms\": {:.4}}}{}\n",
+            "    {{\"method\": \"{}\", \"bpp_requested\": {requested}, \"bpp_declared\": {:.6}, \"bpp_disk\": {:.6}, \"frobenius_rel_err\": {:.8e}, \"lambda_mean\": {lambda}, \"compress_ms\": {:.3}, \"artifact_bytes\": {}, \"resident_bytes\": {}, \"mapped_bytes\": {}, \"serve_tokens_per_s\": {:.1}, \"serve_p50_ms\": {:.4}}}{}\n",
             r.method,
             r.bpp_declared,
             r.bpp_disk,
             r.frobenius_rel_err,
             r.compress_ms,
             r.artifact_bytes,
+            r.resident_bytes,
+            r.mapped_bytes,
             r.serve_tokens_per_s,
             r.serve_p50_ms,
             if i + 1 < rows.len() { "," } else { "" },

@@ -33,6 +33,7 @@
 use crate::linalg::Mat;
 use crate::packing::{gemv_sign_scaled, BatchScratch, BitMatrix, PackedResidual, SignPool};
 use crate::parallel::Pool;
+use crate::sys::ScaleVec;
 use anyhow::{bail, Result};
 
 /// One-level sign-GEMM layer: `y = row ⊙ (S · (col ⊙ x))` with
@@ -45,22 +46,24 @@ pub struct SignScaledLayer {
     /// `sign(W)` packed, `d_out × d_in`.
     bits: BitMatrix,
     /// Row scale `a ∈ R^{d_out}` (FP16-rounded).
-    row: Vec<f32>,
+    row: ScaleVec,
     /// Column scale `b ∈ R^{d_in}` (FP16-rounded).
-    col: Vec<f32>,
+    col: ScaleVec,
     /// The method's declared App. H storage bits (e.g. Eq. 22 for OneBit).
     declared_bits: u64,
 }
 
 impl SignScaledLayer {
-    /// Build from packed signs and scales; shape mismatches are `Err`
-    /// (this doubles as the `.lb2` decode boundary).
+    /// Build from packed signs and scales — owned vectors or mapped views
+    /// ([`ScaleVec`]); shape mismatches are `Err` (this doubles as the
+    /// `.lb2` decode boundary).
     pub fn try_new(
         bits: BitMatrix,
-        row: Vec<f32>,
-        col: Vec<f32>,
+        row: impl Into<ScaleVec>,
+        col: impl Into<ScaleVec>,
         declared_bits: u64,
     ) -> Result<Self> {
+        let (row, col) = (row.into(), col.into());
         if bits.rows() != row.len() {
             bail!("row scale length {} != d_out {}", row.len(), bits.rows());
         }
@@ -98,6 +101,16 @@ impl SignScaledLayer {
     /// Serving-form bytes: packed sign words + two FP16-accounted scales.
     pub fn storage_bytes(&self) -> usize {
         self.bits.storage_bytes() + 2 * (self.row.len() + self.col.len())
+    }
+
+    /// Heap-held weight bytes (0-contribution from mapped backing).
+    pub fn resident_bytes(&self) -> usize {
+        self.bits.resident_bytes() + self.row.resident_bytes() + self.col.resident_bytes()
+    }
+
+    /// Page-cache-backed weight bytes.
+    pub fn mapped_bytes(&self) -> usize {
+        self.bits.mapped_bytes() + self.row.mapped_bytes() + self.col.mapped_bytes()
     }
 
     fn forward_into(&self, x: &[f32], out: &mut [f32]) {
@@ -156,6 +169,12 @@ impl DenseScaledLayer {
     pub fn storage_bytes(&self) -> usize {
         self.w.rows() * self.w.cols() * 4
     }
+
+    /// Dense reconstructions are always owned: resident = the padded
+    /// in-memory buffer (v3 maps bit-planes and scales only).
+    pub fn resident_bytes(&self) -> usize {
+        self.w.padded().len() * 4
+    }
 }
 
 /// FP16-rounded truncated-SVD factors (`Ŵ = U · Vᵀ` with the singular
@@ -211,6 +230,12 @@ impl LowRankFpLayer {
     /// lives in [`declared_bits`](Self::declared_bits), not here.
     pub fn storage_bytes(&self) -> usize {
         4 * (self.u.rows() * self.u.cols() + self.vt.rows() * self.vt.cols())
+    }
+
+    /// Low-rank factors are always owned (v3 maps bit-planes and scales
+    /// only): resident = the padded in-memory buffers.
+    pub fn resident_bytes(&self) -> usize {
+        4 * (self.u.padded().len() + self.vt.padded().len())
     }
 }
 
@@ -298,6 +323,31 @@ impl MethodLayer {
             MethodLayer::SignScaled(l) => l.storage_bytes(),
             MethodLayer::DenseScaled(l) => l.storage_bytes(),
             MethodLayer::LowRankFp(l) => l.storage_bytes(),
+        }
+    }
+
+    /// Weight bytes held on this process's heap. For an eager load this is
+    /// the whole padded serving form; for an mmap load of a v3 artifact
+    /// the sign-family planes/scales move to [`mapped_bytes`](Self::mapped_bytes)
+    /// and only the dense/low-rank variants (always copied) remain here.
+    /// The two sums are disjoint by construction — the bpp audit adds
+    /// them without double-counting.
+    pub fn resident_bytes(&self) -> usize {
+        match self {
+            MethodLayer::Packed(l) => l.resident_bytes(),
+            MethodLayer::SignScaled(l) => l.resident_bytes(),
+            MethodLayer::DenseScaled(l) => l.resident_bytes(),
+            MethodLayer::LowRankFp(l) => l.resident_bytes(),
+        }
+    }
+
+    /// Weight bytes served from the page cache through a live mapping
+    /// (0 for eager loads and for the dense/low-rank variants).
+    pub fn mapped_bytes(&self) -> usize {
+        match self {
+            MethodLayer::Packed(l) => l.mapped_bytes(),
+            MethodLayer::SignScaled(l) => l.mapped_bytes(),
+            MethodLayer::DenseScaled(_) | MethodLayer::LowRankFp(_) => 0,
         }
     }
 

@@ -101,6 +101,24 @@ impl MethodStack {
         self.layers.iter().map(|l| l.layer.declared_bits()).sum()
     }
 
+    /// Weight bytes held on this process's heap. Disjoint from
+    /// [`mapped_bytes`](Self::mapped_bytes) by construction, so the eval
+    /// bpp audit can add the two without double-counting.
+    pub fn resident_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.layer.resident_bytes()).sum()
+    }
+
+    /// Weight bytes served from the page cache through a live `.lb2`
+    /// mapping (0 after an eager [`load`](Self::load)).
+    pub fn mapped_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.layer.mapped_bytes()).sum()
+    }
+
+    /// True when any layer borrows its planes/scales from a live mapping.
+    pub fn is_mapped(&self) -> bool {
+        self.layers.iter().any(|l| l.layer.mapped_bytes() > 0)
+    }
+
     /// Persist as a `.lb2` **format v2** artifact (per-layer METHOD tags;
     /// see [`crate::artifact`] for the byte layout). Round-trips
     /// bit-exactly through [`load`](Self::load).
@@ -108,11 +126,30 @@ impl MethodStack {
         crate::artifact::save_method_stack(self, path)
     }
 
+    /// Persist as a `.lb2` **format v3** "aligned" artifact: bit-planes at
+    /// the padded in-memory row stride, every plane and section payload
+    /// 32-byte aligned in the file, so [`load_mmap`](Self::load_mmap) can
+    /// serve the mapped bytes directly as kernel operands.
+    pub fn save_aligned(&self, path: impl AsRef<std::path::Path>) -> anyhow::Result<()> {
+        crate::artifact::save_method_stack_aligned(self, path)
+    }
+
     /// Load a `.lb2` artifact — **either** format version: v2 loads each
     /// layer under its METHOD tag; a v1 artifact (PR 3/4 era) decodes as
     /// an all-`Packed` `littlebit2` stack with bit-identical forwards.
     pub fn load(path: impl AsRef<std::path::Path>) -> anyhow::Result<Self> {
         crate::artifact::load_method_stack(path)
+    }
+
+    /// Load by mapping the file instead of reading it: bit-planes and
+    /// scale vectors of a v3 aligned artifact borrow the mapping (the
+    /// kernel operands live in the page cache, shared across processes);
+    /// v1/v2 or misaligned payloads fall back to copy-and-restride, so
+    /// the result forwards bit-identically to [`load`](Self::load) on the
+    /// same file either way. The mapping stays alive for as long as any
+    /// layer borrows from it.
+    pub fn load_mmap(path: impl AsRef<std::path::Path>) -> anyhow::Result<Self> {
+        crate::artifact::load_method_stack_mmap(path)
     }
 
     /// Serialize to v2 container bytes (in-memory [`save`](Self::save)).

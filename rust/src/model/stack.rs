@@ -71,6 +71,33 @@ impl PackedStack {
         crate::artifact::load_stack(path)
     }
 
+    /// Persist as a `.lb2` **format v3** "aligned" artifact (planes at the
+    /// padded in-memory stride, payloads 32-byte aligned) so
+    /// [`load_mmap`](Self::load_mmap) can borrow them in place.
+    pub fn save_aligned(&self, path: impl AsRef<std::path::Path>) -> anyhow::Result<()> {
+        crate::artifact::save_stack_aligned(self, path)
+    }
+
+    /// Load by mapping the file: a v3 aligned artifact's bit-planes and
+    /// scales borrow the mapping (zero weight copies, page cache shared
+    /// across processes); v1/v2 or misaligned payloads fall back to
+    /// copy-and-restride. Forwards are bit-identical to
+    /// [`load`](Self::load) either way.
+    pub fn load_mmap(path: impl AsRef<std::path::Path>) -> anyhow::Result<Self> {
+        crate::artifact::load_stack_mmap(path)
+    }
+
+    /// Weight bytes held on this process's heap (disjoint from
+    /// [`mapped_bytes`](Self::mapped_bytes)).
+    pub fn resident_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.resident_bytes()).sum()
+    }
+
+    /// Weight bytes served from the page cache through a live mapping.
+    pub fn mapped_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.mapped_bytes()).sum()
+    }
+
     /// Serialize to `.lb2` container bytes (the in-memory form of
     /// [`save`](Self::save)).
     pub fn to_artifact_bytes(&self) -> anyhow::Result<Vec<u8>> {

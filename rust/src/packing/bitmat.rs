@@ -1,6 +1,8 @@
-//! Bit-packed ±1 matrix with an aligned, padded word stride.
+//! Bit-packed ±1 matrix with an aligned, padded word stride and
+//! owned-or-mapped backing.
 
 use crate::linalg::{AlignedU64, Mat};
+use crate::sys::MappedWords;
 use anyhow::{bail, Result};
 
 /// Words per 32-byte block — the row-stride quantum.
@@ -18,18 +20,60 @@ const WORD_BLOCK: usize = crate::linalg::aligned::U64_BLOCK;
 /// entry) — clear padding is load-bearing for the popcount and
 /// whole-word-XOR kernels.
 ///
-/// On disk the `.lb2` artifact stores the **tight** form only
+/// In a v1/v2 `.lb2` artifact the **tight** form is stored
 /// ([`tight_words`](BitMatrix::tight_words)); [`from_words`] accepts that
 /// tight form and re-strides on load, so the padded layout never changes a
-/// serialized byte.
-#[derive(Clone, Debug, PartialEq)]
+/// serialized byte. A v3 "aligned" artifact stores the padded stride
+/// verbatim, which lets [`from_mapped`](BitMatrix::from_mapped) borrow the
+/// plane straight out of the file mapping — zero copies, same invariants
+/// (the constructor validates clear padding before handing the matrix
+/// out, exactly like the owned path).
+#[derive(Clone, Debug)]
 pub struct BitMatrix {
     rows: usize,
     cols: usize,
     /// Padded row stride: `⌈cols/64⌉` rounded up to a multiple of 4.
     words_per_row: usize,
     /// `rows * words_per_row` words, 32-byte aligned.
-    words: AlignedU64,
+    words: Words,
+}
+
+/// The word buffer: owned aligned heap memory, or a borrowed window into
+/// a shared artifact mapping. Both expose the identical padded layout —
+/// every kernel and accessor is backing-agnostic.
+#[derive(Clone, Debug)]
+enum Words {
+    Owned(AlignedU64),
+    Mapped(MappedWords),
+}
+
+impl Words {
+    #[inline]
+    fn as_slice(&self) -> &[u64] {
+        match self {
+            Words::Owned(w) => w.as_slice(),
+            Words::Mapped(m) => m.as_slice(),
+        }
+    }
+
+    #[inline]
+    fn len(&self) -> usize {
+        match self {
+            Words::Owned(w) => w.len(),
+            Words::Mapped(m) => m.len(),
+        }
+    }
+}
+
+impl PartialEq for BitMatrix {
+    /// Backing-agnostic equality: shape plus padded word contents (padding
+    /// is clear by invariant on both sides, so comparing padded buffers is
+    /// exact).
+    fn eq(&self, other: &Self) -> bool {
+        self.rows == other.rows
+            && self.cols == other.cols
+            && self.words.as_slice() == other.words.as_slice()
+    }
 }
 
 /// Padded row stride (in words) for a logical width of `cols` bits.
@@ -55,7 +99,7 @@ impl BitMatrix {
                 }
             }
         }
-        Self { rows, cols, words_per_row, words }
+        Self { rows, cols, words_per_row, words: Words::Owned(words) }
     }
 
     /// All-(+1) matrix.
@@ -97,7 +141,32 @@ impl BitMatrix {
             dst[i * words_per_row..i * words_per_row + tight]
                 .copy_from_slice(&words[i * tight..(i + 1) * tight]);
         }
-        Ok(Self { rows, cols, words_per_row, words: padded })
+        Ok(Self { rows, cols, words_per_row, words: Words::Owned(padded) })
+    }
+
+    /// Borrow a bit-plane straight out of a mapped artifact — the `.lb2`
+    /// v3 zero-copy load path. The view must hold exactly
+    /// `rows × words_per_row(cols)` words **in the padded in-memory
+    /// stride** (that is what the aligned encoding stores), and every
+    /// padding bit must be clear — the same invariant the owned
+    /// constructors enforce, validated here before the matrix is handed
+    /// out, because the kernels' whole-word popcount/XOR loops rely on it.
+    pub fn from_mapped(rows: usize, cols: usize, mapped: MappedWords) -> Result<Self> {
+        let words_per_row = padded_words_per_row(cols);
+        let expect = rows
+            .checked_mul(words_per_row)
+            .ok_or_else(|| anyhow::anyhow!("bit-plane {rows}x{cols} overflows"))?;
+        if mapped.len() != expect {
+            bail!(
+                "mapped bit-plane word count mismatch: {rows}x{cols} needs {expect} padded words, got {}",
+                mapped.len()
+            );
+        }
+        let m = Self { rows, cols, words_per_row, words: Words::Mapped(mapped) };
+        if !m.padding_is_clear() {
+            bail!("mapped bit-plane {rows}x{cols} has set padding bits");
+        }
+        Ok(m)
     }
 
     /// The padded in-memory word buffer, row-major
@@ -136,6 +205,15 @@ impl BitMatrix {
     #[inline]
     pub fn tight_words_per_row(&self) -> usize {
         self.cols.div_ceil(64)
+    }
+
+    /// Padded row stride (in words) for a logical width of `cols` bits —
+    /// the in-memory stride of every `BitMatrix`, and the on-disk stride
+    /// of a `.lb2` v3 "aligned" bit-plane. Exposed so the artifact codec
+    /// and the in-memory layout can never disagree.
+    #[inline]
+    pub fn padded_stride(cols: usize) -> usize {
+        padded_words_per_row(cols)
     }
 
     /// The padded words of row `i` (length [`words_per_row`](Self::words_per_row),
@@ -208,7 +286,7 @@ impl BitMatrix {
                 }
             }
         }
-        BitMatrix { rows: cols, cols: rows, words_per_row: wpr_out, words: out }
+        BitMatrix { rows: cols, cols: rows, words_per_row: wpr_out, words: Words::Owned(out) }
     }
 
     /// Storage in bytes of the **tight** packed form — what the artifact
@@ -219,10 +297,38 @@ impl BitMatrix {
         self.rows * self.tight_words_per_row() * 8
     }
 
-    /// Resident in-memory bytes of the padded, aligned buffer
-    /// (≥ [`storage_bytes`](Self::storage_bytes)).
+    /// Bytes of the padded buffer this **process's heap** holds: the full
+    /// padded allocation for owned backing, 0 when the plane is borrowed
+    /// from a page-cache mapping (those bytes are accounted by
+    /// [`mapped_bytes`](Self::mapped_bytes) instead — never both, so
+    /// summing the two over a stack never double-counts a plane).
     pub fn resident_bytes(&self) -> usize {
-        self.words.len() * 8
+        match &self.words {
+            Words::Owned(w) => w.len() * 8,
+            // Borrowed from the heap-fallback backing: still RAM-resident.
+            Words::Mapped(m) if !m.is_mapped() => m.len() * 8,
+            Words::Mapped(_) => 0,
+        }
+    }
+
+    /// Bytes of the padded buffer served from the page cache (0 for owned
+    /// or heap-fallback backing).
+    pub fn mapped_bytes(&self) -> usize {
+        match &self.words {
+            Words::Mapped(m) if m.is_mapped() => m.len() * 8,
+            _ => 0,
+        }
+    }
+
+    /// True when the plane is borrowed from a live file mapping.
+    pub fn is_mapped(&self) -> bool {
+        matches!(&self.words, Words::Mapped(m) if m.is_mapped())
+    }
+
+    /// True when the plane is borrowed (from a mapping or the aligned-heap
+    /// fallback) rather than owned.
+    pub fn is_borrowed(&self) -> bool {
+        matches!(&self.words, Words::Mapped(_))
     }
 
     /// Fraction of +1 entries.
@@ -372,6 +478,41 @@ mod tests {
         let mut words = tight;
         words[1] |= 1u64 << 7;
         assert!(BitMatrix::from_words(2, 65, words).is_err());
+    }
+
+    /// A plane borrowed from an artifact backing is indistinguishable from
+    /// the owned original — same words, same equality — while flipping the
+    /// resident/mapped accounting; corrupt padded planes are rejected.
+    #[test]
+    fn from_mapped_borrows_bit_identically() {
+        use crate::sys::{MappedArtifact, MappedWords};
+        let mut rng = Pcg64::seed(40);
+        for (r, c) in [(3, 3), (7, 64), (5, 65), (16, 130)] {
+            let m = Mat::gaussian(r, c, &mut rng).signum();
+            let owned = BitMatrix::from_dense(&m);
+            let bytes: Vec<u8> =
+                owned.padded_words().iter().flat_map(|w| w.to_le_bytes()).collect();
+            let art = MappedArtifact::from_bytes(&bytes);
+            let view = MappedWords::new(&art, 0, owned.padded_words().len()).unwrap();
+            let borrowed = BitMatrix::from_mapped(r, c, view).unwrap();
+            assert_eq!(borrowed, owned, "{r}x{c}");
+            assert_eq!(borrowed.to_dense(), m, "{r}x{c}");
+            assert!(borrowed.is_borrowed());
+            assert!(owned.resident_bytes() > 0 && owned.mapped_bytes() == 0);
+            // Heap-fallback backing: borrowed but still resident.
+            assert!(!borrowed.is_mapped());
+            assert_eq!(borrowed.resident_bytes(), owned.resident_bytes(), "{r}x{c}");
+        }
+        // Wrong word count and dirty padding are rejected before handout.
+        let owned = BitMatrix::ones(2, 65);
+        let mut bytes: Vec<u8> =
+            owned.padded_words().iter().flat_map(|w| w.to_le_bytes()).collect();
+        let art = MappedArtifact::from_bytes(&bytes);
+        assert!(BitMatrix::from_mapped(2, 65, MappedWords::new(&art, 0, 4).unwrap()).is_err());
+        bytes[8] |= 0x02; // set bit 65 of row 0 — a padding bit
+        let art = MappedArtifact::from_bytes(&bytes);
+        let view = MappedWords::new(&art, 0, owned.padded_words().len()).unwrap();
+        assert!(BitMatrix::from_mapped(2, 65, view).is_err());
     }
 
     #[test]

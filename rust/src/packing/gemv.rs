@@ -5,6 +5,7 @@
 use super::pool::SignPool;
 use super::{simd, BitMatrix};
 use crate::linalg::Mat;
+use crate::sys::ScaleVec;
 use std::cell::RefCell;
 
 thread_local! {
@@ -212,9 +213,9 @@ pub struct TriScaleLayer {
     ub: BitMatrix,
     /// `V_bᵀ` packed, `r × d_in`.
     vbt: BitMatrix,
-    h: Vec<f32>,
-    l: Vec<f32>,
-    g: Vec<f32>,
+    h: ScaleVec,
+    l: ScaleVec,
+    g: ScaleVec,
 }
 
 impl TriScaleLayer {
@@ -227,25 +228,28 @@ impl TriScaleLayer {
         Self {
             ub: BitMatrix::from_dense(ub),
             vbt: BitMatrix::from_dense(&vb.transpose()),
-            h,
-            l,
-            g,
+            h: h.into(),
+            l: l.into(),
+            g: g.into(),
         }
     }
 
     /// Rebuild from already-packed parts (the `.lb2` artifact load path:
-    /// bit-planes arrive word-verbatim via [`BitMatrix::from_words`], so no
-    /// re-packing happens). `ub` is `d_out × r`, `vbt` is the
+    /// bit-planes arrive word-verbatim via [`BitMatrix::from_words`], or
+    /// borrowed straight from a mapping via [`BitMatrix::from_mapped`] —
+    /// scales likewise accept owned vectors or mapped views through
+    /// [`ScaleVec`]). `ub` is `d_out × r`, `vbt` is the
     /// **pre-transposed** `V_bᵀ` (`r × d_in`). Shape mismatches return
     /// `Err` — this is a deserialization boundary, not a programmer-error
     /// assert.
     pub fn from_parts(
         ub: BitMatrix,
         vbt: BitMatrix,
-        h: Vec<f32>,
-        l: Vec<f32>,
-        g: Vec<f32>,
+        h: impl Into<ScaleVec>,
+        l: impl Into<ScaleVec>,
+        g: impl Into<ScaleVec>,
     ) -> anyhow::Result<Self> {
+        let (h, l, g) = (h.into(), l.into(), g.into());
         if ub.rows() != h.len() {
             anyhow::bail!("h length {} != d_out {}", h.len(), ub.rows());
         }
@@ -306,6 +310,28 @@ impl TriScaleLayer {
         self.ub.storage_bytes()
             + self.vbt.storage_bytes()
             + 2 * (self.h.len() + self.l.len() + self.g.len())
+    }
+
+    /// Weight bytes this process's RAM actually holds: padded owned
+    /// bit-planes plus owned scale vectors. Planes and scales borrowed
+    /// from a live mapping contribute 0 here and appear in
+    /// [`mapped_bytes`](Self::mapped_bytes) instead — the two never
+    /// overlap, so eval's bpp audit can sum them without double-counting.
+    pub fn resident_bytes(&self) -> usize {
+        self.ub.resident_bytes()
+            + self.vbt.resident_bytes()
+            + self.h.resident_bytes()
+            + self.l.resident_bytes()
+            + self.g.resident_bytes()
+    }
+
+    /// Weight bytes served from the page cache through a mapping.
+    pub fn mapped_bytes(&self) -> usize {
+        self.ub.mapped_bytes()
+            + self.vbt.mapped_bytes()
+            + self.h.mapped_bytes()
+            + self.l.mapped_bytes()
+            + self.g.mapped_bytes()
     }
 
     /// `y = h ⊙ (U_b (l ⊙ (V_bᵀ (g ⊙ x))))` — two *fused* sign-GEMVs; zero

@@ -65,6 +65,17 @@ impl PackedResidual {
         self.paths.iter().map(|p| p.storage_bytes()).sum()
     }
 
+    /// Heap-held weight bytes across all paths (0-contribution from
+    /// mapped planes; see [`TriScaleLayer::resident_bytes`]).
+    pub fn resident_bytes(&self) -> usize {
+        self.paths.iter().map(|p| p.resident_bytes()).sum()
+    }
+
+    /// Page-cache-backed weight bytes across all paths.
+    pub fn mapped_bytes(&self) -> usize {
+        self.paths.iter().map(|p| p.mapped_bytes()).sum()
+    }
+
     /// Total operation count of one forward: (sign-adds, fp-mults).
     pub fn op_counts(&self) -> (usize, usize) {
         self.paths.iter().fold((0, 0), |(a, m), p| {

@@ -33,7 +33,12 @@
 //! All lanes tolerate (and exploit) the padded layouts: `BitMatrix` rows
 //! are 4-word / 32-byte blocks with clear padding (asserted at kernel
 //! entry), `Mat` rows are 8-float / 32-byte blocks with zero padding, so
-//! 256-bit loads never straddle a row boundary.
+//! 256-bit loads never straddle a row boundary. Where the base address is
+//! provably 32-byte aligned the loads are the aligned forms (`vmovaps` in
+//! the GEMM batch strips — `Mat` rows always are; `vmovdqa` in
+//! XNOR-popcount after a per-call base check); loads from caller-supplied
+//! `x` vectors and the dense saxpy stay unaligned, since plain `Vec<f32>`
+//! carries no such guarantee.
 
 use crate::linalg::Mat;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -249,8 +254,8 @@ mod avx2 {
     /// reduction run in scalar on the extracted lanes.
     ///
     /// # Safety
-    /// AVX2 available; `c0 + 8 <= x.cols()`; `words` holds at least
-    /// `⌈cols/64⌉` words; `x.rows() == cols`.
+    /// AVX2 available; `c0 + 8 <= x.cols()`; `c0 % 8 == 0`; `words` holds
+    /// at least `⌈cols/64⌉` words; `x.rows() == cols`.
     #[target_feature(enable = "avx2")]
     pub(super) unsafe fn gemm_row_strip(
         words: &[u64],
@@ -258,6 +263,12 @@ mod avx2 {
         cols: usize,
         c0: usize,
     ) -> [f32; 8] {
+        // Every `Mat` row starts 32-byte aligned (AlignedF32 backing,
+        // 8-float stride) and the strip kernel only ever gets c0 in whole
+        // 8-column steps, so the strip loads below can be aligned loads.
+        debug_assert_eq!(c0 % 8, 0);
+        debug_assert_eq!(x.stride() % 8, 0);
+        debug_assert_eq!(x.padded().as_ptr() as usize % 32, 0);
         let full_words = cols / 64;
         let mut accv = [_mm256_setzero_ps(); 8];
         for c in 0..full_words {
@@ -269,7 +280,7 @@ mod avx2 {
                     // the scalar's `(bit̄) << 31` mask across all 8 lanes.
                     let neg = _mm256_set1_epi32(((((bits >> k) & 1) ^ 1) << 31) as i32);
                     let xrow = x.row(c * 64 + strip * 8 + k);
-                    let xv = _mm256_loadu_ps(xrow.as_ptr().add(c0));
+                    let xv = _mm256_load_ps(xrow.as_ptr().add(c0));
                     let signed =
                         _mm256_castsi256_ps(_mm256_xor_si256(_mm256_castps_si256(xv), neg));
                     accv[k] = _mm256_add_ps(accv[k], signed);
@@ -307,12 +318,29 @@ mod avx2 {
     /// order. Rows are whole 4-word (32-byte) blocks by the stride
     /// invariant, so no scalar tail exists.
     ///
+    /// Row bases are *usually* 32-byte aligned (AlignedU64 blocks and
+    /// mmap'd v3 planes both are), but the slices arrive as plain `&[u64]`
+    /// with no type-level guarantee, so alignment is checked once per call
+    /// and the loop dispatches to `vmovdqa` or `vmovdqu` accordingly.
+    ///
     /// # Safety
     /// AVX2 available; `a.len() == b.len()` and `len % 4 == 0`.
     #[target_feature(enable = "avx2")]
     pub(super) unsafe fn xnor_row_popcount(a: &[u64], b: &[u64]) -> u32 {
         debug_assert_eq!(a.len(), b.len());
         debug_assert_eq!(a.len() % 4, 0);
+        if (a.as_ptr() as usize | b.as_ptr() as usize) % 32 == 0 {
+            xnor_row_popcount_body::<true>(a, b)
+        } else {
+            xnor_row_popcount_body::<false>(a, b)
+        }
+    }
+
+    /// # Safety
+    /// As [`xnor_row_popcount`]; `ALIGNED` additionally asserts both base
+    /// pointers are 32-byte aligned.
+    #[target_feature(enable = "avx2")]
+    unsafe fn xnor_row_popcount_body<const ALIGNED: bool>(a: &[u64], b: &[u64]) -> u32 {
         #[rustfmt::skip]
         let lut = _mm256_setr_epi8(
             0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
@@ -323,8 +351,13 @@ mod avx2 {
         let mut sums = _mm256_setzero_si256(); // four u64 partial counts
         let mut i = 0;
         while i < a.len() {
-            let va = _mm256_loadu_si256(a.as_ptr().add(i) as *const __m256i);
-            let vb = _mm256_loadu_si256(b.as_ptr().add(i) as *const __m256i);
+            let pa = a.as_ptr().add(i) as *const __m256i;
+            let pb = b.as_ptr().add(i) as *const __m256i;
+            let (va, vb) = if ALIGNED {
+                (_mm256_load_si256(pa), _mm256_load_si256(pb))
+            } else {
+                (_mm256_loadu_si256(pa), _mm256_loadu_si256(pb))
+            };
             let x = _mm256_xor_si256(va, vb);
             let lo = _mm256_shuffle_epi8(lut, _mm256_and_si256(x, low));
             let hi = _mm256_shuffle_epi8(lut, _mm256_and_si256(_mm256_srli_epi16::<4>(x), low));
@@ -384,6 +417,33 @@ mod tests {
             for (p, q) in y0.iter().zip(&y1) {
                 assert_eq!(p.to_bits(), q.to_bits(), "n={n}");
             }
+        }
+    }
+
+    /// The XNOR kernel picks `vmovdqa` vs `vmovdqu` per call from the row
+    /// base addresses; all three cases (both aligned, both misaligned,
+    /// mixed) must agree with the scalar popcount.
+    #[test]
+    #[cfg(target_arch = "x86_64")]
+    fn xnor_avx2_aligned_and_unaligned_bases_agree() {
+        if !std::arch::is_x86_feature_detected!("avx2") {
+            return;
+        }
+        use crate::linalg::AlignedU64;
+        let mut a = AlignedU64::zeros(16);
+        let mut b = AlignedU64::zeros(16);
+        for (i, w) in a.as_mut_slice().iter_mut().enumerate() {
+            *w = (i as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        }
+        for (i, w) in b.as_mut_slice().iter_mut().enumerate() {
+            *w = (i as u64 + 17).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        }
+        let (a, b) = (a.as_slice(), b.as_slice());
+        // 12 words each: &s[..12] keeps the 32-byte base, &s[1..13] is
+        // 8-byte offset — deterministically misaligned.
+        for (sa, sb) in [(&a[..12], &b[..12]), (&a[1..13], &b[1..13]), (&a[..12], &b[1..13])] {
+            let want: u32 = sa.iter().zip(sb.iter()).map(|(x, y)| (x ^ y).count_ones()).sum();
+            assert_eq!(unsafe { avx2::xnor_row_popcount(sa, sb) }, want);
         }
     }
 

@@ -75,6 +75,14 @@ pub struct ServingConfig {
     /// half over `2·conn + 1`. `None` (the default) keeps connections on
     /// bare `TcpStream`s — the production path pays nothing.
     pub faults: Option<Arc<FaultPlan>>,
+    /// Model weight bytes on this process's heap, reported through the
+    /// STATS frame as `lb2_model_resident_bytes` (the CLI sets this from
+    /// the loaded stack; 0 when unknown). Disjoint from
+    /// [`model_mapped_bytes`](Self::model_mapped_bytes).
+    pub model_resident_bytes: u64,
+    /// Model weight bytes served from a page-cache `.lb2` mapping,
+    /// reported as `lb2_model_mapped_bytes` (0 for eager loads).
+    pub model_mapped_bytes: u64,
     /// Inner batcher configuration (batch size, wait, queue bound, workers).
     pub batch: ServerConfig,
 }
@@ -89,6 +97,8 @@ impl Default for ServingConfig {
             outbound_depth: 1024,
             expect_width: None,
             faults: None,
+            model_resident_bytes: 0,
+            model_mapped_bytes: 0,
             batch: ServerConfig::default(),
         }
     }
@@ -464,6 +474,8 @@ fn reader_loop<R: Read>(
             FrameKind::Stats => {
                 let mut stats = handle.stats();
                 stats.conn_threads = conns.load(Ordering::SeqCst);
+                stats.model_resident_bytes = cfg.model_resident_bytes;
+                stats.model_mapped_bytes = cfg.model_mapped_bytes;
                 let mut text = stats.render_metrics();
                 text.push_str(&format!("lb2_connections {}\n", conns.load(Ordering::SeqCst)));
                 let _ = tx.try_send(Frame::stats_text(h.id, &text));

@@ -1,0 +1,503 @@
+//! Reference-counted artifact backing and the typed zero-copy views the
+//! data layer borrows through it.
+//!
+//! [`MappedArtifact`] owns the bytes of one `.lb2` file — page-cache
+//! pages via [`Mmap`] on the zero-copy path, or a 32-byte-aligned heap
+//! buffer on the eager/fallback path — and hands out windows into them:
+//! [`MappedWords`] (packed `u64` bit-plane, 32-byte-aligned) and
+//! [`MappedF32s`] (scale vector, 4-byte-aligned). A view holds an
+//! `Arc<MappedArtifact>`, so the mapping lives exactly as long as any
+//! weight borrowed from it; every `serve` worker thread shares the one
+//! `Arc`, so N workers cost one mapping, not N weight copies.
+//!
+//! View constructors validate **everything** before the first dereference:
+//! element-count overflow, bounds against the backing, the alignment the
+//! unsafe slice cast relies on, and (for the raw reinterpret to be the
+//! identity) that the target is little-endian like the file format. A
+//! failed validation is an `Err` the caller downgrades to the
+//! copy-and-restride path — never a panic, never a misaligned load.
+
+use super::mmap::Mmap;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+use std::sync::Arc;
+
+/// 32-byte-aligned heap bytes — the eager backing, matching the alignment
+/// guarantees of the mapped one so borrowed views work identically over
+/// both (tests exercise the borrow path without touching the filesystem).
+struct AlignedBytes {
+    blocks: Vec<Block>,
+    len: usize,
+}
+
+#[repr(C, align(32))]
+#[derive(Clone, Copy)]
+struct Block([u8; 32]);
+
+impl AlignedBytes {
+    fn from_vec(bytes: &[u8]) -> Self {
+        let n_blocks = bytes.len().div_ceil(32);
+        let mut blocks = vec![Block([0u8; 32]); n_blocks];
+        // SAFETY: Block is repr(C) with no padding; the block array is at
+        // least bytes.len() bytes long.
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                bytes.as_ptr(),
+                blocks.as_mut_ptr() as *mut u8,
+                bytes.len(),
+            );
+        }
+        Self { blocks, len: bytes.len() }
+    }
+
+    #[inline]
+    fn as_slice(&self) -> &[u8] {
+        // SAFETY: the blocks are contiguous and len ≤ blocks.len()·32.
+        unsafe { std::slice::from_raw_parts(self.blocks.as_ptr() as *const u8, self.len) }
+    }
+}
+
+enum Backing {
+    /// Page-cache pages; resident cost ~0, the kernel pages in on demand.
+    Map(Mmap),
+    /// Heap copy (eager open, or non-unix): counts as resident bytes.
+    Heap(AlignedBytes),
+}
+
+/// One open `.lb2` file's bytes, shared by every view borrowed from it.
+pub struct MappedArtifact {
+    backing: Backing,
+}
+
+impl MappedArtifact {
+    /// Map `path` read-only. Falls back to an aligned heap read when the
+    /// mapping syscall fails (or on non-mmap platforms), so `open` always
+    /// yields a servable artifact — only [`is_mapped`](Self::is_mapped)
+    /// and the byte accounting differ.
+    pub fn open(path: impl AsRef<Path>) -> Result<Arc<Self>> {
+        let path = path.as_ref();
+        let file = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let backing = match Mmap::map(&file) {
+            Ok(m) if cfg!(unix) => Backing::Map(m),
+            // Non-unix Mmap is an eager read in disguise; account it as
+            // heap so mapped_bytes never lies.
+            Ok(m) => Backing::Heap(AlignedBytes::from_vec(m.as_slice())),
+            Err(_) => {
+                let bytes = std::fs::read(path)
+                    .with_context(|| format!("reading {}", path.display()))?;
+                Backing::Heap(AlignedBytes::from_vec(&bytes))
+            }
+        };
+        Ok(Arc::new(Self { backing }))
+    }
+
+    /// Aligned heap backing over bytes already in memory — the test and
+    /// fallback entry point; views borrow from it exactly as from a
+    /// mapping, but the bytes count as resident.
+    pub fn from_bytes(bytes: &[u8]) -> Arc<Self> {
+        Arc::new(Self { backing: Backing::Heap(AlignedBytes::from_vec(bytes)) })
+    }
+
+    /// Whole-file bytes. 32-byte-aligned base on both backings (page
+    /// alignment for the mapping, `repr(align(32))` for the heap).
+    #[inline]
+    pub fn bytes(&self) -> &[u8] {
+        match &self.backing {
+            Backing::Map(m) => m.as_slice(),
+            Backing::Heap(b) => b.as_slice(),
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.bytes().len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// True when the bytes live in the page cache rather than this
+    /// process's heap.
+    pub fn is_mapped(&self) -> bool {
+        matches!(self.backing, Backing::Map(_))
+    }
+
+    /// File bytes backed by the page cache (0 for heap backing).
+    pub fn mapped_bytes(&self) -> usize {
+        match &self.backing {
+            Backing::Map(m) => m.len(),
+            Backing::Heap(_) => 0,
+        }
+    }
+
+    /// File bytes held on this process's heap (0 when mapped).
+    pub fn resident_bytes(&self) -> usize {
+        match &self.backing {
+            Backing::Map(_) => 0,
+            Backing::Heap(b) => b.len,
+        }
+    }
+}
+
+impl std::fmt::Debug for MappedArtifact {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MappedArtifact")
+            .field("len", &self.len())
+            .field("mapped", &self.is_mapped())
+            .finish()
+    }
+}
+
+/// Validate one typed window: bounds, element alignment, endianness.
+/// Returns the validated byte offset for the view to store.
+fn validate_view(
+    art: &MappedArtifact,
+    offset: usize,
+    byte_len: usize,
+    align: usize,
+    what: &str,
+) -> Result<()> {
+    if !cfg!(target_endian = "little") {
+        bail!("zero-copy {what} views require a little-endian target (the .lb2 byte order)");
+    }
+    let end = offset.checked_add(byte_len).context("view range overflow")?;
+    if end > art.len() {
+        bail!(
+            "{what} view [{offset}, {end}) out of bounds of the {}-byte artifact",
+            art.len()
+        );
+    }
+    let addr = art.bytes().as_ptr() as usize + offset;
+    if addr % align != 0 {
+        bail!("{what} view at file offset {offset} is not {align}-byte aligned in memory");
+    }
+    Ok(())
+}
+
+/// A borrowed, 32-byte-aligned `u64` window into a [`MappedArtifact`] —
+/// the zero-copy backing of a [`crate::packing::BitMatrix`] bit-plane.
+/// Cheap to clone (Arc + two integers).
+#[derive(Clone)]
+pub struct MappedWords {
+    art: Arc<MappedArtifact>,
+    offset: usize,
+    words: usize,
+}
+
+impl MappedWords {
+    /// 32-byte alignment, not just `u64`'s 8: a plane row must be a valid
+    /// AVX2 `load` operand, same as the owned padded buffers.
+    pub fn new(art: &Arc<MappedArtifact>, offset: usize, words: usize) -> Result<Self> {
+        let byte_len = words.checked_mul(8).context("word view length overflow")?;
+        validate_view(art, offset, byte_len, 32, "bit-plane")?;
+        Ok(Self { art: Arc::clone(art), offset, words })
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[u64] {
+        // SAFETY: new() validated bounds, 32-byte (⊇ 8-byte) alignment,
+        // and the LE layout; the backing is immutable and outlives self
+        // via the Arc.
+        unsafe {
+            std::slice::from_raw_parts(
+                self.art.bytes().as_ptr().add(self.offset) as *const u64,
+                self.words,
+            )
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.words
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.words == 0
+    }
+
+    /// The artifact this view keeps alive.
+    pub fn artifact(&self) -> &Arc<MappedArtifact> {
+        &self.art
+    }
+
+    /// True when the backing artifact is page-cache mapped (false for the
+    /// aligned-heap fallback backing).
+    pub fn is_mapped(&self) -> bool {
+        self.art.is_mapped()
+    }
+}
+
+impl std::ops::Deref for MappedWords {
+    type Target = [u64];
+    #[inline]
+    fn deref(&self) -> &[u64] {
+        self.as_slice()
+    }
+}
+
+impl PartialEq for MappedWords {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl std::fmt::Debug for MappedWords {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MappedWords")
+            .field("offset", &self.offset)
+            .field("words", &self.words)
+            .field("mapped", &self.is_mapped())
+            .finish()
+    }
+}
+
+/// A borrowed, 4-byte-aligned `f32` window into a [`MappedArtifact`] —
+/// the zero-copy backing of a scale vector.
+#[derive(Clone)]
+pub struct MappedF32s {
+    art: Arc<MappedArtifact>,
+    offset: usize,
+    count: usize,
+}
+
+impl MappedF32s {
+    pub fn new(art: &Arc<MappedArtifact>, offset: usize, count: usize) -> Result<Self> {
+        let byte_len = count.checked_mul(4).context("f32 view length overflow")?;
+        validate_view(art, offset, byte_len, 4, "scale-vector")?;
+        Ok(Self { art: Arc::clone(art), offset, count })
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        // SAFETY: new() validated bounds, 4-byte alignment, and the LE
+        // layout; the backing is immutable and outlives self via the Arc.
+        unsafe {
+            std::slice::from_raw_parts(
+                self.art.bytes().as_ptr().add(self.offset) as *const f32,
+                self.count,
+            )
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.count
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn is_mapped(&self) -> bool {
+        self.art.is_mapped()
+    }
+}
+
+impl std::ops::Deref for MappedF32s {
+    type Target = [f32];
+    #[inline]
+    fn deref(&self) -> &[f32] {
+        self.as_slice()
+    }
+}
+
+impl PartialEq for MappedF32s {
+    fn eq(&self, other: &Self) -> bool {
+        // Bit compare, not float compare: two views are equal iff their
+        // stored bytes are (NaN-safe, matching the bit-identity contract).
+        self.as_slice().len() == other.as_slice().len()
+            && self
+                .as_slice()
+                .iter()
+                .zip(other.as_slice())
+                .all(|(a, b)| a.to_bits() == b.to_bits())
+    }
+}
+
+impl std::fmt::Debug for MappedF32s {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MappedF32s")
+            .field("offset", &self.offset)
+            .field("count", &self.count)
+            .field("mapped", &self.is_mapped())
+            .finish()
+    }
+}
+
+/// A scale vector with owned-or-borrowed backing — `Cow<[f32]>` whose
+/// borrowed arm carries the artifact lifetime in an `Arc` instead of a
+/// lifetime parameter, so layers stay `'static` and pool-shareable.
+/// Derefs to `[f32]`, so kernel call sites are backing-agnostic.
+#[derive(Clone, Debug)]
+pub enum ScaleVec {
+    Owned(Vec<f32>),
+    Mapped(MappedF32s),
+}
+
+impl ScaleVec {
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        match self {
+            ScaleVec::Owned(v) => v,
+            ScaleVec::Mapped(m) => m.as_slice(),
+        }
+    }
+
+    /// Heap bytes this vector reads from (0 when borrowed from a real
+    /// mapping; borrowed-from-heap-fallback still counts — those bytes
+    /// are in this process's RAM).
+    pub fn resident_bytes(&self) -> usize {
+        match self {
+            ScaleVec::Owned(v) => v.len() * 4,
+            ScaleVec::Mapped(m) if m.is_mapped() => 0,
+            ScaleVec::Mapped(m) => m.len() * 4,
+        }
+    }
+
+    /// Page-cache bytes this vector reads through (0 when owned).
+    pub fn mapped_bytes(&self) -> usize {
+        match self {
+            ScaleVec::Owned(_) => 0,
+            ScaleVec::Mapped(m) if m.is_mapped() => m.len() * 4,
+            ScaleVec::Mapped(_) => 0,
+        }
+    }
+
+    pub fn is_mapped(&self) -> bool {
+        matches!(self, ScaleVec::Mapped(m) if m.is_mapped())
+    }
+}
+
+impl std::ops::Deref for ScaleVec {
+    type Target = [f32];
+    #[inline]
+    fn deref(&self) -> &[f32] {
+        self.as_slice()
+    }
+}
+
+impl From<Vec<f32>> for ScaleVec {
+    fn from(v: Vec<f32>) -> Self {
+        ScaleVec::Owned(v)
+    }
+}
+
+impl From<MappedF32s> for ScaleVec {
+    fn from(m: MappedF32s) -> Self {
+        ScaleVec::Mapped(m)
+    }
+}
+
+impl PartialEq for ScaleVec {
+    fn eq(&self, other: &Self) -> bool {
+        // Bit compare: backing is irrelevant, stored values decide.
+        self.as_slice().len() == other.as_slice().len()
+            && self
+                .as_slice()
+                .iter()
+                .zip(other.as_slice())
+                .all(|(a, b)| a.to_bits() == b.to_bits())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn heap_backing_is_32_byte_aligned() {
+        let art = MappedArtifact::from_bytes(&[1u8; 100]);
+        assert_eq!(art.bytes().as_ptr() as usize % 32, 0);
+        assert_eq!(art.len(), 100);
+        assert!(!art.is_mapped());
+        assert_eq!(art.resident_bytes(), 100);
+        assert_eq!(art.mapped_bytes(), 0);
+    }
+
+    #[test]
+    fn word_view_reads_le_words() {
+        let mut bytes = Vec::new();
+        for w in [0x0123_4567_89AB_CDEFu64, u64::MAX, 0, 42] {
+            bytes.extend_from_slice(&w.to_le_bytes());
+        }
+        let art = MappedArtifact::from_bytes(&bytes);
+        let v = MappedWords::new(&art, 0, 4).unwrap();
+        assert_eq!(v.as_slice(), &[0x0123_4567_89AB_CDEF, u64::MAX, 0, 42]);
+    }
+
+    #[test]
+    fn f32_view_reads_le_floats() {
+        let mut bytes = Vec::new();
+        for f in [1.5f32, -0.25, f32::MIN_POSITIVE] {
+            bytes.extend_from_slice(&f.to_le_bytes());
+        }
+        let art = MappedArtifact::from_bytes(&bytes);
+        let v = MappedF32s::new(&art, 4, 2).unwrap();
+        assert_eq!(v.as_slice(), &[-0.25, f32::MIN_POSITIVE]);
+    }
+
+    #[test]
+    fn views_reject_misalignment_and_overrun() {
+        let art = MappedArtifact::from_bytes(&[0u8; 256]);
+        // Word views demand 32-byte alignment.
+        assert!(MappedWords::new(&art, 8, 1).is_err());
+        assert!(MappedWords::new(&art, 32, 1).is_ok());
+        // f32 views demand 4-byte alignment.
+        assert!(MappedF32s::new(&art, 2, 1).is_err());
+        assert!(MappedF32s::new(&art, 4, 1).is_ok());
+        // Out of bounds, including the overflow path.
+        assert!(MappedWords::new(&art, 224, 5).is_err());
+        assert!(MappedWords::new(&art, 0, usize::MAX / 8 + 1).is_err());
+        assert!(MappedF32s::new(&art, 256, 1).is_err());
+    }
+
+    #[test]
+    fn view_keeps_artifact_alive() {
+        let v = {
+            let art = MappedArtifact::from_bytes(&7u64.to_le_bytes());
+            MappedWords::new(&art, 0, 1).unwrap()
+            // art's Arc binding drops here; the view's clone keeps it.
+        };
+        assert_eq!(v.as_slice(), &[7]);
+    }
+
+    #[test]
+    fn scale_vec_backing_is_transparent() {
+        let owned = ScaleVec::from(vec![1.0f32, 2.0, 3.0]);
+        let mut bytes = Vec::new();
+        for f in [1.0f32, 2.0, 3.0] {
+            bytes.extend_from_slice(&f.to_le_bytes());
+        }
+        let art = MappedArtifact::from_bytes(&bytes);
+        let borrowed = ScaleVec::from(MappedF32s::new(&art, 0, 3).unwrap());
+        assert_eq!(owned, borrowed);
+        assert_eq!(&owned[..], &borrowed[..]);
+        assert_eq!(owned.resident_bytes(), 12);
+        // Heap-backed artifact: the borrowed bytes are still in this
+        // process's RAM, so they count as resident, not mapped.
+        assert_eq!(borrowed.resident_bytes(), 12);
+        assert_eq!(borrowed.mapped_bytes(), 0);
+        assert!(!borrowed.is_mapped());
+    }
+
+    #[test]
+    fn open_maps_a_real_file() {
+        let mut path = std::env::temp_dir();
+        path.push(format!("lb2_mapped_art_{}.bin", std::process::id()));
+        let payload: Vec<u8> = (0u8..=63).collect();
+        std::fs::write(&path, &payload).unwrap();
+        let art = MappedArtifact::open(&path).unwrap();
+        assert_eq!(art.bytes(), &payload[..]);
+        if art.is_mapped() {
+            assert_eq!(art.mapped_bytes(), payload.len());
+            assert_eq!(art.resident_bytes(), 0);
+        }
+        drop(art);
+        std::fs::remove_file(&path).unwrap();
+    }
+}

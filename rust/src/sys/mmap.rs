@@ -1,0 +1,233 @@
+//! Read-only file mapping over raw libc prototypes — no `libc` crate.
+//!
+//! The build image has no crates.io access, so instead of pulling in
+//! `memmap2` this module declares the exact two symbols it needs via
+//! `extern "C"` and keeps the constants it passes to a portable subset:
+//! `PROT_READ` is 1 and `MAP_PRIVATE` is 2 on every Tier-1 unix target
+//! (Linux, macOS, the BSDs). The mapping is private and read-only, so the
+//! returned pages can never be written back to the file and a `&[u8]`
+//! over them is sound for the life of the [`Mmap`].
+//!
+//! Kernel-guaranteed base alignment: `mmap(NULL, …)` returns a
+//! page-aligned address (≥ 4096 bytes), so any file offset that is
+//! 32-byte aligned lands at a 32-byte-aligned memory address — the
+//! invariant the `.lb2` v3 "aligned" encoding builds on (see
+//! `artifact`'s module docs).
+//!
+//! Contract: the caller must not truncate or rewrite the underlying file
+//! while the mapping is live (a concurrent truncation makes reads fault —
+//! the same rule every mmap consumer lives under). The serve path holds
+//! the artifact open only through this mapping and never writes it.
+
+use anyhow::{bail, Context, Result};
+use std::fs::File;
+
+#[cfg(unix)]
+mod raw {
+    use std::ffi::{c_int, c_void};
+
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+    /// `MAP_FAILED` is `(void*)-1`, not NULL.
+    pub const MAP_FAILED: *mut c_void = usize::MAX as *mut c_void;
+
+    extern "C" {
+        /// `off_t` is declared `i64`; correct on every 64-bit unix target
+        /// (the only ones this crate ships on — see the workspace docs).
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+}
+
+/// A read-only, private, whole-file memory mapping.
+///
+/// Unmapped on drop. `Send + Sync`: the pages are immutable for the
+/// mapping's lifetime (PROT_READ, MAP_PRIVATE), so shared cross-thread
+/// reads are data-race-free.
+#[cfg(unix)]
+pub struct Mmap {
+    ptr: *mut std::ffi::c_void,
+    len: usize,
+}
+
+#[cfg(unix)]
+impl Mmap {
+    /// Map all `len` bytes of an open file read-only. The length is taken
+    /// from the caller (typically `File::metadata`) and validated against
+    /// a fresh `metadata()` call so a file that shrank between stat and
+    /// map fails loudly instead of faulting later.
+    pub fn map(file: &File) -> Result<Self> {
+        use std::os::unix::io::AsRawFd;
+
+        let len = file.metadata().context("stat for mmap")?.len();
+        let len = usize::try_from(len).context("file too large to map")?;
+        if len == 0 {
+            // mmap(len = 0) is EINVAL; an empty mapping needs no pages.
+            return Ok(Self { ptr: std::ptr::null_mut(), len: 0 });
+        }
+        // SAFETY: NULL hint, read-only private mapping of a file we hold
+        // open; the kernel picks the address. Failure is MAP_FAILED.
+        let ptr = unsafe {
+            raw::mmap(
+                std::ptr::null_mut(),
+                len,
+                raw::PROT_READ,
+                raw::MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr == raw::MAP_FAILED || ptr.is_null() {
+            bail!("mmap of {len} bytes failed (errno {})", std::io::Error::last_os_error());
+        }
+        Ok(Self { ptr, len })
+    }
+
+    /// The mapped bytes. Page-aligned base for non-empty mappings.
+    #[inline]
+    pub fn as_slice(&self) -> &[u8] {
+        if self.len == 0 {
+            return &[];
+        }
+        // SAFETY: ptr..ptr+len is a live PROT_READ mapping owned by self;
+        // no &mut ever exists.
+        unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+// SAFETY: the pages are read-only for the mapping's whole lifetime and the
+// fd is not retained, so sending or sharing the handle across threads
+// cannot race.
+#[cfg(unix)]
+unsafe impl Send for Mmap {}
+#[cfg(unix)]
+unsafe impl Sync for Mmap {}
+
+#[cfg(unix)]
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        if self.len > 0 {
+            // SAFETY: exactly the region mmap returned; double-unmap is
+            // impossible (Drop runs once, the struct is not Clone).
+            unsafe {
+                raw::munmap(self.ptr, self.len);
+            }
+        }
+    }
+}
+
+#[cfg(unix)]
+impl std::fmt::Debug for Mmap {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Mmap").field("len", &self.len).finish()
+    }
+}
+
+/// Non-unix stand-in: no mapping syscall to call, so "mapping" a file is
+/// an eager read. [`super::MappedArtifact`] treats this backing as
+/// resident (not mapped) in its byte accounting, so the metrics stay
+/// honest on platforms without the real thing.
+#[cfg(not(unix))]
+pub struct Mmap {
+    bytes: Vec<u8>,
+}
+
+#[cfg(not(unix))]
+impl Mmap {
+    pub fn map(file: &File) -> Result<Self> {
+        use std::io::Read;
+        let mut f = file;
+        let mut bytes = Vec::new();
+        f.read_to_end(&mut bytes).context("reading file (no mmap on this platform)")?;
+        Ok(Self { bytes })
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[u8] {
+        &self.bytes
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.bytes.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.bytes.is_empty()
+    }
+}
+
+#[cfg(not(unix))]
+impl std::fmt::Debug for Mmap {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Mmap").field("len", &self.len()).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn temp_path(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("lb2_mmap_{}_{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn maps_file_bytes_verbatim() {
+        let path = temp_path("verbatim");
+        let payload: Vec<u8> = (0..=255u8).cycle().take(10_000).collect();
+        std::fs::File::create(&path).unwrap().write_all(&payload).unwrap();
+        let file = File::open(&path).unwrap();
+        let m = Mmap::map(&file).unwrap();
+        assert_eq!(m.len(), payload.len());
+        assert_eq!(m.as_slice(), &payload[..]);
+        drop(m);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn empty_file_maps_to_empty_slice() {
+        let path = temp_path("empty");
+        std::fs::File::create(&path).unwrap();
+        let file = File::open(&path).unwrap();
+        let m = Mmap::map(&file).unwrap();
+        assert!(m.is_empty());
+        assert_eq!(m.as_slice(), &[] as &[u8]);
+        drop(m);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn base_is_page_aligned() {
+        let path = temp_path("aligned");
+        std::fs::File::create(&path).unwrap().write_all(&[7u8; 64]).unwrap();
+        let file = File::open(&path).unwrap();
+        let m = Mmap::map(&file).unwrap();
+        // Page alignment implies the 32-byte alignment the v3 layout uses.
+        assert_eq!(m.as_slice().as_ptr() as usize % 4096, 0);
+        drop(m);
+        std::fs::remove_file(&path).unwrap();
+    }
+}

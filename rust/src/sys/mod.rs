@@ -1,0 +1,17 @@
+//! Platform-interface layer: the lowest rung of the crate, below
+//! `linalg`/`packing` — nothing here may depend on any other module.
+//!
+//! The vendored-offline constraint rules out the `libc`/`memmap2` crates,
+//! so [`mmap`] declares the two raw prototypes it needs (`mmap`/`munmap`)
+//! directly against the platform C library and wraps them in a safe,
+//! read-only [`Mmap`]. [`mapped`] builds the typed zero-copy views the
+//! data layer borrows its weights through: a reference-counted
+//! [`MappedArtifact`] plus alignment-validated `u64`/`f32` windows into
+//! it ([`MappedWords`], [`MappedF32s`]) and the owned-or-mapped scale
+//! vector [`ScaleVec`].
+
+pub mod mapped;
+pub mod mmap;
+
+pub use mapped::{MappedArtifact, MappedF32s, MappedWords, ScaleVec};
+pub use mmap::Mmap;

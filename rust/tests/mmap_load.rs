@@ -1,0 +1,274 @@
+//! The zero-copy loading contract, end to end: a v3 "aligned" `.lb2`
+//! served through `load_mmap` is **bit-identical** — in representation and
+//! in forwards, on both SIMD lanes — to the same stack eagerly loaded from
+//! a v2 file; v1/v2 artifacts still load through the mmap entry point via
+//! the copy-and-restride fallback; the resident/mapped byte accounting is
+//! disjoint and sums to the eager footprint; and a corrupted v3 file —
+//! truncation at every byte, any flipped bit, dirty alignment filler or
+//! plane pad words under a recomputed CRC — is `Err`, never a panic.
+
+use littlebit2::artifact::{
+    read_method_stack, write_method_stack_aligned, write_stack_v1, ArtifactReader,
+    ArtifactWriter, FORMAT_VERSION_V3, TAG_SIGN,
+};
+use littlebit2::linalg::Mat;
+use littlebit2::littlebit::{CompressionConfig, InitStrategy};
+use littlebit2::model::{MethodStack, PackedStack};
+use littlebit2::packing::{force_scalar, scalar_forced};
+use littlebit2::parallel::Pool;
+use littlebit2::quant::MethodSpec;
+use littlebit2::rng::Pcg64;
+use littlebit2::spectral::{synth_weight, SynthSpec};
+use std::path::PathBuf;
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+/// Serialize lane-pin manipulation (same pattern as tests/simd_lanes.rs).
+fn lane_lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    match LOCK.get_or_init(|| Mutex::new(())).lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+fn with_lane<R>(scalar: bool, f: impl FnOnce() -> R) -> R {
+    let pinned = scalar_forced();
+    force_scalar(scalar);
+    let out = f();
+    force_scalar(pinned);
+    out
+}
+
+/// Synthetic heavy-tailed chain weights; dims deliberately off the 64
+/// multiple so bit-planes carry ragged tails (and v3 actually pads).
+fn chain_weights(dims: &[usize], seed: u64) -> Vec<Mat> {
+    let mut rng = Pcg64::seed(seed);
+    dims.windows(2)
+        .map(|w| {
+            let spec =
+                SynthSpec { rows: w[1], cols: w[0], gamma: 0.3, coherence: 0.6, scale: 1.0 };
+            synth_weight(&spec, &mut rng)
+        })
+        .collect()
+}
+
+fn method_stack(method: &MethodSpec, dims: &[usize], seed: u64) -> MethodStack {
+    let compressor = method.compressor();
+    let mut rng = Pcg64::seed(seed ^ 0x5eed);
+    let layers = chain_weights(dims, seed)
+        .iter()
+        .map(|w| compressor.compress_layer(w, Pool::serial(), &mut rng).unwrap())
+        .collect();
+    MethodStack::uniform(method.name(), layers).unwrap()
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("lb2_mmap_{}_{name}.lb2", std::process::id()))
+}
+
+fn assert_forward_bits_equal(a: &Mat, b: &Mat, what: &str) {
+    assert_eq!(a.shape(), b.shape(), "{what}: shape");
+    for i in 0..a.rows() {
+        for (j, (x, y)) in a.row(i).iter().zip(b.row(i)).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: ({i},{j}): {x} vs {y}");
+        }
+    }
+}
+
+/// The headline acceptance case: for a packed (littlebit2), a sign-scaled
+/// (onebit), and a dense low-rank (tinyrank) stack, a v3 aligned artifact
+/// served via `load_mmap` equals the eager v2 load bit-for-bit — same
+/// representation, same batched forwards on the scalar AND the AVX2 lane —
+/// and the resident/mapped accounting partitions the eager footprint.
+#[test]
+fn aligned_mmap_load_is_bit_identical_to_eager_load() {
+    for name in ["littlebit2", "onebit", "tinyrank"] {
+        let spec = MethodSpec::parse(name, 1.0, InitStrategy::JointItq { iters: 8 }).unwrap();
+        let stack = method_stack(&spec, &[44, 70, 44], 91);
+        let p2 = tmp(&format!("v2_{name}"));
+        let p3 = tmp(&format!("v3_{name}"));
+        stack.save(&p2).unwrap();
+        stack.save_aligned(&p3).unwrap();
+        let eager = MethodStack::load(&p2).unwrap();
+        let mapped = MethodStack::load_mmap(&p3).unwrap();
+        // Unlinking under a live mapping is fine on unix — the pages stay.
+        let _ = std::fs::remove_file(&p2);
+        let _ = std::fs::remove_file(&p3);
+
+        assert_eq!(eager, stack, "{name}: eager v2 load must round-trip verbatim");
+        // PartialEq compares plane words and scale bits, not backing — the
+        // borrowed stack must be indistinguishable content-wise.
+        assert_eq!(mapped, stack, "{name}: mmap v3 load must round-trip verbatim");
+
+        // Accounting: eager holds everything on the heap; the mapped stack
+        // splits the SAME bytes between heap and page cache, disjointly.
+        assert_eq!(eager.mapped_bytes(), 0, "{name}: eager load must not report mappings");
+        assert!(eager.resident_bytes() > 0);
+        assert_eq!(
+            eager.resident_bytes(),
+            mapped.resident_bytes() + mapped.mapped_bytes(),
+            "{name}: resident+mapped must partition the eager footprint"
+        );
+        if name == "tinyrank" {
+            // Dense low-rank serving forms are always copied into `Mat`s.
+            assert_eq!(mapped.mapped_bytes(), 0, "{name}: dense layers never borrow");
+        } else if cfg!(unix) {
+            assert!(mapped.is_mapped(), "{name}: v3 on unix must borrow the mapping");
+            assert!(mapped.mapped_bytes() > 0);
+        }
+
+        // Forwards, both lanes: borrowed planes/scales must feed the
+        // kernels to the exact bits of the owned copies.
+        let mut rng = Pcg64::seed(92);
+        let mut x = Mat::zeros(44, 5);
+        x.fill_normal(&mut rng);
+        let _guard = lane_lock();
+        for scalar in [true, false] {
+            with_lane(scalar, || {
+                let want = eager.forward_batch(&x);
+                let got = mapped.forward_batch(&x);
+                assert_forward_bits_equal(&want, &got, &format!("{name} scalar={scalar}"));
+            });
+        }
+    }
+}
+
+/// `load_mmap` on pre-v3 artifacts: the copy-and-restride fallback loads
+/// v2 and v1 files bit-identically, reporting zero mapped bytes.
+#[test]
+fn mmap_entry_point_reads_v1_and_v2_via_copy_fallback() {
+    let mut rng = Pcg64::seed(101);
+    let weights = chain_weights(&[70, 90], 101);
+    let cfg = CompressionConfig {
+        bpp: 1.0,
+        strategy: InitStrategy::JointItq { iters: 8 },
+        residual: true,
+        ..Default::default()
+    };
+    let packed = PackedStack::compress_chain(&weights, &cfg, &mut rng);
+
+    // v2 through the generic entry point.
+    let stack = MethodStack::from(packed.clone());
+    let p2 = tmp("fallback_v2");
+    stack.save(&p2).unwrap();
+    let mapped_v2 = MethodStack::load_mmap(&p2).unwrap();
+    let _ = std::fs::remove_file(&p2);
+    assert_eq!(mapped_v2, stack, "v2 through load_mmap must match the saved stack");
+    assert_eq!(mapped_v2.mapped_bytes(), 0, "v2 payloads are never borrowed");
+
+    // v1 (PR 3/4 era, LAYR-only) through the same entry point.
+    let p1 = tmp("fallback_v1");
+    let bytes = write_stack_v1(&packed, Vec::new()).unwrap();
+    std::fs::write(&p1, &bytes).unwrap();
+    let mapped_v1 = MethodStack::load_mmap(&p1).unwrap();
+    let _ = std::fs::remove_file(&p1);
+    assert_eq!(mapped_v1.mapped_bytes(), 0, "v1 payloads are never borrowed");
+    let mut rng = Pcg64::seed(102);
+    let mut x = Mat::zeros(70, 3);
+    x.fill_normal(&mut rng);
+    assert_forward_bits_equal(&packed.forward_batch(&x), &mapped_v1.forward_batch(&x), "v1");
+
+    // And the packed-specific pair: save_aligned → PackedStack::load_mmap.
+    let p3 = tmp("fallback_packed_v3");
+    packed.save_aligned(&p3).unwrap();
+    let packed_mapped = PackedStack::load_mmap(&p3).unwrap();
+    let _ = std::fs::remove_file(&p3);
+    assert_eq!(packed_mapped, packed, "packed v3 mmap load must round-trip verbatim");
+}
+
+/// The corrupt-file matrix on the v3 aligned encoding: truncation at EVERY
+/// byte and a flipped bit at every byte must be `Err`, never a panic.
+#[test]
+fn v3_corruption_matrix_never_panics() {
+    let spec = MethodSpec::parse("littlebit2", 1.0, InitStrategy::JointItq { iters: 8 }).unwrap();
+    let stack = method_stack(&spec, &[40, 70], 93);
+    let bytes = write_method_stack_aligned(&stack, Vec::new()).unwrap();
+    assert!(read_method_stack(&bytes).is_ok(), "pristine v3 bytes must load");
+
+    for len in 0..bytes.len() {
+        let prefix = bytes[..len].to_vec();
+        match std::panic::catch_unwind(|| read_method_stack(&prefix)) {
+            Ok(r) => assert!(r.is_err(), "truncation to {len} bytes parsed successfully"),
+            Err(_) => panic!("truncation to {len} bytes PANICKED instead of returning Err"),
+        }
+    }
+    for i in 0..bytes.len() {
+        let mut bad = bytes.clone();
+        bad[i] ^= 0x01;
+        match std::panic::catch_unwind(|| read_method_stack(&bad)) {
+            Ok(r) => assert!(r.is_err(), "bit flip at byte {i} parsed successfully"),
+            Err(_) => panic!("bit flip at byte {i} PANICKED instead of returning Err"),
+        }
+    }
+}
+
+/// The same contract through the real file-backed mmap path, on a coarse
+/// grid (the full matrix above runs in-memory): every sampled truncation
+/// and bit flip must fail `load_mmap` with `Err`, never a panic.
+#[test]
+fn v3_corruption_through_mmap_path_errs() {
+    let spec = MethodSpec::parse("onebit", 1.0, InitStrategy::Standard).unwrap();
+    let stack = method_stack(&spec, &[40, 70], 94);
+    let bytes = write_method_stack_aligned(&stack, Vec::new()).unwrap();
+    let path = tmp("corrupt");
+
+    for len in (0..bytes.len()).step_by(97) {
+        std::fs::write(&path, &bytes[..len]).unwrap();
+        assert!(
+            MethodStack::load_mmap(&path).is_err(),
+            "mmap load of a {len}-byte truncation parsed successfully"
+        );
+    }
+    for i in (0..bytes.len()).step_by(131) {
+        let mut bad = bytes.clone();
+        bad[i] ^= 0x01;
+        std::fs::write(&path, &bad).unwrap();
+        assert!(
+            MethodStack::load_mmap(&path).is_err(),
+            "mmap load with bit flip at byte {i} parsed successfully"
+        );
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Dirty padding under a **valid CRC** (a plain bit flip is caught by the
+/// container checksum; this rebuilds the trailer) must still be rejected:
+/// the alignment filler between scales and planes, and the per-row pad
+/// words of a plane, are required zero by the v3 contract.
+#[test]
+fn dirty_v3_padding_rejected_even_with_valid_crc() {
+    // One onebit layer, 45×70: the SGNS payload is 16 header bytes +
+    // 4·(45+70) scale bytes = 476, so 4 filler bytes pad to the plane at
+    // 480; the plane rows are padded_stride(70) = 4 words against 2 tight
+    // words, so bytes 496..512 of row 0 are pad words.
+    let spec = MethodSpec::parse("onebit", 1.0, InitStrategy::Standard).unwrap();
+    let stack = method_stack(&spec, &[70, 45], 95);
+    let bytes = write_method_stack_aligned(&stack, Vec::new()).unwrap();
+
+    // Re-emit all sections verbatim except a payload edit at `poke`,
+    // recomputing the trailer so only the semantic check can object.
+    let tamper = |poke: usize, value: u8| -> Vec<u8> {
+        let mut r = ArtifactReader::new(&bytes).unwrap();
+        let mut w = ArtifactWriter::with_version(Vec::new(), FORMAT_VERSION_V3).unwrap();
+        while let Some((tag, body)) = r.next_section() {
+            if tag == TAG_SIGN {
+                let mut body = body.to_vec();
+                assert_eq!(body[poke], 0, "expected to poke a zero pad byte");
+                body[poke] = value;
+                w.section(tag, &body).unwrap();
+            } else {
+                w.section(tag, body).unwrap();
+            }
+        }
+        w.finish().unwrap()
+    };
+
+    let dirty_filler = tamper(476, 0xFF);
+    let err = read_method_stack(&dirty_filler).unwrap_err();
+    assert!(format!("{err:?}").contains("alignment filler"), "{err:?}");
+
+    let dirty_pad_word = tamper(480 + 20, 0xFF);
+    let err = read_method_stack(&dirty_pad_word).unwrap_err();
+    let msg = format!("{err:?}");
+    assert!(msg.contains("pad words") || msg.contains("padding"), "{msg}");
+}

@@ -153,6 +153,35 @@ fn xnor_popcount_lanes_identical() {
     }
 }
 
+/// Matrices rebuilt from the tight disk words (the copy-restride path the
+/// v1/v2 artifact loaders — and the mmap loader's misalignment fallback —
+/// go through) must drive the aligned-load kernels to the same bits as
+/// their `from_dense` originals, on both lanes.
+#[test]
+fn restrided_matrices_hit_identical_kernel_bits() {
+    let _guard = lane_lock();
+    let mut rng = Pcg64::seed(808);
+    for (rows, cols) in [(66usize, 127usize), (67, 191)] {
+        let s = BitMatrix::from_dense(&Mat::gaussian(rows, cols, &mut rng).signum());
+        let words: Vec<u64> = s.tight_words().collect();
+        let r = BitMatrix::from_words(rows, cols, words).expect("restride tight words");
+        let x = Mat::gaussian(cols, 9, &mut rng);
+        for scalar in [true, false] {
+            let mut y_orig = Mat::zeros(rows, 9);
+            let mut y_restr = Mat::zeros(rows, 9);
+            with_lane(scalar, || {
+                gemm_sign(&s, &x, &mut y_orig);
+                gemm_sign(&r, &x, &mut y_restr);
+            });
+            assert_mats_bit_equal(
+                &y_orig,
+                &y_restr,
+                &format!("restride gemm {rows}x{cols} scalar={scalar}"),
+            );
+        }
+    }
+}
+
 /// The padded-layout invariants the kernels lean on: 4-word (32-byte) row
 /// stride, padding words always zero through every construction path, and
 /// a tight on-disk word stream unchanged from the pre-padding format.
