@@ -4,7 +4,7 @@
 # PJRT-gated paths (`--features xla`): the train CLI, examples/e2e_qat,
 # tests/runtime_e2e.
 
-.PHONY: build test test-scalar bench bench-build bench-gemm bench-compress bench-load clippy artifacts doc roundtrip eval serve-smoke chaos
+.PHONY: build test test-scalar bench bench-build bench-gemm bench-compress bench-load bench-cluster clippy artifacts doc roundtrip eval serve-smoke cluster-smoke chaos
 
 build:
 	cargo build --release
@@ -58,6 +58,49 @@ serve-smoke: build
 	wait $$srv || rc=$$?; \
 	exit $$rc
 
+# Sharded serving smoke, both shard modes over real loopback sockets.
+# Pipeline pass: tracker + 2 peers (one eager, one mmap), bit-identity
+# verified requests through the tracker, then ONE PEER IS KILLED
+# mid-run and the verified client pass repeats against the re-sharded
+# survivor before a wire SHUTDOWN drains the cluster. The tracker exits
+# non-zero if its exactly-once ledger does not reconcile
+# (accepted != served + failed + deadline-missed), and `wait` propagates
+# that, so a lost request fails the target. Row-shard pass: same cluster
+# shape, every peer holding row shards of every layer, verified and
+# drained. Background processes run the built binary directly (not
+# `cargo run`) so `kill` reaches the server process itself; --serve-secs
+# watchdogs unhang CI if either side dies early. Run by the build-test
+# CI job in both SIMD lanes.
+cluster-smoke: build
+	cargo run --release -- compress --size 48 --layers 3 --bpp 1.0 --aligned 1 --out target/cluster_smoke.lb2
+	target/release/littlebit2 tracker --model target/cluster_smoke.lb2 --listen 127.0.0.1:41713 --peers 2 --mode pipeline --heartbeat-ms 750 --serve-secs 90 & \
+	trk=$$!; \
+	target/release/littlebit2 peer --model target/cluster_smoke.lb2 --tracker 127.0.0.1:41713 --serve-secs 90 & \
+	p1=$$!; \
+	target/release/littlebit2 peer --model target/cluster_smoke.lb2 --tracker 127.0.0.1:41713 --mmap 1 --serve-secs 90 & \
+	p2=$$!; \
+	sleep 2; \
+	rc=0; \
+	cargo run --release -- client --connect 127.0.0.1:41713 --width 48 --requests 32 --concurrency 2 --verify 1 || rc=$$?; \
+	kill $$p2; \
+	cargo run --release -- client --connect 127.0.0.1:41713 --width 48 --requests 32 --concurrency 2 --verify 1 --stats 1 --shutdown 1 || rc=$$?; \
+	wait $$trk || rc=$$?; \
+	wait $$p1 || rc=$$?; \
+	exit $$rc
+	target/release/littlebit2 tracker --model target/cluster_smoke.lb2 --listen 127.0.0.1:41714 --peers 2 --mode rowshard --heartbeat-ms 750 --serve-secs 90 & \
+	trk=$$!; \
+	target/release/littlebit2 peer --model target/cluster_smoke.lb2 --tracker 127.0.0.1:41714 --serve-secs 90 & \
+	p1=$$!; \
+	target/release/littlebit2 peer --model target/cluster_smoke.lb2 --tracker 127.0.0.1:41714 --serve-secs 90 & \
+	p2=$$!; \
+	sleep 2; \
+	rc=0; \
+	cargo run --release -- client --connect 127.0.0.1:41714 --width 48 --requests 32 --concurrency 2 --verify 1 --stats 1 --shutdown 1 || rc=$$?; \
+	wait $$trk || rc=$$?; \
+	wait $$p1 || rc=$$?; \
+	wait $$p2 || rc=$$?; \
+	exit $$rc
+
 # The chaos soak (tests/chaos_soak.rs): the serving stack under seeded
 # fault injection at the wire AND backend boundaries, driven by retrying
 # clients until every request is answered bit-identical to the in-process
@@ -100,6 +143,12 @@ bench-compress:
 # (EXPERIMENTS.md #Load-latency).
 bench-load:
 	cargo bench --bench load_latency
+
+# Cluster scaling: serial throughput and latency quantiles vs peer count
+# for both shard modes over loopback; refreshes BENCH_cluster.json at the
+# repo root (EXPERIMENTS.md #Cluster-scaling).
+bench-cluster:
+	cargo bench --bench cluster_scaling
 
 clippy:
 	cargo clippy --all-targets -- -D warnings

@@ -1,0 +1,200 @@
+//! Cluster scaling: throughput and tail latency vs peer count, for both
+//! shard modes.
+//!
+//! The tentpole question for sharded serving is where each cut pays:
+//! pipeline parallelism splits *layers* (activations hop between stages,
+//! so per-request latency gains little but stages can overlap distinct
+//! requests), row sharding splits *rows* of every layer (each request
+//! fans out and gathers per layer, trading one hop for `peers` smaller
+//! GEMVs plus gather overhead). This bench drives a tracker + N peers
+//! over loopback at peers ∈ {1, 2, 4} per mode and reports, per point:
+//!
+//! * `tok_s` — serial request throughput (single in-flight client; the
+//!   dynamic-batching front-end is bench-marked separately).
+//! * `p50_ms` / `p99_ms` — per-request latency quantiles.
+//! * `stage_mean_us` — the tracker's own drive-hop timing, isolating
+//!   compute + hop time from client-side framing.
+//!
+//! Everything runs in one process over 127.0.0.1, so numbers measure
+//! protocol + kernel cost, not real network transit. Results land in
+//! `BENCH_cluster.json` at the repository root.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use littlebit2::cluster::{Peer, PeerConfig, PeerHandle, ShardMode, Tracker, TrackerConfig};
+use littlebit2::linalg::Mat;
+use littlebit2::littlebit::{CompressionConfig, InitStrategy};
+use littlebit2::model::{MethodStack, PackedStack};
+use littlebit2::rng::Pcg64;
+use littlebit2::serving::WireClient;
+use littlebit2::spectral::{synth_weight, SynthSpec};
+use std::time::{Duration, Instant};
+
+struct Row {
+    mode: &'static str,
+    peers: usize,
+    requests: usize,
+    tok_s: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    stage_mean_us: f64,
+}
+
+fn quantile(sorted_ms: &[f64], q: f64) -> f64 {
+    if sorted_ms.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted_ms.len() - 1) as f64 * q).round() as usize;
+    sorted_ms[idx]
+}
+
+fn measure(path: &std::path::Path, mode: ShardMode, n_peers: usize, requests: usize) -> Row {
+    let tracker = Tracker::start(TrackerConfig {
+        expect_peers: n_peers,
+        heartbeat_timeout: Duration::from_millis(1000),
+        ..TrackerConfig::new(path, mode)
+    })
+    .expect("tracker");
+    let peers: Vec<PeerHandle> = (0..n_peers)
+        .map(|_| {
+            Peer::start(PeerConfig {
+                heartbeat_interval: Duration::from_millis(100),
+                ..PeerConfig::new(tracker.addr().to_string(), path)
+            })
+            .expect("peer")
+        })
+        .collect();
+    assert!(tracker.wait_for_plan(Duration::from_secs(10)), "no plan");
+    let t0 = Instant::now();
+    while peers.iter().any(|p| p.epoch().is_none()) {
+        assert!(t0.elapsed() < Duration::from_secs(10), "peers never loaded");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    let shapes = littlebit2::artifact::load_stack_shapes(path).expect("shapes");
+    let mut rng = Pcg64::seed(4242);
+    let mut x = vec![0.0f32; shapes.d_in()];
+    rng.fill_normal(&mut x);
+
+    let mut client = WireClient::connect(tracker.addr()).expect("client");
+    for i in 0..8u64 {
+        client.infer(i, &x, 0).expect("warmup"); // warm conns + page cache
+    }
+    let mut lat_ms = Vec::with_capacity(requests);
+    let run0 = Instant::now();
+    for i in 0..requests as u64 {
+        let t = Instant::now();
+        client.infer(100 + i, &x, 0).expect("infer");
+        lat_ms.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    let wall_s = run0.elapsed().as_secs_f64();
+    drop(client);
+
+    let stats = tracker.stats();
+    let stage_mean_us = if stats.bytes_forward() > 0 {
+        // Recompute from the exposition totals rather than re-exporting
+        // raw counters: same number STATS reports.
+        tracker
+            .stats_text()
+            .lines()
+            .find_map(|l| l.strip_prefix("lb2_cluster_stage_mean_us "))
+            .and_then(|v| v.trim().parse().ok())
+            .unwrap_or(0.0)
+    } else {
+        0.0
+    };
+    for p in peers {
+        p.stop();
+    }
+    let summary = tracker.shutdown();
+    assert!(summary.reconciled, "ledger did not reconcile");
+
+    lat_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let row = Row {
+        mode: mode.label(),
+        peers: n_peers,
+        requests,
+        tok_s: requests as f64 / wall_s,
+        p50_ms: quantile(&lat_ms, 0.50),
+        p99_ms: quantile(&lat_ms, 0.99),
+        stage_mean_us,
+    };
+    println!(
+        "ROW: {} {} {} {:.1} {:.3} {:.3} {:.1}",
+        row.mode, row.peers, row.requests, row.tok_s, row.p50_ms, row.p99_ms, row.stage_mean_us
+    );
+    row
+}
+
+fn main() {
+    let (size, depth, requests) =
+        if common::full_scale() { (1024, 8, 400) } else { (256, 4, 120) };
+    println!("# cluster scaling: {depth} layers of {size}x{size}, {requests} requests per point");
+
+    let mut rng = Pcg64::seed(90);
+    let dims = vec![size; depth + 1];
+    let weights: Vec<Mat> = dims
+        .windows(2)
+        .map(|w| {
+            let spec =
+                SynthSpec { rows: w[1], cols: w[0], gamma: 0.3, coherence: 0.6, scale: 1.0 };
+            synth_weight(&spec, &mut rng)
+        })
+        .collect();
+    // Scaling is independent of compression quality — cheap init keeps the
+    // bench budget on serving, not compressing.
+    let cfg = CompressionConfig {
+        bpp: 1.0,
+        strategy: InitStrategy::Standard,
+        residual: true,
+        ..Default::default()
+    };
+    let stack = MethodStack::from(PackedStack::compress_chain(&weights, &cfg, &mut rng));
+    let path = std::env::temp_dir().join(format!("lb2_bench_cluster_{}.lb2", std::process::id()));
+    stack.save_aligned(&path).expect("save");
+
+    println!("ROW: mode peers requests tok_s p50_ms p99_ms stage_mean_us");
+    let mut rows = Vec::new();
+    for mode in [ShardMode::Pipeline, ShardMode::RowShard] {
+        for n in [1usize, 2, 4] {
+            rows.push(measure(&path, mode, n, requests));
+        }
+    }
+    let _ = std::fs::remove_file(&path);
+
+    let json_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_cluster.json");
+    match std::fs::write(json_path, render_json(size, depth, &rows)) {
+        Ok(()) => println!("# wrote {json_path}"),
+        Err(e) => eprintln!("# could not write {json_path}: {e}"),
+    }
+}
+
+fn render_json(size: usize, depth: usize, rows: &[Row]) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"bench\": \"cluster_scaling\",\n");
+    s.push_str("  \"status\": \"ok\",\n");
+    s.push_str(&format!(
+        "  \"generated_by\": \"littlebit2 {} benches/cluster_scaling.rs\",\n",
+        littlebit2::VERSION
+    ));
+    s.push_str(&format!("  \"config\": {{\"size\": {size}, \"depth\": {depth}}},\n"));
+    s.push_str("  \"note\": \"Single in-flight client over loopback: protocol + kernel cost, no real network transit. tok_s = serial requests per second.\",\n");
+    s.push_str("  \"points\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"mode\": \"{}\", \"peers\": {}, \"requests\": {}, \"tok_s\": {:.2}, \"p50_ms\": {:.4}, \"p99_ms\": {:.4}, \"stage_mean_us\": {:.2}}}{}\n",
+            r.mode,
+            r.peers,
+            r.requests,
+            r.tok_s,
+            r.p50_ms,
+            r.p99_ms,
+            r.stage_mean_us,
+            if i + 1 < rows.len() { "," } else { "" },
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}

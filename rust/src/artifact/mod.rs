@@ -113,12 +113,13 @@ mod reader;
 mod stack;
 mod writer;
 
-pub use reader::ArtifactReader;
+pub use reader::{ArtifactReader, SectionEntry};
 pub use stack::{
-    load_method_stack, load_method_stack_mmap, load_stack, load_stack_mmap, read_method_stack,
-    read_method_stack_mapped, read_stack, save_method_stack, save_method_stack_aligned,
-    save_stack, save_stack_aligned, write_method_stack, write_method_stack_aligned, write_stack,
-    write_stack_v1, StackStreamWriter,
+    load_method_stack, load_method_stack_mmap, load_stack, load_stack_mmap, load_stack_shapes,
+    read_method_stack, read_method_stack_mapped, read_method_stack_range,
+    read_method_stack_range_mapped, read_stack, read_stack_shapes, save_method_stack,
+    save_method_stack_aligned, save_stack, save_stack_aligned, write_method_stack,
+    write_method_stack_aligned, write_stack, write_stack_v1, StackShapes, StackStreamWriter,
 };
 pub use writer::ArtifactWriter;
 

@@ -114,6 +114,39 @@ impl<'a> ArtifactReader<'a> {
         self.next += 1;
         Some((*tag, &self.buf[range.clone()], range.clone()))
     }
+
+    /// The validated section table, in file order, without consuming the
+    /// cursor: one [`SectionEntry`] per section (trailer excluded), each
+    /// carrying the tag, the payload's absolute byte offset, and its
+    /// length. This is the primitive range loading builds on — a tracker
+    /// walks the table to plan shards without decoding a single payload,
+    /// and a peer seeks straight to its layer range. The 12-byte section
+    /// header (tag + u64 length) sits at `offset - 12`.
+    pub fn sections(&self) -> impl ExactSizeIterator<Item = SectionEntry> + '_ {
+        self.sections
+            .iter()
+            .map(|(tag, r)| SectionEntry { tag: *tag, offset: r.start, len: r.len() })
+    }
+}
+
+/// One row of the `.lb2` section table as exposed by
+/// [`ArtifactReader::sections`]: where a section's payload lives and how
+/// big it is, with no payload bytes attached.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SectionEntry {
+    /// Four-byte section tag (`META`, `STAK`, `METH`, `PADD`, ...).
+    pub tag: [u8; 4],
+    /// Absolute byte offset of the payload within the container.
+    pub offset: usize,
+    /// Payload length in bytes (zero-length sections are legal).
+    pub len: usize,
+}
+
+impl SectionEntry {
+    /// The payload's absolute byte range in the container.
+    pub fn range(&self) -> Range<usize> {
+        self.offset..self.offset + self.len
+    }
 }
 
 /// Printable form of a section tag for error messages.
@@ -180,5 +213,66 @@ mod tests {
     fn end_tag_is_reserved_for_the_trailer() {
         let mut w = ArtifactWriter::new(Vec::new()).unwrap();
         assert!(w.section(TAG_END, b"nope").is_err());
+    }
+
+    /// Section-table offset arithmetic, checked against hand-computed file
+    /// layout at every format version, with a PADD filler in the middle.
+    /// Layout: magic(4) + version(4), then per section tag(4) + len(8) +
+    /// payload — so section k's payload starts 12 bytes after its header.
+    #[test]
+    fn sections_offset_arithmetic_across_versions() {
+        use super::super::{FORMAT_VERSION_V1, FORMAT_VERSION_V3, TAG_PAD};
+        for version in [FORMAT_VERSION_V1, FORMAT_VERSION, FORMAT_VERSION_V3] {
+            let mut w = ArtifactWriter::with_version(Vec::new(), version).unwrap();
+            w.section(*b"AAAA", b"abcde").unwrap(); // 5 bytes
+            w.section(TAG_PAD, &[0u8; 7]).unwrap(); // filler, 7 bytes
+            w.section(*b"BBBB", &[]).unwrap(); // zero-length
+            w.section(*b"CCCC", &[9u8; 32]).unwrap();
+            let bytes = w.finish().unwrap();
+            let r = ArtifactReader::new(&bytes).unwrap();
+            assert_eq!(r.version(), version);
+            let table: Vec<SectionEntry> = r.sections().collect();
+            // Hand-computed: header is 8 bytes, each payload starts 12
+            // bytes after the previous payload's end.
+            let expected = [
+                (*b"AAAA", 8 + 12, 5),
+                (TAG_PAD, 8 + 12 + 5 + 12, 7),
+                (*b"BBBB", 8 + 12 + 5 + 12 + 7 + 12, 0),
+                (*b"CCCC", 8 + 12 + 5 + 12 + 7 + 12 + 12, 32),
+            ];
+            assert_eq!(table.len(), expected.len());
+            for (got, (tag, offset, len)) in table.iter().zip(expected) {
+                assert_eq!((got.tag, got.offset, got.len), (tag, offset, len), "v{version}");
+                assert_eq!(got.range(), offset..offset + len);
+                // The table's offsets index the real payload bytes.
+                assert_eq!(&bytes[got.range()], {
+                    let mut rr = ArtifactReader::new(&bytes).unwrap();
+                    let mut payload = None;
+                    while let Some((t, p)) = rr.next_section() {
+                        if t == tag && payload.is_none() && p.len() == len {
+                            payload = Some(p);
+                        }
+                    }
+                    payload.expect("section present")
+                });
+            }
+            // The trailer is excluded and the last payload ends 12 bytes
+            // (END header) + 8 (count+crc) before EOF.
+            let last = table.last().unwrap();
+            assert_eq!(last.offset + last.len + 12 + 8, bytes.len());
+        }
+    }
+
+    /// `sections()` does not consume the cursor: the table can be walked
+    /// before, during, and after `next_section` iteration.
+    #[test]
+    fn sections_is_cursor_independent() {
+        let bytes = tiny();
+        let mut r = ArtifactReader::new(&bytes).unwrap();
+        assert_eq!(r.sections().len(), 2);
+        r.next_section().unwrap();
+        assert_eq!(r.sections().len(), 2);
+        let tags: Vec<[u8; 4]> = r.sections().map(|s| s.tag).collect();
+        assert_eq!(tags, vec![*b"AAAA", *b"BBBB"]);
     }
 }

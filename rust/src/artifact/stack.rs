@@ -248,7 +248,7 @@ pub fn read_stack(bytes: &[u8]) -> Result<PackedStack> {
 /// (v3 payloads are copied-and-restrided here; use
 /// [`read_method_stack_mapped`] to borrow them from a mapping instead).
 pub fn read_method_stack(bytes: &[u8]) -> Result<MethodStack> {
-    read_method_stack_impl(bytes, None)
+    read_method_stack_impl(bytes, None, None)
 }
 
 /// Deserialize a method-generic stack **out of a mapped artifact**: for a
@@ -257,32 +257,89 @@ pub fn read_method_stack(bytes: &[u8]) -> Result<MethodStack> {
 /// v1/v2 containers — and any payload that lands misaligned — fall back
 /// to the owned copy path. Forwards are bit-identical either way.
 pub fn read_method_stack_mapped(art: &Arc<MappedArtifact>) -> Result<MethodStack> {
-    read_method_stack_impl(art.bytes(), Some(art))
+    read_method_stack_impl(art.bytes(), Some(art), None)
 }
 
-/// The next non-filler section: `PADD` sections are pure file-offset
-/// alignment and may appear anywhere, in any version.
-fn next_nonpad<'a>(r: &mut ArtifactReader<'a>) -> Option<([u8; 4], &'a [u8], Range<usize>)> {
-    loop {
-        let (tag, body, range) = r.next_section_range()?;
-        if tag != TAG_PAD {
-            return Some((tag, body, range));
-        }
+/// Deserialize only layers `range` (half-open, chain order) of a stack —
+/// the partial-load primitive behind pipeline-parallel serving: a peer
+/// assigned layers `lo..hi` decodes exactly those payloads and walks past
+/// the rest without touching their bytes beyond the section framing. The
+/// returned stack is the contiguous sub-chain, so its `forward` is
+/// bit-identical to running those layers inside the full stack.
+pub fn read_method_stack_range(bytes: &[u8], range: Range<usize>) -> Result<MethodStack> {
+    read_method_stack_impl(bytes, None, Some(range))
+}
+
+/// [`read_method_stack_range`] out of a mapped artifact: in-range v3
+/// payloads borrow the mapping (so a peer pages in only its shard's
+/// weights — skipped payloads are never dereferenced), everything else
+/// falls back to the owned copy path.
+pub fn read_method_stack_range_mapped(
+    art: &Arc<MappedArtifact>,
+    range: Range<usize>,
+) -> Result<MethodStack> {
+    read_method_stack_impl(art.bytes(), Some(art), Some(range))
+}
+
+/// A stack's shape table, decoded from META/STAK alone — what a cluster
+/// tracker loads: enough to plan layer-range and row-shard assignments
+/// without decoding (or paging in) a single weight byte.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StackShapes {
+    /// Container format version (1, 2, or 3).
+    pub version: u32,
+    /// Per-layer `(d_in, d_out, n_paths)` in chain order.
+    pub shapes: Vec<(usize, usize, usize)>,
+}
+
+impl StackShapes {
+    /// Chain depth.
+    pub fn depth(&self) -> usize {
+        self.shapes.len()
+    }
+
+    /// The chain's input width (first layer's `d_in`).
+    pub fn d_in(&self) -> usize {
+        self.shapes.first().map(|&(d_in, _, _)| d_in).unwrap_or(0)
+    }
+
+    /// The chain's output width (last layer's `d_out`).
+    pub fn d_out(&self) -> usize {
+        self.shapes.last().map(|&(_, d_out, _)| d_out).unwrap_or(0)
     }
 }
 
-fn read_method_stack_impl(bytes: &[u8], art: Option<&Arc<MappedArtifact>>) -> Result<MethodStack> {
+/// Decode a stack's [`StackShapes`] from container bytes without decoding
+/// any layer payload. The container is still fully CRC-validated (that is
+/// `ArtifactReader::new`'s contract), but no weight bytes are parsed,
+/// copied, or shape-checked.
+pub fn read_stack_shapes(bytes: &[u8]) -> Result<StackShapes> {
     let mut r = ArtifactReader::new(bytes)?;
+    let version = r.version();
+    let shapes = read_shape_table(&mut r)?;
+    Ok(StackShapes { version, shapes })
+}
 
-    let (tag, _meta, _) = next_nonpad(&mut r).context("empty artifact: no META section")?;
+/// [`read_stack_shapes`] from a file via mmap — the tracker's load path.
+pub fn load_stack_shapes(path: impl AsRef<Path>) -> Result<StackShapes> {
+    let path = path.as_ref();
+    let art =
+        MappedArtifact::open(path).with_context(|| format!("mapping {}", path.display()))?;
+    read_stack_shapes(art.bytes()).with_context(|| format!("loading {}", path.display()))
+}
+
+/// Walk META + STAK at the reader's cursor and return the validated
+/// per-layer shape table. Shared by the full decoder and the shapes-only
+/// reader so the two cannot disagree on header validation.
+fn read_shape_table(r: &mut ArtifactReader<'_>) -> Result<Vec<(usize, usize, usize)>> {
+    let (tag, _meta, _) = next_nonpad(r).context("empty artifact: no META section")?;
     if tag != TAG_META {
         bail!("expected META as first section, found {tag:?}");
     }
-    let (tag, head, _) = next_nonpad(&mut r).context("missing STAK section")?;
+    let (tag, head, _) = next_nonpad(r).context("missing STAK section")?;
     if tag != TAG_STACK {
         bail!("expected STAK as second section, found {tag:?}");
     }
-
     let mut cur = Cur::new(head);
     let depth = cur.u32()? as usize;
     if depth == 0 {
@@ -306,17 +363,56 @@ fn read_method_stack_impl(bytes: &[u8], art: Option<&Arc<MappedArtifact>>) -> Re
         shapes.push((d_in, d_out, n_paths));
     }
     cur.done("STAK")?;
+    Ok(shapes)
+}
+
+/// The next non-filler section: `PADD` sections are pure file-offset
+/// alignment and may appear anywhere, in any version.
+fn next_nonpad<'a>(r: &mut ArtifactReader<'a>) -> Option<([u8; 4], &'a [u8], Range<usize>)> {
+    loop {
+        let (tag, body, range) = r.next_section_range()?;
+        if tag != TAG_PAD {
+            return Some((tag, body, range));
+        }
+    }
+}
+
+fn read_method_stack_impl(
+    bytes: &[u8],
+    art: Option<&Arc<MappedArtifact>>,
+    want: Option<Range<usize>>,
+) -> Result<MethodStack> {
+    let mut r = ArtifactReader::new(bytes)?;
+    let shapes = read_shape_table(&mut r)?;
+    let depth = shapes.len();
+    if let Some(w) = &want {
+        if w.start >= w.end || w.end > depth {
+            bail!(
+                "layer range {}..{} is invalid for a depth-{depth} stack",
+                w.start,
+                w.end
+            );
+        }
+    }
 
     let v1 = r.version() == super::FORMAT_VERSION_V1;
     let v3 = r.version() == super::FORMAT_VERSION_V3;
-    let mut layers = Vec::with_capacity(depth);
+    let mut layers = Vec::with_capacity(want.as_ref().map(Range::len).unwrap_or(depth));
     for (k, &(d_in, d_out, n_paths)) in shapes.iter().enumerate() {
+        // A skipped layer's sections are still walked (the framing and
+        // tag pinning stay validated) but its payload is never decoded —
+        // and, on the mmap path, never dereferenced, so skipped weights
+        // are never paged in.
+        let skip = want.as_ref().is_some_and(|w| !w.contains(&k));
         let (method, layer) = if v1 {
             // v1: packed layers only, no METHOD sections.
             let (tag, body, _) = next_nonpad(&mut r)
                 .with_context(|| format!("missing LAYR section for layer {k}"))?;
             if tag != TAG_LAYER {
                 bail!("expected LAYR section for layer {k}, found {tag:?}");
+            }
+            if skip {
+                continue;
             }
             let layer = decode_layer(body).with_context(|| format!("layer {k}"))?;
             ("littlebit2".to_string(), MethodLayer::Packed(layer))
@@ -330,6 +426,15 @@ fn read_method_stack_impl(bytes: &[u8], art: Option<&Arc<MappedArtifact>>) -> Re
                 decode_method_header(body).with_context(|| format!("layer {k}"))?;
             let (tag, body, range) = next_nonpad(&mut r)
                 .with_context(|| format!("missing payload section for layer {k}"))?;
+            if skip {
+                let expect = expect_tag(variant).with_context(|| format!("layer {k}"))?;
+                if tag != expect {
+                    bail!(
+                        "METHOD variant {variant} requires a {expect:?} payload section, found {tag:?}"
+                    );
+                }
+                continue;
+            }
             let layer = if v3 {
                 decode_variant_payload_v3(variant, tag, body, range.start, art)
             } else {

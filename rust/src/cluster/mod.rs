@@ -1,0 +1,176 @@
+//! Sharded tracker/peer serving: one `.lb2` chain split across
+//! processes.
+//!
+//! The **tracker** ([`Tracker`]) is the only process a client talks to.
+//! It loads nothing but the artifact's shape table
+//! ([`crate::artifact::load_stack_shapes`]), waits for **peers**
+//! ([`Peer`]) to JOIN, and hands each an [`Assignment`] cut by
+//! [`plan_assignments`] in one of two modes:
+//!
+//! * [`ShardMode::Pipeline`] — peer k loads layers `lo..hi` via
+//!   [`MethodStack::load_range`](crate::model::MethodStack::load_range)
+//!   and forwards its activations to peer k+1; the tracker drives stage
+//!   0 and relays the final RESULT to the client.
+//! * [`ShardMode::RowShard`] — every peer holds output-row shard
+//!   `row_partition(d_out, total)[index]` of **every** layer
+//!   ([`MethodLayer::slice_rows`](crate::model::MethodLayer::slice_rows));
+//!   the tracker broadcasts each layer input and concatenates the PART
+//!   slices in partition order.
+//!
+//! Both cuts reuse [`crate::parallel::row_partition`] — the exact split
+//! the in-process row kernels use — so cluster outputs are
+//! **bit-identical** to a single-process
+//! [`MethodStack::forward`](crate::model::MethodStack::forward).
+//!
+//! ## Membership and failure
+//!
+//! Peers register over a persistent connection and heartbeat on it; EOF
+//! or a missed-heartbeat window marks the peer dead, bumps the plan
+//! epoch, and re-cuts the chain over the survivors (the tracker pushes
+//! fresh ASSIGNs down every surviving registration connection).
+//! In-flight requests are **replayed** against the new plan by the
+//! tracker's per-connection drive loop — each accepted request gets
+//! exactly one reply, and the [`ClusterStats`] counters reconcile as
+//! `accepted == served + failed + deadline_missed` at every drain point.
+//! Activation frames carry an epoch stamp ([`act_aux`]) so a stage still
+//! serving the old plan rejects them instead of contributing a
+//! plausibly-shaped but wrong activation.
+//!
+//! Frames ride the [`crate::serving::frame`] codec (kinds 11–15) over
+//! plain `std::net` — same discipline as the single-process front-end,
+//! no async runtime.
+
+mod peer;
+mod plan;
+mod tracker;
+mod wire;
+
+pub use peer::{Peer, PeerConfig, PeerHandle};
+pub use plan::{plan_assignments, Assignment, ShardMode};
+pub use tracker::{ClusterSummary, Tracker, TrackerConfig, TrackerHandle};
+pub use wire::{act_aux, split_act_aux, FrameStream};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Tracker-side counters behind the `lb2_cluster_*` exposition. All
+/// relaxed atomics: the counters order nothing, they only count.
+#[derive(Debug, Default)]
+pub struct ClusterStats {
+    accepted: AtomicU64,
+    served: AtomicU64,
+    failed: AtomicU64,
+    deadline_missed: AtomicU64,
+    replays: AtomicU64,
+    reassignments: AtomicU64,
+    bytes_forward: AtomicU64,
+    bytes_back: AtomicU64,
+    stage_ns: AtomicU64,
+    stage_calls: AtomicU64,
+}
+
+impl ClusterStats {
+    pub(crate) fn inc(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn add(counter: &AtomicU64, n: u64) {
+        counter.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn accepted(&self) -> u64 {
+        self.accepted.load(Ordering::Relaxed)
+    }
+    pub fn served(&self) -> u64 {
+        self.served.load(Ordering::Relaxed)
+    }
+    pub fn failed(&self) -> u64 {
+        self.failed.load(Ordering::Relaxed)
+    }
+    pub fn deadline_missed(&self) -> u64 {
+        self.deadline_missed.load(Ordering::Relaxed)
+    }
+    pub fn replays(&self) -> u64 {
+        self.replays.load(Ordering::Relaxed)
+    }
+    pub fn reassignments(&self) -> u64 {
+        self.reassignments.load(Ordering::Relaxed)
+    }
+    pub fn bytes_forward(&self) -> u64 {
+        self.bytes_forward.load(Ordering::Relaxed)
+    }
+    pub fn bytes_back(&self) -> u64 {
+        self.bytes_back.load(Ordering::Relaxed)
+    }
+
+    /// The exactly-once ledger: every accepted request must end in
+    /// exactly one of served / failed / deadline-missed. True whenever no
+    /// request is in flight.
+    pub fn reconciled(&self) -> bool {
+        self.accepted() == self.served() + self.failed() + self.deadline_missed()
+    }
+
+    /// Prometheus-style exposition, matching the single-process
+    /// [`ServerStats`](crate::coordinator::ServerStats) text style.
+    pub fn render(&self, mode: ShardMode, epoch: u32, alive: usize, members: usize) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::with_capacity(640);
+        let _ = writeln!(s, "lb2_cluster_mode{{mode=\"{}\"}} 1", mode.label());
+        let _ = writeln!(s, "lb2_cluster_epoch {epoch}");
+        let _ = writeln!(s, "lb2_cluster_peers_alive {alive}");
+        let _ = writeln!(s, "lb2_cluster_peers_total {members}");
+        let _ = writeln!(s, "lb2_cluster_reassignments_total {}", self.reassignments());
+        let _ = writeln!(s, "lb2_cluster_accepted_total {}", self.accepted());
+        let _ = writeln!(s, "lb2_cluster_served_total {}", self.served());
+        let _ = writeln!(s, "lb2_cluster_failed_total {}", self.failed());
+        let _ = writeln!(s, "lb2_cluster_deadline_missed_total {}", self.deadline_missed());
+        let _ = writeln!(s, "lb2_cluster_replays_total {}", self.replays());
+        let _ = writeln!(s, "lb2_cluster_bytes_forward_total {}", self.bytes_forward());
+        let _ = writeln!(s, "lb2_cluster_bytes_back_total {}", self.bytes_back());
+        let stage_ns = self.stage_ns.load(Ordering::Relaxed);
+        let stage_calls = self.stage_calls.load(Ordering::Relaxed);
+        let _ = writeln!(s, "lb2_cluster_stage_ns_total {stage_ns}");
+        let _ = writeln!(s, "lb2_cluster_stage_calls_total {stage_calls}");
+        let mean_us = if stage_calls == 0 {
+            0.0
+        } else {
+            stage_ns as f64 / stage_calls as f64 / 1_000.0
+        };
+        let _ = writeln!(s, "lb2_cluster_stage_mean_us {mean_us:.2}");
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_render_and_reconcile() {
+        let st = ClusterStats::default();
+        assert!(st.reconciled(), "empty ledger reconciles");
+        ClusterStats::add(&st.accepted, 5);
+        ClusterStats::add(&st.served, 3);
+        ClusterStats::inc(&st.failed);
+        assert!(!st.reconciled(), "one request still in flight");
+        ClusterStats::inc(&st.deadline_missed);
+        assert!(st.reconciled());
+        ClusterStats::add(&st.bytes_forward, 1024);
+        ClusterStats::add(&st.stage_ns, 4_000);
+        ClusterStats::add(&st.stage_calls, 2);
+        let text = st.render(ShardMode::RowShard, 3, 2, 3);
+        for needle in [
+            "lb2_cluster_mode{mode=\"rowshard\"} 1",
+            "lb2_cluster_epoch 3",
+            "lb2_cluster_peers_alive 2",
+            "lb2_cluster_peers_total 3",
+            "lb2_cluster_accepted_total 5",
+            "lb2_cluster_served_total 3",
+            "lb2_cluster_failed_total 1",
+            "lb2_cluster_deadline_missed_total 1",
+            "lb2_cluster_bytes_forward_total 1024",
+            "lb2_cluster_stage_mean_us 2.00",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+    }
+}

@@ -1,0 +1,459 @@
+//! A cluster peer: loads its assigned slice of the chain and serves
+//! activation frames.
+//!
+//! Lifecycle: bind a serve listener, dial the tracker, JOIN with the
+//! serve address, then heartbeat on that registration connection and
+//! reload whenever an ASSIGN arrives — a re-shard is just another ASSIGN
+//! at a higher epoch. Shard loads go through the partial-load path
+//! ([`MethodStack::load_range`]/[`load_range_mmap`]) in pipeline mode,
+//! so a peer never decodes (or, mapped, never pages in) layers outside
+//! its range; in row-shard mode the peer loads the stack once and keeps
+//! only its [`MethodLayer::slice_rows`] cut per layer — row shards of a
+//! mapped v3 artifact still share one page-cache copy of the input-side
+//! planes.
+
+use super::plan::{Assignment, ShardMode};
+use super::wire::{split_act_aux, FrameStream};
+use crate::model::{MethodLayer, MethodStack};
+use crate::parallel::row_partition;
+use crate::serving::frame::{err_code, payload_f32, Frame, FrameKind};
+use anyhow::{Context, Result};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Peer configuration. `listen` defaults to an ephemeral loopback port —
+/// the actual bound address is what JOIN registers.
+#[derive(Clone, Debug)]
+pub struct PeerConfig {
+    /// Tracker address to register with.
+    pub tracker: String,
+    /// Serve listener bind address (`host:0` picks a free port).
+    pub listen: String,
+    /// The `.lb2` artifact this peer loads shards of.
+    pub model: PathBuf,
+    /// Map the artifact instead of reading it (v3 shards then serve
+    /// straight from the page cache).
+    pub mmap: bool,
+    /// Heartbeat cadence on the registration connection. Must be
+    /// comfortably under the tracker's heartbeat timeout.
+    pub heartbeat_interval: Duration,
+}
+
+impl PeerConfig {
+    pub fn new(tracker: impl Into<String>, model: impl Into<PathBuf>) -> Self {
+        Self {
+            tracker: tracker.into(),
+            listen: "127.0.0.1:0".into(),
+            model: model.into(),
+            mmap: false,
+            heartbeat_interval: Duration::from_millis(250),
+        }
+    }
+}
+
+/// What the peer currently serves (swapped whole on every ASSIGN).
+struct ShardState {
+    assignment: Assignment,
+    /// Pipeline mode: the contiguous sub-chain (None when idle).
+    stage: Option<MethodStack>,
+    /// Row-shard mode: this shard's rows of each layer (None where the
+    /// partition has fewer shards than peers).
+    slices: Vec<Option<MethodLayer>>,
+}
+
+/// A running peer. Dropping the handle does NOT stop the peer — call
+/// [`stop`](Self::stop) (abrupt, the kill-test path) or
+/// [`wait`](Self::wait) (block until the tracker shuts it down).
+pub struct Peer;
+
+pub struct PeerHandle {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    state: Arc<Mutex<Option<ShardState>>>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl Peer {
+    /// Bind the serve listener, then spawn the accept loop and the
+    /// registration/heartbeat loop. Returns as soon as the listener is
+    /// live; the JOIN/ASSIGN handshake completes in the background
+    /// (query [`PeerHandle::epoch`] to observe it).
+    pub fn start(cfg: PeerConfig) -> Result<PeerHandle> {
+        let listener = TcpListener::bind(&cfg.listen)
+            .with_context(|| format!("binding peer listener on {}", cfg.listen))?;
+        let addr = listener.local_addr().context("peer listener local addr")?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let state: Arc<Mutex<Option<ShardState>>> = Arc::new(Mutex::new(None));
+
+        let accept = {
+            let (state, shutdown) = (state.clone(), shutdown.clone());
+            std::thread::spawn(move || accept_loop(listener, state, shutdown))
+        };
+        let registration = {
+            let (state, shutdown, cfg) = (state.clone(), shutdown.clone(), cfg);
+            let serve_addr = addr.to_string();
+            std::thread::spawn(move || registration_loop(cfg, serve_addr, state, shutdown))
+        };
+
+        Ok(PeerHandle { addr, shutdown, state, threads: vec![accept, registration] })
+    }
+}
+
+impl PeerHandle {
+    /// The serve address this peer registered with the tracker.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The epoch of the currently-served assignment (None before the
+    /// first ASSIGN lands).
+    pub fn epoch(&self) -> Option<u32> {
+        self.state.lock().unwrap().as_ref().map(|s| s.assignment.epoch)
+    }
+
+    /// A copy of the current assignment, for tests and status prints.
+    pub fn assignment(&self) -> Option<Assignment> {
+        self.state.lock().unwrap().as_ref().map(|s| s.assignment.clone())
+    }
+
+    /// True until [`stop`](Self::stop) or a tracker-sent SHUTDOWN.
+    pub fn running(&self) -> bool {
+        !self.shutdown.load(Ordering::Relaxed)
+    }
+
+    /// Stop abruptly: threads exit at their next poll tick and the
+    /// registration connection drops, which is exactly how the tracker
+    /// notices the death — the kill test uses this as the failure
+    /// injection.
+    pub fn stop(self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        for t in self.threads {
+            t.join().ok();
+        }
+    }
+
+    /// Block until the peer exits (tracker shutdown or [`stop`](Self::stop)
+    /// from another handle — there is none, so in practice: tracker
+    /// shutdown).
+    pub fn wait(self) {
+        for t in self.threads {
+            t.join().ok();
+        }
+    }
+}
+
+/// Build the serveable state for an assignment.
+fn load_shard(cfg: &PeerConfig, a: Assignment) -> Result<ShardState> {
+    match a.mode {
+        ShardMode::Pipeline => {
+            let stage = if a.is_idle() || a.lo == a.hi {
+                None
+            } else if cfg.mmap {
+                Some(MethodStack::load_range_mmap(&cfg.model, a.layers())?)
+            } else {
+                Some(MethodStack::load_range(&cfg.model, a.layers())?)
+            };
+            Ok(ShardState { assignment: a, stage, slices: Vec::new() })
+        }
+        ShardMode::RowShard => {
+            let full = if cfg.mmap {
+                MethodStack::load_mmap(&cfg.model)?
+            } else {
+                MethodStack::load(&cfg.model)?
+            };
+            let mut slices = Vec::with_capacity(full.depth());
+            for l in full.layers() {
+                let ranges = row_partition(l.layer.d_out(), a.total as usize);
+                slices.push(match ranges.get(a.index as usize) {
+                    Some(r) => Some(l.layer.slice_rows(r.clone())?),
+                    None => None,
+                });
+            }
+            Ok(ShardState { assignment: a, stage: None, slices })
+        }
+    }
+}
+
+/// Dial the tracker, JOIN, then alternate heartbeats with ASSIGN/SHUTDOWN
+/// reads. Reconnects (fresh JOIN) if the tracker connection drops.
+fn registration_loop(
+    cfg: PeerConfig,
+    serve_addr: String,
+    state: Arc<Mutex<Option<ShardState>>>,
+    shutdown: Arc<AtomicBool>,
+) {
+    while !shutdown.load(Ordering::Relaxed) {
+        let mut fs = match FrameStream::connect(&cfg.tracker, Duration::from_secs(2)) {
+            Ok(fs) => fs,
+            Err(_) => {
+                std::thread::sleep(Duration::from_millis(300));
+                continue;
+            }
+        };
+        if fs.send(&Frame::join(0, &serve_addr)).is_err() {
+            continue;
+        }
+        // The recv timeout doubles as the heartbeat cadence: one beat per
+        // idle poll tick.
+        fs.set_read_timeout(Some(cfg.heartbeat_interval)).ok();
+        let mut beat: u64 = 0;
+        while !shutdown.load(Ordering::Relaxed) {
+            let epoch =
+                state.lock().unwrap().as_ref().map(|s| s.assignment.epoch).unwrap_or(0);
+            beat += 1;
+            if fs.send(&Frame::heartbeat(beat, epoch)).is_err() {
+                break;
+            }
+            match fs.recv_opt() {
+                Ok(None) => {}
+                Ok(Some(f)) => match f.kind {
+                    FrameKind::Assign => match Assignment::decode(&f.payload)
+                        .and_then(|a| load_shard(&cfg, a))
+                    {
+                        Ok(st) => {
+                            eprintln!(
+                                "[lb2-peer {serve_addr}] epoch {} assignment: {} {}..{} ({}/{})",
+                                st.assignment.epoch,
+                                st.assignment.mode.label(),
+                                st.assignment.lo,
+                                st.assignment.hi,
+                                st.assignment.index,
+                                st.assignment.total,
+                            );
+                            *state.lock().unwrap() = Some(st);
+                        }
+                        Err(e) => {
+                            eprintln!("[lb2-peer {serve_addr}] assignment failed: {e:#}")
+                        }
+                    },
+                    FrameKind::Shutdown => {
+                        shutdown.store(true, Ordering::Relaxed);
+                        return;
+                    }
+                    _ => {}
+                },
+                Err(_) => break, // tracker connection lost → re-dial and re-JOIN
+            }
+        }
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    state: Arc<Mutex<Option<ShardState>>>,
+    shutdown: Arc<AtomicBool>,
+) {
+    listener.set_nonblocking(true).ok();
+    let mut handlers: Vec<JoinHandle<()>> = Vec::new();
+    while !shutdown.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let (state, shutdown) = (state.clone(), shutdown.clone());
+                handlers.push(std::thread::spawn(move || serve_conn(stream, state, shutdown)));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(20)),
+        }
+    }
+    for h in handlers {
+        h.join().ok();
+    }
+}
+
+/// One serve connection: strictly request/response — ACT in, RESULT /
+/// PART / ERROR out.
+fn serve_conn(
+    stream: TcpStream,
+    state: Arc<Mutex<Option<ShardState>>>,
+    shutdown: Arc<AtomicBool>,
+) {
+    stream.set_nonblocking(false).ok();
+    let mut fs = FrameStream::over(stream);
+    fs.set_read_timeout(Some(Duration::from_millis(200))).ok();
+    // Pipeline stages keep one lazily-dialed connection to the next stage
+    // per upstream connection; it is dropped (and re-dialed) on any
+    // downstream error or address change.
+    let mut downstream: Option<(String, FrameStream)> = None;
+    while !shutdown.load(Ordering::Relaxed) {
+        let frame = match fs.recv_opt() {
+            Ok(None) => continue,
+            Ok(Some(f)) => f,
+            Err(_) => break,
+        };
+        match frame.kind {
+            FrameKind::Act => handle_act(&mut fs, &mut downstream, frame, &state),
+            FrameKind::Health => {
+                let code = u32::from(state.lock().unwrap().is_none());
+                let name = if code == 0 { "healthy" } else { "degraded" };
+                let _ = fs.send(&Frame::health_report(frame.id, code, name));
+            }
+            _ => {
+                let _ = fs.send(&Frame::error(
+                    frame.id,
+                    err_code::PROTOCOL,
+                    "peers accept only ACT/HEALTH frames; clients connect to the tracker",
+                ));
+            }
+        }
+    }
+}
+
+/// The reply (or forwarding step) an ACT resolves to — computed under
+/// the state lock, executed after it is released so a slow downstream
+/// peer cannot block re-assignment.
+enum Step {
+    Reply(Frame),
+    Forward { next: String, y: Vec<f32> },
+}
+
+fn handle_act(
+    fs: &mut FrameStream,
+    downstream: &mut Option<(String, FrameStream)>,
+    frame: Frame,
+    state: &Arc<Mutex<Option<ShardState>>>,
+) {
+    let (epoch16, layer) = split_act_aux(frame.aux);
+    let x = match payload_f32(&frame.payload) {
+        Ok(x) => x,
+        Err(e) => {
+            let _ = fs.send(&Frame::error(frame.id, err_code::BAD_REQUEST, &e.to_string()));
+            return;
+        }
+    };
+    let step = {
+        let guard = state.lock().unwrap();
+        match guard.as_ref() {
+            None => Step::Reply(Frame::error(
+                frame.id,
+                err_code::BACKEND,
+                "no shard assignment yet",
+            )),
+            Some(st) if (st.assignment.epoch & 0xFFFF) as u16 != epoch16 => {
+                Step::Reply(Frame::error(
+                    frame.id,
+                    err_code::BACKEND,
+                    &format!(
+                        "stale epoch stamp {epoch16} (serving epoch {})",
+                        st.assignment.epoch
+                    ),
+                ))
+            }
+            Some(st) => match st.assignment.mode {
+                ShardMode::Pipeline => match st.stage.as_ref() {
+                    None => Step::Reply(Frame::error(
+                        frame.id,
+                        err_code::BACKEND,
+                        "stage is idle at this epoch",
+                    )),
+                    Some(stage) if x.len() != stage.d_in() => Step::Reply(Frame::error(
+                        frame.id,
+                        err_code::BAD_REQUEST,
+                        &format!("input width {} != stage d_in {}", x.len(), stage.d_in()),
+                    )),
+                    Some(stage) => {
+                        let y = stage.forward(&x);
+                        if st.assignment.next.is_empty() {
+                            Step::Reply(Frame::result(frame.id, &y, 1))
+                        } else {
+                            Step::Forward { next: st.assignment.next.clone(), y }
+                        }
+                    }
+                },
+                ShardMode::RowShard => match st.slices.get(layer as usize) {
+                    None => Step::Reply(Frame::error(
+                        frame.id,
+                        err_code::BAD_REQUEST,
+                        &format!("layer {layer} out of range"),
+                    )),
+                    // This shard holds no rows of this layer (partition
+                    // shorter than the peer count): an empty PART keeps
+                    // the tracker's gather loop uniform.
+                    Some(None) => {
+                        Step::Reply(Frame::part(frame.id, st.assignment.index, &[]))
+                    }
+                    Some(Some(slice)) if x.len() != slice.d_in() => {
+                        Step::Reply(Frame::error(
+                            frame.id,
+                            err_code::BAD_REQUEST,
+                            &format!(
+                                "layer {layer} input width {} != d_in {}",
+                                x.len(),
+                                slice.d_in()
+                            ),
+                        ))
+                    }
+                    Some(Some(slice)) => Step::Reply(Frame::part(
+                        frame.id,
+                        st.assignment.index,
+                        &slice.forward(&x),
+                    )),
+                },
+            },
+        }
+    };
+    match step {
+        Step::Reply(reply) => {
+            let _ = fs.send(&reply);
+        }
+        Step::Forward { next, y } => forward_downstream(fs, downstream, frame.id, frame.aux, next, &y),
+    }
+}
+
+/// Send the stage output down the chain and relay the response (RESULT
+/// or ERROR) back upstream unchanged — the terminal stage's RESULT rides
+/// the chain back to the tracker through every intermediate relay.
+fn forward_downstream(
+    fs: &mut FrameStream,
+    downstream: &mut Option<(String, FrameStream)>,
+    id: u64,
+    aux: u32,
+    next: String,
+    y: &[f32],
+) {
+    let stale = !matches!(downstream, Some((addr, _)) if *addr == next);
+    if stale {
+        match FrameStream::connect(&next, Duration::from_secs(1)) {
+            Ok(conn) => {
+                conn.set_read_timeout(Some(Duration::from_secs(10))).ok();
+                *downstream = Some((next.clone(), conn));
+            }
+            Err(e) => {
+                let _ = fs.send(&Frame::error(
+                    id,
+                    err_code::BACKEND,
+                    &format!("dialing next stage {next}: {e:#}"),
+                ));
+                return;
+            }
+        }
+    }
+    let (_, conn) = downstream.as_mut().expect("dialed above");
+    let relayed = conn.send(&Frame::act(id, aux, y)).and_then(|()| conn.recv());
+    match relayed {
+        Ok(resp)
+            if resp.id == id
+                && matches!(resp.kind, FrameKind::Result | FrameKind::Error) =>
+        {
+            let _ = fs.send(&resp);
+        }
+        Ok(resp) => {
+            *downstream = None;
+            let _ = fs.send(&Frame::error(
+                id,
+                err_code::BACKEND,
+                &format!("desynced response from next stage: {:?} id {}", resp.kind, resp.id),
+            ));
+        }
+        Err(e) => {
+            *downstream = None;
+            let _ = fs.send(&Frame::error(
+                id,
+                err_code::BACKEND,
+                &format!("next stage {next} failed: {e:#}"),
+            ));
+        }
+    }
+}

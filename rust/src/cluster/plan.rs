@@ -1,0 +1,309 @@
+//! Shard plans: who serves which slice of the chain, encoded for the
+//! ASSIGN frame.
+//!
+//! A plan is a pure function of `(mode, epoch, alive peers in join order,
+//! chain depth)` — no hidden state, so the tracker and every peer agree
+//! on the partition from the assignment alone, and a re-shard is just the
+//! same function over the survivors at the next epoch. Row shards reuse
+//! [`crate::parallel::row_partition`] — the exact split the in-process
+//! row kernels use — which is what makes shard outputs concatenate
+//! bit-identically to single-process serving.
+
+use crate::parallel::row_partition;
+use anyhow::{bail, Result};
+use std::ops::Range;
+
+/// How the chain is cut across peers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardMode {
+    /// Contiguous layer ranges: peer k runs layers `lo..hi` and forwards
+    /// its activations to peer k+1 (the tracker drives stage 0 and reads
+    /// the final result back through the chain).
+    Pipeline,
+    /// Deterministic row shards of **every** layer: each peer holds rows
+    /// `row_partition(d_out, total)[index]` of each layer; the tracker
+    /// broadcasts each layer input and concatenates the PART slices in
+    /// partition order.
+    RowShard,
+}
+
+impl ShardMode {
+    /// Wire code (the first byte of an encoded [`Assignment`]).
+    pub fn code(self) -> u8 {
+        match self {
+            ShardMode::Pipeline => 1,
+            ShardMode::RowShard => 2,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Result<Self> {
+        Ok(match c {
+            1 => ShardMode::Pipeline,
+            2 => ShardMode::RowShard,
+            other => bail!("unknown shard mode code {other}"),
+        })
+    }
+
+    /// CLI spelling (`--mode pipeline|rowshard`).
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "pipeline" => ShardMode::Pipeline,
+            "rowshard" | "row-shard" => ShardMode::RowShard,
+            other => bail!("unknown shard mode {other:?} (expected pipeline or rowshard)"),
+        })
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            ShardMode::Pipeline => "pipeline",
+            ShardMode::RowShard => "rowshard",
+        }
+    }
+}
+
+/// One peer's slice of the plan — the ASSIGN frame payload.
+///
+/// ## Byte layout (little-endian)
+///
+/// | offset | size | field                                          |
+/// |--------|------|------------------------------------------------|
+/// | 0      | 1    | mode code (1 = pipeline, 2 = rowshard)         |
+/// | 1      | 4    | epoch                                          |
+/// | 5      | 4    | index (stage / shard position)                 |
+/// | 9      | 4    | total (stages in plan / shards per layer)      |
+/// | 13     | 4    | lo (first layer, pipeline; 0 otherwise)        |
+/// | 17     | 4    | hi (one-past-last layer, pipeline; depth)      |
+/// | 21     | 2    | next-address length `n`                        |
+/// | 23     | n    | next stage's serve address, ASCII (pipeline    |
+/// |        |      | only; empty for the last stage and rowshard)   |
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Assignment {
+    pub mode: ShardMode,
+    /// Plan generation; bumped on every membership change. Activation
+    /// frames are stamped with it (low 16 bits) so a stale stage can
+    /// never contribute to a fresh request.
+    pub epoch: u32,
+    /// This peer's position: pipeline stage number, or row-shard index.
+    pub index: u32,
+    /// Stages in the plan (pipeline) or shards per layer (rowshard).
+    /// `index >= total` means the peer is idle at this epoch (more peers
+    /// than layers).
+    pub total: u32,
+    /// Pipeline: the layer range `lo..hi` this stage serves. RowShard:
+    /// `0..depth` (every peer touches every layer).
+    pub lo: u32,
+    pub hi: u32,
+    /// Pipeline: the next stage's serve address (empty for the last
+    /// stage). Always empty in rowshard mode.
+    pub next: String,
+}
+
+impl Assignment {
+    /// True when this peer serves nothing at this epoch.
+    pub fn is_idle(&self) -> bool {
+        self.index >= self.total
+    }
+
+    /// The layer range as a `Range`.
+    pub fn layers(&self) -> Range<usize> {
+        self.lo as usize..self.hi as usize
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let next = self.next.as_bytes();
+        let mut out = Vec::with_capacity(23 + next.len());
+        out.push(self.mode.code());
+        out.extend_from_slice(&self.epoch.to_le_bytes());
+        out.extend_from_slice(&self.index.to_le_bytes());
+        out.extend_from_slice(&self.total.to_le_bytes());
+        out.extend_from_slice(&self.lo.to_le_bytes());
+        out.extend_from_slice(&self.hi.to_le_bytes());
+        out.extend_from_slice(&(next.len() as u16).to_le_bytes());
+        out.extend_from_slice(next);
+        out
+    }
+
+    pub fn decode(b: &[u8]) -> Result<Self> {
+        if b.len() < 23 {
+            bail!("ASSIGN payload is {} bytes; need at least 23", b.len());
+        }
+        let mode = ShardMode::from_code(b[0])?;
+        let u32_at =
+            |at: usize| u32::from_le_bytes(b[at..at + 4].try_into().expect("4 bytes"));
+        let epoch = u32_at(1);
+        let index = u32_at(5);
+        let total = u32_at(9);
+        let lo = u32_at(13);
+        let hi = u32_at(17);
+        if lo > hi {
+            bail!("ASSIGN layer range {lo}..{hi} is inverted");
+        }
+        let next_len = u16::from_le_bytes([b[21], b[22]]) as usize;
+        if b.len() != 23 + next_len {
+            bail!("ASSIGN payload is {} bytes but declares a {next_len}-byte address", b.len());
+        }
+        let next = b[23..].to_vec();
+        if !next.iter().all(|c| c.is_ascii_graphic()) {
+            bail!("ASSIGN next-address contains non-printable bytes");
+        }
+        Ok(Self {
+            mode,
+            epoch,
+            index,
+            total,
+            lo,
+            hi,
+            next: String::from_utf8(next).expect("ASCII validated"),
+        })
+    }
+}
+
+/// The full plan for one epoch: one [`Assignment`] per alive peer, in
+/// join order. Pure in `(mode, epoch, peers, depth)`.
+///
+/// Pipeline mode cuts `depth` layers into `row_partition(depth,
+/// peers.len())` contiguous ranges — stage k serves range k and forwards
+/// to stage k+1's address; surplus peers (more peers than layers) get an
+/// idle assignment and become re-shard spares. RowShard gives every peer
+/// the same `0..depth` range with its shard position; the per-layer row
+/// split is recomputed peer-side from `(index, total)`.
+pub fn plan_assignments(
+    mode: ShardMode,
+    epoch: u32,
+    peers: &[String],
+    depth: usize,
+) -> Vec<Assignment> {
+    match mode {
+        ShardMode::Pipeline => {
+            let ranges = row_partition(depth, peers.len());
+            (0..peers.len())
+                .map(|i| {
+                    let (lo, hi) = ranges
+                        .get(i)
+                        .map(|r| (r.start as u32, r.end as u32))
+                        .unwrap_or((0, 0));
+                    let next = if i + 1 < ranges.len() {
+                        peers[i + 1].clone()
+                    } else {
+                        String::new()
+                    };
+                    Assignment {
+                        mode,
+                        epoch,
+                        index: i as u32,
+                        total: ranges.len() as u32,
+                        lo,
+                        hi,
+                        next,
+                    }
+                })
+                .collect()
+        }
+        ShardMode::RowShard => (0..peers.len())
+            .map(|i| Assignment {
+                mode,
+                epoch,
+                index: i as u32,
+                total: peers.len() as u32,
+                lo: 0,
+                hi: depth as u32,
+                next: String::new(),
+            })
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn addrs(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("127.0.0.1:{}", 42000 + i)).collect()
+    }
+
+    #[test]
+    fn assignment_roundtrips() {
+        for a in [
+            Assignment {
+                mode: ShardMode::Pipeline,
+                epoch: 7,
+                index: 1,
+                total: 3,
+                lo: 2,
+                hi: 4,
+                next: "127.0.0.1:42002".into(),
+            },
+            Assignment {
+                mode: ShardMode::RowShard,
+                epoch: 1,
+                index: 0,
+                total: 2,
+                lo: 0,
+                hi: 6,
+                next: String::new(),
+            },
+        ] {
+            let back = Assignment::decode(&a.encode()).unwrap();
+            assert_eq!(back, a);
+        }
+        // Truncation, bad mode, inverted range, and trailing garbage are
+        // all rejected.
+        let good = Assignment {
+            mode: ShardMode::Pipeline,
+            epoch: 1,
+            index: 0,
+            total: 1,
+            lo: 0,
+            hi: 2,
+            next: String::new(),
+        }
+        .encode();
+        assert!(Assignment::decode(&good[..22]).is_err());
+        let mut bad = good.clone();
+        bad[0] = 9;
+        assert!(Assignment::decode(&bad).is_err());
+        let mut inv = good.clone();
+        inv[13..17].copy_from_slice(&5u32.to_le_bytes()); // lo = 5 > hi = 2
+        assert!(Assignment::decode(&inv).is_err());
+        let mut long = good;
+        long.push(b'x');
+        assert!(Assignment::decode(&long).is_err());
+    }
+
+    /// Pipeline plans tile the chain contiguously and chain the next
+    /// addresses; surplus peers go idle.
+    #[test]
+    fn pipeline_plan_tiles_the_chain() {
+        let peers = addrs(3);
+        let plan = plan_assignments(ShardMode::Pipeline, 4, &peers, 5);
+        assert_eq!(plan.len(), 3);
+        assert_eq!((plan[0].lo, plan[0].hi, plan[0].next.as_str()), (0, 2, peers[1].as_str()));
+        assert_eq!((plan[1].lo, plan[1].hi, plan[1].next.as_str()), (2, 4, peers[2].as_str()));
+        assert_eq!((plan[2].lo, plan[2].hi, plan[2].next.as_str()), (4, 5, ""));
+        assert!(plan.iter().all(|a| a.epoch == 4 && a.total == 3 && !a.is_idle()));
+
+        // 4 peers, 2 layers: two stages, two idle spares.
+        let peers = addrs(4);
+        let plan = plan_assignments(ShardMode::Pipeline, 1, &peers, 2);
+        assert_eq!(plan.len(), 4);
+        assert!(!plan[0].is_idle() && !plan[1].is_idle());
+        assert!(plan[2].is_idle() && plan[3].is_idle());
+        assert_eq!(plan[1].next, "");
+
+        // One survivor owns the whole chain — the re-shard degenerate.
+        let plan = plan_assignments(ShardMode::Pipeline, 9, &addrs(1), 6);
+        assert_eq!((plan[0].lo, plan[0].hi), (0, 6));
+        assert_eq!(plan[0].next, "");
+    }
+
+    #[test]
+    fn rowshard_plan_gives_every_peer_every_layer() {
+        let plan = plan_assignments(ShardMode::RowShard, 2, &addrs(3), 4);
+        for (i, a) in plan.iter().enumerate() {
+            assert_eq!(a.index as usize, i);
+            assert_eq!(a.total, 3);
+            assert_eq!(a.layers(), 0..4);
+            assert!(a.next.is_empty());
+        }
+    }
+}

@@ -1,0 +1,720 @@
+//! The tracker: membership, shard planning, and the client-facing
+//! front-end of a sharded cluster.
+//!
+//! The tracker loads only the artifact's **shape table**
+//! ([`load_stack_shapes`]) — never a weight byte — and listens on one
+//! socket. The first frame classifies each connection: JOIN makes it a
+//! peer registration connection (assignment pushes + heartbeats ride it
+//! for the peer's lifetime), anything else makes it a client connection
+//! speaking the ordinary INFER/STATS/HEALTH/SHUTDOWN protocol, so the
+//! stock [`WireClient`](crate::serving::WireClient) and the `client` CLI
+//! work against a tracker unchanged.
+//!
+//! ## Plan state machine
+//!
+//! ```text
+//!            JOIN (quorum not yet met)
+//!   FORMING ──────────────────────────▶ FORMING   (epoch 0, no plan)
+//!   FORMING ── quorum-th JOIN ────────▶ SERVING   (epoch 1: first plan)
+//!   SERVING ── JOIN / peer death ─────▶ SERVING   (epoch += 1, re-cut
+//!                                                  over alive peers,
+//!                                                  ASSIGN pushed to all)
+//!   SERVING ── last peer dies ────────▶ SERVING   (epoch += 1; drives
+//!                                                  block until a peer
+//!                                                  rejoins or deadline)
+//!   any     ── SHUTDOWN frame ────────▶ DRAINING  (peers get SHUTDOWN)
+//! ```
+//!
+//! Every accepted request is driven to exactly one reply: a failed
+//! attempt (peer death mid-request, stale-epoch rejection, connection
+//! loss) resets the drive connections and **replays** the request
+//! against the current plan, so the [`ClusterStats`] ledger reconciles
+//! (`accepted == served + failed + deadline_missed`) at every drain
+//! point — the seeded kill test asserts exactly this.
+
+use super::plan::{plan_assignments, Assignment, ShardMode};
+use super::wire::{act_aux, FrameStream};
+use super::ClusterStats;
+use crate::artifact::{load_stack_shapes, StackShapes};
+use crate::parallel::row_partition;
+use crate::serving::frame::{err_code, payload_f32, Frame, FrameKind};
+use anyhow::{bail, Context, Result};
+use std::net::{SocketAddr, TcpListener};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct TrackerConfig {
+    /// Bind address for the single tracker socket (`host:0` for tests).
+    pub listen: String,
+    /// The `.lb2` artifact — only its shape table is read here.
+    pub model: PathBuf,
+    pub mode: ShardMode,
+    /// Peers to wait for before cutting the first plan.
+    pub expect_peers: usize,
+    /// Declare a peer dead after this long without any frame on its
+    /// registration connection. Must comfortably exceed the peers'
+    /// heartbeat interval.
+    pub heartbeat_timeout: Duration,
+    /// Drive attempts per request before giving up (each failed attempt
+    /// re-snapshots the plan, so this bounds how many re-shards a single
+    /// request can ride through).
+    pub attempts: usize,
+    /// Deadline for requests that do not carry one (INFER aux = 0).
+    pub default_deadline_ms: u32,
+}
+
+impl TrackerConfig {
+    pub fn new(model: impl Into<PathBuf>, mode: ShardMode) -> Self {
+        Self {
+            listen: "127.0.0.1:0".into(),
+            model: model.into(),
+            mode,
+            expect_peers: 1,
+            heartbeat_timeout: Duration::from_secs(2),
+            attempts: 10,
+            default_deadline_ms: 10_000,
+        }
+    }
+}
+
+struct PeerSlot {
+    addr: String,
+    alive: bool,
+}
+
+struct Membership {
+    peers: Vec<PeerSlot>,
+    /// 0 = FORMING (no plan yet); first plan is epoch 1.
+    epoch: u32,
+}
+
+struct Shared {
+    cfg: TrackerConfig,
+    shapes: StackShapes,
+    m: Mutex<Membership>,
+    stats: ClusterStats,
+    shutdown: AtomicBool,
+}
+
+impl Shared {
+    /// Register a peer; cuts the first plan at quorum, re-cuts (epoch
+    /// bump) when a peer joins a serving cluster.
+    fn join(&self, addr: String) -> usize {
+        let mut m = self.m.lock().unwrap();
+        m.peers.push(PeerSlot { addr, alive: true });
+        let alive = m.peers.iter().filter(|p| p.alive).count();
+        if m.epoch > 0 {
+            m.epoch += 1;
+            ClusterStats::inc(&self.stats.reassignments);
+        } else if alive >= self.cfg.expect_peers {
+            m.epoch = 1;
+        }
+        m.peers.len() - 1
+    }
+
+    /// Mark a peer dead (EOF or heartbeat timeout on its registration
+    /// connection) and re-cut the plan over the survivors.
+    fn mark_dead(&self, slot: usize) {
+        let mut m = self.m.lock().unwrap();
+        if !m.peers[slot].alive {
+            return;
+        }
+        m.peers[slot].alive = false;
+        if m.epoch > 0 {
+            m.epoch += 1;
+            ClusterStats::inc(&self.stats.reassignments);
+        }
+    }
+
+    /// The assignment `slot` should serve right now (None while FORMING
+    /// or when the peer is dead). Deterministic in (epoch, membership):
+    /// every registration thread pushing from the same epoch pushes
+    /// slices of the same plan.
+    fn assignment_for(&self, slot: usize) -> Option<(u32, Assignment)> {
+        let m = self.m.lock().unwrap();
+        if m.epoch == 0 || !m.peers[slot].alive {
+            return None;
+        }
+        let alive: Vec<String> =
+            m.peers.iter().filter(|p| p.alive).map(|p| p.addr.clone()).collect();
+        let pos = m.peers[..slot].iter().filter(|p| p.alive).count();
+        let plan = plan_assignments(self.cfg.mode, m.epoch, &alive, self.shapes.depth());
+        Some((m.epoch, plan[pos].clone()))
+    }
+
+    /// Current (epoch, alive peer addrs) when a plan exists and at least
+    /// one peer survives.
+    fn plan_snapshot(&self) -> Option<PlanSnapshot> {
+        let m = self.m.lock().unwrap();
+        if m.epoch == 0 {
+            return None;
+        }
+        let peers: Vec<String> =
+            m.peers.iter().filter(|p| p.alive).map(|p| p.addr.clone()).collect();
+        if peers.is_empty() {
+            return None;
+        }
+        Some(PlanSnapshot { epoch: m.epoch, peers })
+    }
+
+    fn counts(&self) -> (u32, usize, usize) {
+        let m = self.m.lock().unwrap();
+        (m.epoch, m.peers.iter().filter(|p| p.alive).count(), m.peers.len())
+    }
+
+    fn render_stats(&self) -> String {
+        let (epoch, alive, members) = self.counts();
+        self.stats.render(self.cfg.mode, epoch, alive, members)
+    }
+
+    fn health(&self) -> (u32, &'static str) {
+        if self.shutdown.load(Ordering::Relaxed) {
+            (2, "draining")
+        } else {
+            let (epoch, alive, _) = self.counts();
+            if epoch > 0 && alive > 0 {
+                (0, "healthy")
+            } else {
+                (1, "degraded")
+            }
+        }
+    }
+}
+
+struct PlanSnapshot {
+    epoch: u32,
+    peers: Vec<String>,
+}
+
+/// Per-client-connection connections into the current plan: one to stage
+/// 0 (pipeline) or one per shard peer (row-shard), re-dialed whenever the
+/// epoch moves or an attempt fails.
+#[derive(Default)]
+struct DriveConns {
+    epoch: u32,
+    pipeline: Option<FrameStream>,
+    shards: Vec<FrameStream>,
+}
+
+impl DriveConns {
+    fn reset(&mut self) {
+        self.epoch = 0;
+        self.pipeline = None;
+        self.shards.clear();
+    }
+
+    fn ensure(&mut self, mode: ShardMode, snap: &PlanSnapshot) -> Result<()> {
+        let ready = self.epoch == snap.epoch
+            && match mode {
+                ShardMode::Pipeline => self.pipeline.is_some(),
+                ShardMode::RowShard => self.shards.len() == snap.peers.len(),
+            };
+        if ready {
+            return Ok(());
+        }
+        self.reset();
+        match mode {
+            ShardMode::Pipeline => {
+                let conn = FrameStream::connect(&snap.peers[0], Duration::from_secs(1))?;
+                conn.set_read_timeout(Some(Duration::from_secs(10)))?;
+                self.pipeline = Some(conn);
+            }
+            ShardMode::RowShard => {
+                for addr in &snap.peers {
+                    let conn = FrameStream::connect(addr, Duration::from_secs(1))?;
+                    conn.set_read_timeout(Some(Duration::from_secs(10)))?;
+                    self.shards.push(conn);
+                }
+            }
+        }
+        self.epoch = snap.epoch;
+        Ok(())
+    }
+}
+
+pub struct Tracker;
+
+pub struct TrackerHandle {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl Tracker {
+    /// Read the shape table, bind the socket, and spawn the accept loop.
+    /// Returns as soon as the socket is live; peers and clients connect
+    /// from here on.
+    pub fn start(cfg: TrackerConfig) -> Result<TrackerHandle> {
+        let shapes = load_stack_shapes(&cfg.model)
+            .with_context(|| format!("reading shard plan shapes from {}", cfg.model.display()))?;
+        if shapes.depth() == 0 {
+            bail!("{} holds an empty chain; nothing to shard", cfg.model.display());
+        }
+        let listener = TcpListener::bind(&cfg.listen)
+            .with_context(|| format!("binding tracker on {}", cfg.listen))?;
+        let addr = listener.local_addr().context("tracker local addr")?;
+        let shared = Arc::new(Shared {
+            cfg,
+            shapes,
+            m: Mutex::new(Membership { peers: Vec::new(), epoch: 0 }),
+            stats: ClusterStats::default(),
+            shutdown: AtomicBool::new(false),
+        });
+        let thread = {
+            let shared = shared.clone();
+            std::thread::spawn(move || accept_loop(listener, shared))
+        };
+        Ok(TrackerHandle { addr, shared, thread: Some(thread) })
+    }
+}
+
+impl TrackerHandle {
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn stats(&self) -> &ClusterStats {
+        &self.shared.stats
+    }
+
+    pub fn epoch(&self) -> u32 {
+        self.shared.counts().0
+    }
+
+    pub fn alive_peers(&self) -> usize {
+        self.shared.counts().1
+    }
+
+    /// The `lb2_cluster_*` exposition (same text a STATS frame returns).
+    pub fn stats_text(&self) -> String {
+        self.shared.render_stats()
+    }
+
+    /// Block until the first plan is cut (quorum reached), up to
+    /// `timeout`. Returns whether a plan exists.
+    pub fn wait_for_plan(&self, timeout: Duration) -> bool {
+        let start = Instant::now();
+        while start.elapsed() < timeout {
+            if self.epoch() > 0 {
+                return true;
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        self.epoch() > 0
+    }
+
+    pub fn is_shutting_down(&self) -> bool {
+        self.shared.shutdown.load(Ordering::Relaxed)
+    }
+
+    /// Initiate shutdown (peers get SHUTDOWN on their registration
+    /// connections), join every tracker thread, and report the settled
+    /// ledger — mirrors [`TcpFrontend::shutdown`](crate::serving::TcpFrontend::shutdown).
+    pub fn shutdown(mut self) -> ClusterSummary {
+        self.shared.shutdown.store(true, Ordering::Relaxed);
+        if let Some(t) = self.thread.take() {
+            t.join().ok();
+        }
+        let stats = &self.shared.stats;
+        ClusterSummary {
+            stats_text: self.shared.render_stats(),
+            reconciled: stats.reconciled(),
+            accepted: stats.accepted(),
+            served: stats.served(),
+            failed: stats.failed(),
+            deadline_missed: stats.deadline_missed(),
+            reassignments: stats.reassignments(),
+        }
+    }
+}
+
+/// The settled ledger a tracker reports after its threads drain.
+#[derive(Clone, Debug)]
+pub struct ClusterSummary {
+    /// The final `lb2_cluster_*` exposition.
+    pub stats_text: String,
+    /// `accepted == served + failed + deadline_missed` — must hold at
+    /// every drain point.
+    pub reconciled: bool,
+    pub accepted: u64,
+    pub served: u64,
+    pub failed: u64,
+    pub deadline_missed: u64,
+    pub reassignments: u64,
+}
+
+impl Drop for TrackerHandle {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Relaxed);
+        if let Some(t) = self.thread.take() {
+            t.join().ok();
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    listener.set_nonblocking(true).ok();
+    let mut handlers: Vec<JoinHandle<()>> = Vec::new();
+    while !shared.shutdown.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                stream.set_nonblocking(false).ok();
+                let shared = shared.clone();
+                handlers.push(std::thread::spawn(move || conn_entry(stream, shared)));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(20)),
+        }
+    }
+    for h in handlers {
+        h.join().ok();
+    }
+}
+
+/// Classify a fresh connection by its first frame: JOIN → peer
+/// registration; anything else → client protocol.
+fn conn_entry(stream: std::net::TcpStream, shared: Arc<Shared>) {
+    let mut fs = FrameStream::over(stream);
+    fs.set_read_timeout(Some(Duration::from_secs(5))).ok();
+    let first = match fs.recv() {
+        Ok(f) => f,
+        Err(_) => return,
+    };
+    match first.kind {
+        FrameKind::Join => {
+            let addr = match std::str::from_utf8(&first.payload) {
+                Ok(a) if !a.is_empty() => a.to_string(),
+                _ => {
+                    let _ = fs.send(&Frame::error(
+                        first.id,
+                        err_code::BAD_REQUEST,
+                        "JOIN payload must be a non-empty ASCII serve address",
+                    ));
+                    return;
+                }
+            };
+            let slot = shared.join(addr);
+            registration_conn(fs, shared, slot)
+        }
+        _ => client_conn(fs, shared, first),
+    }
+}
+
+/// A peer's registration connection: push ASSIGNs whenever the epoch
+/// moves past what this peer last saw, read heartbeats, and declare the
+/// peer dead on EOF or a silent heartbeat window.
+fn registration_conn(mut fs: FrameStream, shared: Arc<Shared>, slot: usize) {
+    fs.set_read_timeout(Some(Duration::from_millis(100))).ok();
+    let mut sent_epoch = 0u32;
+    let mut last_seen = Instant::now();
+    loop {
+        if shared.shutdown.load(Ordering::Relaxed) {
+            let _ = fs.send(&Frame::shutdown(0));
+            return;
+        }
+        if let Some((epoch, a)) = shared.assignment_for(slot) {
+            if epoch != sent_epoch {
+                if fs.send(&Frame::assign(0, epoch, a.encode())).is_err() {
+                    shared.mark_dead(slot);
+                    return;
+                }
+                sent_epoch = epoch;
+            }
+        }
+        match fs.recv_opt() {
+            Ok(None) => {
+                if last_seen.elapsed() > shared.cfg.heartbeat_timeout {
+                    shared.mark_dead(slot);
+                    return;
+                }
+            }
+            Ok(Some(_)) => last_seen = Instant::now(),
+            Err(_) => {
+                // EOF or transport error: the fast death path — a killed
+                // peer's socket closes long before its heartbeats stop
+                // arriving.
+                shared.mark_dead(slot);
+                return;
+            }
+        }
+    }
+}
+
+/// A client connection: the ordinary serving protocol, with INFER driven
+/// through the cluster.
+fn client_conn(mut fs: FrameStream, shared: Arc<Shared>, first: Frame) {
+    fs.set_read_timeout(Some(Duration::from_millis(200))).ok();
+    let mut conns = DriveConns::default();
+    let mut pending = Some(first);
+    while !shared.shutdown.load(Ordering::Relaxed) {
+        let frame = match pending.take() {
+            Some(f) => f,
+            None => match fs.recv_opt() {
+                Ok(None) => continue,
+                Ok(Some(f)) => f,
+                Err(_) => return,
+            },
+        };
+        match frame.kind {
+            FrameKind::Infer => {
+                let reply = handle_infer(&shared, &mut conns, frame);
+                if fs.send(&reply).is_err() {
+                    return;
+                }
+            }
+            FrameKind::Stats => {
+                let _ = fs.send(&Frame::stats_text(frame.id, &shared.render_stats()));
+            }
+            FrameKind::Health => {
+                let (code, name) = shared.health();
+                let _ = fs.send(&Frame::health_report(frame.id, code, name));
+            }
+            FrameKind::Shutdown => {
+                let _ = fs.send(&Frame::shutdown_ack(frame.id));
+                shared.shutdown.store(true, Ordering::Relaxed);
+                return;
+            }
+            _ => {
+                let _ = fs.send(&Frame::error(
+                    frame.id,
+                    err_code::PROTOCOL,
+                    "tracker accepts INFER/STATS/HEALTH/SHUTDOWN from clients",
+                ));
+            }
+        }
+    }
+    // Shutdown mid-conversation: tell the client rather than just closing.
+    let _ = fs.send(&Frame::error(0, err_code::SHUTTING_DOWN, "tracker is shutting down"));
+}
+
+/// Admit, drive (with replays), and settle one INFER into exactly one
+/// reply frame and exactly one ledger outcome.
+fn handle_infer(shared: &Shared, conns: &mut DriveConns, frame: Frame) -> Frame {
+    ClusterStats::inc(&shared.stats.accepted);
+    let x = match payload_f32(&frame.payload) {
+        Ok(x) => x,
+        Err(e) => {
+            ClusterStats::inc(&shared.stats.failed);
+            return Frame::error(frame.id, err_code::BAD_REQUEST, &e.to_string());
+        }
+    };
+    if x.len() != shared.shapes.d_in() {
+        ClusterStats::inc(&shared.stats.failed);
+        return Frame::error(
+            frame.id,
+            err_code::BAD_REQUEST,
+            &format!("input width {} != model d_in {}", x.len(), shared.shapes.d_in()),
+        );
+    }
+    let deadline_ms =
+        if frame.aux == 0 { shared.cfg.default_deadline_ms } else { frame.aux };
+    let deadline = Duration::from_millis(u64::from(deadline_ms));
+    let start = Instant::now();
+    let mut attempts = 0usize;
+    loop {
+        if shared.shutdown.load(Ordering::Relaxed) {
+            ClusterStats::inc(&shared.stats.failed);
+            return Frame::error(frame.id, err_code::SHUTTING_DOWN, "tracker is shutting down");
+        }
+        if start.elapsed() >= deadline {
+            ClusterStats::inc(&shared.stats.deadline_missed);
+            return Frame::error(
+                frame.id,
+                err_code::DEADLINE,
+                &format!("deadline passed after {attempts} attempts"),
+            );
+        }
+        let Some(snap) = shared.plan_snapshot() else {
+            // FORMING, or every peer is dead: wait for membership to
+            // recover, bounded by the deadline.
+            std::thread::sleep(Duration::from_millis(25));
+            continue;
+        };
+        attempts += 1;
+        match execute(shared, conns, &snap, frame.id, &x) {
+            Ok(y) => {
+                ClusterStats::inc(&shared.stats.served);
+                return Frame::result(frame.id, &y, 1);
+            }
+            Err(e) => {
+                conns.reset();
+                if attempts >= shared.cfg.attempts {
+                    ClusterStats::inc(&shared.stats.failed);
+                    return Frame::error(
+                        frame.id,
+                        err_code::BACKEND,
+                        &format!("failed after {attempts} attempts: {e:#}"),
+                    );
+                }
+                // Replay against the (possibly re-cut) plan after a short
+                // settle — re-shards land within a couple of ticks.
+                ClusterStats::inc(&shared.stats.replays);
+                std::thread::sleep(Duration::from_millis(25 * attempts.min(10) as u64));
+            }
+        }
+    }
+}
+
+/// One drive attempt against one plan snapshot. Any `Err` here is
+/// retryable — the caller resets the connections and replays.
+fn execute(
+    shared: &Shared,
+    conns: &mut DriveConns,
+    snap: &PlanSnapshot,
+    id: u64,
+    x: &[f32],
+) -> Result<Vec<f32>> {
+    conns.ensure(shared.cfg.mode, snap)?;
+    let y = match shared.cfg.mode {
+        ShardMode::Pipeline => {
+            let conn = conns.pipeline.as_mut().expect("ensured");
+            let act = Frame::act(id, act_aux(snap.epoch, 0), x);
+            ClusterStats::add(&shared.stats.bytes_forward, act.payload.len() as u64);
+            let t = Instant::now();
+            conn.send(&act)?;
+            let resp = conn.recv()?;
+            ClusterStats::add(&shared.stats.stage_ns, t.elapsed().as_nanos() as u64);
+            ClusterStats::inc(&shared.stats.stage_calls);
+            match resp.kind {
+                FrameKind::Result if resp.id == id => {
+                    ClusterStats::add(&shared.stats.bytes_back, resp.payload.len() as u64);
+                    payload_f32(&resp.payload).map_err(|e| anyhow::anyhow!(e))?
+                }
+                FrameKind::Error => bail!(
+                    "stage error: {}",
+                    String::from_utf8_lossy(&resp.payload)
+                ),
+                other => bail!("unexpected {other:?} (id {}) from stage 0", resp.id),
+            }
+        }
+        ShardMode::RowShard => {
+            let mut cur = x.to_vec();
+            for (layer, &(_, d_out, _)) in shared.shapes.shapes.iter().enumerate() {
+                let ranges = row_partition(d_out, snap.peers.len());
+                let act = Frame::act(id, act_aux(snap.epoch, layer), &cur);
+                let t = Instant::now();
+                // Scatter to every shard that owns rows of this layer...
+                for shard in 0..ranges.len() {
+                    conns.shards[shard].send(&act)?;
+                    ClusterStats::add(&shared.stats.bytes_forward, act.payload.len() as u64);
+                }
+                // ...then gather the slices back into partition order.
+                let mut out = vec![0.0f32; d_out];
+                for (shard, range) in ranges.iter().enumerate() {
+                    let resp = conns.shards[shard].recv()?;
+                    match resp.kind {
+                        FrameKind::Part if resp.id == id && resp.aux == shard as u32 => {
+                            let part = payload_f32(&resp.payload)
+                                .map_err(|e| anyhow::anyhow!(e))?;
+                            if part.len() != range.len() {
+                                bail!(
+                                    "shard {shard} returned {} rows of layer {layer}, expected {} — plan skew",
+                                    part.len(),
+                                    range.len()
+                                );
+                            }
+                            ClusterStats::add(
+                                &shared.stats.bytes_back,
+                                resp.payload.len() as u64,
+                            );
+                            out[range.clone()].copy_from_slice(&part);
+                        }
+                        FrameKind::Error => bail!(
+                            "shard {shard} error on layer {layer}: {}",
+                            String::from_utf8_lossy(&resp.payload)
+                        ),
+                        other => {
+                            bail!("unexpected {other:?} (id {}) from shard {shard}", resp.id)
+                        }
+                    }
+                }
+                ClusterStats::add(&shared.stats.stage_ns, t.elapsed().as_nanos() as u64);
+                ClusterStats::inc(&shared.stats.stage_calls);
+                cur = out;
+            }
+            cur
+        }
+    };
+    if y.len() != shared.shapes.d_out() {
+        bail!("cluster produced {} outputs, model d_out is {}", y.len(), shared.shapes.d_out());
+    }
+    Ok(y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shared(mode: ShardMode, expect: usize, depth: usize) -> Shared {
+        Shared {
+            cfg: TrackerConfig {
+                expect_peers: expect,
+                ..TrackerConfig::new("unused.lb2", mode)
+            },
+            shapes: StackShapes {
+                version: 2,
+                shapes: (0..depth).map(|_| (8, 8, 1)).collect(),
+            },
+            m: Mutex::new(Membership { peers: Vec::new(), epoch: 0 }),
+            stats: ClusterStats::default(),
+            shutdown: AtomicBool::new(false),
+        }
+    }
+
+    /// FORMING → SERVING at quorum; joins and deaths bump the epoch and
+    /// re-cut over the alive peers in join order.
+    #[test]
+    fn membership_epoch_transitions() {
+        let s = shared(ShardMode::Pipeline, 2, 4);
+        let a = s.join("127.0.0.1:1".into());
+        assert_eq!(s.counts(), (0, 1, 1), "below quorum: still FORMING");
+        assert!(s.assignment_for(a).is_none());
+        let b = s.join("127.0.0.1:2".into());
+        assert_eq!(s.counts().0, 1, "quorum cuts the first plan");
+        let (_, aa) = s.assignment_for(a).unwrap();
+        let (_, ab) = s.assignment_for(b).unwrap();
+        assert_eq!((aa.lo, aa.hi, aa.next.as_str()), (0, 2, "127.0.0.1:2"));
+        assert_eq!((ab.lo, ab.hi, ab.next.as_str()), (2, 4, ""));
+
+        // Kill the first stage: survivor owns the whole chain at epoch 2.
+        s.mark_dead(a);
+        assert_eq!(s.counts(), (2, 1, 2));
+        assert!(s.assignment_for(a).is_none(), "dead peers get nothing");
+        let (_, ab) = s.assignment_for(b).unwrap();
+        assert_eq!((ab.index, ab.lo, ab.hi, ab.next.as_str()), (0, 0, 4, ""));
+        assert_eq!(s.stats.reassignments(), 1);
+        // Idempotent: a second death report of the same slot is a no-op.
+        s.mark_dead(a);
+        assert_eq!(s.counts().0, 2);
+
+        // A late joiner re-cuts again (epoch 3) and lands after the
+        // survivor in join order.
+        let c = s.join("127.0.0.1:3".into());
+        assert_eq!(s.counts(), (3, 2, 3));
+        let (_, ab) = s.assignment_for(b).unwrap();
+        let (_, ac) = s.assignment_for(c).unwrap();
+        assert_eq!((ab.lo, ab.hi, ab.next.as_str()), (0, 2, "127.0.0.1:3"));
+        assert_eq!((ac.lo, ac.hi), (2, 4));
+
+        // No plan snapshot once everyone is gone.
+        s.mark_dead(b);
+        s.mark_dead(c);
+        assert!(s.plan_snapshot().is_none());
+        assert_eq!(s.counts().0, 5);
+    }
+
+    #[test]
+    fn health_tracks_plan_and_drain() {
+        let s = shared(ShardMode::RowShard, 1, 2);
+        assert_eq!(s.health(), (1, "degraded"), "FORMING is degraded");
+        let a = s.join("127.0.0.1:1".into());
+        assert_eq!(s.health(), (0, "healthy"));
+        s.mark_dead(a);
+        assert_eq!(s.health(), (1, "degraded"), "no alive peers");
+        s.shutdown.store(true, Ordering::Relaxed);
+        assert_eq!(s.health(), (2, "draining"));
+    }
+}

@@ -1,0 +1,154 @@
+//! Raw frame transport for cluster connections.
+//!
+//! [`crate::serving::WireClient`] deliberately accepts only server→client
+//! kinds, so tracker↔peer and peer↔peer links — which exchange
+//! JOIN/ASSIGN/ACT/PART/HEARTBEAT both ways — get their own thin stream
+//! wrapper over the same [`crate::serving::frame`] codec: one
+//! `write_all` per frame out, header-then-payload with CRC verification
+//! in, any kind accepted. Liveness loops use [`FrameStream::recv_opt`],
+//! which peeks with the socket read timeout so an idle wait returns
+//! `None` without consuming partial frames.
+
+use crate::serving::frame::{
+    frame_crc, parse_header, Frame, CRC_OFFSET, DEFAULT_MAX_PAYLOAD, HEADER_LEN,
+};
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::{Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+/// Pack an ACT frame's aux field: plan epoch (low 16 bits) in the high
+/// half, layer index in the low half. The epoch stamp is what stops a
+/// stage still serving an old plan from contributing to a fresh request
+/// with a plausibly-shaped but wrong activation (uniform-width chains
+/// would not catch the mix-up by width alone).
+pub fn act_aux(epoch: u32, layer: usize) -> u32 {
+    ((epoch & 0xFFFF) << 16) | (layer as u32 & 0xFFFF)
+}
+
+/// Split an ACT aux back into `(epoch_low16, layer)`.
+pub fn split_act_aux(aux: u32) -> (u16, u16) {
+    ((aux >> 16) as u16, (aux & 0xFFFF) as u16)
+}
+
+/// A frame-at-a-time TCP stream that accepts every [`Frame`] kind.
+pub struct FrameStream {
+    stream: TcpStream,
+    max_payload: usize,
+}
+
+impl FrameStream {
+    /// Dial `addr` with a connect timeout; `TCP_NODELAY` is set (frames
+    /// are small and latency-bound).
+    pub fn connect(addr: &str, timeout: Duration) -> Result<Self> {
+        let sock = addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolving {addr}"))?
+            .next()
+            .ok_or_else(|| anyhow!("{addr} resolved to no addresses"))?;
+        let stream = TcpStream::connect_timeout(&sock, timeout)
+            .with_context(|| format!("connecting to {addr}"))?;
+        Ok(Self::over(stream))
+    }
+
+    /// Wrap an accepted connection.
+    pub fn over(stream: TcpStream) -> Self {
+        stream.set_nodelay(true).ok();
+        Self { stream, max_payload: DEFAULT_MAX_PAYLOAD }
+    }
+
+    /// Socket read timeout for [`recv`](Self::recv)/[`recv_opt`](Self::recv_opt).
+    pub fn set_read_timeout(&self, d: Option<Duration>) -> Result<()> {
+        self.stream.set_read_timeout(d).context("setting read timeout")?;
+        Ok(())
+    }
+
+    pub fn send(&mut self, frame: &Frame) -> Result<()> {
+        self.stream.write_all(&frame.encode()).context("writing frame")?;
+        Ok(())
+    }
+
+    /// Read one frame of any kind, verifying magic/version/length cap
+    /// before allocation and the CRC after. Blocks (up to the socket read
+    /// timeout) until a full frame arrives; a timeout mid-frame is an
+    /// error — on a connection that only ever carries whole `write_all`'d
+    /// frames that means the sender died, and the caller treats the
+    /// connection as lost.
+    pub fn recv(&mut self) -> Result<Frame> {
+        let mut header = [0u8; HEADER_LEN];
+        self.stream.read_exact(&mut header).context("reading frame header")?;
+        let h = parse_header(&header, self.max_payload).context("parsing frame header")?;
+        let mut payload = vec![0u8; h.len];
+        self.stream.read_exact(&mut payload).context("reading frame payload")?;
+        let got = frame_crc(&header[..CRC_OFFSET], &payload);
+        if got != h.crc {
+            bail!("frame CRC mismatch: expected {:08x}, got {got:08x}", h.crc);
+        }
+        Ok(Frame { kind: h.kind, id: h.id, aux: h.aux, payload })
+    }
+
+    /// Like [`recv`](Self::recv), but an idle read timeout returns
+    /// `Ok(None)` instead of an error: a 1-byte `peek` absorbs the wait
+    /// without consuming stream bytes, so the subsequent frame read only
+    /// runs when at least the start of a frame has arrived. EOF (peer
+    /// closed) and transport errors are `Err`.
+    pub fn recv_opt(&mut self) -> Result<Option<Frame>> {
+        let mut probe = [0u8; 1];
+        match self.stream.peek(&mut probe) {
+            Ok(0) => bail!("connection closed"),
+            Ok(_) => self.recv().map(Some),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                Ok(None)
+            }
+            Err(e) => Err(anyhow!(e).context("polling connection")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    #[test]
+    fn act_aux_packs_epoch_and_layer() {
+        assert_eq!(act_aux(0, 0), 0);
+        assert_eq!(split_act_aux(act_aux(3, 7)), (3, 7));
+        // Epoch truncates to 16 bits; the stamp still distinguishes
+        // adjacent epochs, which is all staleness detection needs.
+        assert_eq!(split_act_aux(act_aux(0x1_0005, 2)), (5, 2));
+    }
+
+    /// Frames of every direction cross a real socket; recv_opt times out
+    /// cleanly while idle and detects EOF.
+    #[test]
+    fn frame_stream_roundtrip_timeout_and_eof() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            let mut fs = FrameStream::over(s);
+            let f = fs.recv().unwrap();
+            assert_eq!(f.kind, crate::serving::FrameKind::Act);
+            fs.send(&Frame::part(f.id, 1, &[2.5, -0.5])).unwrap();
+            // Leave the connection open briefly so the client can observe
+            // an idle timeout before the drop-induced EOF.
+            std::thread::sleep(Duration::from_millis(120));
+        });
+        let mut fs =
+            FrameStream::connect(&addr.to_string(), Duration::from_secs(2)).unwrap();
+        fs.send(&Frame::act(9, act_aux(1, 0), &[1.0, 2.0])).unwrap();
+        let back = fs.recv().unwrap();
+        assert_eq!(back.id, 9);
+        assert_eq!(back.aux, 1);
+        fs.set_read_timeout(Some(Duration::from_millis(30))).unwrap();
+        assert!(fs.recv_opt().unwrap().is_none(), "idle read should time out to None");
+        server.join().unwrap();
+        // Server side is gone: recv_opt must now surface the EOF as Err.
+        fs.set_read_timeout(Some(Duration::from_millis(500))).unwrap();
+        assert!(fs.recv_opt().is_err());
+    }
+}

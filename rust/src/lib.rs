@@ -49,6 +49,7 @@
 //! bench methodology.
 
 pub mod artifact;
+pub mod cluster;
 pub mod coordinator;
 pub mod data;
 pub mod faults;

@@ -25,6 +25,15 @@
 //!                   [--stats 1] [--shutdown 1]          wire-protocol load client
 //!                   [--retries N] [--backoff-ms B] [--budget-ms T]
 //!                                                      (retries>0: self-healing client)
+//! littlebit2 tracker --model model.lb2 [--peers N] [--mode pipeline|rowshard]
+//!                    [--listen ADDR] [--serve-secs S]  cluster tracker: loads only
+//!                    [--heartbeat-ms H] [--attempts A]  the shape table, shards the
+//!                    [--deadline-ms D]                  chain over JOINed peers, and
+//!                                                      fronts them for `client`
+//! littlebit2 peer --model model.lb2 --tracker HOST:PORT [--listen ADDR]
+//!                 [--mmap 1] [--serve-secs S]          cluster peer: loads only its
+//!                 [--heartbeat-ms H]                    assigned layer range (pipeline)
+//!                                                      or row shard of every layer
 //! littlebit2 eval [--size N] [--blocks B] [--methods CSV] [--bpp-list CSV]
 //!                 [--jobs N] [--requests R] [--out BENCH_methods.json]
 //!                                                      methods × bpp fidelity/
@@ -36,6 +45,7 @@
 
 use anyhow::{bail, Context, Result};
 use littlebit2::artifact::StackStreamWriter;
+use littlebit2::cluster::{Peer, PeerConfig, ShardMode, Tracker, TrackerConfig};
 #[cfg(feature = "xla")]
 use littlebit2::coordinator::{QatDriver, StudentVariant};
 use littlebit2::coordinator::{
@@ -136,6 +146,8 @@ fn main() -> Result<()> {
         "compress" => cmd_compress(&args),
         "serve" => cmd_serve(&args),
         "client" => cmd_client(&args),
+        "tracker" => cmd_tracker(&args),
+        "peer" => cmd_peer(&args),
         "eval" => cmd_eval(&args),
         "train" => cmd_train(&args),
         "version" => {
@@ -152,7 +164,7 @@ fn main() -> Result<()> {
 fn print_usage() {
     println!(
         "littlebit2 {} — sub-1-bit LLM compression via Latent Geometry Alignment\n\
-         commands: memory-table | breakeven | gamma-dist | spectral-gain | compress | serve | client | eval | train | version",
+         commands: memory-table | breakeven | gamma-dist | spectral-gain | compress | serve | client | tracker | peer | eval | train | version",
         littlebit2::VERSION
     );
 }
@@ -762,6 +774,125 @@ fn cmd_client(args: &Args) -> Result<()> {
         }
     }
     Ok(())
+}
+
+/// Run the cluster tracker: read only the artifact's shape table, wait
+/// for `--peers` JOINs, cut the shard plan (`--mode` pipeline layer
+/// ranges or per-layer row shards), and front the cluster for ordinary
+/// wire clients — `client` (including `--verify`/`--stats`/`--shutdown`)
+/// works against a tracker unchanged. Exits on a SHUTDOWN frame or the
+/// `--serve-secs` watchdog, printing the final `lb2_cluster_*` ledger;
+/// a non-reconciling ledger (a request accepted but never settled) is a
+/// hard error.
+fn cmd_tracker(args: &Args) -> Result<()> {
+    args.known(&[
+        "model",
+        "listen",
+        "peers",
+        "mode",
+        "serve-secs",
+        "heartbeat-ms",
+        "attempts",
+        "deadline-ms",
+    ])?;
+    let model = args
+        .flags
+        .get("model")
+        .context("tracker requires --model <file.lb2> (write one with `compress --out`)")?;
+    let listen = args.get("listen", "127.0.0.1:41700");
+    let peers = args.get_usize("peers", 2)?;
+    let mode = ShardMode::parse(&args.get("mode", "pipeline"))?;
+    let serve_secs = args.get_usize("serve-secs", 0)?;
+    let heartbeat_ms = args.get_usize("heartbeat-ms", 2000)?;
+    let attempts = args.get_usize("attempts", 10)?;
+    let deadline_ms = args.get_usize("deadline-ms", 10_000)?;
+    if peers == 0 || attempts == 0 {
+        bail!("--peers and --attempts must be at least 1");
+    }
+    let handle = Tracker::start(TrackerConfig {
+        listen,
+        expect_peers: peers,
+        heartbeat_timeout: Duration::from_millis(heartbeat_ms as u64),
+        attempts,
+        default_deadline_ms: deadline_ms as u32,
+        ..TrackerConfig::new(model, mode)
+    })?;
+    println!(
+        "tracker on {} ({} mode): sharding over {peers} peer(s); shutdown: SHUTDOWN frame{}",
+        handle.addr(),
+        mode.label(),
+        if serve_secs > 0 { format!(" or after {serve_secs}s") } else { String::new() }
+    );
+    let t0 = std::time::Instant::now();
+    while !handle.is_shutting_down() {
+        if serve_secs > 0 && t0.elapsed() >= Duration::from_secs(serve_secs as u64) {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    let summary = handle.shutdown();
+    print!("{}", summary.stats_text);
+    println!(
+        "tracker drained after {:.1}s: accepted {} = served {} + failed {} + deadline-missed {} | reassignments {}",
+        t0.elapsed().as_secs_f64(),
+        summary.accepted,
+        summary.served,
+        summary.failed,
+        summary.deadline_missed,
+        summary.reassignments,
+    );
+    if !summary.reconciled {
+        bail!("cluster ledger failed to reconcile: accepted != served + failed + deadline-missed");
+    }
+    Ok(())
+}
+
+/// Run a cluster peer: register with the tracker, receive a shard
+/// assignment, and load ONLY that slice — a contiguous layer range in
+/// pipeline mode (`MethodStack::load_range`, `--mmap 1` never pages in
+/// out-of-range weights) or this shard's rows of every layer in row-shard
+/// mode. Re-loads on every re-shard; exits when the tracker shuts it
+/// down or the `--serve-secs` watchdog fires.
+fn cmd_peer(args: &Args) -> Result<()> {
+    args.known(&["model", "tracker", "listen", "mmap", "serve-secs", "heartbeat-ms"])?;
+    let model = args
+        .flags
+        .get("model")
+        .context("peer requires --model <file.lb2>")?;
+    let tracker = args
+        .flags
+        .get("tracker")
+        .context("peer requires --tracker HOST:PORT")?
+        .clone();
+    let listen = args.get("listen", "127.0.0.1:0");
+    let use_mmap = matches!(args.get("mmap", "0").as_str(), "1" | "true");
+    let serve_secs = args.get_usize("serve-secs", 0)?;
+    let heartbeat_ms = args.get_usize("heartbeat-ms", 250)?;
+    let handle = Peer::start(PeerConfig {
+        listen,
+        mmap: use_mmap,
+        heartbeat_interval: Duration::from_millis(heartbeat_ms as u64),
+        ..PeerConfig::new(tracker.clone(), model)
+    })?;
+    println!(
+        "peer serving on {} (tracker {tracker}{})",
+        handle.addr(),
+        if use_mmap { ", mmap load" } else { "" }
+    );
+    let t0 = std::time::Instant::now();
+    loop {
+        if !handle.running() {
+            handle.wait();
+            println!("peer exited: tracker shutdown");
+            return Ok(());
+        }
+        if serve_secs > 0 && t0.elapsed() >= Duration::from_secs(serve_secs as u64) {
+            handle.stop();
+            println!("peer exited: {serve_secs}s watchdog");
+            return Ok(());
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
 }
 
 /// One `eval` measurement: a method (at one bpp where the method is

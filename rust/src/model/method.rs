@@ -436,6 +436,85 @@ impl MethodLayer {
         y
     }
 
+    /// The output-row shard `range` of this layer — the tensor-parallel
+    /// cut: the returned layer computes exactly output rows
+    /// `range.start..range.end` of the full layer, **bit-identically**,
+    /// because slicing output rows of every serving form leaves each
+    /// surviving row's operands and reduction order untouched:
+    ///
+    /// * `Packed`: per path, slice `U_b`'s rows and the row scale `h`;
+    ///   `V_bᵀ`, `l`, `g` (input-side) are kept whole. A clone of a
+    ///   mapped `V_bᵀ` still borrows the mapping, so row shards of an
+    ///   mmap-loaded stack share one page-cache copy of the big plane.
+    /// * `SignScaled`: slice the sign plane's rows and the row scale;
+    ///   the column scale is kept whole.
+    /// * `DenseScaled`: slice `W`'s rows.
+    /// * `LowRankFp`: slice `U`'s rows; `Vᵀ` is kept whole (the latent
+    ///   projection is identical across shards).
+    ///
+    /// `declared_bits` is prorated by row count — shard accounting sums
+    /// back to within rounding of the full layer. An empty or
+    /// out-of-bounds range is an `Err` (empty shards are represented by
+    /// *absence* of a layer, not a degenerate one).
+    pub fn slice_rows(&self, range: std::ops::Range<usize>) -> Result<MethodLayer> {
+        let d_out = self.d_out();
+        if range.start >= range.end || range.end > d_out {
+            bail!(
+                "row shard {}..{} is invalid for a layer with {d_out} output rows",
+                range.start,
+                range.end
+            );
+        }
+        let prorated =
+            |bits: u64| bits * range.len() as u64 / d_out as u64;
+        Ok(match self {
+            MethodLayer::Packed(l) => {
+                let mut paths = Vec::with_capacity(l.paths().len());
+                for p in l.paths() {
+                    let ub = p.ub_bits().slice_rows(range.clone())?;
+                    let h = p.h()[range.clone()].to_vec();
+                    paths.push(crate::packing::TriScaleLayer::from_parts(
+                        ub,
+                        p.vbt_bits().clone(),
+                        h,
+                        p.l().to_vec(),
+                        p.g().to_vec(),
+                    )?);
+                }
+                MethodLayer::Packed(PackedResidual::try_new(paths)?)
+            }
+            MethodLayer::SignScaled(l) => MethodLayer::SignScaled(SignScaledLayer::try_new(
+                l.bits().slice_rows(range.clone())?,
+                l.row_scale()[range.clone()].to_vec(),
+                l.col_scale().to_vec(),
+                prorated(l.declared_bits()),
+            )?),
+            MethodLayer::DenseScaled(l) => {
+                let w = l.weight();
+                let mut data = Vec::with_capacity(range.len() * w.cols());
+                for i in range.clone() {
+                    data.extend_from_slice(w.row(i));
+                }
+                MethodLayer::DenseScaled(DenseScaledLayer::try_new(
+                    Mat::from_vec(range.len(), w.cols(), data),
+                    prorated(l.declared_bits()),
+                )?)
+            }
+            MethodLayer::LowRankFp(l) => {
+                let u = l.u();
+                let mut data = Vec::with_capacity(range.len() * u.cols());
+                for i in range.clone() {
+                    data.extend_from_slice(u.row(i));
+                }
+                MethodLayer::LowRankFp(LowRankFpLayer::try_new(
+                    Mat::from_vec(range.len(), u.cols(), data),
+                    l.vt().clone(),
+                    prorated(l.declared_bits()),
+                )?)
+            }
+        })
+    }
+
     /// Dense reconstruction `Ŵ` of this layer — the fidelity-scoring
     /// oracle (`‖W − Ŵ‖²`), pool-parallel and bit-identical for any pool.
     pub fn reconstruct_on(&self, pool: &Pool) -> Mat {
@@ -554,6 +633,60 @@ mod tests {
         let layer = MethodLayer::Packed(c.pack());
         assert_eq!(layer.declared_bits(), c.storage_bits());
         assert!((layer.bpp() - c.bpp()).abs() < 1e-12);
+    }
+
+    /// Row shards forward bit-identically to the corresponding rows of
+    /// the full layer, for every serving form — the tensor-parallel
+    /// correctness contract. Concatenating the shard outputs in
+    /// `row_partition` order must reproduce the full output exactly.
+    #[test]
+    fn slice_rows_is_bit_identical_per_variant() {
+        use crate::littlebit::{compress, CompressionConfig};
+        use crate::parallel::row_partition;
+        use crate::spectral::{synth_weight, SynthSpec};
+        let mut rng = Pcg64::seed(9);
+        let spec = SynthSpec { rows: 48, cols: 40, gamma: 0.3, coherence: 0.6, scale: 1.0 };
+        let w = synth_weight(&spec, &mut rng);
+        let cfg = CompressionConfig { bpp: 1.0, ..Default::default() };
+        let packed = MethodLayer::Packed(compress(&w, &cfg, &mut rng).pack());
+        let sign = MethodLayer::SignScaled(sign_layer(10, 48, 40));
+        let dense = MethodLayer::DenseScaled(
+            DenseScaledLayer::try_new(Mat::gaussian(48, 40, &mut rng), 99).unwrap(),
+        );
+        let lowrank = MethodLayer::LowRankFp(
+            LowRankFpLayer::try_new(
+                Mat::gaussian(48, 5, &mut rng),
+                Mat::gaussian(5, 40, &mut rng),
+                77,
+            )
+            .unwrap(),
+        );
+        for layer in [packed, sign, dense, lowrank] {
+            let mut x = Mat::zeros(40, 3);
+            x.fill_normal(&mut rng);
+            let full = layer.forward_batch(&x);
+            for parts in [1usize, 2, 3, 5] {
+                for range in row_partition(layer.d_out(), parts) {
+                    let shard = layer.slice_rows(range.clone()).unwrap();
+                    assert_eq!(shard.d_out(), range.len());
+                    assert_eq!(shard.d_in(), 40);
+                    let got = shard.forward_batch(&x);
+                    for (k, i) in range.clone().enumerate() {
+                        for t in 0..3 {
+                            assert_eq!(
+                                got.at(k, t).to_bits(),
+                                full.at(i, t).to_bits(),
+                                "{} rows {range:?} ({i},{t})",
+                                layer.variant_label()
+                            );
+                        }
+                    }
+                }
+            }
+            // Degenerate ranges are rejected.
+            assert!(layer.slice_rows(0..0).is_err());
+            assert!(layer.slice_rows(0..layer.d_out() + 1).is_err());
+        }
     }
 
     #[test]

@@ -152,6 +152,35 @@ impl MethodStack {
         crate::artifact::load_method_stack_mmap(path)
     }
 
+    /// Load only layers `range` (half-open, chain order) of a `.lb2`
+    /// artifact — the pipeline-parallel shard load: the returned stack is
+    /// the contiguous sub-chain, bit-identical to those layers inside the
+    /// full stack, and out-of-range payloads are never decoded.
+    pub fn load_range(
+        path: impl AsRef<std::path::Path>,
+        range: std::ops::Range<usize>,
+    ) -> anyhow::Result<Self> {
+        let path = path.as_ref();
+        let bytes = std::fs::read(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        crate::artifact::read_method_stack_range(&bytes, range)
+            .map_err(|e| e.context(format!("loading {}", path.display())))
+    }
+
+    /// [`load_range`](Self::load_range) via mmap: in-range v3 payloads
+    /// borrow the mapping, so a peer pages in only its shard's weights —
+    /// skipped layers cost zero resident bytes *and* zero page-ins.
+    pub fn load_range_mmap(
+        path: impl AsRef<std::path::Path>,
+        range: std::ops::Range<usize>,
+    ) -> anyhow::Result<Self> {
+        let path = path.as_ref();
+        let art = crate::sys::MappedArtifact::open(path)
+            .map_err(|e| e.context(format!("mapping {}", path.display())))?;
+        crate::artifact::read_method_stack_range_mapped(&art, range)
+            .map_err(|e| e.context(format!("loading {}", path.display())))
+    }
+
     /// Serialize to v2 container bytes (in-memory [`save`](Self::save)).
     pub fn to_artifact_bytes(&self) -> anyhow::Result<Vec<u8>> {
         crate::artifact::write_method_stack(self, Vec::new())

@@ -331,6 +331,30 @@ impl BitMatrix {
         matches!(&self.words, Words::Mapped(_))
     }
 
+    /// An owned copy of rows `range` — the tensor-parallel shard cut: a
+    /// row shard's kernels see exactly the same per-row words as the full
+    /// matrix (columns are untouched), so each output row's reduction
+    /// order is unchanged and shard outputs concatenate bit-identically
+    /// to the unsharded kernel.
+    pub fn slice_rows(&self, range: std::ops::Range<usize>) -> Result<BitMatrix> {
+        if range.start > range.end || range.end > self.rows {
+            bail!(
+                "row slice {}..{} out of bounds for a {}x{} bit-plane",
+                range.start,
+                range.end,
+                self.rows,
+                self.cols
+            );
+        }
+        let tight = self.tight_words_per_row();
+        let n = range.len();
+        let mut words = Vec::with_capacity(n * tight);
+        for i in range {
+            words.extend_from_slice(&self.row_words(i)[..tight]);
+        }
+        Self::from_words(n, self.cols, words)
+    }
+
     /// Fraction of +1 entries.
     pub fn density(&self) -> f64 {
         // Padding is clear by invariant, so the padded popcount is exact.
@@ -445,6 +469,33 @@ mod tests {
             assert_eq!(tight.len(), r * c.div_ceil(64), "{r}x{c}");
             let rebuilt = BitMatrix::from_words(r, c, tight).unwrap();
             assert_eq!(rebuilt, packed, "{r}x{c}");
+        }
+    }
+
+    /// Row slices carry exactly the original rows' words (bit-identical
+    /// per-row layout — the shard bit-identity precondition) and reject
+    /// out-of-bounds ranges.
+    #[test]
+    fn slice_rows_preserves_row_words() {
+        let mut rng = Pcg64::seed(23);
+        for (r, c) in [(7, 64), (5, 65), (16, 130)] {
+            let m = Mat::gaussian(r, c, &mut rng).signum();
+            let full = BitMatrix::from_dense(&m);
+            for range in [0..r, 0..1, r - 1..r, 1..r - 1] {
+                let sliced = full.slice_rows(range.clone()).unwrap();
+                assert_eq!(sliced.rows(), range.len(), "{r}x{c} {range:?}");
+                assert_eq!(sliced.cols(), c);
+                for (k, i) in range.clone().enumerate() {
+                    assert_eq!(sliced.row_words(k), full.row_words(i), "{r}x{c} {range:?}");
+                }
+            }
+            // Empty slice is legal (an empty shard).
+            assert_eq!(full.slice_rows(2..2).unwrap().rows(), 0);
+            assert!(full.slice_rows(0..r + 1).is_err());
+            #[allow(clippy::reversed_empty_ranges)]
+            {
+                assert!(full.slice_rows(3..2).is_err());
+            }
         }
     }
 

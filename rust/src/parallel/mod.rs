@@ -64,10 +64,40 @@
 
 use std::cell::Cell;
 use std::marker::PhantomData;
+use std::ops::Range;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex, OnceLock};
 use std::thread::JoinHandle;
+
+/// The pure partition behind [`Pool::run_row_chunks`]: split `rows` into
+/// at most `parts` contiguous, disjoint, in-order ranges covering
+/// `0..rows`. Depends only on `(rows, parts)` — never on pool occupancy —
+/// so anything partitioned with it (in-process row kernels, cluster row
+/// shards) agrees on byte boundaries across processes and machines.
+///
+/// `rows == 0` yields no ranges; `parts` is clamped to `1..=rows`; every
+/// range but possibly the last has exactly `rows.div_ceil(parts)` rows, so
+/// fewer than `parts` ranges can come back (e.g. `rows=5, parts=4` →
+/// `[0..2, 2..4, 4..5]` — three ranges of ceil width, not four ragged
+/// ones). This matches `chunks_mut(chunk_rows * width)` exactly, which is
+/// what keeps shard-concatenated outputs bit-identical to the serial
+/// kernel.
+pub fn row_partition(rows: usize, parts: usize) -> Vec<Range<usize>> {
+    if rows == 0 {
+        return Vec::new();
+    }
+    let parts = parts.clamp(1, rows);
+    let chunk = rows.div_ceil(parts);
+    let mut ranges = Vec::with_capacity(parts);
+    let mut lo = 0;
+    while lo < rows {
+        let hi = (lo + chunk).min(rows);
+        ranges.push(lo..hi);
+        lo = hi;
+    }
+    ranges
+}
 
 /// One unit of caller-scoped work. Jobs may borrow from the dispatching
 /// caller's stack; the dispatch protocol guarantees they never outlive it.
@@ -278,12 +308,15 @@ impl Pool {
         assert!(width > 0, "run_row_chunks on non-empty data needs width > 0");
         assert_eq!(data.len() % width, 0, "data must be whole rows");
         let rows = data.len() / width;
-        let parts = parts.clamp(1, rows);
-        if parts == 1 || self.workers.is_empty() || in_pool_worker() {
+        // One source of truth for the split: the same pure partition the
+        // cluster layer uses for row-shard assignment, so in-process and
+        // sharded outputs land on identical range boundaries.
+        let ranges = row_partition(rows, parts);
+        if ranges.len() == 1 || self.workers.is_empty() || in_pool_worker() {
             kernel(0, data);
             return;
         }
-        let chunk_rows = rows.div_ceil(parts);
+        let chunk_rows = ranges[0].len();
         let mut chunks = data.chunks_mut(chunk_rows * width);
         let first = chunks.next().expect("rows > 0");
         let kernel = &kernel;
@@ -356,6 +389,63 @@ impl Drop for Pool {
 mod tests {
     use super::*;
     use std::sync::atomic::{AtomicUsize, Ordering};
+
+    /// `row_partition` boundary cases: more parts than rows, ragged
+    /// division, zero rows, one row, exact division.
+    #[test]
+    fn row_partition_boundaries() {
+        // parts > rows: clamps to one range per row.
+        assert_eq!(row_partition(3, 64), vec![0..1, 1..2, 2..3]);
+        // rows % parts != 0: ceil-width ranges, possibly fewer than parts.
+        assert_eq!(row_partition(5, 4), vec![0..2, 2..4, 4..5]);
+        assert_eq!(row_partition(61, 7), {
+            let mut v = Vec::new();
+            let mut lo = 0;
+            while lo < 61 {
+                v.push(lo..(lo + 9).min(61));
+                lo += 9;
+            }
+            v
+        });
+        // Zero rows: no ranges at all (not one empty range).
+        assert!(row_partition(0, 8).is_empty());
+        // parts == 0 clamps to 1.
+        assert_eq!(row_partition(4, 0), vec![0..4]);
+        // Exact division.
+        assert_eq!(row_partition(8, 4), vec![0..2, 2..4, 4..6, 6..8]);
+        // Ranges always tile 0..rows in order, disjoint and complete.
+        for rows in [1usize, 2, 5, 31, 64, 100] {
+            for parts in [1usize, 2, 3, 7, 64, 1000] {
+                let ranges = row_partition(rows, parts);
+                assert!(ranges.len() <= parts.max(1));
+                let mut next = 0;
+                for r in &ranges {
+                    assert_eq!(r.start, next, "rows={rows} parts={parts}");
+                    assert!(r.end > r.start);
+                    next = r.end;
+                }
+                assert_eq!(next, rows, "rows={rows} parts={parts}");
+            }
+        }
+    }
+
+    /// The partition must agree with what `run_row_chunks` actually does:
+    /// each kernel invocation's (row0, len) is exactly one partition range.
+    #[test]
+    fn row_partition_matches_run_row_chunks() {
+        let pool = Pool::new(4);
+        for (rows, parts) in [(61usize, 7usize), (5, 4), (8, 4), (3, 64)] {
+            let expected = row_partition(rows, parts);
+            let seen = Mutex::new(Vec::new());
+            let mut data = vec![0u8; rows * 2];
+            pool.run_row_chunks(&mut data, 2, parts, |row0, chunk| {
+                seen.lock().unwrap().push(row0..row0 + chunk.len() / 2);
+            });
+            let mut seen = seen.into_inner().unwrap();
+            seen.sort_by_key(|r| r.start);
+            assert_eq!(seen, expected, "rows={rows} parts={parts}");
+        }
+    }
 
     #[test]
     fn run_executes_every_job_exactly_once() {

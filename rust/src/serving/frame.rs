@@ -26,6 +26,15 @@
 //! hint in ms on BUSY (0 = no hint), and the health code on
 //! HEALTH_REPORT. Payloads are raw little-endian f32s on INFER/RESULT,
 //! UTF-8 text on ERROR/STATS_TEXT/HEALTH_REPORT, and empty elsewhere.
+//!
+//! The CLUSTER kinds (JOIN/ASSIGN/ACT/PART/HEARTBEAT, codes 11–15; see
+//! [`crate::cluster`]) ride the identical framing at the same protocol
+//! version: aux is the plan epoch on ASSIGN and HEARTBEAT, the
+//! epoch-stamped layer index on ACT (`(epoch & 0xFFFF) << 16 | layer`,
+//! packed by [`crate::cluster::act_aux`]; layer = 0 in pipeline mode),
+//! and the shard index on PART. JOIN's payload is the peer's serve
+//! address as ASCII, ASSIGN's the encoded shard assignment, ACT/PART's
+//! raw little-endian f32s.
 
 use crate::artifact::{crc_finish, crc_update, CRC_INIT};
 
@@ -73,6 +82,23 @@ pub enum FrameKind {
     /// Server → client: health state; aux = [`crate::coordinator::HealthState`]
     /// code (0 healthy / 1 degraded / 2 draining), payload = state name.
     HealthReport = 10,
+    /// Peer → tracker (CLUSTER): register for shard assignment; payload =
+    /// the peer's serve address as ASCII (`host:port`).
+    Join = 11,
+    /// Tracker → peer (CLUSTER): shard assignment; aux = plan epoch,
+    /// payload = the encoded [`crate::cluster::Assignment`].
+    Assign = 12,
+    /// CLUSTER activation frame: an f32 activation column entering a
+    /// pipeline stage (or, in row-shard mode, a layer input broadcast to
+    /// every shard). aux packs the plan epoch and the layer index
+    /// ([`crate::cluster::act_aux`]) so a stale stage rejects it.
+    Act = 13,
+    /// Peer → tracker (CLUSTER, row-shard mode): one shard's slice of a
+    /// layer output; aux = shard index.
+    Part = 14,
+    /// Peer → tracker (CLUSTER): liveness beacon on the registration
+    /// connection; aux = the epoch the peer is serving.
+    Heartbeat = 15,
 }
 
 impl FrameKind {
@@ -88,6 +114,11 @@ impl FrameKind {
             8 => FrameKind::ShutdownAck,
             9 => FrameKind::Health,
             10 => FrameKind::HealthReport,
+            11 => FrameKind::Join,
+            12 => FrameKind::Assign,
+            13 => FrameKind::Act,
+            14 => FrameKind::Part,
+            15 => FrameKind::Heartbeat,
             _ => return None,
         })
     }
@@ -250,6 +281,32 @@ impl Frame {
         Self { kind: FrameKind::ShutdownAck, id, aux: 0, payload: Vec::new() }
     }
 
+    /// CLUSTER JOIN: a peer registering its serve address with the tracker.
+    pub fn join(id: u64, serve_addr: &str) -> Self {
+        Self { kind: FrameKind::Join, id, aux: 0, payload: serve_addr.as_bytes().to_vec() }
+    }
+
+    /// CLUSTER ASSIGN: an encoded shard assignment; aux = plan epoch.
+    pub fn assign(id: u64, epoch: u32, plan: Vec<u8>) -> Self {
+        Self { kind: FrameKind::Assign, id, aux: epoch, payload: plan }
+    }
+
+    /// CLUSTER ACT: an f32 activation column; `aux` packs the plan epoch
+    /// and layer index — build it with [`crate::cluster::act_aux`].
+    pub fn act(id: u64, aux: u32, x: &[f32]) -> Self {
+        Self { kind: FrameKind::Act, id, aux, payload: f32_payload(x) }
+    }
+
+    /// CLUSTER PART: one shard's f32 output slice; aux = shard index.
+    pub fn part(id: u64, shard: u32, y: &[f32]) -> Self {
+        Self { kind: FrameKind::Part, id, aux: shard, payload: f32_payload(y) }
+    }
+
+    /// CLUSTER HEARTBEAT: liveness beacon; aux = the epoch being served.
+    pub fn heartbeat(id: u64, epoch: u32) -> Self {
+        Self { kind: FrameKind::Heartbeat, id, aux: epoch, payload: Vec::new() }
+    }
+
     /// Serialize to header ++ payload with the CRC filled in.
     pub fn encode(&self) -> Vec<u8> {
         let mut buf = Vec::with_capacity(HEADER_LEN + self.payload.len());
@@ -347,6 +404,11 @@ mod tests {
             Frame::shutdown_ack(8),
             Frame::health(9),
             Frame::health_report(10, 1, "degraded"),
+            Frame::join(11, "127.0.0.1:41600"),
+            Frame::assign(12, 3, vec![1, 2, 3, 4]),
+            Frame::act(13, 1, &[0.5, -0.5]),
+            Frame::part(14, 2, &[9.75]),
+            Frame::heartbeat(15, 3),
         ];
         for f in frames {
             let bytes = f.encode();

@@ -1,0 +1,269 @@
+//! Sharded tracker/peer serving end to end: shard-vs-single bit
+//! identity for every method under both shard modes, the stock client
+//! protocol against a tracker, and the seeded peer-kill path — a peer
+//! dying mid-stream re-shards onto the survivor with every accepted
+//! request settled exactly once.
+//!
+//! Everything runs over real loopback sockets; both CI lanes (runtime
+//! SIMD dispatch and `LB2_FORCE_SCALAR`) run this file, so bit identity
+//! is asserted for both kernel paths.
+
+use littlebit2::cluster::{
+    Peer, PeerConfig, PeerHandle, ShardMode, Tracker, TrackerConfig, TrackerHandle,
+};
+use littlebit2::coordinator::HealthState;
+use littlebit2::littlebit::InitStrategy;
+use littlebit2::model::MethodStack;
+use littlebit2::parallel::Pool;
+use littlebit2::quant::MethodSpec;
+use littlebit2::rng::Pcg64;
+use littlebit2::serving::WireClient;
+use littlebit2::spectral::{synth_weight, SynthSpec};
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+/// A depth-3 chain with deliberately non-uniform widths (48 → 32 → 40 →
+/// 48): pipeline cuts then carry different activation widths per stage,
+/// and row-shard partitions differ per layer.
+fn build_stack(method: &str, seed: u64) -> MethodStack {
+    let mut rng = Pcg64::seed(seed);
+    let spec = MethodSpec::parse(method, 1.0, InitStrategy::JointItq { iters: 6 }).unwrap();
+    let dims = [(32usize, 48usize), (40, 32), (48, 40)]; // (rows=d_out, cols=d_in)
+    let layers = dims
+        .iter()
+        .map(|&(rows, cols)| {
+            let w = synth_weight(
+                &SynthSpec { rows, cols, gamma: 0.3, coherence: 0.6, scale: 1.0 },
+                &mut rng,
+            );
+            spec.compressor().compress_layer(&w, Pool::serial(), &mut rng).unwrap()
+        })
+        .collect();
+    MethodStack::uniform(method, layers).unwrap()
+}
+
+/// Save `stack` to a unique temp `.lb2` (the caller removes it).
+fn save_temp(stack: &MethodStack, tag: &str) -> PathBuf {
+    let path = std::env::temp_dir()
+        .join(format!("lb2_cluster_{tag}_{}.lb2", std::process::id()));
+    stack.save(&path).unwrap();
+    path
+}
+
+fn inputs(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Pcg64::seed(seed);
+    (0..n)
+        .map(|_| {
+            let mut x = vec![0.0f32; d];
+            rng.fill_normal(&mut x);
+            x
+        })
+        .collect()
+}
+
+fn assert_bits_eq(got: &[f32], want: &[f32], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length");
+    for (j, (a, b)) in got.iter().zip(want).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: element {j}: {a} vs {b}");
+    }
+}
+
+/// Tracker + `n` peers over an artifact at `path`, with fast heartbeats
+/// so tests settle quickly. Blocks until the plan is cut and every peer
+/// has loaded an assignment.
+fn start_cluster(
+    path: &PathBuf,
+    mode: ShardMode,
+    n: usize,
+) -> (TrackerHandle, Vec<PeerHandle>) {
+    let tracker = Tracker::start(TrackerConfig {
+        expect_peers: n,
+        heartbeat_timeout: Duration::from_millis(500),
+        // Generous replay budget so a slow CI box cannot exhaust the
+        // drive attempts while a re-shard is still settling.
+        attempts: 25,
+        ..TrackerConfig::new(path, mode)
+    })
+    .unwrap();
+    let peers: Vec<PeerHandle> = (0..n)
+        .map(|_| {
+            Peer::start(PeerConfig {
+                heartbeat_interval: Duration::from_millis(50),
+                ..PeerConfig::new(tracker.addr().to_string(), path)
+            })
+            .unwrap()
+        })
+        .collect();
+    assert!(tracker.wait_for_plan(Duration::from_secs(10)), "no plan within 10s");
+    let t0 = Instant::now();
+    while peers.iter().any(|p| p.epoch().is_none()) {
+        assert!(t0.elapsed() < Duration::from_secs(10), "peers never loaded shards");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    (tracker, peers)
+}
+
+/// The acceptance case: compress → `.lb2` → tracker + 2 peers → the
+/// ordinary wire client gets responses bit-identical to the in-process
+/// `MethodStack::forward`, for every method under both shard modes.
+#[test]
+fn cluster_bit_identical_to_single_process_for_every_method_and_mode() {
+    for (mi, method) in ["littlebit2", "onebit", "tinyrank"].iter().enumerate() {
+        let stack = build_stack(method, 0xA0 + mi as u64);
+        for mode in [ShardMode::Pipeline, ShardMode::RowShard] {
+            let tag = format!("{method}_{}", mode.label());
+            let path = save_temp(&stack, &tag);
+            let want_src = MethodStack::load(&path).unwrap();
+            let xs = inputs(8, want_src.d_in(), 0xB0 + mi as u64);
+            let want: Vec<Vec<f32>> = xs.iter().map(|x| want_src.forward(x)).collect();
+
+            let (tracker, peers) = start_cluster(&path, mode, 2);
+            let mut client = WireClient::connect(tracker.addr()).unwrap();
+            for (i, x) in xs.iter().enumerate() {
+                let got = client.infer(i as u64, x, 0).unwrap();
+                assert_bits_eq(&got, &want[i], &format!("{tag} req {i}"));
+            }
+            drop(client);
+
+            for p in peers {
+                p.stop();
+            }
+            let summary = tracker.shutdown();
+            assert_eq!(summary.served, xs.len() as u64, "{tag}");
+            assert_eq!(summary.failed, 0, "{tag}");
+            assert!(summary.reconciled, "{tag}: ledger did not reconcile");
+            let _ = std::fs::remove_file(&path);
+        }
+    }
+}
+
+/// The stock client-side protocol works against a tracker unchanged:
+/// STATS returns the `lb2_cluster_*` exposition, HEALTH reports healthy
+/// while a plan is live, and SHUTDOWN is acked and drains the cluster.
+#[test]
+fn tracker_speaks_the_stock_client_protocol() {
+    let stack = build_stack("littlebit2", 0xC0);
+    let path = save_temp(&stack, "protocol");
+    let (tracker, peers) = start_cluster(&path, ShardMode::Pipeline, 2);
+
+    let mut client = WireClient::connect(tracker.addr()).unwrap();
+    let x = &inputs(1, stack.d_in(), 0xC1)[0];
+    client.infer(7, x, 0).unwrap();
+    let text = client.stats_text().unwrap();
+    for needle in [
+        "lb2_cluster_mode{mode=\"pipeline\"} 1",
+        "lb2_cluster_epoch 1",
+        "lb2_cluster_peers_alive 2",
+        "lb2_cluster_served_total 1",
+    ] {
+        assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+    }
+    assert_eq!(client.health().unwrap(), HealthState::Healthy);
+
+    client.shutdown_server().unwrap();
+    for p in peers {
+        p.wait(); // tracker-sent SHUTDOWN stops the peers
+    }
+    let summary = tracker.shutdown();
+    assert!(summary.reconciled);
+    let _ = std::fs::remove_file(&path);
+}
+
+/// The seeded kill: pump requests through a 2-peer cluster, stop one
+/// peer mid-stream, keep pumping. The tracker must re-shard onto the
+/// survivor, every request must come back bit-identical, and the ledger
+/// must reconcile — `accepted == served + failed + deadline_missed`
+/// with nothing lost.
+#[test]
+fn peer_kill_mid_stream_reshards_and_loses_nothing() {
+    for mode in [ShardMode::Pipeline, ShardMode::RowShard] {
+        let stack = build_stack("littlebit2", 0xD0);
+        let path = save_temp(&stack, &format!("kill_{}", mode.label()));
+        let want_src = MethodStack::load(&path).unwrap();
+        let xs = inputs(24, want_src.d_in(), 0xD1);
+        let want: Vec<Vec<f32>> = xs.iter().map(|x| want_src.forward(x)).collect();
+
+        let (tracker, mut peers) = start_cluster(&path, mode, 2);
+        let mut client = WireClient::connect(tracker.addr()).unwrap();
+        for (i, x) in xs.iter().enumerate() {
+            if i == 8 {
+                // Failure injection: abrupt stop — the registration
+                // socket closes and the tracker's EOF path marks the
+                // peer dead.
+                peers.pop().unwrap().stop();
+            }
+            let got = client.infer(i as u64, x, 0).unwrap();
+            assert_bits_eq(&got, &want[i], &format!("{} req {i}", mode.label()));
+        }
+        drop(client);
+
+        assert!(tracker.stats().reconciled(), "{}: mid-run ledger", mode.label());
+        assert!(
+            tracker.stats().reassignments() >= 1,
+            "{}: the kill never re-sharded",
+            mode.label()
+        );
+        assert_eq!(tracker.alive_peers(), 1, "{}", mode.label());
+
+        for p in peers {
+            p.stop();
+        }
+        let summary = tracker.shutdown();
+        assert_eq!(summary.served, xs.len() as u64, "{}", mode.label());
+        assert_eq!(summary.failed, 0, "{}: requests lost to the kill", mode.label());
+        assert_eq!(summary.deadline_missed, 0, "{}", mode.label());
+        assert!(summary.reconciled, "{}: final ledger", mode.label());
+        let _ = std::fs::remove_file(&path);
+    }
+}
+
+/// Requests sent while the cluster is still FORMING (below quorum) park
+/// until quorum instead of failing: the client connects first, then the
+/// peers arrive, and the request is served.
+#[test]
+fn requests_park_until_quorum() {
+    let stack = build_stack("littlebit2", 0xE0);
+    let path = save_temp(&stack, "forming");
+    let tracker = Tracker::start(TrackerConfig {
+        expect_peers: 2,
+        heartbeat_timeout: Duration::from_millis(500),
+        // Generous replay budget: attempts only start burning once quorum
+        // is met, but the freshly-assigned peers may still be loading.
+        attempts: 25,
+        ..TrackerConfig::new(&path, ShardMode::Pipeline)
+    })
+    .unwrap();
+
+    let x = inputs(1, stack.d_in(), 0xE1).remove(0);
+    let want = stack.forward(&x);
+    let addr = tracker.addr();
+    let pump = {
+        let x = x.clone();
+        std::thread::spawn(move || {
+            let mut client = WireClient::connect(addr).unwrap();
+            client.infer(1, &x, 0).unwrap()
+        })
+    };
+
+    std::thread::sleep(Duration::from_millis(150)); // request parks in FORMING
+    let peers: Vec<PeerHandle> = (0..2)
+        .map(|_| {
+            Peer::start(PeerConfig {
+                heartbeat_interval: Duration::from_millis(50),
+                ..PeerConfig::new(addr.to_string(), &path)
+            })
+            .unwrap()
+        })
+        .collect();
+
+    let got = pump.join().unwrap();
+    assert_bits_eq(&got, &want, "parked request");
+
+    for p in peers {
+        p.stop();
+    }
+    let summary = tracker.shutdown();
+    assert_eq!(summary.served, 1);
+    assert!(summary.reconciled);
+    let _ = std::fs::remove_file(&path);
+}
